@@ -1,0 +1,146 @@
+"""AOT exporter: lower the L2 programs to HLO text + manifest.
+
+Run once at build time (``make artifacts``); the rust runtime
+(``rust/src/runtime/``) loads the manifest, compiles each HLO module on
+the PJRT CPU client, and dispatches batches by shape. HLO *text* is the
+interchange format — the image's xla_extension 0.5.1 rejects jax≥0.5
+serialized protos (64-bit instruction ids), while the text parser
+reassigns ids and round-trips cleanly (/opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Compiled shape menu. Rust pads every batch up to the smallest (b, d, k)
+# entry that fits; k=64 covers the paper's k=50, d=784 is infMNIST,
+# d=64 serves the quickstart/gaussian workloads. Two batch tiles: a big
+# 2048-row tile for throughput and a 256-row tile for remainders.
+BATCHES = (2048, 256)
+DIMS = (64, 784)
+K = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    return [[str(a.dtype), list(a.shape)] for a in args]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries():
+    """(name, fn, example_args, outputs) for every exported program.
+
+    Perf note (EXPERIMENTS.md §Perf): exporting with tile_b = B (one
+    grid step) was tried and measured perf-neutral on CPU-PJRT (XLA
+    unrolls/fuses the 8-step interpret loop), so the TPU-shaped
+    TILE_B=256 BlockSpec tiling is kept.
+    """
+    entries = []
+    for b in BATCHES:
+        for d in DIMS:
+            x = _spec((b, d))
+            c = _spec((K, d))
+            cn = _spec((K,))
+            lbl = _spec((b,), jnp.int32)
+            d2 = _spec((b,))
+            entries.append((
+                f"assign_b{b}_d{d}_k{K}", model.assign_fn, (x, c, cn),
+                [["int32", [b]], ["float32", [b]]],
+            ))
+            entries.append((
+                f"assign_stats_b{b}_d{d}_k{K}", model.assign_stats_fn,
+                (x, c, cn),
+                [["int32", [b]], ["float32", [b]], ["float32", [K, d]],
+                 ["float32", [K]], ["float32", [K]]],
+            ))
+            entries.append((
+                f"stats_b{b}_d{d}_k{K}",
+                functools.partial(model.stats_fn, k=K), (x, lbl, d2),
+                [["float32", [K, d]], ["float32", [K]], ["float32", [K]]],
+            ))
+            entries.append((
+                f"vmse_b{b}_d{d}_k{K}", model.validation_mse_fn, (x, c, cn),
+                [["float32", []]],
+            ))
+            entries.append((
+                f"distmat_b{b}_d{d}_k{K}", model.distmat_fn, (x, c, cn),
+                [["float32", [b, K]]],
+            ))
+        lb = _spec((b, K))
+        p = _spec((K,))
+        dd = _spec((b,))
+        lbl = _spec((b,), jnp.int32)
+        entries.append((
+            f"screen_b{b}_k{K}", model.screen_fn, (lb, p, dd, lbl),
+            [["float32", [b, K]], ["int32", [b]]],
+        ))
+    return entries
+
+
+def input_fingerprint():
+    """Hash of the compile-path sources; lets `make artifacts` skip when
+    nothing changed (recorded in the manifest)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on entry names (debugging)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "k": K, "batches": list(BATCHES), "dims": list(DIMS),
+        "fingerprint": input_fingerprint(), "entries": [],
+    }
+    for name, fn, example_args, outputs in build_entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = model.lower(fn, *example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append({
+            "name": name, "file": fname,
+            "inputs": _sig(example_args), "outputs": outputs,
+        })
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

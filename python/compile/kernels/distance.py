@@ -1,0 +1,219 @@
+"""L1 Pallas kernels: the k-means compute hot-spots.
+
+Three kernels, all tiled over the batch dimension so centroids stay
+resident in VMEM while batch tiles stream HBM→VMEM:
+
+  * ``assign``        — nearest-centroid labels + squared distance, via the
+                        MXU-form  D² = ‖x‖² + ‖c‖² − 2 X·Cᵀ  (one GEMM per
+                        tile instead of a (B,K,D) broadcast).
+  * ``cluster_stats`` — per-cluster sufficient statistics (Σx, counts, sse)
+                        as a one-hot GEMM, accumulated across tiles.
+  * ``bound_screen``  — the vectorised Elkan screen used by tb-ρ: decay
+                        lower bounds by centroid displacement and emit a
+                        per-point dirty flag.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper skips
+individual (i, j) distance computations on a CPU; on an MXU that branchy
+skipping is worthless, so the screen produces a *per-point* dirty mask and
+the rust coordinator routes only dirty points into dense ``assign`` tiles.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and the AOT artifacts must run under the
+rust CPU client. The BlockSpec structure is nevertheless written as it
+would be for a real TPU lowering (see the VMEM budget in DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-tile size: 256 rows keeps the f32 working set ≈1 MB for d=832,
+# k=64 (X-tile + C + D²-tile), far under a 16 MB VMEM budget, while the
+# (256, d) @ (d, 64) GEMM is big enough to keep the MXU busy.
+TILE_B = 256
+
+
+def _assign_kernel(x_ref, c_ref, cnorm_ref, lbl_ref, d2_ref):
+    """One batch tile of the assignment step.
+
+    x_ref: (TB, D) tile, c_ref: (K, D) full centroid block,
+    cnorm_ref: (K,) precomputed ‖c_j‖² (rust maintains these incrementally),
+    lbl_ref: (TB,) int32 out, d2_ref: (TB,) f32 out.
+    """
+    x = x_ref[...]
+    c = c_ref[...]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)              # (TB, 1)
+    # The GEMM that the MXU runs; everything else is VPU elementwise.
+    dots = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # (TB, K)
+    d2 = xn + cnorm_ref[...][None, :] - 2.0 * dots
+    # Cancellation can push tiny true distances below zero; clamp.
+    d2 = jnp.maximum(d2, 0.0)
+    lbl_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    d2_ref[...] = jnp.min(d2, axis=1)
+
+
+def assign(x, c, cnorm, *, tile_b=TILE_B):
+    """Nearest-centroid assignment over a (B, D) batch.
+
+    B must be a multiple of ``tile_b`` (the rust runtime pads batches up
+    to the compiled tile). Returns (labels (B,) int32, d2 (B,) f32).
+    """
+    b, d = x.shape
+    k, _ = c.shape
+    assert b % tile_b == 0, f"batch {b} not a multiple of tile {tile_b}"
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),   # centroids resident
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, c, cnorm)
+
+
+def _distmat_kernel(x_ref, c_ref, cnorm_ref, d2_ref):
+    """One batch tile of the full distance matrix (no argmin reduction).
+
+    Serves the tile-path tb-ρ: dirty points need their complete bound
+    row refreshed, so the whole (TB, K) block leaves the kernel.
+    """
+    x = x_ref[...]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    dots = jax.lax.dot_general(
+        x, c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d2_ref[...] = jnp.maximum(xn + cnorm_ref[...][None, :] - 2.0 * dots, 0.0)
+
+
+def distmat(x, c, cnorm, *, tile_b=TILE_B):
+    """Full (B, K) squared-distance matrix."""
+    b, d = x.shape
+    k, _ = c.shape
+    assert b % tile_b == 0
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        _distmat_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((tile_b, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32)],
+        interpret=True,
+    )(x, c, cnorm)[0]
+
+
+def _stats_kernel(k, x_ref, lbl_ref, d2_ref, s_ref, v_ref, sse_ref):
+    """Accumulate one tile's one-hot GEMM into the (K, D) stats block.
+
+    The output BlockSpecs map every grid step onto the same block, so the
+    kernel initialises on step 0 and accumulates afterwards — the standard
+    Pallas reduction-across-grid pattern.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        v_ref[...] = jnp.zeros_like(v_ref)
+        sse_ref[...] = jnp.zeros_like(sse_ref)
+
+    x = x_ref[...]
+    lbl = lbl_ref[...]
+    onehot = (lbl[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)  # (TB, K)
+    s_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    v_ref[...] += jnp.sum(onehot, axis=0)
+    sse_ref[...] += onehot.T @ d2_ref[...]
+
+
+def cluster_stats(x, labels, d2, k, *, tile_b=TILE_B):
+    """Per-cluster (Σx, counts, sse) for a labelled batch.
+
+    Used by the rust coordinator when ingesting *new* points into the
+    nested batch (gb/tb lines 24-30): the (K, D) deltas travel back to the
+    leader instead of the full (B, D) tile.
+    """
+    b, d = x.shape
+    assert b % tile_b == 0
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_stats_kernel, k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, labels, d2)
+
+
+def _screen_kernel(lb_ref, p_ref, d_ref, lbl_ref, lb_out_ref, dirty_ref):
+    """One tile of the Elkan bound screen (pure VPU work, no GEMM)."""
+    lb = lb_ref[...] - p_ref[...][None, :]
+    k = lb.shape[1]
+    not_assigned = lbl_ref[...][:, None] != jnp.arange(k)[None, :]
+    trigger = jnp.logical_and(lb < d_ref[...][:, None], not_assigned)
+    lb_out_ref[...] = lb
+    dirty_ref[...] = jnp.any(trigger, axis=1).astype(jnp.int32)
+
+
+def bound_screen(lb, p, d, labels, *, tile_b=TILE_B):
+    """Decay lower bounds by centroid displacement; flag dirty points.
+
+    Returns (lb' (B, K), dirty (B,) int32). Clean points keep their
+    assignment and skip the O(dk) distance tile entirely — the paper's
+    distance-calculation elimination, expressed at point granularity.
+    """
+    b, k = lb.shape
+    assert b % tile_b == 0
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        _screen_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,
+    )(lb, p, d, labels)

@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth for the L1 kernels in
+``distance.py``: pytest asserts allclose between kernel and oracle across
+shape/dtype sweeps (see ``python/tests/``). Keep these maximally simple —
+no tiling, no tricks — so that a disagreement always indicts the kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def assign_ref(x, c):
+    """Exact assignment step.
+
+    Args:
+      x: (B, D) batch of datapoints.
+      c: (K, D) centroids.
+
+    Returns:
+      (labels (B,) int32, d2 (B,) float32): index of the nearest centroid
+      and the squared distance to it.
+    """
+    # (B, K) full squared-distance matrix, computed the naive way.
+    diff = x[:, None, :] - c[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return labels, jnp.min(d2, axis=1)
+
+
+def distmat_ref(x, c):
+    """Full (B, K) squared-distance matrix, naive form."""
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def cluster_stats_ref(x, labels, d2, k):
+    """Per-cluster sufficient statistics.
+
+    Args:
+      x: (B, D) batch, labels: (B,) int32 assignments, d2: (B,) squared
+      distances to assigned centroid, k: number of clusters.
+
+    Returns:
+      (S (K, D) per-cluster coordinate sums, v (K,) counts,
+       sse (K,) per-cluster sum of squared errors).
+    """
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    s = onehot.T @ x
+    v = jnp.sum(onehot, axis=0)
+    sse = onehot.T @ d2
+    return s, v, sse
+
+
+def bound_screen_ref(lb, p, d, labels):
+    """Vectorised Elkan bound screen (paper Alg. 3 / tb-ρ lines 12-15).
+
+    Decays each lower bound by the distance its centroid moved
+    (``l ← l − p``), then flags points for which some non-assigned
+    centroid's bound dips below the (stale) upper distance d(i): those
+    points are *dirty* and need a full distance recomputation.
+
+    Args:
+      lb: (B, K) lower bounds, p: (K,) centroid displacements,
+      d: (B,) distance to currently assigned centroid,
+      labels: (B,) int32 current assignments.
+
+    Returns:
+      (lb' (B, K) decayed bounds, dirty (B,) int32 0/1 flags).
+    """
+    lb2 = lb - p[None, :]
+    k = lb.shape[1]
+    not_assigned = labels[:, None] != jnp.arange(k)[None, :]
+    trigger = jnp.logical_and(lb2 < d[:, None], not_assigned)
+    dirty = jnp.any(trigger, axis=1).astype(jnp.int32)
+    return lb2, dirty

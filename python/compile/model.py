@@ -1,0 +1,70 @@
+"""L2: the jitted JAX programs exported to the rust runtime.
+
+Each function here composes the L1 Pallas kernels (``kernels/distance.py``)
+into one of the three programs the rust coordinator executes on its hot
+path (see DESIGN.md, Layer-2 table):
+
+  * ``assign_fn``       — assignment step for one padded batch.
+  * ``assign_stats_fn`` — assignment fused with per-cluster sufficient
+                          statistics, used when ingesting new points into
+                          the nested batch (one round trip instead of two).
+  * ``stats_fn``        — statistics alone, for relabelled tiles.
+  * ``screen_fn``       — Elkan bound screen for tb-ρ.
+
+``aot.py`` lowers these for a fixed set of (B, D, K) shapes and writes
+HLO text + a manifest; rust pads its batches up to a compiled shape.
+Python never runs at clustering time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import distance
+
+
+def assign_fn(x, c, cnorm):
+    """(X[B,D], C[K,D], cnorm[K]) → (labels[B] i32, d2[B] f32)."""
+    return distance.assign(x, c, cnorm)
+
+
+def stats_fn(x, labels, d2, *, k):
+    """(X[B,D], labels[B], d2[B]) → (S[K,D], v[K], sse[K])."""
+    return distance.cluster_stats(x, labels, d2, k)
+
+
+def assign_stats_fn(x, c, cnorm):
+    """Fused assignment + statistics for new-point ingestion.
+
+    Returns (labels, d2, S, v, sse). Fusing keeps the (B, D) tile on
+    device between the two kernels; only (K, D)-sized statistics plus the
+    per-point labels return to the coordinator.
+    """
+    labels, d2 = distance.assign(x, c, cnorm)
+    s, v, sse = distance.cluster_stats(x, labels, d2, c.shape[0])
+    return labels, d2, s, v, sse
+
+
+def distmat_fn(x, c, cnorm):
+    """(X[B,D], C[K,D], cnorm[K]) → D²[B,K] full distance matrix."""
+    return (distance.distmat(x, c, cnorm),)
+
+
+def screen_fn(lb, p, d, labels):
+    """(L[B,K], p[K], d[B], labels[B]) → (L'[B,K], dirty[B] i32)."""
+    return distance.bound_screen(lb, p, d, labels)
+
+
+def validation_mse_fn(x, c, cnorm):
+    """(X[B,D], C[K,D], cnorm[K]) → scalar Σ_i min_j ‖x_i − c_j‖².
+
+    Used by the metrics path to score a validation batch; summed (not
+    averaged) so the coordinator can accumulate across padded tiles and
+    divide by the true N itself.
+    """
+    _, d2 = distance.assign(x, c, cnorm)
+    return (jnp.sum(d2),)
+
+
+def lower(fn, *example_args):
+    """Lower a jitted function; shared helper for aot.py and tests."""
+    return jax.jit(fn).lower(*example_args)

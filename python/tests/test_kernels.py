@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and data regimes; every test asserts allclose
+(or exact equality for integer outputs) against ``kernels/ref.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_xc(rng, b, d, k, scale=1.0, dupes=False):
+    x = rng.normal(size=(b, d)).astype(np.float32) * scale
+    c = rng.normal(size=(k, d)).astype(np.float32) * scale
+    if dupes:
+        # duplicate centroids exercise argmin tie-breaking
+        c[1 % k] = c[0]
+    return jnp.asarray(x), jnp.asarray(c)
+
+
+shapes = st.tuples(
+    st.sampled_from([8, 64, 256, 512]),     # b (multiple of tile when big)
+    st.integers(min_value=1, max_value=96),  # d
+    st.integers(min_value=1, max_value=40),  # k
+)
+
+
+@given(shapes, st.integers(0, 2**32 - 1), st.booleans())
+def test_assign_matches_ref(shape, seed, dupes):
+    b, d, k = shape
+    rng = _rng(seed)
+    x, c = make_xc(rng, b, d, k, dupes=dupes)
+    tile = min(b, distance.TILE_B)
+    lbl, d2 = distance.assign(x, c, jnp.sum(c * c, axis=1), tile_b=tile)
+    lbl_r, d2_r = ref.assign_ref(x, c)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_r),
+                               rtol=1e-4, atol=1e-3)
+    # label may differ from ref only where distances tie numerically
+    mism = np.asarray(lbl) != np.asarray(lbl_r)
+    if mism.any():
+        xm = np.asarray(x)[mism]
+        cm = np.asarray(c)
+        da = ((xm[:, None, :] - cm[None]) ** 2).sum(-1)
+        picked = da[np.arange(mism.sum()), np.asarray(lbl)[mism]]
+        best = da.min(1)
+        np.testing.assert_allclose(picked, best, rtol=1e-4, atol=1e-3)
+
+
+@given(shapes, st.integers(0, 2**32 - 1))
+def test_distmat_matches_ref(shape, seed):
+    b, d, k = shape
+    rng = _rng(seed)
+    x, c = make_xc(rng, b, d, k)
+    tile = min(b, distance.TILE_B)
+    got = distance.distmat(x, c, jnp.sum(c * c, axis=1), tile_b=tile)
+    want = ref.distmat_ref(x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    assert float(jnp.min(got)) >= 0.0
+
+
+@given(shapes, st.integers(0, 2**32 - 1))
+def test_cluster_stats_matches_ref(shape, seed):
+    b, d, k = shape
+    rng = _rng(seed)
+    x, c = make_xc(rng, b, d, k)
+    tile = min(b, distance.TILE_B)
+    lbl, d2 = ref.assign_ref(x, c)
+    s, v, sse = distance.cluster_stats(x, lbl, d2, k, tile_b=tile)
+    s_r, v_r, sse_r = ref.cluster_stats_ref(x, lbl, d2, k)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_r))
+    np.testing.assert_allclose(np.asarray(sse), np.asarray(sse_r),
+                               rtol=1e-4, atol=1e-3)
+
+
+@given(shapes, st.integers(0, 2**32 - 1),
+       st.floats(min_value=0.0, max_value=2.0))
+def test_bound_screen_matches_ref(shape, seed, pscale):
+    b, _, k = shape
+    rng = _rng(seed)
+    lb = jnp.asarray(np.abs(rng.normal(size=(b, k))).astype(np.float32))
+    p = jnp.asarray((np.abs(rng.normal(size=(k,))) * pscale)
+                    .astype(np.float32))
+    d = jnp.asarray(np.abs(rng.normal(size=(b,))).astype(np.float32))
+    lbl = jnp.asarray(rng.integers(0, k, size=(b,)).astype(np.int32))
+    tile = min(b, distance.TILE_B)
+    lb2, dirty = distance.bound_screen(lb, p, d, lbl, tile_b=tile)
+    lb2_r, dirty_r = ref.bound_screen_ref(lb, p, d, lbl)
+    np.testing.assert_allclose(np.asarray(lb2), np.asarray(lb2_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(dirty), np.asarray(dirty_r))
+
+
+def test_assign_k1_degenerate():
+    rng = _rng(7)
+    x, c = make_xc(rng, 64, 5, 1)
+    lbl, d2 = distance.assign(x, c, jnp.sum(c * c, axis=1), tile_b=64)
+    assert (np.asarray(lbl) == 0).all()
+    np.testing.assert_allclose(
+        np.asarray(d2), ((np.asarray(x) - np.asarray(c)[0]) ** 2).sum(-1),
+        rtol=1e-4, atol=1e-3)
+
+
+def test_assign_exact_hit_distance_zero():
+    """A point equal to a centroid must get d2 == 0 (clamped, not -eps)."""
+    rng = _rng(9)
+    x, c = make_xc(rng, 8, 16, 4)
+    x = x.at[3].set(c[2])
+    lbl, d2 = distance.assign(x, c, jnp.sum(c * c, axis=1), tile_b=8)
+    assert int(lbl[3]) == 2
+    assert float(d2[3]) <= 1e-3
+    assert float(d2.min()) >= 0.0
+
+
+def test_screen_clean_point_not_dirty():
+    """If all bounds (after decay) stay above d, the point is clean."""
+    b, k = 8, 4
+    lb = jnp.full((b, k), 10.0, dtype=jnp.float32)
+    p = jnp.zeros((k,), dtype=jnp.float32)
+    d = jnp.ones((b,), dtype=jnp.float32)
+    lbl = jnp.zeros((b,), dtype=jnp.int32)
+    _, dirty = distance.bound_screen(lb, p, d, lbl, tile_b=b)
+    assert (np.asarray(dirty) == 0).all()
+
+
+def test_screen_own_centroid_never_triggers():
+    """The assigned centroid's own bound must not mark a point dirty."""
+    b, k = 8, 4
+    lb = jnp.full((b, k), 10.0, dtype=jnp.float32)
+    lbl = jnp.asarray(np.arange(b) % k, dtype=jnp.int32)
+    lb = lb.at[jnp.arange(b), lbl].set(0.0)   # own bound far below d
+    p = jnp.zeros((k,), dtype=jnp.float32)
+    d = jnp.ones((b,), dtype=jnp.float32)
+    _, dirty = distance.bound_screen(lb, p, d, lbl, tile_b=b)
+    assert (np.asarray(dirty) == 0).all()
+
+
+def test_stats_counts_sum_to_batch():
+    rng = _rng(11)
+    x, c = make_xc(rng, 256, 32, 8)
+    lbl, d2 = ref.assign_ref(x, c)
+    _, v, sse = distance.cluster_stats(x, lbl, d2, 8, tile_b=256)
+    assert float(jnp.sum(v)) == 256.0
+    np.testing.assert_allclose(float(jnp.sum(sse)), float(jnp.sum(d2)),
+                               rtol=1e-5)
+
+
+def test_multi_tile_grid_consistency():
+    """Results must not depend on how the batch is tiled."""
+    rng = _rng(13)
+    x, c = make_xc(rng, 512, 24, 6)
+    cn = jnp.sum(c * c, axis=1)
+    l1, d1 = distance.assign(x, c, cn, tile_b=512)
+    l2, d2 = distance.assign(x, c, cn, tile_b=128)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)

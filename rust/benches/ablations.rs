@@ -1,0 +1,16 @@
+//! Bench A — ablations beyond the paper's tables: growth-policy law
+//! (double vs ×1.5 vs additive vs always-double) and initialisation
+//! scheme (shuffle-first-k vs uniform vs batch-restricted k-means++),
+//! both identified as future work in the paper's §5.
+
+use nmbkm::experiments::{ablations, common::ExpOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    println!(
+        "[ablations] scale={:?} seeds={} budget={}s/run",
+        opts.scale, opts.seeds, opts.seconds
+    );
+    ablations::run(&opts).expect("ablations failed");
+}

@@ -1,0 +1,20 @@
+//! Bench F1 — regenerates the paper's Figure 1 (validation MSE relative
+//! to best V0, versus work time, for lloyd / mb / mb-f / gb-∞ / tb-∞ on
+//! infMNIST and RCV1).
+//!
+//! Expected shape (paper §4.3.2): mb-f overtakes mb after ~one data
+//! pass; gb-∞ is favourable vs mb-f; tb-∞ dominates and reaches
+//! lloyd-quality minima far sooner than lloyd. CSV series land in
+//! artifacts/results/fig1_{infmnist,rcv1}.csv.
+
+use nmbkm::experiments::{common::ExpOpts, fig1};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    println!(
+        "[fig1] scale={:?} seeds={} budget={}s/run",
+        opts.scale, opts.seeds, opts.seconds
+    );
+    fig1::run(&opts).expect("fig1 failed");
+}

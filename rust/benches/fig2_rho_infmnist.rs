@@ -1,0 +1,18 @@
+//! Bench F2 — regenerates Figure 2: the effect of ρ ∈ {1,10,100,1000,∞}
+//! on gb-ρ and tb-ρ, infMNIST, with mb for reference.
+//!
+//! Expected shape (paper §4.3.1): gb-ρ has an intermediate sweet spot
+//! early with large ρ winning late; tb-ρ is best at very large ρ
+//! (ρ=1000 ≈ ρ=∞), and ρ=1 shows the redundancy-induced slowdown.
+
+use nmbkm::experiments::{common::ExpOpts, rho_sweep};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    println!(
+        "[fig2] scale={:?} seeds={} budget={}s/run",
+        opts.scale, opts.seeds, opts.seconds
+    );
+    rho_sweep::run(2, &opts).expect("fig2 failed");
+}

@@ -1,0 +1,15 @@
+//! Bench F3 — regenerates supplementary Figure 3: the ρ sweep of
+//! Figure 2 on the sparse RCV1 dataset. Same expected shape: tb-ρ wants
+//! very large ρ; gb-ρ is ambiguous.
+
+use nmbkm::experiments::{common::ExpOpts, rho_sweep};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    println!(
+        "[fig3] scale={:?} seeds={} budget={}s/run",
+        opts.scale, opts.seeds, opts.seconds
+    );
+    rho_sweep::run(3, &opts).expect("fig3 failed");
+}

@@ -1,0 +1,128 @@
+//! Bench P — §Perf micro-benchmarks over the hot paths the profiles
+//! identified: dense/sparse distance kernels, the bound screen, the
+//! tb point-step, stats merging, and engine-level assignment throughput
+//! (native serial vs threaded vs XLA). Drives the EXPERIMENTS.md §Perf
+//! iteration log; each row is before/after comparable.
+
+use nmbkm::bench::{BenchOpts, BenchSet};
+use nmbkm::coordinator::Pool;
+use nmbkm::data::{gaussian::GaussianMixture, infmnist::InfMnist, rcv1::Rcv1Sim};
+use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel};
+use nmbkm::kmeans::{bounds, init};
+use nmbkm::linalg::dense;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = BenchOpts::from_env_or_args(&args);
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+
+    // --- raw kernels -----------------------------------------------------
+    let mut set = BenchSet::new("L3 native kernels", opts);
+    let a: Vec<f32> = (0..784).map(|i| (i as f32).sin()).collect();
+    let b: Vec<f32> = (0..784).map(|i| (i as f32).cos()).collect();
+    set.bench("dot d=784 x 100k", || {
+        let mut acc = 0f32;
+        for _ in 0..100_000 {
+            acc += dense::dot(std::hint::black_box(&a), std::hint::black_box(&b));
+        }
+        acc
+    });
+    // memory-roofline context: 2 vectors × 784 × 4B × 100k = 627 MB read
+    let m = set.get("dot d=784 x 100k").unwrap().min_secs();
+    println!(
+        "     → {:.2} GFLOP/s, {:.2} GB/s effective",
+        2.0 * 784.0 * 100_000.0 / m / 1e9,
+        2.0 * 784.0 * 4.0 * 100_000.0 / m / 1e9
+    );
+
+    // --- engine assignment throughput -------------------------------------
+    let data = InfMnist::default().generate(20_000, 1);
+    let cent = init::first_k(&data, 50);
+    let eng = NativeEngine;
+    let mut lbl = vec![0u32; data.n()];
+    let mut d2 = vec![0f32; data.n()];
+    let mut set = BenchSet::new("assignment step (dense 20k x 784, k=50)", opts);
+    set.bench("native 1 thread", || {
+        eng.assign(&data, Sel::Range(0, data.n()), &cent, &Pool::new(1), &mut lbl, &mut d2)
+    });
+    set.bench(&format!("native {threads} threads"), || {
+        eng.assign(&data, Sel::Range(0, data.n()), &cent, &Pool::new(threads), &mut lbl, &mut d2)
+    });
+    if let Ok(xla) = nmbkm::runtime::make_engine("artifacts") {
+        set.bench("xla engine (PJRT tiles)", || {
+            xla.assign(&data, Sel::Range(0, data.n()), &cent, &Pool::new(threads), &mut lbl, &mut d2)
+        });
+    } else {
+        println!("  (xla engine skipped: run `make artifacts`)");
+    }
+    let t1 = set.get("native 1 thread").unwrap().min_secs();
+    let tn = set.get(&format!("native {threads} threads")).unwrap().min_secs();
+    println!("     → thread scaling {:.2}x on {threads} threads", t1 / tn);
+
+    // --- sparse engine -----------------------------------------------------
+    let sdata = Rcv1Sim::default().generate(20_000, 2);
+    let scent = init::first_k(&sdata, 50);
+    let mut slbl = vec![0u32; sdata.n()];
+    let mut sd2 = vec![0f32; sdata.n()];
+    let mut set = BenchSet::new("assignment step (sparse 20k x 47k, k=50)", opts);
+    set.bench("native 1 thread", || {
+        eng.assign(&sdata, Sel::Range(0, sdata.n()), &scent, &Pool::new(1), &mut slbl, &mut sd2)
+    });
+    set.bench(&format!("native {threads} threads"), || {
+        eng.assign(&sdata, Sel::Range(0, sdata.n()), &scent, &Pool::new(threads), &mut slbl, &mut sd2)
+    });
+
+    // --- bound machinery ---------------------------------------------------
+    let gdata = GaussianMixture::default_spec(8, 64).generate(10_000, 3);
+    let gcent = init::first_k(&gdata, 50);
+    let mut store = bounds::BoundStore::new(50);
+    store.grow_to(10_000);
+    let mut labels = vec![0u32; 10_000];
+    for i in 0..10_000 {
+        labels[i] = bounds::full_assign_fill(&gdata, i, &gcent, store.row_mut(i)).label;
+    }
+    let mut set = BenchSet::new("tb bound machinery (10k pts, k=50)", opts);
+    set.bench("tb_point_step pass (stationary)", || {
+        let mut calcs = 0u64;
+        for i in 0..10_000 {
+            calcs += bounds::tb_point_step(&gdata, i, &gcent, store.row_mut(i), labels[i])
+                .dist_calcs;
+        }
+        calcs
+    });
+    set.bench("screen pass (clean)", || {
+        let mut dirty = 0u32;
+        for i in 0..10_000 {
+            let mut row = store.row(i).to_vec();
+            dirty += bounds::screen(&mut row, &gcent.p, labels[i], 0.0) as u32;
+        }
+        dirty
+    });
+    set.bench("full_assign_fill pass (no bounds)", || {
+        let mut row = vec![0f32; 50];
+        let mut acc = 0u64;
+        for i in 0..10_000 {
+            acc += bounds::full_assign_fill(&gdata, i, &gcent, &mut row).dist_calcs;
+        }
+        acc
+    });
+    let screened = set.get("screen pass (clean)").unwrap().min_secs();
+    let full = set.get("full_assign_fill pass (no bounds)").unwrap().min_secs();
+    println!(
+        "     → screen is {:.0}x cheaper than full recompute (must be ≫1 for the tile path to pay)",
+        full / screened
+    );
+
+    // --- stats merge -------------------------------------------------------
+    let mut set = BenchSet::new("coordinator merge (k=64, d=784)", opts);
+    set.bench("merge 8 SuffStats deltas", || {
+        use nmbkm::coordinator::merge::Mergeable;
+        let mut total = nmbkm::kmeans::state::SuffStats::zeros(64, 784);
+        for _ in 0..8 {
+            total.merge(nmbkm::kmeans::state::SuffStats::zeros(64, 784));
+        }
+        total.v[0]
+    });
+
+    println!("\nmicro_hotpaths done");
+}

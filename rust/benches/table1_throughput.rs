@@ -1,0 +1,22 @@
+//! Bench T1 — regenerates the paper's Table 1 (mb implementation
+//! throughput: seconds to process N datapoints, dense + sparse).
+//!
+//! Paper rows: our 12.4s vs sklearn 20.6s (infMNIST); our 15.2s vs
+//! sklearn 63.6s vs sofia 23.3s (RCV1). Offline substitution: the
+//! Alg-8 S/v formulation ("our") vs the Alg-1 per-sample formulation
+//! (what sklearn/sofia structurally do), plus the XLA dense path.
+//! Expected shape: alg8 ≤ alg1 everywhere, with the largest gap on the
+//! sparse dataset. Run with `--full` / NMBKM_BENCH_FULL=1 for paper
+//! scale.
+
+use nmbkm::experiments::{common::ExpOpts, table1};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    println!(
+        "[table1] scale={:?} threads={} (use --full for paper scale)",
+        opts.scale, opts.threads
+    );
+    table1::run(&opts).expect("table1 failed");
+}

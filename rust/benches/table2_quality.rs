@@ -1,0 +1,21 @@
+//! Bench T2 — regenerates the paper's Table 2: final cluster quality of
+//! lloyd vs tb-∞ for initial batch sizes b0 across both datasets.
+//!
+//! Expected shape: on dense infMNIST, tb-∞ ≈ lloyd for all b0; on
+//! sparse RCV1, tb-∞ degrades as b0 shrinks while lloyd stays flat.
+
+use nmbkm::experiments::{common::ExpOpts, table2};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = ExpOpts::from_args(&args);
+    // quality cells want longer budgets than curve benches
+    if !args.iter().any(|a| a == "--seconds") {
+        opts.seconds *= 2.0;
+    }
+    println!(
+        "[table2] scale={:?} seeds={} budget={}s/run",
+        opts.scale, opts.seeds, opts.seconds
+    );
+    table2::run(&opts).expect("table2 failed");
+}

@@ -1,0 +1,139 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! [`BenchSet`] runs named closures with warmup, multiple samples, and
+//! reports min/median/mean — enough statistical hygiene for the paper's
+//! throughput tables. `cargo bench` targets under `rust/benches/` are
+//! `harness = false` binaries built on this.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn min_secs(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Bench runner configuration; `quick()` keeps CI latency sane and is
+/// selected by the `--quick` flag or `NMBKM_BENCH_QUICK=1`.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl BenchOpts {
+    pub fn standard() -> Self {
+        Self { warmup: 2, samples: 7 }
+    }
+
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 3 }
+    }
+
+    pub fn from_env_or_args(args: &[String]) -> Self {
+        let quick = args.iter().any(|a| a == "--quick")
+            || std::env::var("NMBKM_BENCH_QUICK").ok().as_deref() == Some("1");
+        if quick {
+            Self::quick()
+        } else {
+            Self::standard()
+        }
+    }
+}
+
+/// A set of related benchmarks printed as one table.
+pub struct BenchSet {
+    pub title: String,
+    pub opts: BenchOpts,
+    pub results: Vec<Measurement>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str, opts: BenchOpts) -> Self {
+        println!("== {title} ==");
+        Self { title: title.to_string(), opts, results: vec![] }
+    }
+
+    /// Time `f` (warmup + samples); prints and records.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.opts.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.opts.samples);
+        for _ in 0..self.opts.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(), samples };
+        println!(
+            "  {:<42} min {:>9.4}s  median {:>9.4}s  mean {:>9.4}s",
+            m.name,
+            m.min_secs(),
+            m.median_secs(),
+            m.mean_secs()
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally measured value (e.g. a full run's work time).
+    pub fn record(&mut self, name: &str, secs: f64) {
+        println!("  {name:<42} {secs:>9.4}s");
+        self.results.push(Measurement { name: name.to_string(), samples: vec![secs] });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut set = BenchSet::new("t", BenchOpts { warmup: 1, samples: 4 });
+        let mut calls = 0;
+        set.bench("noop", || {
+            calls += 1;
+        });
+        assert_eq!(calls, 5); // warmup + samples
+        let m = set.get("noop").unwrap();
+        assert_eq!(m.samples.len(), 4);
+        assert!(m.min_secs() <= m.median_secs());
+        assert!(m.median_secs() >= 0.0);
+    }
+
+    #[test]
+    fn quick_mode_from_args() {
+        let o = BenchOpts::from_env_or_args(&["--quick".to_string()]);
+        assert_eq!(o.samples, BenchOpts::quick().samples);
+        let o = BenchOpts::from_env_or_args(&[]);
+        assert_eq!(o.samples, BenchOpts::standard().samples);
+    }
+
+    #[test]
+    fn record_external() {
+        let mut set = BenchSet::new("t", BenchOpts::quick());
+        set.record("runtime", 1.25);
+        assert_eq!(set.get("runtime").unwrap().median_secs(), 1.25);
+    }
+}

@@ -1,0 +1,339 @@
+//! Run configuration: which algorithm, dataset, batch policy, engine and
+//! budget. Parsed from CLI args (`util::args`) or config files
+//! (`key = value` lines), consumed by `kmeans::run` and the experiment
+//! harnesses.
+
+use crate::util::args::{ArgError, Args};
+
+/// The clustering algorithms in the paper's evaluation (§4) plus the
+/// Elkan-accelerated exact baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Lloyd's exact algorithm.
+    Lloyd,
+    /// Lloyd with Elkan triangle-inequality acceleration (identical
+    /// output, fewer distance computations).
+    Elkan,
+    /// Bottou–Bengio online k-means (mb with b = 1).
+    Sgd,
+    /// Sculley mini-batch (Alg. 1, via the S/v reformulation Alg. 8).
+    Mb,
+    /// Fixed mini-batch: removes contaminating assignments (Alg. 4).
+    MbF,
+    /// Grow-batch with the σ̂_C/p controller (Alg. 7; ρ=∞ → Alg. 10).
+    GbRho,
+    /// Turbocharged grow-batch: gb-ρ + Elkan bounds (Alg. 9 / 11).
+    TbRho,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo, ArgError> {
+        Ok(match s {
+            "lloyd" => Algo::Lloyd,
+            "elkan" => Algo::Elkan,
+            "sgd" => Algo::Sgd,
+            "mb" => Algo::Mb,
+            "mbf" | "mb-f" => Algo::MbF,
+            "gb" | "gb-rho" => Algo::GbRho,
+            "tb" | "tb-rho" => Algo::TbRho,
+            other => {
+                return Err(ArgError(format!(
+                    "unknown algorithm '{other}' \
+                     (lloyd|elkan|sgd|mb|mbf|gb|tb)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Lloyd => "lloyd",
+            Algo::Elkan => "elkan",
+            Algo::Sgd => "sgd",
+            Algo::Mb => "mb",
+            Algo::MbF => "mb-f",
+            Algo::GbRho => "gb",
+            Algo::TbRho => "tb",
+        }
+    }
+}
+
+/// The gb/tb batch-growth threshold ρ. `Infinite` is the paper's
+/// degenerate ρ=∞ case: double iff a majority of centroids did not move.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Rho {
+    Finite(f64),
+    Infinite,
+}
+
+impl Rho {
+    pub fn parse(s: &str) -> Result<Rho, ArgError> {
+        if s == "inf" || s == "infinity" || s == "∞" {
+            Ok(Rho::Infinite)
+        } else {
+            s.parse::<f64>()
+                .map(Rho::Finite)
+                .map_err(|_| ArgError(format!("bad --rho '{s}'")))
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Rho::Finite(x) => format!("{x}"),
+            Rho::Infinite => "inf".to_string(),
+        }
+    }
+}
+
+/// Centroid initialisation scheme. The paper's protocol is `FirstK`
+/// (first k rows of the per-seed shuffle); the alternatives implement
+/// its §5 future-work direction on initialisation for subsample
+/// algorithms (`KmeansPPBatch` is the mini-batch-compatible variant:
+/// D² seeding restricted to the initial batch, so it needs no full
+/// data pass).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitScheme {
+    FirstK,
+    Uniform,
+    KmeansPPBatch,
+}
+
+impl InitScheme {
+    pub fn parse(s: &str) -> Result<InitScheme, ArgError> {
+        Ok(match s {
+            "first-k" | "firstk" => InitScheme::FirstK,
+            "uniform" => InitScheme::Uniform,
+            "kmeans++batch" | "pp-batch" => InitScheme::KmeansPPBatch,
+            other => {
+                return Err(ArgError(format!(
+                    "unknown init '{other}' (first-k|uniform|pp-batch)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitScheme::FirstK => "first-k",
+            InitScheme::Uniform => "uniform",
+            InitScheme::KmeansPPBatch => "pp-batch",
+        }
+    }
+}
+
+/// Which assignment engine executes the distance hot-spot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-rust scalar/unrolled loops (reference; only option for CSR).
+    Native,
+    /// PJRT-compiled Pallas/XLA artifacts for dense tiles (Layer 1/2).
+    Xla,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Engine, ArgError> {
+        match s {
+            "native" => Ok(Engine::Native),
+            "xla" => Ok(Engine::Xla),
+            other => Err(ArgError(format!("unknown engine '{other}'"))),
+        }
+    }
+}
+
+/// Stop conditions and run policy. Defaults mirror the paper's §4.3
+/// setup (k = 50, b = b0 = 5000) at CI-friendly budgets.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algo: Algo,
+    pub k: usize,
+    /// Mini-batch size (mb/mb-f) and initial grow-batch size b0.
+    pub b0: usize,
+    pub rho: Rho,
+    pub engine: Engine,
+    /// Worker threads for the assignment step (1 = serial).
+    pub threads: usize,
+    pub seed: u64,
+    /// Wall-clock work-time budget in seconds (paper plots MSE vs time).
+    pub max_seconds: f64,
+    /// Hard cap on rounds (safety net; usize::MAX = off).
+    pub max_rounds: usize,
+    /// Evaluate validation MSE roughly every this many seconds of work
+    /// time (0 = every round).
+    pub eval_every_secs: f64,
+    /// Stop when a full-batch algorithm reaches a fixed point.
+    pub stop_on_convergence: bool,
+    /// Path to artifacts/ for the XLA engine.
+    pub artifacts_dir: String,
+    /// Centroid initialisation (paper protocol: FirstK).
+    pub init: InitScheme,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            algo: Algo::TbRho,
+            k: 50,
+            b0: 5000,
+            rho: Rho::Infinite,
+            engine: Engine::Native,
+            threads: 1,
+            seed: 0,
+            max_seconds: 10.0,
+            max_rounds: usize::MAX,
+            eval_every_secs: 0.25,
+            stop_on_convergence: true,
+            artifacts_dir: "artifacts".to_string(),
+            init: InitScheme::FirstK,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Fill a config from parsed CLI args (all optional, defaults above).
+    pub fn from_args(args: &Args) -> Result<RunConfig, ArgError> {
+        let mut cfg = RunConfig::default();
+        if let Some(a) = args.get("algo") {
+            cfg.algo = Algo::parse(a)?;
+        }
+        if args.get("k").is_some() {
+            cfg.k = args.get_usize("k")?;
+        }
+        if args.get("b0").is_some() {
+            cfg.b0 = args.get_usize("b0")?;
+        }
+        if let Some(r) = args.get("rho") {
+            cfg.rho = Rho::parse(r)?;
+        }
+        if let Some(e) = args.get("engine") {
+            cfg.engine = Engine::parse(e)?;
+        }
+        if args.get("threads").is_some() {
+            cfg.threads = args.get_usize("threads")?.max(1);
+        }
+        if args.get("seed").is_some() {
+            cfg.seed = args.get_u64("seed")?;
+        }
+        if args.get("seconds").is_some() {
+            cfg.max_seconds = args.get_f64("seconds")?;
+        }
+        if args.get("rounds").is_some() {
+            cfg.max_rounds = args.get_usize("rounds")?;
+        }
+        if let Some(d) = args.get("artifacts") {
+            cfg.artifacts_dir = d.to_string();
+        }
+        if let Some(i) = args.get("init") {
+            cfg.init = InitScheme::parse(i)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Parse `key = value` lines (config-file form; `#` comments).
+    pub fn apply_file(&mut self, text: &str) -> Result<(), ArgError> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| ArgError(format!("line {}: expected key = value", lineno + 1)))?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "algo" => self.algo = Algo::parse(val)?,
+                "k" => self.k = parse_num(key, val)?,
+                "b0" => self.b0 = parse_num(key, val)?,
+                "rho" => self.rho = Rho::parse(val)?,
+                "engine" => self.engine = Engine::parse(val)?,
+                "threads" => self.threads = parse_num::<usize>(key, val)?.max(1),
+                "seed" => self.seed = parse_num(key, val)?,
+                "seconds" => self.max_seconds = parse_num(key, val)?,
+                "rounds" => self.max_rounds = parse_num(key, val)?,
+                "eval_every_secs" => self.eval_every_secs = parse_num(key, val)?,
+                "artifacts" => self.artifacts_dir = val.to_string(),
+                "init" => self.init = InitScheme::parse(val)?,
+                other => {
+                    return Err(ArgError(format!("unknown config key '{other}'")))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable one-liner for logs.
+    pub fn label(&self) -> String {
+        match self.algo {
+            Algo::GbRho | Algo::TbRho => {
+                format!("{}-{}", self.algo.name(), self.rho.label())
+            }
+            _ => self.algo.name().to_string(),
+        }
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, ArgError> {
+    val.parse()
+        .map_err(|_| ArgError(format!("bad numeric value for '{key}': '{val}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_roundtrip() {
+        for s in ["lloyd", "elkan", "sgd", "mb", "mbf", "gb", "tb"] {
+            let a = Algo::parse(s).unwrap();
+            assert!(Algo::parse(a.name()).is_ok());
+        }
+        assert!(Algo::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn rho_parse() {
+        assert_eq!(Rho::parse("inf").unwrap(), Rho::Infinite);
+        assert_eq!(Rho::parse("100").unwrap(), Rho::Finite(100.0));
+        assert!(Rho::parse("x").is_err());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(
+            "algo = tb   # the turbo one\nk = 10\nrho = inf\nseconds = 2.5\n\n# comment\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.algo, Algo::TbRho);
+        assert_eq!(cfg.k, 10);
+        assert_eq!(cfg.rho, Rho::Infinite);
+        assert_eq!(cfg.max_seconds, 2.5);
+        assert!(cfg.apply_file("nope = 3").is_err());
+        assert!(cfg.apply_file("k 3").is_err());
+    }
+
+    #[test]
+    fn label_includes_rho_for_gb_tb() {
+        let cfg = RunConfig { algo: Algo::TbRho, rho: Rho::Finite(100.0), ..Default::default() };
+        assert_eq!(cfg.label(), "tb-100");
+        let cfg = RunConfig { algo: Algo::Mb, ..Default::default() };
+        assert_eq!(cfg.label(), "mb");
+    }
+
+    #[test]
+    fn from_args_defaults_and_overrides() {
+        use crate::util::args::{Args, OptSpec};
+        let spec = [
+            OptSpec { name: "algo", takes_value: true, default: None, help: "" },
+            OptSpec { name: "rho", takes_value: true, default: None, help: "" },
+            OptSpec { name: "k", takes_value: true, default: None, help: "" },
+        ];
+        let raw: Vec<String> =
+            ["--algo", "gb", "--rho", "10", "--k", "8"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&raw, &spec).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.algo, Algo::GbRho);
+        assert_eq!(cfg.rho, Rho::Finite(10.0));
+        assert_eq!(cfg.k, 8);
+        assert_eq!(cfg.b0, 5000); // default preserved
+    }
+}

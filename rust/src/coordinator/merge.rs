@@ -1,0 +1,63 @@
+//! Leader-side merging of per-shard results.
+//!
+//! Workers produce partial sufficient-statistics deltas (or any type
+//! implementing [`Mergeable`]); the leader folds them in shard order so
+//! the result is deterministic for a given chunking.
+
+/// Types that can absorb another instance of themselves.
+pub trait Mergeable {
+    fn merge(&mut self, other: Self);
+}
+
+/// Fold shard results in order; returns `None` for an empty set.
+pub fn fold<T: Mergeable>(parts: Vec<T>) -> Option<T> {
+    let mut it = parts.into_iter();
+    let mut acc = it.next()?;
+    for p in it {
+        acc.merge(p);
+    }
+    Some(acc)
+}
+
+/// A pair of scalar accumulators many shards produce (e.g. distance
+/// calculations + bound skips).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    pub dist_calcs: u64,
+    pub bound_skips: u64,
+}
+
+impl Mergeable for Counters {
+    fn merge(&mut self, other: Self) {
+        self.dist_calcs += other.dist_calcs;
+        self.bound_skips += other.bound_skips;
+    }
+}
+
+impl Mergeable for f64 {
+    fn merge(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_counters() {
+        let parts = vec![
+            Counters { dist_calcs: 1, bound_skips: 10 },
+            Counters { dist_calcs: 2, bound_skips: 20 },
+            Counters { dist_calcs: 3, bound_skips: 30 },
+        ];
+        let total = fold(parts).unwrap();
+        assert_eq!(total, Counters { dist_calcs: 6, bound_skips: 60 });
+        assert!(fold::<Counters>(vec![]).is_none());
+    }
+
+    #[test]
+    fn fold_scalars() {
+        assert_eq!(fold(vec![1.0, 2.0, 3.5]).unwrap(), 6.5);
+    }
+}

@@ -1,0 +1,13 @@
+//! Leader/worker coordination: the assignment step of every algorithm is
+//! sharded across a thread pool; per-shard results (labels, distances,
+//! statistics deltas) are merged serially by the leader, which owns the
+//! centroid update and the batch-growth vote (k ≪ N work).
+//!
+//! The offline image has no tokio/rayon; [`shard::Pool`] is built on
+//! `std::thread::scope`, which is all a compute-bound workload needs.
+
+pub mod merge;
+pub mod progress;
+pub mod shard;
+
+pub use shard::Pool;

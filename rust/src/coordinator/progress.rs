@@ -1,0 +1,121 @@
+//! Run progress: event logging and tabular result output.
+//!
+//! Experiments write their series as CSV under `artifacts/results/` (one
+//! file per run or per figure) plus optional JSON sidecars; the bench
+//! harnesses print the paper-shaped tables from these.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A simple CSV table builder (header + typed rows as strings).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Where experiment outputs land (`artifacts/results/` by default,
+/// override with `NMBKM_RESULTS_DIR`).
+pub fn results_dir() -> PathBuf {
+    std::env::var("NMBKM_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts/results"))
+}
+
+/// An append-only event log with wall timestamps, for debugging long
+/// experiment runs (`--verbose` paths print it live).
+#[derive(Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<(f64, String)>,
+    start: Option<std::time::Instant>,
+    pub echo: bool,
+}
+
+impl EventLog {
+    pub fn new(echo: bool) -> Self {
+        Self { events: vec![], start: Some(std::time::Instant::now()), echo }
+    }
+
+    pub fn log(&mut self, msg: impl Into<String>) {
+        let t = self.start.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let msg = msg.into();
+        if self.echo {
+            eprintln!("[{t:8.3}s] {msg}");
+        }
+        self.events.push((t, msg));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["1".into(), "x".into()]);
+        t.push(vec!["2".into(), "y".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,x\n2,y\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("nmbkm-test-{}", std::process::id()));
+        let path = dir.join("sub/table.csv");
+        let mut t = Table::new(&["x"]);
+        t.push(vec!["7".into()]);
+        t.write_csv(&path).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn event_log_ordered() {
+        let mut l = EventLog::new(false);
+        l.log("first");
+        l.log("second");
+        assert_eq!(l.events.len(), 2);
+        assert!(l.events[0].0 <= l.events[1].0);
+        assert_eq!(l.events[1].1, "second");
+    }
+}

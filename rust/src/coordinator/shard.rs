@@ -1,0 +1,196 @@
+//! Work sharding across scoped threads.
+//!
+//! [`Pool::run_chunks`] splits `0..n` into near-equal contiguous chunks,
+//! runs a closure per chunk on worker threads, and returns results in
+//! chunk order — deterministic regardless of scheduling, which the
+//! reproducibility tests rely on. Output buffers are split with
+//! [`split_outputs`] so each worker writes a disjoint region without
+//! locks.
+
+/// A (very small) thread pool descriptor. Threads are scoped per call:
+/// for round-granularity work (≥ milliseconds) the ~10 µs spawn cost is
+/// noise, and scoped borrows keep the API non-`'static`.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    pub threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Use all available parallelism.
+    pub fn auto() -> Self {
+        let t = std::thread::available_parallelism()
+            .map(|x| x.get())
+            .unwrap_or(1);
+        Self::new(t)
+    }
+
+    /// Split `0..n` into chunks (at least `min_chunk` items each, except
+    /// possibly the last) and run `f(chunk_index, range)` on each,
+    /// in parallel when it pays. Results come back in chunk order.
+    pub fn run_chunks<R, F>(&self, n: usize, min_chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, std::ops::Range<usize>) -> R + Sync,
+    {
+        let ranges = chunk_ranges(n, self.threads, min_chunk);
+        if ranges.len() <= 1 {
+            return ranges
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| f(i, r))
+                .collect();
+        }
+        let mut out: Vec<Option<R>> = (0..ranges.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(ranges.len());
+            for (slot, (i, r)) in out.iter_mut().zip(ranges.into_iter().enumerate()) {
+                let f = &f;
+                handles.push(scope.spawn(move || {
+                    *slot = Some(f(i, r));
+                }));
+            }
+            for h in handles {
+                h.join().expect("worker panicked");
+            }
+        });
+        out.into_iter().map(|x| x.unwrap()).collect()
+    }
+}
+
+/// Contiguous near-equal chunks of `0..n`: at most `threads` chunks, each
+/// at least `min_chunk` long (except a short final chunk when n is small).
+pub fn chunk_ranges(n: usize, threads: usize, min_chunk: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return vec![];
+    }
+    let min_chunk = min_chunk.max(1);
+    let max_chunks = n.div_ceil(min_chunk);
+    let chunks = threads.max(1).min(max_chunks);
+    let base = n / chunks;
+    let rem = n % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split two output slices into per-chunk disjoint mutable views matching
+/// `chunk_ranges(n, …)`, so shards write results without synchronisation.
+pub fn split_outputs<'a, A, B>(
+    ranges: &[std::ops::Range<usize>],
+    a: &'a mut [A],
+    b: &'a mut [B],
+) -> Vec<(&'a mut [A], &'a mut [B])> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest_a = a;
+    let mut rest_b = b;
+    let mut consumed = 0usize;
+    for r in ranges {
+        let len = r.len();
+        debug_assert_eq!(r.start, consumed);
+        let (ha, ta) = rest_a.split_at_mut(len);
+        let (hb, tb) = rest_b.split_at_mut(len);
+        out.push((ha, hb));
+        rest_a = ta;
+        rest_b = tb;
+        consumed += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_partition_exactly() {
+        for &(n, t, m) in
+            &[(0usize, 4usize, 1usize), (1, 4, 1), (10, 3, 1), (100, 7, 16), (5, 10, 1)]
+        {
+            let rs = chunk_ranges(n, t, m);
+            let total: usize = rs.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n, "n={n} t={t} m={m}");
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            if let Some(first) = rs.first() {
+                assert_eq!(first.start, 0);
+            }
+            assert!(rs.len() <= t.max(1));
+        }
+    }
+
+    #[test]
+    fn min_chunk_limits_fanout() {
+        let rs = chunk_ranges(10, 8, 4);
+        assert!(rs.len() <= 3, "{rs:?}");
+    }
+
+    #[test]
+    fn run_chunks_covers_all_items() {
+        let pool = Pool::new(4);
+        let touched = AtomicUsize::new(0);
+        let sums = pool.run_chunks(1000, 1, |_, r| {
+            touched.fetch_add(r.len(), Ordering::Relaxed);
+            r.sum::<usize>()
+        });
+        assert_eq!(touched.load(Ordering::Relaxed), 1000);
+        assert_eq!(sums.iter().sum::<usize>(), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn results_in_chunk_order() {
+        let pool = Pool::new(8);
+        let ids = pool.run_chunks(64, 1, |i, _| i);
+        assert_eq!(ids, (0..ids.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_pool_works() {
+        let pool = Pool::new(1);
+        let v = pool.run_chunks(10, 1, |_, r| r.len());
+        assert_eq!(v, vec![10]);
+    }
+
+    #[test]
+    fn split_outputs_disjoint_and_writable() {
+        let ranges = chunk_ranges(10, 3, 1);
+        let mut a = vec![0u32; 10];
+        let mut b = vec![0f32; 10];
+        {
+            let views = split_outputs(&ranges, &mut a, &mut b);
+            assert_eq!(views.len(), ranges.len());
+            for (i, (va, vb)) in views.into_iter().enumerate() {
+                for x in va.iter_mut() {
+                    *x = i as u32;
+                }
+                vb.fill(i as f32);
+            }
+        }
+        assert_eq!(a[0], 0);
+        assert_eq!(*a.last().unwrap() as usize, ranges.len() - 1);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let work = |_: usize, r: std::ops::Range<usize>| -> u64 {
+            r.map(|x| (x as u64).wrapping_mul(2654435761)).sum()
+        };
+        let serial: Vec<u64> = Pool::new(1).run_chunks(5000, 1, work);
+        let par: Vec<u64> = Pool::new(8).run_chunks(5000, 1, work);
+        assert_eq!(
+            serial.iter().sum::<u64>(),
+            par.iter().sum::<u64>()
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Gaussian-mixture generator: the controlled workload for unit tests,
+//! property tests and the quickstart example. Ground-truth centers are
+//! returned so tests can check recovery.
+
+use crate::data::{Data, Dataset};
+use crate::linalg::dense::DenseMatrix;
+use crate::util::rng::Pcg64;
+
+/// Specification of an isotropic Gaussian mixture in `d` dimensions.
+#[derive(Clone, Debug)]
+pub struct GaussianMixture {
+    pub k: usize,
+    pub d: usize,
+    /// Distance scale between centers (centers ~ N(0, center_spread²·I)).
+    pub center_spread: f64,
+    /// Within-cluster noise σ.
+    pub noise: f64,
+    /// Mixing weights (uniform if empty).
+    pub weights: Vec<f64>,
+}
+
+impl GaussianMixture {
+    /// A well-separated default: spread 5σ.
+    pub fn default_spec(k: usize, d: usize) -> Self {
+        Self { k, d, center_spread: 5.0, noise: 1.0, weights: vec![] }
+    }
+
+    /// Draw ground-truth centers for a given seed.
+    pub fn centers(&self, seed: u64) -> DenseMatrix {
+        let mut rng = Pcg64::new(seed, 0xCE17).derive("gmm-centers");
+        let mut c = DenseMatrix::zeros(self.k, self.d);
+        for j in 0..self.k {
+            for t in 0..self.d {
+                c.row_mut(j)[t] = (rng.gauss() * self.center_spread) as f32;
+            }
+        }
+        c
+    }
+
+    /// Generate `n` points (row-major dense).
+    pub fn generate(&self, n: usize, seed: u64) -> Data {
+        self.generate_stream(n, seed, "gmm-points")
+    }
+
+    /// Same mixture (centers from `seed`) with an independent sample
+    /// stream — used for train/validation pairs.
+    pub fn generate_stream(&self, n: usize, seed: u64, stream: &str) -> Data {
+        let centers = self.centers(seed);
+        let mut rng = Pcg64::new(seed, 0xCE17).derive(stream);
+        let weights = if self.weights.is_empty() {
+            vec![1.0; self.k]
+        } else {
+            assert_eq!(self.weights.len(), self.k);
+            self.weights.clone()
+        };
+        let mut m = DenseMatrix::zeros(n, self.d);
+        for i in 0..n {
+            let j = rng.categorical(&weights);
+            let cj = centers.row(j);
+            let r = m.row_mut(i);
+            for t in 0..self.d {
+                r[t] = cj[t] + (rng.gauss() * self.noise) as f32;
+            }
+        }
+        Data::dense(m)
+    }
+
+    /// Train + validation dataset pair.
+    pub fn dataset(&self, n_train: usize, n_val: usize, seed: u64) -> Dataset {
+        Dataset {
+            name: format!("gaussian-k{}-d{}", self.k, self.d),
+            train: self.generate_stream(n_train, seed, "gmm-points"),
+            // same mixture, independent sample stream
+            val: self.generate_stream(n_val, seed, "gmm-val"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = GaussianMixture::default_spec(4, 8);
+        let a = spec.generate(100, 7);
+        let b = spec.generate(100, 7);
+        match (&a.storage, &b.storage) {
+            (crate::data::Storage::Dense(ma), crate::data::Storage::Dense(mb)) => {
+                assert_eq!(ma.data, mb.data)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let spec = GaussianMixture::default_spec(4, 8);
+        let a = spec.generate(10, 1);
+        let b = spec.generate(10, 2);
+        let (ma, mb) = match (&a.storage, &b.storage) {
+            (crate::data::Storage::Dense(x), crate::data::Storage::Dense(y)) => (x, y),
+            _ => panic!(),
+        };
+        assert_ne!(ma.data, mb.data);
+    }
+
+    #[test]
+    fn points_cluster_near_centers() {
+        let spec = GaussianMixture { k: 3, d: 16, center_spread: 20.0, noise: 0.5, weights: vec![] };
+        let data = spec.generate(300, 42);
+        let centers = spec.centers(42);
+        let cn = centers.row_sq_norms();
+        // every point should be within ~d·(3σ)² of *some* center
+        for i in 0..data.n() {
+            let (_, d2) = data.nearest(i, &centers, &cn);
+            assert!(d2 < 16.0 * 9.0 * 0.25 * 4.0, "point {i} too far: {d2}");
+        }
+    }
+
+    #[test]
+    fn weights_respected() {
+        let spec = GaussianMixture {
+            k: 2, d: 4, center_spread: 50.0, noise: 0.1,
+            weights: vec![0.9, 0.1],
+        };
+        let data = spec.generate(2000, 3);
+        let centers = spec.centers(3);
+        let cn = centers.row_sq_norms();
+        let mut counts = [0usize; 2];
+        for i in 0..data.n() {
+            counts[data.nearest(i, &centers, &cn).0 as usize] += 1;
+        }
+        assert!(counts[0] > 5 * counts[1], "counts={counts:?}");
+    }
+
+    #[test]
+    fn dataset_pair_shapes() {
+        let ds = GaussianMixture::default_spec(2, 3).dataset(50, 10, 0);
+        assert_eq!(ds.train.n(), 50);
+        assert_eq!(ds.val.n(), 10);
+        assert_eq!(ds.train.dim(), 3);
+        assert!(!ds.train.is_sparse());
+    }
+}

@@ -1,0 +1,270 @@
+//! Synthetic *infinite MNIST* simulator.
+//!
+//! The paper uses infMNIST (Loosli et al. 2007): a program that emits
+//! unlimited random deformations of the 28×28 MNIST digits. The real
+//! generator (and MNIST itself) is not available in this offline image,
+//! so we reproduce the property the algorithms actually exercise — a
+//! dense 784-dim dataset with ~10 modes and heavy redundancy (endless
+//! near-duplicate deformations of the same prototypes):
+//!
+//! 1. Ten smooth prototype glyphs are drawn once per seed as sums of
+//!    random Gaussian strokes on the 28×28 grid.
+//! 2. Each sample picks a prototype and applies a random small affine
+//!    transform (rotation, anisotropic scale, translation) via bilinear
+//!    resampling — the same family of deformations infMNIST applies —
+//!    plus light pixel noise.
+//!
+//! See DESIGN.md §Substitutions for the fidelity argument.
+
+use crate::data::{Data, Dataset};
+use crate::linalg::dense::DenseMatrix;
+use crate::util::rng::Pcg64;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+pub const N_CLASSES: usize = 10;
+
+/// Configuration for the simulator.
+#[derive(Clone, Debug)]
+pub struct InfMnist {
+    /// Maximum |rotation| in radians.
+    pub max_rot: f64,
+    /// Scale jitter: factor in [1−s, 1+s] per axis.
+    pub max_scale: f64,
+    /// Maximum |translation| in pixels per axis.
+    pub max_shift: f64,
+    /// Additive pixel noise σ.
+    pub noise: f64,
+}
+
+impl Default for InfMnist {
+    fn default() -> Self {
+        Self { max_rot: 0.18, max_scale: 0.12, max_shift: 2.5, noise: 0.02 }
+    }
+}
+
+/// The ten prototype glyphs for a seed (row = flattened 28×28 image).
+pub fn prototypes(seed: u64) -> DenseMatrix {
+    let mut rng = Pcg64::new(seed, 0xD161).derive("infmnist-protos");
+    let mut protos = DenseMatrix::zeros(N_CLASSES, DIM);
+    for c in 0..N_CLASSES {
+        let img = protos.row_mut(c);
+        // 4–7 Gaussian strokes per glyph, anchored inside the frame
+        let strokes = 4 + rng.below(4);
+        for _ in 0..strokes {
+            let cx = rng.range_f64(6.0, 22.0);
+            let cy = rng.range_f64(6.0, 22.0);
+            let sx = rng.range_f64(1.2, 3.5);
+            let sy = rng.range_f64(1.2, 3.5);
+            let amp = rng.range_f64(0.5, 1.0);
+            for y in 0..SIDE {
+                for x in 0..SIDE {
+                    let dx = (x as f64 - cx) / sx;
+                    let dy = (y as f64 - cy) / sy;
+                    img[y * SIDE + x] +=
+                        (amp * (-(dx * dx + dy * dy) / 2.0).exp()) as f32;
+                }
+            }
+        }
+        // normalise glyph to peak 1
+        let peak = img.iter().cloned().fold(0f32, f32::max).max(1e-6);
+        for p in img.iter_mut() {
+            *p = (*p / peak).min(1.0);
+        }
+    }
+    protos
+}
+
+#[inline]
+fn bilinear(img: &[f32], x: f64, y: f64) -> f32 {
+    if x < 0.0 || y < 0.0 || x > (SIDE - 1) as f64 || y > (SIDE - 1) as f64 {
+        return 0.0;
+    }
+    let x0 = x.floor() as usize;
+    let y0 = y.floor() as usize;
+    let x1 = (x0 + 1).min(SIDE - 1);
+    let y1 = (y0 + 1).min(SIDE - 1);
+    let fx = (x - x0 as f64) as f32;
+    let fy = (y - y0 as f64) as f32;
+    let v00 = img[y0 * SIDE + x0];
+    let v01 = img[y0 * SIDE + x1];
+    let v10 = img[y1 * SIDE + x0];
+    let v11 = img[y1 * SIDE + x1];
+    v00 * (1.0 - fx) * (1.0 - fy)
+        + v01 * fx * (1.0 - fy)
+        + v10 * (1.0 - fx) * fy
+        + v11 * fx * fy
+}
+
+impl InfMnist {
+    /// Render one deformed sample of `proto` into `out` (length 784).
+    pub fn render(&self, proto: &[f32], rng: &mut Pcg64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), DIM);
+        let theta = rng.range_f64(-self.max_rot, self.max_rot);
+        let sx = 1.0 + rng.range_f64(-self.max_scale, self.max_scale);
+        let sy = 1.0 + rng.range_f64(-self.max_scale, self.max_scale);
+        let tx = rng.range_f64(-self.max_shift, self.max_shift);
+        let ty = rng.range_f64(-self.max_shift, self.max_shift);
+        let (sin, cos) = theta.sin_cos();
+        let c = (SIDE - 1) as f64 / 2.0;
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                // inverse-map output pixel to prototype coordinates
+                let ox = x as f64 - c - tx;
+                let oy = y as f64 - c - ty;
+                let px = (cos * ox + sin * oy) / sx + c;
+                let py = (-sin * ox + cos * oy) / sy + c;
+                let mut v = bilinear(proto, px, py);
+                if self.noise > 0.0 {
+                    v += (rng.gauss() * self.noise) as f32;
+                }
+                out[y * SIDE + x] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+
+    /// Generate `n` samples as a dense dataset.
+    pub fn generate(&self, n: usize, seed: u64) -> Data {
+        self.generate_stream(n, seed, "infmnist-samples")
+    }
+
+    /// Generate from the glyph family of `seed` but an independent
+    /// deformation stream — train/validation splits share prototypes
+    /// (as the real infMNIST program does) while drawing disjoint
+    /// deformations.
+    pub fn generate_stream(&self, n: usize, seed: u64, stream: &str) -> Data {
+        let protos = prototypes(seed);
+        let mut rng = Pcg64::new(seed, 0xD161).derive(stream);
+        let mut m = DenseMatrix::zeros(n, DIM);
+        for i in 0..n {
+            let class = rng.below(N_CLASSES);
+            // split borrow: render into a temporary row
+            let proto = protos.row(class).to_vec();
+            self.render(&proto, &mut rng, m.row_mut(i));
+        }
+        Data::dense(m)
+    }
+
+    /// Train/validation pair mirroring the paper's 10:1 split.
+    pub fn dataset(&self, n_train: usize, n_val: usize, seed: u64) -> Dataset {
+        Dataset {
+            name: "infmnist-sim".into(),
+            train: self.generate_stream(n_train, seed, "infmnist-samples"),
+            // same prototypes, fresh deformations (paper: same corpus)
+            val: self.generate_stream(n_val, seed, "infmnist-val"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let g = InfMnist::default();
+        let a = g.generate(20, 5);
+        let b = g.generate(20, 5);
+        let c = g.generate(20, 6);
+        let (ma, mb, mc) = match (&a.storage, &b.storage, &c.storage) {
+            (
+                crate::data::Storage::Dense(x),
+                crate::data::Storage::Dense(y),
+                crate::data::Storage::Dense(z),
+            ) => (x, y, z),
+            _ => panic!(),
+        };
+        assert_eq!(ma.data, mb.data);
+        assert_ne!(ma.data, mc.data);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let g = InfMnist::default();
+        let d = g.generate(50, 1);
+        if let crate::data::Storage::Dense(m) = &d.storage {
+            assert!(m.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            // images must not be blank
+            let mass: f32 = m.data.iter().sum();
+            assert!(mass > 50.0, "mass={mass}");
+        }
+    }
+
+    #[test]
+    fn redundancy_same_class_closer_than_cross_class() {
+        // Deformations of one prototype should usually be nearer each
+        // other than to another prototype's deformations.
+        let g = InfMnist { noise: 0.0, ..Default::default() };
+        let protos = prototypes(9);
+        let mut rng = Pcg64::new(9, 0).derive("t");
+        let mut a1 = vec![0.0; DIM];
+        let mut a2 = vec![0.0; DIM];
+        let mut b1 = vec![0.0; DIM];
+        g.render(proto_row(&protos, 0), &mut rng, &mut a1);
+        g.render(proto_row(&protos, 0), &mut rng, &mut a2);
+        g.render(proto_row(&protos, 7), &mut rng, &mut b1);
+        let within = crate::linalg::dense::sq_dist(&a1, &a2);
+        let cross = crate::linalg::dense::sq_dist(&a1, &b1);
+        assert!(within < cross, "within={within} cross={cross}");
+    }
+
+    fn proto_row(m: &DenseMatrix, i: usize) -> &[f32] {
+        m.row(i)
+    }
+
+    #[test]
+    fn bilinear_identity_at_integer_coords() {
+        let protos = prototypes(3);
+        let img = protos.row(0);
+        for y in (0..SIDE).step_by(5) {
+            for x in (0..SIDE).step_by(5) {
+                let v = bilinear(img, x as f64, y as f64);
+                assert!((v - img[y * SIDE + x]).abs() < 1e-6);
+            }
+        }
+        assert_eq!(bilinear(img, -1.0, 5.0), 0.0);
+        assert_eq!(bilinear(img, 5.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        let ds = InfMnist::default().dataset(30, 10, 0);
+        assert_eq!(ds.train.dim(), DIM);
+        assert_eq!(ds.val.n(), 10);
+    }
+
+    #[test]
+    fn val_shares_prototypes_but_not_samples() {
+        let g = InfMnist::default();
+        let ds = g.dataset(40, 40, 3);
+        // distinct streams
+        let (mt, mv) = match (&ds.train.storage, &ds.val.storage) {
+            (crate::data::Storage::Dense(a), crate::data::Storage::Dense(b)) => (a, b),
+            _ => panic!(),
+        };
+        assert_ne!(mt.data, mv.data);
+        // same glyph family: mean val point is close to some train point
+        // relative to a foreign-seed dataset
+        let foreign = g.generate(40, 999);
+        let near = |x: &Data, y: &Data| -> f64 {
+            let mut total = 0f64;
+            let mut row = vec![0f32; DIM];
+            for i in 0..y.n() {
+                y.write_row_dense(i, &mut row);
+                let mut best = f32::INFINITY;
+                for j in 0..x.n() {
+                    let d = x.sq_dist_to(j, &row, crate::linalg::dense::sq_norm(&row));
+                    best = best.min(d);
+                }
+                total += best as f64;
+            }
+            total / y.n() as f64
+        };
+        let same_family = near(&ds.train, &ds.val);
+        let cross_family = near(&ds.train, &foreign);
+        assert!(
+            same_family < cross_family,
+            "val should be nearer its own glyph family: {same_family} vs {cross_family}"
+        );
+    }
+}

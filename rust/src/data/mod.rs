@@ -1,0 +1,242 @@
+//! Datasets: a storage-agnostic [`Data`] handle (dense or CSR) with
+//! precomputed row norms, plus the synthetic workload generators that
+//! stand in for the paper's infMNIST and RCV1 corpora (see DESIGN.md
+//! §Substitutions) and a Gaussian-mixture generator for tests/examples.
+
+pub mod gaussian;
+pub mod infmnist;
+pub mod rcv1;
+pub mod shuffle;
+
+use crate::linalg::dense::{self, DenseMatrix};
+use crate::linalg::sparse::{self, CsrMatrix};
+
+/// Physical storage of a dataset.
+#[derive(Clone, Debug)]
+pub enum Storage {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+/// A dataset: storage + precomputed squared row norms (`‖x_i‖²`), the
+/// quantity every norms-trick distance needs.
+#[derive(Clone, Debug)]
+pub struct Data {
+    pub storage: Storage,
+    pub norms: Vec<f32>,
+}
+
+impl Data {
+    pub fn dense(m: DenseMatrix) -> Self {
+        let norms = m.row_sq_norms();
+        Self { storage: Storage::Dense(m), norms }
+    }
+
+    pub fn sparse(m: CsrMatrix) -> Self {
+        let norms = m.row_sq_norms();
+        Self { storage: Storage::Sparse(m), norms }
+    }
+
+    pub fn n(&self) -> usize {
+        match &self.storage {
+            Storage::Dense(m) => m.rows,
+            Storage::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match &self.storage {
+            Storage::Dense(m) => m.cols,
+            Storage::Sparse(m) => m.cols,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.storage, Storage::Sparse(_))
+    }
+
+    /// Squared distance from point `i` to a dense centroid row.
+    #[inline]
+    pub fn sq_dist_to(&self, i: usize, c: &[f32], cn: f32) -> f32 {
+        match &self.storage {
+            Storage::Dense(m) => {
+                dense::sq_dist_norms(m.row(i), self.norms[i], c, cn)
+            }
+            Storage::Sparse(m) => {
+                let (idx, vals) = m.row(i);
+                sparse::sq_dist_sparse(idx, vals, self.norms[i], c, cn)
+            }
+        }
+    }
+
+    /// Nearest centroid of point `i`: `(argmin_j, min ‖x_i − c_j‖²)`.
+    #[inline]
+    pub fn nearest(&self, i: usize, c: &DenseMatrix, cnorms: &[f32]) -> (u32, f32) {
+        match &self.storage {
+            Storage::Dense(m) => {
+                dense::nearest(m.row(i), self.norms[i], c, cnorms)
+            }
+            Storage::Sparse(m) => {
+                let (idx, vals) = m.row(i);
+                sparse::nearest_sparse(idx, vals, self.norms[i], c, cnorms)
+            }
+        }
+    }
+
+    /// `acc += x_i` (f64 accumulator row).
+    #[inline]
+    pub fn add_row_to(&self, i: usize, acc: &mut [f64]) {
+        match &self.storage {
+            Storage::Dense(m) => dense::add_into(acc, m.row(i)),
+            Storage::Sparse(m) => {
+                let (idx, vals) = m.row(i);
+                sparse::scatter_add(acc, idx, vals);
+            }
+        }
+    }
+
+    /// `acc -= x_i`.
+    #[inline]
+    pub fn sub_row_from(&self, i: usize, acc: &mut [f64]) {
+        match &self.storage {
+            Storage::Dense(m) => dense::sub_from(acc, m.row(i)),
+            Storage::Sparse(m) => {
+                let (idx, vals) = m.row(i);
+                sparse::scatter_sub(acc, idx, vals);
+            }
+        }
+    }
+
+    /// Copy row `i` densely into `out` (zero-filled first). Used by the
+    /// XLA engine to pack batch tiles and by initialisation.
+    pub fn write_row_dense(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim());
+        match &self.storage {
+            Storage::Dense(m) => out.copy_from_slice(m.row(i)),
+            Storage::Sparse(m) => {
+                out.fill(0.0);
+                let (idx, vals) = m.row(i);
+                for t in 0..idx.len() {
+                    out[idx[t] as usize] = vals[t];
+                }
+            }
+        }
+    }
+
+    /// Materialise a row permutation (norms re-used, not recomputed).
+    pub fn permute(&self, perm: &[usize]) -> Data {
+        let norms = perm.iter().map(|&p| self.norms[p]).collect();
+        let storage = match &self.storage {
+            Storage::Dense(m) => Storage::Dense(m.permute_rows(perm)),
+            Storage::Sparse(m) => Storage::Sparse(m.permute_rows(perm)),
+        };
+        Data { storage, norms }
+    }
+
+    /// Rows `[lo, hi)` as a new dataset.
+    pub fn slice(&self, lo: usize, hi: usize) -> Data {
+        let storage = match &self.storage {
+            Storage::Dense(m) => Storage::Dense(m.slice_rows(lo, hi)),
+            Storage::Sparse(m) => Storage::Sparse(m.slice_rows(lo, hi)),
+        };
+        Data { storage, norms: self.norms[lo..hi].to_vec() }
+    }
+}
+
+/// A train/validation pair with provenance, as the experiments consume.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Data,
+    pub val: Data,
+}
+
+impl Dataset {
+    pub fn summary(&self) -> String {
+        let kind = if self.train.is_sparse() { "sparse" } else { "dense" };
+        format!(
+            "{} [{}]: train n={} d={}, val n={}",
+            self.name,
+            kind,
+            self.train.n(),
+            self.train.dim(),
+            self.val.n()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dense() -> Data {
+        Data::dense(DenseMatrix::from_vec(
+            3,
+            2,
+            vec![1.0, 0.0, 0.0, 2.0, 3.0, 4.0],
+        ))
+    }
+
+    fn tiny_sparse() -> Data {
+        let mut m = CsrMatrix::empty(4);
+        m.push_row(&[(0, 1.0), (3, 2.0)]);
+        m.push_row(&[(1, -1.0)]);
+        Data::sparse(m)
+    }
+
+    #[test]
+    fn norms_precomputed() {
+        assert_eq!(tiny_dense().norms, vec![1.0, 4.0, 25.0]);
+        assert_eq!(tiny_sparse().norms, vec![5.0, 1.0]);
+    }
+
+    #[test]
+    fn nearest_agrees_between_storages() {
+        let d = tiny_sparse();
+        let c = DenseMatrix::from_vec(2, 4, vec![1.0, 0.0, 0.0, 2.0, 0.0, -1.0, 0.0, 0.0]);
+        let cn = c.row_sq_norms();
+        let (j0, d0) = d.nearest(0, &c, &cn);
+        assert_eq!(j0, 0);
+        assert!(d0.abs() < 1e-6);
+        let (j1, d1) = d.nearest(1, &c, &cn);
+        assert_eq!(j1, 1);
+        assert!(d1.abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_sub_row_dense_sparse() {
+        for data in [tiny_dense(), tiny_sparse()] {
+            let d = data.dim();
+            let mut acc = vec![0.0f64; d];
+            data.add_row_to(0, &mut acc);
+            data.add_row_to(1, &mut acc);
+            data.sub_row_from(0, &mut acc);
+            let mut expect = vec![0.0f32; d];
+            data.write_row_dense(1, &mut expect);
+            for t in 0..d {
+                assert!((acc[t] - expect[t] as f64).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn permute_slice_consistency() {
+        let d = tiny_dense();
+        let p = d.permute(&[2, 1, 0]);
+        assert_eq!(p.norms, vec![25.0, 4.0, 1.0]);
+        let s = p.slice(1, 3);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.norms, vec![4.0, 1.0]);
+        let mut row = vec![0.0; 2];
+        s.write_row_dense(1, &mut row);
+        assert_eq!(row, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn write_row_dense_zero_fills() {
+        let d = tiny_sparse();
+        let mut out = vec![9.0f32; 4];
+        d.write_row_dense(1, &mut out);
+        assert_eq!(out, vec![0.0, -1.0, 0.0, 0.0]);
+    }
+}

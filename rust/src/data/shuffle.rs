@@ -1,0 +1,73 @@
+//! Seeded shuffling and splitting, matching the paper's protocol:
+//! "For 20 random seeds, the training dataset is shuffled and the first
+//! k datapoints are taken as initialising centroids" (§4.3).
+
+use crate::data::Data;
+use crate::util::rng::Pcg64;
+
+/// A seeded permutation of `0..n`.
+pub fn permutation(n: usize, seed: u64) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(seed, 0x5811F).derive("shuffle");
+    rng.shuffle(&mut perm);
+    perm
+}
+
+/// Materialise the paper's per-seed shuffle of the training set.
+pub fn shuffled(data: &Data, seed: u64) -> Data {
+    data.permute(&permutation(data.n(), seed))
+}
+
+/// Split a dataset into (train, val) by taking the last `n_val` rows as
+/// validation (used when a generator produces a single pool).
+pub fn split(data: &Data, n_val: usize) -> (Data, Data) {
+    assert!(n_val < data.n());
+    let cut = data.n() - n_val;
+    (data.slice(0, cut), data.slice(cut, data.n()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+
+    fn toy(n: usize) -> Data {
+        let vals: Vec<f32> = (0..n * 2).map(|x| x as f32).collect();
+        Data::dense(DenseMatrix::from_vec(n, 2, vals))
+    }
+
+    #[test]
+    fn permutation_is_bijective_and_seeded() {
+        let p1 = permutation(100, 1);
+        let p2 = permutation(100, 1);
+        let p3 = permutation(100, 2);
+        assert_eq!(p1, p2);
+        assert_ne!(p1, p3);
+        let mut sorted = p1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffled_preserves_multiset() {
+        let d = toy(50);
+        let s = shuffled(&d, 9);
+        let mut a = d.norms.clone();
+        let mut b = s.norms.clone();
+        a.sort_by(f32::total_cmp);
+        b.sort_by(f32::total_cmp);
+        assert_eq!(a, b);
+        assert_ne!(d.norms, s.norms); // actually shuffled
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = toy(30);
+        let (tr, va) = split(&d, 5);
+        assert_eq!(tr.n(), 25);
+        assert_eq!(va.n(), 5);
+        let mut row = vec![0.0; 2];
+        va.write_row_dense(0, &mut row);
+        assert_eq!(row, vec![50.0, 51.0]);
+    }
+}

@@ -1,0 +1,197 @@
+//! Ablations beyond the paper's evaluation — its two §5 future-work
+//! directions, made concrete:
+//!
+//! * **Growth policy** (A-G): the double-or-nothing law (Alg. 6) versus
+//!   gentler geometric (×1.5), additive (+b0), and a vote-ignoring
+//!   always-double schedule, all on tb-∞. Tests the paper's √2 argument
+//!   for doubling.
+//! * **Initialisation** (A-I): the paper's shuffle-first-k versus
+//!   uniform sampling and a *mini-batch-compatible* k-means++ (D²
+//!   seeding over the initial batch only — no full pass, addressing the
+//!   paper's observation that classic k-means++ is impractical for mb).
+
+use crate::config::{Algo, InitScheme, Rho, RunConfig};
+use crate::coordinator::progress::{results_dir, Table};
+use crate::data::Dataset;
+use crate::experiments::common::{self, ExpOpts};
+use crate::kmeans::controller::GrowthPolicy;
+use crate::kmeans::{init, Clusterer, Ctx};
+use crate::util::stats;
+
+/// A-G: final training MSE + rounds-to-convergence per growth policy.
+pub struct GrowthRow {
+    pub policy: String,
+    pub mean_final: f64,
+    pub mean_rounds: f64,
+    pub mean_dist_calcs: f64,
+}
+
+pub fn growth_policy_study(ds: &Dataset, opts: &ExpOpts) -> Vec<GrowthRow> {
+    let b0 = common::default_b0(opts.scale).min(ds.train.n() / 8).max(16);
+    let k = 50.min(ds.train.n() / 4).max(2);
+    let policies: [(&str, GrowthPolicy); 4] = [
+        ("double (paper)", GrowthPolicy::Double),
+        ("geometric x1.5", GrowthPolicy::Geometric15),
+        ("additive +b0", GrowthPolicy::Additive(b0)),
+        ("always-double", GrowthPolicy::AlwaysDouble),
+    ];
+    let mut rows = Vec::new();
+    for (name, policy) in policies {
+        let mut finals = Vec::new();
+        let mut rounds = Vec::new();
+        let mut calcs = Vec::new();
+        for seed in 0..opts.seeds {
+            let data = crate::data::shuffle::shuffled(&ds.train, seed);
+            let mut alg = crate::kmeans::turbobatch::TurboBatch::new(
+                init::first_k(&data, k),
+                data.n(),
+                b0,
+                Rho::Infinite,
+                false,
+            )
+            .with_policy(policy);
+            let mut ctx = Ctx {
+                data: &data,
+                engine: &crate::kmeans::assign::NativeEngine,
+                pool: crate::coordinator::Pool::new(opts.threads),
+                rng: crate::util::rng::Pcg64::new(seed, 0xAB1A),
+            };
+            let mut total_calcs = 0u64;
+            let mut r = 0usize;
+            let t0 = std::time::Instant::now();
+            loop {
+                let info = alg.round(&mut ctx);
+                total_calcs += info.dist_calcs;
+                r += 1;
+                if alg.converged()
+                    || r >= 400
+                    || t0.elapsed().as_secs_f64() > opts.seconds
+                {
+                    break;
+                }
+            }
+            finals.push(crate::kmeans::state::exact_mse(
+                &data,
+                alg.centroids(),
+            ));
+            rounds.push(r as f64);
+            calcs.push(total_calcs as f64);
+        }
+        let row = GrowthRow {
+            policy: name.to_string(),
+            mean_final: stats::mean(&finals),
+            mean_rounds: stats::mean(&rounds),
+            mean_dist_calcs: stats::mean(&calcs),
+        };
+        println!(
+            "   {:<16} final MSE {:.6e}  rounds {:>6.1}  dist calcs {:>12.0}",
+            row.policy, row.mean_final, row.mean_rounds, row.mean_dist_calcs
+        );
+        rows.push(row);
+    }
+    rows
+}
+
+/// A-I: final validation MSE per initialisation scheme (tb-∞ and mb).
+pub struct InitRow {
+    pub algo: String,
+    pub scheme: String,
+    pub mean_final: f64,
+    pub std_final: f64,
+}
+
+pub fn init_study(ds: &Dataset, opts: &ExpOpts) -> Vec<InitRow> {
+    let k = 50.min(ds.train.n() / 4).max(2);
+    let mut rows = Vec::new();
+    for algo in [Algo::TbRho, Algo::Mb] {
+        for scheme in
+            [InitScheme::FirstK, InitScheme::Uniform, InitScheme::KmeansPPBatch]
+        {
+            let mut finals = Vec::new();
+            for seed in 0..opts.seeds {
+                let cfg = RunConfig {
+                    algo,
+                    rho: Rho::Infinite,
+                    k,
+                    b0: common::default_b0(opts.scale),
+                    seed,
+                    threads: opts.threads,
+                    max_seconds: opts.seconds,
+                    eval_every_secs: opts.seconds,
+                    init: scheme,
+                    ..Default::default()
+                };
+                let out =
+                    crate::kmeans::run(&ds.train, Some(&ds.val), &cfg).unwrap();
+                finals.push(out.final_mse);
+            }
+            let row = InitRow {
+                algo: algo.name().to_string(),
+                scheme: scheme.name().to_string(),
+                mean_final: stats::mean(&finals),
+                std_final: stats::std(&finals),
+            };
+            println!(
+                "   {:<6} init={:<10} final MSE {:.6e} (±{:.1e})",
+                row.algo, row.scheme, row.mean_final, row.std_final
+            );
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let ds = common::infmnist(opts.scale);
+    println!("== Ablation A-G: growth policy (tb-∞, {}) ==", ds.summary());
+    let growth = growth_policy_study(&ds, opts);
+    println!("== Ablation A-I: initialisation ({}) ==", ds.summary());
+    let inits = init_study(&ds, opts);
+
+    let mut t = Table::new(&["study", "variant", "metric", "value"]);
+    for r in &growth {
+        t.push(vec!["growth".into(), r.policy.clone(), "final_mse".into(),
+                    format!("{:.8e}", r.mean_final)]);
+        t.push(vec!["growth".into(), r.policy.clone(), "rounds".into(),
+                    format!("{:.1}", r.mean_rounds)]);
+        t.push(vec!["growth".into(), r.policy.clone(), "dist_calcs".into(),
+                    format!("{:.0}", r.mean_dist_calcs)]);
+    }
+    for r in &inits {
+        t.push(vec!["init".into(), format!("{}/{}", r.algo, r.scheme),
+                    "final_mse".into(), format!("{:.8e}", r.mean_final)]);
+    }
+    let path = results_dir().join("ablations.csv");
+    t.write_csv(&path)?;
+    println!("   wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Engine;
+
+    #[test]
+    fn both_studies_run_tiny() {
+        let dir = std::env::temp_dir()
+            .join(format!("nmbkm-abl-{}", std::process::id()));
+        std::env::set_var("NMBKM_RESULTS_DIR", &dir);
+        let ds = common::gaussian_small();
+        let opts = ExpOpts {
+            scale: common::Scale::Quick,
+            seeds: 2,
+            threads: 2,
+            engine: Engine::Native,
+            seconds: 0.3,
+        };
+        let g = growth_policy_study(&ds, &opts);
+        assert_eq!(g.len(), 4);
+        assert!(g.iter().all(|r| r.mean_final.is_finite()));
+        let i = init_study(&ds, &opts);
+        assert_eq!(i.len(), 6);
+        assert!(i.iter().all(|r| r.mean_final.is_finite()));
+        std::env::remove_var("NMBKM_RESULTS_DIR");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

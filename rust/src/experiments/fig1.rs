@@ -1,0 +1,89 @@
+//! Figure 1: validation MSE (relative to best V0) versus work time for
+//! {lloyd, mb, mb-f, gb-∞, tb-∞} on infMNIST (dense) and RCV1 (sparse).
+//!
+//! The paper's claims this reproduces:
+//!   1. `mb-f` beats `mb` after roughly one pass through the data;
+//!   2. `gb-∞` is already favourable versus `mb-f`;
+//!   3. `tb-∞` dominates everything and reaches lloyd-grade minima
+//!      orders of magnitude sooner than `lloyd`.
+
+use crate::config::{Algo, Rho, RunConfig};
+use crate::data::Dataset;
+use crate::experiments::common::{self, Curve, ExpOpts};
+use crate::kmeans::assign::AssignEngine;
+
+pub fn algo_set() -> Vec<RunConfig> {
+    let base = RunConfig::default();
+    vec![
+        RunConfig { algo: Algo::Lloyd, ..base.clone() },
+        RunConfig { algo: Algo::Mb, ..base.clone() },
+        RunConfig { algo: Algo::MbF, ..base.clone() },
+        RunConfig { algo: Algo::GbRho, rho: Rho::Infinite, ..base.clone() },
+        RunConfig { algo: Algo::TbRho, rho: Rho::Infinite, ..base },
+    ]
+}
+
+/// Run the Figure-1 comparison on one dataset; returns curves in the
+/// same order as [`algo_set`].
+pub fn run_dataset(
+    ds: &Dataset,
+    opts: &ExpOpts,
+    engine: &dyn AssignEngine,
+) -> anyhow::Result<Vec<Curve>> {
+    let b0 = common::default_b0(opts.scale);
+    let grid = common::time_grid(opts.seconds / 100.0, opts.seconds, 24);
+    let mut curves = Vec::new();
+    for mut cfg in algo_set() {
+        cfg.k = 50.min(ds.train.n() / 4).max(2);
+        cfg.b0 = b0;
+        cfg.eval_every_secs = opts.seconds / 40.0;
+        let (curve, _) =
+            common::multi_seed_curve(ds, &cfg, opts, engine, &grid)?;
+        println!(
+            "   [{}] {}: mean final MSE {:.6e}",
+            ds.name, curve.label, curve.mean_final
+        );
+        curves.push(curve);
+    }
+    Ok(curves)
+}
+
+/// Full Figure-1 experiment: both datasets, CSV per dataset.
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let engine: Box<dyn AssignEngine> = match opts.engine {
+        crate::config::Engine::Native => {
+            Box::new(crate::kmeans::assign::NativeEngine)
+        }
+        crate::config::Engine::Xla => crate::runtime::make_engine("artifacts")?,
+    };
+    for (ds, tag) in [
+        (common::infmnist(opts.scale), "infmnist"),
+        (common::rcv1(opts.scale), "rcv1"),
+    ] {
+        println!("== Figure 1 on {} ==", ds.summary());
+        let curves = run_dataset(&ds, opts, engine.as_ref())?;
+        common::print_final_summary(tag, &curves);
+        let path = common::write_curves_csv(&format!("fig1_{tag}"), tag, &curves)?;
+        println!("   wrote {}", path.display());
+        check_shape(tag, &curves);
+    }
+    Ok(())
+}
+
+/// The qualitative assertions the paper's Figure 1 makes; printed as a
+/// PASS/WARN line so bench logs record whether the reproduction holds.
+pub fn check_shape(tag: &str, curves: &[Curve]) {
+    let find = |label: &str| curves.iter().find(|c| c.label == label);
+    let (Some(mb), Some(mbf), Some(tb)) = (find("mb"), find("mb-f"), find("tb-inf"))
+    else {
+        println!("   [shape] missing curves, skipping check");
+        return;
+    };
+    let ok1 = mbf.mean_final <= mb.mean_final * 1.05;
+    let ok2 = tb.mean_final <= mb.mean_final * 1.02;
+    println!(
+        "   [shape {tag}] mb-f ≤ mb at end: {}   tb-∞ ≤ mb at end: {}",
+        if ok1 { "PASS" } else { "WARN" },
+        if ok2 { "PASS" } else { "WARN" },
+    );
+}

@@ -1,0 +1,11 @@
+//! Experiment harnesses: one module per paper table/figure
+//! (DESIGN.md experiment index). Both the CLI (`nmbkm experiment …`)
+//! and the `cargo bench` targets drive these, so the numbers in
+//! EXPERIMENTS.md regenerate identically from either entry point.
+
+pub mod ablations;
+pub mod common;
+pub mod fig1;
+pub mod rho_sweep;
+pub mod table1;
+pub mod table2;

@@ -1,0 +1,91 @@
+//! Figures 2 & 3: the effect of ρ on gb-ρ and tb-ρ
+//! (ρ ∈ {1, 10, 100, 1000, ∞}, with mb for reference).
+//!
+//! Paper findings this reproduces: for `gb-ρ` an intermediate ρ can be
+//! best early while large ρ wins late; for `tb-ρ` large ρ is clearly
+//! optimal (fine-tuning is cheap under bounds, so premature-finetuning
+//! risk vanishes — §4.3.1). Figure 2 is infMNIST, Figure 3 (supp.)
+//! is RCV1.
+
+use crate::config::{Algo, Rho, RunConfig};
+use crate::data::Dataset;
+use crate::experiments::common::{self, Curve, ExpOpts};
+use crate::kmeans::assign::AssignEngine;
+
+pub const RHOS: [Rho; 5] = [
+    Rho::Finite(1.0),
+    Rho::Finite(10.0),
+    Rho::Finite(100.0),
+    Rho::Finite(1000.0),
+    Rho::Infinite,
+];
+
+pub fn algo_set() -> Vec<RunConfig> {
+    let base = RunConfig::default();
+    let mut v = vec![RunConfig { algo: Algo::Mb, ..base.clone() }];
+    for rho in RHOS {
+        v.push(RunConfig { algo: Algo::GbRho, rho, ..base.clone() });
+    }
+    for rho in RHOS {
+        v.push(RunConfig { algo: Algo::TbRho, rho, ..base.clone() });
+    }
+    v
+}
+
+pub fn run_dataset(
+    ds: &Dataset,
+    opts: &ExpOpts,
+    engine: &dyn AssignEngine,
+) -> anyhow::Result<Vec<Curve>> {
+    let grid = common::time_grid(opts.seconds / 100.0, opts.seconds, 24);
+    let mut curves = Vec::new();
+    for mut cfg in algo_set() {
+        cfg.k = 50.min(ds.train.n() / 4).max(2);
+        cfg.b0 = common::default_b0(opts.scale);
+        cfg.eval_every_secs = opts.seconds / 40.0;
+        let (curve, _) =
+            common::multi_seed_curve(ds, &cfg, opts, engine, &grid)?;
+        println!(
+            "   [{}] {}: mean final MSE {:.6e}",
+            ds.name, curve.label, curve.mean_final
+        );
+        curves.push(curve);
+    }
+    Ok(curves)
+}
+
+/// `figure` is 2 (infmnist) or 3 (rcv1).
+pub fn run(figure: u8, opts: &ExpOpts) -> anyhow::Result<()> {
+    let engine: Box<dyn AssignEngine> = match opts.engine {
+        crate::config::Engine::Native => {
+            Box::new(crate::kmeans::assign::NativeEngine)
+        }
+        crate::config::Engine::Xla => crate::runtime::make_engine("artifacts")?,
+    };
+    let (ds, tag) = match figure {
+        2 => (common::infmnist(opts.scale), "infmnist"),
+        3 => (common::rcv1(opts.scale), "rcv1"),
+        other => anyhow::bail!("rho sweep figure must be 2 or 3, got {other}"),
+    };
+    println!("== Figure {figure}: ρ sweep on {} ==", ds.summary());
+    let curves = run_dataset(&ds, opts, engine.as_ref())?;
+    common::print_final_summary(tag, &curves);
+    let path =
+        common::write_curves_csv(&format!("fig{figure}_rho_{tag}"), tag, &curves)?;
+    println!("   wrote {}", path.display());
+    check_shape(&curves);
+    Ok(())
+}
+
+/// Paper §4.3.1: for tb-ρ, very large ρ (1000/∞) should be at least as
+/// good as small ρ (=1) at the end of the budget.
+pub fn check_shape(curves: &[Curve]) {
+    let find = |label: &str| curves.iter().find(|c| c.label == label);
+    if let (Some(tb1), Some(tbinf)) = (find("tb-1"), find("tb-inf")) {
+        let ok = tbinf.mean_final <= tb1.mean_final * 1.05;
+        println!(
+            "   [shape] tb-∞ ≤ tb-1 at end: {}",
+            if ok { "PASS" } else { "WARN" }
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Table 1: mb implementation throughput — time to process N datapoints.
+//!
+//! The paper compares its own mb implementation against scikit-learn and
+//! sofia-ml; neither exists in this offline image, so the ablation that
+//! drives the paper's discussion (Supp. A.1) is run instead: the
+//! Algorithm-1 per-sample centroid update (the WWW'10 formulation,
+//! structurally what sklearn/sofia do) versus the Algorithm-8 S/v
+//! reformulation ("our"), on dense infMNIST-sim and sparse RCV1-sim.
+//! The paper's point — formulation dominates runtime, most dramatically
+//! for sparse data where centroid scaling is the expensive op — is
+//! exactly what this table measures. The XLA-engine row additionally
+//! reports the Pallas/PJRT dense path.
+
+#[cfg(test)]
+use crate::config::{Algo, Engine, RunConfig};
+use crate::coordinator::progress::{results_dir, Table};
+use crate::data::Dataset;
+use crate::experiments::common::{self, ExpOpts};
+use crate::kmeans::minibatch::{Formulation, MiniBatch};
+use crate::kmeans::{init, Clusterer, Ctx};
+use crate::util::timer;
+
+/// Time one epoch (N points) of mb with a given formulation/engine.
+/// Returns seconds.
+pub fn time_epoch(
+    ds: &Dataset,
+    formulation: Formulation,
+    engine: &dyn crate::kmeans::assign::AssignEngine,
+    threads: usize,
+    b: usize,
+) -> f64 {
+    let data = crate::data::shuffle::shuffled(&ds.train, 0);
+    let k = 50.min(data.n() / 4).max(2);
+    let mut alg = MiniBatch::new(init::first_k(&data, k), data.n(), b, formulation);
+    let mut ctx = Ctx {
+        data: &data,
+        engine,
+        pool: crate::coordinator::Pool::new(threads),
+        rng: crate::util::rng::Pcg64::new(0, 0),
+    };
+    let rounds = data.n().div_ceil(b);
+    let (_, secs) = timer::time_it(|| {
+        for _ in 0..rounds {
+            alg.round(&mut ctx);
+        }
+    });
+    secs
+}
+
+pub struct Row {
+    pub dataset: String,
+    pub implementation: String,
+    pub n: usize,
+    pub secs: f64,
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<Vec<Row>> {
+    let b = common::default_b0(opts.scale) * 2;
+    let native = crate::kmeans::assign::NativeEngine;
+    let xla: Option<Box<dyn crate::kmeans::assign::AssignEngine>> =
+        crate::runtime::make_engine("artifacts").ok();
+    let mut rows = Vec::new();
+    for ds in [common::infmnist(opts.scale), common::rcv1(opts.scale)] {
+        println!("== Table 1 on {} ==", ds.summary());
+        let mut push = |implementation: &str, secs: f64| {
+            println!("   {:<26} {:>8.3}s / {} points", implementation, secs, ds.train.n());
+            rows.push(Row {
+                dataset: ds.name.clone(),
+                implementation: implementation.to_string(),
+                n: ds.train.n(),
+                secs,
+            });
+        };
+        push(
+            "alg8 S/v (our)",
+            time_epoch(&ds, Formulation::Alg8, &native, opts.threads, b),
+        );
+        push(
+            "alg1 per-sample (baseline)",
+            time_epoch(&ds, Formulation::Alg1, &native, opts.threads, b),
+        );
+        if let Some(x) = &xla {
+            if !ds.train.is_sparse() {
+                push(
+                    "alg8 + xla engine",
+                    time_epoch(&ds, Formulation::Alg8, x.as_ref(), opts.threads, b),
+                );
+            }
+        }
+    }
+    // CSV
+    let mut t = Table::new(&["dataset", "implementation", "n", "secs"]);
+    for r in &rows {
+        t.push(vec![
+            r.dataset.clone(),
+            r.implementation.clone(),
+            r.n.to_string(),
+            format!("{:.4}", r.secs),
+        ]);
+    }
+    let path = results_dir().join("table1_throughput.csv");
+    t.write_csv(&path)?;
+    println!("   wrote {}", path.display());
+    check_shape(&rows);
+    Ok(rows)
+}
+
+/// Paper shape: Alg-8 ≤ Alg-1 everywhere, with the sparse gap being the
+/// decisive one (sklearn's 63.6s vs our 15.2s was 4×; the mechanism is
+/// the per-sample dense-centroid scaling Alg-1 performs).
+pub fn check_shape(rows: &[Row]) {
+    for dsname in ["infmnist-sim", "rcv1-sim"] {
+        let get = |imp: &str| {
+            rows.iter()
+                .find(|r| r.dataset == dsname && r.implementation.starts_with(imp))
+                .map(|r| r.secs)
+        };
+        if let (Some(our), Some(base)) = (get("alg8 S/v"), get("alg1")) {
+            let ok = our <= base * 1.05;
+            println!(
+                "   [shape {dsname}] alg8 ≤ alg1: {} ({our:.3}s vs {base:.3}s, {:.2}x)",
+                if ok { "PASS" } else { "WARN" },
+                base / our
+            );
+        }
+    }
+}
+
+/// Run the minimal unit-sized version (tests).
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Engine;
+
+    #[test]
+    fn epoch_timing_positive_and_formulations_run() {
+        let ds = common::gaussian_small();
+        let native = crate::kmeans::assign::NativeEngine;
+        let s8 = time_epoch(&ds, Formulation::Alg8, &native, 2, 512);
+        let s1 = time_epoch(&ds, Formulation::Alg1, &native, 2, 512);
+        assert!(s8 > 0.0 && s1 > 0.0);
+    }
+
+    #[test]
+    fn unused_imports_quiet() {
+        // keep the RunConfig/Algo/Engine imports meaningful
+        let _ = RunConfig { algo: Algo::Mb, engine: Engine::Native, ..Default::default() };
+    }
+}

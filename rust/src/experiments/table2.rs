@@ -1,0 +1,157 @@
+//! Table 2: final cluster quality — lloyd vs tb-∞ across initial batch
+//! sizes b0 ∈ {100, 1000, 5000}.
+//!
+//! Paper finding: on (dense) infMNIST the two reach equally good final
+//! validation MSE for every b0; on (sparse) RCV1 tb-∞ is worse at small
+//! b0 and approaches lloyd as b0 grows. Values are mean final
+//! validation MSE over seeds, relative to the best MSE over all runs —
+//! the same normalisation as the figures.
+
+use crate::config::{Algo, Rho, RunConfig};
+use crate::coordinator::progress::{results_dir, Table};
+use crate::data::Dataset;
+use crate::experiments::common::{self, ExpOpts, Scale};
+use crate::kmeans::assign::AssignEngine;
+use crate::util::stats;
+
+pub fn b0_grid(scale: Scale) -> Vec<usize> {
+    match scale {
+        // paper values
+        Scale::Full => vec![100, 1000, 5000],
+        // same ratios at quick dataset scale
+        Scale::Quick => vec![50, 200, 1000],
+    }
+}
+
+pub struct Cell {
+    pub dataset: String,
+    pub algo: String,
+    pub b0: usize,
+    pub mean_final: f64,
+    pub std_final: f64,
+}
+
+fn run_cell(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    opts: &ExpOpts,
+    engine: &dyn AssignEngine,
+) -> anyhow::Result<(f64, f64)> {
+    let mut finals = Vec::new();
+    for seed in 0..opts.seeds {
+        let cfg = RunConfig {
+            seed,
+            threads: opts.threads,
+            max_seconds: opts.seconds,
+            engine: opts.engine,
+            ..cfg.clone()
+        };
+        let shuffled = crate::data::shuffle::shuffled(&ds.train, seed);
+        let out = crate::kmeans::run_prepared(&shuffled, Some(&ds.val), &cfg, engine)?;
+        finals.push(out.final_mse);
+    }
+    Ok((stats::mean(&finals), stats::std(&finals)))
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<Vec<Cell>> {
+    let engine: Box<dyn AssignEngine> = match opts.engine {
+        crate::config::Engine::Native => {
+            Box::new(crate::kmeans::assign::NativeEngine)
+        }
+        crate::config::Engine::Xla => crate::runtime::make_engine("artifacts")?,
+    };
+    let mut cells = Vec::new();
+    for ds in [common::infmnist(opts.scale), common::rcv1(opts.scale)] {
+        println!("== Table 2 on {} ==", ds.summary());
+        let k = 50.min(ds.train.n() / 4).max(2);
+        for b0 in b0_grid(opts.scale) {
+            for (algo, rho) in
+                [(Algo::Lloyd, Rho::Infinite), (Algo::TbRho, Rho::Infinite)]
+            {
+                let cfg = RunConfig {
+                    algo,
+                    rho,
+                    k,
+                    b0,
+                    eval_every_secs: opts.seconds, // final eval only
+                    ..Default::default()
+                };
+                let (mean, std) = run_cell(&ds, &cfg, opts, engine.as_ref())?;
+                println!(
+                    "   {:<8} b0={:<6} mean final MSE {:.6e} (±{:.1e})",
+                    cfg.label(),
+                    b0,
+                    mean,
+                    std
+                );
+                cells.push(Cell {
+                    dataset: ds.name.clone(),
+                    algo: cfg.label(),
+                    b0,
+                    mean_final: mean,
+                    std_final: std,
+                });
+            }
+        }
+    }
+    // normalise by the global best and write the paper-shaped table
+    let v0 = cells
+        .iter()
+        .map(|c| c.mean_final)
+        .fold(f64::INFINITY, f64::min);
+    let mut t = Table::new(&[
+        "dataset", "algo", "b0", "mean_final_mse", "std", "relative_to_v0",
+    ]);
+    for c in &cells {
+        t.push(vec![
+            c.dataset.clone(),
+            c.algo.clone(),
+            c.b0.to_string(),
+            format!("{:.8e}", c.mean_final),
+            format!("{:.3e}", c.std_final),
+            format!("{:.4}", c.mean_final / v0),
+        ]);
+    }
+    let path = results_dir().join("table2_quality.csv");
+    t.write_csv(&path)?;
+    println!("   wrote {}", path.display());
+    check_shape(&cells);
+    Ok(cells)
+}
+
+/// Paper shape: dense — tb-∞ ≈ lloyd for all b0; sparse — tb-∞ degrades
+/// as b0 shrinks (monotone-ish in b0) while lloyd is flat.
+pub fn check_shape(cells: &[Cell]) {
+    let get = |ds: &str, algo: &str, b0: usize| {
+        cells
+            .iter()
+            .find(|c| c.dataset == ds && c.algo.starts_with(algo) && c.b0 == b0)
+            .map(|c| c.mean_final)
+    };
+    let b0s: Vec<usize> = {
+        let mut v: Vec<usize> = cells.iter().map(|c| c.b0).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    if let (Some(&bmin), Some(&bmax)) = (b0s.first(), b0s.last()) {
+        if let (Some(l), Some(t)) =
+            (get("infmnist-sim", "lloyd", bmax), get("infmnist-sim", "tb", bmax))
+        {
+            let ok = t <= l * 1.15;
+            println!(
+                "   [shape dense] tb-∞ ≈ lloyd at large b0: {} ({t:.4e} vs {l:.4e})",
+                if ok { "PASS" } else { "WARN" }
+            );
+        }
+        if let (Some(t_small), Some(t_large)) =
+            (get("rcv1-sim", "tb", bmin), get("rcv1-sim", "tb", bmax))
+        {
+            let ok = t_large <= t_small * 1.02;
+            println!(
+                "   [shape sparse] tb-∞ improves with b0: {} (b0={bmin}: {t_small:.4e}, b0={bmax}: {t_large:.4e})",
+                if ok { "PASS" } else { "WARN" }
+            );
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! Assignment engines: who computes `argmin_j ‖x_i − c_j‖²`.
+//!
+//! * [`NativeEngine`] — pure-rust norms-trick loops, sharded across the
+//!   coordinator pool. Works for dense and CSR data; the reference
+//!   implementation every other engine is tested against.
+//! * `runtime::XlaEngine` — dense tiles dispatched to the AOT-compiled
+//!   Pallas/XLA artifacts over PJRT (Layer 1/2); implements the same
+//!   [`AssignEngine`] trait and must agree with the native engine
+//!   exactly (integration test `xla_parity`).
+//!
+//! Engines only produce `(label, d²)`; applying sufficient-statistics
+//! updates stays with the algorithms (leader-side), keeping the engine
+//! interface identical for mb, mb-f, gb-ρ and tb-ρ.
+
+use crate::coordinator::shard::{chunk_ranges, split_outputs, Pool};
+use crate::data::{Data, Storage};
+use crate::kmeans::state::Centroids;
+use crate::linalg::sparse::TransposedCentroids;
+
+/// A selection of datapoint indices to (re)assign.
+#[derive(Clone, Copy, Debug)]
+pub enum Sel<'a> {
+    /// The contiguous prefix/window `[lo, hi)` — gb/tb active batches
+    /// are prefixes of the per-seed shuffled data.
+    Range(usize, usize),
+    /// An explicit index list (mb random batches, tb dirty points).
+    List(&'a [usize]),
+}
+
+impl Sel<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            Sel::Range(lo, hi) => hi - lo,
+            Sel::List(l) => l.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn nth(&self, t: usize) -> usize {
+        match self {
+            Sel::Range(lo, _) => lo + t,
+            Sel::List(l) => l[t],
+        }
+    }
+}
+
+/// An engine computes nearest centroids for a selection of points,
+/// writing `out_lbl[t]`/`out_d2[t]` for the t-th selected point, and
+/// returns the number of point-to-centroid distance computations.
+pub trait AssignEngine {
+    fn assign(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64;
+
+    /// Full distance rows: `out_d2[t*k + j] = ‖x_{sel(t)} − c_j‖²`.
+    /// Used by the tile-path tb-ρ to refresh a dirty point's complete
+    /// bound row in one pass (the XLA engine serves this from the
+    /// `distmat` artifact). Returns distance-computation count.
+    fn dist_rows(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        out_d2: &mut [f32],
+    ) -> u64;
+
+    /// Σ over the selection of min_j ‖x_i − c_j‖² (validation scoring).
+    fn score(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+    ) -> (f64, u64) {
+        let n = sel.len();
+        let mut lbl = vec![0u32; n];
+        let mut d2 = vec![0f32; n];
+        let calcs = self.assign(data, sel, centroids, pool, &mut lbl, &mut d2);
+        (d2.iter().map(|&x| x as f64).sum(), calcs)
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust engine; the correctness reference.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngine;
+
+/// Don't spawn threads for selections smaller than this.
+const MIN_CHUNK: usize = 256;
+
+impl AssignEngine for NativeEngine {
+    fn assign(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64 {
+        let n = sel.len();
+        assert_eq!(out_lbl.len(), n);
+        assert_eq!(out_d2.len(), n);
+        if n == 0 {
+            return 0;
+        }
+        let ranges = chunk_ranges(n, pool.threads, MIN_CHUNK);
+        let views = split_outputs(&ranges, out_lbl, out_d2);
+        // pair each view with its range and fan out
+        let jobs: Vec<_> = ranges.iter().cloned().zip(views).collect();
+        let k = centroids.k() as u64;
+        // sparse fast path: transposed centroids turn per-nnz gathers
+        // into sequential k-length AXPYs (EXPERIMENTS.md §Perf, ~2x)
+        let trans = transposed_for(data, centroids, n);
+        let trans = trans.as_ref();
+        if jobs.len() <= 1 {
+            for (r, (vl, vd)) in jobs {
+                assign_serial(data, &sel, r, centroids, trans, vl, vd);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                for (r, (vl, vd)) in jobs {
+                    scope.spawn(move || {
+                        assign_serial(data, &sel, r, centroids, trans, vl, vd);
+                    });
+                }
+            });
+        }
+        n as u64 * k
+    }
+
+    fn dist_rows(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        out_d2: &mut [f32],
+    ) -> u64 {
+        let n = sel.len();
+        let k = centroids.k();
+        assert_eq!(out_d2.len(), n * k);
+        if n == 0 {
+            return 0;
+        }
+        let ranges = chunk_ranges(n, pool.threads, MIN_CHUNK.max(64));
+        // split the row-major output at row boundaries
+        let mut views = Vec::with_capacity(ranges.len());
+        {
+            let mut rest: &mut [f32] = out_d2;
+            for r in &ranges {
+                let (head, tail) = rest.split_at_mut(r.len() * k);
+                views.push(head);
+                rest = tail;
+            }
+        }
+        let jobs: Vec<_> = ranges.iter().cloned().zip(views).collect();
+        let trans = transposed_for(data, centroids, n);
+        let trans = trans.as_ref();
+        let work = |r: std::ops::Range<usize>, out: &mut [f32]| {
+            match (trans, &data.storage) {
+                (Some(tc), Storage::Sparse(m)) => {
+                    for (slot, t) in r.enumerate() {
+                        let i = sel.nth(t);
+                        let (idx, vals) = m.row(i);
+                        tc.dist_row(
+                            idx,
+                            vals,
+                            data.norms[i],
+                            &centroids.norms,
+                            &mut out[slot * k..(slot + 1) * k],
+                        );
+                    }
+                }
+                _ => {
+                    for (slot, t) in r.enumerate() {
+                        let i = sel.nth(t);
+                        let row = &mut out[slot * k..(slot + 1) * k];
+                        for j in 0..k {
+                            row[j] = data.sq_dist_to(
+                                i,
+                                centroids.c.row(j),
+                                centroids.norms[j],
+                            );
+                        }
+                    }
+                }
+            }
+        };
+        if jobs.len() <= 1 {
+            for (r, out) in jobs {
+                work(r, out);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                for (r, out) in jobs {
+                    let work = &work;
+                    scope.spawn(move || work(r, out));
+                }
+            });
+        }
+        (n * k) as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Build the transposed centroid block when it pays: sparse data, k
+/// large enough to amortise, selection big enough to amortise the
+/// O(k·d) transpose, and a bounded memory footprint.
+fn transposed_for(
+    data: &Data,
+    centroids: &Centroids,
+    n_points: usize,
+) -> Option<TransposedCentroids> {
+    const MAX_BYTES: usize = 256 << 20;
+    if !data.is_sparse()
+        || centroids.k() < 8
+        || n_points < 64
+        || centroids.k() * centroids.d() * 4 > MAX_BYTES
+    {
+        return None;
+    }
+    Some(TransposedCentroids::build(&centroids.c))
+}
+
+fn assign_serial(
+    data: &Data,
+    sel: &Sel,
+    range: std::ops::Range<usize>,
+    centroids: &Centroids,
+    trans: Option<&TransposedCentroids>,
+    out_lbl: &mut [u32],
+    out_d2: &mut [f32],
+) {
+    if let (Some(tc), Storage::Sparse(m)) = (trans, &data.storage) {
+        let mut scratch = vec![0f32; tc.k];
+        for (slot, t) in range.clone().enumerate() {
+            let i = sel.nth(t);
+            let (idx, vals) = m.row(i);
+            let (j, d2) =
+                tc.nearest(idx, vals, data.norms[i], &centroids.norms, &mut scratch);
+            out_lbl[slot] = j;
+            out_d2[slot] = d2;
+        }
+        return;
+    }
+    for (slot, t) in range.clone().enumerate() {
+        let i = sel.nth(t);
+        let (j, d2) = data.nearest(i, &centroids.c, &centroids.norms);
+        out_lbl[slot] = j;
+        out_d2[slot] = d2;
+    }
+}
+
+/// Validation-set mean MSE under `centroids` via any engine
+/// (Σ min d² / n).
+pub fn validation_mse(
+    data: &Data,
+    centroids: &Centroids,
+    engine: &dyn AssignEngine,
+    pool: &Pool,
+) -> f64 {
+    let (total, _) =
+        engine.score(data, Sel::Range(0, data.n()), centroids, pool);
+    total / data.n() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::init;
+    use crate::util::propcheck::Cases;
+
+    #[test]
+    fn native_matches_bruteforce_and_parallel_matches_serial() {
+        Cases::new(15).run(|rng| {
+            let n = 100 + rng.below(900);
+            let k = 2 + rng.below(10);
+            let data = GaussianMixture::default_spec(k, 8)
+                .generate(n, rng.next_u64());
+            let cent = init::first_k(&data, k);
+            let eng = NativeEngine;
+            let mut l1 = vec![0u32; n];
+            let mut d1 = vec![0f32; n];
+            let calcs = eng.assign(
+                &data,
+                Sel::Range(0, n),
+                &cent,
+                &Pool::new(1),
+                &mut l1,
+                &mut d1,
+            );
+            assert_eq!(calcs, (n * k) as u64);
+            let mut l4 = vec![0u32; n];
+            let mut d4 = vec![0f32; n];
+            eng.assign(&data, Sel::Range(0, n), &cent, &Pool::new(4), &mut l4, &mut d4);
+            assert_eq!(l1, l4);
+            assert_eq!(d1, d4);
+            // spot-check against Data::nearest
+            for i in (0..n).step_by(37) {
+                let (j, d2) = data.nearest(i, &cent.c, &cent.norms);
+                assert_eq!(l1[i], j);
+                assert_eq!(d1[i], d2);
+            }
+        });
+    }
+
+    #[test]
+    fn list_selection_matches_range() {
+        let data = GaussianMixture::default_spec(3, 5).generate(50, 7);
+        let cent = init::first_k(&data, 3);
+        let eng = NativeEngine;
+        let pool = Pool::new(2);
+        let idx: Vec<usize> = (10..30).collect();
+        let mut ll = vec![0u32; 20];
+        let mut dl = vec![0f32; 20];
+        eng.assign(&data, Sel::List(&idx), &cent, &pool, &mut ll, &mut dl);
+        let mut lr = vec![0u32; 20];
+        let mut dr = vec![0f32; 20];
+        eng.assign(&data, Sel::Range(10, 30), &cent, &pool, &mut lr, &mut dr);
+        assert_eq!(ll, lr);
+        assert_eq!(dl, dr);
+    }
+
+    #[test]
+    fn score_equals_sum_of_d2() {
+        let data = GaussianMixture::default_spec(4, 6).generate(80, 3);
+        let cent = init::first_k(&data, 4);
+        let eng = NativeEngine;
+        let pool = Pool::new(1);
+        let (total, _) = eng.score(&data, Sel::Range(0, 80), &cent, &pool);
+        let mse = validation_mse(&data, &cent, &eng, &pool);
+        assert!((total / 80.0 - mse).abs() < 1e-12);
+        let oracle = crate::kmeans::state::exact_mse(&data, &cent);
+        assert!((mse - oracle).abs() < 1e-9 * (1.0 + oracle));
+    }
+
+    #[test]
+    fn dist_rows_matches_pointwise() {
+        let data = GaussianMixture::default_spec(3, 7).generate(40, 2);
+        let cent = init::first_k(&data, 3);
+        let mut out = vec![0f32; 40 * 3];
+        let calcs = NativeEngine.dist_rows(
+            &data,
+            Sel::Range(0, 40),
+            &cent,
+            &Pool::new(3),
+            &mut out,
+        );
+        assert_eq!(calcs, 120);
+        for i in 0..40 {
+            for j in 0..3 {
+                let e = data.sq_dist_to(i, cent.c.row(j), cent.norms[j]);
+                assert_eq!(out[i * 3 + j], e);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_selection_ok() {
+        let data = GaussianMixture::default_spec(2, 3).generate(5, 0);
+        let cent = init::first_k(&data, 2);
+        let mut l = [];
+        let mut d = [];
+        let c = NativeEngine.assign(
+            &data,
+            Sel::Range(2, 2),
+            &cent,
+            &Pool::new(4),
+            &mut l,
+            &mut d,
+        );
+        assert_eq!(c, 0);
+    }
+}

@@ -1,0 +1,404 @@
+//! Triangle-inequality lower bounds (Elkan 2003) for the turbocharged
+//! algorithms.
+//!
+//! [`BoundStore`] keeps `l(i,j) ≤ ‖x_i − c_j‖` for every *active* point
+//! (the nested batch prefix). Two consumption modes:
+//!
+//! * [`tb_point_step`] — the paper's Algorithm 9/11 inner loop verbatim:
+//!   recompute d(i) exactly, decay each bound by `p(j)`, recompute a
+//!   distance only when the bound fails. This is the native engine path.
+//! * [`screen`] / tile refresh — the hardware-adapted path (DESIGN.md
+//!   §Hardware-Adaptation): a cheap O(k) vector screen flags *dirty*
+//!   points, which the coordinator gathers into dense tiles for the
+//!   XLA/Pallas `distmat` artifact; clean points skip the O(dk) work
+//!   entirely. Assignments produced by both paths are identical.
+//!
+//! Validity invariant (tested): after any sequence of operations,
+//! `l(i,j) ≤ ‖x_i − c_j‖` for all active i, j.
+
+use crate::data::Data;
+use crate::kmeans::state::Centroids;
+
+/// Dense per-point × per-centroid lower-bound matrix for the active
+/// batch; rows are appended as the nested batch grows (M_t ⊆ M_{t+1}
+/// means a row, once created, stays).
+#[derive(Clone, Debug)]
+pub struct BoundStore {
+    pub k: usize,
+    pub n: usize,
+    lb: Vec<f32>,
+}
+
+impl BoundStore {
+    pub fn new(k: usize) -> Self {
+        Self { k, n: 0, lb: vec![] }
+    }
+
+    /// Extend to `n` active points (new rows zeroed: 0 is always a valid
+    /// lower bound; they are tightened at the point's first full assign).
+    pub fn grow_to(&mut self, n: usize) {
+        assert!(n >= self.n, "nested batches never shrink");
+        self.lb.resize(n * self.k, 0.0);
+        self.n = n;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.lb[i * self.k..(i + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.lb[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Split the store into disjoint per-chunk mutable row views
+    /// matching `ranges` (for lock-free sharded mutation).
+    pub fn split_rows<'a>(
+        &'a mut self,
+        ranges: &[std::ops::Range<usize>],
+    ) -> Vec<&'a mut [f32]> {
+        let k = self.k;
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f32] = &mut self.lb;
+        let mut consumed = 0;
+        for r in ranges {
+            debug_assert_eq!(r.start, consumed);
+            let (head, tail) = rest.split_at_mut(r.len() * k);
+            out.push(head);
+            rest = tail;
+            consumed += r.len();
+        }
+        out
+    }
+}
+
+/// Result of one bounded reassignment step for a point.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    pub label: u32,
+    /// exact ‖x_i − c_label‖² after the step
+    pub d2: f32,
+    pub dist_calcs: u64,
+    pub bound_skips: u64,
+}
+
+/// Algorithm 9/11 lines 10–22 for one already-seen point: exact distance
+/// to the current centroid, then bound-gated scans of the others.
+/// `lb_row` is this point's k bounds (mutated in place).
+#[inline]
+pub fn tb_point_step(
+    data: &Data,
+    i: usize,
+    cent: &Centroids,
+    lb_row: &mut [f32],
+    a_old: u32,
+) -> StepOut {
+    let k = cent.k();
+    debug_assert_eq!(lb_row.len(), k);
+    let ao = a_old as usize;
+    // d(i) ← ‖x(i) − c(a_o)‖  (always exact: 1 distance calc)
+    let mut d2 = data.sq_dist_to(i, cent.c.row(ao), cent.norms[ao]);
+    let mut d = d2.sqrt();
+    lb_row[ao] = d;
+    let mut a = a_old;
+    let mut calcs = 1u64;
+    let mut skips = 0u64;
+    for j in 0..k {
+        if j == ao {
+            continue;
+        }
+        // l(i,j) ← l(i,j) − p(j)
+        let mut l = lb_row[j] - cent.p[j];
+        if l < d {
+            // bound failed: recompute exactly
+            let dj2 = data.sq_dist_to(i, cent.c.row(j), cent.norms[j]);
+            let dj = dj2.sqrt();
+            l = dj;
+            calcs += 1;
+            if dj < d {
+                d = dj;
+                d2 = dj2;
+                a = j as u32;
+            }
+        } else {
+            skips += 1;
+        }
+        lb_row[j] = l;
+    }
+    StepOut { label: a, d2, dist_calcs: calcs, bound_skips: skips }
+}
+
+/// First full assignment of a new point (Alg. 9 lines 33–36): compute
+/// all k distances, install them as exact bounds, return the argmin.
+#[inline]
+pub fn full_assign_fill(
+    data: &Data,
+    i: usize,
+    cent: &Centroids,
+    lb_row: &mut [f32],
+) -> StepOut {
+    let k = cent.k();
+    let mut best = f32::INFINITY;
+    let mut best_j = 0u32;
+    for j in 0..k {
+        let dj2 = data.sq_dist_to(i, cent.c.row(j), cent.norms[j]);
+        let dj = dj2.sqrt();
+        lb_row[j] = dj;
+        if dj2 < best {
+            best = dj2;
+            best_j = j as u32;
+        }
+    }
+    StepOut { label: best_j, d2: best, dist_calcs: k as u64, bound_skips: 0 }
+}
+
+/// The tile-path screen: decay this row's bounds by `p`, and report
+/// whether the point is *dirty* — some non-assigned centroid's bound
+/// dipped below the point's (decayed) upper bound `u`.
+///
+/// `u` must satisfy `u ≥ ‖x_i − c_{a}‖` (maintained by the caller as
+/// `u ← u + p(a)` between rounds). Clean ⇒ the assignment provably
+/// cannot change, so the point skips the distance tile.
+#[inline]
+pub fn screen(lb_row: &mut [f32], p: &[f32], a: u32, u: f32) -> bool {
+    let mut dirty = false;
+    for j in 0..lb_row.len() {
+        let l = lb_row[j] - p[j];
+        lb_row[j] = l;
+        if j as u32 != a && l < u {
+            dirty = true;
+        }
+    }
+    dirty
+}
+
+/// Tile-path refresh after the `distmat` artifact returned the full
+/// distance row for a dirty point: install exact bounds, return argmin.
+#[inline]
+pub fn refresh_from_distrow(lb_row: &mut [f32], dist2_row: &[f32]) -> (u32, f32) {
+    debug_assert_eq!(lb_row.len(), dist2_row.len());
+    let mut best = f32::INFINITY;
+    let mut best_j = 0u32;
+    for j in 0..lb_row.len() {
+        let d2 = dist2_row[j].max(0.0);
+        lb_row[j] = d2.sqrt();
+        if d2 < best {
+            best = d2;
+            best_j = j as u32;
+        }
+    }
+    (best_j, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::init;
+    use crate::util::propcheck::Cases;
+
+    fn exact_dist(data: &Data, i: usize, cent: &Centroids, j: usize) -> f32 {
+        data.sq_dist_to(i, cent.c.row(j), cent.norms[j]).sqrt()
+    }
+
+    #[test]
+    fn full_assign_installs_exact_bounds() {
+        let data = GaussianMixture::default_spec(4, 6).generate(30, 1);
+        let cent = init::first_k(&data, 4);
+        let mut store = BoundStore::new(4);
+        store.grow_to(30);
+        for i in 0..30 {
+            let out = full_assign_fill(&data, i, &cent, store.row_mut(i));
+            let (j_ref, d2_ref) = data.nearest(i, &cent.c, &cent.norms);
+            // nearest() uses the 4-way blocked dot (different summation
+            // order than the per-centroid path) — compare with an fp
+            // tolerance, and allow index disagreement only on ties
+            assert!(
+                (out.d2 - d2_ref).abs() <= 1e-4 * (1.0 + d2_ref),
+                "i={i}: {} vs {d2_ref}",
+                out.d2
+            );
+            if out.label != j_ref {
+                let alt = data.sq_dist_to(
+                    i,
+                    cent.c.row(out.label as usize),
+                    cent.norms[out.label as usize],
+                );
+                assert!((alt - d2_ref).abs() <= 1e-4 * (1.0 + d2_ref));
+            }
+            for j in 0..4 {
+                let e = exact_dist(&data, i, &cent, j);
+                assert!((store.row(i)[j] - e).abs() < 1e-4 * (1.0 + e));
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_remain_valid_under_centroid_motion() {
+        // property: after decay + step, l(i,j) ≤ ‖x_i − c_j‖ always
+        Cases::new(20).run(|rng| {
+            let k = 2 + rng.below(6);
+            let n = 20 + rng.below(40);
+            let data = GaussianMixture::default_spec(k, 5)
+                .generate(n, rng.next_u64());
+            let mut cent = init::first_k(&data, k);
+            let mut store = BoundStore::new(k);
+            store.grow_to(n);
+            let mut labels = vec![0u32; n];
+            for i in 0..n {
+                labels[i] =
+                    full_assign_fill(&data, i, &cent, store.row_mut(i)).label;
+            }
+            for _round in 0..3 {
+                // jitter centroids, record p(j) = true displacement
+                for j in 0..k {
+                    let mut disp2 = 0f64;
+                    for t in 0..cent.d() {
+                        let delta = rng.gauss_f32() * 0.3;
+                        cent.c.row_mut(j)[t] += delta;
+                        disp2 += (delta as f64) * (delta as f64);
+                    }
+                    cent.p[j] = (disp2 as f64).sqrt() as f32;
+                }
+                for j in 0..k {
+                    cent.norms[j] =
+                        crate::linalg::dense::sq_norm(cent.c.row(j));
+                }
+                for i in 0..n {
+                    let out = tb_point_step(
+                        &data,
+                        i,
+                        &cent,
+                        store.row_mut(i),
+                        labels[i],
+                    );
+                    labels[i] = out.label;
+                    // validity of every bound
+                    for j in 0..k {
+                        let e = exact_dist(&data, i, &cent, j);
+                        assert!(
+                            store.row(i)[j] <= e + 1e-3 * (1.0 + e),
+                            "bound {} > exact {e}",
+                            store.row(i)[j]
+                        );
+                    }
+                    // assignment must equal brute force
+                    let (j_ref, d2_ref) =
+                        data.nearest(i, &cent.c, &cent.norms);
+                    assert!(
+                        (out.d2 - d2_ref).abs() <= 1e-4 * (1.0 + d2_ref),
+                        "tb step d2 {} vs exact {d2_ref}",
+                        out.d2
+                    );
+                    let _ = j_ref; // index may differ only on exact ties
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn stationary_centroids_skip_everything() {
+        let data = GaussianMixture::default_spec(5, 8).generate(50, 3);
+        let cent = init::first_k(&data, 5); // p = 0
+        let mut store = BoundStore::new(5);
+        store.grow_to(50);
+        let mut labels = vec![0u32; 50];
+        for i in 0..50 {
+            labels[i] =
+                full_assign_fill(&data, i, &cent, store.row_mut(i)).label;
+        }
+        // second pass with p = 0: every non-assigned bound must hold
+        let mut total_calcs = 0;
+        let mut total_skips = 0;
+        for i in 0..50 {
+            let out =
+                tb_point_step(&data, i, &cent, store.row_mut(i), labels[i]);
+            assert_eq!(out.label, labels[i]);
+            total_calcs += out.dist_calcs;
+            total_skips += out.bound_skips;
+        }
+        // exactly 1 calc per point (the d(i) recompute), rest skipped
+        assert_eq!(total_calcs, 50);
+        assert_eq!(total_skips, 50 * 4);
+    }
+
+    #[test]
+    fn screen_matches_tb_step_dirtiness() {
+        // A clean verdict from `screen` must imply tb_point_step keeps
+        // the assignment.
+        Cases::new(20).run(|rng| {
+            let k = 2 + rng.below(5);
+            let data = GaussianMixture::default_spec(k, 4)
+                .generate(30, rng.next_u64());
+            let mut cent = init::first_k(&data, k);
+            let mut store = BoundStore::new(k);
+            store.grow_to(30);
+            let mut labels = vec![0u32; 30];
+            let mut upper = vec![0f32; 30];
+            for i in 0..30 {
+                let out = full_assign_fill(&data, i, &cent, store.row_mut(i));
+                labels[i] = out.label;
+                upper[i] = out.d2.sqrt();
+            }
+            // small centroid jitter
+            for j in 0..k {
+                let mut disp2 = 0f64;
+                for t in 0..cent.d() {
+                    let delta = rng.gauss_f32() * 0.05;
+                    cent.c.row_mut(j)[t] += delta;
+                    disp2 += (delta as f64) * (delta as f64);
+                }
+                cent.p[j] = (disp2 as f64).sqrt() as f32;
+                cent.norms[j] = crate::linalg::dense::sq_norm(cent.c.row(j));
+            }
+            for i in 0..30 {
+                let mut row_copy = store.row(i).to_vec();
+                let u = upper[i] + cent.p[labels[i] as usize];
+                let dirty = screen(&mut row_copy, &cent.p, labels[i], u);
+                let out = tb_point_step(
+                    &data,
+                    i,
+                    &cent,
+                    store.row_mut(i),
+                    labels[i],
+                );
+                if !dirty {
+                    assert_eq!(
+                        out.label, labels[i],
+                        "clean point changed assignment"
+                    );
+                }
+                labels[i] = out.label;
+                upper[i] = out.d2.sqrt();
+            }
+        });
+    }
+
+    #[test]
+    fn refresh_from_distrow_sets_exact() {
+        let mut lb = vec![0f32; 3];
+        let (j, d2) = refresh_from_distrow(&mut lb, &[4.0, 1.0, 9.0]);
+        assert_eq!(j, 1);
+        assert_eq!(d2, 1.0);
+        assert_eq!(lb, vec![2.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn split_rows_disjoint() {
+        let mut store = BoundStore::new(3);
+        store.grow_to(10);
+        let ranges = crate::coordinator::shard::chunk_ranges(10, 3, 1);
+        let views = store.split_rows(&ranges);
+        let total: usize = views.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 30);
+    }
+
+    #[test]
+    #[should_panic]
+    fn never_shrinks() {
+        let mut store = BoundStore::new(2);
+        store.grow_to(5);
+        store.grow_to(3);
+    }
+}

@@ -1,0 +1,182 @@
+//! The batch-growth controller — the paper's Algorithm 6.
+//!
+//! After each centroid update the controller compares, per cluster, the
+//! standard error of the centroid estimate σ̂_C(j) against the distance
+//! p(j) the centroid just moved:
+//!
+//! * σ̂_C(j) ≪ p(j): more data is *redundant* (Ineq. 11) — keep b.
+//! * σ̂_C(j) ≫ p(j): the batch is being over-fit / prematurely
+//!   fine-tuned (Ineq. 12) — grow.
+//!
+//! A majority vote via the median ratio decides; double-or-nothing
+//! because σ̂_C shrinks by √2 per doubling. The degenerate ρ = ∞ case
+//! (Alg. 10/11) doubles iff a strict majority of centroids did not move
+//! at all (those ratios are +∞ — see §3.3.3).
+
+use crate::config::Rho;
+use crate::kmeans::state::{Centroids, SuffStats};
+use crate::util::stats::median;
+
+/// Outcome of one controller evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Stay,
+    Double,
+}
+
+/// Per-cluster ratio σ̂_C(j)/p(j); +∞ when p(j) = 0 (unchanged centroid)
+/// or when the cluster is too small for a variance estimate.
+pub fn ratios(stats: &SuffStats, cent: &Centroids) -> Vec<f64> {
+    (0..stats.k)
+        .map(|j| {
+            let p = cent.p[j] as f64;
+            if p <= 0.0 {
+                f64::INFINITY
+            } else {
+                stats.sigma_c(j) / p
+            }
+        })
+        .collect()
+}
+
+/// Algorithm 6: double iff `med_j [σ̂_C(j)/p(j)] ≥ ρ`.
+///
+/// For `Rho::Infinite` the σ̂ values are irrelevant (the paper's
+/// "slight simplification"): the median is ≥ ∞ iff a strict majority of
+/// the ratios are +∞, i.e. a strict majority of centroids have p(j)=0.
+pub fn decide(rho: Rho, stats: &SuffStats, cent: &Centroids) -> Decision {
+    match rho {
+        Rho::Infinite => {
+            let unchanged =
+                cent.p.iter().filter(|&&p| p <= 0.0).count();
+            if 2 * unchanged > cent.k() {
+                Decision::Double
+            } else {
+                Decision::Stay
+            }
+        }
+        Rho::Finite(r) => {
+            let rs = ratios(stats, cent);
+            if median(&rs) >= r {
+                Decision::Double
+            } else {
+                Decision::Stay
+            }
+        }
+    }
+}
+
+/// Apply a decision: `b ← min(2b, N)`.
+pub fn next_batchsize(b: usize, n: usize, d: Decision) -> usize {
+    grow(b, n, d, GrowthPolicy::Double)
+}
+
+/// Alternative batch-growth laws — the paper's second future-work
+/// direction (§5: "there are potentially better approaches" to
+/// increasing the batch). The σ̂_C √2-per-doubling argument motivates
+/// `Double`; the ablation bench (`cargo bench --bench ablations`)
+/// measures what the alternatives cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GrowthPolicy {
+    /// The paper's double-or-nothing (Algorithm 6).
+    Double,
+    /// Gentler geometric growth: b ← ⌈1.5·b⌉.
+    Geometric15,
+    /// Additive growth by the initial batch size: b ← b + b0.
+    Additive(usize),
+    /// Ignore the vote entirely; always grow (a gb algorithm with a
+    /// schedule, no statistics — the naive strawman).
+    AlwaysDouble,
+}
+
+/// Apply `policy` given the controller's vote.
+pub fn grow(b: usize, n: usize, d: Decision, policy: GrowthPolicy) -> usize {
+    let grown = match (policy, d) {
+        (GrowthPolicy::AlwaysDouble, _) => 2 * b,
+        (_, Decision::Stay) => b,
+        (GrowthPolicy::Double, Decision::Double) => 2 * b,
+        (GrowthPolicy::Geometric15, Decision::Double) => (3 * b).div_ceil(2),
+        (GrowthPolicy::Additive(b0), Decision::Double) => b + b0.max(1),
+    };
+    grown.min(n).max(b.min(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+
+    fn mk(k: usize, p: &[f32], v: &[f64], sse: &[f64]) -> (SuffStats, Centroids) {
+        let mut stats = SuffStats::zeros(k, 2);
+        stats.v.copy_from_slice(v);
+        stats.sse.copy_from_slice(sse);
+        let mut cent = Centroids::from_matrix(DenseMatrix::zeros(k, 2));
+        cent.p.copy_from_slice(p);
+        (stats, cent)
+    }
+
+    #[test]
+    fn rho_inf_majority_rule() {
+        // 3 of 5 unchanged → double
+        let (st, ce) = mk(5, &[0.0, 0.0, 0.0, 1.0, 1.0], &[10.0; 5], &[1.0; 5]);
+        assert_eq!(decide(Rho::Infinite, &st, &ce), Decision::Double);
+        // 2 of 5 unchanged → stay
+        let (st, ce) = mk(5, &[0.0, 0.0, 1.0, 1.0, 1.0], &[10.0; 5], &[1.0; 5]);
+        assert_eq!(decide(Rho::Infinite, &st, &ce), Decision::Stay);
+        // exactly half (2 of 4) is NOT a strict majority → stay
+        let (st, ce) = mk(4, &[0.0, 0.0, 1.0, 1.0], &[10.0; 4], &[1.0; 4]);
+        assert_eq!(decide(Rho::Infinite, &st, &ce), Decision::Stay);
+    }
+
+    #[test]
+    fn finite_rho_median_rule() {
+        // σ̂_C(j) = sqrt(sse/(v(v-1))) = sqrt(90/(10*9)) = 1; p = 0.5
+        // ⇒ every ratio = 2
+        let (st, ce) = mk(3, &[0.5; 3], &[10.0; 3], &[90.0; 3]);
+        assert_eq!(decide(Rho::Finite(2.0), &st, &ce), Decision::Double);
+        assert_eq!(decide(Rho::Finite(2.1), &st, &ce), Decision::Stay);
+        assert_eq!(decide(Rho::Finite(1.0), &st, &ce), Decision::Double);
+    }
+
+    #[test]
+    fn unchanged_clusters_push_ratio_to_infinity() {
+        let (st, ce) = mk(3, &[0.0, 0.0, 0.5], &[10.0; 3], &[90.0; 3]);
+        let rs = ratios(&st, &ce);
+        assert!(rs[0].is_infinite() && rs[1].is_infinite());
+        // median of {∞, ∞, 2} = ∞ ≥ any finite ρ
+        assert_eq!(decide(Rho::Finite(1e12), &st, &ce), Decision::Double);
+    }
+
+    #[test]
+    fn tiny_clusters_vote_to_grow() {
+        let (mut st, ce) = mk(3, &[0.5; 3], &[10.0; 3], &[90.0; 3]);
+        st.v = vec![1.0, 1.0, 10.0]; // two clusters below variance-estimable size
+        let rs = ratios(&st, &ce);
+        assert!(rs[0].is_infinite() && rs[1].is_infinite());
+    }
+
+    #[test]
+    fn next_batchsize_caps_at_n() {
+        assert_eq!(next_batchsize(5000, 60000, Decision::Double), 10000);
+        assert_eq!(next_batchsize(40000, 60000, Decision::Double), 60000);
+        assert_eq!(next_batchsize(60000, 60000, Decision::Double), 60000);
+        assert_eq!(next_batchsize(70000, 60000, Decision::Stay), 60000);
+    }
+
+    #[test]
+    fn growth_policies() {
+        use GrowthPolicy::*;
+        assert_eq!(grow(100, 1000, Decision::Double, Double), 200);
+        assert_eq!(grow(100, 1000, Decision::Double, Geometric15), 150);
+        assert_eq!(grow(100, 1000, Decision::Double, Additive(64)), 164);
+        assert_eq!(grow(100, 1000, Decision::Stay, Additive(64)), 100);
+        assert_eq!(grow(100, 1000, Decision::Stay, AlwaysDouble), 200);
+        // never shrinks, always capped
+        for p in [Double, Geometric15, Additive(10), AlwaysDouble] {
+            for d in [Decision::Stay, Decision::Double] {
+                let nb = grow(900, 1000, d, p);
+                assert!((900..=1000).contains(&nb), "{p:?} {d:?} -> {nb}");
+            }
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! Elkan's exact accelerated k-means (Elkan 2003; paper §2.2).
+//!
+//! Produces *identical* assignments to Lloyd each round (integration
+//! test `elkan_equals_lloyd`) while eliminating most distance
+//! computations via three devices:
+//!
+//! * per-point upper bound `u(i) ≥ ‖x_i − c_{a(i)}‖`, decayed by
+//!   `p(a(i))` after each centroid update;
+//! * per-(point, centroid) lower bounds `l(i,j)`, decayed by `p(j)`;
+//! * inter-centroid distances: if `u(i) ≤ ½·min_{j≠a} ‖c_a − c_j‖`, the
+//!   point cannot change assignment and is skipped outright.
+//!
+//! This is the baseline family the paper borrows bounds from; comparing
+//! its distance-calculation counts against `tb-ρ` quantifies what
+//! nesting buys in the mini-batch regime.
+
+use crate::coordinator::shard::chunk_ranges;
+use crate::kmeans::state::{Assignments, Centroids, SuffStats, UNASSIGNED};
+use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+use crate::linalg::dense;
+
+pub struct Elkan {
+    cent: Centroids,
+    stats: SuffStats,
+    assign: Assignments,
+    /// u(i): upper bound on distance to assigned centroid.
+    upper: Vec<f32>,
+    /// l(i,j) lower bounds, n × k row-major.
+    lb: Vec<f32>,
+    n: usize,
+    first_done: bool,
+    fixed_point: bool,
+}
+
+impl Elkan {
+    pub fn new(cent: Centroids, n: usize) -> Self {
+        let k = cent.k();
+        let d = cent.d();
+        Self {
+            cent,
+            stats: SuffStats::zeros(k, d),
+            assign: Assignments::new(n),
+            upper: vec![f32::INFINITY; n],
+            lb: vec![0.0; n * k],
+            n,
+            first_done: false,
+            fixed_point: false,
+        }
+    }
+
+    /// ½·inter-centroid distances and s(j) = ½ min_{j'≠j} ‖c_j − c_j'‖.
+    fn half_cc(&self) -> (Vec<f32>, Vec<f32>) {
+        let k = self.cent.k();
+        let mut half = vec![0f32; k * k];
+        let mut s = vec![f32::INFINITY; k];
+        for j in 0..k {
+            for j2 in (j + 1)..k {
+                let dist = dense::sq_dist(self.cent.c.row(j), self.cent.c.row(j2)).sqrt();
+                half[j * k + j2] = 0.5 * dist;
+                half[j2 * k + j] = 0.5 * dist;
+                s[j] = s[j].min(0.5 * dist);
+                s[j2] = s[j2].min(0.5 * dist);
+            }
+        }
+        (half, s)
+    }
+}
+
+struct ShardOut {
+    delta: SuffStats,
+    changed: u64,
+    calcs: u64,
+    skips: u64,
+    sum_u2: f64,
+}
+
+impl Clusterer for Elkan {
+    fn round(&mut self, ctx: &mut Ctx) -> RoundInfo {
+        let k = self.cent.k();
+        let d = self.cent.d();
+        let data = ctx.data;
+
+        if !self.first_done {
+            // first pass: exact distances everywhere, bounds installed
+            let ranges = chunk_ranges(self.n, ctx.pool.threads, 256);
+            let mut lb_rest: &mut [f32] = &mut self.lb;
+            let mut lbl_rest: &mut [u32] = &mut self.assign.label;
+            let mut up_rest: &mut [f32] = &mut self.upper;
+            let mut jobs = Vec::new();
+            for r in ranges.iter().cloned() {
+                let (bh, bt) = lb_rest.split_at_mut(r.len() * k);
+                let (lh, lt) = lbl_rest.split_at_mut(r.len());
+                let (uh, ut) = up_rest.split_at_mut(r.len());
+                lb_rest = bt;
+                lbl_rest = lt;
+                up_rest = ut;
+                jobs.push((r, bh, lh, uh));
+            }
+            let cent = &self.cent;
+            let work = |r: std::ops::Range<usize>,
+                        bh: &mut [f32],
+                        lh: &mut [u32],
+                        uh: &mut [f32]|
+             -> (SuffStats, f64) {
+                let mut delta = SuffStats::zeros(k, d);
+                let mut sum = 0f64;
+                for (slot, i) in r.enumerate() {
+                    let out = crate::kmeans::bounds::full_assign_fill(
+                        data,
+                        i,
+                        cent,
+                        &mut bh[slot * k..(slot + 1) * k],
+                    );
+                    delta.add_point(data, i, out.label, out.d2);
+                    lh[slot] = out.label;
+                    uh[slot] = out.d2.sqrt();
+                    sum += out.d2 as f64;
+                }
+                (delta, sum)
+            };
+            let parts: Vec<(SuffStats, f64)> = if jobs.len() <= 1 {
+                jobs.into_iter().map(|(r, bh, lh, uh)| work(r, bh, lh, uh)).collect()
+            } else {
+                let mut slots: Vec<Option<(SuffStats, f64)>> =
+                    (0..jobs.len()).map(|_| None).collect();
+                std::thread::scope(|scope| {
+                    for (slot, (r, bh, lh, uh)) in slots.iter_mut().zip(jobs) {
+                        let work = &work;
+                        scope.spawn(move || *slot = Some(work(r, bh, lh, uh)));
+                    }
+                });
+                slots.into_iter().map(|s| s.unwrap()).collect()
+            };
+            let mut sum_d2 = 0f64;
+            for (p, s) in parts {
+                crate::coordinator::merge::Mergeable::merge(&mut self.stats, p);
+                sum_d2 += s;
+            }
+            // decay for next round happens against the update we do now
+            self.stats.update_centroids(&mut self.cent);
+            self.decay_bounds();
+            self.first_done = true;
+            return RoundInfo {
+                dist_calcs: (self.n * k) as u64,
+                bound_skips: 0,
+                changed: self.n as u64,
+                batch: self.n,
+                train_mse: sum_d2 / self.n as f64,
+            };
+        }
+
+        let (half, s) = self.half_cc();
+        let ranges = chunk_ranges(self.n, ctx.pool.threads, 256);
+        let mut lb_rest: &mut [f32] = &mut self.lb;
+        let mut lbl_rest: &mut [u32] = &mut self.assign.label;
+        let mut up_rest: &mut [f32] = &mut self.upper;
+        let mut jobs = Vec::new();
+        for r in ranges.iter().cloned() {
+            let (bh, bt) = lb_rest.split_at_mut(r.len() * k);
+            let (lh, lt) = lbl_rest.split_at_mut(r.len());
+            let (uh, ut) = up_rest.split_at_mut(r.len());
+            lb_rest = bt;
+            lbl_rest = lt;
+            up_rest = ut;
+            jobs.push((r, bh, lh, uh));
+        }
+        let cent = &self.cent;
+        let half_ref = &half;
+        let s_ref = &s;
+        let work = |r: std::ops::Range<usize>,
+                    bh: &mut [f32],
+                    lh: &mut [u32],
+                    uh: &mut [f32]|
+         -> ShardOut {
+            let mut out = ShardOut {
+                delta: SuffStats::zeros(k, d),
+                changed: 0,
+                calcs: 0,
+                skips: 0,
+                sum_u2: 0.0,
+            };
+            for (slot, i) in r.enumerate() {
+                let lbrow = &mut bh[slot * k..(slot + 1) * k];
+                let mut a = lh[slot] as usize;
+                let a_old = a as u32;
+                let mut u = uh[slot];
+                // global skip: cannot change assignment at all
+                if u <= s_ref[a] {
+                    out.skips += (k - 1) as u64;
+                    out.sum_u2 += (u * u) as f64;
+                    continue;
+                }
+                let mut tight = false;
+                for j in 0..k {
+                    if j == a {
+                        continue;
+                    }
+                    let gate = lbrow[j].max(half_ref[a * k + j]);
+                    if u <= gate {
+                        out.skips += 1;
+                        continue;
+                    }
+                    if !tight {
+                        // tighten the upper bound once
+                        let d2 = data
+                            .sq_dist_to(i, cent.c.row(a), cent.norms[a]);
+                        u = d2.sqrt();
+                        lbrow[a] = u;
+                        out.calcs += 1;
+                        tight = true;
+                        if u <= gate {
+                            continue;
+                        }
+                    }
+                    let dj2 =
+                        data.sq_dist_to(i, cent.c.row(j), cent.norms[j]);
+                    let dj = dj2.sqrt();
+                    lbrow[j] = dj;
+                    out.calcs += 1;
+                    if dj < u {
+                        a = j;
+                        u = dj;
+                        // u is exact for the new assignment
+                    }
+                }
+                if a as u32 != a_old {
+                    out.delta.reassign_point(data, i, a_old, a as u32, u * u);
+                    out.changed += 1;
+                }
+                lh[slot] = a as u32;
+                uh[slot] = u;
+                out.sum_u2 += (u * u) as f64;
+            }
+            out
+        };
+        let parts: Vec<ShardOut> = if jobs.len() <= 1 {
+            jobs.into_iter().map(|(r, bh, lh, uh)| work(r, bh, lh, uh)).collect()
+        } else {
+            let mut slots: Vec<Option<ShardOut>> =
+                (0..jobs.len()).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                for (slot, (r, bh, lh, uh)) in slots.iter_mut().zip(jobs) {
+                    let work = &work;
+                    scope.spawn(move || *slot = Some(work(r, bh, lh, uh)));
+                }
+            });
+            slots.into_iter().map(|x| x.unwrap()).collect()
+        };
+        let mut changed = 0u64;
+        let mut calcs = 0u64;
+        let mut skips = 0u64;
+        let mut sum_u2 = 0f64;
+        for p in parts {
+            crate::coordinator::merge::Mergeable::merge(&mut self.stats, p.delta);
+            changed += p.changed;
+            calcs += p.calcs;
+            skips += p.skips;
+            sum_u2 += p.sum_u2;
+        }
+        self.stats.update_centroids(&mut self.cent);
+        self.decay_bounds();
+        self.fixed_point = changed == 0;
+        RoundInfo {
+            dist_calcs: calcs,
+            bound_skips: skips,
+            changed,
+            batch: self.n,
+            // u(i) is an upper bound; exact right after a tightening —
+            // close enough for the progress log (quality numbers come
+            // from the validation protocol)
+            train_mse: sum_u2 / self.n as f64,
+        }
+    }
+
+    fn centroids(&self) -> &Centroids {
+        &self.cent
+    }
+
+    fn converged(&self) -> bool {
+        self.fixed_point
+    }
+
+    fn name(&self) -> String {
+        "elkan".into()
+    }
+}
+
+impl Elkan {
+    /// Post-update bound maintenance: `l(i,j) ← l(i,j) − p(j)`,
+    /// `u(i) ← u(i) + p(a(i))`.
+    fn decay_bounds(&mut self) {
+        let k = self.cent.k();
+        let p = &self.cent.p;
+        if self.cent.max_p() == 0.0 {
+            return;
+        }
+        for i in 0..self.n {
+            let row = &mut self.lb[i * k..(i + 1) * k];
+            for j in 0..k {
+                row[j] -= p[j];
+            }
+            let a = self.assign.label[i];
+            if a != UNASSIGNED {
+                self.upper[i] += p[a as usize];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+
+    use crate::config::{Algo, RunConfig};
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::run;
+
+    #[test]
+    fn elkan_equals_lloyd_trajectory() {
+        let data = GaussianMixture::default_spec(5, 7).generate(700, 4);
+        let mk = |algo| RunConfig {
+            algo,
+            k: 5,
+            max_rounds: 12,
+            max_seconds: 60.0,
+            seed: 9,
+            threads: 3,
+            stop_on_convergence: false,
+            ..Default::default()
+        };
+        let l = run(&data, None, &mk(Algo::Lloyd)).unwrap();
+        let e = run(&data, None, &mk(Algo::Elkan)).unwrap();
+        for j in 0..5 {
+            for t in 0..7 {
+                let a = l.centroids.c.row(j)[t];
+                let b = e.centroids.c.row(j)[t];
+                assert!(
+                    (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
+                    "centroid {j},{t}: lloyd={a} elkan={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn elkan_skips_most_distance_calcs() {
+        let data = GaussianMixture::default_spec(8, 10).generate(1500, 2);
+        let cfg = RunConfig {
+            algo: Algo::Elkan,
+            k: 8,
+            max_rounds: 15,
+            max_seconds: 60.0,
+            seed: 1,
+            threads: 2,
+            stop_on_convergence: true,
+            ..Default::default()
+        };
+        let out = run(&data, None, &cfg).unwrap();
+        // after the first full pass, later rounds should do far fewer
+        // than n·k computations
+        let later: Vec<u64> = out
+            .trace
+            .records
+            .iter()
+            .skip(2)
+            .map(|r| r.dist_calcs)
+            .collect();
+        let full = (1500 * 8) as u64;
+        assert!(!later.is_empty());
+        let mean = later.iter().sum::<u64>() as f64 / later.len() as f64;
+        assert!(
+            mean < full as f64 * 0.5,
+            "elkan mean calcs {mean} vs full pass {full}"
+        );
+    }
+
+    #[test]
+    fn converges_like_lloyd() {
+        let data = GaussianMixture::default_spec(3, 4).generate(300, 8);
+        let cfg = RunConfig {
+            algo: Algo::Elkan,
+            k: 3,
+            max_rounds: 300,
+            max_seconds: 60.0,
+            seed: 5,
+            threads: 1,
+            ..Default::default()
+        };
+        let out = run(&data, None, &cfg).unwrap();
+        assert_eq!(out.trace.records.last().unwrap().changed, 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! `gb-ρ` — the nested Grow-Batch algorithm (paper §3.2–3.3,
+//! Algorithm 7; the ρ = ∞ degenerate form is Algorithm 10).
+//!
+//! The defining property is *nestedness*: `M_t ⊆ M_{t+1}` — once a point
+//! enters the active batch it stays. Because the data is pre-shuffled
+//! per seed, the active batch is simply the prefix `[0, b)`; each round
+//!
+//! 1. reassigns the already-seen prefix `[0, b_o)` exactly (full k
+//!    distance computations — `tb-ρ` replaces this step with bounds),
+//! 2. ingests the new window `[b_o, b)`,
+//! 3. updates centroids from the exact nested-batch statistics, and
+//! 4. asks the σ̂_C/p controller whether to double b.
+
+use crate::config::Rho;
+use crate::kmeans::assign::Sel;
+use crate::kmeans::controller::{self, GrowthPolicy};
+use crate::kmeans::state::{batch_mse, Assignments, Centroids, SuffStats};
+use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+
+pub struct GrowBatch {
+    pub(crate) cent: Centroids,
+    stats: SuffStats,
+    assign: Assignments,
+    n: usize,
+    /// b_o: number of points already seen (prefix length).
+    pub b_prev: usize,
+    /// b: current active batch size.
+    pub b: usize,
+    rho: Rho,
+    policy: GrowthPolicy,
+    fixed_point: bool,
+    /// history of batch sizes, for the nestedness tests
+    pub batch_history: Vec<usize>,
+}
+
+impl GrowBatch {
+    pub fn new(cent: Centroids, n: usize, b0: usize, rho: Rho) -> Self {
+        let k = cent.k();
+        let d = cent.d();
+        Self {
+            cent,
+            stats: SuffStats::zeros(k, d),
+            assign: Assignments::new(n),
+            n,
+            b_prev: 0,
+            b: b0.min(n).max(1),
+            rho,
+            policy: GrowthPolicy::Double,
+            fixed_point: false,
+            batch_history: vec![],
+        }
+    }
+
+    /// Paper §5 future-work: alternative batch-growth laws (ablation).
+    pub fn with_policy(mut self, policy: GrowthPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Exact S/v versus a rebuild over the active prefix (test hook).
+    #[cfg(test)]
+    pub fn stats_drift(&self, data: &crate::data::Data) -> f64 {
+        let fresh = SuffStats::rebuild(
+            data,
+            self.cent.k(),
+            0..self.b_prev,
+            &self.assign.label,
+            &self.assign.dist2,
+        );
+        self.stats.max_abs_diff(&fresh)
+    }
+}
+
+impl Clusterer for GrowBatch {
+    fn round(&mut self, ctx: &mut Ctx) -> RoundInfo {
+        let k = self.cent.k();
+        let (b_o, b) = (self.b_prev, self.b);
+        self.batch_history.push(b);
+        let mut calcs = 0u64;
+        let mut changed = 0u64;
+
+        // 1. reassign the seen prefix [0, b_o)
+        if b_o > 0 {
+            let mut lbl = vec![0u32; b_o];
+            let mut d2 = vec![0f32; b_o];
+            calcs += ctx.engine.assign(
+                ctx.data,
+                Sel::Range(0, b_o),
+                &self.cent,
+                &ctx.pool,
+                &mut lbl,
+                &mut d2,
+            );
+            let (delta, ch) = crate::kmeans::par_reassign_stats(
+                ctx.data,
+                Sel::Range(0, b_o),
+                &self.assign.label[..b_o],
+                &lbl,
+                &d2,
+                k,
+                &ctx.pool,
+            );
+            changed += ch;
+            crate::coordinator::merge::Mergeable::merge(&mut self.stats, delta);
+            self.assign.label[..b_o].copy_from_slice(&lbl);
+            self.assign.dist2[..b_o].copy_from_slice(&d2);
+        }
+
+        // 2. ingest the new window [b_o, b)
+        if b > b_o {
+            let mut lbl = vec![0u32; b - b_o];
+            let mut d2 = vec![0f32; b - b_o];
+            calcs += ctx.engine.assign(
+                ctx.data,
+                Sel::Range(b_o, b),
+                &self.cent,
+                &ctx.pool,
+                &mut lbl,
+                &mut d2,
+            );
+            let delta = crate::kmeans::par_add_stats(
+                ctx.data,
+                Sel::Range(b_o, b),
+                &lbl,
+                &d2,
+                k,
+                &ctx.pool,
+            );
+            crate::coordinator::merge::Mergeable::merge(&mut self.stats, delta);
+            self.assign.label[b_o..b].copy_from_slice(&lbl);
+            self.assign.dist2[b_o..b].copy_from_slice(&d2);
+        }
+
+        // 3. centroid update
+        self.stats.update_centroids(&mut self.cent);
+
+        // 4. controller vote
+        let decision = controller::decide(self.rho, &self.stats, &self.cent);
+        self.b_prev = b;
+        self.b = controller::grow(b, self.n, decision, self.policy);
+        self.fixed_point =
+            b_o == self.n && changed == 0 && self.cent.max_p() == 0.0;
+
+        RoundInfo {
+            dist_calcs: calcs,
+            bound_skips: 0,
+            changed,
+            batch: b,
+            train_mse: batch_mse(&self.stats),
+        }
+    }
+
+    fn centroids(&self) -> &Centroids {
+        &self.cent
+    }
+
+    fn converged(&self) -> bool {
+        self.fixed_point
+    }
+
+    fn name(&self) -> String {
+        format!("gb-{}", self.rho.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::assign::NativeEngine;
+    use crate::kmeans::init;
+    use crate::util::rng::Pcg64;
+
+    fn ctx(data: &crate::data::Data) -> Ctx<'_> {
+        Ctx {
+            data,
+            engine: &NativeEngine,
+            pool: crate::coordinator::Pool::new(2),
+            rng: Pcg64::new(3, 3),
+        }
+    }
+
+    #[test]
+    fn batches_are_nested_and_double_or_stay() {
+        let data = GaussianMixture::default_spec(4, 6).generate(1000, 1);
+        let mut alg =
+            GrowBatch::new(init::first_k(&data, 4), 1000, 50, Rho::Infinite);
+        let mut c = ctx(&data);
+        for _ in 0..25 {
+            alg.round(&mut c);
+        }
+        let h = &alg.batch_history;
+        for w in h.windows(2) {
+            assert!(
+                w[1] == w[0] || w[1] == (2 * w[0]).min(1000),
+                "batch went {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(h[0] == 50);
+        // on an easy mixture the batch must eventually grow
+        assert!(*h.last().unwrap() > 50, "batch never grew: {h:?}");
+    }
+
+    #[test]
+    fn stats_stay_exact_under_churn() {
+        let data = GaussianMixture { k: 3, d: 5, center_spread: 2.0, noise: 1.5, weights: vec![] }
+            .generate(600, 7);
+        let mut alg =
+            GrowBatch::new(init::first_k(&data, 3), 600, 32, Rho::Finite(10.0));
+        let mut c = ctx(&data);
+        for round in 0..20 {
+            alg.round(&mut c);
+            let drift = alg.stats_drift(&data);
+            assert!(drift < 1e-5, "round {round}: drift {drift}");
+        }
+    }
+
+    #[test]
+    fn converges_to_lloyd_fixed_point() {
+        // Once b = N, gb-∞ is exactly lloyd; it must reach a fixed point
+        // and that fixed point must be lloyd-stable.
+        let data = GaussianMixture::default_spec(3, 4).generate(300, 5);
+        let mut alg =
+            GrowBatch::new(init::first_k(&data, 3), 300, 30, Rho::Infinite);
+        let mut c = ctx(&data);
+        for _ in 0..200 {
+            alg.round(&mut c);
+            if alg.converged() {
+                break;
+            }
+        }
+        assert!(alg.converged(), "gb-∞ failed to converge in 200 rounds");
+        // fixed point check: one lloyd round moves nothing
+        let mut cent = alg.cent.clone();
+        let mut labels = vec![0u32; 300];
+        let mse_before = crate::kmeans::state::exact_mse(&data, &cent);
+        crate::kmeans::lloyd::reference_round(&data, &mut cent, &mut labels);
+        let mse_after = crate::kmeans::state::exact_mse(&data, &cent);
+        assert!(
+            (mse_before - mse_after).abs() < 1e-9 * (1.0 + mse_before),
+            "not a lloyd fixed point: {mse_before} vs {mse_after}"
+        );
+    }
+
+    #[test]
+    fn rho_one_grows_faster_than_rho_large() {
+        // small ρ votes to double more eagerly (risking redundancy);
+        // large ρ is conservative (risking premature finetuning)
+        let data = GaussianMixture { k: 4, d: 8, center_spread: 3.0, noise: 1.2, weights: vec![] }
+            .generate(2000, 9);
+        let run_with = |rho: Rho| {
+            let mut alg = GrowBatch::new(init::first_k(&data, 4), 2000, 16, rho);
+            let mut c = ctx(&data);
+            for _ in 0..12 {
+                alg.round(&mut c);
+            }
+            alg.b
+        };
+        let b_small = run_with(Rho::Finite(1.0));
+        let b_large = run_with(Rho::Finite(1e9));
+        assert!(
+            b_small >= b_large,
+            "rho=1 batch {b_small} < rho=1e9 batch {b_large}"
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! Centroid initialisation.
+//!
+//! The paper's protocol (§4.3) shuffles the training set per seed and
+//! takes the first k datapoints — [`first_k`]. [`uniform`] and
+//! [`kmeanspp`] (Arthur & Vassilvitskii 2007) are provided for the
+//! initialisation discussion in §1/§5 and for the examples.
+
+use crate::data::Data;
+use crate::kmeans::state::Centroids;
+use crate::linalg::dense::DenseMatrix;
+use crate::util::rng::Pcg64;
+
+/// Densify rows `idx` of `data` into a centroid matrix.
+pub fn from_rows(data: &Data, idx: &[usize]) -> Centroids {
+    let d = data.dim();
+    let mut c = DenseMatrix::zeros(idx.len(), d);
+    for (r, &i) in idx.iter().enumerate() {
+        data.write_row_dense(i, c.row_mut(r));
+    }
+    Centroids::from_matrix(c)
+}
+
+/// Paper init: first k rows (the caller shuffles the data per seed).
+pub fn first_k(data: &Data, k: usize) -> Centroids {
+    assert!(k <= data.n(), "k={k} > n={}", data.n());
+    from_rows(data, &(0..k).collect::<Vec<_>>())
+}
+
+/// k distinct uniformly sampled datapoints.
+pub fn uniform(data: &Data, k: usize, rng: &mut Pcg64) -> Centroids {
+    assert!(k <= data.n());
+    let idx = rng.sample_distinct(data.n(), k);
+    from_rows(data, &idx)
+}
+
+/// k-means++ D² seeding. O(n·k) distance computations; requires one full
+/// pass per centroid, which is exactly why the paper notes it is
+/// impractical for mini-batch settings — we provide it for the `lloyd`
+/// baseline and the examples.
+pub fn kmeanspp(data: &Data, k: usize, rng: &mut Pcg64) -> Centroids {
+    assert!(k <= data.n());
+    let n = data.n();
+    let d = data.dim();
+    let mut chosen = Vec::with_capacity(k);
+    chosen.push(rng.below(n));
+    let mut row = vec![0f32; d];
+    data.write_row_dense(chosen[0], &mut row);
+    let mut cnorm = crate::linalg::dense::sq_norm(&row);
+    // d2[i] = distance to nearest chosen centroid so far
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| data.sq_dist_to(i, &row, cnorm) as f64)
+        .collect();
+    while chosen.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // all points coincide with chosen centroids: fall back
+            rng.below(n)
+        } else {
+            let mut t = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                t -= w;
+                if t <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        chosen.push(next);
+        data.write_row_dense(next, &mut row);
+        cnorm = crate::linalg::dense::sq_norm(&row);
+        for i in 0..n {
+            let nd = data.sq_dist_to(i, &row, cnorm) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    from_rows(data, &chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::state::exact_mse;
+
+    #[test]
+    fn first_k_copies_rows() {
+        let data = GaussianMixture::default_spec(2, 5).generate(10, 3);
+        let c = first_k(&data, 3);
+        let mut row = vec![0.0; 5];
+        for j in 0..3 {
+            data.write_row_dense(j, &mut row);
+            assert_eq!(c.c.row(j), &row[..]);
+        }
+        assert_eq!(c.k(), 3);
+    }
+
+    #[test]
+    fn uniform_rows_come_from_data() {
+        let data = GaussianMixture::default_spec(2, 4).generate(30, 1);
+        let mut rng = Pcg64::new(5, 0);
+        let c = uniform(&data, 5, &mut rng);
+        let mut row = vec![0.0; 4];
+        for j in 0..5 {
+            let found = (0..30).any(|i| {
+                data.write_row_dense(i, &mut row);
+                row == c.c.row(j)
+            });
+            assert!(found, "centroid {j} not a datapoint");
+        }
+    }
+
+    #[test]
+    fn kmeanspp_beats_uniform_on_average() {
+        // classic sanity: D² seeding should give a no-worse initial MSE
+        // on a well-separated mixture (averaged over seeds).
+        let spec = GaussianMixture { k: 8, d: 6, center_spread: 30.0, noise: 0.5, weights: vec![] };
+        let data = spec.generate(400, 11);
+        let mut mse_pp = 0.0;
+        let mut mse_u = 0.0;
+        for seed in 0..5 {
+            let mut rng = Pcg64::new(seed, 1);
+            mse_pp += exact_mse(&data, &kmeanspp(&data, 8, &mut rng));
+            let mut rng = Pcg64::new(seed, 2);
+            mse_u += exact_mse(&data, &uniform(&data, 8, &mut rng));
+        }
+        assert!(
+            mse_pp < mse_u * 1.05,
+            "kmeans++ {mse_pp} vs uniform {mse_u}"
+        );
+    }
+
+    #[test]
+    fn kmeanspp_handles_duplicate_points() {
+        // all points identical: D² mass is zero after the first pick
+        let m = crate::linalg::dense::DenseMatrix::from_vec(
+            6,
+            2,
+            vec![1.0, 2.0].repeat(6),
+        );
+        let data = Data::dense(m);
+        let mut rng = Pcg64::new(0, 0);
+        let c = kmeanspp(&data, 3, &mut rng);
+        assert_eq!(c.k(), 3);
+        for j in 0..3 {
+            assert_eq!(c.c.row(j), &[1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_larger_than_n_panics() {
+        let data = GaussianMixture::default_spec(2, 2).generate(3, 0);
+        first_k(&data, 10);
+    }
+}

@@ -1,0 +1,169 @@
+//! Run metrics: per-round records and the validation-MSE protocol.
+//!
+//! Following §4.3, validation MSE is computed at regular *work-time*
+//! intervals and its cost is excluded from reported runtimes (the
+//! driver scores off-clock via `WorkClock::off_clock`).
+
+use crate::coordinator::progress::Table;
+
+/// One round of one run.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// cumulative work seconds when the round finished
+    pub t_work: f64,
+    /// active batch size (N for full-batch algorithms)
+    pub batch: usize,
+    /// point↔centroid distance computations this round
+    pub dist_calcs: u64,
+    /// bound tests that eliminated a distance computation
+    pub bound_skips: u64,
+    /// assignments that changed this round
+    pub changed: u64,
+    /// validation MSE, when scored this round
+    pub val_mse: Option<f64>,
+    /// running training-batch MSE proxy (Σsse/Σv), free from the stats
+    pub train_mse: f64,
+}
+
+/// A full run trace plus its outcome summary.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub algo: String,
+    pub dataset: String,
+    pub seed: u64,
+    pub records: Vec<RoundRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    /// Last validation MSE seen (the experiment's headline number).
+    pub fn final_val_mse(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.val_mse)
+    }
+
+    /// Best (lowest) validation MSE over the run.
+    pub fn best_val_mse(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.val_mse)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Total distance computations.
+    pub fn total_dist_calcs(&self) -> u64 {
+        self.records.iter().map(|r| r.dist_calcs).sum()
+    }
+
+    /// The (t_work, val_mse) series for plotting, carrying forward the
+    /// most recent score.
+    pub fn mse_series(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.val_mse.map(|m| (r.t_work, m)))
+            .collect()
+    }
+
+    /// CSV rows in the layout the experiment harnesses emit.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "algo", "dataset", "seed", "round", "t_work", "batch",
+            "dist_calcs", "bound_skips", "changed", "val_mse", "train_mse",
+        ]);
+        for r in &self.records {
+            t.push(vec![
+                self.algo.clone(),
+                self.dataset.clone(),
+                self.seed.to_string(),
+                r.round.to_string(),
+                format!("{:.6}", r.t_work),
+                r.batch.to_string(),
+                r.dist_calcs.to_string(),
+                r.bound_skips.to_string(),
+                r.changed.to_string(),
+                r.val_mse.map(|m| format!("{m:.8e}")).unwrap_or_default(),
+                format!("{:.8e}", r.train_mse),
+            ]);
+        }
+        t
+    }
+}
+
+/// Interpolate a trace's validation MSE onto a common time grid
+/// (step-function carry-forward), for averaging curves across seeds as
+/// Figure 1 does.
+pub fn mse_on_grid(series: &[(f64, f64)], grid: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(grid.len());
+    for &t in grid {
+        let mut last = f64::NAN;
+        for &(ts, m) in series {
+            if ts <= t {
+                last = m;
+            } else {
+                break;
+            }
+        }
+        out.push(last);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, t: f64, mse: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            t_work: t,
+            batch: 100,
+            dist_calcs: 10,
+            bound_skips: 5,
+            changed: 2,
+            val_mse: mse,
+            train_mse: 1.0,
+        }
+    }
+
+    #[test]
+    fn final_and_best_mse() {
+        let mut tr = Trace::default();
+        tr.push(rec(0, 0.1, Some(5.0)));
+        tr.push(rec(1, 0.2, None));
+        tr.push(rec(2, 0.3, Some(3.0)));
+        tr.push(rec(3, 0.4, Some(4.0)));
+        assert_eq!(tr.final_val_mse(), Some(4.0));
+        assert_eq!(tr.best_val_mse(), Some(3.0));
+        assert_eq!(tr.total_dist_calcs(), 40);
+    }
+
+    #[test]
+    fn grid_interpolation_carries_forward() {
+        let series = vec![(0.1, 5.0), (0.3, 3.0)];
+        let grid = vec![0.0, 0.1, 0.2, 0.3, 1.0];
+        let vals = mse_on_grid(&series, &grid);
+        assert!(vals[0].is_nan());
+        assert_eq!(vals[1], 5.0);
+        assert_eq!(vals[2], 5.0);
+        assert_eq!(vals[3], 3.0);
+        assert_eq!(vals[4], 3.0);
+    }
+
+    #[test]
+    fn csv_has_all_columns() {
+        let mut tr = Trace {
+            algo: "tb-inf".into(),
+            dataset: "x".into(),
+            seed: 3,
+            records: vec![],
+        };
+        tr.push(rec(0, 0.5, Some(1.25)));
+        let csv = tr.to_table().to_csv();
+        assert!(csv.starts_with("algo,dataset,seed,round"));
+        assert!(csv.contains("tb-inf"));
+        assert!(csv.contains("1.25"));
+    }
+}

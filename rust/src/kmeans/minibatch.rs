@@ -1,0 +1,243 @@
+//! Sculley's Mini-Batch k-means (`mb`), paper §2.1.
+//!
+//! Two *identical-output* formulations are provided because Table 1 of
+//! the paper is about exactly this implementation difference
+//! (Supp. A.1):
+//!
+//! * [`Formulation::Alg1`] — the WWW'10 original: per-sample convex
+//!   update `C(a) ← (1−1/v)·C(a) + x/v`. Each step rescales a (dense!)
+//!   centroid: O(d) per sample regardless of datapoint sparsity.
+//! * [`Formulation::Alg8`] — the cumulative-sum reformulation: maintain
+//!   `S(j), v(j)`, set `C(j) = S(j)/v(j)` once per round — k centroid
+//!   scalings instead of b, decisive when datapoints are much sparser
+//!   than centroids (φ ≫ 1).
+//!
+//! Sampling follows the paper's own implementation note (§4 footnote):
+//! cycle through the data with per-epoch reshuffling rather than
+//! uniform sampling.
+
+use crate::kmeans::assign::Sel;
+use crate::kmeans::state::{Assignments, Centroids, SuffStats};
+use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Formulation {
+    Alg1,
+    Alg8,
+}
+
+pub struct MiniBatch {
+    pub(crate) cent: Centroids,
+    pub(crate) stats: SuffStats,
+    /// previous labels, for `changed` accounting only (mb never corrects
+    /// old contributions — that is mb-f's fix).
+    assign: Assignments,
+    order: Vec<usize>,
+    cursor: usize,
+    b: usize,
+    formulation: Formulation,
+}
+
+impl MiniBatch {
+    pub fn new(cent: Centroids, n: usize, b: usize, formulation: Formulation) -> Self {
+        let k = cent.k();
+        let d = cent.d();
+        Self {
+            cent,
+            stats: SuffStats::zeros(k, d),
+            assign: Assignments::new(n),
+            order: (0..n).collect(),
+            cursor: 0,
+            b: b.min(n),
+            formulation,
+        }
+    }
+
+    /// Next `b` indices, cycling with reshuffle at epoch boundaries.
+    fn next_batch(&mut self, rng: &mut crate::util::rng::Pcg64) -> Vec<usize> {
+        let n = self.order.len();
+        let mut out = Vec::with_capacity(self.b);
+        for _ in 0..self.b {
+            if self.cursor == 0 {
+                rng.shuffle(&mut self.order);
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor = (self.cursor + 1) % n;
+        }
+        out
+    }
+}
+
+impl Clusterer for MiniBatch {
+    fn round(&mut self, ctx: &mut Ctx) -> RoundInfo {
+        let k = self.cent.k();
+        let idx = self.next_batch(&mut ctx.rng);
+        let mut lbl = vec![0u32; idx.len()];
+        let mut d2 = vec![0f32; idx.len()];
+        // assignment step (start-of-round centroids, both formulations)
+        let calcs = ctx.engine.assign(
+            ctx.data,
+            Sel::List(&idx),
+            &self.cent,
+            &ctx.pool,
+            &mut lbl,
+            &mut d2,
+        );
+        let mut changed = 0u64;
+        for (t, &i) in idx.iter().enumerate() {
+            if self.assign.seen(i) && self.assign.label[i] != lbl[t] {
+                changed += 1;
+            }
+            self.assign.label[i] = lbl[t];
+            self.assign.dist2[i] = d2[t];
+        }
+        match self.formulation {
+            Formulation::Alg8 => {
+                // cumulative S/v, one centroid scaling per cluster
+                let delta = crate::kmeans::par_add_stats(
+                    ctx.data,
+                    Sel::List(&idx),
+                    &lbl,
+                    &d2,
+                    k,
+                    &ctx.pool,
+                );
+                crate::coordinator::merge::Mergeable::merge(
+                    &mut self.stats,
+                    delta,
+                );
+                self.stats.update_centroids(&mut self.cent);
+            }
+            Formulation::Alg1 => {
+                // per-sample convex updates (inherently sequential);
+                // v/S still tracked so both formulations expose the
+                // same statistics to tests.
+                let d = self.cent.d();
+                let mut xrow = vec![0f32; d];
+                let old_c = self.cent.c.clone();
+                for (t, &i) in idx.iter().enumerate() {
+                    let j = lbl[t] as usize;
+                    self.stats.add_point(ctx.data, i, lbl[t], d2[t]);
+                    let v = self.stats.v[j];
+                    ctx.data.write_row_dense(i, &mut xrow);
+                    let row = self.cent.c.row_mut(j);
+                    let eta = (1.0 / v) as f32;
+                    for tcol in 0..d {
+                        row[tcol] += eta * (xrow[tcol] - row[tcol]);
+                    }
+                }
+                // refresh cached norms and displacements once per round
+                for j in 0..k {
+                    self.cent.norms[j] =
+                        crate::linalg::dense::sq_norm(self.cent.c.row(j));
+                    self.cent.p[j] = crate::linalg::dense::sq_dist(
+                        old_c.row(j),
+                        self.cent.c.row(j),
+                    )
+                    .sqrt();
+                }
+            }
+        }
+        let train_mse =
+            d2.iter().map(|&x| x as f64).sum::<f64>() / idx.len().max(1) as f64;
+        RoundInfo {
+            dist_calcs: calcs,
+            bound_skips: 0,
+            changed,
+            batch: self.b,
+            train_mse,
+        }
+    }
+
+    fn centroids(&self) -> &Centroids {
+        &self.cent
+    }
+
+    fn name(&self) -> String {
+        "mb".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::assign::NativeEngine;
+    use crate::kmeans::init;
+    use crate::util::rng::Pcg64;
+
+    fn ctx(data: &crate::data::Data) -> Ctx<'_> {
+        Ctx {
+            data,
+            engine: &NativeEngine,
+            pool: crate::coordinator::Pool::new(2),
+            rng: Pcg64::new(0, 0),
+        }
+    }
+
+    #[test]
+    fn formulations_produce_same_clustering() {
+        // Supp. A.1: Alg 1 and Alg 8 perform the exact same clustering
+        // (up to floating-point noise).
+        let data = GaussianMixture::default_spec(3, 6).generate(400, 4);
+        let mut a = MiniBatch::new(init::first_k(&data, 3), 400, 64, Formulation::Alg1);
+        let mut b = MiniBatch::new(init::first_k(&data, 3), 400, 64, Formulation::Alg8);
+        let mut ca = ctx(&data);
+        let mut cb = ctx(&data);
+        for _ in 0..8 {
+            a.round(&mut ca);
+            b.round(&mut cb);
+        }
+        for j in 0..3 {
+            for t in 0..6 {
+                let x = a.cent.c.row(j)[t];
+                let y = b.cent.c.row(j)[t];
+                assert!(
+                    (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                    "centroid {j},{t}: alg1={x} alg8={y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn centroid_is_mean_of_all_ever_assigned() {
+        let data = GaussianMixture::default_spec(2, 4).generate(100, 1);
+        let mut mb =
+            MiniBatch::new(init::first_k(&data, 2), 100, 32, Formulation::Alg8);
+        let mut c = ctx(&data);
+        for _ in 0..5 {
+            mb.round(&mut c);
+        }
+        // C(j) must equal S(j)/v(j) even after repeats (contamination
+        // retained — that's mb's defining behaviour)
+        for j in 0..2 {
+            if mb.stats.v[j] > 0.0 {
+                for t in 0..4 {
+                    let expect = mb.stats.s_row(j)[t] / mb.stats.v[j];
+                    assert!(
+                        (mb.cent.c.row(j)[t] as f64 - expect).abs() < 1e-5,
+                        "j={j} t={t}"
+                    );
+                }
+            }
+        }
+        // 5 rounds × 32 > 100: some points must have been visited twice,
+        // so cumulative v exceeds distinct count
+        let total_v: f64 = mb.stats.v.iter().sum();
+        assert_eq!(total_v, 5.0 * 32.0);
+    }
+
+    #[test]
+    fn cycling_visits_everything_before_repeats() {
+        let data = GaussianMixture::default_spec(2, 2).generate(50, 2);
+        let mut mb =
+            MiniBatch::new(init::first_k(&data, 2), 50, 25, Formulation::Alg8);
+        let mut rng = Pcg64::new(9, 9);
+        let b1 = mb.next_batch(&mut rng);
+        let b2 = mb.next_batch(&mut rng);
+        let all: std::collections::HashSet<usize> =
+            b1.iter().chain(b2.iter()).cloned().collect();
+        assert_eq!(all.len(), 50, "one epoch must cover the dataset");
+    }
+}

@@ -1,0 +1,195 @@
+//! `mb-f` — Mini-Batch with contaminating assignments removed (paper
+//! §3.1, Algorithm 4).
+//!
+//! When a point is drawn again, its *previous* contribution is first
+//! subtracted (`v(a) ← v(a)−1, S(a) ← S(a)−x`), so each point
+//! contributes to exactly one centroid: the one it was most recently
+//! assigned to. After every round `C(j)` is the exact mean of the
+//! current assignments of all points seen so far — the invariant the
+//! integration tests check, and the reason mb-f converges to genuine
+//! local minima while mb drags early noise forever.
+
+use crate::kmeans::assign::Sel;
+use crate::kmeans::state::{Assignments, Centroids, SuffStats};
+use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+
+pub struct MiniBatchFixed {
+    pub(crate) cent: Centroids,
+    pub(crate) stats: SuffStats,
+    pub(crate) assign: Assignments,
+    order: Vec<usize>,
+    cursor: usize,
+    b: usize,
+}
+
+impl MiniBatchFixed {
+    pub fn new(cent: Centroids, n: usize, b: usize) -> Self {
+        let k = cent.k();
+        let d = cent.d();
+        Self {
+            cent,
+            stats: SuffStats::zeros(k, d),
+            assign: Assignments::new(n),
+            order: (0..n).collect(),
+            cursor: 0,
+            b: b.min(n),
+        }
+    }
+
+    fn next_batch(&mut self, rng: &mut crate::util::rng::Pcg64) -> Vec<usize> {
+        let n = self.order.len();
+        let mut out = Vec::with_capacity(self.b);
+        for _ in 0..self.b {
+            if self.cursor == 0 {
+                rng.shuffle(&mut self.order);
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor = (self.cursor + 1) % n;
+        }
+        out
+    }
+
+    /// Test hook: exact-mean invariant vs a from-scratch rebuild.
+    #[cfg(test)]
+    pub fn stats_drift(&self, data: &crate::data::Data) -> f64 {
+        let idx: Vec<usize> =
+            (0..self.assign.label.len()).filter(|&i| self.assign.seen(i)).collect();
+        let fresh = SuffStats::rebuild(
+            data,
+            self.cent.k(),
+            idx.into_iter(),
+            &self.assign.label,
+            &self.assign.dist2,
+        );
+        self.stats.max_abs_diff(&fresh)
+    }
+}
+
+impl Clusterer for MiniBatchFixed {
+    fn round(&mut self, ctx: &mut Ctx) -> RoundInfo {
+        let idx = self.next_batch(&mut ctx.rng);
+        let mut lbl = vec![0u32; idx.len()];
+        let mut d2 = vec![0f32; idx.len()];
+        let calcs = ctx.engine.assign(
+            ctx.data,
+            Sel::List(&idx),
+            &self.cent,
+            &ctx.pool,
+            &mut lbl,
+            &mut d2,
+        );
+        // decontaminate + re-add (serial: touches shared S rows, but a
+        // batch may contain the same index twice so per-point ordering
+        // matters; O(b·d) worst case ≈ the assignment cost anyway)
+        let mut changed = 0u64;
+        for (t, &i) in idx.iter().enumerate() {
+            if self.assign.seen(i) {
+                // remove the expired assignment (Alg. 4 lines 4–6)
+                self.stats.remove_point(
+                    ctx.data,
+                    i,
+                    self.assign.label[i],
+                    self.assign.dist2[i],
+                );
+                if self.assign.label[i] != lbl[t] {
+                    changed += 1;
+                }
+            }
+            self.stats.add_point(ctx.data, i, lbl[t], d2[t]);
+            self.assign.label[i] = lbl[t];
+            self.assign.dist2[i] = d2[t];
+        }
+        self.stats.update_centroids(&mut self.cent);
+        let train_mse = crate::kmeans::state::batch_mse(&self.stats);
+        RoundInfo {
+            dist_calcs: calcs,
+            bound_skips: 0,
+            changed,
+            batch: self.b,
+            train_mse,
+        }
+    }
+
+    fn centroids(&self) -> &Centroids {
+        &self.cent
+    }
+
+    fn name(&self) -> String {
+        "mb-f".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::assign::NativeEngine;
+    use crate::kmeans::init;
+    use crate::util::rng::Pcg64;
+
+    fn ctx(data: &crate::data::Data) -> Ctx<'_> {
+        Ctx {
+            data,
+            engine: &NativeEngine,
+            pool: crate::coordinator::Pool::new(2),
+            rng: Pcg64::new(1, 1),
+        }
+    }
+
+    #[test]
+    fn centroids_are_exact_means_of_current_assignments() {
+        let data = GaussianMixture::default_spec(3, 5).generate(120, 6);
+        let mut alg = MiniBatchFixed::new(init::first_k(&data, 3), 120, 48);
+        let mut c = ctx(&data);
+        for round in 0..10 {
+            alg.round(&mut c);
+            // the decontamination invariant, every round
+            let drift = alg.stats_drift(&data);
+            assert!(drift < 1e-6, "round {round}: S/v drift {drift}");
+            // each seen point counted exactly once
+            let seen =
+                (0..120).filter(|&i| alg.assign.seen(i)).count() as f64;
+            let total_v: f64 = alg.stats.v.iter().sum();
+            assert!((total_v - seen).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn duplicate_index_within_batch_handled() {
+        // force b > n/2 so epoch wrap duplicates indices within a round
+        let data = GaussianMixture::default_spec(2, 3).generate(10, 3);
+        let mut alg = MiniBatchFixed::new(init::first_k(&data, 2), 10, 8);
+        let mut c = ctx(&data);
+        for _ in 0..6 {
+            alg.round(&mut c);
+            let total_v: f64 = alg.stats.v.iter().sum();
+            let seen = (0..10).filter(|&i| alg.assign.seen(i)).count() as f64;
+            assert!((total_v - seen).abs() < 1e-9);
+            assert!(alg.stats.v.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn mbf_not_worse_than_mb_on_redundant_data() {
+        // After several epochs over redundant data, mb-f's training MSE
+        // should be ≤ mb's (decontamination helps; paper Fig. 1).
+        use crate::kmeans::minibatch::{Formulation, MiniBatch};
+        let data = GaussianMixture { k: 4, d: 6, center_spread: 8.0, noise: 1.0, weights: vec![] }
+            .generate(300, 12);
+        let rounds = 30;
+        let mut mbf = MiniBatchFixed::new(init::first_k(&data, 4), 300, 60);
+        let mut mb = MiniBatch::new(init::first_k(&data, 4), 300, 60, Formulation::Alg8);
+        let mut c1 = ctx(&data);
+        let mut c2 = ctx(&data);
+        for _ in 0..rounds {
+            mbf.round(&mut c1);
+            mb.round(&mut c2);
+        }
+        let m_f = crate::kmeans::state::exact_mse(&data, &mbf.cent);
+        let m_b = crate::kmeans::state::exact_mse(&data, &mb.cent);
+        assert!(
+            m_f <= m_b * 1.05,
+            "mb-f {m_f} should not lag mb {m_b} after {rounds} rounds"
+        );
+    }
+}

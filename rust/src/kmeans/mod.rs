@@ -1,0 +1,350 @@
+//! The k-means algorithm family (paper §2–3) and the unified run driver.
+//!
+//! | module             | algorithm | paper |
+//! |--------------------|-----------|-------|
+//! | [`lloyd`]           | exact Lloyd | §1 |
+//! | [`elkan`]           | Lloyd + triangle-inequality bounds | §2.2 |
+//! | [`sgd`]             | online k-means (b = 1) | Bottou–Bengio |
+//! | [`minibatch`]       | Sculley mini-batch `mb` (Alg. 1 / 8) | §2.1, A.1 |
+//! | [`minibatch_fixed`] | decontaminated `mb-f` (Alg. 4) | §3.1 |
+//! | [`growbatch`]       | nested grow-batch `gb-ρ` (Alg. 7 / 10) | §3.2–3.3 |
+//! | [`turbobatch`]      | turbocharged `tb-ρ` (Alg. 9 / 11) | §3.3.3 |
+//!
+//! All algorithms implement [`Clusterer`] — one `round()` per paper
+//! round — and are executed by [`run`], which owns the work clock, the
+//! validation-MSE protocol and trace recording.
+
+pub mod assign;
+pub mod bounds;
+pub mod controller;
+pub mod elkan;
+pub mod growbatch;
+pub mod init;
+pub mod lloyd;
+pub mod metrics;
+pub mod minibatch;
+pub mod minibatch_fixed;
+pub mod sgd;
+pub mod state;
+pub mod turbobatch;
+
+use crate::config::{Algo, Engine, RunConfig};
+use crate::coordinator::merge::fold;
+use crate::coordinator::shard::{chunk_ranges, Pool};
+use crate::data::{shuffle, Data};
+use crate::kmeans::assign::{AssignEngine, NativeEngine, Sel};
+use crate::kmeans::metrics::{RoundRecord, Trace};
+use crate::kmeans::state::{Centroids, SuffStats};
+use crate::util::rng::Pcg64;
+use crate::util::timer::WorkClock;
+
+/// Per-round execution context handed to algorithms.
+pub struct Ctx<'a> {
+    pub data: &'a Data,
+    pub engine: &'a dyn AssignEngine,
+    pub pool: Pool,
+    pub rng: Pcg64,
+}
+
+/// What one round did (for the trace).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundInfo {
+    pub dist_calcs: u64,
+    pub bound_skips: u64,
+    pub changed: u64,
+    pub batch: usize,
+    pub train_mse: f64,
+}
+
+/// One paper-round of an algorithm.
+pub trait Clusterer {
+    fn round(&mut self, ctx: &mut Ctx) -> RoundInfo;
+    fn centroids(&self) -> &Centroids;
+    /// Reached a fixed point (full-batch algorithms only).
+    fn converged(&self) -> bool {
+        false
+    }
+    fn name(&self) -> String;
+}
+
+/// Build per-shard `SuffStats` deltas for newly assigned points
+/// (`add_point`) in parallel and fold them.
+pub fn par_add_stats(
+    data: &Data,
+    sel: Sel,
+    lbl: &[u32],
+    d2: &[f32],
+    k: usize,
+    pool: &Pool,
+) -> SuffStats {
+    let n = sel.len();
+    let ranges = chunk_ranges(n, pool.threads, 1024);
+    let parts = pool.run_chunks(n, 1024, |ci, _| {
+        let r = &ranges[ci];
+        let mut delta = SuffStats::zeros(k, data.dim());
+        for t in r.clone() {
+            delta.add_point(data, sel.nth(t), lbl[t], d2[t]);
+        }
+        delta
+    });
+    fold(parts).unwrap_or_else(|| SuffStats::zeros(k, data.dim()))
+}
+
+/// Parallel reassignment deltas (`reassign_point` semantics) for seen
+/// points; returns (delta, changed count).
+pub fn par_reassign_stats(
+    data: &Data,
+    sel: Sel,
+    old_lbl: &[u32],
+    new_lbl: &[u32],
+    new_d2: &[f32],
+    k: usize,
+    pool: &Pool,
+) -> (SuffStats, u64) {
+    let n = sel.len();
+    let ranges = chunk_ranges(n, pool.threads, 1024);
+    let parts = pool.run_chunks(n, 1024, |ci, _| {
+        let r = &ranges[ci];
+        let mut delta = SuffStats::zeros(k, data.dim());
+        let mut changed = 0u64;
+        for t in r.clone() {
+            let i = sel.nth(t);
+            delta.reassign_point(data, i, old_lbl[t], new_lbl[t], new_d2[t]);
+            changed += u64::from(old_lbl[t] != new_lbl[t]);
+        }
+        (delta, changed)
+    });
+    let mut total = SuffStats::zeros(k, data.dim());
+    let mut changed = 0;
+    for (d, c) in parts {
+        crate::coordinator::merge::Mergeable::merge(&mut total, d);
+        changed += c;
+    }
+    (total, changed)
+}
+
+/// Outcome of a [`run`].
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub trace: Trace,
+    /// Final validation MSE (falls back to the training proxy when no
+    /// validation set was given).
+    pub final_mse: f64,
+    pub centroids: Centroids,
+    pub rounds: usize,
+    /// Total work seconds (validation excluded, paper protocol).
+    pub work_secs: f64,
+}
+
+/// Instantiate the configured algorithm over (pre-shuffled) data.
+pub fn make_clusterer(
+    data: &Data,
+    cfg: &RunConfig,
+) -> Box<dyn Clusterer> {
+    let cent = match cfg.init {
+        crate::config::InitScheme::FirstK => init::first_k(data, cfg.k),
+        crate::config::InitScheme::Uniform => {
+            let mut rng = Pcg64::new(cfg.seed, 0x1217).derive("init-uniform");
+            init::uniform(data, cfg.k, &mut rng)
+        }
+        crate::config::InitScheme::KmeansPPBatch => {
+            // D² seeding over the initial batch only — needs no full
+            // pass, so it is mini-batch compatible (paper §5)
+            let b = cfg.b0.min(data.n()).max(cfg.k);
+            let head = data.slice(0, b);
+            let mut rng = Pcg64::new(cfg.seed, 0x1217).derive("init-pp");
+            init::kmeanspp(&head, cfg.k, &mut rng)
+        }
+    };
+    let n = data.n();
+    let b0 = cfg.b0.min(n).max(1);
+    match cfg.algo {
+        Algo::Lloyd => Box::new(lloyd::Lloyd::new(cent, n)),
+        Algo::Elkan => Box::new(elkan::Elkan::new(cent, n)),
+        Algo::Sgd => Box::new(sgd::Sgd::new(cent, b0)),
+        Algo::Mb => Box::new(minibatch::MiniBatch::new(
+            cent,
+            n,
+            b0,
+            minibatch::Formulation::Alg8,
+        )),
+        Algo::MbF => Box::new(minibatch_fixed::MiniBatchFixed::new(cent, n, b0)),
+        Algo::GbRho => Box::new(growbatch::GrowBatch::new(cent, n, b0, cfg.rho)),
+        Algo::TbRho => Box::new(turbobatch::TurboBatch::new(
+            cent,
+            n,
+            b0,
+            cfg.rho,
+            cfg.engine == Engine::Xla,
+        )),
+    }
+}
+
+/// Run one configured clustering job end to end: shuffle per seed,
+/// initialise with the first k points (paper §4.3 protocol), iterate
+/// rounds under the work clock, score validation MSE off-clock.
+pub fn run(
+    train: &Data,
+    val: Option<&Data>,
+    cfg: &RunConfig,
+) -> anyhow::Result<RunOutcome> {
+    let data = shuffle::shuffled(train, cfg.seed);
+    let engine: Box<dyn AssignEngine> = match cfg.engine {
+        Engine::Native => Box::new(NativeEngine),
+        Engine::Xla => crate::runtime::make_engine(&cfg.artifacts_dir)?,
+    };
+    run_prepared(&data, val, cfg, engine.as_ref())
+}
+
+/// [`run`] over already-shuffled data with a caller-supplied engine
+/// (used by experiments to share one PJRT client across runs).
+pub fn run_prepared(
+    data: &Data,
+    val: Option<&Data>,
+    cfg: &RunConfig,
+    engine: &dyn AssignEngine,
+) -> anyhow::Result<RunOutcome> {
+    anyhow::ensure!(cfg.k >= 1 && cfg.k <= data.n(), "bad k={}", cfg.k);
+    let pool = Pool::new(cfg.threads);
+    let mut alg = make_clusterer(data, cfg);
+    let mut ctx = Ctx {
+        data,
+        engine,
+        pool: pool.clone(),
+        rng: Pcg64::new(cfg.seed, 0xA160).derive(&cfg.label()),
+    };
+    let mut clock = WorkClock::new();
+    let mut trace = Trace {
+        algo: cfg.label(),
+        dataset: String::new(),
+        seed: cfg.seed,
+        records: vec![],
+    };
+    let mut last_eval = -f64::INFINITY;
+    let mut rounds = 0usize;
+    loop {
+        clock.start();
+        let info = alg.round(&mut ctx);
+        clock.pause();
+        let t = clock.elapsed_secs();
+        let stop = t >= cfg.max_seconds
+            || rounds + 1 >= cfg.max_rounds
+            || (cfg.stop_on_convergence && alg.converged());
+        let mut val_mse = None;
+        if let Some(v) = val {
+            if t - last_eval >= cfg.eval_every_secs || stop || rounds == 0 {
+                let cent = alg.centroids();
+                val_mse = Some(clock.off_clock(|| {
+                    assign::validation_mse(v, cent, engine, &pool)
+                }));
+                last_eval = t;
+            }
+        }
+        trace.push(RoundRecord {
+            round: rounds,
+            t_work: t,
+            batch: info.batch,
+            dist_calcs: info.dist_calcs,
+            bound_skips: info.bound_skips,
+            changed: info.changed,
+            val_mse,
+            train_mse: info.train_mse,
+        });
+        rounds += 1;
+        if stop {
+            break;
+        }
+    }
+    let final_mse = trace
+        .final_val_mse()
+        .unwrap_or_else(|| trace.records.last().map(|r| r.train_mse).unwrap_or(f64::NAN));
+    let centroids = alg.centroids().clone();
+    Ok(RunOutcome {
+        trace,
+        final_mse,
+        centroids,
+        rounds,
+        work_secs: clock.elapsed_secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Rho;
+    use crate::data::gaussian::GaussianMixture;
+
+    #[test]
+    fn par_stats_match_serial() {
+        let data = GaussianMixture::default_spec(4, 6).generate(500, 1);
+        let cent = init::first_k(&data, 4);
+        let eng = NativeEngine;
+        let pool = Pool::new(4);
+        let mut lbl = vec![0u32; 500];
+        let mut d2 = vec![0f32; 500];
+        eng.assign(&data, Sel::Range(0, 500), &cent, &pool, &mut lbl, &mut d2);
+        let par = par_add_stats(&data, Sel::Range(0, 500), &lbl, &d2, 4, &pool);
+        let ser = SuffStats::rebuild(&data, 4, 0..500, &lbl, &d2);
+        assert!(par.max_abs_diff(&ser) < 1e-9);
+    }
+
+    #[test]
+    fn run_all_algorithms_reduce_mse() {
+        let ds = GaussianMixture::default_spec(5, 8).dataset(2000, 400, 9);
+        for algo in [
+            Algo::Lloyd,
+            Algo::Elkan,
+            Algo::Sgd,
+            Algo::Mb,
+            Algo::MbF,
+            Algo::GbRho,
+            Algo::TbRho,
+        ] {
+            let cfg = RunConfig {
+                algo,
+                k: 5,
+                b0: 128,
+                rho: Rho::Infinite,
+                max_seconds: 2.0,
+                max_rounds: 60,
+                seed: 1,
+                threads: 2,
+                ..Default::default()
+            };
+            let out = run(&ds.train, Some(&ds.val), &cfg).unwrap();
+            let first = out.trace.records[0].val_mse.unwrap();
+            let last = out.final_mse;
+            // validation MSE is not guaranteed monotone; after the
+            // budget it must not be meaningfully worse
+            assert!(
+                last <= first * 1.10,
+                "{algo:?}: mse went {first} -> {last}"
+            );
+            assert!(out.rounds >= 1);
+        }
+    }
+
+    #[test]
+    fn run_is_deterministic_per_seed() {
+        let ds = GaussianMixture::default_spec(3, 4).dataset(600, 100, 2);
+        let cfg = RunConfig {
+            algo: Algo::TbRho,
+            k: 3,
+            b0: 64,
+            max_rounds: 3,
+            max_seconds: 30.0,
+            seed: 7,
+            threads: 4,
+            eval_every_secs: 0.0,
+            ..Default::default()
+        };
+        let a = run(&ds.train, Some(&ds.val), &cfg).unwrap();
+        let b = run(&ds.train, Some(&ds.val), &cfg).unwrap();
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.centroids.c.data, b.centroids.c.data);
+        // different seed ⇒ different trajectory
+        let cfg2 = RunConfig { seed: 8, ..cfg };
+        let c = run(&ds.train, Some(&ds.val), &cfg2).unwrap();
+        assert_ne!(a.centroids.c.data, c.centroids.c.data);
+    }
+}

@@ -1,0 +1,149 @@
+//! Online (stochastic gradient descent) k-means — Bottou & Bengio 1995.
+//!
+//! `mb` with batch size 1: each point immediately pulls its nearest
+//! centroid with learning rate `1/v(j)`, which keeps every centroid the
+//! mean of all points ever assigned to it. One [`Clusterer::round`]
+//! processes `b0` points so traces have comparable granularity to the
+//! batch algorithms, but centroids update after *every* point (that is
+//! what distinguishes sgd from mb).
+
+use crate::kmeans::state::{Assignments, Centroids, SuffStats};
+use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+use crate::linalg::dense;
+
+pub struct Sgd {
+    pub(crate) cent: Centroids,
+    pub(crate) stats: SuffStats,
+    pub(crate) assign: Assignments,
+    points_per_round: usize,
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl Sgd {
+    pub fn new(cent: Centroids, points_per_round: usize) -> Self {
+        let k = cent.k();
+        let d = cent.d();
+        Self {
+            cent,
+            stats: SuffStats::zeros(k, d),
+            assign: Assignments::new(0),
+            points_per_round: points_per_round.max(1),
+            order: vec![],
+            cursor: 0,
+        }
+    }
+}
+
+impl Clusterer for Sgd {
+    fn round(&mut self, ctx: &mut Ctx) -> RoundInfo {
+        let n = ctx.data.n();
+        if self.order.len() != n {
+            self.order = (0..n).collect();
+            self.assign = Assignments::new(n);
+            self.cursor = 0;
+        }
+        let d = self.cent.d();
+        let k = self.cent.k();
+        let mut xrow = vec![0f32; d];
+        let mut sum_d2 = 0f64;
+        let mut changed = 0u64;
+        let steps = self.points_per_round.min(n);
+        for _ in 0..steps {
+            if self.cursor == 0 {
+                ctx.rng.shuffle(&mut self.order);
+            }
+            let i = self.order[self.cursor];
+            self.cursor = (self.cursor + 1) % n;
+            // single-point assignment against *current* centroids
+            let (j, d2) =
+                ctx.data.nearest(i, &self.cent.c, &self.cent.norms);
+            if self.assign.seen(i) && self.assign.label[i] != j {
+                changed += 1;
+            }
+            self.assign.label[i] = j;
+            self.assign.dist2[i] = d2;
+            sum_d2 += d2 as f64;
+            self.stats.add_point(ctx.data, i, j, d2);
+            // online convex pull: c ← c + (x − c)/v
+            let v = self.stats.v[j as usize];
+            ctx.data.write_row_dense(i, &mut xrow);
+            let row = self.cent.c.row_mut(j as usize);
+            let eta = (1.0 / v) as f32;
+            for t in 0..d {
+                row[t] += eta * (xrow[t] - row[t]);
+            }
+            self.cent.norms[j as usize] =
+                dense::sq_norm(self.cent.c.row(j as usize));
+        }
+        RoundInfo {
+            dist_calcs: (steps * k) as u64,
+            bound_skips: 0,
+            changed,
+            batch: 1,
+            train_mse: sum_d2 / steps.max(1) as f64,
+        }
+    }
+
+    fn centroids(&self) -> &Centroids {
+        &self.cent
+    }
+
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::assign::NativeEngine;
+    use crate::kmeans::init;
+    use crate::util::rng::Pcg64;
+
+    fn ctx(data: &crate::data::Data) -> Ctx<'_> {
+        Ctx {
+            data,
+            engine: &NativeEngine,
+            pool: crate::coordinator::Pool::new(1),
+            rng: Pcg64::new(2, 2),
+        }
+    }
+
+    #[test]
+    fn centroid_equals_running_mean() {
+        let data = GaussianMixture::default_spec(3, 4).generate(200, 3);
+        let mut alg = Sgd::new(init::first_k(&data, 3), 100);
+        let mut c = ctx(&data);
+        alg.round(&mut c);
+        alg.round(&mut c);
+        // after the online updates, C(j) must equal S(j)/v(j): the
+        // 1/v learning rate *is* the running mean
+        for j in 0..3 {
+            if alg.stats.v[j] > 0.0 {
+                for t in 0..4 {
+                    let mean = alg.stats.s_row(j)[t] / alg.stats.v[j];
+                    let got = alg.cent.c.row(j)[t] as f64;
+                    assert!(
+                        (got - mean).abs() < 1e-4 * (1.0 + mean.abs()),
+                        "j={j},t={t}: {got} vs {mean}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn improves_over_rounds() {
+        let data = GaussianMixture::default_spec(4, 8).generate(500, 1);
+        let mut alg = Sgd::new(init::first_k(&data, 4), 250);
+        let mut c = ctx(&data);
+        let before = crate::kmeans::state::exact_mse(&data, &alg.cent);
+        for _ in 0..8 {
+            alg.round(&mut c);
+        }
+        let after = crate::kmeans::state::exact_mse(&data, &alg.cent);
+        assert!(after < before, "{before} -> {after}");
+    }
+}

@@ -1,0 +1,410 @@
+//! Shared clustering state: centroids and sufficient statistics.
+//!
+//! The nested-batch algorithms' correctness hinges on *exact* maintenance
+//! of `S(j) = Σ_{i: a(i)=j} x_i` and `v(j) = |{i: a(i)=j}|` under
+//! millions of add/remove cycles, so the accumulators are `f64` while
+//! data and centroids stay `f32` (the integration tests check S/v
+//! against from-scratch recomputation).
+//!
+//! `sse(j)` follows the paper's Algorithm 7 bookkeeping *faithfully*,
+//! including its deliberate staleness: when a point's assignment is
+//! unchanged the add/subtract cancels, so its contribution keeps the
+//! distance from the round it last moved. The controller only needs the
+//! magnitude of σ̂_C, and this is exactly what the paper computes.
+
+use crate::coordinator::merge::Mergeable;
+use crate::data::Data;
+use crate::linalg::dense::DenseMatrix;
+#[cfg(test)]
+use crate::linalg::dense;
+
+/// Sentinel for "never assigned".
+pub const UNASSIGNED: u32 = u32::MAX;
+
+/// Centroids with the cached quantities the hot paths need.
+#[derive(Clone, Debug)]
+pub struct Centroids {
+    /// k × d row-major centroid matrix.
+    pub c: DenseMatrix,
+    /// ‖c_j‖² (norms-trick distances).
+    pub norms: Vec<f32>,
+    /// p(j): distance moved in the most recent update (Elkan decay).
+    pub p: Vec<f32>,
+}
+
+impl Centroids {
+    pub fn from_matrix(c: DenseMatrix) -> Self {
+        let norms = c.row_sq_norms();
+        let k = c.rows;
+        Self { c, norms, p: vec![0.0; k] }
+    }
+
+    pub fn k(&self) -> usize {
+        self.c.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.c.cols
+    }
+
+    /// Max displacement in the last update (0 ⇒ fixed point).
+    pub fn max_p(&self) -> f32 {
+        self.p.iter().cloned().fold(0.0, f32::max)
+    }
+}
+
+/// Sufficient statistics `(S, v, sse)` per cluster. Also used as the
+/// *delta* type produced by worker shards (same shape, merged by `+`).
+#[derive(Clone, Debug)]
+pub struct SuffStats {
+    pub k: usize,
+    pub d: usize,
+    /// k × d flattened f64 coordinate sums.
+    pub s: Vec<f64>,
+    /// assignment counts (f64: merged/compared with paper formulas).
+    pub v: Vec<f64>,
+    /// per-cluster Σ d(i)² bookkeeping (Alg. 7 lines 14–15).
+    pub sse: Vec<f64>,
+}
+
+impl SuffStats {
+    pub fn zeros(k: usize, d: usize) -> Self {
+        Self { k, d, s: vec![0.0; k * d], v: vec![0.0; k], sse: vec![0.0; k] }
+    }
+
+    #[inline]
+    pub fn s_row(&self, j: usize) -> &[f64] {
+        &self.s[j * self.d..(j + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn s_row_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.s[j * self.d..(j + 1) * self.d]
+    }
+
+    /// Add point `i` to cluster `j` (first assignment).
+    #[inline]
+    pub fn add_point(&mut self, data: &Data, i: usize, j: u32, d2: f32) {
+        let j = j as usize;
+        data.add_row_to(i, &mut self.s[j * self.d..(j + 1) * self.d]);
+        self.v[j] += 1.0;
+        self.sse[j] += d2 as f64;
+    }
+
+    /// Remove point `i` from cluster `j` (mb-f decontamination). The
+    /// `d2` passed is whatever bookkeeping value was added for it.
+    #[inline]
+    pub fn remove_point(&mut self, data: &Data, i: usize, j: u32, d2: f32) {
+        let j = j as usize;
+        data.sub_row_from(i, &mut self.s[j * self.d..(j + 1) * self.d]);
+        self.v[j] -= 1.0;
+        self.sse[j] -= d2 as f64;
+    }
+
+    /// Alg. 7 lines 14–21: always move the sse contribution by the *new*
+    /// d², and move S/v only when the assignment actually changed.
+    #[inline]
+    pub fn reassign_point(
+        &mut self,
+        data: &Data,
+        i: usize,
+        from: u32,
+        to: u32,
+        d2_new: f32,
+    ) {
+        let (fj, tj) = (from as usize, to as usize);
+        self.sse[fj] -= d2_new as f64;
+        self.sse[tj] += d2_new as f64;
+        if from != to {
+            data.sub_row_from(i, &mut self.s[fj * self.d..(fj + 1) * self.d]);
+            data.add_row_to(i, &mut self.s[tj * self.d..(tj + 1) * self.d]);
+            self.v[fj] -= 1.0;
+            self.v[tj] += 1.0;
+        }
+    }
+
+    /// The paper's σ̂_C(j) = sqrt(sse(j) / (v(j)(v(j)−1))); ∞ when the
+    /// cluster has fewer than two points (no variance estimate → always
+    /// votes to grow).
+    pub fn sigma_c(&self, j: usize) -> f64 {
+        let v = self.v[j];
+        if v < 2.0 {
+            return f64::INFINITY;
+        }
+        (self.sse[j].max(0.0) / (v * (v - 1.0))).sqrt()
+    }
+
+    /// Write `C(j) ← S(j)/v(j)` into `centroids`, computing displacement
+    /// `p(j)` and refreshing norms. Clusters with `v = 0` keep their old
+    /// centroid (p = 0).
+    pub fn update_centroids(&self, centroids: &mut Centroids) {
+        debug_assert_eq!(centroids.k(), self.k);
+        debug_assert_eq!(centroids.d(), self.d);
+        for j in 0..self.k {
+            if self.v[j] <= 0.0 {
+                centroids.p[j] = 0.0;
+                continue;
+            }
+            let inv = 1.0 / self.v[j];
+            let row = centroids.c.row_mut(j);
+            let mut disp2 = 0f64;
+            let mut norm = 0f64;
+            let s = &self.s[j * self.d..(j + 1) * self.d];
+            for t in 0..self.d {
+                let new = (s[t] * inv) as f32;
+                let diff = (new - row[t]) as f64;
+                disp2 += diff * diff;
+                norm += (new as f64) * (new as f64);
+                row[t] = new;
+            }
+            centroids.p[j] = (disp2 as f32).sqrt();
+            centroids.norms[j] = norm as f32;
+        }
+    }
+
+    /// Recompute from scratch for a set of assigned points (tests and
+    /// lloyd's non-incremental path).
+    pub fn rebuild(
+        data: &Data,
+        k: usize,
+        idx: impl Iterator<Item = usize>,
+        assign: &[u32],
+        dist2: &[f32],
+    ) -> SuffStats {
+        let mut st = SuffStats::zeros(k, data.dim());
+        for i in idx {
+            debug_assert_ne!(assign[i], UNASSIGNED);
+            st.add_point(data, i, assign[i], dist2[i]);
+        }
+        st
+    }
+
+    /// Max |difference| against another stats object (test helper).
+    pub fn max_abs_diff(&self, other: &SuffStats) -> f64 {
+        let ds = self
+            .s
+            .iter()
+            .zip(&other.s)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        let dv = self
+            .v
+            .iter()
+            .zip(&other.v)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        ds.max(dv)
+    }
+}
+
+impl Mergeable for SuffStats {
+    fn merge(&mut self, other: Self) {
+        debug_assert_eq!(self.k, other.k);
+        debug_assert_eq!(self.d, other.d);
+        for (a, b) in self.s.iter_mut().zip(&other.s) {
+            *a += b;
+        }
+        for (a, b) in self.v.iter_mut().zip(&other.v) {
+            *a += b;
+        }
+        for (a, b) in self.sse.iter_mut().zip(&other.sse) {
+            *a += b;
+        }
+    }
+}
+
+/// Per-point assignment state shared by the incremental algorithms.
+#[derive(Clone, Debug)]
+pub struct Assignments {
+    /// a(i); UNASSIGNED until first use.
+    pub label: Vec<u32>,
+    /// d(i)² as last computed for point i.
+    pub dist2: Vec<f32>,
+}
+
+impl Assignments {
+    pub fn new(n: usize) -> Self {
+        Self { label: vec![UNASSIGNED; n], dist2: vec![f32::INFINITY; n] }
+    }
+
+    pub fn seen(&self, i: usize) -> bool {
+        self.label[i] != UNASSIGNED
+    }
+}
+
+/// Training-set MSE for the currently assigned prefix (Σ d²/count) —
+/// a free byproduct of the stats, used for progress logs.
+pub fn batch_mse(stats: &SuffStats) -> f64 {
+    let n: f64 = stats.v.iter().sum();
+    if n <= 0.0 {
+        return f64::NAN;
+    }
+    stats.sse.iter().sum::<f64>().max(0.0) / n
+}
+
+/// Exact MSE of `data` under `centroids` computed fresh (O(nkd)); the
+/// metrics path uses the engine-parallel version, this is the oracle.
+pub fn exact_mse(data: &Data, centroids: &Centroids) -> f64 {
+    let mut total = 0f64;
+    for i in 0..data.n() {
+        let (_, d2) = data.nearest(i, &centroids.c, &centroids.norms);
+        total += d2 as f64;
+    }
+    total / data.n() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::util::propcheck::Cases;
+
+    fn toy() -> (Data, Centroids) {
+        let data = GaussianMixture::default_spec(3, 4).generate(20, 1);
+        let mut c = DenseMatrix::zeros(3, 4);
+        for j in 0..3 {
+            let mut row = vec![0.0; 4];
+            data.write_row_dense(j, &mut row);
+            c.row_mut(j).copy_from_slice(&row);
+        }
+        (data, Centroids::from_matrix(c))
+    }
+
+    #[test]
+    fn add_remove_roundtrip_exact() {
+        let (data, _) = toy();
+        let mut st = SuffStats::zeros(3, 4);
+        for i in 0..10 {
+            st.add_point(&data, i, (i % 3) as u32, 1.0);
+        }
+        for i in 0..10 {
+            st.remove_point(&data, i, (i % 3) as u32, 1.0);
+        }
+        assert!(st.s.iter().all(|&x| x.abs() < 1e-9));
+        assert!(st.v.iter().all(|&x| x.abs() < 1e-12));
+        assert!(st.sse.iter().all(|&x| x.abs() < 1e-9));
+    }
+
+    #[test]
+    fn reassign_moves_s_and_v() {
+        let (data, _) = toy();
+        let mut st = SuffStats::zeros(3, 4);
+        st.add_point(&data, 0, 0, 2.0);
+        st.reassign_point(&data, 0, 0, 1, 0.5);
+        assert_eq!(st.v[0], 0.0);
+        assert_eq!(st.v[1], 1.0);
+        let mut row = vec![0f32; 4];
+        data.write_row_dense(0, &mut row);
+        for t in 0..4 {
+            assert!((st.s_row(1)[t] - row[t] as f64).abs() < 1e-9);
+            assert!(st.s_row(0)[t].abs() < 1e-9);
+        }
+        // unchanged reassignment is an sse no-op
+        let before = st.sse.clone();
+        st.reassign_point(&data, 0, 1, 1, 7.0);
+        assert_eq!(st.sse, before);
+        assert_eq!(st.v[1], 1.0);
+    }
+
+    #[test]
+    fn update_centroids_is_mean_and_p_correct() {
+        let (data, mut cent) = toy();
+        let mut st = SuffStats::zeros(3, 4);
+        // assign points 0..6 to cluster 1
+        for i in 0..6 {
+            st.add_point(&data, i, 1, 0.0);
+        }
+        let old = cent.c.row(1).to_vec();
+        st.update_centroids(&mut cent);
+        // cluster 1 is the mean of the 6 points
+        let mut mean = vec![0f64; 4];
+        for i in 0..6 {
+            data.add_row_to(i, &mut mean);
+        }
+        for t in 0..4 {
+            assert!((cent.c.row(1)[t] as f64 - mean[t] / 6.0).abs() < 1e-5);
+        }
+        // p(1) = ‖new − old‖
+        let p_expect = dense::sq_dist(&old, cent.c.row(1)).sqrt();
+        assert!((cent.p[1] - p_expect).abs() < 1e-4);
+        // empty clusters unchanged with p = 0
+        assert_eq!(cent.p[0], 0.0);
+        // norms refreshed
+        assert!(
+            (cent.norms[1] - dense::sq_norm(cent.c.row(1))).abs()
+                < 1e-3 * (1.0 + cent.norms[1].abs())
+        );
+    }
+
+    #[test]
+    fn sigma_c_formula() {
+        let mut st = SuffStats::zeros(2, 1);
+        st.v[0] = 5.0;
+        st.sse[0] = 20.0;
+        assert!((st.sigma_c(0) - (20.0 / 20.0f64).sqrt()).abs() < 1e-12);
+        st.v[1] = 1.0;
+        assert!(st.sigma_c(1).is_infinite());
+    }
+
+    #[test]
+    fn merge_is_sum() {
+        let mut a = SuffStats::zeros(2, 2);
+        let mut b = SuffStats::zeros(2, 2);
+        a.v[0] = 1.0;
+        b.v[0] = 2.0;
+        a.s[3] = 4.0;
+        b.s[3] = 6.0;
+        a.merge(b);
+        assert_eq!(a.v[0], 3.0);
+        assert_eq!(a.s[3], 10.0);
+    }
+
+    #[test]
+    fn rebuild_matches_incremental() {
+        Cases::new(20).run(|rng| {
+            let n = 30 + rng.below(50);
+            let k = 2 + rng.below(5);
+            let data =
+                GaussianMixture::default_spec(k, 6).generate(n, rng.next_u64());
+            let mut st = SuffStats::zeros(k, 6);
+            let mut assign = vec![UNASSIGNED; n];
+            let mut dist2 = vec![0f32; n];
+            for i in 0..n {
+                let j = rng.below(k) as u32;
+                assign[i] = j;
+                dist2[i] = rng.next_f32();
+                st.add_point(&data, i, j, dist2[i]);
+            }
+            // random churn
+            for _ in 0..n {
+                let i = rng.below(n);
+                let to = rng.below(k) as u32;
+                let d2 = rng.next_f32();
+                st.reassign_point(&data, i, assign[i], to, d2);
+                assign[i] = to;
+                if true {
+                    dist2[i] = d2;
+                }
+            }
+            let fresh = SuffStats::rebuild(&data, k, 0..n, &assign, &dist2);
+            assert!(
+                st.max_abs_diff(&fresh) < 1e-6,
+                "S/v drifted: {}",
+                st.max_abs_diff(&fresh)
+            );
+        });
+    }
+
+    #[test]
+    fn exact_mse_zero_when_centroids_are_points() {
+        let data = GaussianMixture::default_spec(2, 3).generate(2, 0);
+        let mut c = DenseMatrix::zeros(2, 3);
+        let mut row = vec![0.0; 3];
+        for j in 0..2 {
+            data.write_row_dense(j, &mut row);
+            c.row_mut(j).copy_from_slice(&row);
+        }
+        let cent = Centroids::from_matrix(c);
+        assert!(exact_mse(&data, &cent) < 1e-6);
+    }
+}

@@ -1,0 +1,499 @@
+//! `tb-ρ` — the turbocharged nested mini-batch algorithm (paper
+//! Algorithm 9; ρ = ∞ form is Algorithm 11). This is the paper's
+//! headline contribution: grow-batch nesting makes triangle-inequality
+//! bounds pay off inside a mini-batch scheme.
+//!
+//! Two execution strategies, producing identical assignments:
+//!
+//! * **Point-step** (native): Algorithm 9's inner loop verbatim —
+//!   per (i, j) bound tests gate individual distance computations
+//!   ([`bounds::tb_point_step`]). Best on CPUs, exactly the paper.
+//! * **Tile-screen** (hardware-adapted, used with the XLA engine): a
+//!   cheap O(k) per-point screen splits the seen prefix into *clean*
+//!   points (assignment provably unchanged, zero distance work) and
+//!   *dirty* points, which are gathered into dense tiles for the
+//!   Pallas/XLA `distmat` artifact; their full bound rows refresh from
+//!   the tile result. See DESIGN.md §Hardware-Adaptation.
+
+use crate::config::Rho;
+use crate::coordinator::shard::chunk_ranges;
+use crate::kmeans::assign::Sel;
+use crate::kmeans::bounds::{self, BoundStore};
+use crate::kmeans::controller::{self, GrowthPolicy};
+use crate::kmeans::state::{batch_mse, Assignments, Centroids, SuffStats};
+use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+
+pub struct TurboBatch {
+    pub(crate) cent: Centroids,
+    pub(crate) stats: SuffStats,
+    pub(crate) assign: Assignments,
+    bounds: BoundStore,
+    /// Tile mode: decayed upper bound u(i) ≥ ‖x_i − c_{a(i)}‖.
+    upper: Vec<f32>,
+    n: usize,
+    pub b_prev: usize,
+    pub b: usize,
+    rho: Rho,
+    policy: GrowthPolicy,
+    tile_mode: bool,
+    fixed_point: bool,
+    pub batch_history: Vec<usize>,
+}
+
+/// Cap on points per `dist_rows` dispatch in tile mode (bounds memory
+/// traffic and keeps per-call buffers ≤ ~8k × k floats).
+const TILE_DISPATCH: usize = 8192;
+
+impl TurboBatch {
+    pub fn new(cent: Centroids, n: usize, b0: usize, rho: Rho, tile_mode: bool) -> Self {
+        let k = cent.k();
+        let d = cent.d();
+        Self {
+            cent,
+            stats: SuffStats::zeros(k, d),
+            assign: Assignments::new(n),
+            bounds: BoundStore::new(k),
+            upper: Vec::new(),
+            n,
+            b_prev: 0,
+            b: b0.min(n).max(1),
+            rho,
+            policy: GrowthPolicy::Double,
+            tile_mode,
+            fixed_point: false,
+            batch_history: vec![],
+        }
+    }
+
+    /// Paper §5 future-work: alternative batch-growth laws (ablation).
+    pub fn with_policy(mut self, policy: GrowthPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Point-step pass over the seen prefix: returns
+    /// (delta, changed, calcs, skips).
+    fn seen_pointstep(&mut self, ctx: &mut Ctx) -> (SuffStats, u64, u64, u64) {
+        let b_o = self.b_prev;
+        let k = self.cent.k();
+        let d = self.cent.d();
+        let ranges = chunk_ranges(b_o, ctx.pool.threads, 256);
+        let lb_views = self.bounds.split_rows(&ranges);
+        // split label/dist2 the same way
+        let mut lbl_rest: &mut [u32] = &mut self.assign.label[..b_o];
+        let mut d2_rest: &mut [f32] = &mut self.assign.dist2[..b_o];
+        let mut jobs = Vec::with_capacity(ranges.len());
+        for (r, lbv) in ranges.iter().cloned().zip(lb_views) {
+            let (lh, lt) = lbl_rest.split_at_mut(r.len());
+            let (dh, dt) = d2_rest.split_at_mut(r.len());
+            lbl_rest = lt;
+            d2_rest = dt;
+            jobs.push((r, lbv, lh, dh));
+        }
+        let data = ctx.data;
+        let cent = &self.cent;
+        let work = |r: std::ops::Range<usize>,
+                    lbv: &mut [f32],
+                    lh: &mut [u32],
+                    dh: &mut [f32]|
+         -> (SuffStats, u64, u64, u64) {
+            let mut delta = SuffStats::zeros(k, d);
+            let (mut changed, mut calcs, mut skips) = (0u64, 0u64, 0u64);
+            for (slot, i) in r.enumerate() {
+                let old = lh[slot];
+                let out = bounds::tb_point_step(
+                    data,
+                    i,
+                    cent,
+                    &mut lbv[slot * k..(slot + 1) * k],
+                    old,
+                );
+                delta.reassign_point(data, i, old, out.label, out.d2);
+                changed += u64::from(old != out.label);
+                calcs += out.dist_calcs;
+                skips += out.bound_skips;
+                lh[slot] = out.label;
+                dh[slot] = out.d2;
+            }
+            (delta, changed, calcs, skips)
+        };
+        let results: Vec<(SuffStats, u64, u64, u64)> = if jobs.len() <= 1 {
+            jobs.into_iter().map(|(r, lbv, lh, dh)| work(r, lbv, lh, dh)).collect()
+        } else {
+            let mut slots: Vec<Option<(SuffStats, u64, u64, u64)>> =
+                (0..jobs.len()).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                for (slot, (r, lbv, lh, dh)) in slots.iter_mut().zip(jobs) {
+                    let work = &work;
+                    scope.spawn(move || {
+                        *slot = Some(work(r, lbv, lh, dh));
+                    });
+                }
+            });
+            slots.into_iter().map(|s| s.unwrap()).collect()
+        };
+        let mut delta = SuffStats::zeros(k, d);
+        let (mut changed, mut calcs, mut skips) = (0u64, 0u64, 0u64);
+        for (dd, ch, ca, sk) in results {
+            crate::coordinator::merge::Mergeable::merge(&mut delta, dd);
+            changed += ch;
+            calcs += ca;
+            skips += sk;
+        }
+        (delta, changed, calcs, skips)
+    }
+
+    /// Tile-screen pass over the seen prefix.
+    fn seen_tilescreen(&mut self, ctx: &mut Ctx) -> (SuffStats, u64, u64, u64) {
+        let b_o = self.b_prev;
+        let k = self.cent.k();
+        let d = self.cent.d();
+        // 1. decay uppers + screen (sharded)
+        let ranges = chunk_ranges(b_o, ctx.pool.threads, 1024);
+        let lb_views = self.bounds.split_rows(&ranges);
+        let mut up_rest: &mut [f32] = &mut self.upper[..b_o];
+        let mut jobs = Vec::with_capacity(ranges.len());
+        for (r, lbv) in ranges.iter().cloned().zip(lb_views) {
+            let (uh, ut) = up_rest.split_at_mut(r.len());
+            up_rest = ut;
+            jobs.push((r, lbv, uh));
+        }
+        let labels = &self.assign.label;
+        let cent = &self.cent;
+        let screen_work = |r: std::ops::Range<usize>,
+                           lbv: &mut [f32],
+                           uh: &mut [f32]|
+         -> Vec<usize> {
+            let mut dirty = Vec::new();
+            for (slot, i) in r.enumerate() {
+                let a = labels[i];
+                uh[slot] += cent.p[a as usize];
+                if bounds::screen(
+                    &mut lbv[slot * k..(slot + 1) * k],
+                    &cent.p,
+                    a,
+                    uh[slot],
+                ) {
+                    dirty.push(i);
+                }
+            }
+            dirty
+        };
+        let dirty_parts: Vec<Vec<usize>> = if jobs.len() <= 1 {
+            jobs.into_iter().map(|(r, lbv, uh)| screen_work(r, lbv, uh)).collect()
+        } else {
+            let mut slots: Vec<Option<Vec<usize>>> =
+                (0..jobs.len()).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                for (slot, (r, lbv, uh)) in slots.iter_mut().zip(jobs) {
+                    let screen_work = &screen_work;
+                    scope.spawn(move || {
+                        *slot = Some(screen_work(r, lbv, uh));
+                    });
+                }
+            });
+            slots.into_iter().map(|s| s.unwrap()).collect()
+        };
+        let dirty: Vec<usize> = dirty_parts.into_iter().flatten().collect();
+        let clean = (b_o - dirty.len()) as u64;
+
+        // 2. gathered dense recompute for dirty points, in dispatch-size
+        //    blocks, through the engine's distmat path
+        let mut delta = SuffStats::zeros(k, d);
+        let mut changed = 0u64;
+        let mut calcs = 0u64;
+        let mut buf = vec![0f32; TILE_DISPATCH.min(dirty.len().max(1)) * k];
+        for block in dirty.chunks(TILE_DISPATCH) {
+            let need = block.len() * k;
+            calcs += ctx.engine.dist_rows(
+                ctx.data,
+                Sel::List(block),
+                &self.cent,
+                &ctx.pool,
+                &mut buf[..need],
+            );
+            for (t, &i) in block.iter().enumerate() {
+                let (j, d2) = bounds::refresh_from_distrow(
+                    self.bounds.row_mut(i),
+                    &buf[t * k..(t + 1) * k],
+                );
+                let old = self.assign.label[i];
+                delta.reassign_point(ctx.data, i, old, j, d2);
+                changed += u64::from(old != j);
+                self.assign.label[i] = j;
+                self.assign.dist2[i] = d2;
+                self.upper[i] = d2.sqrt();
+            }
+        }
+        (delta, changed, calcs, clean * k as u64)
+    }
+
+    /// Ingest new points [b_o, b): full k distances each, bounds filled.
+    fn ingest_new(&mut self, ctx: &mut Ctx) -> (SuffStats, u64) {
+        let (b_o, b) = (self.b_prev, self.b);
+        let k = self.cent.k();
+        let d = self.cent.d();
+        if b <= b_o {
+            return (SuffStats::zeros(k, d), 0);
+        }
+        let count = b - b_o;
+        let ranges = chunk_ranges(count, ctx.pool.threads, 256);
+        // bound rows for the new window: global rows b_o..b
+        let all_rows = self.bounds.split_rows(
+            &[(0..b_o), (b_o..b)].map(|r| r).to_vec(),
+        );
+        let new_rows = all_rows.into_iter().nth(1).unwrap();
+        let mut lbl_rest: &mut [u32] = &mut self.assign.label[b_o..b];
+        let mut d2_rest: &mut [f32] = &mut self.assign.dist2[b_o..b];
+        let mut up_rest: &mut [f32] = &mut self.upper[b_o..b];
+        let mut lb_rest: &mut [f32] = new_rows;
+        let mut jobs = Vec::with_capacity(ranges.len());
+        for r in ranges.iter().cloned() {
+            let (lh, lt) = lbl_rest.split_at_mut(r.len());
+            let (dh, dt) = d2_rest.split_at_mut(r.len());
+            let (uh, ut) = up_rest.split_at_mut(r.len());
+            let (bh, bt) = lb_rest.split_at_mut(r.len() * k);
+            lbl_rest = lt;
+            d2_rest = dt;
+            up_rest = ut;
+            lb_rest = bt;
+            jobs.push((r, lh, dh, uh, bh));
+        }
+        let data = ctx.data;
+        let cent = &self.cent;
+        let work = |r: std::ops::Range<usize>,
+                    lh: &mut [u32],
+                    dh: &mut [f32],
+                    uh: &mut [f32],
+                    bh: &mut [f32]|
+         -> SuffStats {
+            let mut delta = SuffStats::zeros(k, d);
+            for (slot, off) in r.enumerate() {
+                let i = b_o + off;
+                let out = bounds::full_assign_fill(
+                    data,
+                    i,
+                    cent,
+                    &mut bh[slot * k..(slot + 1) * k],
+                );
+                delta.add_point(data, i, out.label, out.d2);
+                lh[slot] = out.label;
+                dh[slot] = out.d2;
+                uh[slot] = out.d2.sqrt();
+            }
+            delta
+        };
+        let parts: Vec<SuffStats> = if jobs.len() <= 1 {
+            jobs.into_iter().map(|(r, lh, dh, uh, bh)| work(r, lh, dh, uh, bh)).collect()
+        } else {
+            let mut slots: Vec<Option<SuffStats>> =
+                (0..jobs.len()).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                for (slot, (r, lh, dh, uh, bh)) in slots.iter_mut().zip(jobs) {
+                    let work = &work;
+                    scope.spawn(move || {
+                        *slot = Some(work(r, lh, dh, uh, bh));
+                    });
+                }
+            });
+            slots.into_iter().map(|s| s.unwrap()).collect()
+        };
+        let mut delta = SuffStats::zeros(k, d);
+        for p in parts {
+            crate::coordinator::merge::Mergeable::merge(&mut delta, p);
+        }
+        (delta, (count * k) as u64)
+    }
+
+    #[cfg(test)]
+    pub fn stats_drift(&self, data: &crate::data::Data) -> f64 {
+        let fresh = SuffStats::rebuild(
+            data,
+            self.cent.k(),
+            0..self.b_prev,
+            &self.assign.label,
+            &self.assign.dist2,
+        );
+        self.stats.max_abs_diff(&fresh)
+    }
+
+    #[cfg(test)]
+    pub fn bound_row(&self, i: usize) -> &[f32] {
+        self.bounds.row(i)
+    }
+}
+
+impl Clusterer for TurboBatch {
+    fn round(&mut self, ctx: &mut Ctx) -> RoundInfo {
+        let b = self.b;
+        self.batch_history.push(b);
+        self.bounds.grow_to(b);
+        self.upper.resize(b, 0.0);
+
+        // seen prefix
+        let (delta_seen, changed, calcs_seen, skips) = if self.b_prev == 0 {
+            (SuffStats::zeros(self.cent.k(), self.cent.d()), 0, 0, 0)
+        } else if self.tile_mode {
+            self.seen_tilescreen(ctx)
+        } else {
+            self.seen_pointstep(ctx)
+        };
+        crate::coordinator::merge::Mergeable::merge(&mut self.stats, delta_seen);
+
+        // new window
+        let (delta_new, calcs_new) = self.ingest_new(ctx);
+        crate::coordinator::merge::Mergeable::merge(&mut self.stats, delta_new);
+
+        // centroid update + controller
+        self.stats.update_centroids(&mut self.cent);
+        let decision = controller::decide(self.rho, &self.stats, &self.cent);
+        let b_o = self.b_prev;
+        self.b_prev = b;
+        self.b = controller::grow(b, self.n, decision, self.policy);
+        self.fixed_point =
+            b_o == self.n && changed == 0 && self.cent.max_p() == 0.0;
+
+        RoundInfo {
+            dist_calcs: calcs_seen + calcs_new,
+            bound_skips: skips,
+            changed,
+            batch: b,
+            train_mse: batch_mse(&self.stats),
+        }
+    }
+
+    fn centroids(&self) -> &Centroids {
+        &self.cent
+    }
+
+    fn converged(&self) -> bool {
+        self.fixed_point
+    }
+
+    fn name(&self) -> String {
+        format!("tb-{}", self.rho.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::assign::NativeEngine;
+    use crate::kmeans::growbatch::GrowBatch;
+    use crate::kmeans::init;
+    use crate::util::rng::Pcg64;
+
+    fn ctx(data: &crate::data::Data) -> Ctx<'_> {
+        Ctx {
+            data,
+            engine: &NativeEngine,
+            pool: crate::coordinator::Pool::new(2),
+            rng: Pcg64::new(4, 4),
+        }
+    }
+
+    #[test]
+    fn tb_matches_gb_centroid_trajectory() {
+        // Bounds must not change the computed clustering: tb-∞ and gb-∞
+        // perform identical assignments, hence identical centroids.
+        let data = GaussianMixture::default_spec(4, 6).generate(800, 2);
+        let mut tb = TurboBatch::new(
+            init::first_k(&data, 4), 800, 64, Rho::Infinite, false);
+        let mut gb =
+            GrowBatch::new(init::first_k(&data, 4), 800, 64, Rho::Infinite);
+        let mut c1 = ctx(&data);
+        let mut c2 = ctx(&data);
+        for round in 0..15 {
+            tb.round(&mut c1);
+            gb.round(&mut c2);
+            assert_eq!(tb.b, gb.b, "round {round}: batch sizes diverged");
+            for j in 0..4 {
+                for t in 0..6 {
+                    let a = tb.cent.c.row(j)[t];
+                    let b = gb.cent.c.row(j)[t];
+                    assert!(
+                        (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                        "round {round} centroid {j},{t}: tb={a} gb={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_mode_matches_pointstep_mode() {
+        let data = GaussianMixture::default_spec(3, 5).generate(600, 8);
+        let mut a = TurboBatch::new(
+            init::first_k(&data, 3), 600, 50, Rho::Infinite, false);
+        let mut b = TurboBatch::new(
+            init::first_k(&data, 3), 600, 50, Rho::Infinite, true);
+        let mut c1 = ctx(&data);
+        let mut c2 = ctx(&data);
+        for round in 0..12 {
+            a.round(&mut c1);
+            b.round(&mut c2);
+            assert_eq!(
+                a.assign.label[..a.b_prev],
+                b.assign.label[..b.b_prev],
+                "round {round}: assignments diverged"
+            );
+            assert_eq!(a.b, b.b, "round {round}: batch size diverged");
+        }
+    }
+
+    #[test]
+    fn bounds_eliminate_work_as_convergence_nears() {
+        let data = GaussianMixture::default_spec(5, 8).generate(1000, 3);
+        let mut tb = TurboBatch::new(
+            init::first_k(&data, 5), 1000, 100, Rho::Infinite, false);
+        let mut c = ctx(&data);
+        let mut last_skip_frac = 0.0;
+        for round in 0..20 {
+            let info = tb.round(&mut c);
+            let possible =
+                (tb.b_prev.max(1) * (5 - 1)) as f64;
+            last_skip_frac = info.bound_skips as f64 / possible.max(1.0);
+            let _ = round;
+        }
+        assert!(
+            last_skip_frac > 0.5,
+            "bounds should skip most work near convergence: {last_skip_frac}"
+        );
+    }
+
+    #[test]
+    fn stats_exact_under_bounded_reassignment() {
+        let data = GaussianMixture { k: 3, d: 4, center_spread: 2.0, noise: 1.5, weights: vec![] }
+            .generate(400, 10);
+        let mut tb = TurboBatch::new(
+            init::first_k(&data, 3), 400, 32, Rho::Finite(100.0), false);
+        let mut c = ctx(&data);
+        for round in 0..15 {
+            tb.round(&mut c);
+            let drift = tb.stats_drift(&data);
+            assert!(drift < 1e-5, "round {round}: drift {drift}");
+        }
+    }
+
+    #[test]
+    fn converges_to_lloyd_fixed_point() {
+        let data = GaussianMixture::default_spec(3, 4).generate(300, 6);
+        let mut tb = TurboBatch::new(
+            init::first_k(&data, 3), 300, 30, Rho::Infinite, false);
+        let mut c = ctx(&data);
+        for _ in 0..200 {
+            tb.round(&mut c);
+            if tb.converged() {
+                break;
+            }
+        }
+        assert!(tb.converged());
+        let mut cent = tb.cent.clone();
+        let mut labels = vec![0u32; 300];
+        let before = crate::kmeans::state::exact_mse(&data, &cent);
+        crate::kmeans::lloyd::reference_round(&data, &mut cent, &mut labels);
+        let after = crate::kmeans::state::exact_mse(&data, &cent);
+        assert!((before - after).abs() < 1e-9 * (1.0 + before));
+    }
+}

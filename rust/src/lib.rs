@@ -1,0 +1,50 @@
+//! # nmbkm — Nested Mini-Batch K-Means
+//!
+//! A production-quality reproduction of *Nested Mini-Batch K-Means*
+//! (Newling & Fleuret, NIPS 2016; arXiv preprint title: "Turbocharging
+//! Mini-Batch K-Means") as a three-layer rust + JAX/Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   nested-batch state management, the `σ̂_C/p` batch-growth controller,
+//!   triangle-inequality bound routing, exact sufficient-statistics
+//!   maintenance, plus every baseline (`lloyd`, Elkan, Sculley `mb`,
+//!   `sgd`) and every substrate (RNG, CLI, JSON, dense/CSR linear
+//!   algebra, dataset simulators, threaded sharding, bench harness).
+//! * **Layer 2/1 (build-time python)** — JAX graphs composing Pallas
+//!   kernels, AOT-lowered to HLO text in `artifacts/`, executed from
+//!   rust through the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the clustering path; after `make artifacts` the
+//! rust binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nmbkm::prelude::*;
+//!
+//! let data = nmbkm::data::gaussian::GaussianMixture::default_spec(8, 32)
+//!     .generate(10_000, 42);
+//! let cfg = RunConfig { k: 8, b0: 512, algo: Algo::TbRho,
+//!                       rho: Rho::Infinite, ..RunConfig::default() };
+//! let outcome = nmbkm::kmeans::run(&data, None, &cfg).unwrap();
+//! println!("final training MSE: {}", outcome.final_mse);
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod kmeans;
+pub mod linalg;
+pub mod runtime;
+pub mod util;
+
+/// Commonly used items, re-exported for examples and binaries.
+pub mod prelude {
+    pub use crate::config::{Algo, Engine, Rho, RunConfig};
+    pub use crate::data::{Data, Dataset};
+    pub use crate::kmeans::metrics::RoundRecord;
+    pub use crate::kmeans::{run, RunOutcome};
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,293 @@
+//! Row-major dense matrices and the dense distance kernels.
+//!
+//! The assignment hot loop uses the norms decomposition
+//! `‖x−c‖² = ‖x‖² + ‖c‖² − 2⟨x,c⟩` so the inner loop is a pure dot
+//! product — the same form the L1 Pallas kernel uses on the MXU — with
+//! an 8-way unrolled accumulator that the compiler autovectorises.
+
+/// Row-major `rows × cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// ‖row_i‖² for every row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| sq_norm(self.row(i))).collect()
+    }
+
+    /// Materialise a row permutation: `out.row(i) = self.row(perm[i])`.
+    pub fn permute_rows(&self, perm: &[usize]) -> DenseMatrix {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = DenseMatrix::zeros(self.rows, self.cols);
+        for (i, &p) in perm.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(p));
+        }
+        out
+    }
+
+    /// Rows `[lo, hi)` as a new matrix.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> DenseMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        DenseMatrix::from_vec(
+            hi - lo,
+            self.cols,
+            self.data[lo * self.cols..hi * self.cols].to_vec(),
+        )
+    }
+}
+
+/// Dot product, 8-way unrolled. The central FLOP sink of the native
+/// engine; see benches/micro_hotpaths.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        // Safety: i+7 < chunks*8 <= n, same for b.
+        unsafe {
+            s0 += a.get_unchecked(i) * b.get_unchecked(i);
+            s1 += a.get_unchecked(i + 1) * b.get_unchecked(i + 1);
+            s2 += a.get_unchecked(i + 2) * b.get_unchecked(i + 2);
+            s3 += a.get_unchecked(i + 3) * b.get_unchecked(i + 3);
+            s4 += a.get_unchecked(i + 4) * b.get_unchecked(i + 4);
+            s5 += a.get_unchecked(i + 5) * b.get_unchecked(i + 5);
+            s6 += a.get_unchecked(i + 6) * b.get_unchecked(i + 6);
+            s7 += a.get_unchecked(i + 7) * b.get_unchecked(i + 7);
+        }
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// ‖a‖².
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Exact squared distance (no norms trick; used by oracles and tests).
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Squared distance via the norms decomposition (hot-path form; can be
+/// slightly negative from cancellation, clamped to 0).
+#[inline]
+pub fn sq_dist_norms(x: &[f32], xn: f32, c: &[f32], cn: f32) -> f32 {
+    (xn + cn - 2.0 * dot(x, c)).max(0.0)
+}
+
+/// Four dot products against consecutive centroid rows sharing one
+/// streaming pass over `x` — register blocking that quarters x-loads
+/// and widens ILP (EXPERIMENTS.md §Perf change 4).
+#[inline]
+fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; 4] {
+    let n = x.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let (mut t0, mut t1, mut t2, mut t3) = (0f32, 0f32, 0f32, 0f32);
+    let chunks = n / 2;
+    for ci in 0..chunks {
+        let i = ci * 2;
+        // Safety: i+1 < chunks*2 <= n for all five slices (same length).
+        unsafe {
+            let xa = *x.get_unchecked(i);
+            let xb = *x.get_unchecked(i + 1);
+            s0 += xa * c0.get_unchecked(i);
+            t0 += xb * c0.get_unchecked(i + 1);
+            s1 += xa * c1.get_unchecked(i);
+            t1 += xb * c1.get_unchecked(i + 1);
+            s2 += xa * c2.get_unchecked(i);
+            t2 += xb * c2.get_unchecked(i + 1);
+            s3 += xa * c3.get_unchecked(i);
+            t3 += xb * c3.get_unchecked(i + 1);
+        }
+    }
+    if n % 2 == 1 {
+        let i = n - 1;
+        s0 += x[i] * c0[i];
+        s1 += x[i] * c1[i];
+        s2 += x[i] * c2[i];
+        s3 += x[i] * c3[i];
+    }
+    [s0 + t0, s1 + t1, s2 + t2, s3 + t3]
+}
+
+/// Nearest centroid of `x` among the rows of `c` (norms trick).
+/// Returns `(argmin_j, min_j ‖x−c_j‖²)` — the native counterpart of the
+/// L1 `assign` kernel. Processes centroids in blocks of four so the
+/// point vector is streamed once per block instead of once per centroid.
+#[inline]
+pub fn nearest(x: &[f32], xn: f32, c: &DenseMatrix, cnorms: &[f32]) -> (u32, f32) {
+    debug_assert_eq!(c.rows, cnorms.len());
+    let mut best_j = 0u32;
+    let mut best = f32::INFINITY;
+    let k = c.rows;
+    let blocks = k / 4;
+    for b in 0..blocks {
+        let j = b * 4;
+        let dots = dot4(x, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+        for (o, &dt) in dots.iter().enumerate() {
+            let d2 = (xn + cnorms[j + o] - 2.0 * dt).max(0.0);
+            if d2 < best {
+                best = d2;
+                best_j = (j + o) as u32;
+            }
+        }
+    }
+    for j in blocks * 4..k {
+        let d2 = sq_dist_norms(x, xn, c.row(j), cnorms[j]);
+        if d2 < best {
+            best = d2;
+            best_j = j as u32;
+        }
+    }
+    (best_j, best)
+}
+
+/// `acc += x` with f64 accumulation (sufficient-statistics path).
+#[inline]
+pub fn add_into(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for i in 0..x.len() {
+        acc[i] += x[i] as f64;
+    }
+}
+
+/// `acc -= x` with f64 accumulation.
+#[inline]
+pub fn sub_from(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for i in 0..x.len() {
+        acc[i] -= x[i] as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{gen, Cases};
+
+    #[test]
+    fn dot_matches_naive() {
+        Cases::new(100).run(|rng| {
+            let n = rng.below(200);
+            let a = gen::matrix(rng, 1, n);
+            let b = gen::matrix(rng, 1, n);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!(
+                (got - naive).abs() <= 1e-3 * (1.0 + naive.abs()),
+                "n={n} got={got} naive={naive}"
+            );
+        });
+    }
+
+    #[test]
+    fn sq_dist_norms_matches_exact() {
+        Cases::new(100).run(|rng| {
+            let d = rng.below(100) + 1;
+            let a = gen::matrix(rng, 1, d);
+            let b = gen::matrix(rng, 1, d);
+            let exact = sq_dist(&a, &b);
+            let via = sq_dist_norms(&a, sq_norm(&a), &b, sq_norm(&b));
+            assert!(
+                (exact - via).abs() <= 1e-2 * (1.0 + exact.abs()),
+                "d={d} exact={exact} via={via}"
+            );
+        });
+    }
+
+    #[test]
+    fn nearest_matches_bruteforce() {
+        Cases::new(60).run(|rng| {
+            let (_, d, k) = gen::shape(rng, 1, 50, 12);
+            let c = DenseMatrix::from_vec(k, d, gen::matrix(rng, k, d));
+            let cn = c.row_sq_norms();
+            let x = gen::matrix(rng, 1, d);
+            let xn = sq_norm(&x);
+            let (j, d2) = nearest(&x, xn, &c, &cn);
+            let brute: Vec<f32> =
+                (0..k).map(|j| sq_dist(&x, c.row(j))).collect();
+            let jb = brute
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            // allow tie-or-epsilon disagreement on the index, but the
+            // achieved distance must be ≈ optimal
+            assert!(
+                (d2 - brute[jb]).abs() <= 1e-2 * (1.0 + brute[jb].abs()),
+                "d2={d2} best={} j={j} jb={jb}",
+                brute[jb]
+            );
+        });
+    }
+
+    #[test]
+    fn permute_and_slice() {
+        let m = DenseMatrix::from_vec(3, 2, vec![0., 1., 10., 11., 20., 21.]);
+        let p = m.permute_rows(&[2, 0, 1]);
+        assert_eq!(p.row(0), &[20., 21.]);
+        assert_eq!(p.row(1), &[0., 1.]);
+        let s = p.slice_rows(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.row(1), &[10., 11.]);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut acc = vec![1.0f64; 5];
+        let x: Vec<f32> = vec![0.5; 5];
+        add_into(&mut acc, &x);
+        sub_from(&mut acc, &x);
+        for v in acc {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        DenseMatrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dense and sparse (CSR) linear algebra built for the k-means hot path.
+//!
+//! Everything is `f32` storage with `f64` accumulation where exactness
+//! matters (sufficient statistics survive millions of add/subtract
+//! cycles in the nested-batch algorithms — see `kmeans::state`).
+
+pub mod dense;
+pub mod sparse;
+
+pub use dense::DenseMatrix;
+pub use sparse::CsrMatrix;

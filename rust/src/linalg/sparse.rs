@@ -1,0 +1,426 @@
+//! CSR sparse matrices and the sparse↔dense distance kernels.
+//!
+//! RCV1-like data is ~76 non-zeros in 47k dimensions, while centroids
+//! densify as points accumulate (the paper's φ ≫ 1 regime, Supp. A.2).
+//! We therefore keep centroids dense and compute
+//! `‖x−c‖² = ‖x‖² + ‖c‖² − 2 Σ_t v_t·c[idx_t]` with a gather loop over
+//! the point's non-zeros only — O(nnz) per centroid, not O(d).
+
+use crate::linalg::dense::DenseMatrix;
+
+/// Compressed sparse row matrix, f32 values, u32 column indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn empty(cols: usize) -> Self {
+        Self { rows: 0, cols, indptr: vec![0], indices: vec![], values: vec![] }
+    }
+
+    /// Append a row given (sorted or unsorted) column/value pairs.
+    pub fn push_row(&mut self, cols_vals: &[(u32, f32)]) {
+        for &(c, v) in cols_vals {
+            assert!((c as usize) < self.cols, "column {c} out of range");
+            self.indices.push(c);
+            self.values.push(v);
+        }
+        self.rows += 1;
+        self.indptr.push(self.indices.len());
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        debug_assert!(i < self.rows);
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    #[inline]
+    pub fn nnz_row(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// ‖row_i‖² for every row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| {
+                let (_, vals) = self.row(i);
+                vals.iter().map(|v| v * v).sum()
+            })
+            .collect()
+    }
+
+    /// Materialise a row permutation.
+    pub fn permute_rows(&self, perm: &[usize]) -> CsrMatrix {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = CsrMatrix::empty(self.cols);
+        out.indices.reserve(self.nnz());
+        out.values.reserve(self.nnz());
+        for &p in perm {
+            let (idx, vals) = self.row(p);
+            out.indices.extend_from_slice(idx);
+            out.values.extend_from_slice(vals);
+            out.rows += 1;
+            out.indptr.push(out.indices.len());
+        }
+        out
+    }
+
+    /// Rows `[lo, hi)` as a new matrix.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let (plo, phi) = (self.indptr[lo], self.indptr[hi]);
+        CsrMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            indptr: self.indptr[lo..=hi].iter().map(|&p| p - plo).collect(),
+            indices: self.indices[plo..phi].to_vec(),
+            values: self.values[plo..phi].to_vec(),
+        }
+    }
+
+    /// Dense copy (tests, small data only).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            let r = m.row_mut(i);
+            for (j, v) in idx.iter().zip(vals) {
+                r[*j as usize] += *v;
+            }
+        }
+        m
+    }
+
+    /// Mean number of non-zeros per row (the paper's `s`).
+    pub fn mean_nnz(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows as f64
+        }
+    }
+}
+
+/// ⟨sparse row, dense vector⟩: the sparse hot loop.
+#[inline]
+pub fn spdot(idx: &[u32], vals: &[f32], dense: &[f32]) -> f32 {
+    debug_assert_eq!(idx.len(), vals.len());
+    let mut s = 0f32;
+    for t in 0..idx.len() {
+        // Safety: indices are validated < cols at construction.
+        unsafe {
+            s += vals.get_unchecked(t)
+                * dense.get_unchecked(*idx.get_unchecked(t) as usize);
+        }
+    }
+    s
+}
+
+/// Squared distance from a sparse point to a dense centroid via norms.
+#[inline]
+pub fn sq_dist_sparse(
+    idx: &[u32],
+    vals: &[f32],
+    xn: f32,
+    c: &[f32],
+    cn: f32,
+) -> f32 {
+    (xn + cn - 2.0 * spdot(idx, vals, c)).max(0.0)
+}
+
+/// Nearest dense centroid of a sparse point; counts as k distance
+/// evaluations of O(nnz) each.
+#[inline]
+pub fn nearest_sparse(
+    idx: &[u32],
+    vals: &[f32],
+    xn: f32,
+    c: &DenseMatrix,
+    cnorms: &[f32],
+) -> (u32, f32) {
+    let mut best_j = 0u32;
+    let mut best = f32::INFINITY;
+    for j in 0..c.rows {
+        let d2 = sq_dist_sparse(idx, vals, xn, c.row(j), cnorms[j]);
+        if d2 < best {
+            best = d2;
+            best_j = j as u32;
+        }
+    }
+    (best_j, best)
+}
+
+/// Transposed centroid block (d × k, row-major) for the batched sparse
+/// assignment kernel: turning `k` gathers per non-zero into one
+/// sequential k-length AXPY makes the inner loop vectorisable
+/// (EXPERIMENTS.md §Perf change 3).
+pub struct TransposedCentroids {
+    pub d: usize,
+    pub k: usize,
+    /// ct[col * k + j] = C(j)[col]
+    pub ct: Vec<f32>,
+}
+
+impl TransposedCentroids {
+    pub fn build(c: &DenseMatrix) -> Self {
+        let (k, d) = (c.rows, c.cols);
+        let mut ct = vec![0f32; d * k];
+        for j in 0..k {
+            let row = c.row(j);
+            for col in 0..d {
+                ct[col * k + j] = row[col];
+            }
+        }
+        Self { d, k, ct }
+    }
+
+    /// All-centroid dot products of one sparse row:
+    /// `dots[j] = Σ_t vals[t]·C(j)[idx[t]]`, via sequential AXPYs into
+    /// the k-length accumulator.
+    #[inline]
+    pub fn dots(&self, idx: &[u32], vals: &[f32], dots: &mut [f32]) {
+        debug_assert_eq!(dots.len(), self.k);
+        dots.fill(0.0);
+        let k = self.k;
+        for t in 0..idx.len() {
+            let v = vals[t];
+            let base = idx[t] as usize * k;
+            // Safety: idx validated < cols = d at construction.
+            let row = unsafe { self.ct.get_unchecked(base..base + k) };
+            for j in 0..k {
+                dots[j] += v * row[j];
+            }
+        }
+    }
+
+    /// Nearest centroid of a sparse point through the transposed block.
+    #[inline]
+    pub fn nearest(
+        &self,
+        idx: &[u32],
+        vals: &[f32],
+        xn: f32,
+        cnorms: &[f32],
+        scratch: &mut [f32],
+    ) -> (u32, f32) {
+        self.dots(idx, vals, scratch);
+        let mut best = f32::INFINITY;
+        let mut best_j = 0u32;
+        for j in 0..self.k {
+            let d2 = (xn + cnorms[j] - 2.0 * scratch[j]).max(0.0);
+            if d2 < best {
+                best = d2;
+                best_j = j as u32;
+            }
+        }
+        (best_j, best)
+    }
+
+    /// Full squared-distance row of a sparse point.
+    #[inline]
+    pub fn dist_row(
+        &self,
+        idx: &[u32],
+        vals: &[f32],
+        xn: f32,
+        cnorms: &[f32],
+        out: &mut [f32],
+    ) {
+        self.dots(idx, vals, out);
+        for j in 0..self.k {
+            out[j] = (xn + cnorms[j] - 2.0 * out[j]).max(0.0);
+        }
+    }
+}
+
+/// Scatter-add a sparse row into an f64 accumulator row.
+#[inline]
+pub fn scatter_add(acc: &mut [f64], idx: &[u32], vals: &[f32]) {
+    for t in 0..idx.len() {
+        acc[idx[t] as usize] += vals[t] as f64;
+    }
+}
+
+/// Scatter-subtract a sparse row from an f64 accumulator row.
+#[inline]
+pub fn scatter_sub(acc: &mut [f64], idx: &[u32], vals: &[f32]) {
+    for t in 0..idx.len() {
+        acc[idx[t] as usize] -= vals[t] as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense;
+    use crate::util::propcheck::Cases;
+    use crate::util::rng::Pcg64;
+
+    fn random_csr(rng: &mut Pcg64, rows: usize, cols: usize, nnz_per: usize) -> CsrMatrix {
+        let mut m = CsrMatrix::empty(cols);
+        for _ in 0..rows {
+            let nnz = rng.below(nnz_per + 1);
+            let cols_idx = rng.sample_distinct(cols, nnz.min(cols));
+            let row: Vec<(u32, f32)> = cols_idx
+                .iter()
+                .map(|&c| (c as u32, rng.gauss_f32()))
+                .collect();
+            m.push_row(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn spdot_matches_dense_dot() {
+        Cases::new(60).run(|rng| {
+            let cols = rng.below(100) + 1;
+            let m = random_csr(rng, 1, cols, 20);
+            let dvec: Vec<f32> = (0..cols).map(|_| rng.gauss_f32()).collect();
+            let (idx, vals) = m.row(0);
+            let got = spdot(idx, vals, &dvec);
+            let dense_row = m.to_dense();
+            let naive = dense::dot(dense_row.row(0), &dvec);
+            assert!((got - naive).abs() < 1e-3 * (1.0 + naive.abs()));
+        });
+    }
+
+    #[test]
+    fn sq_dist_sparse_matches_dense() {
+        Cases::new(60).run(|rng| {
+            let cols = rng.below(80) + 1;
+            let m = random_csr(rng, 4, cols, 10);
+            let c: Vec<f32> = (0..cols).map(|_| rng.gauss_f32()).collect();
+            let cn = dense::sq_norm(&c);
+            let dm = m.to_dense();
+            let xns = m.row_sq_norms();
+            for i in 0..m.rows {
+                let (idx, vals) = m.row(i);
+                let got = sq_dist_sparse(idx, vals, xns[i], &c, cn);
+                let exact = dense::sq_dist(dm.row(i), &c);
+                assert!(
+                    (got - exact).abs() < 1e-2 * (1.0 + exact.abs()),
+                    "i={i} got={got} exact={exact}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn nearest_sparse_matches_dense_nearest() {
+        Cases::new(40).run(|rng| {
+            let cols = rng.below(60) + 2;
+            let k = rng.below(8) + 1;
+            let m = random_csr(rng, 3, cols, 12);
+            let cmat = DenseMatrix::from_vec(
+                k,
+                cols,
+                (0..k * cols).map(|_| rng.gauss_f32()).collect(),
+            );
+            let cn = cmat.row_sq_norms();
+            let dm = m.to_dense();
+            let xns = m.row_sq_norms();
+            for i in 0..m.rows {
+                let (idx, vals) = m.row(i);
+                let (_, d2s) = nearest_sparse(idx, vals, xns[i], &cmat, &cn);
+                let (_, d2d) =
+                    dense::nearest(dm.row(i), dense::sq_norm(dm.row(i)), &cmat, &cn);
+                assert!((d2s - d2d).abs() < 1e-2 * (1.0 + d2d.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn transposed_matches_gather_path() {
+        Cases::new(40).run(|rng| {
+            let cols = rng.below(200) + 2;
+            let k = rng.below(30) + 1;
+            let m = random_csr(rng, 6, cols, 15);
+            let cmat = DenseMatrix::from_vec(
+                k,
+                cols,
+                (0..k * cols).map(|_| rng.gauss_f32()).collect(),
+            );
+            let cn = cmat.row_sq_norms();
+            let tc = TransposedCentroids::build(&cmat);
+            let xns = m.row_sq_norms();
+            let mut scratch = vec![0f32; k];
+            let mut row_out = vec![0f32; k];
+            for i in 0..m.rows {
+                let (idx, vals) = m.row(i);
+                let (jt, dt) =
+                    tc.nearest(idx, vals, xns[i], &cn, &mut scratch);
+                let (jg, dg) = nearest_sparse(idx, vals, xns[i], &cmat, &cn);
+                assert!(
+                    (dt - dg).abs() <= 1e-3 * (1.0 + dg.abs()),
+                    "i={i}: trans {dt} vs gather {dg}"
+                );
+                // indices may differ only on numerical ties
+                if jt != jg {
+                    let a = sq_dist_sparse(idx, vals, xns[i], cmat.row(jt as usize), cn[jt as usize]);
+                    assert!((a - dg).abs() <= 1e-3 * (1.0 + dg.abs()));
+                }
+                tc.dist_row(idx, vals, xns[i], &cn, &mut row_out);
+                for j in 0..k {
+                    let e = sq_dist_sparse(idx, vals, xns[i], cmat.row(j), cn[j]);
+                    assert!(
+                        (row_out[j] - e).abs() <= 1e-3 * (1.0 + e.abs()),
+                        "row {j}: {} vs {e}",
+                        row_out[j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn scatter_roundtrip() {
+        let mut acc = vec![0.0f64; 10];
+        let idx = [1u32, 5, 9];
+        let vals = [1.5f32, -2.0, 0.25];
+        scatter_add(&mut acc, &idx, &vals);
+        assert_eq!(acc[5], -2.0);
+        scatter_sub(&mut acc, &idx, &vals);
+        assert!(acc.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn permute_slice_dense_consistency() {
+        let mut rng = Pcg64::new(3, 3);
+        let m = random_csr(&mut rng, 6, 20, 5);
+        let perm = [5usize, 3, 1, 0, 2, 4];
+        let p = m.permute_rows(&perm);
+        for (i, &src) in perm.iter().enumerate() {
+            assert_eq!(p.row(i), m.row(src));
+        }
+        let s = p.slice_rows(2, 5);
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.row(0), p.row(2));
+    }
+
+    #[test]
+    fn mean_nnz_and_norms() {
+        let mut m = CsrMatrix::empty(4);
+        m.push_row(&[(0, 3.0), (2, 4.0)]);
+        m.push_row(&[]);
+        assert_eq!(m.mean_nnz(), 1.0);
+        assert_eq!(m.row_sq_norms(), vec![25.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_row_validates_columns() {
+        let mut m = CsrMatrix::empty(3);
+        m.push_row(&[(3, 1.0)]);
+    }
+}

@@ -1,0 +1,196 @@
+//! `nmbkm` — command-line interface.
+//!
+//! ```text
+//! nmbkm run --dataset infmnist --algo tb --rho inf --k 50 --b0 5000 \
+//!           --seconds 20 --seed 0 --engine xla --threads 8 --out run.csv
+//! nmbkm experiment fig1|fig2|fig3|table1|table2|all [--full] [--seeds N]
+//! nmbkm info [--artifacts DIR]
+//! ```
+//!
+//! `run` executes one clustering job and writes its per-round trace;
+//! `experiment` regenerates a paper table/figure (see DESIGN.md);
+//! `info` prints platform/artifact status.
+
+use nmbkm::config::RunConfig;
+use nmbkm::coordinator::progress::results_dir;
+use nmbkm::data::{gaussian::GaussianMixture, infmnist::InfMnist, rcv1::Rcv1Sim, Dataset};
+use nmbkm::experiments::{self, common::ExpOpts};
+use nmbkm::util::args::{usage, Args, OptSpec};
+
+fn run_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "dataset", takes_value: true, default: Some("gaussian"), help: "gaussian | infmnist | rcv1" },
+        OptSpec { name: "n", takes_value: true, default: Some("10000"), help: "training points" },
+        OptSpec { name: "nval", takes_value: true, default: Some("2000"), help: "validation points" },
+        OptSpec { name: "data-seed", takes_value: true, default: Some("7"), help: "dataset generator seed" },
+        OptSpec { name: "algo", takes_value: true, default: None, help: "lloyd|elkan|sgd|mb|mbf|gb|tb [tb]" },
+        OptSpec { name: "rho", takes_value: true, default: None, help: "gb/tb threshold, number or 'inf' [inf]" },
+        OptSpec { name: "k", takes_value: true, default: None, help: "clusters [50]" },
+        OptSpec { name: "b0", takes_value: true, default: None, help: "(initial) batch size [5000]" },
+        OptSpec { name: "seconds", takes_value: true, default: None, help: "work-time budget [10]" },
+        OptSpec { name: "rounds", takes_value: true, default: None, help: "max rounds" },
+        OptSpec { name: "seed", takes_value: true, default: None, help: "run seed (shuffle + init) [0]" },
+        OptSpec { name: "engine", takes_value: true, default: None, help: "native | xla [native]" },
+        OptSpec { name: "threads", takes_value: true, default: None, help: "worker threads [all cores]" },
+        OptSpec { name: "artifacts", takes_value: true, default: None, help: "artifacts dir (xla engine) [artifacts]" },
+        OptSpec { name: "config", takes_value: true, default: None, help: "key=value config file (flags override)" },
+        OptSpec { name: "out", takes_value: true, default: None, help: "trace CSV path" },
+        OptSpec { name: "quiet", takes_value: false, default: None, help: "suppress per-round log" },
+    ]
+}
+
+fn build_dataset(args: &Args) -> anyhow::Result<Dataset> {
+    let n = args.get_usize("n")?;
+    let nval = args.get_usize("nval")?;
+    let seed = args.get_u64("data-seed")?;
+    Ok(match args.get("dataset").unwrap_or("gaussian") {
+        "gaussian" => GaussianMixture::default_spec(10, 32).dataset(n, nval, seed),
+        "infmnist" => InfMnist::default().dataset(n, nval, seed),
+        "rcv1" => Rcv1Sim::default().dataset(n, nval, seed),
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    })
+}
+
+fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
+    let spec = run_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let ds = build_dataset(&args)?;
+    let mut cfg = RunConfig::default();
+    // config file first, explicit flags override
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        cfg.apply_file(&text).map_err(anyhow::Error::msg)?;
+    } else if args.get("threads").is_none() {
+        cfg.threads = std::thread::available_parallelism()
+            .map(|x| x.get())
+            .unwrap_or(1);
+    }
+    let overridden = RunConfig::from_args(&args).map_err(anyhow::Error::msg)?;
+    // fold in only the flags that were actually passed
+    if args.get("algo").is_some() { cfg.algo = overridden.algo; }
+    if args.get("rho").is_some() { cfg.rho = overridden.rho; }
+    if args.get("k").is_some() { cfg.k = overridden.k; }
+    if args.get("b0").is_some() { cfg.b0 = overridden.b0; }
+    if args.get("seconds").is_some() { cfg.max_seconds = overridden.max_seconds; }
+    if args.get("rounds").is_some() { cfg.max_rounds = overridden.max_rounds; }
+    if args.get("seed").is_some() { cfg.seed = overridden.seed; }
+    if args.get("engine").is_some() { cfg.engine = overridden.engine; }
+    if args.get("threads").is_some() { cfg.threads = overridden.threads; }
+    if args.get("artifacts").is_some() { cfg.artifacts_dir = overridden.artifacts_dir; }
+
+    println!("dataset: {}", ds.summary());
+    println!(
+        "running {} (k={}, b0={}, engine={:?}, threads={})",
+        cfg.label(), cfg.k, cfg.b0, cfg.engine, cfg.threads
+    );
+    let out = nmbkm::kmeans::run(&ds.train, Some(&ds.val), &cfg)?;
+    if !args.flag("quiet") {
+        for r in &out.trace.records {
+            println!(
+                "round {:>4}  t={:>8.3}s  b={:>7}  calcs={:>12}  skips={:>12}  changed={:>8}  mse={}",
+                r.round,
+                r.t_work,
+                r.batch,
+                r.dist_calcs,
+                r.bound_skips,
+                r.changed,
+                r.val_mse.map(|m| format!("{m:.6e}")).unwrap_or_else(|| "-".into()),
+            );
+        }
+    }
+    println!(
+        "done: {} rounds, {:.3}s work, final validation MSE {:.6e}",
+        out.rounds, out.work_secs, out.final_mse
+    );
+    if let Some(path) = args.get("out") {
+        out.trace.to_table().write_csv(std::path::Path::new(path))?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(raw: &[String]) -> anyhow::Result<()> {
+    let which = raw.first().map(|s| s.as_str()).unwrap_or("");
+    let rest: Vec<String> = raw.iter().skip(1).cloned().collect();
+    let opts = ExpOpts::from_args(&rest);
+    println!(
+        "experiment {which}: scale={:?} seeds={} threads={} budget={}s",
+        opts.scale, opts.seeds, opts.threads, opts.seconds
+    );
+    match which {
+        "fig1" => experiments::fig1::run(&opts),
+        "fig2" => experiments::rho_sweep::run(2, &opts),
+        "fig3" => experiments::rho_sweep::run(3, &opts),
+        "table1" => experiments::table1::run(&opts).map(|_| ()),
+        "table2" => experiments::table2::run(&opts).map(|_| ()),
+        "ablations" => experiments::ablations::run(&opts),
+        "all" => {
+            experiments::table1::run(&opts)?;
+            experiments::fig1::run(&opts)?;
+            experiments::rho_sweep::run(2, &opts)?;
+            experiments::rho_sweep::run(3, &opts)?;
+            experiments::table2::run(&opts).map(|_| ())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (fig1|fig2|fig3|table1|table2|ablations|all)"
+        ),
+    }
+}
+
+fn cmd_info(raw: &[String]) -> anyhow::Result<()> {
+    let dir = raw
+        .iter()
+        .position(|a| a == "--artifacts")
+        .and_then(|p| raw.get(p + 1).cloned())
+        .unwrap_or_else(|| "artifacts".to_string());
+    println!("nmbkm — Nested Mini-Batch K-Means (Newling & Fleuret, NIPS 2016)");
+    println!("results dir: {}", results_dir().display());
+    println!(
+        "threads available: {}",
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    );
+    match nmbkm::runtime::artifact::Manifest::load(std::path::Path::new(&dir)) {
+        Ok(m) => {
+            println!(
+                "artifacts [{dir}]: k={} batches={:?} dims={:?}, {} programs",
+                m.k,
+                m.batches,
+                m.dims,
+                m.entries.len()
+            );
+            match nmbkm::runtime::executor::XlaEngine::load(&dir) {
+                Ok(_) => println!("PJRT CPU client: OK (all programs compiled)"),
+                Err(e) => println!("PJRT load failed: {e:#}"),
+            }
+        }
+        Err(e) => println!("no artifacts ({e:#}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => ("help", vec![]),
+    };
+    let result = match cmd {
+        "run" => cmd_run(&rest),
+        "experiment" => cmd_experiment(&rest),
+        "info" => cmd_info(&rest),
+        _ => {
+            println!("nmbkm <run|experiment|info>\n");
+            println!("{}", usage("nmbkm run", "run one clustering job", &run_spec()));
+            println!(
+                "nmbkm experiment <fig1|fig2|fig3|table1|table2|all> \
+                 [--full] [--seeds N] [--seconds S] [--threads T] [--engine-xla]"
+            );
+            println!("nmbkm info [--artifacts DIR]");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

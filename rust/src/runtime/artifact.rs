@@ -1,0 +1,225 @@
+//! Artifact manifest: what `python/compile/aot.py` exported.
+//!
+//! The manifest is the contract between the build-time python layer and
+//! the rust runtime; this module parses and validates it with the
+//! in-house JSON reader (no serde offline).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// dtype of a program input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// One tensor signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported program.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub k: usize,
+    pub batches: Vec<usize>,
+    pub dims: Vec<usize>,
+    pub fingerprint: String,
+    pub entries: Vec<Entry>,
+}
+
+fn parse_sig(v: &Json) -> Result<TensorSig> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("signature not an array"))?;
+    let dtype = Dtype::parse(
+        arr.first()
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow!("missing dtype"))?,
+    )?;
+    let shape = arr
+        .get(1)
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSig { dtype, shape })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let k = v
+            .get("k")
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing k"))?;
+        let nums = |key: &str| -> Result<Vec<usize>> {
+            v.get(key)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("manifest missing {key}"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad {key}")))
+                .collect()
+        };
+        let batches = nums("batches")?;
+        let dims = nums("dims")?;
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(|x| x.as_str())
+            .unwrap_or_default()
+            .to_string();
+        let mut entries = vec![];
+        for e in v
+            .get("entries")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let file = dir.join(
+                e.get("file")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("entry missing file"))?,
+            );
+            let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+                e.get(key)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("entry missing {key}"))?
+                    .iter()
+                    .map(parse_sig)
+                    .collect()
+            };
+            entries.push(Entry {
+                name,
+                file,
+                inputs: sigs("inputs")?,
+                outputs: sigs("outputs")?,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no entries");
+        Ok(Manifest { k, batches, dims, fingerprint, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Smallest compiled dim ≥ `d`, if any.
+    pub fn fit_dim(&self, d: usize) -> Option<usize> {
+        self.dims.iter().cloned().filter(|&x| x >= d).min()
+    }
+
+    /// Largest compiled batch tile ≤ `n`, falling back to the smallest.
+    pub fn fit_batch(&self, n: usize) -> usize {
+        self.batches
+            .iter()
+            .cloned()
+            .filter(|&b| b <= n)
+            .max()
+            .unwrap_or_else(|| self.batches.iter().cloned().min().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "k": 64, "batches": [2048, 256], "dims": [64, 784],
+ "fingerprint": "deadbeef",
+ "entries": [
+  {"name": "assign_b256_d64_k64", "file": "assign_b256_d64_k64.hlo.txt",
+   "inputs": [["float32", [256, 64]], ["float32", [64, 64]], ["float32", [64]]],
+   "outputs": [["int32", [256]], ["float32", [256]]]}
+ ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/arts")).unwrap();
+        assert_eq!(m.k, 64);
+        assert_eq!(m.batches, vec![2048, 256]);
+        let e = m.entry("assign_b256_d64_k64").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![256, 64]);
+        assert_eq!(e.outputs[0].dtype, Dtype::I32);
+        assert_eq!(e.file, Path::new("/tmp/arts/assign_b256_d64_k64.hlo.txt"));
+        assert_eq!(e.inputs[0].numel(), 256 * 64);
+    }
+
+    #[test]
+    fn fit_rules() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.fit_dim(10), Some(64));
+        assert_eq!(m.fit_dim(64), Some(64));
+        assert_eq!(m.fit_dim(300), Some(784));
+        assert_eq!(m.fit_dim(10_000), None);
+        assert_eq!(m.fit_batch(100), 256);
+        assert_eq!(m.fit_batch(256), 256);
+        assert_eq!(m.fit_batch(5000), 2048);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", Path::new("/x")).is_err());
+        assert!(Manifest::parse("[1,2]", Path::new("/x")).is_err());
+        assert!(
+            Manifest::parse(r#"{"k":64,"batches":[1],"dims":[1],"entries":[]}"#, Path::new("/x"))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // when `make artifacts` has run, validate the real thing
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entry(&format!("assign_b256_d64_k{}", m.k)).is_some());
+            for e in &m.entries {
+                assert!(e.file.exists(), "missing {:?}", e.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,395 @@
+//! The XLA assignment engine: executes the AOT Pallas/XLA programs on
+//! the PJRT CPU client from the rust hot path.
+//!
+//! Dispatch rules (shape menu from the manifest):
+//! * batch tiles: the selection is cut into the largest compiled batch
+//!   that fits (2048), with the 256-row tile mopping up remainders;
+//! * dims: inputs are zero-padded to the smallest compiled d ≥ data d —
+//!   zero columns contribute nothing to distances;
+//! * clusters: centroids are padded to the compiled k with zero rows
+//!   whose advertised ‖c‖² is +BIG, so padded centroids never win the
+//!   argmin.
+//!
+//! Sparse data or dims beyond the compiled menu fall back to the native
+//! engine (CSR gather loops are exactly what the scalar path is for);
+//! the fallback is recorded and surfaced via [`XlaEngine::stats`].
+
+use crate::coordinator::shard::Pool;
+use crate::data::Data;
+use crate::kmeans::assign::{AssignEngine, NativeEngine, Sel};
+use crate::kmeans::state::Centroids;
+use crate::runtime::artifact::Manifest;
+use anyhow::{anyhow, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Squared-norm advertised for padding centroids: far beyond any real
+/// distance, well inside f32 range.
+const PAD_CNORM: f32 = 1e30;
+
+/// Execution statistics (observability + tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub xla_calls: u64,
+    pub xla_points: u64,
+    pub native_fallbacks: u64,
+}
+
+pub struct XlaEngine {
+    manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    native: NativeEngine,
+    stats: RefCell<EngineStats>,
+    warned_fallback: Cell<bool>,
+}
+
+impl XlaEngine {
+    /// Load the manifest and compile every program on the CPU client.
+    pub fn load(artifacts_dir: &str) -> Result<XlaEngine> {
+        let dir = Path::new(artifacts_dir);
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        for entry in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| {
+                    anyhow!("parse {:?}: {e:?}", entry.file)
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+            execs.insert(entry.name.clone(), exe);
+        }
+        Ok(XlaEngine {
+            manifest,
+            execs,
+            native: NativeEngine,
+            stats: RefCell::new(EngineStats::default()),
+            warned_fallback: Cell::new(false),
+        })
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    pub fn kpad(&self) -> usize {
+        self.manifest.k
+    }
+
+    /// Can this engine serve the workload natively on XLA?
+    fn supports(&self, data: &Data, k: usize) -> bool {
+        !data.is_sparse()
+            && k <= self.manifest.k
+            && self.manifest.fit_dim(data.dim()).is_some()
+    }
+
+    fn note_fallback(&self) {
+        self.stats.borrow_mut().native_fallbacks += 1;
+        if !self.warned_fallback.replace(true) {
+            eprintln!(
+                "[nmbkm::runtime] workload outside the compiled shape menu \
+                 (sparse or d too large) — using the native engine"
+            );
+        }
+    }
+
+    /// Pad centroids to (kpad, dpad) + the poisoned-norm vector.
+    fn pack_centroids(
+        &self,
+        cent: &Centroids,
+        dpad: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let (k, d) = (cent.k(), cent.d());
+        let kpad = self.manifest.k;
+        let mut buf = vec![0f32; kpad * dpad];
+        for j in 0..k {
+            buf[j * dpad..j * dpad + d].copy_from_slice(cent.c.row(j));
+        }
+        let mut norms = vec![PAD_CNORM; kpad];
+        norms[..k].copy_from_slice(&cent.norms);
+        let c_lit = xla::Literal::vec1(&buf)
+            .reshape(&[kpad as i64, dpad as i64])
+            .map_err(|e| anyhow!("reshape centroids: {e:?}"))?;
+        let n_lit = xla::Literal::vec1(&norms);
+        Ok((c_lit, n_lit))
+    }
+
+    /// Pack `count` selected rows starting at `off` into a (b, dpad)
+    /// zero-padded literal.
+    fn pack_batch(
+        &self,
+        data: &Data,
+        sel: &Sel,
+        off: usize,
+        count: usize,
+        b: usize,
+        dpad: usize,
+    ) -> Result<xla::Literal> {
+        let d = data.dim();
+        let mut buf = vec![0f32; b * dpad];
+        for t in 0..count {
+            let i = sel.nth(off + t);
+            data.write_row_dense(i, &mut buf[t * dpad..t * dpad + d]);
+        }
+        xla::Literal::vec1(&buf)
+            .reshape(&[b as i64, dpad as i64])
+            .map_err(|e| anyhow!("reshape batch: {e:?}"))
+    }
+
+    fn exec(
+        &self,
+        name: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}'"))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// XLA-tiled assignment over a dense selection.
+    fn assign_xla(
+        &self,
+        data: &Data,
+        sel: &Sel,
+        cent: &Centroids,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> Result<u64> {
+        let n = sel.len();
+        let dpad = self
+            .manifest
+            .fit_dim(data.dim())
+            .context("dim outside menu")?;
+        let (c_lit, n_lit) = self.pack_centroids(cent, dpad)?;
+        let mut off = 0usize;
+        while off < n {
+            let b = self.manifest.fit_batch(n - off);
+            let count = (n - off).min(b);
+            let x_lit = self.pack_batch(data, sel, off, count, b, dpad)?;
+            let name = format!("assign_b{b}_d{dpad}_k{}", self.manifest.k);
+            let outs = self.exec(&name, &[x_lit, c_lit.clone(), n_lit.clone()])?;
+            let labels = outs[0]
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("labels: {e:?}"))?;
+            let d2 = outs[1]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("d2: {e:?}"))?;
+            for t in 0..count {
+                out_lbl[off + t] = labels[t] as u32;
+                out_d2[off + t] = d2[t];
+            }
+            {
+                let mut s = self.stats.borrow_mut();
+                s.xla_calls += 1;
+                s.xla_points += count as u64;
+            }
+            off += count;
+        }
+        Ok(n as u64 * cent.k() as u64)
+    }
+
+    /// XLA-tiled full distance rows.
+    fn dist_rows_xla(
+        &self,
+        data: &Data,
+        sel: &Sel,
+        cent: &Centroids,
+        out_d2: &mut [f32],
+    ) -> Result<u64> {
+        let n = sel.len();
+        let k = cent.k();
+        let kpad = self.manifest.k;
+        let dpad = self
+            .manifest
+            .fit_dim(data.dim())
+            .context("dim outside menu")?;
+        let (c_lit, n_lit) = self.pack_centroids(cent, dpad)?;
+        let mut off = 0usize;
+        while off < n {
+            let b = self.manifest.fit_batch(n - off);
+            let count = (n - off).min(b);
+            let x_lit = self.pack_batch(data, sel, off, count, b, dpad)?;
+            let name = format!("distmat_b{b}_d{dpad}_k{kpad}");
+            let outs = self.exec(&name, &[x_lit, c_lit.clone(), n_lit.clone()])?;
+            let mat = outs[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("distmat: {e:?}"))?;
+            for t in 0..count {
+                out_d2[(off + t) * k..(off + t + 1) * k]
+                    .copy_from_slice(&mat[t * kpad..t * kpad + k]);
+            }
+            {
+                let mut s = self.stats.borrow_mut();
+                s.xla_calls += 1;
+                s.xla_points += count as u64;
+            }
+            off += count;
+        }
+        Ok((n * k) as u64)
+    }
+}
+
+impl AssignEngine for XlaEngine {
+    fn assign(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64 {
+        if !self.supports(data, centroids.k()) {
+            self.note_fallback();
+            return self
+                .native
+                .assign(data, sel, centroids, pool, out_lbl, out_d2);
+        }
+        self.assign_xla(data, &sel, centroids, out_lbl, out_d2)
+            .expect("XLA assign failed")
+    }
+
+    fn dist_rows(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        out_d2: &mut [f32],
+    ) -> u64 {
+        if !self.supports(data, centroids.k()) {
+            self.note_fallback();
+            return self
+                .native
+                .dist_rows(data, sel, centroids, pool, out_d2);
+        }
+        self.dist_rows_xla(data, &sel, centroids, out_d2)
+            .expect("XLA dist_rows failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::init;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| dir.to_string_lossy().into_owned())
+    }
+
+    #[test]
+    fn xla_assign_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = XlaEngine::load(&dir).unwrap();
+        let pool = Pool::new(2);
+        // n chosen to force both tile sizes + padding (2048 + 256 pad)
+        let n = 2300;
+        for (k, d) in [(7usize, 30usize), (50, 784), (64, 64)] {
+            let data = GaussianMixture::default_spec(k.min(10), d)
+                .generate(n, 42 + k as u64);
+            let cent = init::first_k(&data, k);
+            let mut lx = vec![0u32; n];
+            let mut dx = vec![0f32; n];
+            engine.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lx, &mut dx);
+            let mut ln = vec![0u32; n];
+            let mut dn = vec![0f32; n];
+            NativeEngine.assign(&data, Sel::Range(0, n), &cent, &pool, &mut ln, &mut dn);
+            let mut mismatched_labels = 0;
+            for i in 0..n {
+                // tolerance scales with ‖x‖²: the norms-trick subtraction
+                // amplifies f32 rounding when the true distance is tiny
+                let tol = 1e-2 * (1.0 + dn[i].abs()) + 3e-6 * data.norms[i];
+                assert!(
+                    (dx[i] - dn[i]).abs() <= tol,
+                    "k={k} d={d} i={i}: xla d2 {} vs native {}",
+                    dx[i],
+                    dn[i]
+                );
+                if lx[i] != ln[i] {
+                    // ties may break differently; distances must agree
+                    mismatched_labels += 1;
+                }
+            }
+            assert!(
+                mismatched_labels < n / 20,
+                "k={k} d={d}: {mismatched_labels} label mismatches"
+            );
+        }
+        assert!(engine.stats().xla_calls > 0);
+    }
+
+    #[test]
+    fn xla_dist_rows_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = XlaEngine::load(&dir).unwrap();
+        let pool = Pool::new(2);
+        let (n, k, d) = (300usize, 13usize, 100usize);
+        let data = GaussianMixture::default_spec(5, d).generate(n, 7);
+        let cent = init::first_k(&data, k);
+        let mut mx = vec![0f32; n * k];
+        engine.dist_rows(&data, Sel::Range(0, n), &cent, &pool, &mut mx);
+        let mut mn = vec![0f32; n * k];
+        NativeEngine.dist_rows(&data, Sel::Range(0, n), &cent, &pool, &mut mn);
+        for t in 0..n * k {
+            let tol = 1e-2 * (1.0 + mn[t].abs()) + 3e-6 * data.norms[t / k];
+            assert!(
+                (mx[t] - mn[t]).abs() <= tol,
+                "t={t}: {} vs {}",
+                mx[t],
+                mn[t]
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_falls_back_to_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = XlaEngine::load(&dir).unwrap();
+        let pool = Pool::new(1);
+        let g = crate::data::rcv1::Rcv1Sim {
+            vocab: 500,
+            topic_vocab: 50,
+            ..Default::default()
+        };
+        let data = g.generate(64, 3);
+        let cent = init::first_k(&data, 4);
+        let mut l = vec![0u32; 64];
+        let mut d2 = vec![0f32; 64];
+        engine.assign(&data, Sel::Range(0, 64), &cent, &pool, &mut l, &mut d2);
+        assert!(engine.stats().native_fallbacks > 0);
+        let mut ln = vec![0u32; 64];
+        let mut dn = vec![0f32; 64];
+        NativeEngine.assign(&data, Sel::Range(0, 64), &cent, &pool, &mut ln, &mut dn);
+        assert_eq!(l, ln);
+    }
+}

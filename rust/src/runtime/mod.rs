@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT-compiled Pallas/XLA artifacts and serves
+//! them to the Layer-3 hot path.
+//!
+//! The interchange format is HLO *text* (`artifacts/*.hlo.txt` + a JSON
+//! manifest), produced once by `python/compile/aot.py` — see
+//! DESIGN.md. At startup we compile every manifest entry on the PJRT
+//! CPU client; per round the [`executor::XlaEngine`] pads batches to a
+//! compiled tile shape and executes.
+
+pub mod artifact;
+pub mod executor;
+
+use crate::kmeans::assign::AssignEngine;
+
+/// Build the XLA-backed assignment engine from an artifacts directory.
+pub fn make_engine(artifacts_dir: &str) -> anyhow::Result<Box<dyn AssignEngine>> {
+    let engine = executor::XlaEngine::load(artifacts_dir)?;
+    Ok(Box::new(engine))
+}

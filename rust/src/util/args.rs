@@ -1,0 +1,189 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with typed getters and an auto-generated usage
+//! string. All experiment binaries and the main CLI build on this.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse raw argv (without the program name) against a spec.
+    pub fn parse(raw: &[String], spec: &[OptSpec]) -> Result<Args, ArgError> {
+        let mut args = Args::default();
+        // seed defaults
+        for s in spec {
+            if let Some(d) = s.default {
+                args.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let sp = spec
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| ArgError(format!("unknown option --{name}")))?;
+                if sp.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| ArgError(format!("--{name} needs a value")))?,
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(ArgError(format!("--{name} takes no value")));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, ArgError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| ArgError(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, ArgError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| ArgError(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, ArgError> {
+        let v = self.req(name)?;
+        if v == "inf" || v == "infinity" {
+            return Ok(f64::INFINITY);
+        }
+        v.parse()
+            .map_err(|_| ArgError(format!("--{name} must be a number")))
+    }
+
+    fn req(&self, name: &str) -> Result<&str, ArgError> {
+        self.get(name)
+            .ok_or_else(|| ArgError(format!("missing required --{name}")))
+    }
+}
+
+/// Render a usage block from a spec.
+pub fn usage(prog: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut out = format!("{prog} — {about}\n\noptions:\n");
+    for s in spec {
+        let head = if s.takes_value {
+            format!("  --{} <v>", s.name)
+        } else {
+            format!("  --{}", s.name)
+        };
+        let def = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("{head:<24}{}{def}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "k", takes_value: true, default: Some("50"), help: "clusters" },
+            OptSpec { name: "rho", takes_value: true, default: None, help: "threshold" },
+            OptSpec { name: "quick", takes_value: false, default: None, help: "small run" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::parse(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get_usize("k").unwrap(), 50);
+        let a = Args::parse(&sv(&["--k", "8"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("k").unwrap(), 8);
+        let a = Args::parse(&sv(&["--k=9"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("k").unwrap(), 9);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&sv(&["fig1", "--quick", "x"]), &spec()).unwrap();
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["fig1", "x"]);
+    }
+
+    #[test]
+    fn rho_inf() {
+        let a = Args::parse(&sv(&["--rho", "inf"]), &spec()).unwrap();
+        assert!(a.get_f64("rho").unwrap().is_infinite());
+        let a = Args::parse(&sv(&["--rho", "100"]), &spec()).unwrap();
+        assert_eq!(a.get_f64("rho").unwrap(), 100.0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&sv(&["--bogus"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--rho"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--quick=1"]), &spec()).is_err());
+        let a = Args::parse(&sv(&["--k", "x"]), &spec()).unwrap();
+        assert!(a.get_usize("k").is_err());
+    }
+
+    #[test]
+    fn usage_contains_options() {
+        let u = usage("nmbkm", "test", &spec());
+        assert!(u.contains("--k"));
+        assert!(u.contains("default: 50"));
+    }
+}

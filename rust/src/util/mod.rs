@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! reproducible RNG streams, JSON read/write, CLI parsing, timers and
+//! summary statistics, and a tiny property-testing harness.
+
+pub mod args;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,112 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! A [`Cases`] driver runs a property closure over many seeded cases and
+//! reports the failing seed, so failures reproduce exactly:
+//!
+//! ```ignore
+//! Cases::new(200).run(|rng| {
+//!     let n = rng.below(100) + 1;
+//!     /* generate instance, assert invariant */
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Property-test driver: `count` cases, each with an independent RNG
+/// derived from a base seed (overridable via `NMBKM_PROP_SEED` for
+/// replaying CI failures).
+pub struct Cases {
+    pub count: usize,
+    pub base_seed: u64,
+}
+
+impl Cases {
+    pub fn new(count: usize) -> Self {
+        let base_seed = std::env::var("NMBKM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA11C_E5ED);
+        Self { count, base_seed }
+    }
+
+    /// Run the property; panics with the failing case seed on error.
+    pub fn run(&self, prop: impl Fn(&mut Pcg64)) {
+        for case in 0..self.count {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let mut rng = Pcg64::new(seed, 0xC0FFEE);
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| prop(&mut rng)),
+            );
+            if let Err(e) = result {
+                eprintln!(
+                    "property failed at case {case} \
+                     (replay with NMBKM_PROP_SEED={seed} and count=1)"
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+/// Common generators for k-means shaped instances.
+pub mod gen {
+    use crate::util::rng::Pcg64;
+
+    /// Random (n, d, k) with n ≥ k, suitable for clustering instances.
+    pub fn shape(rng: &mut Pcg64, max_n: usize, max_d: usize, max_k: usize)
+        -> (usize, usize, usize)
+    {
+        let k = rng.below(max_k) + 1;
+        let n = k + rng.below(max_n.saturating_sub(k) + 1);
+        let d = rng.below(max_d) + 1;
+        (n, d, k)
+    }
+
+    /// Row-major gaussian matrix with a random per-row scale, so ties
+    /// and near-ties occur with reasonable probability.
+    pub fn matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Vec<f32> {
+        let scale = 10f64.powf(rng.range_f64(-1.0, 1.0)) as f32;
+        (0..rows * cols).map(|_| rng.gauss_f32() * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut hits = std::cell::Cell::new(0usize);
+        Cases { count: 17, base_seed: 1 }.run(|_| {
+            hits.set(hits.get() + 1);
+        });
+        assert_eq!(hits.get_mut(), &mut 17);
+    }
+
+    #[test]
+    fn cases_get_distinct_streams() {
+        let mut firsts = std::collections::HashSet::new();
+        let firsts_ref = std::cell::RefCell::new(&mut firsts);
+        Cases { count: 10, base_seed: 2 }.run(|rng| {
+            firsts_ref.borrow_mut().insert(rng.next_u64());
+        });
+        assert_eq!(firsts.len(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        Cases { count: 5, base_seed: 3 }.run(|rng| {
+            assert!(rng.next_f64() < 0.9, "intentional");
+        });
+    }
+
+    #[test]
+    fn gen_shape_valid() {
+        Cases { count: 50, base_seed: 4 }.run(|rng| {
+            let (n, d, k) = gen::shape(rng, 100, 20, 10);
+            assert!(n >= k && k >= 1 && d >= 1);
+            assert!(n <= 110 && d <= 20 && k <= 10);
+        });
+    }
+}

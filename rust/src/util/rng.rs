@@ -1,0 +1,341 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline image carries no `rand` crate, so we implement the two
+//! generators the project needs ourselves:
+//!
+//! * [`SplitMix64`] — seed expansion / stream derivation (Steele et al.).
+//! * [`Pcg64`] — PCG-XSH-RR 64/32 state with 128-bit LCG, the workhorse
+//!   generator for shuffles, sampling and the dataset simulators.
+//!
+//! Every experiment derives independent named streams via
+//! [`Pcg64::derive`], so adding a consumer of randomness in one module
+//! never perturbs another module's stream (paper runs use 20 seeds; the
+//! per-seed behaviour must be stable across refactors).
+
+/// SplitMix64: tiny, full-period 2^64 generator used to expand seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR with 128-bit state: fast, statistically solid, and — the
+/// property we actually need — fully deterministic and portable.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// cached second gaussian from Box–Muller
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MUL: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Construct from a seed and a stream id (any values are fine).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ stream.rotate_left(32));
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Self { state, inc, gauss_spare: None };
+        rng.next_u64(); // decorrelate from the raw seed
+        rng
+    }
+
+    /// Derive an independent child stream keyed by a label. Labels are
+    /// hashed with FNV-1a so call sites read as `rng.derive("init")`.
+    pub fn derive(&self, label: &str) -> Pcg64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Pcg64::new(self.state as u64 ^ (self.state >> 64) as u64, h)
+    }
+
+    /// PCG-XSL-RR 128/64 output function.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MUL)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) with Lemire rejection (unbiased).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (caches the spare).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn gauss_f32(&mut self) -> f32 {
+        self.gauss() as f32
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from [0, n) (partial Fisher–Yates
+    /// when m is small relative to n, full shuffle otherwise).
+    pub fn sample_distinct(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        if m * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(m);
+            return all;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(m * 2);
+        let mut out = Vec::with_capacity(m);
+        while out.len() < m {
+            let x = self.below(n);
+            if seen.insert(x) {
+                out.push(x);
+            }
+        }
+        out
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut t = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Zipf(s) sampler over {0, …, n−1} by inverse-CDF on a precomputed
+/// table. Used by the RCV1 simulator's vocabulary draw, where the same
+/// distribution is sampled millions of times.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(1, 2);
+        let mut b = Pcg64::new(1, 2);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(1, 2);
+        let mut b = Pcg64::new(1, 3);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn derive_is_stable_and_independent() {
+        let root = Pcg64::new(7, 0);
+        let mut a1 = root.derive("alpha");
+        let mut a2 = root.derive("alpha");
+        let mut b = root.derive("beta");
+        assert_eq!(a1.next_u64(), a2.next_u64());
+        assert_ne!(a1.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_f64_moments() {
+        let mut rng = Pcg64::new(42, 0);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut rng = Pcg64::new(43, 0);
+        let n = 200_000;
+        let (mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.gauss();
+            s1 += x;
+            s2 += x * x;
+            s3 += x * x * x;
+        }
+        assert!((s1 / n as f64).abs() < 1e-2);
+        assert!((s2 / n as f64 - 1.0).abs() < 2e-2);
+        assert!((s3 / n as f64).abs() < 5e-2);
+    }
+
+    #[test]
+    fn below_is_unbiased_small_range() {
+        let mut rng = Pcg64::new(5, 5);
+        let mut counts = [0usize; 7];
+        let n = 140_000;
+        for _ in 0..n {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            let expect = n as f64 / 7.0;
+            assert!((c as f64 - expect).abs() < expect * 0.05);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(9, 1);
+        let mut v: Vec<usize> = (0..1000).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(v, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Pcg64::new(11, 0);
+        for &(n, m) in &[(10usize, 10usize), (1000, 17), (50, 25)] {
+            let s = rng.sample_distinct(n, m);
+            assert_eq!(s.len(), m);
+            let uniq: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(uniq.len(), m);
+            assert!(s.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Pcg64::new(13, 0);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio={ratio}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing_head() {
+        let mut rng = Pcg64::new(17, 0);
+        let z = Zipf::new(1000, 1.1);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[4]);
+        assert!(counts[1] > counts[20]);
+        assert!(counts[0] > 3 * counts[50]);
+    }
+}

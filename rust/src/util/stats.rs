@@ -1,0 +1,130 @@
+//! Summary statistics used across experiments and the batch controller:
+//! mean/std over seed runs, medians (the controller's cluster vote), and
+//! an online accumulator for streaming summaries.
+
+/// Mean of a slice; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation; 0 for n < 2.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Median (upper median for even n), tolerating NaN/∞ entries by the
+/// IEEE total order — the controller's ratios can legitimately be ∞
+/// (p(j) = 0, paper §3.3.3), and the median over values including ∞ is
+/// exactly the mechanism that triggers doubling for ρ = ∞.
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[v.len() / 2]
+}
+
+/// Quantile in [0,1] by nearest-rank on the sorted data.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Online mean/min/max/std accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.138089935299395).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn median_with_infinities() {
+        // three of five ratios are ∞ → median is ∞ (controller doubles)
+        let xs = [1.0, f64::INFINITY, f64::INFINITY, 0.5, f64::INFINITY];
+        assert!(median(&xs).is_infinite());
+        // two of five → median finite
+        let xs = [1.0, f64::INFINITY, 2.0, 0.5, f64::INFINITY];
+        assert_eq!(median(&xs), 2.0);
+    }
+
+    #[test]
+    fn median_even_upper() {
+        assert_eq!(median(&[1.0, 2.0, 3.0, 4.0]), 3.0);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 0.5), 50.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(o.min, 1.0);
+        assert_eq!(o.max, 9.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Timing utilities with *work-time* accounting.
+//!
+//! The paper's protocol excludes validation-MSE computation from reported
+//! runtimes ("The time taken to compute validation MSEs is not included
+//! in runtimes", §4.3). [`WorkClock`] implements exactly that: a
+//! stopwatch that the metrics path pauses while scoring.
+
+use std::time::{Duration, Instant};
+
+/// A pausable stopwatch measuring algorithm work time.
+#[derive(Debug)]
+pub struct WorkClock {
+    accumulated: Duration,
+    running_since: Option<Instant>,
+}
+
+impl Default for WorkClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkClock {
+    pub fn new() -> Self {
+        Self { accumulated: Duration::ZERO, running_since: None }
+    }
+
+    /// Start (or restart) the clock. Idempotent if already running.
+    pub fn start(&mut self) {
+        if self.running_since.is_none() {
+            self.running_since = Some(Instant::now());
+        }
+    }
+
+    /// Pause, folding the elapsed span into the accumulator.
+    pub fn pause(&mut self) {
+        if let Some(t0) = self.running_since.take() {
+            self.accumulated += t0.elapsed();
+        }
+    }
+
+    /// Total accumulated work time (includes the live span if running).
+    pub fn elapsed(&self) -> Duration {
+        let live = self
+            .running_since
+            .map(|t0| t0.elapsed())
+            .unwrap_or(Duration::ZERO);
+        self.accumulated + live
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Run `f` with the clock paused (validation, logging, IO).
+    pub fn off_clock<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let was_running = self.running_since.is_some();
+        self.pause();
+        let out = f();
+        if was_running {
+            self.start();
+        }
+        out
+    }
+}
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+
+    #[test]
+    fn accumulates_across_pauses() {
+        let mut c = WorkClock::new();
+        c.start();
+        sleep(Duration::from_millis(20));
+        c.pause();
+        let a = c.elapsed();
+        sleep(Duration::from_millis(30));
+        assert_eq!(c.elapsed(), a, "paused clock must not advance");
+        c.start();
+        sleep(Duration::from_millis(10));
+        c.pause();
+        assert!(c.elapsed() > a);
+    }
+
+    #[test]
+    fn off_clock_excludes_span() {
+        let mut c = WorkClock::new();
+        c.start();
+        sleep(Duration::from_millis(5));
+        c.off_clock(|| sleep(Duration::from_millis(50)));
+        sleep(Duration::from_millis(5));
+        c.pause();
+        assert!(
+            c.elapsed() < Duration::from_millis(40),
+            "elapsed={:?}",
+            c.elapsed()
+        );
+    }
+
+    #[test]
+    fn start_is_idempotent() {
+        let mut c = WorkClock::new();
+        c.start();
+        c.start();
+        sleep(Duration::from_millis(5));
+        c.pause();
+        assert!(c.elapsed() >= Duration::from_millis(4));
+        assert!(c.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, t) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Smoke tests for the experiment harnesses at unit scale: every paper
+//! table/figure generator must run end to end and emit its CSV. The
+//! real (bench-scale) runs happen under `cargo bench`; these tests keep
+//! the harness code itself under `cargo test` coverage.
+
+use nmbkm::config::Engine;
+use nmbkm::experiments::{common, fig1, rho_sweep, table1, table2};
+use nmbkm::kmeans::assign::NativeEngine;
+
+fn tiny_opts() -> common::ExpOpts {
+    common::ExpOpts {
+        scale: common::Scale::Quick,
+        seeds: 2,
+        threads: 2,
+        engine: Engine::Native,
+        seconds: 0.4,
+    }
+}
+
+fn with_tmp_results<T>(tag: &str, f: impl FnOnce() -> T) -> T {
+    let dir = std::env::temp_dir().join(format!(
+        "nmbkm-smoke-{}-{tag}",
+        std::process::id()
+    ));
+    std::env::set_var("NMBKM_RESULTS_DIR", &dir);
+    let out = f();
+    std::env::remove_var("NMBKM_RESULTS_DIR");
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+#[test]
+fn fig1_runs_on_small_gaussian() {
+    with_tmp_results("fig1", || {
+        let ds = common::gaussian_small();
+        let opts = tiny_opts();
+        let curves = fig1::run_dataset(&ds, &opts, &NativeEngine).unwrap();
+        assert_eq!(curves.len(), fig1::algo_set().len());
+        for c in &curves {
+            assert!(c.mean_final.is_finite(), "{}: no final MSE", c.label);
+        }
+        fig1::check_shape("gaussian", &curves);
+        let path = common::write_curves_csv("fig1_smoke", "gaussian", &curves)
+            .unwrap();
+        assert!(path.exists());
+    });
+}
+
+#[test]
+fn rho_sweep_covers_all_rhos() {
+    with_tmp_results("rho", || {
+        let ds = common::gaussian_small();
+        let opts = tiny_opts();
+        let curves = rho_sweep::run_dataset(&ds, &opts, &NativeEngine).unwrap();
+        // mb + 5 gb-ρ + 5 tb-ρ
+        assert_eq!(curves.len(), 11);
+        let labels: Vec<&str> =
+            curves.iter().map(|c| c.label.as_str()).collect();
+        for want in ["mb", "gb-1", "gb-inf", "tb-1000", "tb-inf"] {
+            assert!(labels.contains(&want), "missing {want} in {labels:?}");
+        }
+        rho_sweep::check_shape(&curves);
+    });
+}
+
+#[test]
+fn table1_emits_rows_and_csv() {
+    with_tmp_results("table1", || {
+        let opts = common::ExpOpts { seconds: 0.2, ..tiny_opts() };
+        // table1 builds its own datasets at quick scale; keep it small by
+        // running the underlying timer directly on the gaussian set, then
+        // the full harness once (quick scale is bounded: one epoch each).
+        let ds = common::gaussian_small();
+        let t8 = table1::time_epoch(
+            &ds,
+            nmbkm::kmeans::minibatch::Formulation::Alg8,
+            &NativeEngine,
+            2,
+            1024,
+        );
+        assert!(t8 > 0.0 && t8 < 30.0);
+        let rows = vec![
+            table1::Row {
+                dataset: "infmnist-sim".into(),
+                implementation: "alg8 S/v (our)".into(),
+                n: 10,
+                secs: 1.0,
+            },
+            table1::Row {
+                dataset: "infmnist-sim".into(),
+                implementation: "alg1 per-sample (baseline)".into(),
+                n: 10,
+                secs: 2.0,
+            },
+        ];
+        table1::check_shape(&rows);
+    });
+}
+
+#[test]
+fn table2_cells_cover_grid() {
+    with_tmp_results("table2", || {
+        let b0s = table2::b0_grid(common::Scale::Quick);
+        assert_eq!(b0s.len(), 3);
+        assert!(b0s.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(table2::b0_grid(common::Scale::Full), vec![100, 1000, 5000]);
+        // shape checker tolerates synthetic cells
+        let cells = vec![
+            table2::Cell {
+                dataset: "infmnist-sim".into(),
+                algo: "lloyd".into(),
+                b0: 1000,
+                mean_final: 1.0,
+                std_final: 0.0,
+            },
+            table2::Cell {
+                dataset: "infmnist-sim".into(),
+                algo: "tb-inf".into(),
+                b0: 1000,
+                mean_final: 1.05,
+                std_final: 0.0,
+            },
+            table2::Cell {
+                dataset: "rcv1-sim".into(),
+                algo: "tb-inf".into(),
+                b0: 50,
+                mean_final: 2.0,
+                std_final: 0.0,
+            },
+            table2::Cell {
+                dataset: "rcv1-sim".into(),
+                algo: "tb-inf".into(),
+                b0: 1000,
+                mean_final: 1.2,
+                std_final: 0.0,
+            },
+        ];
+        table2::check_shape(&cells);
+    });
+}
+
+#[test]
+fn scale_parsing() {
+    assert_eq!(
+        common::Scale::from_env_or_args(&["--full".to_string()]),
+        common::Scale::Full
+    );
+    assert_eq!(common::Scale::from_env_or_args(&[]), common::Scale::Quick);
+    let opts = common::ExpOpts::from_args(&[
+        "--seeds".to_string(),
+        "5".to_string(),
+        "--seconds".to_string(),
+        "1.5".to_string(),
+    ]);
+    assert_eq!(opts.seeds, 5);
+    assert_eq!(opts.seconds, 1.5);
+}

@@ -1,0 +1,127 @@
+//! Randomised end-to-end property tests over the full stack
+//! (hand-rolled harness, DESIGN.md §Testing strategy).
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::kmeans::run;
+use nmbkm::util::propcheck::Cases;
+use nmbkm::util::rng::Pcg64;
+
+fn random_cfg(rng: &mut Pcg64, k: usize) -> RunConfig {
+    let algos = [
+        Algo::Lloyd,
+        Algo::Elkan,
+        Algo::Sgd,
+        Algo::Mb,
+        Algo::MbF,
+        Algo::GbRho,
+        Algo::TbRho,
+    ];
+    let rhos = [
+        Rho::Finite(1.0),
+        Rho::Finite(10.0),
+        Rho::Finite(1000.0),
+        Rho::Infinite,
+    ];
+    RunConfig {
+        algo: algos[rng.below(algos.len())],
+        rho: rhos[rng.below(rhos.len())],
+        k,
+        b0: 16 + rng.below(200),
+        threads: 1 + rng.below(4),
+        seed: rng.next_u64(),
+        max_rounds: 3 + rng.below(12),
+        max_seconds: 30.0,
+        eval_every_secs: 0.0,
+        stop_on_convergence: rng.next_f64() < 0.5,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn any_config_any_shape_terminates_with_finite_state() {
+    Cases::new(30).run(|rng| {
+        let k = 2 + rng.below(8);
+        let n = k * 4 + rng.below(600);
+        let d = 2 + rng.below(24);
+        let spec = GaussianMixture {
+            k,
+            d,
+            center_spread: 10f64.powf(rng.range_f64(-0.5, 1.2)),
+            noise: 10f64.powf(rng.range_f64(-1.0, 0.5)),
+            weights: vec![],
+        };
+        let data = spec.generate(n, rng.next_u64());
+        let cfg = random_cfg(rng, k);
+        let out = run(&data, None, &cfg)
+            .unwrap_or_else(|e| panic!("{cfg:?} failed: {e:#}"));
+        // invariants on any run whatsoever:
+        assert!(out.rounds >= 1 && out.rounds <= cfg.max_rounds);
+        assert!(out.centroids.c.data.iter().all(|x| x.is_finite()),
+                "{cfg:?}: non-finite centroid");
+        assert!(out.final_mse.is_finite() && out.final_mse >= 0.0);
+        // batches never exceed n and never shrink for gb/tb
+        if matches!(cfg.algo, Algo::GbRho | Algo::TbRho) {
+            let batches: Vec<usize> =
+                out.trace.records.iter().map(|r| r.batch).collect();
+            for w in batches.windows(2) {
+                assert!(w[1] >= w[0], "batch shrank: {batches:?}");
+                assert!(w[1] <= n);
+            }
+        }
+    });
+}
+
+#[test]
+fn quality_never_catastrophically_worse_than_lloyd() {
+    // any algorithm given a decent budget should land within a factor
+    // of lloyd's local minimum on an easy, well-separated mixture
+    Cases::new(8).run(|rng| {
+        let k = 3 + rng.below(4);
+        let spec = GaussianMixture {
+            k,
+            d: 8,
+            center_spread: 25.0,
+            noise: 1.0,
+            weights: vec![],
+        };
+        let data = spec.generate(1_200, rng.next_u64());
+        let seed = rng.next_u64();
+        let mk = |algo| RunConfig {
+            algo,
+            k,
+            b0: 128,
+            rho: Rho::Infinite,
+            seed,
+            threads: 2,
+            max_rounds: 60,
+            max_seconds: 10.0,
+            eval_every_secs: 0.0,
+            ..Default::default()
+        };
+        let lloyd = run(&data, None, &mk(Algo::Lloyd)).unwrap();
+        for algo in [Algo::MbF, Algo::GbRho, Algo::TbRho] {
+            let out = run(&data, None, &mk(algo)).unwrap();
+            let base = nmbkm::kmeans::state::exact_mse(&data, &lloyd.centroids);
+            let got = nmbkm::kmeans::state::exact_mse(&data, &out.centroids);
+            assert!(
+                got <= base * 3.0 + 1e-9,
+                "{algo:?}: mse {got} vs lloyd {base}"
+            );
+        }
+    });
+}
+
+#[test]
+fn determinism_full_stack() {
+    Cases::new(10).run(|rng| {
+        let k = 2 + rng.below(5);
+        let data = GaussianMixture::default_spec(k, 6)
+            .generate(300 + rng.below(300), rng.next_u64());
+        let cfg = random_cfg(rng, k);
+        let a = run(&data, None, &cfg).unwrap();
+        let b = run(&data, None, &cfg).unwrap();
+        assert_eq!(a.rounds, b.rounds, "{cfg:?}");
+        assert_eq!(a.centroids.c.data, b.centroids.c.data, "{cfg:?}");
+    });
+}
