@@ -1,0 +1,98 @@
+//! Online serving walkthrough: train → snapshot → resume → stream in
+//! fresh data → predict, exercising the whole `serve` layer in-process
+//! (the `nmbkm train/serve/predict` subcommands drive the same code over
+//! stdio/TCP).
+//!
+//! ```bash
+//! cargo run --release --example online_serving
+//! ```
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::serve::{protocol, session, Snapshot};
+
+fn rows_of(data: &nmbkm::data::Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut row = vec![0f32; data.dim()];
+    for i in lo..hi {
+        data.write_row_dense(i, &mut row);
+        out.push(row.clone());
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    // 12k points; the first 8k are the "historical" corpus, the rest
+    // arrive later as live traffic
+    let full = GaussianMixture::default_spec(8, 16).generate(12_000, 7);
+    let history = full.slice(0, 8_000);
+
+    let cfg = RunConfig {
+        algo: Algo::TbRho,
+        rho: Rho::Infinite,
+        k: 8,
+        b0: 512,
+        max_rounds: 40,
+        max_seconds: 3.0,
+        threads: std::thread::available_parallelism()?.get(),
+        ..Default::default()
+    };
+
+    // 1. train on the historical corpus and persist the model
+    let (trained, report) = session::train(&history, &cfg)?;
+    println!(
+        "trained {} rounds over n={} (train MSE {:.4})",
+        report.rounds_run,
+        history.n(),
+        report.last.map(|i| i.train_mse).unwrap_or(f64::NAN)
+    );
+    let path = std::env::temp_dir().join("nmbkm-online-serving-demo.json");
+    trained.snapshot(true)?.save(&path)?;
+    println!(
+        "snapshot: {} ({} bytes)",
+        path.display(),
+        std::fs::metadata(&path)?.len()
+    );
+
+    // 2. a fresh process resumes the snapshot...
+    let mut server = session::OnlineSession::resume(Snapshot::load(&path)?)?;
+    println!("resumed: {}", server.stats_json().to_string());
+
+    // 3. ...and digests the live stream in chunks, nested-batch style:
+    //    every new point enters the statistics exactly once, when the
+    //    growth controller votes to expand over it
+    for chunk in 0..4 {
+        let lo = 8_000 + chunk * 1_000;
+        server.ingest_rows(&rows_of(&full, lo, lo + 1_000))?;
+        let rep = server.step(5, 1.0)?;
+        let info = rep.last.expect("stepped at least once");
+        println!(
+            "chunk {chunk}: n={} batch={} train MSE {:.4} ({} rounds)",
+            server.data().n(),
+            info.batch,
+            info.train_mse,
+            rep.rounds_run
+        );
+    }
+
+    // 4. predict over the wire format (one JSONL request per line)
+    let queries = rows_of(&full, 0, 3);
+    let mut points = String::from("[");
+    for (t, q) in queries.iter().enumerate() {
+        if t > 0 {
+            points.push(',');
+        }
+        points.push('[');
+        let coords: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+        points.push_str(&coords.join(","));
+        points.push(']');
+    }
+    points.push(']');
+    let request = format!("{{\"op\":\"predict\",\"points\":{points}}}");
+    let (response, _) = protocol::handle_line(&mut server, &request);
+    println!("predict request : {request}");
+    println!("predict response: {}", response.to_string());
+
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

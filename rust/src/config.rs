@@ -138,11 +138,18 @@ impl Engine {
             other => Err(ArgError(format!("unknown engine '{other}'"))),
         }
     }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            Engine::Xla => "xla",
+        }
+    }
 }
 
 /// Stop conditions and run policy. Defaults mirror the paper's §4.3
 /// setup (k = 50, b = b0 = 5000) at CI-friendly budgets.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     pub algo: Algo,
     pub k: usize,
@@ -260,6 +267,91 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Serialise for the model-snapshot artifact (`serve::snapshot`).
+    /// Counts stay readable JSON numbers; `f64` fields and 64-bit ints
+    /// travel as hex bit patterns so the round trip is bit-exact even
+    /// for `inf` budgets and `usize::MAX` round caps.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{self as json, Json};
+        json::obj(vec![
+            ("algo", json::s(self.algo.name())),
+            ("k", json::num(self.k as f64)),
+            ("b0", json::num(self.b0 as f64)),
+            ("rho", json::s(&self.rho.label())),
+            ("engine", json::s(self.engine.name())),
+            ("threads", json::num(self.threads as f64)),
+            ("seed", json::s(&format!("{:x}", self.seed))),
+            ("max_seconds", json::s(&format!("{:x}", self.max_seconds.to_bits()))),
+            ("max_rounds", json::s(&format!("{:x}", self.max_rounds))),
+            (
+                "eval_every_secs",
+                json::s(&format!("{:x}", self.eval_every_secs.to_bits())),
+            ),
+            ("stop_on_convergence", Json::Bool(self.stop_on_convergence)),
+            ("artifacts_dir", json::s(&self.artifacts_dir)),
+            ("init", json::s(self.init.name())),
+        ])
+    }
+
+    /// Inverse of [`RunConfig::to_json`]. Missing keys keep defaults so
+    /// older snapshots stay loadable as fields are added.
+    pub fn from_json(v: &crate::util::json::Json) -> Result<RunConfig, ArgError> {
+        let mut cfg = RunConfig::default();
+        let hex_u64 = |key: &str| -> Result<Option<u64>, ArgError> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => {
+                    let s = x
+                        .as_str()
+                        .ok_or_else(|| ArgError(format!("config {key}: expected hex string")))?;
+                    u64::from_str_radix(s, 16)
+                        .map(Some)
+                        .map_err(|_| ArgError(format!("config {key}: bad hex '{s}'")))
+                }
+            }
+        };
+        if let Some(x) = v.get("algo").and_then(|x| x.as_str()) {
+            cfg.algo = Algo::parse(x)?;
+        }
+        if let Some(x) = v.get("k").and_then(|x| x.as_usize()) {
+            cfg.k = x;
+        }
+        if let Some(x) = v.get("b0").and_then(|x| x.as_usize()) {
+            cfg.b0 = x;
+        }
+        if let Some(x) = v.get("rho").and_then(|x| x.as_str()) {
+            cfg.rho = Rho::parse(x)?;
+        }
+        if let Some(x) = v.get("engine").and_then(|x| x.as_str()) {
+            cfg.engine = Engine::parse(x)?;
+        }
+        if let Some(x) = v.get("threads").and_then(|x| x.as_usize()) {
+            cfg.threads = x.max(1);
+        }
+        if let Some(x) = hex_u64("seed")? {
+            cfg.seed = x;
+        }
+        if let Some(x) = hex_u64("max_seconds")? {
+            cfg.max_seconds = f64::from_bits(x);
+        }
+        if let Some(x) = hex_u64("max_rounds")? {
+            cfg.max_rounds = x as usize;
+        }
+        if let Some(x) = hex_u64("eval_every_secs")? {
+            cfg.eval_every_secs = f64::from_bits(x);
+        }
+        if let Some(x) = v.get("stop_on_convergence").and_then(|x| x.as_bool()) {
+            cfg.stop_on_convergence = x;
+        }
+        if let Some(x) = v.get("artifacts_dir").and_then(|x| x.as_str()) {
+            cfg.artifacts_dir = x.to_string();
+        }
+        if let Some(x) = v.get("init").and_then(|x| x.as_str()) {
+            cfg.init = InitScheme::parse(x)?;
+        }
+        Ok(cfg)
+    }
+
     /// Human-readable one-liner for logs.
     pub fn label(&self) -> String {
         match self.algo {
@@ -317,6 +409,45 @@ mod tests {
         assert_eq!(cfg.label(), "tb-100");
         let cfg = RunConfig { algo: Algo::Mb, ..Default::default() };
         assert_eq!(cfg.label(), "mb");
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let cfg = RunConfig {
+            algo: Algo::GbRho,
+            k: 13,
+            b0: 777,
+            rho: Rho::Finite(2.5),
+            engine: Engine::Xla,
+            threads: 6,
+            seed: u64::MAX - 3,
+            max_seconds: f64::INFINITY,
+            max_rounds: usize::MAX,
+            eval_every_secs: 0.1, // not exactly representable — bits must survive
+            stop_on_convergence: false,
+            artifacts_dir: "some/dir".to_string(),
+            init: InitScheme::Uniform,
+        };
+        let text = cfg.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let back = RunConfig::from_json(&parsed).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.eval_every_secs.to_bits(), cfg.eval_every_secs.to_bits());
+        // missing keys keep defaults
+        let sparse = crate::util::json::Json::parse(r#"{"k": 9}"#).unwrap();
+        let c = RunConfig::from_json(&sparse).unwrap();
+        assert_eq!(c.k, 9);
+        assert_eq!(c.b0, RunConfig::default().b0);
+        // malformed hex rejected
+        let bad = crate::util::json::Json::parse(r#"{"seed": "zz"}"#).unwrap();
+        assert!(RunConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn engine_name_roundtrip() {
+        for e in [Engine::Native, Engine::Xla] {
+            assert_eq!(Engine::parse(e.name()).unwrap(), e);
+        }
     }
 
     #[test]

@@ -20,8 +20,24 @@ impl Pool {
         Self { threads: threads.max(1) }
     }
 
-    /// Use all available parallelism.
+    /// Use all available parallelism, unless the `NMBKM_THREADS`
+    /// environment variable overrides it (clamped to ≥ 1). CI and
+    /// serving deployments set the override to get deterministic thread
+    /// counts independent of the host's core count.
     pub fn auto() -> Self {
+        Self::auto_from(std::env::var("NMBKM_THREADS").ok().as_deref())
+    }
+
+    /// Pure core of [`Pool::auto`]: `override_val` is the raw
+    /// `NMBKM_THREADS` value, if set. Unparsable values fall back to the
+    /// host's parallelism. (Split out so tests never need `set_var`,
+    /// which races with concurrent `getenv` in other test threads.)
+    pub fn auto_from(override_val: Option<&str>) -> Self {
+        if let Some(t) =
+            override_val.and_then(|v| v.trim().parse::<usize>().ok())
+        {
+            return Self::new(t);
+        }
         let t = std::thread::available_parallelism()
             .map(|x| x.get())
             .unwrap_or(1);
@@ -153,6 +169,21 @@ mod tests {
         let pool = Pool::new(8);
         let ids = pool.run_chunks(64, 1, |i, _| i);
         assert_eq!(ids, (0..ids.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn auto_honors_thread_env_override() {
+        // exercised through the pure core — mutating the real environment
+        // from a parallel test harness is a getenv/setenv data race
+        assert_eq!(Pool::auto_from(Some("3")).threads, 3);
+        assert_eq!(Pool::auto_from(Some(" 5 ")).threads, 5);
+        assert_eq!(Pool::auto_from(Some("0")).threads, 1, "clamped to >= 1");
+        assert!(
+            Pool::auto_from(Some("not-a-number")).threads >= 1,
+            "garbage falls back to host parallelism"
+        );
+        assert!(Pool::auto_from(None).threads >= 1);
+        assert!(Pool::auto().threads >= 1);
     }
 
     #[test]

@@ -14,8 +14,8 @@
 use crate::config::Rho;
 use crate::kmeans::assign::Sel;
 use crate::kmeans::controller::{self, GrowthPolicy};
-use crate::kmeans::state::{batch_mse, Assignments, Centroids, SuffStats};
-use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+use crate::kmeans::state::{batch_mse, Assignments, Centroids, SuffStats, UNASSIGNED};
+use crate::kmeans::{Clusterer, Ctx, NestedState, RoundInfo};
 
 pub struct GrowBatch {
     pub(crate) cent: Centroids,
@@ -55,6 +55,29 @@ impl GrowBatch {
     pub fn with_policy(mut self, policy: GrowthPolicy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Rebuild mid-run from exported state (`serve` resume path). The
+    /// continuation is bit-exact: gb-ρ rounds are deterministic in
+    /// (data, centroids, stats, batch cursor).
+    pub fn resume(st: NestedState, rho: Rho) -> Self {
+        let k = st.cent.k();
+        assert_eq!(st.stats.k, k, "stats k mismatch");
+        assert_eq!(st.stats.d, st.cent.d(), "stats d mismatch");
+        assert_eq!(st.assign.label.len(), st.n, "assignments length != n");
+        assert!(st.b_prev <= st.b && st.b <= st.n, "bad batch cursor");
+        Self {
+            cent: st.cent,
+            stats: st.stats,
+            assign: st.assign,
+            n: st.n,
+            b_prev: st.b_prev,
+            b: st.b.max(1),
+            rho,
+            policy: GrowthPolicy::Double,
+            fixed_point: false,
+            batch_history: vec![],
+        }
     }
 
     /// Exact S/v versus a rebuild over the active prefix (test hook).
@@ -161,6 +184,32 @@ impl Clusterer for GrowBatch {
     fn name(&self) -> String {
         format!("gb-{}", self.rho.label())
     }
+
+    fn export_state(&self) -> Option<NestedState> {
+        Some(NestedState {
+            cent: self.cent.clone(),
+            stats: self.stats.clone(),
+            assign: self.assign.clone(),
+            b_prev: self.b_prev,
+            b: self.b,
+            n: self.n,
+        })
+    }
+
+    fn extend_data(&mut self, new_n: usize) -> bool {
+        if new_n < self.n {
+            return false;
+        }
+        self.assign.label.resize(new_n, UNASSIGNED);
+        self.assign.dist2.resize(new_n, f32::INFINITY);
+        self.n = new_n;
+        // new unseen points mean the run can no longer be at its global
+        // fixed point
+        if new_n > self.b_prev {
+            self.fixed_point = false;
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -242,6 +291,57 @@ mod tests {
             (mse_before - mse_after).abs() < 1e-9 * (1.0 + mse_before),
             "not a lloyd fixed point: {mse_before} vs {mse_after}"
         );
+    }
+
+    #[test]
+    fn export_resume_continues_bit_exactly() {
+        let data = GaussianMixture::default_spec(4, 6).generate(900, 11);
+        let mut full =
+            GrowBatch::new(init::first_k(&data, 4), 900, 64, Rho::Infinite);
+        let mut half =
+            GrowBatch::new(init::first_k(&data, 4), 900, 64, Rho::Infinite);
+        let mut c = ctx(&data);
+        for _ in 0..4 {
+            full.round(&mut c);
+            half.round(&mut c);
+        }
+        let st = Clusterer::export_state(&half).unwrap();
+        let mut resumed = GrowBatch::resume(st, Rho::Infinite);
+        for _ in 0..4 {
+            full.round(&mut c);
+            resumed.round(&mut c);
+        }
+        assert_eq!(full.cent.c.data, resumed.cent.c.data);
+        assert_eq!(full.b, resumed.b);
+        assert_eq!(full.assign.label, resumed.assign.label);
+        assert_eq!(full.stats.v, resumed.stats.v);
+    }
+
+    #[test]
+    fn extend_data_appends_unseen_points() {
+        let data = GaussianMixture::default_spec(3, 5).generate(800, 2);
+        let head = data.slice(0, 500);
+        let mut alg =
+            GrowBatch::new(init::first_k(&head, 3), 500, 64, Rho::Infinite);
+        let mut c = ctx(&head);
+        for _ in 0..3 {
+            alg.round(&mut c);
+        }
+        assert!(Clusterer::extend_data(&mut alg, 800));
+        assert!(!Clusterer::extend_data(&mut alg, 700), "never shrinks");
+        let mut c = ctx(&data);
+        for _ in 0..200 {
+            alg.round(&mut c);
+            if alg.b_prev > 500 {
+                break;
+            }
+        }
+        // the controller eventually grows into the appended points, each
+        // counted exactly once: Σv equals the seen-prefix length
+        assert!(alg.b_prev > 500, "batch never grew into new points");
+        let total: f64 = alg.stats.v.iter().sum();
+        assert_eq!(total as usize, alg.b_prev);
+        assert!(alg.stats_drift(&data) < 1e-5);
     }
 
     #[test]

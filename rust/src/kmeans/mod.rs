@@ -34,7 +34,7 @@ use crate::coordinator::shard::{chunk_ranges, Pool};
 use crate::data::{shuffle, Data};
 use crate::kmeans::assign::{AssignEngine, NativeEngine, Sel};
 use crate::kmeans::metrics::{RoundRecord, Trace};
-use crate::kmeans::state::{Centroids, SuffStats};
+use crate::kmeans::state::{Assignments, Centroids, SuffStats};
 use crate::util::rng::Pcg64;
 use crate::util::timer::WorkClock;
 
@@ -56,6 +56,30 @@ pub struct RoundInfo {
     pub train_mse: f64,
 }
 
+/// The complete mid-run state of a nested-batch algorithm — everything
+/// needed to pause training, serialise it (`serve::snapshot`), and
+/// resume bit-exactly: centroids with their cached norms/displacements,
+/// the exact sufficient statistics, per-point assignments over the data
+/// buffer, and the batch cursor `(b_prev, b)`.
+///
+/// Elkan bounds are deliberately *not* part of the state: zeroed lower
+/// bounds are always valid, so a resumed `tb-ρ` re-tightens them during
+/// its first round at the cost of extra distance computations while
+/// producing the identical assignment sequence (ties break by strict
+/// improvement in both the bounded and the exhaustive scan).
+#[derive(Clone, Debug)]
+pub struct NestedState {
+    pub cent: Centroids,
+    pub stats: SuffStats,
+    pub assign: Assignments,
+    /// b_o: points already counted into the statistics (prefix length).
+    pub b_prev: usize,
+    /// b: active batch size for the next round.
+    pub b: usize,
+    /// Total points in the backing data buffer.
+    pub n: usize,
+}
+
 /// One paper-round of an algorithm.
 pub trait Clusterer {
     fn round(&mut self, ctx: &mut Ctx) -> RoundInfo;
@@ -65,6 +89,20 @@ pub trait Clusterer {
         false
     }
     fn name(&self) -> String;
+    /// Export the resumable state (`gb-ρ`/`tb-ρ` only — the nested
+    /// invariant is what makes mid-run state well-defined).
+    fn export_state(&self) -> Option<NestedState> {
+        None
+    }
+    /// Grow the backing data buffer to `new_n` points. The appended
+    /// points are unseen: they join the active batch when the growth
+    /// controller votes to expand past them, so each still enters the
+    /// statistics exactly once (§3.1). Returns false for algorithms
+    /// without online-ingest support.
+    fn extend_data(&mut self, new_n: usize) -> bool {
+        let _ = new_n;
+        false
+    }
 }
 
 /// Build per-shard `SuffStats` deltas for newly assigned points
@@ -177,6 +215,34 @@ pub fn make_clusterer(
             cfg.rho,
             cfg.engine == Engine::Xla,
         )),
+    }
+}
+
+/// Rebuild the configured algorithm around previously exported state
+/// (see [`Clusterer::export_state`] / `serve::snapshot`). Only the
+/// nested-batch algorithms are resumable.
+pub fn resume_clusterer(
+    state: NestedState,
+    cfg: &RunConfig,
+) -> anyhow::Result<Box<dyn Clusterer>> {
+    anyhow::ensure!(
+        state.cent.k() == cfg.k,
+        "state has k={} but config says k={}",
+        state.cent.k(),
+        cfg.k
+    );
+    match cfg.algo {
+        Algo::GbRho => Ok(Box::new(growbatch::GrowBatch::resume(state, cfg.rho))),
+        Algo::TbRho => Ok(Box::new(turbobatch::TurboBatch::resume(
+            state,
+            cfg.rho,
+            cfg.engine == Engine::Xla,
+        ))),
+        other => anyhow::bail!(
+            "algorithm '{}' is not resumable (only gb-ρ / tb-ρ keep \
+             well-defined nested-batch state)",
+            other.name()
+        ),
     }
 }
 

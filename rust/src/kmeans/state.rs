@@ -39,6 +39,17 @@ impl Centroids {
         Self { c, norms, p: vec![0.0; k] }
     }
 
+    /// Rehydrate from serialised parts (snapshot load). `norms` and `p`
+    /// are restored verbatim rather than recomputed: `update_centroids`
+    /// refreshes norms through an f64 accumulator whose rounding differs
+    /// from `row_sq_norms`, and bit-exact resume requires the exact
+    /// values the paused run held.
+    pub fn from_parts(c: DenseMatrix, norms: Vec<f32>, p: Vec<f32>) -> Self {
+        assert_eq!(norms.len(), c.rows, "norms length != k");
+        assert_eq!(p.len(), c.rows, "p length != k");
+        Self { c, norms, p }
+    }
+
     pub fn k(&self) -> usize {
         self.c.rows
     }
@@ -70,6 +81,20 @@ pub struct SuffStats {
 impl SuffStats {
     pub fn zeros(k: usize, d: usize) -> Self {
         Self { k, d, s: vec![0.0; k * d], v: vec![0.0; k], sse: vec![0.0; k] }
+    }
+
+    /// Rehydrate from serialised parts (snapshot load).
+    pub fn from_parts(
+        k: usize,
+        d: usize,
+        s: Vec<f64>,
+        v: Vec<f64>,
+        sse: Vec<f64>,
+    ) -> Self {
+        assert_eq!(s.len(), k * d, "S length != k*d");
+        assert_eq!(v.len(), k, "v length != k");
+        assert_eq!(sse.len(), k, "sse length != k");
+        Self { k, d, s, v, sse }
     }
 
     #[inline]
@@ -225,6 +250,12 @@ pub struct Assignments {
 impl Assignments {
     pub fn new(n: usize) -> Self {
         Self { label: vec![UNASSIGNED; n], dist2: vec![f32::INFINITY; n] }
+    }
+
+    /// Rehydrate from serialised parts (snapshot load).
+    pub fn from_parts(label: Vec<u32>, dist2: Vec<f32>) -> Self {
+        assert_eq!(label.len(), dist2.len(), "label/dist2 length mismatch");
+        Self { label, dist2 }
     }
 
     pub fn seen(&self, i: usize) -> bool {

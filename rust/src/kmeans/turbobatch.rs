@@ -20,8 +20,8 @@ use crate::coordinator::shard::chunk_ranges;
 use crate::kmeans::assign::Sel;
 use crate::kmeans::bounds::{self, BoundStore};
 use crate::kmeans::controller::{self, GrowthPolicy};
-use crate::kmeans::state::{batch_mse, Assignments, Centroids, SuffStats};
-use crate::kmeans::{Clusterer, Ctx, RoundInfo};
+use crate::kmeans::state::{batch_mse, Assignments, Centroids, SuffStats, UNASSIGNED};
+use crate::kmeans::{Clusterer, Ctx, NestedState, RoundInfo};
 
 pub struct TurboBatch {
     pub(crate) cent: Centroids,
@@ -69,6 +69,41 @@ impl TurboBatch {
     pub fn with_policy(mut self, policy: GrowthPolicy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Rebuild mid-run from exported state (`serve` resume path).
+    ///
+    /// Bounds are not serialised: fresh zero rows are always-valid lower
+    /// bounds, and the snapshotted `dist2` (computed against the
+    /// pre-update centroid positions) plus the stored displacement `p`
+    /// reconstruct valid upper bounds — the first resumed round spends
+    /// extra distance computations re-tightening but the assignment
+    /// sequence, statistics and centroid trajectory are unchanged.
+    pub fn resume(st: NestedState, rho: Rho, tile_mode: bool) -> Self {
+        let k = st.cent.k();
+        assert_eq!(st.stats.k, k, "stats k mismatch");
+        assert_eq!(st.stats.d, st.cent.d(), "stats d mismatch");
+        assert_eq!(st.assign.label.len(), st.n, "assignments length != n");
+        assert!(st.b_prev <= st.b && st.b <= st.n, "bad batch cursor");
+        let upper: Vec<f32> = st.assign.dist2[..st.b_prev]
+            .iter()
+            .map(|d2| d2.max(0.0).sqrt())
+            .collect();
+        Self {
+            cent: st.cent,
+            stats: st.stats,
+            assign: st.assign,
+            bounds: BoundStore::new(k),
+            upper,
+            n: st.n,
+            b_prev: st.b_prev,
+            b: st.b.max(1),
+            rho,
+            policy: GrowthPolicy::Double,
+            tile_mode,
+            fixed_point: false,
+            batch_history: vec![],
+        }
     }
 
     /// Point-step pass over the seen prefix: returns
@@ -373,6 +408,30 @@ impl Clusterer for TurboBatch {
     fn name(&self) -> String {
         format!("tb-{}", self.rho.label())
     }
+
+    fn export_state(&self) -> Option<NestedState> {
+        Some(NestedState {
+            cent: self.cent.clone(),
+            stats: self.stats.clone(),
+            assign: self.assign.clone(),
+            b_prev: self.b_prev,
+            b: self.b,
+            n: self.n,
+        })
+    }
+
+    fn extend_data(&mut self, new_n: usize) -> bool {
+        if new_n < self.n {
+            return false;
+        }
+        self.assign.label.resize(new_n, UNASSIGNED);
+        self.assign.dist2.resize(new_n, f32::INFINITY);
+        self.n = new_n;
+        if new_n > self.b_prev {
+            self.fixed_point = false;
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -474,6 +533,33 @@ mod tests {
             let drift = tb.stats_drift(&data);
             assert!(drift < 1e-5, "round {round}: drift {drift}");
         }
+    }
+
+    #[test]
+    fn export_resume_continues_bit_exactly() {
+        // A paused-and-resumed tb run must retrace the uninterrupted one
+        // exactly, despite the bounds being rebuilt from scratch.
+        let data = GaussianMixture::default_spec(4, 6).generate(900, 12);
+        let mut full = TurboBatch::new(
+            init::first_k(&data, 4), 900, 64, Rho::Infinite, false);
+        let mut half = TurboBatch::new(
+            init::first_k(&data, 4), 900, 64, Rho::Infinite, false);
+        let mut c = ctx(&data);
+        for _ in 0..4 {
+            full.round(&mut c);
+            half.round(&mut c);
+        }
+        let st = Clusterer::export_state(&half).unwrap();
+        let mut resumed = TurboBatch::resume(st, Rho::Infinite, false);
+        for _ in 0..4 {
+            full.round(&mut c);
+            resumed.round(&mut c);
+        }
+        assert_eq!(full.cent.c.data, resumed.cent.c.data);
+        assert_eq!(full.b, resumed.b);
+        assert_eq!(full.assign.label, resumed.assign.label);
+        assert_eq!(full.assign.dist2, resumed.assign.dist2);
+        assert_eq!(full.stats.v, resumed.stats.v);
     }
 
     #[test]

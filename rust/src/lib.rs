@@ -17,6 +17,12 @@
 //! Python never runs on the clustering path; after `make artifacts` the
 //! rust binary is self-contained.
 //!
+//! On top of the reproduction sits the serving layer ([`serve`]):
+//! versioned bit-exact model snapshots, pause/resume online training
+//! sessions, and a JSONL ingest/predict/stats/snapshot protocol over
+//! stdio or TCP (`nmbkm train --save` / `nmbkm serve` / `nmbkm
+//! predict`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -38,6 +44,7 @@ pub mod experiments;
 pub mod kmeans;
 pub mod linalg;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Commonly used items, re-exported for examples and binaries.
@@ -46,5 +53,6 @@ pub mod prelude {
     pub use crate::data::{Data, Dataset};
     pub use crate::kmeans::metrics::RoundRecord;
     pub use crate::kmeans::{run, RunOutcome};
+    pub use crate::serve::{OnlineSession, Snapshot};
     pub use crate::util::rng::Pcg64;
 }

@@ -4,18 +4,28 @@
 //! nmbkm run --dataset infmnist --algo tb --rho inf --k 50 --b0 5000 \
 //!           --seconds 20 --seed 0 --engine xla --threads 8 --out run.csv
 //! nmbkm experiment fig1|fig2|fig3|table1|table2|all [--full] [--seeds N]
+//! nmbkm train --dataset gaussian --k 50 --seconds 10 --save model.json
+//! nmbkm serve --snapshot model.json [--listen 127.0.0.1:7878]
+//! nmbkm predict --snapshot model.json [--points queries.jsonl]
 //! nmbkm info [--artifacts DIR]
 //! ```
 //!
 //! `run` executes one clustering job and writes its per-round trace;
 //! `experiment` regenerates a paper table/figure (see DESIGN.md);
-//! `info` prints platform/artifact status.
+//! `train`/`serve`/`predict` drive the serving layer (`serve` module):
+//! train-and-snapshot, resume-and-serve over JSONL (stdio or TCP), and
+//! batch scoring against a saved model; `info` prints platform/artifact
+//! status.
 
 use nmbkm::config::RunConfig;
 use nmbkm::coordinator::progress::results_dir;
+use nmbkm::coordinator::Pool;
 use nmbkm::data::{gaussian::GaussianMixture, infmnist::InfMnist, rcv1::Rcv1Sim, Dataset};
 use nmbkm::experiments::{self, common::ExpOpts};
+use nmbkm::kmeans::assign::NativeEngine;
+use nmbkm::serve::{session, Snapshot};
 use nmbkm::util::args::{usage, Args, OptSpec};
+use nmbkm::util::json::Json;
 
 fn run_spec() -> Vec<OptSpec> {
     vec![
@@ -39,6 +49,39 @@ fn run_spec() -> Vec<OptSpec> {
     ]
 }
 
+fn train_spec() -> Vec<OptSpec> {
+    let mut spec = run_spec();
+    spec.push(OptSpec {
+        name: "save",
+        takes_value: true,
+        default: None,
+        help: "snapshot output path (required)",
+    });
+    spec.push(OptSpec {
+        name: "model-only",
+        takes_value: false,
+        default: None,
+        help: "omit the data buffer (predict-only artifact)",
+    });
+    spec
+}
+
+fn serve_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "snapshot", takes_value: true, default: None, help: "snapshot to resume (required)" },
+        OptSpec { name: "listen", takes_value: true, default: None, help: "TCP address, e.g. 127.0.0.1:7878 [stdio]" },
+        OptSpec { name: "threads", takes_value: true, default: None, help: "override snapshot thread count" },
+    ]
+}
+
+fn predict_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "snapshot", takes_value: true, default: None, help: "model snapshot (required)" },
+        OptSpec { name: "points", takes_value: true, default: Some("-"), help: "JSONL query file, '-' = stdin" },
+        OptSpec { name: "threads", takes_value: true, default: None, help: "worker threads [auto]" },
+    ]
+}
+
 fn build_dataset(args: &Args) -> anyhow::Result<Dataset> {
     let n = args.get_usize("n")?;
     let nval = args.get_usize("nval")?;
@@ -51,21 +94,17 @@ fn build_dataset(args: &Args) -> anyhow::Result<Dataset> {
     })
 }
 
-fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
-    let spec = run_spec();
-    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
-    let ds = build_dataset(&args)?;
+/// Assemble the run config: config file first, explicit flags override,
+/// threads default to all cores when neither specifies them.
+fn resolve_cfg(args: &Args) -> anyhow::Result<RunConfig> {
     let mut cfg = RunConfig::default();
-    // config file first, explicit flags override
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
         cfg.apply_file(&text).map_err(anyhow::Error::msg)?;
     } else if args.get("threads").is_none() {
-        cfg.threads = std::thread::available_parallelism()
-            .map(|x| x.get())
-            .unwrap_or(1);
+        cfg.threads = Pool::auto().threads;
     }
-    let overridden = RunConfig::from_args(&args).map_err(anyhow::Error::msg)?;
+    let overridden = RunConfig::from_args(args).map_err(anyhow::Error::msg)?;
     // fold in only the flags that were actually passed
     if args.get("algo").is_some() { cfg.algo = overridden.algo; }
     if args.get("rho").is_some() { cfg.rho = overridden.rho; }
@@ -77,6 +116,14 @@ fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
     if args.get("engine").is_some() { cfg.engine = overridden.engine; }
     if args.get("threads").is_some() { cfg.threads = overridden.threads; }
     if args.get("artifacts").is_some() { cfg.artifacts_dir = overridden.artifacts_dir; }
+    Ok(cfg)
+}
+
+fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
+    let spec = run_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let ds = build_dataset(&args)?;
+    let cfg = resolve_cfg(&args)?;
 
     println!("dataset: {}", ds.summary());
     println!(
@@ -105,6 +152,157 @@ fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
     if let Some(path) = args.get("out") {
         out.trace.to_table().write_csv(std::path::Path::new(path))?;
         println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
+    let spec = train_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let save = args
+        .get("save")
+        .ok_or_else(|| anyhow::anyhow!("train needs --save PATH"))?
+        .to_string();
+    let ds = build_dataset(&args)?;
+    let cfg = resolve_cfg(&args)?;
+
+    println!("dataset: {}", ds.summary());
+    println!(
+        "training {} (k={}, b0={}, threads={}) for snapshot {save}",
+        cfg.label(), cfg.k, cfg.b0, cfg.threads
+    );
+    // paper protocol: per-seed shuffle before the nested batches form
+    let shuffled = nmbkm::data::shuffle::shuffled(&ds.train, cfg.seed);
+    let (session, report) = session::train(&shuffled, &cfg)?;
+    let pool = Pool::new(cfg.threads);
+    let cent = session.centroids().expect("trained session has a model");
+    let val_mse = nmbkm::kmeans::assign::validation_mse(
+        &ds.val,
+        cent,
+        &NativeEngine,
+        &pool,
+    );
+    if let Some(info) = report.last {
+        println!(
+            "trained: {} rounds, {:.3}s work, batch {} / {}, train MSE {:.6e}",
+            report.rounds_run,
+            report.work_secs,
+            info.batch,
+            shuffled.n(),
+            info.train_mse
+        );
+    }
+    println!("validation MSE {val_mse:.6e}");
+    let snap = session.snapshot(!args.flag("model-only"))?;
+    let path = std::path::Path::new(&save);
+    snap.save(path)?;
+    let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "snapshot saved to {save} ({bytes} bytes{})",
+        if args.flag("model-only") { ", model-only" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
+    let spec = serve_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let path = args
+        .get("snapshot")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --snapshot PATH"))?;
+    let mut snap = Snapshot::load(std::path::Path::new(path))?;
+    if args.get("threads").is_some() {
+        snap.cfg.threads = args.get_usize("threads")?.max(1);
+    }
+    let mut session = session::OnlineSession::resume(snap)?;
+    // protocol `snapshot` requests write bare file names into the
+    // directory the artifact came from
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            session.set_snapshot_dir(dir.to_path_buf());
+        }
+    }
+    eprintln!(
+        "[nmbkm::serve] resumed {} from {path}: {}",
+        session.cfg().label(),
+        session.stats_json().to_string()
+    );
+    match args.get("listen") {
+        Some(addr) => nmbkm::serve::server::serve_tcp(&mut session, addr),
+        None => nmbkm::serve::server::serve_stdio(&mut session),
+    }
+}
+
+fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
+    let spec = predict_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let path = args
+        .get("snapshot")
+        .ok_or_else(|| anyhow::anyhow!("predict needs --snapshot PATH"))?;
+    let snap = Snapshot::load(std::path::Path::new(path))?;
+    let cent = snap.centroids();
+    let d = cent.d();
+    let source = args.get("points").unwrap_or("-");
+    let text = if source == "-" {
+        use std::io::Read;
+        let mut buf = String::new();
+        std::io::stdin().read_to_string(&mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(source)?
+    };
+    // parse every query row up front, score as one engine batch
+    let mut rows: Vec<f32> = Vec::new();
+    let mut count = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let arr = v.as_arr().ok_or_else(|| {
+            anyhow::anyhow!("line {}: expected a JSON array of numbers", lineno + 1)
+        })?;
+        anyhow::ensure!(
+            arr.len() == d,
+            "line {}: {} values, model dimension is {d}",
+            lineno + 1,
+            arr.len()
+        );
+        for x in arr {
+            let x = x.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("line {}: non-numeric value", lineno + 1)
+            })?;
+            anyhow::ensure!(
+                (x as f32).is_finite(),
+                "line {}: non-finite value {x}",
+                lineno + 1
+            );
+            rows.push(x as f32);
+        }
+        count += 1;
+    }
+    let pool = match args.get("threads") {
+        Some(_) => Pool::new(args.get_usize("threads")?),
+        None => Pool::auto(),
+    };
+    let queries = nmbkm::data::Data::dense(
+        nmbkm::linalg::dense::DenseMatrix::from_vec(count, d, rows),
+    );
+    let mut lbl = vec![0u32; count];
+    let mut d2 = vec![0f32; count];
+    use nmbkm::kmeans::assign::AssignEngine;
+    NativeEngine.assign(
+        &queries,
+        nmbkm::kmeans::assign::Sel::Range(0, count),
+        cent,
+        &pool,
+        &mut lbl,
+        &mut d2,
+    );
+    for t in 0..count {
+        println!("{{\"label\":{},\"d2\":{}}}", lbl[t], d2[t] as f64);
     }
     Ok(())
 }
@@ -146,8 +344,8 @@ fn cmd_info(raw: &[String]) -> anyhow::Result<()> {
     println!("nmbkm — Nested Mini-Batch K-Means (Newling & Fleuret, NIPS 2016)");
     println!("results dir: {}", results_dir().display());
     println!(
-        "threads available: {}",
-        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+        "threads available: {} (NMBKM_THREADS overrides)",
+        Pool::auto().threads
     );
     match nmbkm::runtime::artifact::Manifest::load(std::path::Path::new(&dir)) {
         Ok(m) => {
@@ -158,10 +356,16 @@ fn cmd_info(raw: &[String]) -> anyhow::Result<()> {
                 m.dims,
                 m.entries.len()
             );
+            #[cfg(feature = "xla")]
             match nmbkm::runtime::executor::XlaEngine::load(&dir) {
                 Ok(_) => println!("PJRT CPU client: OK (all programs compiled)"),
                 Err(e) => println!("PJRT load failed: {e:#}"),
             }
+            #[cfg(not(feature = "xla"))]
+            println!(
+                "PJRT runtime: disabled at build time (rebuild with \
+                 `--features xla`)"
+            );
         }
         Err(e) => println!("no artifacts ({e:#}) — run `make artifacts`"),
     }
@@ -176,11 +380,35 @@ fn main() {
     };
     let result = match cmd {
         "run" => cmd_run(&rest),
+        "train" => cmd_train(&rest),
+        "serve" => cmd_serve(&rest),
+        "predict" => cmd_predict(&rest),
         "experiment" => cmd_experiment(&rest),
         "info" => cmd_info(&rest),
         _ => {
-            println!("nmbkm <run|experiment|info>\n");
+            println!("nmbkm <run|train|serve|predict|experiment|info>\n");
             println!("{}", usage("nmbkm run", "run one clustering job", &run_spec()));
+            println!(
+                "{}",
+                usage("nmbkm train", "train and save a model snapshot", &train_spec())
+            );
+            println!(
+                "{}",
+                usage(
+                    "nmbkm serve",
+                    "resume a snapshot and serve the JSONL protocol \
+                     (ingest|predict|step|stats|snapshot|shutdown)",
+                    &serve_spec()
+                )
+            );
+            println!(
+                "{}",
+                usage(
+                    "nmbkm predict",
+                    "score JSONL query rows against a snapshot",
+                    &predict_spec()
+                )
+            );
             println!(
                 "nmbkm experiment <fig1|fig2|fig3|table1|table2|all> \
                  [--full] [--seeds N] [--seconds S] [--threads T] [--engine-xla]"

@@ -6,14 +6,32 @@
 //! DESIGN.md. At startup we compile every manifest entry on the PJRT
 //! CPU client; per round the [`executor::XlaEngine`] pads batches to a
 //! compiled tile shape and executes.
+//!
+//! The PJRT dependency is gated behind the off-by-default `xla` cargo
+//! feature so the default build is fully self-contained; without it
+//! [`make_engine`] reports the engine as unavailable and callers fall
+//! back to the native engine or skip (they already treat engine
+//! construction as fallible).
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod executor;
 
 use crate::kmeans::assign::AssignEngine;
 
 /// Build the XLA-backed assignment engine from an artifacts directory.
+#[cfg(feature = "xla")]
 pub fn make_engine(artifacts_dir: &str) -> anyhow::Result<Box<dyn AssignEngine>> {
     let engine = executor::XlaEngine::load(artifacts_dir)?;
     Ok(Box::new(engine))
+}
+
+/// Build the XLA-backed assignment engine — unavailable in this build.
+#[cfg(not(feature = "xla"))]
+pub fn make_engine(_artifacts_dir: &str) -> anyhow::Result<Box<dyn AssignEngine>> {
+    anyhow::bail!(
+        "this binary was built without the `xla` feature — rebuild with \
+         `cargo build --features xla` (and run `make artifacts`) to use \
+         the PJRT engine"
+    )
 }

@@ -1,0 +1,30 @@
+//! The serving layer: what turns the reproduction into a long-lived
+//! system.
+//!
+//! The paper's algorithms digest data as it streams in — but the rest of
+//! this crate, like the paper's evaluation, is batch: a model lives and
+//! dies inside one `kmeans::run` call. This subsystem adds the three
+//! capabilities a production deployment needs on top of that:
+//!
+//! | module       | capability |
+//! |--------------|------------|
+//! | [`snapshot`] | versioned, bit-exact model artifacts (save/load)   |
+//! | [`session`]  | pause/resume training; ingest new points online    |
+//! | [`protocol`] | JSONL request/response: ingest·predict·stats·snapshot |
+//! | [`server`]   | transports: stdio pipes and `std::net` TCP         |
+//!
+//! The load-bearing invariant throughout is the paper's §3.1
+//! each-point-counts-exactly-once property: ingested points append
+//! *behind* the nested batch and enter the sufficient statistics exactly
+//! once, when the σ̂_C/p controller grows the batch over them; snapshots
+//! serialise every accumulator bit-exactly so a resumed session retraces
+//! the uninterrupted run. CLI front-ends: `nmbkm train --save`, `nmbkm
+//! serve`, `nmbkm predict`.
+
+pub mod protocol;
+pub mod server;
+pub mod session;
+pub mod snapshot;
+
+pub use session::OnlineSession;
+pub use snapshot::Snapshot;

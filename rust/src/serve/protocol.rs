@@ -1,0 +1,415 @@
+//! The serving wire protocol: JSON Lines, dependency-free, transport
+//! agnostic (stdio and TCP both speak it — see `serve::server`).
+//!
+//! One request per line, one response per line, in order:
+//!
+//! ```text
+//! → {"op":"ingest","points":[[…],[…]],"rounds":2}
+//! ← {"ok":true,"op":"ingest","added":2,"n":10002,"rounds_run":2,…}
+//! → {"op":"predict","points":[[…]]}
+//! ← {"ok":true,"op":"predict","labels":[7],"d2":[0.125]}
+//! → {"op":"stats"}
+//! ← {"ok":true,"op":"stats","initialised":true,"n_total":10002,…}
+//! → {"op":"snapshot","path":"model.json"}
+//! ← {"ok":true,"op":"snapshot","path":"model.json","bytes":123456}
+//! → {"op":"shutdown"}
+//! ← {"ok":true,"op":"shutdown"}
+//! ```
+//!
+//! Errors never kill the stream: a malformed or failing request gets
+//! `{"ok":false,"error":"…"}` and the loop continues. `d2` values are
+//! exact — f32 widens losslessly to the f64 JSON number and the parser
+//! round-trips f64, so predict responses carry the same bits the engine
+//! produced.
+
+use crate::serve::session::OnlineSession;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::io::{BufRead, Write};
+
+/// A parsed request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Append points, then (optionally) run training rounds over the
+    /// grown buffer.
+    Ingest { points: Vec<Vec<f32>>, rounds: usize, seconds: f64 },
+    /// Nearest-centroid queries.
+    Predict { points: Vec<Vec<f32>> },
+    /// Run training rounds without new data.
+    Step { rounds: usize, seconds: f64 },
+    /// Observability counters.
+    Stats,
+    /// Persist the model (and, unless `include_data` is false, the
+    /// buffer) to a snapshot file on the server's filesystem.
+    Snapshot { path: String, include_data: bool },
+    /// Stop serving (closes the stream; a TCP server exits its accept
+    /// loop).
+    Shutdown,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("request missing string field 'op'"))?;
+    let rounds = |default: usize| -> Result<usize> {
+        match v.get("rounds") {
+            None => Ok(default),
+            Some(x) => x
+                .as_f64()
+                .filter(|r| *r >= 0.0 && r.fract() == 0.0)
+                .map(|r| r as usize)
+                .ok_or_else(|| anyhow!("'rounds' must be a non-negative integer")),
+        }
+    };
+    let seconds = || -> Result<f64> {
+        match v.get("seconds") {
+            None => Ok(f64::INFINITY),
+            Some(x) => x
+                .as_f64()
+                .filter(|s| *s >= 0.0)
+                .ok_or_else(|| anyhow!("'seconds' must be a non-negative number")),
+        }
+    };
+    Ok(match op {
+        "ingest" => Request::Ingest {
+            points: parse_points(&v)?,
+            rounds: rounds(1)?,
+            seconds: seconds()?,
+        },
+        "predict" => Request::Predict { points: parse_points(&v)? },
+        "step" => Request::Step { rounds: rounds(1)?, seconds: seconds()? },
+        "stats" => Request::Stats,
+        "snapshot" => Request::Snapshot {
+            path: v
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("snapshot op needs a 'path' string"))?
+                .to_string(),
+            include_data: v
+                .get("include_data")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+        },
+        "shutdown" | "quit" => Request::Shutdown,
+        other => bail!(
+            "unknown op '{other}' (ingest|predict|step|stats|snapshot|shutdown)"
+        ),
+    })
+}
+
+fn parse_points(v: &Json) -> Result<Vec<Vec<f32>>> {
+    let arr = v
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("request needs 'points': [[…], …]"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (t, row) in arr.iter().enumerate() {
+        let row = row
+            .as_arr()
+            .ok_or_else(|| anyhow!("points[{t}] is not an array"))?;
+        let mut r = Vec::with_capacity(row.len());
+        for (u, x) in row.iter().enumerate() {
+            let x = x
+                .as_f64()
+                .ok_or_else(|| anyhow!("points[{t}][{u}] is not a number"))?;
+            // a single inf/NaN coordinate would poison the sufficient
+            // statistics (and every later snapshot) for good; the check
+            // is on the narrowed value so f64s beyond f32 range are
+            // caught too
+            ensure!(
+                (x as f32).is_finite(),
+                "points[{t}][{u}] is not a finite f32 ({x})"
+            );
+            r.push(x as f32);
+        }
+        out.push(r);
+    }
+    Ok(out)
+}
+
+/// Execute one request against the session. Never fails: errors become
+/// `ok:false` responses. The bool is true when the stream should close.
+pub fn handle_line(session: &mut OnlineSession, line: &str) -> (Json, bool) {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => return (err_json(&e), false),
+    };
+    match execute(session, &req) {
+        Ok(resp) => (resp, matches!(req, Request::Shutdown)),
+        Err(e) => (err_json(&e), false),
+    }
+}
+
+fn err_json(e: &anyhow::Error) -> Json {
+    json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", json::s(&format!("{e:#}"))),
+    ])
+}
+
+fn execute(session: &mut OnlineSession, req: &Request) -> Result<Json> {
+    Ok(match req {
+        Request::Ingest { points, rounds, seconds } => {
+            let n = session.ingest_rows(points)?;
+            let rep = session.step(*rounds, *seconds)?;
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("ingest")),
+                ("added", json::num(points.len() as f64)),
+                ("n", json::num(n as f64)),
+                ("rounds_run", json::num(rep.rounds_run as f64)),
+                ("initialised", Json::Bool(session.initialised())),
+            ];
+            if let Some(info) = rep.last {
+                fields.push(("batch", json::num(info.batch as f64)));
+                fields.push(("train_mse", json::num(info.train_mse)));
+            }
+            json::obj(fields)
+        }
+        Request::Predict { points } => {
+            let (lbl, d2) = session.predict_rows(points)?;
+            json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("predict")),
+                (
+                    "labels",
+                    Json::Arr(lbl.iter().map(|&j| json::num(j as f64)).collect()),
+                ),
+                (
+                    "d2",
+                    Json::Arr(d2.iter().map(|&x| json::num(x as f64)).collect()),
+                ),
+            ])
+        }
+        Request::Step { rounds, seconds } => {
+            let rep = session.step(*rounds, *seconds)?;
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("step")),
+                ("rounds_run", json::num(rep.rounds_run as f64)),
+                ("converged", Json::Bool(rep.converged)),
+                ("waiting_for_points", Json::Bool(rep.waiting_for_points)),
+            ];
+            if let Some(info) = rep.last {
+                fields.push(("batch", json::num(info.batch as f64)));
+                fields.push(("train_mse", json::num(info.train_mse)));
+            }
+            json::obj(fields)
+        }
+        Request::Stats => {
+            let mut resp = session.stats_json();
+            if let Json::Obj(m) = &mut resp {
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("op".to_string(), json::s("stats"));
+            }
+            resp
+        }
+        Request::Snapshot { path, include_data } => {
+            // clients name a bare file inside the server's snapshot
+            // directory; anything path-like is rejected so a remote peer
+            // never gets an arbitrary-file-write primitive
+            ensure!(
+                !path.is_empty()
+                    && path != "."
+                    && path != ".."
+                    && !path.contains('/')
+                    && !path.contains('\\')
+                    // ':' blocks Windows drive-prefixed names like
+                    // "C:evil", which Path::join resolves outside the base
+                    && !path.contains(':')
+                    && !path.contains('\0'),
+                "snapshot 'path' must be a bare file name (it is resolved \
+                 inside the server's snapshot directory), got {path:?}"
+            );
+            let snap = session.snapshot(*include_data)?;
+            let target = session.snapshot_dir().join(path);
+            snap.save(&target)?;
+            let bytes = std::fs::metadata(&target).map(|m| m.len()).unwrap_or(0);
+            json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("snapshot")),
+                ("path", json::s(&target.display().to_string())),
+                ("bytes", json::num(bytes as f64)),
+            ])
+        }
+        Request::Shutdown => json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", json::s("shutdown")),
+        ]),
+    })
+}
+
+/// Drive a whole request stream: read JSONL requests from `input`, write
+/// JSONL responses to `output`. Returns true when the stream ended with
+/// an explicit shutdown (as opposed to EOF).
+pub fn serve_lines<R: BufRead, W: Write>(
+    session: &mut OnlineSession,
+    input: R,
+    output: &mut W,
+) -> Result<bool> {
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = handle_line(session, &line);
+        writeln!(output, "{}", resp.to_string())?;
+        output.flush()?;
+        if quit {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, Rho, RunConfig};
+    use crate::data::gaussian::GaussianMixture;
+    use crate::serve::session;
+
+    fn ready_session() -> OnlineSession {
+        let data = GaussianMixture::default_spec(3, 4).generate(300, 1);
+        let cfg = RunConfig {
+            algo: Algo::GbRho,
+            k: 3,
+            b0: 32,
+            rho: Rho::Infinite,
+            threads: 2,
+            max_rounds: 5,
+            max_seconds: 30.0,
+            ..Default::default()
+        };
+        session::train(&data, &cfg).unwrap().0
+    }
+
+    #[test]
+    fn parse_request_forms() {
+        assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(
+            parse_request(r#"{"op":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        );
+        let r = parse_request(r#"{"op":"ingest","points":[[1,2],[3,4]]}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::Ingest {
+                points: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+                rounds: 1,
+                seconds: f64::INFINITY,
+            }
+        );
+        let r = parse_request(r#"{"op":"step","rounds":4,"seconds":0.5}"#).unwrap();
+        assert_eq!(r, Request::Step { rounds: 4, seconds: 0.5 });
+        let r = parse_request(r#"{"op":"snapshot","path":"m.json","include_data":false}"#)
+            .unwrap();
+        assert_eq!(
+            r,
+            Request::Snapshot { path: "m.json".into(), include_data: false }
+        );
+        for bad in [
+            "not json",
+            r#"{"no_op":1}"#,
+            r#"{"op":"transmogrify"}"#,
+            r#"{"op":"predict"}"#,
+            r#"{"op":"predict","points":[1]}"#,
+            r#"{"op":"predict","points":[["x"]]}"#,
+            r#"{"op":"step","rounds":-1}"#,
+            r#"{"op":"step","rounds":1.5}"#,
+            r#"{"op":"snapshot"}"#,
+            r#"{"op":"ingest","points":[[1e400]]}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn errors_do_not_close_the_stream() {
+        let mut s = ready_session();
+        let input = "{\"op\":\"bogus\"}\n\n{\"op\":\"stats\"}\n";
+        let mut out = Vec::new();
+        let shutdown =
+            serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+        assert!(!shutdown, "EOF, not shutdown");
+        let lines: Vec<&str> =
+            std::str::from_utf8(&out).unwrap().trim().lines().collect();
+        assert_eq!(lines.len(), 2, "blank line skipped, two responses");
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("ok").unwrap().as_bool(), Some(false));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(second.get("op").unwrap().as_str(), Some("stats"));
+    }
+
+    #[test]
+    fn shutdown_terminates_and_reports() {
+        let mut s = ready_session();
+        let input = "{\"op\":\"shutdown\"}\n{\"op\":\"stats\"}\n";
+        let mut out = Vec::new();
+        let shutdown =
+            serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+        assert!(shutdown);
+        let lines: Vec<&str> =
+            std::str::from_utf8(&out).unwrap().trim().lines().collect();
+        assert_eq!(lines.len(), 1, "nothing served after shutdown");
+    }
+
+    #[test]
+    fn ingest_then_stats_reflects_growth() {
+        let mut s = ready_session();
+        let input = "{\"op\":\"ingest\",\"points\":[[0.5,0.5,0.5,0.5]],\"rounds\":0}\n\
+                     {\"op\":\"stats\"}\n";
+        let mut out = Vec::new();
+        serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+        let lines: Vec<&str> =
+            std::str::from_utf8(&out).unwrap().trim().lines().collect();
+        let ingest = Json::parse(lines[0]).unwrap();
+        assert_eq!(ingest.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(ingest.get("n").unwrap().as_usize(), Some(301));
+        let stats = Json::parse(lines[1]).unwrap();
+        assert_eq!(stats.get("n_total").unwrap().as_usize(), Some(301));
+    }
+
+    #[test]
+    fn snapshot_op_confined_to_snapshot_dir() {
+        let mut s = ready_session();
+        s.set_snapshot_dir(std::env::temp_dir());
+        // path-like names are rejected outright
+        for bad in ["../escape.json", "/etc/owned", "a/b.json", "C:evil.json", "..", ""] {
+            let req = format!(
+                "{{\"op\":\"snapshot\",\"path\":{}}}",
+                Json::Str(bad.to_string()).to_string()
+            );
+            let (resp, _) = handle_line(&mut s, &req);
+            assert_eq!(
+                resp.get("ok").unwrap().as_bool(),
+                Some(false),
+                "accepted {bad:?}"
+            );
+        }
+        // a bare file name lands inside the configured directory
+        let (resp, _) = handle_line(
+            &mut s,
+            r#"{"op":"snapshot","path":"nmbkm-proto-snap-test.json"}"#,
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        let written = std::env::temp_dir().join("nmbkm-proto-snap-test.json");
+        assert!(written.exists());
+        assert!(resp.get("bytes").unwrap().as_usize().unwrap() > 0);
+        std::fs::remove_file(&written).ok();
+    }
+
+    #[test]
+    fn predict_dimension_mismatch_is_an_ok_false() {
+        let mut s = ready_session();
+        let (resp, quit) =
+            handle_line(&mut s, r#"{"op":"predict","points":[[1,2]]}"#);
+        assert!(!quit);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("dimension"));
+    }
+}

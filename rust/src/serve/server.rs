@@ -1,0 +1,72 @@
+//! Protocol transports: stdio and TCP.
+//!
+//! Both speak the JSONL protocol (`serve::protocol`) against one
+//! [`OnlineSession`]. The TCP server accepts connections sequentially —
+//! the session is a single training state and every mutation must be
+//! serialised anyway; per-request parallelism comes from the shard pool
+//! inside the assignment engine, which is where the cycles go. An
+//! explicit `shutdown` request ends the whole server (stdio: EOF works
+//! too).
+
+use crate::serve::protocol::serve_lines;
+use crate::serve::session::OnlineSession;
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+
+/// Serve requests from stdin, responses to stdout, until EOF or
+/// `shutdown`.
+pub fn serve_stdio(session: &mut OnlineSession) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    serve_lines(session, stdin.lock(), &mut out)?;
+    Ok(())
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7878`, or port 0 for ephemeral) and
+/// serve until a client sends `shutdown`.
+pub fn serve_tcp(session: &mut OnlineSession, addr: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "[nmbkm::serve] listening on {} (JSONL: ingest|predict|step|stats|snapshot|shutdown)",
+        listener.local_addr()?
+    );
+    serve_listener(session, listener)
+}
+
+/// Accept-loop over an already-bound listener (split out so tests can
+/// bind an ephemeral port themselves).
+pub fn serve_listener(
+    session: &mut OnlineSession,
+    listener: TcpListener,
+) -> Result<()> {
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[nmbkm::serve] accept failed: {e}");
+                continue;
+            }
+        };
+        match serve_connection(session, stream) {
+            Ok(true) => break, // explicit shutdown ends the server
+            Ok(false) => {}    // client hung up; accept the next one
+            Err(e) => eprintln!("[nmbkm::serve] connection error: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn serve_connection(
+    session: &mut OnlineSession,
+    stream: TcpStream,
+) -> Result<bool> {
+    if let Ok(peer) = stream.peer_addr() {
+        eprintln!("[nmbkm::serve] client {peer} connected");
+    }
+    let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = BufWriter::new(stream);
+    serve_lines(session, reader, &mut writer)
+}

@@ -1,0 +1,501 @@
+//! Online training sessions: a pausable, resumable, incrementally-fed
+//! wrapper around the nested-batch algorithms.
+//!
+//! An [`OnlineSession`] owns a growable data buffer and a `gb-ρ`/`tb-ρ`
+//! clusterer over it. The mini-batch setting's defining feature —
+//! digesting data as it streams in (Sculley 2010) — maps directly onto
+//! the nested-batch structure: ingested points are appended *after* the
+//! active prefix, and enter the statistics exactly once when the σ̂_C/p
+//! controller votes to grow the batch over them, so the paper's §3.1
+//! each-point-counts-exactly-once invariant holds across arbitrary
+//! ingest/step/snapshot/resume interleavings (tested in
+//! `tests/serve.rs`).
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! new(cfg, dim) ──ingest──▶ (≥ k points: model initialises)
+//!        │                        │
+//!        ▼                        ▼
+//!   train(data, cfg)          step(rounds, secs) ◀──ingest── new points
+//!        │                        │
+//!        └──▶ snapshot() ──save──▶ file ──load──▶ resume() ──▶ step(…)
+//! ```
+
+use crate::config::{Algo, Engine, RunConfig};
+use crate::coordinator::shard::Pool;
+use crate::data::{Data, Storage};
+use crate::kmeans::assign::{AssignEngine, NativeEngine, Sel};
+use crate::kmeans::state::Centroids;
+use crate::kmeans::{self, Clusterer, Ctx, RoundInfo};
+use crate::linalg::dense::{self, DenseMatrix};
+use crate::serve::snapshot::Snapshot;
+use crate::util::json::{self, Json};
+use crate::util::rng::Pcg64;
+use crate::util::timer::WorkClock;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// What one [`OnlineSession::step`] call did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepReport {
+    pub rounds_run: usize,
+    pub work_secs: f64,
+    /// Metrics of the last round executed, if any.
+    pub last: Option<RoundInfo>,
+    /// The algorithm reached its fixed point over the current buffer.
+    pub converged: bool,
+    /// The model is not initialised yet (fewer than k points ingested).
+    pub waiting_for_points: bool,
+}
+
+/// A long-lived clustering session: the unit of state behind `nmbkm
+/// train/serve` and the JSONL protocol.
+pub struct OnlineSession {
+    cfg: RunConfig,
+    data: Data,
+    alg: Option<Box<dyn Clusterer>>,
+    engine: Box<dyn AssignEngine>,
+    pool: Pool,
+    rng: Pcg64,
+    rounds: usize,
+    work_secs: f64,
+    last_info: Option<RoundInfo>,
+    /// Directory protocol `snapshot` requests may write into (they name a
+    /// bare file, never a path — remote clients must not get an
+    /// arbitrary-file-write primitive on the server).
+    snapshot_dir: std::path::PathBuf,
+}
+
+impl OnlineSession {
+    /// An empty dense session awaiting its first points. The model
+    /// initialises (per `cfg.init`) once at least `cfg.k` points have
+    /// arrived.
+    pub fn new(cfg: RunConfig, dim: usize) -> Result<OnlineSession> {
+        ensure!(dim >= 1, "dimension must be >= 1");
+        Self::from_data(Data::dense(DenseMatrix::zeros(0, dim)), cfg)
+    }
+
+    /// A session over a pre-filled buffer (the `train` path). The caller
+    /// shuffles if the paper's per-seed protocol is wanted; a serving
+    /// deployment feeds arrival order.
+    pub fn from_data(data: Data, cfg: RunConfig) -> Result<OnlineSession> {
+        ensure_resumable_algo(&cfg)?;
+        ensure!(cfg.k >= 1, "bad k={}", cfg.k);
+        let engine = make_engine(&cfg)?;
+        let rng = Pcg64::new(cfg.seed, 0x5E55).derive("serve-session");
+        let pool = Pool::new(cfg.threads);
+        let mut session = OnlineSession {
+            cfg,
+            data,
+            alg: None,
+            engine,
+            pool,
+            rng,
+            rounds: 0,
+            work_secs: 0.0,
+            last_info: None,
+            snapshot_dir: std::path::PathBuf::from("."),
+        };
+        session.try_init();
+        Ok(session)
+    }
+
+    /// Rebuild a session exactly where a snapshot paused it. Requires
+    /// the snapshot's data section (model-only artifacts serve predict
+    /// traffic but cannot resume training).
+    pub fn resume(snap: Snapshot) -> Result<OnlineSession> {
+        let data = snap.data.ok_or_else(|| {
+            anyhow!(
+                "snapshot has no data section — it can answer predict \
+                 queries but cannot resume training"
+            )
+        })?;
+        ensure!(
+            data.n() == snap.state.n,
+            "snapshot data has {} rows but state says {}",
+            data.n(),
+            snap.state.n
+        );
+        ensure!(
+            data.dim() == snap.state.cent.d(),
+            "snapshot data dim {} != model dim {}",
+            data.dim(),
+            snap.state.cent.d()
+        );
+        let cfg = snap.cfg;
+        ensure_resumable_algo(&cfg)?;
+        let alg = kmeans::resume_clusterer(snap.state, &cfg)?;
+        let engine = make_engine(&cfg)?;
+        let pool = Pool::new(cfg.threads);
+        Ok(OnlineSession {
+            cfg,
+            data,
+            alg: Some(alg),
+            engine,
+            pool,
+            rng: snap.rng,
+            rounds: snap.rounds,
+            work_secs: 0.0,
+            last_info: None,
+            snapshot_dir: std::path::PathBuf::from("."),
+        })
+    }
+
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn data(&self) -> &Data {
+        &self.data
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    pub fn initialised(&self) -> bool {
+        self.alg.is_some()
+    }
+
+    /// Where protocol `snapshot` requests are allowed to write.
+    pub fn snapshot_dir(&self) -> &std::path::Path {
+        &self.snapshot_dir
+    }
+
+    pub fn set_snapshot_dir(&mut self, dir: std::path::PathBuf) {
+        self.snapshot_dir = dir;
+    }
+
+    /// Current model, once initialised.
+    pub fn centroids(&self) -> Option<&Centroids> {
+        self.alg.as_ref().map(|a| a.centroids())
+    }
+
+    /// Append points to the buffer. They are *unseen* until the growth
+    /// controller expands the batch over them — this is what keeps every
+    /// point counted exactly once. Returns the new buffer size.
+    pub fn ingest_rows(&mut self, rows: &[Vec<f32>]) -> Result<usize> {
+        let d = self.data.dim();
+        for (t, r) in rows.iter().enumerate() {
+            ensure!(
+                r.len() == d,
+                "ingest row {t}: dimension {} != session dimension {d}",
+                r.len()
+            );
+            // non-finite coordinates would corrupt the sufficient
+            // statistics irreversibly — reject at the boundary
+            ensure!(
+                r.iter().all(|x| x.is_finite()),
+                "ingest row {t}: non-finite coordinate"
+            );
+        }
+        match &mut self.data.storage {
+            Storage::Dense(m) => {
+                for r in rows {
+                    m.data.extend_from_slice(r);
+                    m.rows += 1;
+                    self.data.norms.push(dense::sq_norm(r));
+                }
+            }
+            Storage::Sparse(m) => {
+                for r in rows {
+                    let mut cv = Vec::new();
+                    // norm summed over nonzeros in storage order, exactly
+                    // like CsrMatrix::row_sq_norms — snapshot load
+                    // recomputes norms from the CSR values, and bit-exact
+                    // resume requires the same summation order
+                    let mut norm = 0f32;
+                    for (c, &x) in r.iter().enumerate() {
+                        if x != 0.0 {
+                            cv.push((c as u32, x));
+                            norm += x * x;
+                        }
+                    }
+                    m.push_row(&cv);
+                    self.data.norms.push(norm);
+                }
+            }
+        }
+        let n = self.data.n();
+        if let Some(alg) = &mut self.alg {
+            let ok = alg.extend_data(n);
+            debug_assert!(ok, "resumable algorithms always accept growth");
+        } else {
+            self.try_init();
+        }
+        Ok(n)
+    }
+
+    /// Run up to `max_rounds` rounds or until `max_seconds` of work time
+    /// elapses (whichever first), honouring `cfg.stop_on_convergence`.
+    pub fn step(&mut self, max_rounds: usize, max_seconds: f64) -> Result<StepReport> {
+        self.try_init();
+        let Some(alg) = self.alg.as_mut() else {
+            return Ok(StepReport {
+                waiting_for_points: true,
+                ..StepReport::default()
+            });
+        };
+        let mut ctx = Ctx {
+            data: &self.data,
+            engine: self.engine.as_ref(),
+            pool: self.pool.clone(),
+            rng: self.rng.clone(),
+        };
+        let mut clock = WorkClock::new();
+        let mut report = StepReport::default();
+        // budget checked *before* each round so `seconds: 0` (and
+        // `rounds: 0`) are true no-ops rather than one surprise round of
+        // latency inside a serving request
+        while report.rounds_run < max_rounds
+            && clock.elapsed_secs() < max_seconds
+        {
+            clock.start();
+            let info = alg.round(&mut ctx);
+            clock.pause();
+            report.rounds_run += 1;
+            report.last = Some(info);
+            if alg.converged() && self.cfg.stop_on_convergence {
+                break;
+            }
+        }
+        // reported even for zero-round steps (convergence polling)
+        report.converged = alg.converged();
+        // fold the (possibly advanced) stream back so snapshots carry it
+        self.rng = ctx.rng;
+        report.work_secs = clock.elapsed_secs();
+        self.rounds += report.rounds_run;
+        self.work_secs += report.work_secs;
+        if report.last.is_some() {
+            self.last_info = report.last;
+        }
+        Ok(report)
+    }
+
+    /// Assign each query row to its nearest centroid: `(labels, d²)`.
+    /// Batched through the configured [`AssignEngine`] and shard pool —
+    /// the same hot path training uses.
+    pub fn predict_rows(&self, rows: &[Vec<f32>]) -> Result<(Vec<u32>, Vec<f32>)> {
+        let cent = self.centroids().ok_or_else(|| {
+            anyhow!(
+                "model not initialised — ingest at least k={} points first",
+                self.cfg.k
+            )
+        })?;
+        let d = self.data.dim();
+        let n = rows.len();
+        let mut buf = Vec::with_capacity(n * d);
+        for (t, r) in rows.iter().enumerate() {
+            ensure!(
+                r.len() == d,
+                "predict row {t}: dimension {} != model dimension {d}",
+                r.len()
+            );
+            buf.extend_from_slice(r);
+        }
+        let queries = Data::dense(DenseMatrix::from_vec(n, d, buf));
+        let mut lbl = vec![0u32; n];
+        let mut d2 = vec![0f32; n];
+        self.engine.assign(
+            &queries,
+            Sel::Range(0, n),
+            cent,
+            &self.pool,
+            &mut lbl,
+            &mut d2,
+        );
+        Ok((lbl, d2))
+    }
+
+    /// Export the full session as a snapshot artifact. `include_data`
+    /// trades file size for resumability (without it the artifact is
+    /// predict-only).
+    pub fn snapshot(&self, include_data: bool) -> Result<Snapshot> {
+        let alg = self
+            .alg
+            .as_ref()
+            .ok_or_else(|| anyhow!("nothing to snapshot: model not initialised"))?;
+        let state = alg
+            .export_state()
+            .ok_or_else(|| anyhow!("algorithm '{}' is not resumable", alg.name()))?;
+        Ok(Snapshot {
+            cfg: self.cfg.clone(),
+            state,
+            rng: self.rng.clone(),
+            rounds: self.rounds,
+            data: if include_data { Some(self.data.clone()) } else { None },
+        })
+    }
+
+    /// Cheap observability record (the protocol's `stats` op).
+    pub fn stats_json(&self) -> Json {
+        let mut fields = vec![
+            ("initialised", Json::Bool(self.initialised())),
+            ("algo", json::s(&self.cfg.label())),
+            ("engine", json::s(self.engine.name())),
+            ("k", json::num(self.cfg.k as f64)),
+            ("dim", json::num(self.data.dim() as f64)),
+            ("n_total", json::num(self.data.n() as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("work_secs", json::num(self.work_secs)),
+            ("threads", json::num(self.pool.threads as f64)),
+        ];
+        if let Some(info) = &self.last_info {
+            fields.push(("batch", json::num(info.batch as f64)));
+            fields.push(("train_mse", json::num(info.train_mse)));
+            fields.push(("last_changed", json::num(info.changed as f64)));
+        }
+        json::obj(fields)
+    }
+
+    fn try_init(&mut self) {
+        if self.alg.is_none() && self.data.n() >= self.cfg.k && self.data.n() > 0 {
+            self.alg = Some(kmeans::make_clusterer(&self.data, &self.cfg));
+        }
+    }
+}
+
+/// One-shot training driver: buffer all of `data`, then run rounds under
+/// the config's budget — `kmeans::run` semantics, but leaving behind a
+/// snapshot-able session instead of a bare outcome. The caller shuffles
+/// (`data::shuffle::shuffled`) when the paper's protocol is wanted.
+pub fn train(data: &Data, cfg: &RunConfig) -> Result<(OnlineSession, StepReport)> {
+    ensure!(
+        data.n() >= cfg.k,
+        "training needs at least k={} points, got {}",
+        cfg.k,
+        data.n()
+    );
+    let mut session = OnlineSession::from_data(data.clone(), cfg.clone())?;
+    let report = session.step(cfg.max_rounds, cfg.max_seconds)?;
+    Ok((session, report))
+}
+
+fn ensure_resumable_algo(cfg: &RunConfig) -> Result<()> {
+    match cfg.algo {
+        Algo::GbRho | Algo::TbRho => Ok(()),
+        other => bail!(
+            "online sessions require a nested-batch algorithm (gb | tb), \
+             got '{}'",
+            other.name()
+        ),
+    }
+}
+
+fn make_engine(cfg: &RunConfig) -> Result<Box<dyn AssignEngine>> {
+    match cfg.engine {
+        Engine::Native => Ok(Box::new(NativeEngine)),
+        Engine::Xla => crate::runtime::make_engine(&cfg.artifacts_dir),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Rho;
+    use crate::data::gaussian::GaussianMixture;
+
+    fn cfg(k: usize, b0: usize) -> RunConfig {
+        RunConfig {
+            algo: Algo::TbRho,
+            k,
+            b0,
+            rho: Rho::Infinite,
+            threads: 2,
+            seed: 7,
+            max_seconds: 30.0,
+            max_rounds: 8,
+            ..Default::default()
+        }
+    }
+
+    fn rows_of(data: &Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(hi - lo);
+        let mut row = vec![0f32; data.dim()];
+        for i in lo..hi {
+            data.write_row_dense(i, &mut row);
+            out.push(row.clone());
+        }
+        out
+    }
+
+    #[test]
+    fn waits_for_k_points_then_initialises() {
+        let data = GaussianMixture::default_spec(4, 5).generate(100, 1);
+        let mut s = OnlineSession::new(cfg(4, 16), 5).unwrap();
+        assert!(!s.initialised());
+        let rep = s.step(5, 1.0).unwrap();
+        assert!(rep.waiting_for_points);
+        assert!(s.predict_rows(&rows_of(&data, 0, 1)).is_err());
+        s.ingest_rows(&rows_of(&data, 0, 3)).unwrap();
+        assert!(!s.initialised(), "3 < k points must not initialise");
+        s.ingest_rows(&rows_of(&data, 3, 30)).unwrap();
+        assert!(s.initialised());
+        let rep = s.step(3, 5.0).unwrap();
+        assert_eq!(rep.rounds_run, 3);
+        assert!(rep.last.unwrap().train_mse.is_finite());
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_algos() {
+        assert!(OnlineSession::new(cfg(3, 8), 0).is_err());
+        let bad = RunConfig { algo: Algo::Lloyd, ..cfg(3, 8) };
+        assert!(OnlineSession::new(bad, 4).is_err());
+        let mut s = OnlineSession::new(cfg(2, 8), 4).unwrap();
+        assert!(s.ingest_rows(&[vec![1.0; 3]]).is_err(), "dim mismatch");
+    }
+
+    #[test]
+    fn train_then_predict_matches_engine() {
+        let data = GaussianMixture::default_spec(3, 6).generate(400, 9);
+        let (session, rep) = train(&data, &cfg(3, 64)).unwrap();
+        assert!(rep.rounds_run >= 1);
+        let queries = rows_of(&data, 100, 140);
+        let (lbl, d2) = session.predict_rows(&queries).unwrap();
+        let cent = session.centroids().unwrap();
+        for (t, q) in queries.iter().enumerate() {
+            let qd = Data::dense(DenseMatrix::from_vec(1, 6, q.clone()));
+            let (j, dd) = qd.nearest(0, &cent.c, &cent.norms);
+            assert_eq!(lbl[t], j);
+            assert_eq!(d2[t], dd);
+        }
+        let _ = rep.work_secs;
+    }
+
+    #[test]
+    fn stats_json_reports_progress() {
+        let data = GaussianMixture::default_spec(3, 4).generate(200, 2);
+        let (session, _) = train(&data, &cfg(3, 32)).unwrap();
+        let stats = session.stats_json();
+        assert_eq!(stats.get("initialised").unwrap().as_bool(), Some(true));
+        assert_eq!(stats.get("n_total").unwrap().as_usize(), Some(200));
+        assert!(stats.get("rounds").unwrap().as_usize().unwrap() >= 1);
+        assert!(stats.get("batch").is_some());
+    }
+
+    #[test]
+    fn sparse_sessions_ingest_dense_rows() {
+        let g = crate::data::rcv1::Rcv1Sim {
+            vocab: 300,
+            topic_vocab: 40,
+            ..Default::default()
+        };
+        let data = g.generate(150, 5);
+        let (mut session, _) = train(&data, &cfg(3, 32)).unwrap();
+        let extra = rows_of(&data, 0, 10);
+        let n = session.ingest_rows(&extra).unwrap();
+        assert_eq!(n, 160);
+        assert!(session.data().is_sparse());
+        let (lbl, _) = session.predict_rows(&extra).unwrap();
+        assert_eq!(lbl.len(), 10);
+        // snapshot-load must reproduce the ingested rows' norms bit-exactly
+        // (load recomputes them from the CSR values)
+        let text = session.snapshot(true).unwrap().to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let a: Vec<u32> =
+            session.data().norms.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> =
+            back.data.unwrap().norms.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+}

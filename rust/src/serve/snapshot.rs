@@ -1,0 +1,554 @@
+//! Versioned model snapshots: the serialised form of a paused
+//! nested-batch run.
+//!
+//! A snapshot is a single JSON document (built on `util::json`, the same
+//! machinery as the artifact manifest) holding the [`RunConfig`], the
+//! complete [`NestedState`] — centroids with cached norms/displacements,
+//! exact sufficient statistics, per-point assignments and the batch
+//! cursor — the RNG stream, and (optionally) the training data buffer.
+//!
+//! **Bit-exactness.** JSON numbers are f64, which silently corrupts
+//! f32/f64 bit patterns and 64-bit integers; every binary payload
+//! therefore travels as a hex blob of its little-endian bytes
+//! (`util::json::hex_encode`). `save → load` reproduces every float and
+//! every counter to the bit, which is what makes `resume` retrace the
+//! uninterrupted run exactly (tested in `tests/serve.rs`).
+//!
+//! Layout (version 1):
+//!
+//! ```json
+//! {"format": "nmbkm-snapshot", "version": 1,
+//!  "config": { ... RunConfig ... },
+//!  "k": 50, "d": 784, "n": 60000, "b": 10000, "b_prev": 10000,
+//!  "rounds": 12,
+//!  "centroids": "<hex f32 k*d>", "cent_norms": "<hex f32 k>",
+//!  "cent_p": "<hex f32 k>",
+//!  "stats_s": "<hex f64 k*d>", "stats_v": "<hex f64 k>",
+//!  "stats_sse": "<hex f64 k>",
+//!  "labels": "<hex u32 n>", "dist2": "<hex f32 n>",
+//!  "seen_mask": "<hex bitset n>",
+//!  "rng_state": ["<hex u64>", ...4], "rng_spare": null,
+//!  "data": {"kind": "dense"|"sparse", ...}}
+//! ```
+
+use crate::config::RunConfig;
+use crate::data::{Data, Storage};
+use crate::kmeans::state::{Assignments, Centroids, SuffStats, UNASSIGNED};
+use crate::kmeans::NestedState;
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::sparse::CsrMatrix;
+use crate::util::json::{self, hex_decode, hex_encode, Json};
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Current snapshot format version; bumped on incompatible changes.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// A complete, versioned model artifact: everything needed to answer
+/// `predict` queries, and — when the data section is included — to
+/// resume training exactly where it paused.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub cfg: RunConfig,
+    pub state: NestedState,
+    pub rng: Pcg64,
+    /// Rounds completed before the snapshot (continues trace numbering).
+    pub rounds: usize,
+    /// Training buffer; `None` makes a smaller predict-only artifact.
+    pub data: Option<Data>,
+}
+
+impl Snapshot {
+    /// The model itself (for predict-only consumers).
+    pub fn centroids(&self) -> &Centroids {
+        &self.state.cent
+    }
+
+    pub fn to_json(&self) -> Json {
+        let st = &self.state;
+        let (rng_words, rng_spare) = self.rng.to_parts();
+        let mut fields = vec![
+            ("format", json::s("nmbkm-snapshot")),
+            ("version", json::num(SNAPSHOT_VERSION as f64)),
+            ("config", self.cfg.to_json()),
+            ("k", json::num(st.cent.k() as f64)),
+            ("d", json::num(st.cent.d() as f64)),
+            ("n", json::num(st.n as f64)),
+            ("b", json::num(st.b as f64)),
+            ("b_prev", json::num(st.b_prev as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("centroids", json::s(&f32s_to_hex(&st.cent.c.data))),
+            ("cent_norms", json::s(&f32s_to_hex(&st.cent.norms))),
+            ("cent_p", json::s(&f32s_to_hex(&st.cent.p))),
+            ("stats_s", json::s(&f64s_to_hex(&st.stats.s))),
+            ("stats_v", json::s(&f64s_to_hex(&st.stats.v))),
+            ("stats_sse", json::s(&f64s_to_hex(&st.stats.sse))),
+            ("labels", json::s(&u32s_to_hex(&st.assign.label))),
+            ("dist2", json::s(&f32s_to_hex(&st.assign.dist2))),
+            ("seen_mask", json::s(&hex_encode(&seen_mask(&st.assign.label)))),
+            (
+                "rng_state",
+                Json::Arr(
+                    rng_words
+                        .iter()
+                        .map(|w| json::s(&format!("{w:x}")))
+                        .collect(),
+                ),
+            ),
+            (
+                "rng_spare",
+                match rng_spare {
+                    Some(x) => json::s(&format!("{:x}", x.to_bits())),
+                    None => Json::Null,
+                },
+            ),
+        ];
+        if let Some(data) = &self.data {
+            fields.push(("data", data_to_json(data)));
+        }
+        json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Snapshot> {
+        ensure!(
+            v.get("format").and_then(Json::as_str) == Some("nmbkm-snapshot"),
+            "not an nmbkm snapshot (missing format tag)"
+        );
+        let version = req_usize(v, "version")?;
+        ensure!(
+            version == SNAPSHOT_VERSION,
+            "snapshot version {version} unsupported (this build reads \
+             version {SNAPSHOT_VERSION})"
+        );
+        let cfg = RunConfig::from_json(
+            v.get("config").ok_or_else(|| anyhow!("snapshot missing config"))?,
+        )
+        .map_err(|e| anyhow!("snapshot config: {e}"))?;
+
+        let k = req_usize(v, "k")?;
+        let d = req_usize(v, "d")?;
+        let n = req_usize(v, "n")?;
+        let b = req_usize(v, "b")?;
+        let b_prev = req_usize(v, "b_prev")?;
+        let rounds = req_usize(v, "rounds")?;
+        ensure!(b_prev <= b && b <= n, "bad batch cursor: b_prev={b_prev} b={b} n={n}");
+        ensure!(k >= 1 && d >= 1, "bad model shape k={k} d={d}");
+
+        let c = blob_f32(v, "centroids", k * d)?;
+        let norms = blob_f32(v, "cent_norms", k)?;
+        let p = blob_f32(v, "cent_p", k)?;
+        let s = blob_f64(v, "stats_s", k * d)?;
+        let sv = blob_f64(v, "stats_v", k)?;
+        let sse = blob_f64(v, "stats_sse", k)?;
+        let labels = blob_u32(v, "labels", n)?;
+        let dist2 = blob_f32(v, "dist2", n)?;
+
+        // integrity: the usage mask must match both the stored labels and
+        // the batch cursor (points are used iff they sit in the seen
+        // prefix — the each-point-counts-exactly-once invariant)
+        let mask = hex_field(v, "seen_mask")?;
+        ensure!(
+            mask.len() == n.div_ceil(8),
+            "seen_mask length {} != ceil(n/8) = {}",
+            mask.len(),
+            n.div_ceil(8)
+        );
+        for i in 0..n {
+            let masked = mask[i / 8] >> (i % 8) & 1 == 1;
+            let labeled = labels[i] != UNASSIGNED;
+            let in_prefix = i < b_prev;
+            ensure!(
+                masked == labeled && labeled == in_prefix,
+                "corrupt snapshot: point {i} mask={masked} labeled={labeled} \
+                 prefix={in_prefix} (b_prev={b_prev})"
+            );
+            if labeled {
+                ensure!(
+                    (labels[i] as usize) < k,
+                    "corrupt snapshot: point {i} label {} >= k={k}",
+                    labels[i]
+                );
+            }
+        }
+
+        let rng_words = v
+            .get("rng_state")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("snapshot missing rng_state"))?;
+        ensure!(rng_words.len() == 4, "rng_state must hold 4 words");
+        let mut words = [0u64; 4];
+        for (w, x) in words.iter_mut().zip(rng_words) {
+            let s = x.as_str().ok_or_else(|| anyhow!("rng word not a string"))?;
+            *w = u64::from_str_radix(s, 16)
+                .map_err(|_| anyhow!("rng word bad hex '{s}'"))?;
+        }
+        let spare = match v.get("rng_spare") {
+            None | Some(Json::Null) => None,
+            Some(x) => {
+                let s =
+                    x.as_str().ok_or_else(|| anyhow!("rng_spare not a string"))?;
+                Some(f64::from_bits(
+                    u64::from_str_radix(s, 16)
+                        .map_err(|_| anyhow!("rng_spare bad hex '{s}'"))?,
+                ))
+            }
+        };
+
+        let data = match v.get("data") {
+            None | Some(Json::Null) => None,
+            Some(dv) => {
+                let data = data_from_json(dv)?;
+                ensure!(
+                    data.n() == n && data.dim() == d,
+                    "data section is {}x{} but the state says {n}x{d}",
+                    data.n(),
+                    data.dim()
+                );
+                Some(data)
+            }
+        };
+
+        Ok(Snapshot {
+            cfg,
+            state: NestedState {
+                cent: Centroids::from_parts(
+                    DenseMatrix::from_vec(k, d, c),
+                    norms,
+                    p,
+                ),
+                stats: SuffStats::from_parts(k, d, s, sv, sse),
+                assign: Assignments::from_parts(labels, dist2),
+                b_prev,
+                b,
+                n,
+            },
+            rng: Pcg64::from_parts(words, spare),
+            rounds,
+            data,
+        })
+    }
+
+    /// Write atomically (temp file + rename) so a crash mid-save never
+    /// leaves a torn artifact behind.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let text = self.to_json().to_string();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, &text)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("snapshot {}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+/// Bit-packed "is this point part of the model" mask (LSB-first).
+fn seen_mask(labels: &[u32]) -> Vec<u8> {
+    let mut mask = vec![0u8; labels.len().div_ceil(8)];
+    for (i, &l) in labels.iter().enumerate() {
+        if l != UNASSIGNED {
+            mask[i / 8] |= 1u8 << (i % 8);
+        }
+    }
+    mask
+}
+
+fn data_to_json(data: &Data) -> Json {
+    match &data.storage {
+        Storage::Dense(m) => json::obj(vec![
+            ("kind", json::s("dense")),
+            ("rows", json::num(m.rows as f64)),
+            ("cols", json::num(m.cols as f64)),
+            ("values", json::s(&f32s_to_hex(&m.data))),
+        ]),
+        Storage::Sparse(m) => json::obj(vec![
+            ("kind", json::s("sparse")),
+            ("rows", json::num(m.rows as f64)),
+            ("cols", json::num(m.cols as f64)),
+            (
+                "indptr",
+                json::s(&u64s_to_hex(
+                    &m.indptr.iter().map(|&x| x as u64).collect::<Vec<_>>(),
+                )),
+            ),
+            ("indices", json::s(&u32s_to_hex(&m.indices))),
+            ("values", json::s(&f32s_to_hex(&m.values))),
+        ]),
+    }
+}
+
+fn data_from_json(v: &Json) -> Result<Data> {
+    let rows = req_usize(v, "rows")?;
+    let cols = req_usize(v, "cols")?;
+    match v.get("kind").and_then(Json::as_str) {
+        Some("dense") => {
+            let values = blob_f32(v, "values", rows * cols)?;
+            Ok(Data::dense(DenseMatrix::from_vec(rows, cols, values)))
+        }
+        Some("sparse") => {
+            let indptr: Vec<usize> = blob_u64(v, "indptr", rows + 1)?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect();
+            let nnz = *indptr.last().unwrap();
+            let indices = blob_u32(v, "indices", nnz)?;
+            let values = blob_f32(v, "values", nnz)?;
+            ensure!(indptr[0] == 0, "indptr must start at 0");
+            for w in indptr.windows(2) {
+                ensure!(w[0] <= w[1], "indptr must be monotone");
+            }
+            for &c in &indices {
+                ensure!((c as usize) < cols, "column index {c} >= cols {cols}");
+            }
+            Ok(Data::sparse(CsrMatrix { rows, cols, indptr, indices, values }))
+        }
+        other => bail!("unknown data kind {other:?}"),
+    }
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("snapshot missing numeric field '{key}'"))
+}
+
+fn hex_field(v: &Json, key: &str) -> Result<Vec<u8>> {
+    let s = v
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("snapshot missing blob field '{key}'"))?;
+    hex_decode(s).ok_or_else(|| anyhow!("snapshot field '{key}': bad hex"))
+}
+
+fn f32s_to_hex(xs: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    hex_encode(&bytes)
+}
+
+fn f64s_to_hex(xs: &[f64]) -> String {
+    let mut bytes = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    hex_encode(&bytes)
+}
+
+fn u32s_to_hex(xs: &[u32]) -> String {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    hex_encode(&bytes)
+}
+
+fn u64s_to_hex(xs: &[u64]) -> String {
+    let mut bytes = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    hex_encode(&bytes)
+}
+
+fn blob_f32(v: &Json, key: &str, expect: usize) -> Result<Vec<f32>> {
+    let b = hex_field(v, key)?;
+    ensure!(
+        b.len() == expect * 4,
+        "snapshot field '{key}': {} bytes, expected {}",
+        b.len(),
+        expect * 4
+    );
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn blob_f64(v: &Json, key: &str, expect: usize) -> Result<Vec<f64>> {
+    let b = hex_field(v, key)?;
+    ensure!(
+        b.len() == expect * 8,
+        "snapshot field '{key}': {} bytes, expected {}",
+        b.len(),
+        expect * 8
+    );
+    Ok(b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn blob_u32(v: &Json, key: &str, expect: usize) -> Result<Vec<u32>> {
+    let b = hex_field(v, key)?;
+    ensure!(
+        b.len() == expect * 4,
+        "snapshot field '{key}': {} bytes, expected {}",
+        b.len(),
+        expect * 4
+    );
+    Ok(b.chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn blob_u64(v: &Json, key: &str, expect: usize) -> Result<Vec<u64>> {
+    let b = hex_field(v, key)?;
+    ensure!(
+        b.len() == expect * 8,
+        "snapshot field '{key}': {} bytes, expected {}",
+        b.len(),
+        expect * 8
+    );
+    Ok(b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, Rho};
+    use crate::data::gaussian::GaussianMixture;
+    use crate::kmeans::{init, state};
+
+    fn tiny_state(n: usize, k: usize, d: usize, seed: u64) -> (Data, NestedState) {
+        let data = GaussianMixture::default_spec(k, d).generate(n, seed);
+        let cent = init::first_k(&data, k);
+        let b_prev = n / 2;
+        let mut assign = Assignments::new(n);
+        let mut stats = SuffStats::zeros(k, d);
+        for i in 0..b_prev {
+            let (j, d2) = data.nearest(i, &cent.c, &cent.norms);
+            assign.label[i] = j;
+            assign.dist2[i] = d2;
+            stats.add_point(&data, i, j, d2);
+        }
+        let st = NestedState { cent, stats, assign, b_prev, b: b_prev, n };
+        (data, st)
+    }
+
+    fn snap(data: Data, st: NestedState) -> Snapshot {
+        Snapshot {
+            cfg: RunConfig {
+                algo: Algo::TbRho,
+                k: st.cent.k(),
+                rho: Rho::Finite(7.5),
+                ..Default::default()
+            },
+            state: st,
+            rng: Pcg64::new(5, 6),
+            rounds: 3,
+            data: Some(data),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let (data, st) = tiny_state(40, 3, 5, 1);
+        let s = snap(data, st);
+        let text = s.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.cfg, s.cfg);
+        assert_eq!(back.state.cent.c.data, s.state.cent.c.data);
+        assert_eq!(back.state.cent.norms, s.state.cent.norms);
+        assert_eq!(back.state.cent.p, s.state.cent.p);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.state.stats.s), bits(&s.state.stats.s));
+        assert_eq!(bits(&back.state.stats.v), bits(&s.state.stats.v));
+        assert_eq!(bits(&back.state.stats.sse), bits(&s.state.stats.sse));
+        assert_eq!(back.state.assign.label, s.state.assign.label);
+        assert_eq!(back.state.assign.dist2, s.state.assign.dist2);
+        assert_eq!(back.state.b_prev, s.state.b_prev);
+        assert_eq!(back.rounds, 3);
+        assert_eq!(back.rng.to_parts(), s.rng.to_parts());
+        // second serialisation is byte-identical (stable key order)
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn sparse_data_roundtrip() {
+        let mut m = CsrMatrix::empty(6);
+        m.push_row(&[(0, 1.5), (4, -2.0)]);
+        m.push_row(&[]);
+        m.push_row(&[(5, 0.25)]);
+        let data = Data::sparse(m);
+        let v = data_to_json(&data);
+        let back = data_from_json(&v).unwrap();
+        match (&back.storage, &data.storage) {
+            (Storage::Sparse(a), Storage::Sparse(b)) => assert_eq!(a, b),
+            _ => panic!("kind changed"),
+        }
+        assert_eq!(back.norms, data.norms);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let (data, st) = tiny_state(30, 3, 4, 2);
+        let s = snap(data, st);
+        let good = s.to_json().to_string();
+        // version bump
+        let bad = good.replace("\"version\":1", "\"version\":99");
+        assert!(Snapshot::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // wrong format tag
+        let bad = good.replace("nmbkm-snapshot", "other-thing");
+        assert!(Snapshot::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // truncated centroid blob
+        let c_hex = f32s_to_hex(&s.state.cent.c.data);
+        let bad = good.replace(&c_hex, &c_hex[..c_hex.len() - 8]);
+        assert!(Snapshot::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // mask inconsistent with the batch cursor
+        let mask_hex = hex_encode(&seen_mask(&s.state.assign.label));
+        let mut flipped = seen_mask(&s.state.assign.label);
+        flipped[0] ^= 1;
+        let bad = good.replace(&mask_hex, &hex_encode(&flipped));
+        assert!(Snapshot::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let (data, st) = tiny_state(25, 2, 3, 3);
+        let s = snap(data, st);
+        let path = std::env::temp_dir().join("nmbkm-snapshot-unit-test.json");
+        s.save(&path).unwrap();
+        let back = Snapshot::load(&path).unwrap();
+        assert_eq!(back.to_json().to_string(), s.to_json().to_string());
+        std::fs::remove_file(&path).ok();
+        assert!(Snapshot::load(&path).is_err(), "missing file is an error");
+    }
+
+    #[test]
+    fn model_only_snapshot_omits_data() {
+        let (_, st) = tiny_state(20, 2, 3, 4);
+        let mut s = snap(GaussianMixture::default_spec(2, 3).generate(20, 4), st);
+        s.data = None;
+        let text = s.to_json().to_string();
+        assert!(!text.contains("\"data\""));
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.data.is_none());
+        assert_eq!(
+            back.centroids().c.data,
+            s.centroids().c.data,
+            "predict-only consumers read centroids"
+        );
+    }
+
+    #[test]
+    fn mse_is_preserved_through_roundtrip() {
+        // end-to-end sanity: the reloaded model scores points identically
+        let (data, st) = tiny_state(60, 4, 6, 5);
+        let s = snap(data.clone(), st);
+        let text = s.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let a = state::exact_mse(&data, s.centroids());
+        let b = state::exact_mse(back.data.as_ref().unwrap(), back.centroids());
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

@@ -1,0 +1,327 @@
+//! Integration tests for the serving layer: snapshot round trips are
+//! bit-exact, resumed sessions retrace uninterrupted ones, online ingest
+//! preserves the each-point-counts-exactly-once invariant, and the JSONL
+//! protocol answers predict queries identically to the in-process
+//! engine — over in-memory pipes and over real TCP.
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::coordinator::Pool;
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::data::Data;
+use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel};
+use nmbkm::kmeans::state::{SuffStats, UNASSIGNED};
+use nmbkm::linalg::dense::DenseMatrix;
+use nmbkm::serve::{protocol, session, Snapshot};
+use nmbkm::util::json::Json;
+use nmbkm::util::propcheck::Cases;
+
+fn cfg(algo: Algo, k: usize, b0: usize, rounds: usize) -> RunConfig {
+    RunConfig {
+        algo,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 11,
+        max_rounds: rounds,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn rows_of(data: &Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut row = vec![0f32; data.dim()];
+    for i in lo..hi {
+        data.write_row_dense(i, &mut row);
+        out.push(row.clone());
+    }
+    out
+}
+
+fn f32_bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn f64_bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn snapshot_roundtrip_bit_exact_both_algorithms() {
+    for algo in [Algo::GbRho, Algo::TbRho] {
+        let data = GaussianMixture::default_spec(4, 6).generate(700, 1);
+        let (trained, _) = session::train(&data, &cfg(algo, 4, 64, 5)).unwrap();
+        let snap = trained.snapshot(true).unwrap();
+        let text = snap.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.cfg, snap.cfg, "{algo:?}");
+        let (a, b) = (&back.state, &snap.state);
+        assert_eq!(f32_bits(&a.cent.c.data), f32_bits(&b.cent.c.data));
+        assert_eq!(f32_bits(&a.cent.norms), f32_bits(&b.cent.norms));
+        assert_eq!(f32_bits(&a.cent.p), f32_bits(&b.cent.p));
+        assert_eq!(f64_bits(&a.stats.s), f64_bits(&b.stats.s));
+        assert_eq!(f64_bits(&a.stats.v), f64_bits(&b.stats.v));
+        assert_eq!(f64_bits(&a.stats.sse), f64_bits(&b.stats.sse));
+        assert_eq!(a.assign.label, b.assign.label);
+        assert_eq!(f32_bits(&a.assign.dist2), f32_bits(&b.assign.dist2));
+        assert_eq!((a.b_prev, a.b, a.n), (b.b_prev, b.b, b.n));
+        assert_eq!(back.rng.to_parts(), snap.rng.to_parts());
+        assert_eq!(back.rounds, snap.rounds);
+        // re-serialisation is byte-identical: stable artifact format
+        assert_eq!(back.to_json().to_string(), text);
+    }
+}
+
+#[test]
+fn snapshot_file_roundtrip_property() {
+    // random shapes, algorithms and training lengths; every save→load
+    // must reproduce the model bit-for-bit
+    Cases::new(8).run(|rng| {
+        let k = 2 + rng.below(4);
+        let d = 2 + rng.below(6);
+        let n = (k * 10).max(60) + rng.below(200);
+        let algo = if rng.below(2) == 0 { Algo::GbRho } else { Algo::TbRho };
+        let rounds = 1 + rng.below(5);
+        let data = GaussianMixture::default_spec(k, d).generate(n, rng.next_u64());
+        let mut c = cfg(algo, k, 16 + rng.below(64), rounds);
+        c.seed = rng.next_u64();
+        let (trained, _) = session::train(&data, &c).unwrap();
+        let snap = trained.snapshot(true).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("nmbkm-prop-snap-{:x}.json", rng.next_u64()));
+        snap.save(&path).unwrap();
+        let back = Snapshot::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(
+            back.to_json().to_string(),
+            snap.to_json().to_string(),
+            "artifact not byte-stable for k={k} d={d} n={n} {algo:?}"
+        );
+        // usage mask semantics: exactly the seen prefix is marked used
+        let st = &back.state;
+        for i in 0..st.n {
+            assert_eq!(st.assign.label[i] != UNASSIGNED, i < st.b_prev);
+        }
+    });
+}
+
+#[test]
+fn resumed_session_retraces_uninterrupted_run() {
+    for algo in [Algo::GbRho, Algo::TbRho] {
+        let data = GaussianMixture::default_spec(5, 8).generate(1200, 9);
+        // uninterrupted: 4 + 3 rounds in one session
+        let (mut straight, _) = session::train(&data, &cfg(algo, 5, 100, 4)).unwrap();
+        straight.step(3, 1e9).unwrap();
+        // interrupted: 4 rounds, snapshot to JSON and back, 3 more
+        let (paused, _) = session::train(&data, &cfg(algo, 5, 100, 4)).unwrap();
+        let text = paused.snapshot(true).unwrap().to_json().to_string();
+        let snap = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let mut resumed = session::OnlineSession::resume(snap).unwrap();
+        resumed.step(3, 1e9).unwrap();
+
+        let a = straight.centroids().unwrap();
+        let b = resumed.centroids().unwrap();
+        assert_eq!(
+            f32_bits(&a.c.data),
+            f32_bits(&b.c.data),
+            "{algo:?}: resume diverged from the uninterrupted run"
+        );
+        assert_eq!(straight.rounds(), resumed.rounds());
+        let qs = rows_of(&data, 0, 30);
+        let (la, da) = straight.predict_rows(&qs).unwrap();
+        let (lb, db) = resumed.predict_rows(&qs).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(f32_bits(&da), f32_bits(&db));
+    }
+}
+
+#[test]
+fn online_ingest_counts_every_point_exactly_once() {
+    let full = GaussianMixture::default_spec(4, 6).generate(900, 3);
+    let head = full.slice(0, 500);
+    let (mut s, _) = session::train(&head, &cfg(Algo::TbRho, 4, 64, 6)).unwrap();
+    // stream the remaining 400 points in chunks, training in between
+    for chunk in 0..4 {
+        let lo = 500 + chunk * 100;
+        s.ingest_rows(&rows_of(&full, lo, lo + 100)).unwrap();
+        s.step(8, 1e9).unwrap();
+        let st = s.snapshot(true).unwrap().state;
+        // Σ v(j) = number of points in the seen prefix — nothing counted
+        // twice, nothing dropped (paper §3.1)
+        let total: f64 = st.stats.v.iter().sum();
+        assert_eq!(total as usize, st.b_prev, "chunk {chunk}");
+        // and the statistics agree with a from-scratch rebuild
+        let fresh = SuffStats::rebuild(
+            s.data(),
+            4,
+            0..st.b_prev,
+            &st.assign.label,
+            &st.assign.dist2,
+        );
+        let drift = st.stats.max_abs_diff(&fresh);
+        assert!(drift < 1e-5, "chunk {chunk}: stats drifted by {drift}");
+    }
+    assert_eq!(s.data().n(), 900);
+    // the controller must eventually grow over the streamed points
+    for _ in 0..50 {
+        let st = s.snapshot(true).unwrap().state;
+        if st.b_prev > 500 {
+            break;
+        }
+        s.step(5, 1e9).unwrap();
+    }
+    let st = s.snapshot(true).unwrap().state;
+    assert!(st.b_prev > 500, "streamed points never entered the batch");
+}
+
+#[test]
+fn protocol_predict_parity_with_engine() {
+    let data = GaussianMixture::default_spec(4, 7).generate(600, 5);
+    let (mut s, _) = session::train(&data, &cfg(Algo::TbRho, 4, 64, 5)).unwrap();
+    let queries = rows_of(&data, 50, 90);
+
+    // reference: straight through the in-process engine
+    let cent = s.centroids().unwrap().clone();
+    let n = queries.len();
+    let mut flat = Vec::new();
+    for q in &queries {
+        flat.extend_from_slice(q);
+    }
+    let qdata = Data::dense(DenseMatrix::from_vec(n, 7, flat));
+    let mut ref_lbl = vec![0u32; n];
+    let mut ref_d2 = vec![0f32; n];
+    NativeEngine.assign(
+        &qdata,
+        Sel::Range(0, n),
+        &cent,
+        &Pool::new(2),
+        &mut ref_lbl,
+        &mut ref_d2,
+    );
+
+    // same queries over the JSONL protocol
+    let mut points = String::from("[");
+    for (t, q) in queries.iter().enumerate() {
+        if t > 0 {
+            points.push(',');
+        }
+        let coords: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+        points.push_str(&format!("[{}]", coords.join(",")));
+    }
+    points.push(']');
+    let input = format!("{{\"op\":\"predict\",\"points\":{points}}}\n");
+    let mut out = Vec::new();
+    protocol::serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+    let resp = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    let labels: Vec<u32> = resp
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as u32)
+        .collect();
+    let d2: Vec<f32> = resp
+        .get("d2")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(labels, ref_lbl, "protocol labels != engine labels");
+    // the JSON round trip must not perturb a single bit of the scores
+    assert_eq!(f32_bits(&d2), f32_bits(&ref_d2));
+}
+
+#[test]
+fn tcp_server_end_to_end() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let Ok(listener) = std::net::TcpListener::bind("127.0.0.1:0") else {
+        eprintln!("skipping tcp test: cannot bind loopback");
+        return;
+    };
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        // session is built inside the thread (the engine/clusterer trait
+        // objects are deliberately not Send-bounded)
+        let data = GaussianMixture::default_spec(3, 5).generate(400, 2);
+        let (mut s, _) =
+            session::train(&data, &cfg(Algo::GbRho, 3, 64, 4)).unwrap();
+        nmbkm::serve::server::serve_listener(&mut s, listener).unwrap();
+    });
+
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+
+    conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(line.trim()).unwrap();
+    assert_eq!(stats.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(stats.get("n_total").unwrap().as_usize(), Some(400));
+
+    line.clear();
+    conn.write_all(b"{\"op\":\"predict\",\"points\":[[0,0,0,0,0]]}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("labels").unwrap().as_arr().unwrap().len(), 1);
+
+    line.clear();
+    conn.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(
+        Json::parse(line.trim()).unwrap().get("op").unwrap().as_str(),
+        Some("shutdown")
+    );
+    server.join().expect("server thread exits cleanly after shutdown");
+}
+
+#[test]
+fn end_to_end_train_snapshot_serve_flow() {
+    // the acceptance-criteria flow, in-process: train --save, resume,
+    // ingest a fresh chunk, answer predict queries
+    let corpus = GaussianMixture::default_spec(6, 10).generate(2000, 21);
+    let history = corpus.slice(0, 1500);
+    let (trained, report) =
+        session::train(&history, &cfg(Algo::TbRho, 6, 128, 10)).unwrap();
+    assert!(report.rounds_run >= 1);
+    let path = std::env::temp_dir().join("nmbkm-e2e-flow.json");
+    trained.snapshot(true).unwrap().save(&path).unwrap();
+
+    let mut served =
+        session::OnlineSession::resume(Snapshot::load(&path).unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let (resp, _) = protocol::handle_line(
+        &mut served,
+        r#"{"op":"stats"}"#,
+    );
+    assert_eq!(resp.get("n_total").unwrap().as_usize(), Some(1500));
+
+    // fresh chunk arrives over the protocol
+    let fresh = rows_of(&corpus, 1500, 1510);
+    let coords: Vec<String> = fresh
+        .iter()
+        .map(|q| {
+            let xs: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    let req = format!(
+        "{{\"op\":\"ingest\",\"points\":[{}],\"rounds\":2}}",
+        coords.join(",")
+    );
+    let (resp, _) = protocol::handle_line(&mut served, &req);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("n").unwrap().as_usize(), Some(1510));
+
+    let (lbl, d2) = served.predict_rows(&rows_of(&corpus, 0, 25)).unwrap();
+    assert_eq!(lbl.len(), 25);
+    assert!(lbl.iter().all(|&j| (j as usize) < 6));
+    assert!(d2.iter().all(|&x| x.is_finite()));
+}
