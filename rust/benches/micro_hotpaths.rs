@@ -1,39 +1,123 @@
 //! Bench P — §Perf micro-benchmarks over the hot paths the profiles
-//! identified: dense/sparse distance kernels, the bound screen, the
-//! tb point-step, stats merging, and engine-level assignment throughput
-//! (native serial vs threaded vs XLA). Drives the EXPERIMENTS.md §Perf
-//! iteration log; each row is before/after comparable.
+//! identified: dense/sparse distance kernels (scalar reference vs the
+//! runtime-dispatched SIMD tier), the bound screen, the tb point-step,
+//! stats merging, and engine-level assignment throughput. Emits a
+//! machine-readable `BENCH_micro.json` (override with `--json PATH`)
+//! so the perf trajectory is tracked per commit; `--simd
+//! scalar|sse2|avx2|fma` forces a dispatch tier and `--smoke` runs one
+//! iteration of everything (CI).
 
-use nmbkm::bench::{BenchOpts, BenchSet};
+use nmbkm::bench::{BenchOpts, BenchReport, BenchSet};
 use nmbkm::coordinator::Pool;
 use nmbkm::data::{gaussian::GaussianMixture, infmnist::InfMnist, rcv1::Rcv1Sim};
 use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel};
 use nmbkm::kmeans::{bounds, init};
-use nmbkm::linalg::dense;
+use nmbkm::linalg::simd::{self, Tier};
+use nmbkm::util::json;
+
+fn arg_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let opts = BenchOpts::from_env_or_args(&args);
     let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    let json_path =
+        arg_value(&args, "--json").unwrap_or_else(|| "BENCH_micro.json".to_string());
+    if let Some(req) = arg_value(&args, "--simd") {
+        simd::force_tier(Some(simd::detect(Some(&req), None)));
+    }
+    let active = simd::tier();
+    println!(
+        "dispatch tier: {} (available: {})",
+        active.name(),
+        simd::available_tiers()
+            .iter()
+            .map(|t| t.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+
+    let mut report = BenchReport::new("micro_hotpaths");
+    report.meta("tier", json::s(active.name()));
+    report.meta("threads", json::num(threads as f64));
+    report.meta("arch", json::s(std::env::consts::ARCH));
+    report.meta("warmup", json::num(opts.warmup as f64));
+    report.meta("samples", json::num(opts.samples as f64));
 
     // --- raw kernels -----------------------------------------------------
-    let mut set = BenchSet::new("L3 native kernels", opts);
+    let mut set = BenchSet::new("kernels", opts);
     let a: Vec<f32> = (0..784).map(|i| (i as f32).sin()).collect();
     let b: Vec<f32> = (0..784).map(|i| (i as f32).cos()).collect();
-    set.bench("dot d=784 x 100k", || {
+    set.bench("dot d=784 x100k (scalar)", || {
         let mut acc = 0f32;
         for _ in 0..100_000 {
-            acc += dense::dot(std::hint::black_box(&a), std::hint::black_box(&b));
+            acc += simd::dot_with(
+                Tier::Scalar,
+                std::hint::black_box(&a),
+                std::hint::black_box(&b),
+            );
+        }
+        acc
+    });
+    set.bench("dot d=784 x100k (simd)", || {
+        let mut acc = 0f32;
+        for _ in 0..100_000 {
+            acc += simd::dot(std::hint::black_box(&a), std::hint::black_box(&b));
         }
         acc
     });
     // memory-roofline context: 2 vectors × 784 × 4B × 100k = 627 MB read
-    let m = set.get("dot d=784 x 100k").unwrap().min_secs();
+    let m = set.get("dot d=784 x100k (simd)").unwrap().min_secs();
     println!(
         "     → {:.2} GFLOP/s, {:.2} GB/s effective",
         2.0 * 784.0 * 100_000.0 / m / 1e9,
         2.0 * 784.0 * 4.0 * 100_000.0 / m / 1e9
     );
+    let c4: Vec<f32> = (0..4 * 784).map(|i| (i as f32 * 0.37).cos()).collect();
+    let rows4: Vec<&[f32]> = (0..4).map(|j| &c4[j * 784..(j + 1) * 784]).collect();
+    set.bench("dot4 d=784 x25k (scalar)", || {
+        let mut acc = [0f32; 4];
+        for _ in 0..25_000 {
+            let d = simd::dot4_with(
+                Tier::Scalar,
+                std::hint::black_box(&a),
+                rows4[0],
+                rows4[1],
+                rows4[2],
+                rows4[3],
+            );
+            for j in 0..4 {
+                acc[j] += d[j];
+            }
+        }
+        acc
+    });
+    set.bench("dot4 d=784 x25k (simd)", || {
+        let mut acc = [0f32; 4];
+        for _ in 0..25_000 {
+            let d = simd::dot4(
+                std::hint::black_box(&a),
+                rows4[0],
+                rows4[1],
+                rows4[2],
+                rows4[3],
+            );
+            for j in 0..4 {
+                acc[j] += d[j];
+            }
+        }
+        acc
+    });
+    let dot_scalar_s = set.get("dot d=784 x100k (scalar)").unwrap().min_secs();
+    let dot_simd_s = set.get("dot d=784 x100k (simd)").unwrap().min_secs();
+    println!("     → dot speedup {:.2}x over scalar", dot_scalar_s / dot_simd_s);
+    report.meta("speedup_dot_d784", json::num(dot_scalar_s / dot_simd_s));
+    report.push(set);
 
     // --- engine assignment throughput -------------------------------------
     let data = InfMnist::default().generate(20_000, 1);
@@ -41,36 +125,57 @@ fn main() {
     let eng = NativeEngine;
     let mut lbl = vec![0u32; data.n()];
     let mut d2 = vec![0f32; data.n()];
-    let mut set = BenchSet::new("assignment step (dense 20k x 784, k=50)", opts);
-    set.bench("native 1 thread", || {
+    let mut set = BenchSet::new("assign dense 20k x 784, k=50", opts);
+    simd::force_tier(Some(Tier::Scalar));
+    set.bench("native 1 thread (scalar)", || {
         eng.assign(&data, Sel::Range(0, data.n()), &cent, &Pool::new(1), &mut lbl, &mut d2)
     });
-    set.bench(&format!("native {threads} threads"), || {
-        eng.assign(&data, Sel::Range(0, data.n()), &cent, &Pool::new(threads), &mut lbl, &mut d2)
+    simd::force_tier(Some(active));
+    set.bench("native 1 thread (simd)", || {
+        eng.assign(&data, Sel::Range(0, data.n()), &cent, &Pool::new(1), &mut lbl, &mut d2)
     });
+    let pool_n = Pool::new(threads);
+    if threads > 1 {
+        set.bench(&format!("native {threads} threads (simd)"), || {
+            eng.assign(&data, Sel::Range(0, data.n()), &cent, &pool_n, &mut lbl, &mut d2)
+        });
+    }
     if let Ok(xla) = nmbkm::runtime::make_engine("artifacts") {
         set.bench("xla engine (PJRT tiles)", || {
-            xla.assign(&data, Sel::Range(0, data.n()), &cent, &Pool::new(threads), &mut lbl, &mut d2)
+            xla.assign(&data, Sel::Range(0, data.n()), &cent, &pool_n, &mut lbl, &mut d2)
         });
     } else {
         println!("  (xla engine skipped: run `make artifacts`)");
     }
-    let t1 = set.get("native 1 thread").unwrap().min_secs();
-    let tn = set.get(&format!("native {threads} threads")).unwrap().min_secs();
-    println!("     → thread scaling {:.2}x on {threads} threads", t1 / tn);
+    let t_scalar = set.get("native 1 thread (scalar)").unwrap().min_secs();
+    let t1 = set.get("native 1 thread (simd)").unwrap().min_secs();
+    println!("     → assignment speedup {:.2}x over scalar", t_scalar / t1);
+    report.meta("speedup_assign_dense_1t", json::num(t_scalar / t1));
+    if threads > 1 {
+        let tn = set
+            .get(&format!("native {threads} threads (simd)"))
+            .unwrap()
+            .min_secs();
+        println!("     → thread scaling {:.2}x on {threads} threads", t1 / tn);
+        report.meta("thread_scaling", json::num(t1 / tn));
+    }
+    report.push(set);
 
     // --- sparse engine -----------------------------------------------------
     let sdata = Rcv1Sim::default().generate(20_000, 2);
     let scent = init::first_k(&sdata, 50);
     let mut slbl = vec![0u32; sdata.n()];
     let mut sd2 = vec![0f32; sdata.n()];
-    let mut set = BenchSet::new("assignment step (sparse 20k x 47k, k=50)", opts);
+    let mut set = BenchSet::new("assign sparse 20k x 47k, k=50", opts);
     set.bench("native 1 thread", || {
         eng.assign(&sdata, Sel::Range(0, sdata.n()), &scent, &Pool::new(1), &mut slbl, &mut sd2)
     });
-    set.bench(&format!("native {threads} threads"), || {
-        eng.assign(&sdata, Sel::Range(0, sdata.n()), &scent, &Pool::new(threads), &mut slbl, &mut sd2)
-    });
+    if threads > 1 {
+        set.bench(&format!("native {threads} threads"), || {
+            eng.assign(&sdata, Sel::Range(0, sdata.n()), &scent, &pool_n, &mut slbl, &mut sd2)
+        });
+    }
+    report.push(set);
 
     // --- bound machinery ---------------------------------------------------
     let gdata = GaussianMixture::default_spec(8, 64).generate(10_000, 3);
@@ -112,6 +217,7 @@ fn main() {
         "     → screen is {:.0}x cheaper than full recompute (must be ≫1 for the tile path to pay)",
         full / screened
     );
+    report.push(set);
 
     // --- stats merge -------------------------------------------------------
     let mut set = BenchSet::new("coordinator merge (k=64, d=784)", opts);
@@ -123,6 +229,8 @@ fn main() {
         }
         total.v[0]
     });
+    report.push(set);
 
+    report.write(&json_path).expect("failed to write bench report");
     println!("\nmicro_hotpaths done");
 }

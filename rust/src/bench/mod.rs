@@ -3,8 +3,12 @@
 //! [`BenchSet`] runs named closures with warmup, multiple samples, and
 //! reports min/median/mean — enough statistical hygiene for the paper's
 //! throughput tables. `cargo bench` targets under `rust/benches/` are
-//! `harness = false` binaries built on this.
+//! `harness = false` binaries built on this. [`BenchReport`] collects
+//! finished sets plus free-form metadata and serialises everything to a
+//! machine-readable JSON document (`BENCH_micro.json` et al.), so the
+//! perf trajectory is tracked per-commit instead of scraped from logs.
 
+use crate::util::json::{self, Json};
 use crate::util::stats;
 use std::time::Instant;
 
@@ -27,6 +31,19 @@ impl Measurement {
     pub fn min_secs(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("min_s", json::num(self.min_secs())),
+            ("median_s", json::num(self.median_secs())),
+            ("mean_s", json::num(self.mean_secs())),
+            (
+                "samples_s",
+                Json::Arr(self.samples.iter().map(|&s| json::num(s)).collect()),
+            ),
+        ])
+    }
 }
 
 /// Bench runner configuration; `quick()` keeps CI latency sane and is
@@ -46,7 +63,18 @@ impl BenchOpts {
         Self { warmup: 1, samples: 3 }
     }
 
+    /// One iteration, no warmup: CI smoke mode — proves the bench (and
+    /// every dispatch path it touches) still runs, without the latency.
+    pub fn smoke() -> Self {
+        Self { warmup: 0, samples: 1 }
+    }
+
     pub fn from_env_or_args(args: &[String]) -> Self {
+        let smoke = args.iter().any(|a| a == "--smoke")
+            || std::env::var("NMBKM_BENCH_SMOKE").ok().as_deref() == Some("1");
+        if smoke {
+            return Self::smoke();
+        }
         let quick = args.iter().any(|a| a == "--quick")
             || std::env::var("NMBKM_BENCH_QUICK").ok().as_deref() == Some("1");
         if quick {
@@ -102,6 +130,81 @@ impl BenchSet {
     pub fn get(&self, name: &str) -> Option<&Measurement> {
         self.results.iter().find(|m| m.name == name)
     }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|m| m.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// A finished benchmark run ready for serialisation: every [`BenchSet`]
+/// plus free-form metadata (dispatch tier, thread count, derived
+/// speedups). Written as one JSON document so successive commits'
+/// `BENCH_micro.json` files diff cleanly.
+pub struct BenchReport {
+    pub bench: String,
+    meta: Vec<(String, Json)>,
+    sets: Vec<BenchSet>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), meta: vec![], sets: vec![] }
+    }
+
+    /// Attach a metadata key (last write wins on serialisation since
+    /// the object map is keyed).
+    pub fn meta(&mut self, key: &str, v: Json) {
+        self.meta.push((key.to_string(), v));
+    }
+
+    /// Take ownership of a finished set.
+    pub fn push(&mut self, set: BenchSet) {
+        self.sets.push(set);
+    }
+
+    /// Min-of-samples seconds for `(set_title, measurement_name)`.
+    pub fn min_secs(&self, set_title: &str, name: &str) -> Option<f64> {
+        self.sets
+            .iter()
+            .find(|s| s.title == set_title)
+            .and_then(|s| s.get(name))
+            .map(|m| m.min_secs())
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("bench", json::s(&self.bench)),
+            ("schema", json::num(1.0)),
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "sets",
+                Json::Arr(self.sets.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Serialise to `path` (single line + trailing newline).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut doc = self.to_json().to_string();
+        doc.push('\n');
+        std::fs::write(path, doc)?;
+        println!("wrote {path}");
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +231,46 @@ mod tests {
         assert_eq!(o.samples, BenchOpts::quick().samples);
         let o = BenchOpts::from_env_or_args(&[]);
         assert_eq!(o.samples, BenchOpts::standard().samples);
+        // smoke wins over quick (CI passes both defensively)
+        let o = BenchOpts::from_env_or_args(&[
+            "--quick".to_string(),
+            "--smoke".to_string(),
+        ]);
+        assert_eq!(o.samples, 1);
+        assert_eq!(o.warmup, 0);
+    }
+
+    #[test]
+    fn report_roundtrips_as_json() {
+        let mut set = BenchSet::new("kernels", BenchOpts::smoke());
+        set.bench("dot", || 1 + 1);
+        let mut report = BenchReport::new("micro_test");
+        report.meta("tier", json::s("scalar"));
+        report.meta("threads", json::num(4.0));
+        report.push(set);
+        assert!(report.min_secs("kernels", "dot").is_some());
+        assert!(report.min_secs("kernels", "nope").is_none());
+        assert!(report.min_secs("nope", "dot").is_none());
+        let doc = report.to_json().to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("micro_test"));
+        assert_eq!(
+            parsed.get("meta").unwrap().get("tier").unwrap().as_str(),
+            Some("scalar")
+        );
+        let sets = parsed.get("sets").unwrap().as_arr().unwrap();
+        assert_eq!(sets.len(), 1);
+        let results = sets[0].get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("dot"));
+        assert_eq!(
+            results[0]
+                .get("samples_s")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            1
+        );
     }
 
     #[test]

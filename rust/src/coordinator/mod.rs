@@ -3,8 +3,9 @@
 //! statistics deltas) are merged serially by the leader, which owns the
 //! centroid update and the batch-growth vote (k ≪ N work).
 //!
-//! The offline image has no tokio/rayon; [`shard::Pool`] is built on
-//! `std::thread::scope`, which is all a compute-bound workload needs.
+//! The offline image has no tokio/rayon; [`shard::Pool`] is a small
+//! persistent parked-worker pool built on `std::thread` + condvars,
+//! which is all a compute-bound workload needs.
 
 pub mod merge;
 pub mod progress;

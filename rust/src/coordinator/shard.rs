@@ -1,23 +1,220 @@
-//! Work sharding across scoped threads.
+//! Work sharding across a persistent worker pool.
 //!
 //! [`Pool::run_chunks`] splits `0..n` into near-equal contiguous chunks,
 //! runs a closure per chunk on worker threads, and returns results in
 //! chunk order — deterministic regardless of scheduling, which the
-//! reproducibility tests rely on. Output buffers are split with
-//! [`split_outputs`] so each worker writes a disjoint region without
-//! locks.
+//! reproducibility tests rely on. [`Pool::run_jobs`] is the owned-input
+//! generalisation the algorithm layer uses to ship per-chunk mutable
+//! views to workers. Output buffers are split with [`split_outputs`] so
+//! each worker writes a disjoint region without locks.
+//!
+//! Workers are spawned once per [`Pool`] and parked on a condvar between
+//! calls. The previous implementation spawned scoped threads on every
+//! call; at round granularity (≥ milliseconds) the ~10 µs spawn cost was
+//! noise, but the serve layer now drives assignment at sub-millisecond
+//! rounds where respawning dominated. The submitting thread participates
+//! as the final worker, so a `Pool::new(t)` still applies exactly `t`
+//! threads of compute, and chunk claims are index-ordered atomics while
+//! results land in per-chunk slots — chunk-ordered, deterministic output
+//! is preserved exactly.
 
-/// A (very small) thread pool descriptor. Threads are scoped per call:
-/// for round-granularity work (≥ milliseconds) the ~10 µs spawn cost is
-/// noise, and scoped borrows keep the API non-`'static`.
-#[derive(Clone, Debug)]
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A handle to a persistent worker pool. Cloning shares the same
+/// workers; the threads exit when the last clone drops.
 pub struct Pool {
     pub threads: usize,
+    core: Option<Arc<PoolCore>>,
+}
+
+impl Clone for Pool {
+    fn clone(&self) -> Self {
+        Self { threads: self.threads, core: self.core.clone() }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
+}
+
+/// One submitted batch of chunk indices `0..total`. The closure is held
+/// as a raw pointer (not a lifetime-transmuted reference) so the type
+/// itself documents that it is only valid while the submitter blocks in
+/// [`PoolCore::execute`]; it is dereferenced exclusively inside
+/// [`drain_job`]'s claimed-chunk path.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    total: usize,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+}
+
+// Safety: `f` points at a Sync closure that outlives every dereference
+// (see `PoolCore::execute`); all other fields are Send + Sync.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+#[derive(Default)]
+struct PoolState {
+    job: Option<Arc<Job>>,
+    /// Bumped per submission so parked workers can tell a fresh job from
+    /// one they already drained.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+struct PoolCore {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim-execute loop shared by parked workers and the submitting
+/// thread. Claims are `fetch_add` on the job's chunk cursor, so each
+/// chunk index runs exactly once; panics are trapped and re-raised by
+/// the submitter so a worker never dies mid-pool.
+fn drain_job(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.total {
+            break;
+        }
+        // Safety: a successful claim (i < total) means the submitter is
+        // still blocked in `execute` waiting for this chunk's `done`
+        // increment, so the closure behind `f` is alive.
+        let f = unsafe { &*job.f };
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut d = job.done.lock().unwrap();
+        *d += 1;
+        if *d == job.total {
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    if let Some(j) = st.job.clone() {
+                        break j;
+                    }
+                    // epoch advanced but the job already completed and
+                    // was cleared — keep waiting
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        drain_job(&job);
+    }
+}
+
+impl PoolCore {
+    /// Run `f(i)` for every `i in 0..total` across the workers plus the
+    /// calling thread; returns once all chunks completed.
+    ///
+    /// Safety of the pointer erasure: workers dereference `job.f` only
+    /// while executing a successfully claimed chunk, every claimed chunk
+    /// increments `done` when it finishes, and this function blocks
+    /// until `done == total` — so `f` (and everything it borrows)
+    /// strictly outlives every dereference. Late wakers only touch the
+    /// atomic cursor, never `f`.
+    fn execute(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        // Lifetime-erase into the raw field (same-layout fat pointer;
+        // a plain `as` cast cannot widen the trait-object lifetime).
+        let fp: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let job = Arc::new(Job {
+            f: fp,
+            next: AtomicUsize::new(0),
+            total,
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let my_epoch;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            my_epoch = st.epoch;
+            st.job = Some(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        // the submitting thread is the pool's final compute thread
+        drain_job(&job);
+        {
+            let mut d = job.done.lock().unwrap();
+            while *d < total {
+                d = job.done_cv.wait(d).unwrap();
+            }
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.epoch == my_epoch {
+                st.job = None;
+            }
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker panicked");
+        }
+    }
 }
 
 impl Pool {
+    /// A pool applying `threads` compute threads (`threads − 1` parked
+    /// workers plus the submitting thread). `threads <= 1` runs
+    /// everything inline with no worker threads at all.
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        let threads = threads.max(1);
+        let core = if threads > 1 {
+            let shared = Arc::new(Shared {
+                state: Mutex::new(PoolState::default()),
+                work_cv: Condvar::new(),
+            });
+            let mut handles = Vec::with_capacity(threads - 1);
+            for w in 0..threads - 1 {
+                let sh = shared.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("nmbkm-pool-{w}"))
+                        .spawn(move || worker_loop(sh))
+                        .expect("failed to spawn pool worker"),
+                );
+            }
+            Some(Arc::new(PoolCore { shared, handles }))
+        } else {
+            None
+        };
+        Self { threads, core }
     }
 
     /// Use all available parallelism, unless the `NMBKM_THREADS`
@@ -44,6 +241,48 @@ impl Pool {
         Self::new(t)
     }
 
+    /// Run `f(i, jobs[i])` for every job, in parallel when it pays.
+    /// Results come back in job order. Jobs own their inputs — the
+    /// algorithm layer passes `(range, &mut view…)` tuples so each
+    /// worker writes a disjoint output region without locks.
+    ///
+    /// Concurrent `run_jobs` calls on clones of one pool from different
+    /// threads are safe (each submission completes all of its own
+    /// chunks) but serialise the workers; keep one pool per concurrent
+    /// driver for full throughput.
+    pub fn run_jobs<T, R, F>(&self, jobs: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let total = jobs.len();
+        if total == 0 {
+            return vec![];
+        }
+        match &self.core {
+            Some(core) if total > 1 => {
+                let inputs: Vec<Mutex<Option<T>>> =
+                    jobs.into_iter().map(|t| Mutex::new(Some(t))).collect();
+                let outputs: Vec<Mutex<Option<R>>> =
+                    (0..total).map(|_| Mutex::new(None)).collect();
+                let runner = |i: usize| {
+                    let t = inputs[i].lock().unwrap().take().expect("chunk claimed twice");
+                    let r = f(i, t);
+                    *outputs[i].lock().unwrap() = Some(r);
+                };
+                core.execute(total, &runner);
+                outputs
+                    .into_iter()
+                    .map(|m| {
+                        m.into_inner().unwrap().expect("missing chunk result")
+                    })
+                    .collect()
+            }
+            _ => jobs.into_iter().enumerate().map(|(i, t)| f(i, t)).collect(),
+        }
+    }
+
     /// Split `0..n` into chunks (at least `min_chunk` items each, except
     /// possibly the last) and run `f(chunk_index, range)` on each,
     /// in parallel when it pays. Results come back in chunk order.
@@ -53,27 +292,7 @@ impl Pool {
         F: Fn(usize, std::ops::Range<usize>) -> R + Sync,
     {
         let ranges = chunk_ranges(n, self.threads, min_chunk);
-        if ranges.len() <= 1 {
-            return ranges
-                .into_iter()
-                .enumerate()
-                .map(|(i, r)| f(i, r))
-                .collect();
-        }
-        let mut out: Vec<Option<R>> = (0..ranges.len()).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(ranges.len());
-            for (slot, (i, r)) in out.iter_mut().zip(ranges.into_iter().enumerate()) {
-                let f = &f;
-                handles.push(scope.spawn(move || {
-                    *slot = Some(f(i, r));
-                }));
-            }
-            for h in handles {
-                h.join().expect("worker panicked");
-            }
-        });
-        out.into_iter().map(|x| x.unwrap()).collect()
+        self.run_jobs(ranges, |i, r| f(i, r))
     }
 }
 
@@ -223,5 +442,81 @@ mod tests {
             serial.iter().sum::<u64>(),
             par.iter().sum::<u64>()
         );
+    }
+
+    #[test]
+    fn workers_persist_across_many_calls() {
+        // the point of the rewrite: sub-millisecond rounds must not
+        // respawn threads; 500 back-to-back submissions on one pool
+        // must stay correct and ordered
+        let pool = Pool::new(4);
+        for round in 0..500usize {
+            let v = pool.run_chunks(64 + round % 7, 1, |i, r| (i, r.len()));
+            let total: usize = v.iter().map(|(_, l)| l).sum();
+            assert_eq!(total, 64 + round % 7);
+            for (idx, (i, _)) in v.iter().enumerate() {
+                assert_eq!(idx, *i);
+            }
+        }
+    }
+
+    #[test]
+    fn run_jobs_moves_inputs_in_order() {
+        let pool = Pool::new(3);
+        let jobs: Vec<String> = (0..10).map(|i| format!("job-{i}")).collect();
+        let out = pool.run_jobs(jobs, |i, s| format!("{i}:{s}"));
+        for (i, s) in out.iter().enumerate() {
+            assert_eq!(*s, format!("{i}:job-{i}"));
+        }
+    }
+
+    #[test]
+    fn run_jobs_borrows_mutable_views() {
+        // the algorithm-layer pattern: owned (range, &mut view) inputs
+        let pool = Pool::new(4);
+        let mut buf = vec![0u32; 100];
+        let ranges = chunk_ranges(100, 4, 1);
+        {
+            let mut rest: &mut [u32] = &mut buf;
+            let mut jobs = Vec::new();
+            for r in ranges.iter().cloned() {
+                let (head, tail) = rest.split_at_mut(r.len());
+                rest = tail;
+                jobs.push((r, head));
+            }
+            pool.run_jobs(jobs, |_, (r, view)| {
+                for (slot, i) in r.enumerate() {
+                    view[slot] = i as u32 * 2;
+                }
+            });
+        }
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v as usize, i * 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        let pool = Pool::new(4);
+        pool.run_chunks(100, 1, |i, _| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn pool_clones_share_workers_and_drop_cleanly() {
+        let pool = Pool::new(3);
+        let clone = pool.clone();
+        let a = pool.run_chunks(50, 1, |i, _| i);
+        let b = clone.run_chunks(50, 1, |i, _| i);
+        assert_eq!(a, b);
+        drop(pool);
+        // workers still alive through the clone
+        let c = clone.run_chunks(50, 1, |i, _| i);
+        assert_eq!(b, c);
     }
 }

@@ -2,7 +2,11 @@
 //!
 //! * [`NativeEngine`] — pure-rust norms-trick loops, sharded across the
 //!   coordinator pool. Works for dense and CSR data; the reference
-//!   implementation every other engine is tested against.
+//!   implementation every other engine is tested against. Dense
+//!   selections run through the point-blocked SIMD micro-kernels
+//!   ([`crate::linalg::simd::nearest_block`]): a strip of four centroid
+//!   rows is re-used from cache across a block of points instead of
+//!   re-streaming all k·d centroid floats for every single point.
 //! * `runtime::XlaEngine` — dense tiles dispatched to the AOT-compiled
 //!   Pallas/XLA artifacts over PJRT (Layer 1/2); implements the same
 //!   [`AssignEngine`] trait and must agree with the native engine
@@ -15,7 +19,9 @@
 use crate::coordinator::shard::{chunk_ranges, split_outputs, Pool};
 use crate::data::{Data, Storage};
 use crate::kmeans::state::Centroids;
-use crate::linalg::sparse::TransposedCentroids;
+use crate::linalg::simd;
+use crate::linalg::sparse::{self, TransposedCentroids};
+use std::sync::{Arc, Mutex};
 
 /// A selection of datapoint indices to (re)assign.
 #[derive(Clone, Copy, Debug)]
@@ -97,8 +103,16 @@ pub trait AssignEngine {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeEngine;
 
-/// Don't spawn threads for selections smaller than this.
+/// Don't fan out to threads for selections smaller than this
+/// (per-item work is one k-way nearest scan).
 const MIN_CHUNK: usize = 256;
+
+/// `dist_rows` fans out earlier: per-item work there is a full row of k
+/// distances, so much smaller selections already amortise a chunk
+/// hand-off. (A previous revision wrote `MIN_CHUNK.max(64)`, which
+/// evaluates to 256 — a chunking no-op that serialised the tb-ρ tile
+/// path's 100-point dirty batches.)
+const DIST_ROWS_MIN_CHUNK: usize = 64;
 
 impl AssignEngine for NativeEngine {
     fn assign(
@@ -118,26 +132,16 @@ impl AssignEngine for NativeEngine {
         }
         let ranges = chunk_ranges(n, pool.threads, MIN_CHUNK);
         let views = split_outputs(&ranges, out_lbl, out_d2);
-        // pair each view with its range and fan out
-        let jobs: Vec<_> = ranges.iter().cloned().zip(views).collect();
+        // pair each view with its range and fan out over the pool
+        let jobs: Vec<_> = ranges.into_iter().zip(views).collect();
         let k = centroids.k() as u64;
         // sparse fast path: transposed centroids turn per-nnz gathers
         // into sequential k-length AXPYs (EXPERIMENTS.md §Perf, ~2x)
         let trans = transposed_for(data, centroids, n);
-        let trans = trans.as_ref();
-        if jobs.len() <= 1 {
-            for (r, (vl, vd)) in jobs {
-                assign_serial(data, &sel, r, centroids, trans, vl, vd);
-            }
-        } else {
-            std::thread::scope(|scope| {
-                for (r, (vl, vd)) in jobs {
-                    scope.spawn(move || {
-                        assign_serial(data, &sel, r, centroids, trans, vl, vd);
-                    });
-                }
-            });
-        }
+        let trans = trans.as_deref();
+        pool.run_jobs(jobs, |_, (r, (vl, vd))| {
+            assign_serial(data, &sel, r, centroids, trans, vl, vd);
+        });
         n as u64 * k
     }
 
@@ -155,7 +159,7 @@ impl AssignEngine for NativeEngine {
         if n == 0 {
             return 0;
         }
-        let ranges = chunk_ranges(n, pool.threads, MIN_CHUNK.max(64));
+        let ranges = chunk_ranges(n, pool.threads, DIST_ROWS_MIN_CHUNK);
         // split the row-major output at row boundaries
         let mut views = Vec::with_capacity(ranges.len());
         {
@@ -166,51 +170,12 @@ impl AssignEngine for NativeEngine {
                 rest = tail;
             }
         }
-        let jobs: Vec<_> = ranges.iter().cloned().zip(views).collect();
+        let jobs: Vec<_> = ranges.into_iter().zip(views).collect();
         let trans = transposed_for(data, centroids, n);
-        let trans = trans.as_ref();
-        let work = |r: std::ops::Range<usize>, out: &mut [f32]| {
-            match (trans, &data.storage) {
-                (Some(tc), Storage::Sparse(m)) => {
-                    for (slot, t) in r.enumerate() {
-                        let i = sel.nth(t);
-                        let (idx, vals) = m.row(i);
-                        tc.dist_row(
-                            idx,
-                            vals,
-                            data.norms[i],
-                            &centroids.norms,
-                            &mut out[slot * k..(slot + 1) * k],
-                        );
-                    }
-                }
-                _ => {
-                    for (slot, t) in r.enumerate() {
-                        let i = sel.nth(t);
-                        let row = &mut out[slot * k..(slot + 1) * k];
-                        for j in 0..k {
-                            row[j] = data.sq_dist_to(
-                                i,
-                                centroids.c.row(j),
-                                centroids.norms[j],
-                            );
-                        }
-                    }
-                }
-            }
-        };
-        if jobs.len() <= 1 {
-            for (r, out) in jobs {
-                work(r, out);
-            }
-        } else {
-            std::thread::scope(|scope| {
-                for (r, out) in jobs {
-                    let work = &work;
-                    scope.spawn(move || work(r, out));
-                }
-            });
-        }
+        let trans = trans.as_deref();
+        pool.run_jobs(jobs, |_, (r, out)| {
+            dist_rows_serial(data, &sel, r, centroids, trans, out);
+        });
         (n * k) as u64
     }
 
@@ -219,14 +184,52 @@ impl AssignEngine for NativeEngine {
     }
 }
 
-/// Build the transposed centroid block when it pays: sparse data, k
-/// large enough to amortise, selection big enough to amortise the
-/// O(k·d) transpose, and a bounded memory footprint.
+/// Single-slot transpose cache keyed on [`Centroids::rev`]: within a
+/// round, `assign`, `dist_rows` and validation scoring all see the same
+/// centroid revision, so the O(k·d) transpose is built once instead of
+/// once per engine call.
+static TRANS_CACHE: Mutex<Option<(u64, Arc<TransposedCentroids>)>> =
+    Mutex::new(None);
+
+/// Revision-matched cache hit, or `None`.
+fn cache_lookup(
+    slot: &Option<(u64, Arc<TransposedCentroids>)>,
+    centroids: &Centroids,
+) -> Option<Arc<TransposedCentroids>> {
+    match slot {
+        Some((rev, tc))
+            if *rev == centroids.rev
+                && tc.k == centroids.k()
+                && tc.d == centroids.d() =>
+        {
+            Some(tc.clone())
+        }
+        _ => None,
+    }
+}
+
+/// Cache-or-build core, factored out of the global slot so the keying
+/// logic is testable without cross-test interference.
+fn cached_transpose(
+    slot: &mut Option<(u64, Arc<TransposedCentroids>)>,
+    centroids: &Centroids,
+) -> Arc<TransposedCentroids> {
+    if let Some(tc) = cache_lookup(slot, centroids) {
+        return tc;
+    }
+    let tc = Arc::new(TransposedCentroids::build(&centroids.c));
+    *slot = Some((centroids.rev, tc.clone()));
+    tc
+}
+
+/// Build (or fetch) the transposed centroid block when it pays: sparse
+/// data, k large enough to amortise, selection big enough to amortise
+/// the O(k·d) transpose, and a bounded memory footprint.
 fn transposed_for(
     data: &Data,
     centroids: &Centroids,
     n_points: usize,
-) -> Option<TransposedCentroids> {
+) -> Option<Arc<TransposedCentroids>> {
     const MAX_BYTES: usize = 256 << 20;
     if !data.is_sparse()
         || centroids.k() < 8
@@ -235,7 +238,14 @@ fn transposed_for(
     {
         return None;
     }
-    Some(TransposedCentroids::build(&centroids.c))
+    if let Some(tc) = cache_lookup(&TRANS_CACHE.lock().unwrap(), centroids) {
+        return Some(tc);
+    }
+    // build outside the lock: the O(k·d) transpose must not serialise
+    // unrelated concurrent sessions behind the process-global slot
+    let tc = Arc::new(TransposedCentroids::build(&centroids.c));
+    *TRANS_CACHE.lock().unwrap() = Some((centroids.rev, tc.clone()));
+    Some(tc)
 }
 
 fn assign_serial(
@@ -247,23 +257,128 @@ fn assign_serial(
     out_lbl: &mut [u32],
     out_d2: &mut [f32],
 ) {
-    if let (Some(tc), Storage::Sparse(m)) = (trans, &data.storage) {
-        let mut scratch = vec![0f32; tc.k];
-        for (slot, t) in range.clone().enumerate() {
-            let i = sel.nth(t);
-            let (idx, vals) = m.row(i);
-            let (j, d2) =
-                tc.nearest(idx, vals, data.norms[i], &centroids.norms, &mut scratch);
-            out_lbl[slot] = j;
-            out_d2[slot] = d2;
+    match (trans, &data.storage) {
+        (Some(tc), Storage::Sparse(m)) => {
+            let mut scratch = vec![0f32; tc.k];
+            for (slot, t) in range.clone().enumerate() {
+                let i = sel.nth(t);
+                let (idx, vals) = m.row(i);
+                let (j, d2) = tc.nearest(
+                    idx,
+                    vals,
+                    data.norms[i],
+                    &centroids.norms,
+                    &mut scratch,
+                );
+                out_lbl[slot] = j;
+                out_d2[slot] = d2;
+            }
         }
-        return;
+        (_, Storage::Sparse(m)) => {
+            for (slot, t) in range.clone().enumerate() {
+                let i = sel.nth(t);
+                let (idx, vals) = m.row(i);
+                let (j, d2) = sparse::nearest_sparse(
+                    idx,
+                    vals,
+                    data.norms[i],
+                    &centroids.c,
+                    &centroids.norms,
+                );
+                out_lbl[slot] = j;
+                out_d2[slot] = d2;
+            }
+        }
+        (_, Storage::Dense(m)) => {
+            // point-blocked: a 4-row centroid strip stays in cache
+            // across POINT_BLOCK points (bit-identical to per-point)
+            let tier = simd::tier();
+            let mut rows: [&[f32]; simd::POINT_BLOCK] = [&[]; simd::POINT_BLOCK];
+            let mut xns = [0f32; simd::POINT_BLOCK];
+            let mut t0 = range.start;
+            while t0 < range.end {
+                let p = simd::POINT_BLOCK.min(range.end - t0);
+                for o in 0..p {
+                    let i = sel.nth(t0 + o);
+                    rows[o] = m.row(i);
+                    xns[o] = data.norms[i];
+                }
+                let base = t0 - range.start;
+                simd::nearest_block_with(
+                    tier,
+                    &rows[..p],
+                    &xns[..p],
+                    &centroids.c,
+                    &centroids.norms,
+                    &mut out_lbl[base..base + p],
+                    &mut out_d2[base..base + p],
+                );
+                t0 += p;
+            }
+        }
     }
-    for (slot, t) in range.clone().enumerate() {
-        let i = sel.nth(t);
-        let (j, d2) = data.nearest(i, &centroids.c, &centroids.norms);
-        out_lbl[slot] = j;
-        out_d2[slot] = d2;
+}
+
+fn dist_rows_serial(
+    data: &Data,
+    sel: &Sel,
+    range: std::ops::Range<usize>,
+    centroids: &Centroids,
+    trans: Option<&TransposedCentroids>,
+    out: &mut [f32],
+) {
+    let k = centroids.k();
+    match (trans, &data.storage) {
+        (Some(tc), Storage::Sparse(m)) => {
+            for (slot, t) in range.clone().enumerate() {
+                let i = sel.nth(t);
+                let (idx, vals) = m.row(i);
+                tc.dist_row(
+                    idx,
+                    vals,
+                    data.norms[i],
+                    &centroids.norms,
+                    &mut out[slot * k..(slot + 1) * k],
+                );
+            }
+        }
+        (_, Storage::Sparse(_)) => {
+            for (slot, t) in range.clone().enumerate() {
+                let i = sel.nth(t);
+                let row = &mut out[slot * k..(slot + 1) * k];
+                for j in 0..k {
+                    row[j] = data.sq_dist_to(
+                        i,
+                        centroids.c.row(j),
+                        centroids.norms[j],
+                    );
+                }
+            }
+        }
+        (_, Storage::Dense(m)) => {
+            let tier = simd::tier();
+            let mut rows: [&[f32]; simd::POINT_BLOCK] = [&[]; simd::POINT_BLOCK];
+            let mut xns = [0f32; simd::POINT_BLOCK];
+            let mut t0 = range.start;
+            while t0 < range.end {
+                let p = simd::POINT_BLOCK.min(range.end - t0);
+                for o in 0..p {
+                    let i = sel.nth(t0 + o);
+                    rows[o] = m.row(i);
+                    xns[o] = data.norms[i];
+                }
+                let base = t0 - range.start;
+                simd::dist_rows_block_with(
+                    tier,
+                    &rows[..p],
+                    &xns[..p],
+                    &centroids.c,
+                    &centroids.norms,
+                    &mut out[base * k..(base + p) * k],
+                );
+                t0 += p;
+            }
+        }
     }
 }
 
@@ -284,6 +399,7 @@ pub fn validation_mse(
 mod tests {
     use super::*;
     use crate::data::gaussian::GaussianMixture;
+    use crate::data::rcv1::Rcv1Sim;
     use crate::kmeans::init;
     use crate::util::propcheck::Cases;
 
@@ -312,7 +428,8 @@ mod tests {
             eng.assign(&data, Sel::Range(0, n), &cent, &Pool::new(4), &mut l4, &mut d4);
             assert_eq!(l1, l4);
             assert_eq!(d1, d4);
-            // spot-check against Data::nearest
+            // spot-check against Data::nearest (per-point path must be
+            // bit-identical to the blocked engine path)
             for i in (0..n).step_by(37) {
                 let (j, d2) = data.nearest(i, &cent.c, &cent.norms);
                 assert_eq!(l1[i], j);
@@ -369,6 +486,80 @@ mod tests {
                 let e = data.sq_dist_to(i, cent.c.row(j), cent.norms[j]);
                 assert_eq!(out[i * 3 + j], e);
             }
+        }
+    }
+
+    #[test]
+    fn dist_rows_fans_out_at_100_rows() {
+        // regression for the MIN_CHUNK.max(64) no-op: 100 rows on a
+        // multi-thread pool must split into >1 chunk...
+        let ranges = chunk_ranges(100, 4, DIST_ROWS_MIN_CHUNK);
+        assert!(
+            ranges.len() > 1,
+            "100-row dist_rows stayed serial: {ranges:?}"
+        );
+        // ...and the fanned-out result must equal the serial one exactly
+        let data = GaussianMixture::default_spec(4, 6).generate(100, 5);
+        let cent = init::first_k(&data, 4);
+        let mut par = vec![0f32; 100 * 4];
+        let mut ser = vec![0f32; 100 * 4];
+        NativeEngine.dist_rows(&data, Sel::Range(0, 100), &cent, &Pool::new(4), &mut par);
+        NativeEngine.dist_rows(&data, Sel::Range(0, 100), &cent, &Pool::new(1), &mut ser);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn transpose_cache_hits_and_invalidates() {
+        let data = Rcv1Sim::default().generate(200, 3);
+        let mut cent = init::first_k(&data, 10);
+        let mut slot = None;
+        let a = cached_transpose(&mut slot, &cent);
+        let b = cached_transpose(&mut slot, &cent);
+        assert!(Arc::ptr_eq(&a, &b), "same revision must hit the cache");
+        cent.touch();
+        let c = cached_transpose(&mut slot, &cent);
+        assert!(!Arc::ptr_eq(&a, &c), "touch() must invalidate");
+        // a clone shares the revision, so it also hits
+        let clone = cent.clone();
+        let d = cached_transpose(&mut slot, &clone);
+        assert!(Arc::ptr_eq(&c, &d));
+    }
+
+    #[test]
+    fn sparse_assign_tracks_centroid_updates_through_cache() {
+        // end-to-end guard against stale transposes: assign, move the
+        // centroids through the update path, assign again — results
+        // must match the uncached per-point oracle both times
+        let data = Rcv1Sim::default().generate(300, 9);
+        let mut cent = init::first_k(&data, 12);
+        let pool = Pool::new(2);
+        let eng = NativeEngine;
+        for round in 0..3 {
+            let n = data.n();
+            let mut lbl = vec![0u32; n];
+            let mut d2 = vec![0f32; n];
+            eng.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lbl, &mut d2);
+            for i in (0..n).step_by(29) {
+                let (j, e) = data.nearest(i, &cent.c, &cent.norms);
+                // transposed kernel may tie-break differently; distances
+                // must agree to fp tolerance
+                assert!(
+                    (d2[i] - e).abs() <= 1e-3 * (1.0 + e.abs()),
+                    "round {round} i={i}: {} vs oracle {e} (lbl {} vs {j})",
+                    d2[i],
+                    lbl[i]
+                );
+            }
+            // move the centroids via the statistics path (bumps rev)
+            let stats = crate::kmeans::par_add_stats(
+                &data,
+                Sel::Range(0, n),
+                &lbl,
+                &d2,
+                12,
+                &pool,
+            );
+            stats.update_centroids(&mut cent);
         }
     }
 

@@ -118,19 +118,9 @@ impl Clusterer for Elkan {
                 }
                 (delta, sum)
             };
-            let parts: Vec<(SuffStats, f64)> = if jobs.len() <= 1 {
-                jobs.into_iter().map(|(r, bh, lh, uh)| work(r, bh, lh, uh)).collect()
-            } else {
-                let mut slots: Vec<Option<(SuffStats, f64)>> =
-                    (0..jobs.len()).map(|_| None).collect();
-                std::thread::scope(|scope| {
-                    for (slot, (r, bh, lh, uh)) in slots.iter_mut().zip(jobs) {
-                        let work = &work;
-                        scope.spawn(move || *slot = Some(work(r, bh, lh, uh)));
-                    }
-                });
-                slots.into_iter().map(|s| s.unwrap()).collect()
-            };
+            let parts: Vec<(SuffStats, f64)> = ctx
+                .pool
+                .run_jobs(jobs, |_, (r, bh, lh, uh)| work(r, bh, lh, uh));
             let mut sum_d2 = 0f64;
             for (p, s) in parts {
                 crate::coordinator::merge::Mergeable::merge(&mut self.stats, p);
@@ -233,19 +223,9 @@ impl Clusterer for Elkan {
             }
             out
         };
-        let parts: Vec<ShardOut> = if jobs.len() <= 1 {
-            jobs.into_iter().map(|(r, bh, lh, uh)| work(r, bh, lh, uh)).collect()
-        } else {
-            let mut slots: Vec<Option<ShardOut>> =
-                (0..jobs.len()).map(|_| None).collect();
-            std::thread::scope(|scope| {
-                for (slot, (r, bh, lh, uh)) in slots.iter_mut().zip(jobs) {
-                    let work = &work;
-                    scope.spawn(move || *slot = Some(work(r, bh, lh, uh)));
-                }
-            });
-            slots.into_iter().map(|x| x.unwrap()).collect()
-        };
+        let parts: Vec<ShardOut> = ctx
+            .pool
+            .run_jobs(jobs, |_, (r, bh, lh, uh)| work(r, bh, lh, uh));
         let mut changed = 0u64;
         let mut calcs = 0u64;
         let mut skips = 0u64;

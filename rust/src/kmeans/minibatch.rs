@@ -136,6 +136,9 @@ impl Clusterer for MiniBatch {
                     )
                     .sqrt();
                 }
+                // direct mutation above bypassed update_centroids —
+                // refresh the revision so engine caches invalidate
+                self.cent.touch();
             }
         }
         let train_mse =

@@ -76,6 +76,9 @@ impl Clusterer for Sgd {
             self.cent.norms[j as usize] =
                 dense::sq_norm(self.cent.c.row(j as usize));
         }
+        // per-point pulls mutate `c` directly; one revision refresh per
+        // round keeps engine caches (validation scoring) coherent
+        self.cent.touch();
         RoundInfo {
             dist_calcs: (steps * k) as u64,
             bound_skips: 0,

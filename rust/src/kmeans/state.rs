@@ -21,6 +21,17 @@ use crate::linalg::dense;
 /// Sentinel for "never assigned".
 pub const UNASSIGNED: u32 = u32::MAX;
 
+/// Globally unique revision stamps for [`Centroids`] content. Monotonic
+/// across all instances, so a revision value identifies one centroid
+/// snapshot for the lifetime of the process (the engine's transpose
+/// cache keys on it).
+static CENTROID_REV: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(1);
+
+fn next_rev() -> u64 {
+    CENTROID_REV.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Centroids with the cached quantities the hot paths need.
 #[derive(Clone, Debug)]
 pub struct Centroids {
@@ -30,13 +41,22 @@ pub struct Centroids {
     pub norms: Vec<f32>,
     /// p(j): distance moved in the most recent update (Elkan decay).
     pub p: Vec<f32>,
+    /// Content revision: process-unique stamp refreshed by [`touch`]
+    /// whenever `c` changes. Derived caches (the engine's transposed
+    /// centroid block) key on it, so any code mutating `c` outside
+    /// [`SuffStats::update_centroids`] must call `touch()` before the
+    /// centroids reach an engine again. Clones share the revision
+    /// (identical content).
+    ///
+    /// [`touch`]: Centroids::touch
+    pub rev: u64,
 }
 
 impl Centroids {
     pub fn from_matrix(c: DenseMatrix) -> Self {
         let norms = c.row_sq_norms();
         let k = c.rows;
-        Self { c, norms, p: vec![0.0; k] }
+        Self { c, norms, p: vec![0.0; k], rev: next_rev() }
     }
 
     /// Rehydrate from serialised parts (snapshot load). `norms` and `p`
@@ -47,7 +67,13 @@ impl Centroids {
     pub fn from_parts(c: DenseMatrix, norms: Vec<f32>, p: Vec<f32>) -> Self {
         assert_eq!(norms.len(), c.rows, "norms length != k");
         assert_eq!(p.len(), c.rows, "p length != k");
-        Self { c, norms, p }
+        Self { c, norms, p, rev: next_rev() }
+    }
+
+    /// Mark the centroid content as changed (fresh process-unique
+    /// revision), invalidating revision-keyed caches.
+    pub fn touch(&mut self) {
+        self.rev = next_rev();
     }
 
     pub fn k(&self) -> usize {
@@ -185,6 +211,7 @@ impl SuffStats {
             centroids.p[j] = (disp2 as f32).sqrt();
             centroids.norms[j] = norm as f32;
         }
+        centroids.touch();
     }
 
     /// Recompute from scratch for a set of assigned points (tests and

@@ -152,21 +152,9 @@ impl TurboBatch {
             }
             (delta, changed, calcs, skips)
         };
-        let results: Vec<(SuffStats, u64, u64, u64)> = if jobs.len() <= 1 {
-            jobs.into_iter().map(|(r, lbv, lh, dh)| work(r, lbv, lh, dh)).collect()
-        } else {
-            let mut slots: Vec<Option<(SuffStats, u64, u64, u64)>> =
-                (0..jobs.len()).map(|_| None).collect();
-            std::thread::scope(|scope| {
-                for (slot, (r, lbv, lh, dh)) in slots.iter_mut().zip(jobs) {
-                    let work = &work;
-                    scope.spawn(move || {
-                        *slot = Some(work(r, lbv, lh, dh));
-                    });
-                }
-            });
-            slots.into_iter().map(|s| s.unwrap()).collect()
-        };
+        let results: Vec<(SuffStats, u64, u64, u64)> = ctx
+            .pool
+            .run_jobs(jobs, |_, (r, lbv, lh, dh)| work(r, lbv, lh, dh));
         let mut delta = SuffStats::zeros(k, d);
         let (mut changed, mut calcs, mut skips) = (0u64, 0u64, 0u64);
         for (dd, ch, ca, sk) in results {
@@ -214,21 +202,9 @@ impl TurboBatch {
             }
             dirty
         };
-        let dirty_parts: Vec<Vec<usize>> = if jobs.len() <= 1 {
-            jobs.into_iter().map(|(r, lbv, uh)| screen_work(r, lbv, uh)).collect()
-        } else {
-            let mut slots: Vec<Option<Vec<usize>>> =
-                (0..jobs.len()).map(|_| None).collect();
-            std::thread::scope(|scope| {
-                for (slot, (r, lbv, uh)) in slots.iter_mut().zip(jobs) {
-                    let screen_work = &screen_work;
-                    scope.spawn(move || {
-                        *slot = Some(screen_work(r, lbv, uh));
-                    });
-                }
-            });
-            slots.into_iter().map(|s| s.unwrap()).collect()
-        };
+        let dirty_parts: Vec<Vec<usize>> = ctx
+            .pool
+            .run_jobs(jobs, |_, (r, lbv, uh)| screen_work(r, lbv, uh));
         let dirty: Vec<usize> = dirty_parts.into_iter().flatten().collect();
         let clean = (b_o - dirty.len()) as u64;
 
@@ -318,21 +294,9 @@ impl TurboBatch {
             }
             delta
         };
-        let parts: Vec<SuffStats> = if jobs.len() <= 1 {
-            jobs.into_iter().map(|(r, lh, dh, uh, bh)| work(r, lh, dh, uh, bh)).collect()
-        } else {
-            let mut slots: Vec<Option<SuffStats>> =
-                (0..jobs.len()).map(|_| None).collect();
-            std::thread::scope(|scope| {
-                for (slot, (r, lh, dh, uh, bh)) in slots.iter_mut().zip(jobs) {
-                    let work = &work;
-                    scope.spawn(move || {
-                        *slot = Some(work(r, lh, dh, uh, bh));
-                    });
-                }
-            });
-            slots.into_iter().map(|s| s.unwrap()).collect()
-        };
+        let parts: Vec<SuffStats> = ctx
+            .pool
+            .run_jobs(jobs, |_, (r, lh, dh, uh, bh)| work(r, lh, dh, uh, bh));
         let mut delta = SuffStats::zeros(k, d);
         for p in parts {
             crate::coordinator::merge::Mergeable::merge(&mut delta, p);

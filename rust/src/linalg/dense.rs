@@ -2,8 +2,13 @@
 //!
 //! The assignment hot loop uses the norms decomposition
 //! `‖x−c‖² = ‖x‖² + ‖c‖² − 2⟨x,c⟩` so the inner loop is a pure dot
-//! product — the same form the L1 Pallas kernel uses on the MXU — with
-//! an 8-way unrolled accumulator that the compiler autovectorises.
+//! product — the same form the L1 Pallas kernel uses on the MXU. The
+//! arithmetic now lives in [`crate::linalg::simd`], which dispatches to
+//! explicit AVX2/SSE2/NEON kernels at runtime while staying bit-identical
+//! to the 8-way unrolled scalar reference; this module re-exports the
+//! dispatched entry points under their historical names.
+
+pub use crate::linalg::simd::{add_into, dot, nearest, sq_norm, sub_from};
 
 /// Row-major `rows × cols` matrix of `f32`.
 #[derive(Clone, Debug, PartialEq)]
@@ -61,42 +66,6 @@ impl DenseMatrix {
     }
 }
 
-/// Dot product, 8-way unrolled. The central FLOP sink of the native
-/// engine; see benches/micro_hotpaths.
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    let (mut s4, mut s5, mut s6, mut s7) = (0f32, 0f32, 0f32, 0f32);
-    for c in 0..chunks {
-        let i = c * 8;
-        // Safety: i+7 < chunks*8 <= n, same for b.
-        unsafe {
-            s0 += a.get_unchecked(i) * b.get_unchecked(i);
-            s1 += a.get_unchecked(i + 1) * b.get_unchecked(i + 1);
-            s2 += a.get_unchecked(i + 2) * b.get_unchecked(i + 2);
-            s3 += a.get_unchecked(i + 3) * b.get_unchecked(i + 3);
-            s4 += a.get_unchecked(i + 4) * b.get_unchecked(i + 4);
-            s5 += a.get_unchecked(i + 5) * b.get_unchecked(i + 5);
-            s6 += a.get_unchecked(i + 6) * b.get_unchecked(i + 6);
-            s7 += a.get_unchecked(i + 7) * b.get_unchecked(i + 7);
-        }
-    }
-    let mut tail = 0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7)) + tail
-}
-
-/// ‖a‖².
-#[inline]
-pub fn sq_norm(a: &[f32]) -> f32 {
-    dot(a, a)
-}
-
 /// Exact squared distance (no norms trick; used by oracles and tests).
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
@@ -114,91 +83,6 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 pub fn sq_dist_norms(x: &[f32], xn: f32, c: &[f32], cn: f32) -> f32 {
     (xn + cn - 2.0 * dot(x, c)).max(0.0)
-}
-
-/// Four dot products against consecutive centroid rows sharing one
-/// streaming pass over `x` — register blocking that quarters x-loads
-/// and widens ILP (EXPERIMENTS.md §Perf change 4).
-#[inline]
-fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; 4] {
-    let n = x.len();
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    let (mut t0, mut t1, mut t2, mut t3) = (0f32, 0f32, 0f32, 0f32);
-    let chunks = n / 2;
-    for ci in 0..chunks {
-        let i = ci * 2;
-        // Safety: i+1 < chunks*2 <= n for all five slices (same length).
-        unsafe {
-            let xa = *x.get_unchecked(i);
-            let xb = *x.get_unchecked(i + 1);
-            s0 += xa * c0.get_unchecked(i);
-            t0 += xb * c0.get_unchecked(i + 1);
-            s1 += xa * c1.get_unchecked(i);
-            t1 += xb * c1.get_unchecked(i + 1);
-            s2 += xa * c2.get_unchecked(i);
-            t2 += xb * c2.get_unchecked(i + 1);
-            s3 += xa * c3.get_unchecked(i);
-            t3 += xb * c3.get_unchecked(i + 1);
-        }
-    }
-    if n % 2 == 1 {
-        let i = n - 1;
-        s0 += x[i] * c0[i];
-        s1 += x[i] * c1[i];
-        s2 += x[i] * c2[i];
-        s3 += x[i] * c3[i];
-    }
-    [s0 + t0, s1 + t1, s2 + t2, s3 + t3]
-}
-
-/// Nearest centroid of `x` among the rows of `c` (norms trick).
-/// Returns `(argmin_j, min_j ‖x−c_j‖²)` — the native counterpart of the
-/// L1 `assign` kernel. Processes centroids in blocks of four so the
-/// point vector is streamed once per block instead of once per centroid.
-#[inline]
-pub fn nearest(x: &[f32], xn: f32, c: &DenseMatrix, cnorms: &[f32]) -> (u32, f32) {
-    debug_assert_eq!(c.rows, cnorms.len());
-    let mut best_j = 0u32;
-    let mut best = f32::INFINITY;
-    let k = c.rows;
-    let blocks = k / 4;
-    for b in 0..blocks {
-        let j = b * 4;
-        let dots = dot4(x, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
-        for (o, &dt) in dots.iter().enumerate() {
-            let d2 = (xn + cnorms[j + o] - 2.0 * dt).max(0.0);
-            if d2 < best {
-                best = d2;
-                best_j = (j + o) as u32;
-            }
-        }
-    }
-    for j in blocks * 4..k {
-        let d2 = sq_dist_norms(x, xn, c.row(j), cnorms[j]);
-        if d2 < best {
-            best = d2;
-            best_j = j as u32;
-        }
-    }
-    (best_j, best)
-}
-
-/// `acc += x` with f64 accumulation (sufficient-statistics path).
-#[inline]
-pub fn add_into(acc: &mut [f64], x: &[f32]) {
-    debug_assert_eq!(acc.len(), x.len());
-    for i in 0..x.len() {
-        acc[i] += x[i] as f64;
-    }
-}
-
-/// `acc -= x` with f64 accumulation.
-#[inline]
-pub fn sub_from(acc: &mut [f64], x: &[f32]) {
-    debug_assert_eq!(acc.len(), x.len());
-    for i in 0..x.len() {
-        acc[i] -= x[i] as f64;
-    }
 }
 
 #[cfg(test)]

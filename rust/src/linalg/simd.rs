@@ -1,0 +1,1053 @@
+//! Runtime-dispatched SIMD distance kernels.
+//!
+//! Every FLOP of the native engine funnels through this module: `dot`,
+//! the 4-row block `dot4`, `sq_norm`, the f64 accumulator ops
+//! `add_into`/`sub_from`, and the point-blocked assignment micro-kernels
+//! [`nearest_block`]/[`dist_rows_block`]. A [`Tier`] is picked once at
+//! runtime (AVX2/SSE2 on x86_64, NEON on aarch64, scalar anywhere) and
+//! cached; `NMBKM_SIMD=scalar|sse2|avx2|fma` forces a tier and
+//! `NMBKM_FMA=1` opts into fused multiply-add.
+//!
+//! ## The bit-identity invariant
+//!
+//! Except for the opt-in FMA tier, **every tier produces bit-identical
+//! results**, and `dot4(x, c0..c3)[j]` is bit-identical to
+//! `dot(x, c_j)`. All variants accumulate partial products into the same
+//! eight virtual lanes — lane `j` sums `a[8c+j]·b[8c+j]` over chunks
+//! `c` in order — and reduce them with the same tree
+//! `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7)) + tail`. The scalar reference
+//! keeps eight independent accumulators, AVX2 holds the lanes in one
+//! 256-bit register, SSE2 and NEON in two 128-bit registers; IEEE
+//! addition order is identical in all four. This is what keeps runs
+//! deterministic across machines, thread counts, and the blocked vs
+//! per-point code paths (the repo's engine-parity and
+//! threads-don't-change-results tests rely on it).
+//!
+//! The FMA tier (`NMBKM_FMA=1`, requires AVX2+FMA) contracts
+//! multiply-add pairs and is therefore *not* bit-identical — it trades
+//! reproducibility-across-tiers for ~2x FLOP throughput on
+//! FMA-dominated shapes. It is never selected by default.
+
+use crate::linalg::dense::DenseMatrix;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+#[cfg(target_arch = "aarch64")]
+use core::arch::aarch64::*;
+
+/// A dispatchable kernel implementation level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable reference (8-way unrolled; autovectorises to the
+    /// target baseline, i.e. SSE2 on x86_64).
+    Scalar,
+    /// Explicit 128-bit SSE2 (x86_64 baseline — always available there).
+    Sse2,
+    /// Explicit 256-bit AVX2, separate mul-then-add (bit-identical).
+    Avx2,
+    /// AVX2 with fused multiply-add — opt-in, NOT bit-identical.
+    Avx2Fma,
+    /// Explicit 128-bit NEON (aarch64 baseline).
+    Neon,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Sse2 => "sse2",
+            Tier::Avx2 => "avx2",
+            Tier::Avx2Fma => "avx2+fma",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+const TIER_UNSET: u8 = 0xFF;
+static TIER: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+fn encode(t: Tier) -> u8 {
+    match t {
+        Tier::Scalar => 0,
+        Tier::Sse2 => 1,
+        Tier::Avx2 => 2,
+        Tier::Avx2Fma => 3,
+        Tier::Neon => 4,
+    }
+}
+
+fn decode(v: u8) -> Tier {
+    match v {
+        0 => Tier::Scalar,
+        1 => Tier::Sse2,
+        2 => Tier::Avx2,
+        3 => Tier::Avx2Fma,
+        _ => Tier::Neon,
+    }
+}
+
+/// Tiers the current host can actually execute, widest last.
+pub fn available_tiers() -> Vec<Tier> {
+    #[allow(unused_mut)]
+    let mut v = vec![Tier::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        v.push(Tier::Sse2);
+        if std::arch::is_x86_64_feature_detected!("avx2") {
+            v.push(Tier::Avx2);
+            if std::arch::is_x86_64_feature_detected!("fma") {
+                v.push(Tier::Avx2Fma);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(Tier::Neon);
+    v
+}
+
+/// Pure dispatch core: `simd_override` is the raw `NMBKM_SIMD` value and
+/// `fma_optin` the raw `NMBKM_FMA` value, if set. Unknown or unsupported
+/// requests fall back to auto-detection (never to a tier the host can't
+/// run). Split out so tests never need `set_var`.
+pub fn detect(simd_override: Option<&str>, fma_optin: Option<&str>) -> Tier {
+    let avail = available_tiers();
+    let has = |t: Tier| avail.contains(&t);
+    if let Some(raw) = simd_override {
+        match raw.trim().to_ascii_lowercase().as_str() {
+            "scalar" => return Tier::Scalar,
+            "sse2" if has(Tier::Sse2) => return Tier::Sse2,
+            "avx2" if has(Tier::Avx2) => return Tier::Avx2,
+            "fma" | "avx2+fma" if has(Tier::Avx2Fma) => return Tier::Avx2Fma,
+            "neon" if has(Tier::Neon) => return Tier::Neon,
+            _ => {}
+        }
+    }
+    let fma_ok = fma_optin.map(|v| v.trim() == "1").unwrap_or(false);
+    if fma_ok && has(Tier::Avx2Fma) {
+        return Tier::Avx2Fma;
+    }
+    if has(Tier::Avx2) {
+        return Tier::Avx2;
+    }
+    if has(Tier::Neon) {
+        return Tier::Neon;
+    }
+    if has(Tier::Sse2) {
+        return Tier::Sse2;
+    }
+    Tier::Scalar
+}
+
+/// The active dispatch tier (detected once, then cached).
+#[inline]
+pub fn tier() -> Tier {
+    let v = TIER.load(Ordering::Relaxed);
+    if v != TIER_UNSET {
+        return decode(v);
+    }
+    let t = detect(
+        std::env::var("NMBKM_SIMD").ok().as_deref(),
+        std::env::var("NMBKM_FMA").ok().as_deref(),
+    );
+    TIER.store(encode(t), Ordering::Relaxed);
+    t
+}
+
+/// Force the dispatch tier (benches / CI smoke runs). Panics if the
+/// host can't execute `t`. `force_tier(None)` re-runs auto-detection on
+/// the next [`tier`] call.
+pub fn force_tier(t: Option<Tier>) {
+    match t {
+        Some(t) => {
+            assert!(
+                available_tiers().contains(&t),
+                "tier {} not available on this host",
+                t.name()
+            );
+            TIER.store(encode(t), Ordering::Relaxed);
+        }
+        None => TIER.store(TIER_UNSET, Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar reference kernels (the 8-virtual-lane accumulation pattern)
+// ---------------------------------------------------------------------
+
+/// Dot product, 8 independent accumulators — the bit-level reference
+/// every SIMD tier reproduces exactly.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        // Safety: i+7 < chunks*8 <= n, same for b.
+        unsafe {
+            s0 += a.get_unchecked(i) * b.get_unchecked(i);
+            s1 += a.get_unchecked(i + 1) * b.get_unchecked(i + 1);
+            s2 += a.get_unchecked(i + 2) * b.get_unchecked(i + 2);
+            s3 += a.get_unchecked(i + 3) * b.get_unchecked(i + 3);
+            s4 += a.get_unchecked(i + 4) * b.get_unchecked(i + 4);
+            s5 += a.get_unchecked(i + 5) * b.get_unchecked(i + 5);
+            s6 += a.get_unchecked(i + 6) * b.get_unchecked(i + 6);
+            s7 += a.get_unchecked(i + 7) * b.get_unchecked(i + 7);
+        }
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// Shared reduction tree over the eight virtual lanes (must match the
+/// scalar combine above exactly).
+#[inline]
+fn reduce_lanes(l: &[f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+#[inline]
+fn dot4_scalar(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; 4] {
+    [dot_scalar(x, c0), dot_scalar(x, c1), dot_scalar(x, c2), dot_scalar(x, c3)]
+}
+
+#[inline]
+fn add_into_scalar(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for i in 0..x.len() {
+        acc[i] += x[i] as f64;
+    }
+}
+
+#[inline]
+fn sub_from_scalar(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for i in 0..x.len() {
+        acc[i] -= x[i] as f64;
+    }
+}
+
+// ---------------------------------------------------------------------
+// SSE2 (x86_64 baseline): lanes 0..3 and 4..7 in two 128-bit registers
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut lo = _mm_setzero_ps();
+    let mut hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 8;
+        let av0 = _mm_loadu_ps(a.as_ptr().add(i));
+        let bv0 = _mm_loadu_ps(b.as_ptr().add(i));
+        let av1 = _mm_loadu_ps(a.as_ptr().add(i + 4));
+        let bv1 = _mm_loadu_ps(b.as_ptr().add(i + 4));
+        lo = _mm_add_ps(lo, _mm_mul_ps(av0, bv0));
+        hi = _mm_add_ps(hi, _mm_mul_ps(av1, bv1));
+    }
+    let mut lanes = [0f32; 8];
+    _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+    _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a.get_unchecked(i) * b.get_unchecked(i);
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot4_sse2(
+    x: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [f32; 4] {
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc = [_mm_setzero_ps(); 8]; // [lo0, hi0, lo1, hi1, ...]
+    let cs = [c0, c1, c2, c3];
+    for c in 0..chunks {
+        let i = c * 8;
+        let xv0 = _mm_loadu_ps(x.as_ptr().add(i));
+        let xv1 = _mm_loadu_ps(x.as_ptr().add(i + 4));
+        for (j, cj) in cs.iter().enumerate() {
+            let cv0 = _mm_loadu_ps(cj.as_ptr().add(i));
+            let cv1 = _mm_loadu_ps(cj.as_ptr().add(i + 4));
+            acc[j * 2] = _mm_add_ps(acc[j * 2], _mm_mul_ps(xv0, cv0));
+            acc[j * 2 + 1] = _mm_add_ps(acc[j * 2 + 1], _mm_mul_ps(xv1, cv1));
+        }
+    }
+    let mut out = [0f32; 4];
+    let mut tails = [0f32; 4];
+    for i in chunks * 8..n {
+        let xi = *x.get_unchecked(i);
+        for (j, cj) in cs.iter().enumerate() {
+            tails[j] += xi * cj.get_unchecked(i);
+        }
+    }
+    for j in 0..4 {
+        let mut lanes = [0f32; 8];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc[j * 2]);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), acc[j * 2 + 1]);
+        out[j] = reduce_lanes(&lanes) + tails[j];
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// AVX2: all eight lanes in one 256-bit register
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 8;
+        let av = _mm256_loadu_ps(a.as_ptr().add(i));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+    }
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a.get_unchecked(i) * b.get_unchecked(i);
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_avx2(
+    x: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [f32; 4] {
+    let n = x.len();
+    let chunks = n / 8;
+    let mut a0 = _mm256_setzero_ps();
+    let mut a1 = _mm256_setzero_ps();
+    let mut a2 = _mm256_setzero_ps();
+    let mut a3 = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 8;
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(c0.as_ptr().add(i))));
+        a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(c1.as_ptr().add(i))));
+        a2 = _mm256_add_ps(a2, _mm256_mul_ps(xv, _mm256_loadu_ps(c2.as_ptr().add(i))));
+        a3 = _mm256_add_ps(a3, _mm256_mul_ps(xv, _mm256_loadu_ps(c3.as_ptr().add(i))));
+    }
+    let mut tails = [0f32; 4];
+    let cs = [c0, c1, c2, c3];
+    for i in chunks * 8..n {
+        let xi = *x.get_unchecked(i);
+        for (j, cj) in cs.iter().enumerate() {
+            tails[j] += xi * cj.get_unchecked(i);
+        }
+    }
+    let mut out = [0f32; 4];
+    for (j, av) in [a0, a1, a2, a3].into_iter().enumerate() {
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), av);
+        out[j] = reduce_lanes(&lanes) + tails[j];
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2fma(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 8;
+        let av = _mm256_loadu_ps(a.as_ptr().add(i));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc = _mm256_fmadd_ps(av, bv, acc);
+    }
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a.get_unchecked(i) * b.get_unchecked(i);
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot4_avx2fma(
+    x: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [f32; 4] {
+    let n = x.len();
+    let chunks = n / 8;
+    let mut a0 = _mm256_setzero_ps();
+    let mut a1 = _mm256_setzero_ps();
+    let mut a2 = _mm256_setzero_ps();
+    let mut a3 = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 8;
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        a0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(c0.as_ptr().add(i)), a0);
+        a1 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(c1.as_ptr().add(i)), a1);
+        a2 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(c2.as_ptr().add(i)), a2);
+        a3 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(c3.as_ptr().add(i)), a3);
+    }
+    let mut tails = [0f32; 4];
+    let cs = [c0, c1, c2, c3];
+    for i in chunks * 8..n {
+        let xi = *x.get_unchecked(i);
+        for (j, cj) in cs.iter().enumerate() {
+            tails[j] += xi * cj.get_unchecked(i);
+        }
+    }
+    let mut out = [0f32; 4];
+    for (j, av) in [a0, a1, a2, a3].into_iter().enumerate() {
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), av);
+        out[j] = reduce_lanes(&lanes) + tails[j];
+    }
+    out
+}
+
+/// `acc += x` widened to f64, four lanes per step. Elementwise, so
+/// trivially bit-identical to the scalar loop.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_into_avx2(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+        let av = _mm256_loadu_pd(acc.as_ptr().add(i));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_add_pd(av, xv));
+    }
+    for i in chunks * 4..n {
+        *acc.get_unchecked_mut(i) += *x.get_unchecked(i) as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sub_from_avx2(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+        let av = _mm256_loadu_pd(acc.as_ptr().add(i));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_sub_pd(av, xv));
+    }
+    for i in chunks * 4..n {
+        *acc.get_unchecked_mut(i) -= *x.get_unchecked(i) as f64;
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64 baseline): lanes 0..3 and 4..7 in two 128-bit registers.
+// Explicit mul-then-add (vfma would contract and break bit-identity).
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut lo = vdupq_n_f32(0.0);
+    let mut hi = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let i = c * 8;
+        let av0 = vld1q_f32(a.as_ptr().add(i));
+        let bv0 = vld1q_f32(b.as_ptr().add(i));
+        let av1 = vld1q_f32(a.as_ptr().add(i + 4));
+        let bv1 = vld1q_f32(b.as_ptr().add(i + 4));
+        lo = vaddq_f32(lo, vmulq_f32(av0, bv0));
+        hi = vaddq_f32(hi, vmulq_f32(av1, bv1));
+    }
+    let mut lanes = [0f32; 8];
+    vst1q_f32(lanes.as_mut_ptr(), lo);
+    vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a.get_unchecked(i) * b.get_unchecked(i);
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot4_neon(
+    x: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [f32; 4] {
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc = [vdupq_n_f32(0.0); 8]; // [lo0, hi0, lo1, hi1, ...]
+    let cs = [c0, c1, c2, c3];
+    for c in 0..chunks {
+        let i = c * 8;
+        let xv0 = vld1q_f32(x.as_ptr().add(i));
+        let xv1 = vld1q_f32(x.as_ptr().add(i + 4));
+        for (j, cj) in cs.iter().enumerate() {
+            let cv0 = vld1q_f32(cj.as_ptr().add(i));
+            let cv1 = vld1q_f32(cj.as_ptr().add(i + 4));
+            acc[j * 2] = vaddq_f32(acc[j * 2], vmulq_f32(xv0, cv0));
+            acc[j * 2 + 1] = vaddq_f32(acc[j * 2 + 1], vmulq_f32(xv1, cv1));
+        }
+    }
+    let mut out = [0f32; 4];
+    let mut tails = [0f32; 4];
+    for i in chunks * 8..n {
+        let xi = *x.get_unchecked(i);
+        for (j, cj) in cs.iter().enumerate() {
+            tails[j] += xi * cj.get_unchecked(i);
+        }
+    }
+    for j in 0..4 {
+        let mut lanes = [0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc[j * 2]);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc[j * 2 + 1]);
+        out[j] = reduce_lanes(&lanes) + tails[j];
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// per-tier entry points + dispatched wrappers
+// ---------------------------------------------------------------------
+
+/// `⟨a, b⟩` through an explicit tier (tests/benches).
+///
+/// Length equality is checked here with a real assert: the tier kernels
+/// do unchecked SIMD loads, so a mismatch must not reach them in
+/// release builds (one predictable branch, amortised over ≥ 8 lanes).
+#[inline]
+pub fn dot_with(t: Tier, a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    match t {
+        Tier::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { dot_sse2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { dot_avx2fma(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { dot_neon(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Four dots against consecutive centroid rows sharing one pass over
+/// `x`; `dot4_with(t, x, c0..c3)[j]` is bit-identical to
+/// `dot_with(t, x, c_j)` for every non-FMA tier.
+#[inline]
+pub fn dot4_with(
+    t: Tier,
+    x: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [f32; 4] {
+    // real asserts: the tier kernels below do unchecked SIMD loads
+    assert_eq!(x.len(), c0.len(), "dot4: row 0 length mismatch");
+    assert_eq!(x.len(), c1.len(), "dot4: row 1 length mismatch");
+    assert_eq!(x.len(), c2.len(), "dot4: row 2 length mismatch");
+    assert_eq!(x.len(), c3.len(), "dot4: row 3 length mismatch");
+    match t {
+        Tier::Scalar => dot4_scalar(x, c0, c1, c2, c3),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { dot4_sse2(x, c0, c1, c2, c3) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { dot4_avx2(x, c0, c1, c2, c3) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { dot4_avx2fma(x, c0, c1, c2, c3) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { dot4_neon(x, c0, c1, c2, c3) },
+        _ => dot4_scalar(x, c0, c1, c2, c3),
+    }
+}
+
+#[inline]
+pub fn add_into_with(t: Tier, acc: &mut [f64], x: &[f32]) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 | Tier::Avx2Fma => unsafe { add_into_avx2(acc, x) },
+        _ => add_into_scalar(acc, x),
+    }
+}
+
+#[inline]
+pub fn sub_from_with(t: Tier, acc: &mut [f64], x: &[f32]) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 | Tier::Avx2Fma => unsafe { sub_from_avx2(acc, x) },
+        _ => sub_from_scalar(acc, x),
+    }
+}
+
+/// Dot product through the active tier.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(tier(), a, b)
+}
+
+/// ‖a‖² through the active tier.
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f32 {
+    dot_with(tier(), a, a)
+}
+
+/// Four-row block dot through the active tier.
+#[inline]
+pub fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; 4] {
+    dot4_with(tier(), x, c0, c1, c2, c3)
+}
+
+/// `acc += x` with f64 accumulation (sufficient-statistics path).
+#[inline]
+pub fn add_into(acc: &mut [f64], x: &[f32]) {
+    add_into_with(tier(), acc, x)
+}
+
+/// `acc -= x` with f64 accumulation.
+#[inline]
+pub fn sub_from(acc: &mut [f64], x: &[f32]) {
+    sub_from_with(tier(), acc, x)
+}
+
+// ---------------------------------------------------------------------
+// point-blocked assignment micro-kernels
+// ---------------------------------------------------------------------
+
+/// Points handled per block by the assignment hot loop: a 4-centroid
+/// strip (≤ 4·d floats) is re-used from L1 across this many points, so
+/// centroid memory traffic drops by ~this factor versus per-point scans.
+pub const POINT_BLOCK: usize = 8;
+
+/// Nearest centroid for one point through an explicit tier; identical
+/// scan order to [`nearest_block_with`], so blocked and per-point paths
+/// agree bit-for-bit.
+#[inline]
+pub fn nearest_with(
+    t: Tier,
+    x: &[f32],
+    xn: f32,
+    c: &DenseMatrix,
+    cnorms: &[f32],
+) -> (u32, f32) {
+    assert_eq!(x.len(), c.cols, "nearest: dimension mismatch");
+    assert_eq!(c.rows, cnorms.len(), "nearest: norms length mismatch");
+    let k = c.rows;
+    let mut best_j = 0u32;
+    let mut best = f32::INFINITY;
+    let blocks = k / 4;
+    for b in 0..blocks {
+        let j = b * 4;
+        let dots = dot4_with(t, x, c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+        for (o, &dt) in dots.iter().enumerate() {
+            let d2 = (xn + cnorms[j + o] - 2.0 * dt).max(0.0);
+            if d2 < best {
+                best = d2;
+                best_j = (j + o) as u32;
+            }
+        }
+    }
+    for j in blocks * 4..k {
+        let d2 = (xn + cnorms[j] - 2.0 * dot_with(t, x, c.row(j))).max(0.0);
+        if d2 < best {
+            best = d2;
+            best_j = j as u32;
+        }
+    }
+    (best_j, best)
+}
+
+/// Nearest centroid through the active tier.
+#[inline]
+pub fn nearest(x: &[f32], xn: f32, c: &DenseMatrix, cnorms: &[f32]) -> (u32, f32) {
+    nearest_with(tier(), x, xn, c, cnorms)
+}
+
+/// Point-blocked nearest-centroid kernel: `rows` is a block of ≤
+/// [`POINT_BLOCK`] point rows, and the centroid matrix is walked in
+/// strips of four rows with the *point* loop innermost, so each strip
+/// is streamed from memory once per block instead of once per point.
+/// Per-point results are bit-identical to [`nearest_with`] on the same
+/// tier (independent accumulators, same centroid scan order).
+pub fn nearest_block_with(
+    t: Tier,
+    rows: &[&[f32]],
+    xns: &[f32],
+    c: &DenseMatrix,
+    cnorms: &[f32],
+    out_lbl: &mut [u32],
+    out_d2: &mut [f32],
+) {
+    let p = rows.len();
+    assert_eq!(xns.len(), p, "nearest_block: norms length mismatch");
+    assert_eq!(out_lbl.len(), p, "nearest_block: label buffer mismatch");
+    assert_eq!(out_d2.len(), p, "nearest_block: d2 buffer mismatch");
+    assert_eq!(c.rows, cnorms.len(), "nearest_block: centroid norms mismatch");
+    for r in rows {
+        assert_eq!(r.len(), c.cols, "nearest_block: point dimension mismatch");
+    }
+    let k = c.rows;
+    out_lbl.fill(0);
+    out_d2.fill(f32::INFINITY);
+    let blocks = k / 4;
+    for b in 0..blocks {
+        let j = b * 4;
+        let (c0, c1, c2, c3) = (c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+        for ti in 0..p {
+            let dots = dot4_with(t, rows[ti], c0, c1, c2, c3);
+            for (o, &dt) in dots.iter().enumerate() {
+                let d2 = (xns[ti] + cnorms[j + o] - 2.0 * dt).max(0.0);
+                if d2 < out_d2[ti] {
+                    out_d2[ti] = d2;
+                    out_lbl[ti] = (j + o) as u32;
+                }
+            }
+        }
+    }
+    for j in blocks * 4..k {
+        let cj = c.row(j);
+        for ti in 0..p {
+            let d2 = (xns[ti] + cnorms[j] - 2.0 * dot_with(t, rows[ti], cj)).max(0.0);
+            if d2 < out_d2[ti] {
+                out_d2[ti] = d2;
+                out_lbl[ti] = j as u32;
+            }
+        }
+    }
+}
+
+/// Point-blocked full distance rows: `out[t*k + j] = ‖x_t − c_j‖²`
+/// via the norms trick, same centroid-strip tiling as
+/// [`nearest_block_with`]. `out` must hold `rows.len() * k` floats.
+pub fn dist_rows_block_with(
+    t: Tier,
+    rows: &[&[f32]],
+    xns: &[f32],
+    c: &DenseMatrix,
+    cnorms: &[f32],
+    out: &mut [f32],
+) {
+    let p = rows.len();
+    let k = c.rows;
+    assert_eq!(xns.len(), p, "dist_rows_block: norms length mismatch");
+    assert_eq!(out.len(), p * k, "dist_rows_block: output buffer mismatch");
+    assert_eq!(cnorms.len(), k, "dist_rows_block: centroid norms mismatch");
+    for r in rows {
+        assert_eq!(r.len(), c.cols, "dist_rows_block: point dimension mismatch");
+    }
+    let blocks = k / 4;
+    for b in 0..blocks {
+        let j = b * 4;
+        let (c0, c1, c2, c3) = (c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+        for ti in 0..p {
+            let dots = dot4_with(t, rows[ti], c0, c1, c2, c3);
+            let orow = &mut out[ti * k..(ti + 1) * k];
+            for (o, &dt) in dots.iter().enumerate() {
+                orow[j + o] = (xns[ti] + cnorms[j + o] - 2.0 * dt).max(0.0);
+            }
+        }
+    }
+    for j in blocks * 4..k {
+        let cj = c.row(j);
+        for ti in 0..p {
+            out[ti * k + j] =
+                (xns[ti] + cnorms[j] - 2.0 * dot_with(t, rows[ti], cj)).max(0.0);
+        }
+    }
+}
+
+/// [`nearest_block_with`] through the active tier.
+#[inline]
+pub fn nearest_block(
+    rows: &[&[f32]],
+    xns: &[f32],
+    c: &DenseMatrix,
+    cnorms: &[f32],
+    out_lbl: &mut [u32],
+    out_d2: &mut [f32],
+) {
+    nearest_block_with(tier(), rows, xns, c, cnorms, out_lbl, out_d2)
+}
+
+/// [`dist_rows_block_with`] through the active tier.
+#[inline]
+pub fn dist_rows_block(
+    rows: &[&[f32]],
+    xns: &[f32],
+    c: &DenseMatrix,
+    cnorms: &[f32],
+    out: &mut [f32],
+) {
+    dist_rows_block_with(tier(), rows, xns, c, cnorms, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{gen, Cases};
+
+    fn exact_tiers() -> Vec<Tier> {
+        available_tiers()
+            .into_iter()
+            .filter(|&t| t != Tier::Avx2Fma)
+            .collect()
+    }
+
+    #[test]
+    fn scalar_tier_always_available() {
+        let avail = available_tiers();
+        assert!(avail.contains(&Tier::Scalar));
+        assert!(avail.contains(&tier()), "active tier must be executable");
+    }
+
+    #[test]
+    fn detect_honors_overrides() {
+        assert_eq!(detect(Some("scalar"), None), Tier::Scalar);
+        assert_eq!(detect(Some(" SCALAR "), Some("1")), Tier::Scalar);
+        // garbage falls back to auto detection, which must be executable
+        assert!(available_tiers().contains(&detect(Some("not-a-tier"), None)));
+        let auto = detect(None, None);
+        assert!(available_tiers().contains(&auto));
+        assert_ne!(auto, Tier::Avx2Fma, "FMA must stay opt-in");
+        if available_tiers().contains(&Tier::Avx2Fma) {
+            assert_eq!(detect(None, Some("1")), Tier::Avx2Fma);
+            assert_eq!(detect(Some("fma"), None), Tier::Avx2Fma);
+        }
+    }
+
+    #[test]
+    fn dot_bit_identical_across_tiers() {
+        Cases::new(200).run(|rng| {
+            let n = rng.below(300);
+            let a = gen::matrix(rng, 1, n);
+            let b = gen::matrix(rng, 1, n);
+            let reference = dot_scalar(&a, &b);
+            for t in exact_tiers() {
+                let got = dot_with(t, &a, &b);
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "tier {} n={n}: {got} != {reference}",
+                    t.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sq_norm_bit_identical_across_tiers() {
+        Cases::new(100).run(|rng| {
+            let n = rng.below(200);
+            let a = gen::matrix(rng, 1, n);
+            let reference = dot_scalar(&a, &a);
+            for t in exact_tiers() {
+                assert_eq!(dot_with(t, &a, &a).to_bits(), reference.to_bits());
+            }
+            assert_eq!(sq_norm(&a).to_bits(), dot(&a, &a).to_bits());
+        });
+    }
+
+    #[test]
+    fn dot4_matches_naive_dots() {
+        // satellite: dot4 property-tested directly against naive dots
+        Cases::new(150).run(|rng| {
+            let n = rng.below(260);
+            let x = gen::matrix(rng, 1, n);
+            let c = gen::matrix(rng, 4, n);
+            let rows: Vec<&[f32]> = (0..4).map(|j| &c[j * n..(j + 1) * n]).collect();
+            let naive: Vec<f32> = rows
+                .iter()
+                .map(|r| r.iter().zip(&x).map(|(a, b)| a * b).sum())
+                .collect();
+            let got = dot4(&x, rows[0], rows[1], rows[2], rows[3]);
+            for j in 0..4 {
+                assert!(
+                    (got[j] - naive[j]).abs() <= 1e-3 * (1.0 + naive[j].abs()),
+                    "n={n} lane {j}: {} vs naive {}",
+                    got[j],
+                    naive[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn dot4_lanes_bit_identical_to_dot_per_tier() {
+        // the invariant the engine-parity guarantees rest on:
+        // dot4(x, c0..c3)[j] == dot(x, c_j) bitwise on every exact tier
+        Cases::new(150).run(|rng| {
+            let n = rng.below(260);
+            let x = gen::matrix(rng, 1, n);
+            let c = gen::matrix(rng, 4, n);
+            let rows: Vec<&[f32]> = (0..4).map(|j| &c[j * n..(j + 1) * n]).collect();
+            for t in exact_tiers() {
+                let block = dot4_with(t, &x, rows[0], rows[1], rows[2], rows[3]);
+                for j in 0..4 {
+                    assert_eq!(
+                        block[j].to_bits(),
+                        dot_with(t, &x, rows[j]).to_bits(),
+                        "tier {} lane {j} n={n}",
+                        t.name()
+                    );
+                }
+                // and every tier agrees with the scalar reference
+                for j in 0..4 {
+                    assert_eq!(
+                        block[j].to_bits(),
+                        dot_scalar(&x, rows[j]).to_bits(),
+                        "tier {} vs scalar, lane {j} n={n}",
+                        t.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fma_tier_close_to_scalar() {
+        if !available_tiers().contains(&Tier::Avx2Fma) {
+            return;
+        }
+        Cases::new(80).run(|rng| {
+            let n = rng.below(300);
+            let a = gen::matrix(rng, 1, n);
+            let b = gen::matrix(rng, 1, n);
+            let sc = dot_scalar(&a, &b);
+            let fm = dot_with(Tier::Avx2Fma, &a, &b);
+            let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            assert!(
+                (sc - fm).abs() <= 1e-4 * (1.0 + mag),
+                "n={n}: scalar {sc} vs fma {fm}"
+            );
+        });
+    }
+
+    #[test]
+    fn add_sub_bit_identical_across_tiers() {
+        Cases::new(100).run(|rng| {
+            let n = rng.below(150);
+            let x = gen::matrix(rng, 1, n);
+            let init: Vec<f64> = (0..n).map(|i| (i as f64) * 0.25 - 3.0).collect();
+            let mut reference = init.clone();
+            add_into_scalar(&mut reference, &x);
+            for t in available_tiers() {
+                let mut acc = init.clone();
+                add_into_with(t, &mut acc, &x);
+                assert_eq!(acc, reference, "add tier {}", t.name());
+                sub_from_with(t, &mut acc, &x);
+                assert_eq!(acc, init, "sub tier {}", t.name());
+            }
+        });
+    }
+
+    #[test]
+    fn nearest_block_bit_identical_to_per_point_scalar() {
+        Cases::new(80).run(|rng| {
+            let (_, d, k) = gen::shape(rng, 1, 60, 14);
+            let p = rng.below(POINT_BLOCK) + 1;
+            let c = DenseMatrix::from_vec(k, d, gen::matrix(rng, k, d));
+            let cn = c.row_sq_norms();
+            let xs = gen::matrix(rng, p, d);
+            let rows: Vec<&[f32]> = (0..p).map(|i| &xs[i * d..(i + 1) * d]).collect();
+            let xns: Vec<f32> = rows.iter().map(|r| dot_scalar(r, r)).collect();
+            let mut ref_lbl = vec![0u32; p];
+            let mut ref_d2 = vec![0f32; p];
+            for i in 0..p {
+                let (j, d2) = nearest_with(Tier::Scalar, rows[i], xns[i], &c, &cn);
+                ref_lbl[i] = j;
+                ref_d2[i] = d2;
+            }
+            for t in exact_tiers() {
+                let mut lbl = vec![9u32; p];
+                let mut d2 = vec![0f32; p];
+                nearest_block_with(t, &rows, &xns, &c, &cn, &mut lbl, &mut d2);
+                assert_eq!(lbl, ref_lbl, "labels, tier {}", t.name());
+                for i in 0..p {
+                    assert_eq!(
+                        d2[i].to_bits(),
+                        ref_d2[i].to_bits(),
+                        "d2[{i}], tier {}",
+                        t.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dist_rows_block_matches_norms_formula() {
+        Cases::new(60).run(|rng| {
+            let (_, d, k) = gen::shape(rng, 1, 50, 11);
+            let p = rng.below(POINT_BLOCK) + 1;
+            let c = DenseMatrix::from_vec(k, d, gen::matrix(rng, k, d));
+            let cn = c.row_sq_norms();
+            let xs = gen::matrix(rng, p, d);
+            let rows: Vec<&[f32]> = (0..p).map(|i| &xs[i * d..(i + 1) * d]).collect();
+            let xns: Vec<f32> = rows.iter().map(|r| dot_scalar(r, r)).collect();
+            for t in exact_tiers() {
+                let mut out = vec![0f32; p * k];
+                dist_rows_block_with(t, &rows, &xns, &c, &cn, &mut out);
+                for i in 0..p {
+                    for j in 0..k {
+                        let e = (xns[i] + cn[j]
+                            - 2.0 * dot_scalar(rows[i], c.row(j)))
+                        .max(0.0);
+                        assert_eq!(
+                            out[i * k + j].to_bits(),
+                            e.to_bits(),
+                            "({i},{j}) tier {}",
+                            t.name()
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        for t in available_tiers() {
+            assert_eq!(dot_with(t, &[], &[]), 0.0);
+            assert_eq!(dot4_with(t, &[], &[], &[], &[]), [0.0; 4]);
+        }
+    }
+}
