@@ -122,7 +122,7 @@ fn main() {
     // --- engine assignment throughput -------------------------------------
     let data = InfMnist::default().generate(20_000, 1);
     let cent = init::first_k(&data, 50);
-    let eng = NativeEngine;
+    let eng = NativeEngine::default();
     let mut lbl = vec![0u32; data.n()];
     let mut d2 = vec![0f32; data.n()];
     let mut set = BenchSet::new("assign dense 20k x 784, k=50", opts);

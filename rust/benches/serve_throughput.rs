@@ -1,0 +1,188 @@
+//! Serve-layer throughput: predict QPS at 1 vs 4 concurrent TCP
+//! connections **while the model trains**. The multi-connection server
+//! answers predicts from published snapshots without touching the
+//! session lock, so throughput should scale with connections instead of
+//! serialising behind training rounds (`BENCH_serve.json`; CI runs
+//! `--smoke` as a scaling sanity check, not a precision measurement).
+//!
+//! Usage: cargo bench --bench serve_throughput -- [--quick|--smoke]
+//!        [--json BENCH_serve.json]
+
+use nmbkm::bench::{BenchOpts, BenchReport, BenchSet};
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::coordinator::Pool;
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::data::Data;
+use nmbkm::serve::{session, ModelRegistry};
+use nmbkm::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+struct Scale {
+    n_points: usize,
+    k: usize,
+    dim: usize,
+    predicts_per_conn: usize,
+    query_batch: usize,
+}
+
+fn scale_for(opts: &BenchOpts) -> Scale {
+    if opts.samples <= 1 {
+        // CI smoke: prove the concurrent path works, in milliseconds
+        Scale { n_points: 2000, k: 10, dim: 16, predicts_per_conn: 30, query_batch: 8 }
+    } else {
+        Scale { n_points: 20000, k: 50, dim: 32, predicts_per_conn: 300, query_batch: 16 }
+    }
+}
+
+fn cfg(k: usize) -> RunConfig {
+    RunConfig {
+        algo: Algo::TbRho,
+        k,
+        b0: 1024,
+        rho: Rho::Infinite,
+        threads: Pool::auto().threads.min(4),
+        seed: 11,
+        max_rounds: usize::MAX,
+        max_seconds: f64::INFINITY,
+        stop_on_convergence: false,
+        ..Default::default()
+    }
+}
+
+fn points_json(rows: &[Vec<f32>]) -> String {
+    let coords: Vec<String> = rows
+        .iter()
+        .map(|q| {
+            let xs: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    format!("[{}]", coords.join(","))
+}
+
+fn roundtrip(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
+    conn.write_all(req.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap()
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+/// One trial: serve a training model over TCP; `conns` client threads
+/// each complete `predicts_per_conn` predict requests while a driver
+/// connection keeps issuing training steps. Returns when every client
+/// finished (the timed region).
+fn run_trial(data: &Data, scale: &Scale, conns: usize) {
+    let queries: Vec<Vec<f32>> = {
+        let mut out = Vec::with_capacity(scale.query_batch);
+        let mut row = vec![0f32; data.dim()];
+        for i in 0..scale.query_batch {
+            data.write_row_dense(i * 7 % data.n(), &mut row);
+            out.push(row.clone());
+        }
+        out
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let served = session::OnlineSession::from_data(data.clone(), cfg(scale.k))
+        .expect("session");
+    let reg = Arc::new(ModelRegistry::with_default(served));
+    let server = std::thread::spawn(move || {
+        nmbkm::serve::server::serve_listener(reg, listener).unwrap();
+    });
+
+    // training pressure: keep stepping until the clients are done
+    let stop = Arc::new(AtomicBool::new(false));
+    let trainer_stop = stop.clone();
+    let trainer = std::thread::spawn(move || {
+        let (mut conn, mut reader) = connect(addr);
+        while !trainer_stop.load(Ordering::SeqCst) {
+            let resp = roundtrip(
+                &mut conn,
+                &mut reader,
+                r#"{"op":"step","rounds":1}"#,
+            );
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        }
+        (conn, reader)
+    });
+
+    let req = format!("{{\"op\":\"predict\",\"points\":{}}}", points_json(&queries));
+    let per_conn = scale.predicts_per_conn;
+    let mut clients = Vec::new();
+    for _ in 0..conns {
+        let req = req.clone();
+        clients.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            for _ in 0..per_conn {
+                let resp = roundtrip(&mut conn, &mut reader, &req);
+                assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    let (mut conn, mut reader) = trainer.join().unwrap();
+    roundtrip(&mut conn, &mut reader, r#"{"op":"shutdown"}"#);
+    server.join().unwrap();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = BenchOpts::from_env_or_args(&args);
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|p| args.get(p + 1).cloned());
+    let scale = scale_for(&opts);
+    let data = GaussianMixture::default_spec(scale.k, scale.dim)
+        .generate(scale.n_points, 7);
+
+    let mut report = BenchReport::new("serve_throughput");
+    report.meta("threads", json::num(Pool::auto().threads as f64));
+    report.meta("n_points", json::num(scale.n_points as f64));
+    report.meta("k", json::num(scale.k as f64));
+    report.meta("dim", json::num(scale.dim as f64));
+    report.meta(
+        "predicts_per_conn",
+        json::num(scale.predicts_per_conn as f64),
+    );
+
+    let mut set = BenchSet::new("predict_during_training", opts);
+    for conns in [1usize, 4] {
+        set.bench(&format!("conns{conns}"), || {
+            run_trial(&data, &scale, conns)
+        });
+    }
+    // derived: aggregate QPS at each arity, and the scaling ratio the
+    // reader/writer split buys (4 conns do 4x the work; perfect scaling
+    // keeps wall time flat → ratio ≈ 4)
+    let t1 = set.get("conns1").map(|m| m.median_secs()).unwrap_or(f64::NAN);
+    let t4 = set.get("conns4").map(|m| m.median_secs()).unwrap_or(f64::NAN);
+    let total1 = scale.predicts_per_conn as f64;
+    let total4 = 4.0 * scale.predicts_per_conn as f64;
+    report.meta("qps_conns1", json::num(total1 / t1));
+    report.meta("qps_conns4", json::num(total4 / t4));
+    report.meta("scaling_x", json::num((total4 / t4) / (total1 / t1)));
+    println!(
+        "predict throughput during training: {:.0} qps @1 conn, {:.0} qps @4 conns ({:.2}x)",
+        total1 / t1,
+        total4 / t4,
+        (total4 / t4) / (total1 / t1)
+    );
+    report.push(set);
+    if let Some(path) = json_path {
+        report.write(&path).expect("writing bench report");
+    }
+}

@@ -9,7 +9,7 @@
 
 use nmbkm::config::{Algo, Rho, RunConfig};
 use nmbkm::data::gaussian::GaussianMixture;
-use nmbkm::serve::{protocol, session, Snapshot};
+use nmbkm::serve::{protocol, session, ModelRegistry, Snapshot};
 
 fn rows_of(data: &nmbkm::data::Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
     let mut out = Vec::with_capacity(hi - lo);
@@ -89,7 +89,10 @@ fn main() -> anyhow::Result<()> {
     }
     points.push(']');
     let request = format!("{{\"op\":\"predict\",\"points\":{points}}}");
-    let (response, _) = protocol::handle_line(&mut server, &request);
+    // requests route through the model registry; a bare session becomes
+    // the implicit "default" model
+    let registry = ModelRegistry::with_default(server);
+    let (response, _) = protocol::handle_line(&registry, &request);
     println!("predict request : {request}");
     println!("predict response: {}", response.to_string());
 

@@ -207,6 +207,107 @@ impl BenchReport {
     }
 }
 
+/// One `(set, measurement)` pair present in both of two serialised
+/// bench reports — the unit of the CI trend check.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrendRow {
+    pub set: String,
+    pub name: String,
+    pub base_median_s: f64,
+    pub cur_median_s: f64,
+    /// Sample count behind the baseline median. Single-sample medians
+    /// (smoke runs) carry too much noise to gate on — callers should
+    /// treat those rows as informational.
+    pub base_samples: usize,
+}
+
+impl TrendRow {
+    /// `current / baseline` median ratio (> 1 means slower).
+    pub fn ratio(&self) -> f64 {
+        if self.base_median_s <= 0.0 {
+            // degenerate baselines (zero-duration smoke samples) carry
+            // no signal; report parity instead of inf
+            return 1.0;
+        }
+        self.cur_median_s / self.base_median_s
+    }
+
+    /// Whether the baseline has enough samples for its median to be a
+    /// regression gate rather than a single noisy timing.
+    pub fn gateable(&self) -> bool {
+        self.base_samples >= 2
+    }
+}
+
+/// Pair up the measurements two serialised [`BenchReport`] documents
+/// share, by `(set title, measurement name)`. Measurements present in
+/// only one report are skipped — bench sets come and go across commits
+/// and their appearance is not a regression. Errors only on documents
+/// that are not bench reports at all.
+pub fn compare_reports(
+    baseline: &Json,
+    current: &Json,
+) -> Result<Vec<TrendRow>, String> {
+    let base = report_medians(baseline, "baseline")?;
+    let cur = report_medians(current, "current")?;
+    let mut rows = Vec::new();
+    for (key, (base_median, base_samples)) in &base {
+        if let Some((cur_median, _)) = cur.get(key) {
+            rows.push(TrendRow {
+                set: key.0.clone(),
+                name: key.1.clone(),
+                base_median_s: *base_median,
+                cur_median_s: *cur_median,
+                base_samples: *base_samples,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// `(set title, measurement name) → (median_s, sample count)` of one
+/// serialised report.
+#[allow(clippy::type_complexity)]
+fn report_medians(
+    doc: &Json,
+    tag: &str,
+) -> Result<std::collections::BTreeMap<(String, String), (f64, usize)>, String> {
+    let sets = doc
+        .get("sets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{tag}: not a bench report (no 'sets' array)"))?;
+    let mut out = std::collections::BTreeMap::new();
+    for set in sets {
+        let title = set
+            .get("title")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{tag}: set without a 'title'"))?;
+        let results = set
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{tag}: set '{title}' has no 'results'"))?;
+        for m in results {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{tag}: measurement without 'name'"))?;
+            let median = m
+                .get("median_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| {
+                    format!("{tag}: '{title}/{name}' has no numeric median_s")
+                })?;
+            let samples = m
+                .get("samples_s")
+                .and_then(Json::as_arr)
+                .map(|a| a.len())
+                .unwrap_or(1);
+            out.insert((title.to_string(), name.to_string()), (median, samples));
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,5 +379,72 @@ mod tests {
         let mut set = BenchSet::new("t", BenchOpts::quick());
         set.record("runtime", 1.25);
         assert_eq!(set.get("runtime").unwrap().median_secs(), 1.25);
+    }
+
+    fn report_doc(pairs: &[(&str, &str, f64)]) -> Json {
+        let mut report = BenchReport::new("trend_test");
+        let mut titles: Vec<&str> = pairs.iter().map(|(s, _, _)| *s).collect();
+        titles.dedup();
+        for title in titles {
+            let mut set = BenchSet::new(title, BenchOpts::smoke());
+            for (s, name, median) in pairs {
+                if s == &title {
+                    set.record(name, *median);
+                }
+            }
+            report.push(set);
+        }
+        Json::parse(&report.to_json().to_string()).unwrap()
+    }
+
+    #[test]
+    fn trend_compare_pairs_shared_measurements() {
+        let base = report_doc(&[
+            ("kernels", "dot", 1.0),
+            ("kernels", "dot4", 2.0),
+            ("gone", "old", 9.0),
+        ]);
+        let cur = report_doc(&[
+            ("kernels", "dot", 1.1),
+            ("kernels", "dot4", 1.0),
+            ("fresh", "new", 5.0),
+        ]);
+        let rows = compare_reports(&base, &cur).unwrap();
+        assert_eq!(rows.len(), 2, "only shared measurements compare");
+        let dot = rows.iter().find(|r| r.name == "dot").unwrap();
+        assert!((dot.ratio() - 1.1).abs() < 1e-9);
+        let dot4 = rows.iter().find(|r| r.name == "dot4").unwrap();
+        assert!((dot4.ratio() - 0.5).abs() < 1e-9);
+        // a 10% slowdown trips a 5% gate but not a 20% gate
+        assert!(dot.ratio() > 1.05);
+        assert!(dot.ratio() <= 1.20);
+        // single-sample (record/smoke) baselines are not gateable
+        assert_eq!(dot.base_samples, 1);
+        assert!(!dot.gateable());
+    }
+
+    #[test]
+    fn trend_gateable_requires_multi_sample_baseline() {
+        let mut set = BenchSet::new("kernels", BenchOpts { warmup: 0, samples: 3 });
+        set.bench("dot", || 1 + 1);
+        let mut report = BenchReport::new("trend_test");
+        report.push(set);
+        let multi = Json::parse(&report.to_json().to_string()).unwrap();
+        let rows = compare_reports(&multi, &multi).unwrap();
+        assert_eq!(rows[0].base_samples, 3);
+        assert!(rows[0].gateable());
+        assert_eq!(rows[0].ratio(), 1.0);
+    }
+
+    #[test]
+    fn trend_compare_rejects_non_reports() {
+        let bad = Json::parse(r#"{"hello":1}"#).unwrap();
+        let good = report_doc(&[("a", "b", 1.0)]);
+        assert!(compare_reports(&bad, &good).is_err());
+        assert!(compare_reports(&good, &bad).is_err());
+        // zero-baseline medians report parity, not infinity
+        let zero = report_doc(&[("a", "b", 0.0)]);
+        let rows = compare_reports(&zero, &good).unwrap();
+        assert_eq!(rows[0].ratio(), 1.0);
     }
 }

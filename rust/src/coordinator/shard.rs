@@ -17,6 +17,16 @@
 //! threads of compute, and chunk claims are index-ordered atomics while
 //! results land in per-chunk slots — chunk-ordered, deterministic output
 //! is preserved exactly.
+//!
+//! The queue holds *many* in-flight jobs: concurrent submitters (several
+//! serving sessions, predict handlers racing a training step) each push
+//! their own job and drain it themselves, while parked workers pick up
+//! whichever queued job still has unclaimed chunks. A previous revision
+//! kept a single job slot, which serialised concurrent submitters behind
+//! each other; multi-model serving made that the bottleneck. Per-job
+//! results still land in that job's own per-chunk slots and panics are
+//! flagged per job, so chunk-ordered determinism and panic propagation
+//! are unchanged by the concurrency.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -62,10 +72,10 @@ unsafe impl Sync for Job {}
 
 #[derive(Default)]
 struct PoolState {
-    job: Option<Arc<Job>>,
-    /// Bumped per submission so parked workers can tell a fresh job from
-    /// one they already drained.
-    epoch: u64,
+    /// Jobs with possibly-unclaimed chunks, oldest first. A job stays
+    /// queued until its submitter observes completion and removes it;
+    /// workers skip fully-claimed entries (`next >= total`).
+    jobs: Vec<Arc<Job>>,
     shutdown: bool,
 }
 
@@ -115,7 +125,6 @@ fn drain_job(job: &Job) {
 }
 
 fn worker_loop(shared: Arc<Shared>) {
-    let mut seen_epoch = 0u64;
     loop {
         let job = {
             let mut st = shared.state.lock().unwrap();
@@ -123,13 +132,15 @@ fn worker_loop(shared: Arc<Shared>) {
                 if st.shutdown {
                     return;
                 }
-                if st.epoch != seen_epoch {
-                    seen_epoch = st.epoch;
-                    if let Some(j) = st.job.clone() {
-                        break j;
-                    }
-                    // epoch advanced but the job already completed and
-                    // was cleared — keep waiting
+                // oldest job with unclaimed chunks; fully-claimed jobs
+                // stay queued (their submitter removes them) but offer
+                // no work, so skip them
+                if let Some(j) = st
+                    .jobs
+                    .iter()
+                    .find(|j| j.next.load(Ordering::Relaxed) < j.total)
+                {
+                    break j.clone();
                 }
                 st = shared.work_cv.wait(st).unwrap();
             }
@@ -161,15 +172,14 @@ impl PoolCore {
             done_cv: Condvar::new(),
             panicked: AtomicBool::new(false),
         });
-        let my_epoch;
         {
             let mut st = self.shared.state.lock().unwrap();
-            st.epoch = st.epoch.wrapping_add(1);
-            my_epoch = st.epoch;
-            st.job = Some(job.clone());
+            st.jobs.push(job.clone());
         }
         self.shared.work_cv.notify_all();
-        // the submitting thread is the pool's final compute thread
+        // the submitting thread drains *its own* job only — it never
+        // picks up another submitter's chunks, so a fast caller is not
+        // held hostage by a slow concurrent one
         drain_job(&job);
         {
             let mut d = job.done.lock().unwrap();
@@ -179,8 +189,11 @@ impl PoolCore {
         }
         {
             let mut st = self.shared.state.lock().unwrap();
-            if st.epoch == my_epoch {
-                st.job = None;
+            if let Some(pos) =
+                st.jobs.iter().position(|j| Arc::ptr_eq(j, &job))
+            {
+                // keep FIFO order so workers always scan oldest-first
+                st.jobs.remove(pos);
             }
         }
         if job.panicked.load(Ordering::Relaxed) {
@@ -247,9 +260,11 @@ impl Pool {
     /// worker writes a disjoint output region without locks.
     ///
     /// Concurrent `run_jobs` calls on clones of one pool from different
-    /// threads are safe (each submission completes all of its own
-    /// chunks) but serialise the workers; keep one pool per concurrent
-    /// driver for full throughput.
+    /// threads are safe *and* interleave: every submission is queued as
+    /// its own job, each submitter drains only its own chunks, and
+    /// parked workers pull from whichever queued job still has work.
+    /// Results, ordering and panic propagation are per-job, exactly as
+    /// in the serial case.
     pub fn run_jobs<T, R, F>(&self, jobs: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
@@ -505,6 +520,65 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn concurrent_submitters_interleave_and_stay_ordered() {
+        // multi-model serving: several sessions submit to one pool at
+        // once; every submission must come back complete, chunk-ordered
+        // and correct, no matter how the workers interleave the jobs
+        let pool = Pool::new(4);
+        let mut handles = Vec::new();
+        for s in 0..6usize {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..200usize {
+                    let n = 37 + (s * 13 + round) % 91;
+                    let v = p.run_chunks(n, 1, |i, r| {
+                        (i, r.map(|x| x as u64 + s as u64).sum::<u64>())
+                    });
+                    let expect: u64 =
+                        (0..n as u64).sum::<u64>() + (n * s) as u64;
+                    let total: u64 = v.iter().map(|(_, t)| t).sum();
+                    assert_eq!(total, expect, "submitter {s} round {round}");
+                    for (idx, (i, _)) in v.iter().enumerate() {
+                        assert_eq!(idx, *i, "submitter {s} round {round}");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panic_in_one_submitter_leaves_others_intact() {
+        let pool = Pool::new(4);
+        let ok_pool = pool.clone();
+        let ok = std::thread::spawn(move || {
+            for _ in 0..300usize {
+                let v = ok_pool.run_chunks(128, 1, |i, _| i);
+                assert_eq!(v, (0..v.len()).collect::<Vec<_>>());
+            }
+        });
+        let bad_pool = pool.clone();
+        let bad = std::thread::spawn(move || {
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                bad_pool.run_chunks(64, 1, |i, _| {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                    i
+                });
+            }));
+            assert!(caught.is_err(), "panic must reach the submitter");
+        });
+        bad.join().unwrap();
+        ok.join().unwrap();
+        // the pool is still serviceable after a job panicked
+        let v = pool.run_chunks(32, 1, |i, _| i * 2);
+        assert_eq!(v.iter().sum::<usize>(), (0..32).map(|i| i * 2).sum());
     }
 
     #[test]

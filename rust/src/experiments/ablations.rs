@@ -50,9 +50,10 @@ pub fn growth_policy_study(ds: &Dataset, opts: &ExpOpts) -> Vec<GrowthRow> {
                 false,
             )
             .with_policy(policy);
+            let engine = crate::kmeans::assign::NativeEngine::default();
             let mut ctx = Ctx {
                 data: &data,
-                engine: &crate::kmeans::assign::NativeEngine,
+                engine: &engine,
                 pool: crate::coordinator::Pool::new(opts.threads),
                 rng: crate::util::rng::Pcg64::new(seed, 0xAB1A),
             };

@@ -276,7 +276,7 @@ mod tests {
         };
         let grid = time_grid(0.02, 0.5, 8);
         let (curve, outs) =
-            multi_seed_curve(&ds, &base, &opts, &NativeEngine, &grid).unwrap();
+            multi_seed_curve(&ds, &base, &opts, &NativeEngine::default(), &grid).unwrap();
         assert_eq!(outs.len(), 2);
         assert_eq!(curve.mean.len(), 8);
         assert!(curve.best_final.is_finite());

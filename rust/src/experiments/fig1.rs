@@ -50,9 +50,9 @@ pub fn run_dataset(
 
 /// Full Figure-1 experiment: both datasets, CSV per dataset.
 pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
-    let engine: Box<dyn AssignEngine> = match opts.engine {
+    let engine: Box<dyn AssignEngine + Send> = match opts.engine {
         crate::config::Engine::Native => {
-            Box::new(crate::kmeans::assign::NativeEngine)
+            Box::new(crate::kmeans::assign::NativeEngine::default())
         }
         crate::config::Engine::Xla => crate::runtime::make_engine("artifacts")?,
     };

@@ -56,9 +56,9 @@ pub fn run_dataset(
 
 /// `figure` is 2 (infmnist) or 3 (rcv1).
 pub fn run(figure: u8, opts: &ExpOpts) -> anyhow::Result<()> {
-    let engine: Box<dyn AssignEngine> = match opts.engine {
+    let engine: Box<dyn AssignEngine + Send> = match opts.engine {
         crate::config::Engine::Native => {
-            Box::new(crate::kmeans::assign::NativeEngine)
+            Box::new(crate::kmeans::assign::NativeEngine::default())
         }
         crate::config::Engine::Xla => crate::runtime::make_engine("artifacts")?,
     };

@@ -56,8 +56,8 @@ pub struct Row {
 
 pub fn run(opts: &ExpOpts) -> anyhow::Result<Vec<Row>> {
     let b = common::default_b0(opts.scale) * 2;
-    let native = crate::kmeans::assign::NativeEngine;
-    let xla: Option<Box<dyn crate::kmeans::assign::AssignEngine>> =
+    let native = crate::kmeans::assign::NativeEngine::default();
+    let xla: Option<Box<dyn crate::kmeans::assign::AssignEngine + Send>> =
         crate::runtime::make_engine("artifacts").ok();
     let mut rows = Vec::new();
     for ds in [common::infmnist(opts.scale), common::rcv1(opts.scale)] {
@@ -135,7 +135,7 @@ mod tests {
     #[test]
     fn epoch_timing_positive_and_formulations_run() {
         let ds = common::gaussian_small();
-        let native = crate::kmeans::assign::NativeEngine;
+        let native = crate::kmeans::assign::NativeEngine::default();
         let s8 = time_epoch(&ds, Formulation::Alg8, &native, 2, 512);
         let s1 = time_epoch(&ds, Formulation::Alg1, &native, 2, 512);
         assert!(s8 > 0.0 && s1 > 0.0);

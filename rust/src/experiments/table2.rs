@@ -54,9 +54,9 @@ fn run_cell(
 }
 
 pub fn run(opts: &ExpOpts) -> anyhow::Result<Vec<Cell>> {
-    let engine: Box<dyn AssignEngine> = match opts.engine {
+    let engine: Box<dyn AssignEngine + Send> = match opts.engine {
         crate::config::Engine::Native => {
-            Box::new(crate::kmeans::assign::NativeEngine)
+            Box::new(crate::kmeans::assign::NativeEngine::default())
         }
         crate::config::Engine::Xla => crate::runtime::make_engine("artifacts")?,
     };

@@ -21,6 +21,7 @@ use crate::data::{Data, Storage};
 use crate::kmeans::state::Centroids;
 use crate::linalg::simd;
 use crate::linalg::sparse::{self, TransposedCentroids};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A selection of datapoint indices to (re)assign.
@@ -97,11 +98,31 @@ pub trait AssignEngine {
     }
 
     fn name(&self) -> &'static str;
+
+    /// `(hits, builds)` of the engine's transpose cache, when it has
+    /// one (observability: serving sessions report these in `stats`).
+    fn trans_cache_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
-/// Pure-rust engine; the correctness reference.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct NativeEngine;
+/// Pure-rust engine; the correctness reference. Each instance owns its
+/// own [`TransCache`], so independent sessions (one engine per
+/// [`crate::serve::OnlineSession`]) never evict each other's transposed
+/// centroid block — the process-global single slot a previous revision
+/// used was correct but thrashed as soon as two sparse models trained
+/// concurrently.
+#[derive(Clone, Debug, Default)]
+pub struct NativeEngine {
+    cache: Arc<TransCache>,
+}
+
+impl NativeEngine {
+    /// The engine's transpose cache (tests and cache-sharing callers).
+    pub fn cache(&self) -> &TransCache {
+        &self.cache
+    }
+}
 
 /// Don't fan out to threads for selections smaller than this
 /// (per-item work is one k-way nearest scan).
@@ -137,7 +158,7 @@ impl AssignEngine for NativeEngine {
         let k = centroids.k() as u64;
         // sparse fast path: transposed centroids turn per-nnz gathers
         // into sequential k-length AXPYs (EXPERIMENTS.md §Perf, ~2x)
-        let trans = transposed_for(data, centroids, n);
+        let trans = transposed_for(&self.cache, data, centroids, n);
         let trans = trans.as_deref();
         pool.run_jobs(jobs, |_, (r, (vl, vd))| {
             assign_serial(data, &sel, r, centroids, trans, vl, vd);
@@ -171,7 +192,7 @@ impl AssignEngine for NativeEngine {
             }
         }
         let jobs: Vec<_> = ranges.into_iter().zip(views).collect();
-        let trans = transposed_for(data, centroids, n);
+        let trans = transposed_for(&self.cache, data, centroids, n);
         let trans = trans.as_deref();
         pool.run_jobs(jobs, |_, (r, out)| {
             dist_rows_serial(data, &sel, r, centroids, trans, out);
@@ -182,14 +203,52 @@ impl AssignEngine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    fn trans_cache_stats(&self) -> Option<(u64, u64)> {
+        Some((self.cache.hits(), self.cache.builds()))
+    }
 }
 
-/// Single-slot transpose cache keyed on [`Centroids::rev`]: within a
+/// Per-engine transpose cache keyed on [`Centroids::rev`]: within a
 /// round, `assign`, `dist_rows` and validation scoring all see the same
 /// centroid revision, so the O(k·d) transpose is built once instead of
-/// once per engine call.
-static TRANS_CACHE: Mutex<Option<(u64, Arc<TransposedCentroids>)>> =
-    Mutex::new(None);
+/// once per engine call. One cache per [`NativeEngine`] (hence per
+/// session) keeps concurrently-training sparse models from evicting
+/// each other. Hit/build counters are plain observability — they never
+/// influence results.
+#[derive(Debug, Default)]
+pub struct TransCache {
+    slot: Mutex<Option<(u64, Arc<TransposedCentroids>)>>,
+    hits: AtomicU64,
+    builds: AtomicU64,
+}
+
+impl TransCache {
+    /// Revision-matched transposes served without a rebuild.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// O(k·d) transpose constructions (cache misses).
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Fetch the transpose for this centroid revision, building (and
+    /// caching) it on a miss. The build runs outside the slot lock so a
+    /// large transpose never serialises concurrent readers of the slot.
+    pub fn fetch(&self, centroids: &Centroids) -> Arc<TransposedCentroids> {
+        if let Some(tc) = cache_lookup(&self.slot.lock().unwrap(), centroids)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return tc;
+        }
+        let tc = Arc::new(TransposedCentroids::build(&centroids.c));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        *self.slot.lock().unwrap() = Some((centroids.rev, tc.clone()));
+        tc
+    }
+}
 
 /// Revision-matched cache hit, or `None`.
 fn cache_lookup(
@@ -208,24 +267,11 @@ fn cache_lookup(
     }
 }
 
-/// Cache-or-build core, factored out of the global slot so the keying
-/// logic is testable without cross-test interference.
-fn cached_transpose(
-    slot: &mut Option<(u64, Arc<TransposedCentroids>)>,
-    centroids: &Centroids,
-) -> Arc<TransposedCentroids> {
-    if let Some(tc) = cache_lookup(slot, centroids) {
-        return tc;
-    }
-    let tc = Arc::new(TransposedCentroids::build(&centroids.c));
-    *slot = Some((centroids.rev, tc.clone()));
-    tc
-}
-
 /// Build (or fetch) the transposed centroid block when it pays: sparse
 /// data, k large enough to amortise, selection big enough to amortise
 /// the O(k·d) transpose, and a bounded memory footprint.
 fn transposed_for(
+    cache: &TransCache,
     data: &Data,
     centroids: &Centroids,
     n_points: usize,
@@ -234,18 +280,12 @@ fn transposed_for(
     if !data.is_sparse()
         || centroids.k() < 8
         || n_points < 64
-        || centroids.k() * centroids.d() * 4 > MAX_BYTES
+        || TransposedCentroids::bytes_for(centroids.k(), centroids.d())
+            > MAX_BYTES
     {
         return None;
     }
-    if let Some(tc) = cache_lookup(&TRANS_CACHE.lock().unwrap(), centroids) {
-        return Some(tc);
-    }
-    // build outside the lock: the O(k·d) transpose must not serialise
-    // unrelated concurrent sessions behind the process-global slot
-    let tc = Arc::new(TransposedCentroids::build(&centroids.c));
-    *TRANS_CACHE.lock().unwrap() = Some((centroids.rev, tc.clone()));
-    Some(tc)
+    Some(cache.fetch(centroids))
 }
 
 fn assign_serial(
@@ -411,7 +451,7 @@ mod tests {
             let data = GaussianMixture::default_spec(k, 8)
                 .generate(n, rng.next_u64());
             let cent = init::first_k(&data, k);
-            let eng = NativeEngine;
+            let eng = NativeEngine::default();
             let mut l1 = vec![0u32; n];
             let mut d1 = vec![0f32; n];
             let calcs = eng.assign(
@@ -442,7 +482,7 @@ mod tests {
     fn list_selection_matches_range() {
         let data = GaussianMixture::default_spec(3, 5).generate(50, 7);
         let cent = init::first_k(&data, 3);
-        let eng = NativeEngine;
+        let eng = NativeEngine::default();
         let pool = Pool::new(2);
         let idx: Vec<usize> = (10..30).collect();
         let mut ll = vec![0u32; 20];
@@ -459,7 +499,7 @@ mod tests {
     fn score_equals_sum_of_d2() {
         let data = GaussianMixture::default_spec(4, 6).generate(80, 3);
         let cent = init::first_k(&data, 4);
-        let eng = NativeEngine;
+        let eng = NativeEngine::default();
         let pool = Pool::new(1);
         let (total, _) = eng.score(&data, Sel::Range(0, 80), &cent, &pool);
         let mse = validation_mse(&data, &cent, &eng, &pool);
@@ -473,7 +513,7 @@ mod tests {
         let data = GaussianMixture::default_spec(3, 7).generate(40, 2);
         let cent = init::first_k(&data, 3);
         let mut out = vec![0f32; 40 * 3];
-        let calcs = NativeEngine.dist_rows(
+        let calcs = NativeEngine::default().dist_rows(
             &data,
             Sel::Range(0, 40),
             &cent,
@@ -503,8 +543,8 @@ mod tests {
         let cent = init::first_k(&data, 4);
         let mut par = vec![0f32; 100 * 4];
         let mut ser = vec![0f32; 100 * 4];
-        NativeEngine.dist_rows(&data, Sel::Range(0, 100), &cent, &Pool::new(4), &mut par);
-        NativeEngine.dist_rows(&data, Sel::Range(0, 100), &cent, &Pool::new(1), &mut ser);
+        NativeEngine::default().dist_rows(&data, Sel::Range(0, 100), &cent, &Pool::new(4), &mut par);
+        NativeEngine::default().dist_rows(&data, Sel::Range(0, 100), &cent, &Pool::new(1), &mut ser);
         assert_eq!(par, ser);
     }
 
@@ -512,17 +552,50 @@ mod tests {
     fn transpose_cache_hits_and_invalidates() {
         let data = Rcv1Sim::default().generate(200, 3);
         let mut cent = init::first_k(&data, 10);
-        let mut slot = None;
-        let a = cached_transpose(&mut slot, &cent);
-        let b = cached_transpose(&mut slot, &cent);
+        let cache = TransCache::default();
+        let a = cache.fetch(&cent);
+        let b = cache.fetch(&cent);
         assert!(Arc::ptr_eq(&a, &b), "same revision must hit the cache");
+        assert_eq!((cache.hits(), cache.builds()), (1, 1));
         cent.touch();
-        let c = cached_transpose(&mut slot, &cent);
+        let c = cache.fetch(&cent);
         assert!(!Arc::ptr_eq(&a, &c), "touch() must invalidate");
         // a clone shares the revision, so it also hits
         let clone = cent.clone();
-        let d = cached_transpose(&mut slot, &clone);
+        let d = cache.fetch(&clone);
         assert!(Arc::ptr_eq(&c, &d));
+        assert_eq!((cache.hits(), cache.builds()), (2, 2));
+    }
+
+    #[test]
+    fn per_engine_caches_do_not_evict_each_other() {
+        // two sessions' engines interleaving sparse assigns (exactly
+        // the multi-model serving pattern): each engine must build its
+        // transpose once and hit thereafter. The old process-global
+        // slot rebuilt on every alternation.
+        let data_a = Rcv1Sim::default().generate(200, 1);
+        let data_b = Rcv1Sim::default().generate(200, 2);
+        let cent_a = init::first_k(&data_a, 10);
+        let cent_b = init::first_k(&data_b, 10);
+        let eng_a = NativeEngine::default();
+        let eng_b = NativeEngine::default();
+        let pool = Pool::new(2);
+        let mut lbl = vec![0u32; 200];
+        let mut d2 = vec![0f32; 200];
+        for _ in 0..3 {
+            eng_a.assign(&data_a, Sel::Range(0, 200), &cent_a, &pool, &mut lbl, &mut d2);
+            eng_b.assign(&data_b, Sel::Range(0, 200), &cent_b, &pool, &mut lbl, &mut d2);
+        }
+        let (hits_a, builds_a) = eng_a.trans_cache_stats().unwrap();
+        let (hits_b, builds_b) = eng_b.trans_cache_stats().unwrap();
+        assert_eq!(builds_a, 1, "engine A rebuilt its unchanged transpose");
+        assert_eq!(builds_b, 1, "engine B rebuilt its unchanged transpose");
+        assert_eq!(hits_a, 2);
+        assert_eq!(hits_b, 2);
+        // a cloned engine shares the cache (same session handle)
+        let clone_a = eng_a.clone();
+        clone_a.assign(&data_a, Sel::Range(0, 200), &cent_a, &pool, &mut lbl, &mut d2);
+        assert_eq!(eng_a.trans_cache_stats().unwrap(), (3, 1));
     }
 
     #[test]
@@ -533,7 +606,7 @@ mod tests {
         let data = Rcv1Sim::default().generate(300, 9);
         let mut cent = init::first_k(&data, 12);
         let pool = Pool::new(2);
-        let eng = NativeEngine;
+        let eng = NativeEngine::default();
         for round in 0..3 {
             let n = data.n();
             let mut lbl = vec![0u32; n];
@@ -569,7 +642,7 @@ mod tests {
         let cent = init::first_k(&data, 2);
         let mut l = [];
         let mut d = [];
-        let c = NativeEngine.assign(
+        let c = NativeEngine::default().assign(
             &data,
             Sel::Range(2, 2),
             &cent,

@@ -178,7 +178,7 @@ pub struct RunOutcome {
 pub fn make_clusterer(
     data: &Data,
     cfg: &RunConfig,
-) -> Box<dyn Clusterer> {
+) -> Box<dyn Clusterer + Send> {
     let cent = match cfg.init {
         crate::config::InitScheme::FirstK => init::first_k(data, cfg.k),
         crate::config::InitScheme::Uniform => {
@@ -224,7 +224,7 @@ pub fn make_clusterer(
 pub fn resume_clusterer(
     state: NestedState,
     cfg: &RunConfig,
-) -> anyhow::Result<Box<dyn Clusterer>> {
+) -> anyhow::Result<Box<dyn Clusterer + Send>> {
     anyhow::ensure!(
         state.cent.k() == cfg.k,
         "state has k={} but config says k={}",
@@ -255,8 +255,8 @@ pub fn run(
     cfg: &RunConfig,
 ) -> anyhow::Result<RunOutcome> {
     let data = shuffle::shuffled(train, cfg.seed);
-    let engine: Box<dyn AssignEngine> = match cfg.engine {
-        Engine::Native => Box::new(NativeEngine),
+    let engine: Box<dyn AssignEngine + Send> = match cfg.engine {
+        Engine::Native => Box::new(NativeEngine::default()),
         Engine::Xla => crate::runtime::make_engine(&cfg.artifacts_dir)?,
     };
     run_prepared(&data, val, cfg, engine.as_ref())
@@ -344,7 +344,7 @@ mod tests {
     fn par_stats_match_serial() {
         let data = GaussianMixture::default_spec(4, 6).generate(500, 1);
         let cent = init::first_k(&data, 4);
-        let eng = NativeEngine;
+        let eng = NativeEngine::default();
         let pool = Pool::new(4);
         let mut lbl = vec![0u32; 500];
         let mut d2 = vec![0f32; 500];

@@ -23,8 +23,11 @@ pub const UNASSIGNED: u32 = u32::MAX;
 
 /// Globally unique revision stamps for [`Centroids`] content. Monotonic
 /// across all instances, so a revision value identifies one centroid
-/// snapshot for the lifetime of the process (the engine's transpose
-/// cache keys on it).
+/// snapshot for the lifetime of the process. The per-engine transpose
+/// caches key on it — process-uniqueness is what lets every session
+/// keep its own cache handle without any cross-session coordination
+/// (two sessions can never mint the same revision for different
+/// content).
 static CENTROID_REV: std::sync::atomic::AtomicU64 =
     std::sync::atomic::AtomicU64::new(1);
 

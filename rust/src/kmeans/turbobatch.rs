@@ -407,10 +407,16 @@ mod tests {
     use crate::kmeans::init;
     use crate::util::rng::Pcg64;
 
+    /// Shared engine for test contexts (Ctx borrows it for 'static).
+    fn test_engine() -> &'static NativeEngine {
+        static E: std::sync::OnceLock<NativeEngine> = std::sync::OnceLock::new();
+        E.get_or_init(NativeEngine::default)
+    }
+
     fn ctx(data: &crate::data::Data) -> Ctx<'_> {
         Ctx {
             data,
-            engine: &NativeEngine,
+            engine: test_engine(),
             pool: crate::coordinator::Pool::new(2),
             rng: Pcg64::new(4, 4),
         }

@@ -306,6 +306,51 @@ unsafe fn dot4_sse2(
     out
 }
 
+/// `acc += x` widened to f64, four lanes per step through two 128-bit
+/// converts. Elementwise (f32→f64 widening is exact), so trivially
+/// bit-identical to the scalar loop.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn add_into_sse2(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let xv = _mm_loadu_ps(x.as_ptr().add(i));
+        let lo = _mm_cvtps_pd(xv);
+        let hi = _mm_cvtps_pd(_mm_movehl_ps(xv, xv));
+        let a0 = _mm_loadu_pd(acc.as_ptr().add(i));
+        let a1 = _mm_loadu_pd(acc.as_ptr().add(i + 2));
+        _mm_storeu_pd(acc.as_mut_ptr().add(i), _mm_add_pd(a0, lo));
+        _mm_storeu_pd(acc.as_mut_ptr().add(i + 2), _mm_add_pd(a1, hi));
+    }
+    for i in chunks * 4..n {
+        *acc.get_unchecked_mut(i) += *x.get_unchecked(i) as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn sub_from_sse2(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let xv = _mm_loadu_ps(x.as_ptr().add(i));
+        let lo = _mm_cvtps_pd(xv);
+        let hi = _mm_cvtps_pd(_mm_movehl_ps(xv, xv));
+        let a0 = _mm_loadu_pd(acc.as_ptr().add(i));
+        let a1 = _mm_loadu_pd(acc.as_ptr().add(i + 2));
+        _mm_storeu_pd(acc.as_mut_ptr().add(i), _mm_sub_pd(a0, lo));
+        _mm_storeu_pd(acc.as_mut_ptr().add(i + 2), _mm_sub_pd(a1, hi));
+    }
+    for i in chunks * 4..n {
+        *acc.get_unchecked_mut(i) -= *x.get_unchecked(i) as f64;
+    }
+}
+
 // ---------------------------------------------------------------------
 // AVX2: all eight lanes in one 256-bit register
 // ---------------------------------------------------------------------
@@ -543,6 +588,50 @@ unsafe fn dot4_neon(
     out
 }
 
+/// `acc += x` widened to f64 on NEON: four f32 lanes per step via the
+/// low/high f64 converts. Elementwise ⇒ bit-identical to scalar.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn add_into_neon(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let lo = vcvt_f64_f32(vget_low_f32(xv));
+        let hi = vcvt_high_f64_f32(xv);
+        let a0 = vld1q_f64(acc.as_ptr().add(i));
+        let a1 = vld1q_f64(acc.as_ptr().add(i + 2));
+        vst1q_f64(acc.as_mut_ptr().add(i), vaddq_f64(a0, lo));
+        vst1q_f64(acc.as_mut_ptr().add(i + 2), vaddq_f64(a1, hi));
+    }
+    for i in chunks * 4..n {
+        *acc.get_unchecked_mut(i) += *x.get_unchecked(i) as f64;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sub_from_neon(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let lo = vcvt_f64_f32(vget_low_f32(xv));
+        let hi = vcvt_high_f64_f32(xv);
+        let a0 = vld1q_f64(acc.as_ptr().add(i));
+        let a1 = vld1q_f64(acc.as_ptr().add(i + 2));
+        vst1q_f64(acc.as_mut_ptr().add(i), vsubq_f64(a0, lo));
+        vst1q_f64(acc.as_mut_ptr().add(i + 2), vsubq_f64(a1, hi));
+    }
+    for i in chunks * 4..n {
+        *acc.get_unchecked_mut(i) -= *x.get_unchecked(i) as f64;
+    }
+}
+
 // ---------------------------------------------------------------------
 // per-tier entry points + dispatched wrappers
 // ---------------------------------------------------------------------
@@ -602,18 +691,29 @@ pub fn dot4_with(
 
 #[inline]
 pub fn add_into_with(t: Tier, acc: &mut [f64], x: &[f32]) {
+    // real assert: the tier kernels below do unchecked SIMD loads
+    assert_eq!(acc.len(), x.len(), "add_into: length mismatch");
     match t {
         #[cfg(target_arch = "x86_64")]
         Tier::Avx2 | Tier::Avx2Fma => unsafe { add_into_avx2(acc, x) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { add_into_sse2(acc, x) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { add_into_neon(acc, x) },
         _ => add_into_scalar(acc, x),
     }
 }
 
 #[inline]
 pub fn sub_from_with(t: Tier, acc: &mut [f64], x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "sub_from: length mismatch");
     match t {
         #[cfg(target_arch = "x86_64")]
         Tier::Avx2 | Tier::Avx2Fma => unsafe { sub_from_avx2(acc, x) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { sub_from_sse2(acc, x) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { sub_from_neon(acc, x) },
         _ => sub_from_scalar(acc, x),
     }
 }
@@ -962,8 +1062,10 @@ mod tests {
 
     #[test]
     fn add_sub_bit_identical_across_tiers() {
-        Cases::new(100).run(|rng| {
-            let n = rng.below(150);
+        // covers the explicit SSE2/NEON kernels (previously scalar
+        // fallbacks) alongside AVX2: every tier, bit-for-bit
+        Cases::new(150).run(|rng| {
+            let n = rng.below(400);
             let x = gen::matrix(rng, 1, n);
             let init: Vec<f64> = (0..n).map(|i| (i as f64) * 0.25 - 3.0).collect();
             let mut reference = init.clone();
@@ -971,11 +1073,33 @@ mod tests {
             for t in available_tiers() {
                 let mut acc = init.clone();
                 add_into_with(t, &mut acc, &x);
-                assert_eq!(acc, reference, "add tier {}", t.name());
+                let bits = |v: &[f64]| {
+                    v.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                };
+                assert_eq!(bits(&acc), bits(&reference), "add tier {}", t.name());
                 sub_from_with(t, &mut acc, &x);
-                assert_eq!(acc, init, "sub tier {}", t.name());
+                assert_eq!(bits(&acc), bits(&init), "sub tier {}", t.name());
             }
         });
+    }
+
+    #[test]
+    fn add_sub_tail_lengths_every_tier() {
+        // the SIMD kernels step four lanes; lengths 0..=9 force every
+        // tail shape through each tier's cleanup loop
+        for n in 0..=9usize {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32) * 1.5 - 2.0).collect();
+            let init: Vec<f64> = (0..n).map(|i| (i as f64) * -0.5).collect();
+            let mut reference = init.clone();
+            add_into_scalar(&mut reference, &x);
+            for t in available_tiers() {
+                let mut acc = init.clone();
+                add_into_with(t, &mut acc, &x);
+                assert_eq!(acc, reference, "add n={n} tier {}", t.name());
+                sub_from_with(t, &mut acc, &x);
+                assert_eq!(acc, init, "sub n={n} tier {}", t.name());
+            }
+        }
     }
 
     #[test]

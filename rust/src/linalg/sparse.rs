@@ -173,6 +173,17 @@ pub struct TransposedCentroids {
 }
 
 impl TransposedCentroids {
+    /// Heap footprint of a (k × d) transpose before building it — the
+    /// engine's cache gate bounds per-session memory with this.
+    pub fn bytes_for(k: usize, d: usize) -> usize {
+        k * d * std::mem::size_of::<f32>()
+    }
+
+    /// Heap footprint of this transpose.
+    pub fn bytes(&self) -> usize {
+        Self::bytes_for(self.k, self.d)
+    }
+
     pub fn build(c: &DenseMatrix) -> Self {
         let (k, d) = (c.rows, c.cols);
         let mut ct = vec![0f32; d * k];

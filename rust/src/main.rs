@@ -6,7 +6,9 @@
 //! nmbkm experiment fig1|fig2|fig3|table1|table2|all [--full] [--seeds N]
 //! nmbkm train --dataset gaussian --k 50 --seconds 10 --save model.json
 //! nmbkm serve --snapshot model.json [--listen 127.0.0.1:7878]
+//! nmbkm serve --models news=a.json,users=b.json --listen 127.0.0.1:7878
 //! nmbkm predict --snapshot model.json [--points queries.jsonl]
+//! nmbkm bench-trend --baseline old.json --current new.json
 //! nmbkm info [--artifacts DIR]
 //! ```
 //!
@@ -68,9 +70,19 @@ fn train_spec() -> Vec<OptSpec> {
 
 fn serve_spec() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "snapshot", takes_value: true, default: None, help: "snapshot to resume (required)" },
+        OptSpec { name: "snapshot", takes_value: true, default: None, help: "snapshot to serve as the implicit 'default' model" },
+        OptSpec { name: "models", takes_value: true, default: None, help: "named snapshots: name=path[,name=path…]" },
         OptSpec { name: "listen", takes_value: true, default: None, help: "TCP address, e.g. 127.0.0.1:7878 [stdio]" },
-        OptSpec { name: "threads", takes_value: true, default: None, help: "override snapshot thread count" },
+        OptSpec { name: "threads", takes_value: true, default: None, help: "override snapshot thread counts" },
+        OptSpec { name: "snapshot-dir", takes_value: true, default: None, help: "where wire-created models write protocol snapshots [cwd]" },
+    ]
+}
+
+fn bench_trend_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "baseline", takes_value: true, default: None, help: "previous bench report JSON (required)" },
+        OptSpec { name: "current", takes_value: true, default: None, help: "current bench report JSON (required)" },
+        OptSpec { name: "threshold", takes_value: true, default: Some("0.20"), help: "max allowed median regression fraction" },
     ]
 }
 
@@ -179,7 +191,7 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
     let val_mse = nmbkm::kmeans::assign::validation_mse(
         &ds.val,
         cent,
-        &NativeEngine,
+        &NativeEngine::default(),
         &pool,
     );
     if let Some(info) = report.last {
@@ -204,33 +216,157 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
-    let spec = serve_spec();
-    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
-    let path = args
-        .get("snapshot")
-        .ok_or_else(|| anyhow::anyhow!("serve needs --snapshot PATH"))?;
+/// Resume one snapshot into a serving session (thread override applied,
+/// protocol `snapshot` writes confined to the artifact's directory).
+fn resume_for_serving(
+    path: &str,
+    threads: Option<usize>,
+) -> anyhow::Result<session::OnlineSession> {
     let mut snap = Snapshot::load(std::path::Path::new(path))?;
-    if args.get("threads").is_some() {
-        snap.cfg.threads = args.get_usize("threads")?.max(1);
+    if let Some(t) = threads {
+        snap.cfg.threads = t.max(1);
     }
     let mut session = session::OnlineSession::resume(snap)?;
-    // protocol `snapshot` requests write bare file names into the
-    // directory the artifact came from
     if let Some(dir) = std::path::Path::new(path).parent() {
         if !dir.as_os_str().is_empty() {
             session.set_snapshot_dir(dir.to_path_buf());
         }
     }
-    eprintln!(
-        "[nmbkm::serve] resumed {} from {path}: {}",
-        session.cfg().label(),
-        session.stats_json().to_string()
-    );
-    match args.get("listen") {
-        Some(addr) => nmbkm::serve::server::serve_tcp(&mut session, addr),
-        None => nmbkm::serve::server::serve_stdio(&mut session),
+    Ok(session)
+}
+
+fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
+    let spec = serve_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let threads = match args.get("threads") {
+        Some(_) => Some(args.get_usize("threads")?),
+        None => None,
+    };
+    let registry = std::sync::Arc::new(nmbkm::serve::ModelRegistry::new());
+    // wire-created models confine their protocol `snapshot` writes here
+    if let Some(dir) = args.get("snapshot-dir") {
+        registry.set_snapshot_dir(std::path::PathBuf::from(dir));
     }
+    // --snapshot serves one artifact as the implicit "default" model
+    if let Some(path) = args.get("snapshot") {
+        let session = resume_for_serving(path, threads)?;
+        eprintln!(
+            "[nmbkm::serve] resumed {} from {path} as 'default': {}",
+            session.cfg().label(),
+            session.stats_json().to_string()
+        );
+        registry
+            .insert(nmbkm::serve::registry::DEFAULT_MODEL, session)
+            .map_err(|e| anyhow::anyhow!("registering default model: {e:#}"))?;
+    }
+    // --models name=path,… loads a fleet of named artifacts
+    if let Some(models) = args.get("models") {
+        for part in models.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, path) = part.trim().split_once('=').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--models entries are name=path, got '{part}'"
+                )
+            })?;
+            let session = resume_for_serving(path.trim(), threads)?;
+            eprintln!(
+                "[nmbkm::serve] resumed {} from {} as '{}'",
+                session.cfg().label(),
+                path.trim(),
+                name.trim()
+            );
+            registry
+                .insert(name.trim(), session)
+                .map_err(|e| anyhow::anyhow!("registering '{name}': {e:#}"))?;
+        }
+    }
+    if registry.is_empty() {
+        eprintln!(
+            "[nmbkm::serve] starting with an empty registry — clients \
+             bootstrap models over the wire with the 'create' op"
+        );
+    }
+    match args.get("listen") {
+        Some(addr) => nmbkm::serve::server::serve_tcp(registry, addr),
+        None => nmbkm::serve::server::serve_stdio(&registry),
+    }
+}
+
+fn cmd_bench_trend(raw: &[String]) -> anyhow::Result<()> {
+    let spec = bench_trend_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("bench-trend needs --baseline FILE"))?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow::anyhow!("bench-trend needs --current FILE"))?;
+    let threshold = args.get_f64("threshold")?;
+    anyhow::ensure!(
+        threshold >= 0.0,
+        "--threshold must be non-negative, got {threshold}"
+    );
+    let load = |p: &str| -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("reading {p}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
+    };
+    let baseline = load(baseline_path)?;
+    let current = load(current_path)?;
+    let rows = nmbkm::bench::compare_reports(&baseline, &current)
+        .map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "no overlapping measurements between {baseline_path} and {current_path}"
+    );
+    let mut regressed = Vec::new();
+    println!(
+        "{:<28} {:<42} {:>12} {:>12} {:>8}",
+        "set", "measurement", "baseline", "current", "ratio"
+    );
+    for r in &rows {
+        let over = r.ratio() > 1.0 + threshold;
+        let flag = match (over, r.gateable()) {
+            (true, true) => "  << REGRESSION",
+            // single-sample baselines (smoke runs) are too noisy to
+            // gate on — report, don't fail
+            (true, false) => "  (over threshold; 1-sample baseline, not gated)",
+            _ => "",
+        };
+        println!(
+            "{:<28} {:<42} {:>11.6}s {:>11.6}s {:>8.3}{flag}",
+            r.set,
+            r.name,
+            r.base_median_s,
+            r.cur_median_s,
+            r.ratio()
+        );
+        if over && r.gateable() {
+            regressed.push(format!(
+                "{}/{} {:.1}% slower",
+                r.set,
+                r.name,
+                (r.ratio() - 1.0) * 100.0
+            ));
+        }
+    }
+    anyhow::ensure!(
+        regressed.is_empty(),
+        "median regression beyond {:.0}%: {}",
+        threshold * 100.0,
+        regressed.join("; ")
+    );
+    if rows.iter().all(|r| !r.gateable()) {
+        println!(
+            "bench trend: baseline is single-sample (smoke) — nothing gated"
+        );
+    } else {
+        println!(
+            "bench trend OK: {} measurements within {:.0}% of baseline medians",
+            rows.len(),
+            threshold * 100.0
+        );
+    }
+    Ok(())
 }
 
 fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
@@ -293,7 +429,7 @@ fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
     let mut lbl = vec![0u32; count];
     let mut d2 = vec![0f32; count];
     use nmbkm::kmeans::assign::AssignEngine;
-    NativeEngine.assign(
+    NativeEngine::default().assign(
         &queries,
         nmbkm::kmeans::assign::Sel::Range(0, count),
         cent,
@@ -384,9 +520,10 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "predict" => cmd_predict(&rest),
         "experiment" => cmd_experiment(&rest),
+        "bench-trend" => cmd_bench_trend(&rest),
         "info" => cmd_info(&rest),
         _ => {
-            println!("nmbkm <run|train|serve|predict|experiment|info>\n");
+            println!("nmbkm <run|train|serve|predict|experiment|bench-trend|info>\n");
             println!("{}", usage("nmbkm run", "run one clustering job", &run_spec()));
             println!(
                 "{}",
@@ -396,9 +533,20 @@ fn main() {
                 "{}",
                 usage(
                     "nmbkm serve",
-                    "resume a snapshot and serve the JSONL protocol \
-                     (ingest|predict|step|stats|snapshot|shutdown)",
+                    "serve one or many model snapshots over the JSONL \
+                     protocol (create|list|drop|ingest|predict|step|\
+                     stats|snapshot|shutdown); TCP handles concurrent \
+                     connections with snapshot-isolated predicts",
                     &serve_spec()
+                )
+            );
+            println!(
+                "{}",
+                usage(
+                    "nmbkm bench-trend",
+                    "compare two bench report JSONs; non-zero exit on \
+                     median regressions beyond the threshold",
+                    &bench_trend_spec()
                 )
             );
             println!(

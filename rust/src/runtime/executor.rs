@@ -66,7 +66,7 @@ impl XlaEngine {
         Ok(XlaEngine {
             manifest,
             execs,
-            native: NativeEngine,
+            native: NativeEngine::default(),
             stats: RefCell::new(EngineStats::default()),
             warned_fallback: Cell::new(false),
         })
@@ -317,7 +317,7 @@ mod tests {
             engine.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lx, &mut dx);
             let mut ln = vec![0u32; n];
             let mut dn = vec![0f32; n];
-            NativeEngine.assign(&data, Sel::Range(0, n), &cent, &pool, &mut ln, &mut dn);
+            NativeEngine::default().assign(&data, Sel::Range(0, n), &cent, &pool, &mut ln, &mut dn);
             let mut mismatched_labels = 0;
             for i in 0..n {
                 // tolerance scales with ‖x‖²: the norms-trick subtraction
@@ -356,7 +356,7 @@ mod tests {
         let mut mx = vec![0f32; n * k];
         engine.dist_rows(&data, Sel::Range(0, n), &cent, &pool, &mut mx);
         let mut mn = vec![0f32; n * k];
-        NativeEngine.dist_rows(&data, Sel::Range(0, n), &cent, &pool, &mut mn);
+        NativeEngine::default().dist_rows(&data, Sel::Range(0, n), &cent, &pool, &mut mn);
         for t in 0..n * k {
             let tol = 1e-2 * (1.0 + mn[t].abs()) + 3e-6 * data.norms[t / k];
             assert!(
@@ -389,7 +389,7 @@ mod tests {
         assert!(engine.stats().native_fallbacks > 0);
         let mut ln = vec![0u32; 64];
         let mut dn = vec![0f32; 64];
-        NativeEngine.assign(&data, Sel::Range(0, 64), &cent, &pool, &mut ln, &mut dn);
+        NativeEngine::default().assign(&data, Sel::Range(0, 64), &cent, &pool, &mut ln, &mut dn);
         assert_eq!(l, ln);
     }
 }

@@ -21,14 +21,14 @@ use crate::kmeans::assign::AssignEngine;
 
 /// Build the XLA-backed assignment engine from an artifacts directory.
 #[cfg(feature = "xla")]
-pub fn make_engine(artifacts_dir: &str) -> anyhow::Result<Box<dyn AssignEngine>> {
+pub fn make_engine(artifacts_dir: &str) -> anyhow::Result<Box<dyn AssignEngine + Send>> {
     let engine = executor::XlaEngine::load(artifacts_dir)?;
     Ok(Box::new(engine))
 }
 
 /// Build the XLA-backed assignment engine — unavailable in this build.
 #[cfg(not(feature = "xla"))]
-pub fn make_engine(_artifacts_dir: &str) -> anyhow::Result<Box<dyn AssignEngine>> {
+pub fn make_engine(_artifacts_dir: &str) -> anyhow::Result<Box<dyn AssignEngine + Send>> {
     anyhow::bail!(
         "this binary was built without the `xla` feature — rebuild with \
          `cargo build --features xla` (and run `make artifacts`) to use \

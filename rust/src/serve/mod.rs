@@ -8,23 +8,28 @@
 //!
 //! | module       | capability |
 //! |--------------|------------|
-//! | [`snapshot`] | versioned, bit-exact model artifacts (save/load)   |
+//! | [`snapshot`] | versioned, bit-exact model artifacts (save/load, streaming writes) |
 //! | [`session`]  | pause/resume training; ingest new points online    |
-//! | [`protocol`] | JSONL request/response: ingest·predict·stats·snapshot |
-//! | [`server`]   | transports: stdio pipes and `std::net` TCP         |
+//! | [`registry`] | many named models per process; snapshot-isolated predicts |
+//! | [`protocol`] | JSONL request/response: create·ingest·predict·…·drop |
+//! | [`server`]   | transports: stdio pipes and thread-per-connection TCP |
 //!
 //! The load-bearing invariant throughout is the paper's §3.1
 //! each-point-counts-exactly-once property: ingested points append
 //! *behind* the nested batch and enter the sufficient statistics exactly
 //! once, when the σ̂_C/p controller grows the batch over them; snapshots
 //! serialise every accumulator bit-exactly so a resumed session retraces
-//! the uninterrupted run. CLI front-ends: `nmbkm train --save`, `nmbkm
-//! serve`, `nmbkm predict`.
+//! the uninterrupted run. Per model, that invariant is untouched by
+//! concurrency: mutations serialise on the model's session lock while
+//! predicts read immutable published snapshots. CLI front-ends: `nmbkm
+//! train --save`, `nmbkm serve [--models]`, `nmbkm predict`.
 
 pub mod protocol;
+pub mod registry;
 pub mod server;
 pub mod session;
 pub mod snapshot;
 
+pub use registry::{ModelRegistry, PublishedModel};
 pub use session::OnlineSession;
 pub use snapshot::Snapshot;

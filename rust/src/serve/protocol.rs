@@ -1,49 +1,73 @@
 //! The serving wire protocol: JSON Lines, dependency-free, transport
 //! agnostic (stdio and TCP both speak it — see `serve::server`).
 //!
-//! One request per line, one response per line, in order:
+//! One request per line, one response per line, in order. Requests are
+//! routed to a named model in the [`ModelRegistry`]; omitting the
+//! `model` field routes to the implicit `default` model, so PR 1's
+//! single-model clients keep working unchanged:
 //!
 //! ```text
-//! → {"op":"ingest","points":[[…],[…]],"rounds":2}
-//! ← {"ok":true,"op":"ingest","added":2,"n":10002,"rounds_run":2,…}
-//! → {"op":"predict","points":[[…]]}
-//! ← {"ok":true,"op":"predict","labels":[7],"d2":[0.125]}
-//! → {"op":"stats"}
-//! ← {"ok":true,"op":"stats","initialised":true,"n_total":10002,…}
-//! → {"op":"snapshot","path":"model.json"}
-//! ← {"ok":true,"op":"snapshot","path":"model.json","bytes":123456}
+//! → {"op":"create","model":"news","k":20,"dim":64,"algo":"tb"}
+//! ← {"ok":true,"op":"create","model":"news","k":20,"dim":64}
+//! → {"op":"ingest","model":"news","points":[[…],[…]],"rounds":2}
+//! ← {"ok":true,"op":"ingest","model":"news","added":2,"n":10002,…}
+//! → {"op":"predict","model":"news","points":[[…]]}
+//! ← {"ok":true,"op":"predict","model":"news","labels":[7],"d2":[0.125]}
+//! → {"op":"list"}
+//! ← {"ok":true,"op":"list","models":[{"model":"news",…},…]}
+//! → {"op":"stats"}                     (routes to "default")
+//! ← {"ok":true,"op":"stats","model":"default","initialised":true,…}
+//! → {"op":"snapshot","model":"news","path":"news.json"}
+//! ← {"ok":true,"op":"snapshot","model":"news","path":"…","bytes":123}
+//! → {"op":"drop","model":"news"}
+//! ← {"ok":true,"op":"drop","model":"news"}
 //! → {"op":"shutdown"}
 //! ← {"ok":true,"op":"shutdown"}
 //! ```
 //!
-//! Errors never kill the stream: a malformed or failing request gets
-//! `{"ok":false,"error":"…"}` and the loop continues. `d2` values are
-//! exact — f32 widens losslessly to the f64 JSON number and the parser
-//! round-trips f64, so predict responses carry the same bits the engine
-//! produced.
+//! Mutations (`ingest`/`step`/`snapshot`) serialise on their model's
+//! session lock; `predict` runs lock-free against the model's published
+//! snapshot, so concurrent connections' predicts proceed while a round
+//! trains (see `serve::registry`). Errors never kill the stream: a
+//! malformed or failing request gets `{"ok":false,"error":"…"}` and the
+//! loop continues. `d2` values are exact — f32 widens losslessly to the
+//! f64 JSON number and the parser round-trips f64, so predict responses
+//! carry the same bits the engine produced.
 
-use crate::serve::session::OnlineSession;
+use crate::config::{Algo, Rho, RunConfig};
+use crate::serve::registry::ModelRegistry;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::io::{BufRead, Write};
 
-/// A parsed request.
+/// A parsed request. `model: None` routes to the implicit default.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
+    /// Register a fresh empty model (initialises once k points arrive).
+    Create { model: Option<String>, dim: usize, cfg: RunConfig },
+    /// Published summaries of every model.
+    List,
+    /// Remove a model (explicit name required — no implicit default).
+    Drop { model: String },
     /// Append points, then (optionally) run training rounds over the
     /// grown buffer.
-    Ingest { points: Vec<Vec<f32>>, rounds: usize, seconds: f64 },
-    /// Nearest-centroid queries.
-    Predict { points: Vec<Vec<f32>> },
+    Ingest {
+        model: Option<String>,
+        points: Vec<Vec<f32>>,
+        rounds: usize,
+        seconds: f64,
+    },
+    /// Nearest-centroid queries (lock-free, snapshot-isolated).
+    Predict { model: Option<String>, points: Vec<Vec<f32>> },
     /// Run training rounds without new data.
-    Step { rounds: usize, seconds: f64 },
+    Step { model: Option<String>, rounds: usize, seconds: f64 },
     /// Observability counters.
-    Stats,
+    Stats { model: Option<String> },
     /// Persist the model (and, unless `include_data` is false, the
     /// buffer) to a snapshot file on the server's filesystem.
-    Snapshot { path: String, include_data: bool },
-    /// Stop serving (closes the stream; a TCP server exits its accept
-    /// loop).
+    Snapshot { model: Option<String>, path: String, include_data: bool },
+    /// Stop serving (closes every connection; the TCP server exits its
+    /// accept loop).
     Shutdown,
 }
 
@@ -54,6 +78,15 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .get("op")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("request missing string field 'op'"))?;
+    let model = || -> Result<Option<String>> {
+        match v.get("model") {
+            None => Ok(None),
+            Some(x) => x
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| anyhow!("'model' must be a string")),
+        }
+    };
     let rounds = |default: usize| -> Result<usize> {
         match v.get("rounds") {
             None => Ok(default),
@@ -74,15 +107,35 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }
     };
     Ok(match op {
+        "create" => {
+            let (dim, cfg) = parse_create(&v)?;
+            Request::Create { model: model()?, dim, cfg }
+        }
+        "list" => Request::List,
+        "drop" => Request::Drop {
+            model: v
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    anyhow!("drop op needs an explicit 'model' string")
+                })?
+                .to_string(),
+        },
         "ingest" => Request::Ingest {
+            model: model()?,
             points: parse_points(&v)?,
             rounds: rounds(1)?,
             seconds: seconds()?,
         },
-        "predict" => Request::Predict { points: parse_points(&v)? },
-        "step" => Request::Step { rounds: rounds(1)?, seconds: seconds()? },
-        "stats" => Request::Stats,
+        "predict" => Request::Predict { model: model()?, points: parse_points(&v)? },
+        "step" => Request::Step {
+            model: model()?,
+            rounds: rounds(1)?,
+            seconds: seconds()?,
+        },
+        "stats" => Request::Stats { model: model()? },
         "snapshot" => Request::Snapshot {
+            model: model()?,
             path: v
                 .get("path")
                 .and_then(Json::as_str)
@@ -95,9 +148,71 @@ pub fn parse_request(line: &str) -> Result<Request> {
         },
         "shutdown" | "quit" => Request::Shutdown,
         other => bail!(
-            "unknown op '{other}' (ingest|predict|step|stats|snapshot|shutdown)"
+            "unknown op '{other}' (create|list|drop|ingest|predict|step|\
+             stats|snapshot|shutdown)"
         ),
     })
+}
+
+/// `create` parameters: required `k` and `dim`, optional `algo`, `b0`,
+/// `rho`, `seed`, `threads` on top of serving defaults.
+fn parse_create(v: &Json) -> Result<(usize, RunConfig)> {
+    let req_usize = |key: &str| -> Result<usize> {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .filter(|x| *x >= 1.0 && x.fract() == 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| {
+                anyhow!("create op needs a positive integer '{key}'")
+            })
+    };
+    let opt_usize = |key: &str| -> Result<Option<usize>> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(x) => x
+                .as_f64()
+                .filter(|x| *x >= 1.0 && x.fract() == 0.0)
+                .map(|x| Some(x as usize))
+                .ok_or_else(|| anyhow!("'{key}' must be a positive integer")),
+        }
+    };
+    let dim = req_usize("dim")?;
+    let mut cfg = RunConfig {
+        k: req_usize("k")?,
+        // serving sessions run under step/ingest budgets, not a global
+        // clock, so the per-call limits are the real control surface
+        max_seconds: f64::INFINITY,
+        max_rounds: usize::MAX,
+        ..RunConfig::default()
+    };
+    if let Some(x) = v.get("algo") {
+        let s = x.as_str().ok_or_else(|| anyhow!("'algo' must be a string"))?;
+        cfg.algo = Algo::parse(s).map_err(|e| anyhow!("{e}"))?;
+    }
+    if let Some(x) = v.get("rho") {
+        let s = x.as_str().ok_or_else(|| anyhow!("'rho' must be a string"))?;
+        cfg.rho = Rho::parse(s).map_err(|e| anyhow!("{e}"))?;
+    }
+    if let Some(b0) = opt_usize("b0")? {
+        cfg.b0 = b0;
+    }
+    if let Some(threads) = opt_usize("threads")? {
+        // remote clients must not get a spawn-arbitrary-OS-threads
+        // primitive (same posture as the snapshot op's path confinement);
+        // clamp to the host's parallelism
+        let host = std::thread::available_parallelism()
+            .map(|x| x.get())
+            .unwrap_or(1);
+        cfg.threads = threads.min(host);
+    }
+    if let Some(x) = v.get("seed") {
+        let seed = x
+            .as_f64()
+            .filter(|s| *s >= 0.0 && s.fract() == 0.0)
+            .ok_or_else(|| anyhow!("'seed' must be a non-negative integer"))?;
+        cfg.seed = seed as u64;
+    }
+    Ok((dim, cfg))
 }
 
 fn parse_points(v: &Json) -> Result<Vec<Vec<f32>>> {
@@ -130,14 +245,14 @@ fn parse_points(v: &Json) -> Result<Vec<Vec<f32>>> {
     Ok(out)
 }
 
-/// Execute one request against the session. Never fails: errors become
-/// `ok:false` responses. The bool is true when the stream should close.
-pub fn handle_line(session: &mut OnlineSession, line: &str) -> (Json, bool) {
+/// Execute one request against the registry. Never fails: errors become
+/// `ok:false` responses. The bool is true when the server should stop.
+pub fn handle_line(registry: &ModelRegistry, line: &str) -> (Json, bool) {
     let req = match parse_request(line) {
         Ok(r) => r,
         Err(e) => return (err_json(&e), false),
     };
-    match execute(session, &req) {
+    match execute(registry, &req) {
         Ok(resp) => (resp, matches!(req, Request::Shutdown)),
         Err(e) => (err_json(&e), false),
     }
@@ -150,18 +265,53 @@ fn err_json(e: &anyhow::Error) -> Json {
     ])
 }
 
-fn execute(session: &mut OnlineSession, req: &Request) -> Result<Json> {
+fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
     Ok(match req {
-        Request::Ingest { points, rounds, seconds } => {
-            let n = session.ingest_rows(points)?;
-            let rep = session.step(*rounds, *seconds)?;
+        Request::Create { model, dim, cfg } => {
+            let name = model.as_deref().unwrap_or(crate::serve::registry::DEFAULT_MODEL);
+            let entry = registry.create(name, cfg.clone(), *dim)?;
+            json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("create")),
+                ("model", json::s(entry.name())),
+                ("k", json::num(cfg.k as f64)),
+                ("dim", json::num(*dim as f64)),
+                ("algo", json::s(&cfg.label())),
+            ])
+        }
+        Request::List => json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", json::s("list")),
+            (
+                "models",
+                Json::Arr(
+                    registry.list().iter().map(|m| m.summary_json()).collect(),
+                ),
+            ),
+        ]),
+        Request::Drop { model } => {
+            registry.drop_model(model)?;
+            json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("drop")),
+                ("model", json::s(model)),
+            ])
+        }
+        Request::Ingest { model, points, rounds, seconds } => {
+            let entry = registry.resolve(model.as_deref())?;
+            let (n, rep, initialised) = entry.with_session_mut(|s| {
+                let n = s.ingest_rows(points)?;
+                let rep = s.step(*rounds, *seconds)?;
+                Ok((n, rep, s.initialised()))
+            })?;
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("op", json::s("ingest")),
+                ("model", json::s(entry.name())),
                 ("added", json::num(points.len() as f64)),
                 ("n", json::num(n as f64)),
                 ("rounds_run", json::num(rep.rounds_run as f64)),
-                ("initialised", Json::Bool(session.initialised())),
+                ("initialised", Json::Bool(initialised)),
             ];
             if let Some(info) = rep.last {
                 fields.push(("batch", json::num(info.batch as f64)));
@@ -169,11 +319,15 @@ fn execute(session: &mut OnlineSession, req: &Request) -> Result<Json> {
             }
             json::obj(fields)
         }
-        Request::Predict { points } => {
-            let (lbl, d2) = session.predict_rows(points)?;
+        Request::Predict { model, points } => {
+            let entry = registry.resolve(model.as_deref())?;
+            // lock-free: computed against the published snapshot, even
+            // while a training step holds the session lock
+            let (lbl, d2) = entry.predict(points)?;
             json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("op", json::s("predict")),
+                ("model", json::s(entry.name())),
                 (
                     "labels",
                     Json::Arr(lbl.iter().map(|&j| json::num(j as f64)).collect()),
@@ -184,11 +338,14 @@ fn execute(session: &mut OnlineSession, req: &Request) -> Result<Json> {
                 ),
             ])
         }
-        Request::Step { rounds, seconds } => {
-            let rep = session.step(*rounds, *seconds)?;
+        Request::Step { model, rounds, seconds } => {
+            let entry = registry.resolve(model.as_deref())?;
+            let rep =
+                entry.with_session_mut(|s| s.step(*rounds, *seconds))?;
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("op", json::s("step")),
+                ("model", json::s(entry.name())),
                 ("rounds_run", json::num(rep.rounds_run as f64)),
                 ("converged", Json::Bool(rep.converged)),
                 ("waiting_for_points", Json::Bool(rep.waiting_for_points)),
@@ -199,15 +356,17 @@ fn execute(session: &mut OnlineSession, req: &Request) -> Result<Json> {
             }
             json::obj(fields)
         }
-        Request::Stats => {
-            let mut resp = session.stats_json();
+        Request::Stats { model } => {
+            let entry = registry.resolve(model.as_deref())?;
+            let mut resp = entry.with_session(|s| Ok(s.stats_json()))?;
             if let Json::Obj(m) = &mut resp {
                 m.insert("ok".to_string(), Json::Bool(true));
                 m.insert("op".to_string(), json::s("stats"));
+                m.insert("model".to_string(), json::s(entry.name()));
             }
             resp
         }
-        Request::Snapshot { path, include_data } => {
+        Request::Snapshot { model, path, include_data } => {
             // clients name a bare file inside the server's snapshot
             // directory; anything path-like is rejected so a remote peer
             // never gets an arbitrary-file-write primitive
@@ -224,13 +383,18 @@ fn execute(session: &mut OnlineSession, req: &Request) -> Result<Json> {
                 "snapshot 'path' must be a bare file name (it is resolved \
                  inside the server's snapshot directory), got {path:?}"
             );
-            let snap = session.snapshot(*include_data)?;
-            let target = session.snapshot_dir().join(path);
-            snap.save(&target)?;
+            let entry = registry.resolve(model.as_deref())?;
+            let target = entry.with_session(|s| {
+                let target = s.snapshot_dir().join(path);
+                // streams from borrowed state — no data-buffer clone
+                s.save_snapshot(&target, *include_data)?;
+                Ok(target)
+            })?;
             let bytes = std::fs::metadata(&target).map(|m| m.len()).unwrap_or(0);
             json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("op", json::s("snapshot")),
+                ("model", json::s(entry.name())),
                 ("path", json::s(&target.display().to_string())),
                 ("bytes", json::num(bytes as f64)),
             ])
@@ -246,7 +410,7 @@ fn execute(session: &mut OnlineSession, req: &Request) -> Result<Json> {
 /// JSONL responses to `output`. Returns true when the stream ended with
 /// an explicit shutdown (as opposed to EOF).
 pub fn serve_lines<R: BufRead, W: Write>(
-    session: &mut OnlineSession,
+    registry: &ModelRegistry,
     input: R,
     output: &mut W,
 ) -> Result<bool> {
@@ -255,7 +419,7 @@ pub fn serve_lines<R: BufRead, W: Write>(
         if line.trim().is_empty() {
             continue;
         }
-        let (resp, quit) = handle_line(session, &line);
+        let (resp, quit) = handle_line(registry, &line);
         writeln!(output, "{}", resp.to_string())?;
         output.flush()?;
         if quit {
@@ -272,7 +436,7 @@ mod tests {
     use crate::data::gaussian::GaussianMixture;
     use crate::serve::session;
 
-    fn ready_session() -> OnlineSession {
+    fn ready_registry() -> ModelRegistry {
         let data = GaussianMixture::default_spec(3, 4).generate(300, 1);
         let cfg = RunConfig {
             algo: Algo::GbRho,
@@ -284,33 +448,86 @@ mod tests {
             max_seconds: 30.0,
             ..Default::default()
         };
-        session::train(&data, &cfg).unwrap().0
+        ModelRegistry::with_default(session::train(&data, &cfg).unwrap().0)
     }
 
     #[test]
     fn parse_request_forms() {
-        assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(
+            parse_request(r#"{"op":"stats"}"#).unwrap(),
+            Request::Stats { model: None }
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"stats","model":"m1"}"#).unwrap(),
+            Request::Stats { model: Some("m1".into()) }
+        );
         assert_eq!(
             parse_request(r#"{"op":"shutdown"}"#).unwrap(),
             Request::Shutdown
+        );
+        assert_eq!(parse_request(r#"{"op":"list"}"#).unwrap(), Request::List);
+        assert_eq!(
+            parse_request(r#"{"op":"drop","model":"m1"}"#).unwrap(),
+            Request::Drop { model: "m1".into() }
         );
         let r = parse_request(r#"{"op":"ingest","points":[[1,2],[3,4]]}"#).unwrap();
         assert_eq!(
             r,
             Request::Ingest {
+                model: None,
                 points: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
                 rounds: 1,
                 seconds: f64::INFINITY,
             }
         );
         let r = parse_request(r#"{"op":"step","rounds":4,"seconds":0.5}"#).unwrap();
-        assert_eq!(r, Request::Step { rounds: 4, seconds: 0.5 });
-        let r = parse_request(r#"{"op":"snapshot","path":"m.json","include_data":false}"#)
-            .unwrap();
         assert_eq!(
             r,
-            Request::Snapshot { path: "m.json".into(), include_data: false }
+            Request::Step { model: None, rounds: 4, seconds: 0.5 }
         );
+        let r = parse_request(
+            r#"{"op":"snapshot","model":"m2","path":"m.json","include_data":false}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Snapshot {
+                model: Some("m2".into()),
+                path: "m.json".into(),
+                include_data: false
+            }
+        );
+        let r = parse_request(
+            r#"{"op":"create","model":"m3","k":5,"dim":16,"algo":"gb","b0":64,"rho":"inf","seed":9,"threads":2}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Create { model, dim, cfg } => {
+                assert_eq!(model.as_deref(), Some("m3"));
+                assert_eq!(dim, 16);
+                assert_eq!(cfg.k, 5);
+                assert_eq!(cfg.algo, Algo::GbRho);
+                assert_eq!(cfg.b0, 64);
+                assert_eq!(cfg.seed, 9);
+                // requested 2, clamped to host parallelism on tiny hosts
+                assert!(cfg.threads >= 1 && cfg.threads <= 2);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        // a remote peer cannot request more OS threads than the host has
+        let r = parse_request(
+            r#"{"op":"create","k":2,"dim":3,"threads":100000000}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Create { cfg, .. } => {
+                let host = std::thread::available_parallelism()
+                    .map(|x| x.get())
+                    .unwrap_or(1);
+                assert!(cfg.threads <= host, "threads {} > host {host}", cfg.threads);
+            }
+            other => panic!("parsed {other:?}"),
+        }
         for bad in [
             "not json",
             r#"{"no_op":1}"#,
@@ -318,10 +535,16 @@ mod tests {
             r#"{"op":"predict"}"#,
             r#"{"op":"predict","points":[1]}"#,
             r#"{"op":"predict","points":[["x"]]}"#,
+            r#"{"op":"predict","model":7,"points":[[1]]}"#,
             r#"{"op":"step","rounds":-1}"#,
             r#"{"op":"step","rounds":1.5}"#,
             r#"{"op":"snapshot"}"#,
             r#"{"op":"ingest","points":[[1e400]]}"#,
+            r#"{"op":"create","dim":4}"#,
+            r#"{"op":"create","k":3}"#,
+            r#"{"op":"create","k":0,"dim":4}"#,
+            r#"{"op":"create","k":3,"dim":4,"algo":"warp"}"#,
+            r#"{"op":"drop"}"#,
         ] {
             assert!(parse_request(bad).is_err(), "should reject: {bad}");
         }
@@ -329,11 +552,11 @@ mod tests {
 
     #[test]
     fn errors_do_not_close_the_stream() {
-        let mut s = ready_session();
+        let reg = ready_registry();
         let input = "{\"op\":\"bogus\"}\n\n{\"op\":\"stats\"}\n";
         let mut out = Vec::new();
         let shutdown =
-            serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+            serve_lines(&reg, std::io::Cursor::new(input), &mut out).unwrap();
         assert!(!shutdown, "EOF, not shutdown");
         let lines: Vec<&str> =
             std::str::from_utf8(&out).unwrap().trim().lines().collect();
@@ -343,15 +566,16 @@ mod tests {
         let second = Json::parse(lines[1]).unwrap();
         assert_eq!(second.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(second.get("op").unwrap().as_str(), Some("stats"));
+        assert_eq!(second.get("model").unwrap().as_str(), Some("default"));
     }
 
     #[test]
     fn shutdown_terminates_and_reports() {
-        let mut s = ready_session();
+        let reg = ready_registry();
         let input = "{\"op\":\"shutdown\"}\n{\"op\":\"stats\"}\n";
         let mut out = Vec::new();
         let shutdown =
-            serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+            serve_lines(&reg, std::io::Cursor::new(input), &mut out).unwrap();
         assert!(shutdown);
         let lines: Vec<&str> =
             std::str::from_utf8(&out).unwrap().trim().lines().collect();
@@ -360,11 +584,11 @@ mod tests {
 
     #[test]
     fn ingest_then_stats_reflects_growth() {
-        let mut s = ready_session();
+        let reg = ready_registry();
         let input = "{\"op\":\"ingest\",\"points\":[[0.5,0.5,0.5,0.5]],\"rounds\":0}\n\
                      {\"op\":\"stats\"}\n";
         let mut out = Vec::new();
-        serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+        serve_lines(&reg, std::io::Cursor::new(input), &mut out).unwrap();
         let lines: Vec<&str> =
             std::str::from_utf8(&out).unwrap().trim().lines().collect();
         let ingest = Json::parse(lines[0]).unwrap();
@@ -375,16 +599,68 @@ mod tests {
     }
 
     #[test]
+    fn create_list_route_drop_over_the_protocol() {
+        let reg = ready_registry();
+        // create a second model with a different shape
+        let (resp, _) = handle_line(
+            &reg,
+            r#"{"op":"create","model":"wide","k":2,"dim":6,"algo":"tb"}"#,
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        // duplicate name is an error, stream survives
+        let (resp, quit) = handle_line(
+            &reg,
+            r#"{"op":"create","model":"wide","k":2,"dim":6}"#,
+        );
+        assert!(!quit);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        // list shows both, name-ordered
+        let (resp, _) = handle_line(&reg, r#"{"op":"list"}"#);
+        let models = resp.get("models").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = models
+            .iter()
+            .map(|m| m.get("model").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["default", "wide"]);
+        // requests route by dimension: 6-dim ingest fits "wide" only
+        let (resp, _) = handle_line(
+            &reg,
+            r#"{"op":"ingest","model":"wide","points":[[1,2,3,4,5,6]],"rounds":0}"#,
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        let (resp, _) = handle_line(
+            &reg,
+            r#"{"op":"ingest","points":[[1,2,3,4,5,6]],"rounds":0}"#,
+        );
+        assert_eq!(
+            resp.get("ok").unwrap().as_bool(),
+            Some(false),
+            "default model is 4-dim; 6-dim ingest must not route there"
+        );
+        // drop, then the name is gone
+        let (resp, _) = handle_line(&reg, r#"{"op":"drop","model":"wide"}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (resp, _) = handle_line(&reg, r#"{"op":"stats","model":"wide"}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
     fn snapshot_op_confined_to_snapshot_dir() {
-        let mut s = ready_session();
-        s.set_snapshot_dir(std::env::temp_dir());
+        let reg = ready_registry();
+        reg.resolve(None)
+            .unwrap()
+            .with_session_mut(|s| {
+                s.set_snapshot_dir(std::env::temp_dir());
+                Ok(())
+            })
+            .unwrap();
         // path-like names are rejected outright
         for bad in ["../escape.json", "/etc/owned", "a/b.json", "C:evil.json", "..", ""] {
             let req = format!(
                 "{{\"op\":\"snapshot\",\"path\":{}}}",
                 Json::Str(bad.to_string()).to_string()
             );
-            let (resp, _) = handle_line(&mut s, &req);
+            let (resp, _) = handle_line(&reg, &req);
             assert_eq!(
                 resp.get("ok").unwrap().as_bool(),
                 Some(false),
@@ -393,7 +669,7 @@ mod tests {
         }
         // a bare file name lands inside the configured directory
         let (resp, _) = handle_line(
-            &mut s,
+            &reg,
             r#"{"op":"snapshot","path":"nmbkm-proto-snap-test.json"}"#,
         );
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
@@ -405,9 +681,9 @@ mod tests {
 
     #[test]
     fn predict_dimension_mismatch_is_an_ok_false() {
-        let mut s = ready_session();
+        let reg = ready_registry();
         let (resp, quit) =
-            handle_line(&mut s, r#"{"op":"predict","points":[[1,2]]}"#);
+            handle_line(&reg, r#"{"op":"predict","points":[[1,2]]}"#);
         assert!(!quit);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
         assert!(resp.get("error").unwrap().as_str().unwrap().contains("dimension"));

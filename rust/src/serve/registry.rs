@@ -1,0 +1,456 @@
+//! Multi-model serving: many named [`OnlineSession`]s in one process,
+//! each with a snapshot-isolated, lock-free predict path.
+//!
+//! The registry is the reader/writer split the serve layer needed to
+//! scale predict traffic with cores:
+//!
+//! * **Writers** (ingest/step/snapshot ops) take the model's session
+//!   mutex, mutate training state, and then *publish* an immutable
+//!   [`PublishedModel`] — a self-contained copy of the centroids and
+//!   the metadata predicts need — by swapping an `Arc` behind a
+//!   read-mostly lock.
+//! * **Readers** (predict ops, one thread per TCP connection) clone the
+//!   current `Arc` (nanoseconds under a read lock) and compute against
+//!   that frozen snapshot. A predict never waits for a training round
+//!   and never observes a half-updated model: it sees exactly the model
+//!   as of some completed mutation — the same read-mostly discipline
+//!   that motivates bounds-based reuse in "Fast K-Means with Accurate
+//!   Bounds" (reads must not pay for writes they don't depend on).
+//!
+//! Because the predict path funnels through the same
+//! [`session::predict_against`] core and SIMD kernels as the live
+//! session, a predict answered from a published snapshot is
+//! bit-identical to one answered sequentially at the same centroid
+//! revision (enforced by `tests/serve_concurrent.rs`).
+
+use crate::config::RunConfig;
+use crate::coordinator::shard::Pool;
+use crate::kmeans::assign::NativeEngine;
+use crate::kmeans::state::Centroids;
+use crate::serve::session::{self, OnlineSession};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// The model name requests route to when they carry no `model` field —
+/// what keeps single-model clients from PR 1 working unchanged.
+pub const DEFAULT_MODEL: &str = "default";
+
+/// Hard cap on registered models. Each model owns a session, a pool and
+/// growing buffers, and the wire `create` op is remote-reachable — an
+/// unbounded registry would hand clients a resource-exhaustion
+/// primitive (same posture as the snapshot op's path confinement).
+pub const MAX_MODELS: usize = 256;
+
+/// An immutable published view of one model: everything a predict needs,
+/// frozen at the end of some mutation. Swapped wholesale under an `Arc`,
+/// never mutated in place.
+#[derive(Clone, Debug)]
+pub struct PublishedModel {
+    pub model: String,
+    /// `None` until the session has seen ≥ k points.
+    pub cent: Option<Centroids>,
+    pub dim: usize,
+    pub k: usize,
+    pub rounds: usize,
+    pub n_total: usize,
+    pub algo: String,
+    /// Centroid revision this view froze (0 when uninitialised);
+    /// process-unique, so equal revisions imply identical centroids.
+    pub rev: u64,
+}
+
+impl PublishedModel {
+    /// Score query rows against this frozen model. Same validation and
+    /// kernel path as [`OnlineSession::predict_rows`].
+    pub fn predict(
+        &self,
+        rows: &[Vec<f32>],
+        engine: &NativeEngine,
+        pool: &Pool,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        let cent = self.cent.as_ref().ok_or_else(|| {
+            anyhow!(
+                "model '{}' not initialised — ingest at least k={} points first",
+                self.model,
+                self.k
+            )
+        })?;
+        session::predict_against(cent, self.dim, rows, engine, pool)
+    }
+
+    /// One row of the protocol's `list` response.
+    pub fn summary_json(&self) -> Json {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("initialised", Json::Bool(self.cent.is_some())),
+            ("algo", json::s(&self.algo)),
+            ("k", json::num(self.k as f64)),
+            ("dim", json::num(self.dim as f64)),
+            ("n_total", json::num(self.n_total as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+        ])
+    }
+}
+
+/// One registered model: the mutable training session behind a mutex,
+/// plus the current published snapshot and the resources the lock-free
+/// predict path uses (its own engine handle and a clone of the
+/// session's pool — shared workers, separate submissions).
+pub struct ModelEntry {
+    name: String,
+    session: Mutex<OnlineSession>,
+    published: RwLock<Arc<PublishedModel>>,
+    predict_engine: NativeEngine,
+    pool: Pool,
+}
+
+impl ModelEntry {
+    fn new(name: &str, session: OnlineSession) -> Arc<ModelEntry> {
+        let pool = session.pool().clone();
+        let view = Arc::new(publish_view(name, &session));
+        Arc::new(ModelEntry {
+            name: name.to_string(),
+            session: Mutex::new(session),
+            published: RwLock::new(view),
+            predict_engine: NativeEngine::default(),
+            pool,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The current published snapshot (cheap `Arc` clone; never blocks
+    /// on the session mutex).
+    pub fn current(&self) -> Arc<PublishedModel> {
+        self.published.read().unwrap().clone()
+    }
+
+    /// Snapshot-isolated predict: resolves the published model once and
+    /// computes against it, concurrent training steps notwithstanding.
+    pub fn predict(&self, rows: &[Vec<f32>]) -> Result<(Vec<u32>, Vec<f32>)> {
+        self.current().predict(rows, &self.predict_engine, &self.pool)
+    }
+
+    /// Run a mutation under the session lock; on success the
+    /// post-mutation model is published for readers.
+    pub fn with_session_mut<T>(
+        &self,
+        f: impl FnOnce(&mut OnlineSession) -> Result<T>,
+    ) -> Result<T> {
+        let mut s = self.lock_session()?;
+        let out = f(&mut s)?;
+        *self.published.write().unwrap() = Arc::new(publish_view(&self.name, &s));
+        Ok(out)
+    }
+
+    /// Run a read-only closure under the session lock (stats,
+    /// snapshot-to-disk). Mutation-free, so nothing is republished.
+    pub fn with_session<T>(
+        &self,
+        f: impl FnOnce(&OnlineSession) -> Result<T>,
+    ) -> Result<T> {
+        let s = self.lock_session()?;
+        f(&s)
+    }
+
+    fn lock_session(&self) -> Result<std::sync::MutexGuard<'_, OnlineSession>> {
+        self.session.lock().map_err(|_| {
+            anyhow!(
+                "model '{}' is unavailable: a previous operation on it \
+                 panicked",
+                self.name
+            )
+        })
+    }
+}
+
+fn publish_view(name: &str, s: &OnlineSession) -> PublishedModel {
+    PublishedModel {
+        model: name.to_string(),
+        cent: s.centroids().cloned(),
+        dim: s.data().dim(),
+        k: s.cfg().k,
+        rounds: s.rounds(),
+        n_total: s.data().n(),
+        algo: s.cfg().label(),
+        rev: s.centroids().map(|c| c.rev).unwrap_or(0),
+    }
+}
+
+/// The process-wide model table: named entries behind a read-mostly
+/// lock. `Sync`, so one registry is shared by every connection thread.
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    /// Where protocol `snapshot` ops of wire-created models may write
+    /// (models loaded from a snapshot file keep that file's directory).
+    snapshot_dir: Mutex<PathBuf>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    /// An empty registry: every model arrives via `create` or
+    /// [`ModelRegistry::insert`].
+    pub fn new() -> ModelRegistry {
+        ModelRegistry {
+            models: RwLock::new(BTreeMap::new()),
+            snapshot_dir: Mutex::new(PathBuf::from(".")),
+        }
+    }
+
+    /// A registry hosting `session` as the implicit [`DEFAULT_MODEL`] —
+    /// the back-compat wrapper for single-model serving.
+    pub fn with_default(session: OnlineSession) -> ModelRegistry {
+        let reg = ModelRegistry::new();
+        reg.insert(DEFAULT_MODEL, session)
+            .expect("empty registry accepts the default model");
+        reg
+    }
+
+    /// Directory `create`d models write their protocol snapshots into.
+    pub fn set_snapshot_dir(&self, dir: PathBuf) {
+        *self.snapshot_dir.lock().unwrap() = dir;
+    }
+
+    /// Register an existing session under `name`.
+    pub fn insert(&self, name: &str, session: OnlineSession) -> Result<Arc<ModelEntry>> {
+        validate_name(name)?;
+        let entry = ModelEntry::new(name, session);
+        let mut models = self.models.write().unwrap();
+        ensure!(
+            !models.contains_key(name),
+            "model '{name}' already exists"
+        );
+        ensure!(
+            models.len() < MAX_MODELS,
+            "registry is full ({MAX_MODELS} models) — drop one first"
+        );
+        models.insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Create a fresh empty session (the protocol `create` op). The
+    /// model initialises once `cfg.k` points have been ingested.
+    pub fn create(
+        &self,
+        name: &str,
+        cfg: RunConfig,
+        dim: usize,
+    ) -> Result<Arc<ModelEntry>> {
+        validate_name(name)?;
+        let mut session = OnlineSession::new(cfg, dim)?;
+        session.set_snapshot_dir(self.snapshot_dir.lock().unwrap().clone());
+        self.insert(name, session)
+    }
+
+    /// Look up a model; `None` routes to [`DEFAULT_MODEL`].
+    pub fn resolve(&self, name: Option<&str>) -> Result<Arc<ModelEntry>> {
+        let name = name.unwrap_or(DEFAULT_MODEL);
+        let models = self.models.read().unwrap();
+        models.get(name).cloned().ok_or_else(|| {
+            let known: Vec<&str> = models.keys().map(|k| k.as_str()).collect();
+            anyhow!(
+                "unknown model '{name}' (known: [{}])",
+                known.join(", ")
+            )
+        })
+    }
+
+    /// Remove a model. Its sessions' in-flight operations finish on
+    /// their own `Arc`; the name is immediately reusable.
+    pub fn drop_model(&self, name: &str) -> Result<()> {
+        let mut models = self.models.write().unwrap();
+        ensure!(
+            models.remove(name).is_some(),
+            "unknown model '{name}': nothing to drop"
+        );
+        Ok(())
+    }
+
+    /// Published snapshots of every model, name-ordered.
+    pub fn list(&self) -> Vec<Arc<PublishedModel>> {
+        self.models
+            .read()
+            .unwrap()
+            .values()
+            .map(|e| e.current())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn validate_name(name: &str) -> Result<()> {
+    ensure!(
+        !name.is_empty() && name.len() <= 64,
+        "model name must be 1..=64 characters, got {:?}",
+        name
+    );
+    ensure!(
+        name.chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+        "model name may contain only [A-Za-z0-9._-], got {name:?}"
+    );
+    if name == "." || name == ".." {
+        bail!("model name {name:?} is reserved");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, Rho};
+    use crate::data::gaussian::GaussianMixture;
+    use crate::data::Data;
+
+    fn cfg(k: usize, dim_seed: u64) -> RunConfig {
+        RunConfig {
+            algo: Algo::TbRho,
+            k,
+            b0: 32,
+            rho: Rho::Infinite,
+            threads: 2,
+            seed: dim_seed,
+            max_rounds: 6,
+            max_seconds: 30.0,
+            ..Default::default()
+        }
+    }
+
+    fn rows_of(data: &Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(hi - lo);
+        let mut row = vec![0f32; data.dim()];
+        for i in lo..hi {
+            data.write_row_dense(i, &mut row);
+            out.push(row.clone());
+        }
+        out
+    }
+
+    #[test]
+    fn create_route_drop_lifecycle() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        reg.create("alpha", cfg(3, 1), 4).unwrap();
+        reg.create("beta", cfg(2, 2), 6).unwrap();
+        assert_eq!(reg.len(), 2);
+        // duplicate and invalid names rejected
+        assert!(reg.create("alpha", cfg(3, 1), 4).is_err());
+        let too_long = "x".repeat(65);
+        for bad in ["", "a/b", "a b", "..", too_long.as_str()] {
+            assert!(reg.create(bad, cfg(2, 3), 4).is_err(), "accepted {bad:?}");
+        }
+        assert_eq!(reg.resolve(Some("alpha")).unwrap().name(), "alpha");
+        assert!(reg.resolve(Some("gamma")).is_err());
+        assert!(reg.resolve(None).is_err(), "no default model registered");
+        let names: Vec<String> =
+            reg.list().iter().map(|m| m.model.clone()).collect();
+        assert_eq!(names, vec!["alpha".to_string(), "beta".to_string()]);
+        reg.drop_model("alpha").unwrap();
+        assert!(reg.drop_model("alpha").is_err());
+        assert_eq!(reg.len(), 1);
+        // dropped names are reusable
+        reg.create("alpha", cfg(3, 9), 4).unwrap();
+    }
+
+    #[test]
+    fn registry_is_capped_and_drop_frees_a_slot() {
+        // empty single-thread sessions are cheap: fill to the cap
+        let reg = ModelRegistry::new();
+        let cheap = || RunConfig { threads: 1, ..cfg(2, 1) };
+        for i in 0..MAX_MODELS {
+            reg.create(&format!("m{i}"), cheap(), 3).unwrap();
+        }
+        let err = reg.create("one-too-many", cheap(), 3).unwrap_err();
+        assert!(format!("{err:#}").contains("full"), "{err:#}");
+        // dropping makes room again
+        reg.drop_model("m0").unwrap();
+        reg.create("one-too-many", cheap(), 3).unwrap();
+        assert_eq!(reg.len(), MAX_MODELS);
+    }
+
+    #[test]
+    fn default_model_routes_unnamed_requests() {
+        let data = GaussianMixture::default_spec(3, 5).generate(200, 4);
+        let (session, _) = session::train(&data, &cfg(3, 4)).unwrap();
+        let reg = ModelRegistry::with_default(session);
+        let entry = reg.resolve(None).unwrap();
+        assert_eq!(entry.name(), DEFAULT_MODEL);
+        let (lbl, d2) = entry.predict(&rows_of(&data, 0, 10)).unwrap();
+        assert_eq!(lbl.len(), 10);
+        assert!(d2.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn published_snapshot_is_isolated_from_training() {
+        let data = GaussianMixture::default_spec(4, 6).generate(400, 7);
+        let (session, _) = session::train(&data, &cfg(4, 7)).unwrap();
+        let reg = ModelRegistry::with_default(session);
+        let entry = reg.resolve(None).unwrap();
+        let queries = rows_of(&data, 20, 40);
+
+        let frozen = entry.current();
+        let (lbl_a, d2_a) =
+            frozen.predict(&queries, &NativeEngine::default(), &entry.pool).unwrap();
+        // mutate the session: more rounds move the centroids
+        entry
+            .with_session_mut(|s| s.step(3, 1e9).map(|_| ()))
+            .unwrap();
+        // the frozen view still answers identically (snapshot isolation)
+        let (lbl_b, d2_b) =
+            frozen.predict(&queries, &NativeEngine::default(), &entry.pool).unwrap();
+        assert_eq!(lbl_a, lbl_b);
+        assert_eq!(
+            d2_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            d2_b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // while the entry's live view has advanced
+        let now = entry.current();
+        assert!(now.rounds > frozen.rounds);
+        assert_ne!(now.rev, frozen.rev);
+        // and the live predict matches the session's own answer bitwise
+        let (lbl_live, d2_live) = entry.predict(&queries).unwrap();
+        let (lbl_sess, d2_sess) = entry
+            .with_session(|s| s.predict_rows(&queries))
+            .unwrap();
+        assert_eq!(lbl_live, lbl_sess);
+        assert_eq!(
+            d2_live.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            d2_sess.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uninitialised_model_rejects_predicts_until_fed() {
+        let reg = ModelRegistry::new();
+        let entry = reg.create("fresh", cfg(3, 5), 4).unwrap();
+        assert!(entry.predict(&[vec![0.0; 4]]).is_err());
+        let data = GaussianMixture::default_spec(3, 4).generate(50, 5);
+        entry
+            .with_session_mut(|s| {
+                s.ingest_rows(&rows_of(&data, 0, 50)).map(|_| ())
+            })
+            .unwrap();
+        let (lbl, _) = entry.predict(&[vec![0.0; 4]]).unwrap();
+        assert_eq!(lbl.len(), 1);
+        let view = entry.current();
+        assert!(view.cent.is_some());
+        assert_eq!(view.n_total, 50);
+    }
+}

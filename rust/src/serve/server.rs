@@ -1,48 +1,64 @@
 //! Protocol transports: stdio and TCP.
 //!
-//! Both speak the JSONL protocol (`serve::protocol`) against one
-//! [`OnlineSession`]. The TCP server accepts connections sequentially —
-//! the session is a single training state and every mutation must be
-//! serialised anyway; per-request parallelism comes from the shard pool
-//! inside the assignment engine, which is where the cycles go. An
-//! explicit `shutdown` request ends the whole server (stdio: EOF works
-//! too).
+//! Both speak the JSONL protocol (`serve::protocol`) against one shared
+//! [`ModelRegistry`]. The TCP server runs **one thread per
+//! connection**: predicts resolve a published model snapshot and run
+//! lock-free, so read traffic scales with connections while mutations
+//! (ingest/step/snapshot) serialise only on their own model's session
+//! lock — two different models train and answer concurrently without
+//! touching each other. An explicit `shutdown` request from any
+//! connection stops the whole server (stdio: EOF works too).
 
 use crate::serve::protocol::serve_lines;
-use crate::serve::session::OnlineSession;
+use crate::serve::registry::ModelRegistry;
 use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// Serve requests from stdin, responses to stdout, until EOF or
-/// `shutdown`.
-pub fn serve_stdio(session: &mut OnlineSession) -> Result<()> {
+/// `shutdown`. Single-threaded by construction (one client).
+pub fn serve_stdio(registry: &ModelRegistry) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
-    serve_lines(session, stdin.lock(), &mut out)?;
+    serve_lines(registry, stdin.lock(), &mut out)?;
     Ok(())
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:7878`, or port 0 for ephemeral) and
-/// serve until a client sends `shutdown`.
-pub fn serve_tcp(session: &mut OnlineSession, addr: &str) -> Result<()> {
+/// serve concurrent connections until a client sends `shutdown`.
+pub fn serve_tcp(registry: Arc<ModelRegistry>, addr: &str) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "[nmbkm::serve] listening on {} (JSONL: ingest|predict|step|stats|snapshot|shutdown)",
-        listener.local_addr()?
+        "[nmbkm::serve] listening on {} ({} models; JSONL: create|list|drop|\
+         ingest|predict|step|stats|snapshot|shutdown)",
+        listener.local_addr()?,
+        registry.len(),
     );
-    serve_listener(session, listener)
+    serve_listener(registry, listener)
 }
 
 /// Accept-loop over an already-bound listener (split out so tests can
-/// bind an ephemeral port themselves).
+/// bind an ephemeral port themselves). Every accepted connection gets
+/// its own handler thread against the shared registry.
 pub fn serve_listener(
-    session: &mut OnlineSession,
+    registry: Arc<ModelRegistry>,
     listener: TcpListener,
 ) -> Result<()> {
+    let local = listener.local_addr().ok();
+    let stop = Arc::new(AtomicBool::new(false));
+    // handler thread + a clone of its socket: the clone lets the
+    // acceptor shut the socket down at exit, which unblocks handlers
+    // parked in a read so joining them cannot deadlock on an idle client
+    let mut handlers: Vec<(std::thread::JoinHandle<()>, TcpStream)> =
+        Vec::new();
     for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break; // a handler processed `shutdown` (conn is its wake-up)
+        }
         let stream = match conn {
             Ok(s) => s,
             Err(e) => {
@@ -50,17 +66,53 @@ pub fn serve_listener(
                 continue;
             }
         };
-        match serve_connection(session, stream) {
-            Ok(true) => break, // explicit shutdown ends the server
-            Ok(false) => {}    // client hung up; accept the next one
-            Err(e) => eprintln!("[nmbkm::serve] connection error: {e:#}"),
-        }
+        let peer = match stream.try_clone() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("[nmbkm::serve] clone failed: {e}");
+                continue;
+            }
+        };
+        let reg = registry.clone();
+        let stop_flag = stop.clone();
+        let handle = std::thread::spawn(move || {
+            match serve_connection(&reg, stream) {
+                Ok(true) => {
+                    // explicit shutdown: flag the acceptor, then poke the
+                    // listener so its blocking accept() returns. If the
+                    // bound address is not self-connectable (external
+                    // interface), fall back to loopback on the same port.
+                    stop_flag.store(true, Ordering::SeqCst);
+                    if let Some(addr) = local {
+                        if TcpStream::connect(addr).is_err() {
+                            let _ = TcpStream::connect((
+                                std::net::Ipv4Addr::LOCALHOST,
+                                addr.port(),
+                            ));
+                        }
+                    }
+                }
+                Ok(false) => {} // client hung up; nothing to do
+                Err(e) => eprintln!("[nmbkm::serve] connection error: {e:#}"),
+            }
+        });
+        handlers.push((handle, peer));
+        // reap finished handlers so long-lived servers don't accumulate
+        handlers.retain(|(h, _)| !h.is_finished());
+    }
+    // close every live connection so handlers blocked mid-read wake with
+    // EOF, then join — never waits on a client that simply stays silent
+    for (_, peer) in &handlers {
+        let _ = peer.shutdown(std::net::Shutdown::Both);
+    }
+    for (h, _) in handlers {
+        let _ = h.join();
     }
     Ok(())
 }
 
 fn serve_connection(
-    session: &mut OnlineSession,
+    registry: &ModelRegistry,
     stream: TcpStream,
 ) -> Result<bool> {
     if let Ok(peer) = stream.peer_addr() {
@@ -68,5 +120,5 @@ fn serve_connection(
     }
     let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = BufWriter::new(stream);
-    serve_lines(session, reader, &mut writer)
+    serve_lines(registry, reader, &mut writer)
 }

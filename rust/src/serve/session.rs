@@ -49,12 +49,14 @@ pub struct StepReport {
 }
 
 /// A long-lived clustering session: the unit of state behind `nmbkm
-/// train/serve` and the JSONL protocol.
+/// train/serve` and the JSONL protocol. `Send` throughout (trait
+/// objects included), so a [`crate::serve::registry::ModelRegistry`]
+/// can host it behind a mutex shared across connection threads.
 pub struct OnlineSession {
     cfg: RunConfig,
     data: Data,
-    alg: Option<Box<dyn Clusterer>>,
-    engine: Box<dyn AssignEngine>,
+    alg: Option<Box<dyn Clusterer + Send>>,
+    engine: Box<dyn AssignEngine + Send>,
     pool: Pool,
     rng: Pcg64,
     rounds: usize,
@@ -282,42 +284,16 @@ impl OnlineSession {
                 self.cfg.k
             )
         })?;
-        let d = self.data.dim();
-        let n = rows.len();
-        let mut buf = Vec::with_capacity(n * d);
-        for (t, r) in rows.iter().enumerate() {
-            ensure!(
-                r.len() == d,
-                "predict row {t}: dimension {} != model dimension {d}",
-                r.len()
-            );
-            buf.extend_from_slice(r);
-        }
-        let queries = Data::dense(DenseMatrix::from_vec(n, d, buf));
-        let mut lbl = vec![0u32; n];
-        let mut d2 = vec![0f32; n];
-        self.engine.assign(
-            &queries,
-            Sel::Range(0, n),
-            cent,
-            &self.pool,
-            &mut lbl,
-            &mut d2,
-        );
-        Ok((lbl, d2))
+        predict_against(cent, self.data.dim(), rows, self.engine.as_ref(), &self.pool)
     }
 
     /// Export the full session as a snapshot artifact. `include_data`
     /// trades file size for resumability (without it the artifact is
-    /// predict-only).
+    /// predict-only). Clones the data buffer — prefer
+    /// [`OnlineSession::save_snapshot`] for writing to disk, which
+    /// streams from borrowed state instead.
     pub fn snapshot(&self, include_data: bool) -> Result<Snapshot> {
-        let alg = self
-            .alg
-            .as_ref()
-            .ok_or_else(|| anyhow!("nothing to snapshot: model not initialised"))?;
-        let state = alg
-            .export_state()
-            .ok_or_else(|| anyhow!("algorithm '{}' is not resumable", alg.name()))?;
+        let state = self.export_state()?;
         Ok(Snapshot {
             cfg: self.cfg.clone(),
             state,
@@ -325,6 +301,49 @@ impl OnlineSession {
             rounds: self.rounds,
             data: if include_data { Some(self.data.clone()) } else { None },
         })
+    }
+
+    /// Stream the session as a snapshot JSON document to `w` without
+    /// cloning the data buffer (byte-identical to
+    /// `self.snapshot(include_data)?.to_json().to_string()`).
+    pub fn write_snapshot<W: std::io::Write>(
+        &self,
+        include_data: bool,
+        w: &mut W,
+    ) -> Result<()> {
+        let state = self.export_state()?;
+        crate::serve::snapshot::write_snapshot(
+            &self.cfg,
+            &state,
+            &self.rng,
+            self.rounds,
+            include_data.then_some(&self.data),
+            w,
+        )
+    }
+
+    /// Atomic streaming save: the serving-path replacement for
+    /// `self.snapshot(…)?.save(path)` that avoids the transient
+    /// data-buffer clone and in-memory document.
+    pub fn save_snapshot(&self, path: &std::path::Path, include_data: bool) -> Result<()> {
+        let state = self.export_state()?;
+        crate::serve::snapshot::save_parts(
+            &self.cfg,
+            &state,
+            &self.rng,
+            self.rounds,
+            include_data.then_some(&self.data),
+            path,
+        )
+    }
+
+    fn export_state(&self) -> Result<crate::kmeans::NestedState> {
+        let alg = self
+            .alg
+            .as_ref()
+            .ok_or_else(|| anyhow!("nothing to snapshot: model not initialised"))?;
+        alg.export_state()
+            .ok_or_else(|| anyhow!("algorithm '{}' is not resumable", alg.name()))
     }
 
     /// Cheap observability record (the protocol's `stats` op).
@@ -345,7 +364,18 @@ impl OnlineSession {
             fields.push(("train_mse", json::num(info.train_mse)));
             fields.push(("last_changed", json::num(info.changed as f64)));
         }
+        if let Some((hits, builds)) = self.engine.trans_cache_stats() {
+            fields.push(("trans_cache_hits", json::num(hits as f64)));
+            fields.push(("trans_cache_builds", json::num(builds as f64)));
+        }
         json::obj(fields)
+    }
+
+    /// The session's shard pool handle (shared workers; cloning is
+    /// cheap). The registry's lock-free predict path reuses it so
+    /// predicts and training draw from one set of worker threads.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
     }
 
     fn try_init(&mut self) {
@@ -353,6 +383,36 @@ impl OnlineSession {
             self.alg = Some(kmeans::make_clusterer(&self.data, &self.cfg));
         }
     }
+}
+
+/// Score query rows against an explicit model: the shared predict core.
+/// Both the session's own `predict_rows` and the registry's
+/// snapshot-isolated [`crate::serve::registry::PublishedModel`] path go
+/// through here, so a predict answered from a published snapshot is
+/// bit-identical to one answered by the live session at the same
+/// centroid revision.
+pub fn predict_against(
+    cent: &Centroids,
+    dim: usize,
+    rows: &[Vec<f32>],
+    engine: &dyn AssignEngine,
+    pool: &Pool,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    let n = rows.len();
+    let mut buf = Vec::with_capacity(n * dim);
+    for (t, r) in rows.iter().enumerate() {
+        ensure!(
+            r.len() == dim,
+            "predict row {t}: dimension {} != model dimension {dim}",
+            r.len()
+        );
+        buf.extend_from_slice(r);
+    }
+    let queries = Data::dense(DenseMatrix::from_vec(n, dim, buf));
+    let mut lbl = vec![0u32; n];
+    let mut d2 = vec![0f32; n];
+    engine.assign(&queries, Sel::Range(0, n), cent, pool, &mut lbl, &mut d2);
+    Ok((lbl, d2))
 }
 
 /// One-shot training driver: buffer all of `data`, then run rounds under
@@ -382,9 +442,9 @@ fn ensure_resumable_algo(cfg: &RunConfig) -> Result<()> {
     }
 }
 
-fn make_engine(cfg: &RunConfig) -> Result<Box<dyn AssignEngine>> {
+fn make_engine(cfg: &RunConfig) -> Result<Box<dyn AssignEngine + Send>> {
     match cfg.engine {
-        Engine::Native => Ok(Box::new(NativeEngine)),
+        Engine::Native => Ok(Box::new(NativeEngine::default())),
         Engine::Xla => crate::runtime::make_engine(&cfg.artifacts_dir),
     }
 }

@@ -40,6 +40,7 @@ use crate::linalg::sparse::CsrMatrix;
 use crate::util::json::{self, hex_decode, hex_encode, Json};
 use crate::util::rng::Pcg64;
 use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::Write;
 use std::path::Path;
 
 /// Current snapshot format version; bumped on incompatible changes.
@@ -230,15 +231,18 @@ impl Snapshot {
     }
 
     /// Write atomically (temp file + rename) so a crash mid-save never
-    /// leaves a torn artifact behind.
+    /// leaves a torn artifact behind. Streams through
+    /// [`write_snapshot`], so the document (and its 2x-size hex blobs)
+    /// never materialise in memory.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let text = self.to_json().to_string();
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, &text)
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming into {}", path.display()))?;
-        Ok(())
+        save_parts(
+            &self.cfg,
+            &self.state,
+            &self.rng,
+            self.rounds,
+            self.data.as_ref(),
+            path,
+        )
     }
 
     pub fn load(path: &Path) -> Result<Snapshot> {
@@ -248,6 +252,155 @@ impl Snapshot {
             .map_err(|e| anyhow!("snapshot {}: {e}", path.display()))?;
         Self::from_json(&v)
     }
+}
+
+/// Serialise a snapshot's parts as JSON **directly to the writer**:
+/// nothing larger than an 8 KB hex buffer is materialised, and the data
+/// section streams from the (borrowed) live buffer. The previous path
+/// cloned the data buffer into an owned [`Snapshot`] and then built the
+/// whole document string — a transient 3–4x memory spike on large
+/// models. Output is byte-identical to `Snapshot::to_json().to_string()`
+/// (keys in the same sorted order, same number/hex formats; tested), so
+/// both paths produce interchangeable, stable artifacts.
+pub fn write_snapshot<W: Write>(
+    cfg: &RunConfig,
+    state: &NestedState,
+    rng: &Pcg64,
+    rounds: usize,
+    data: Option<&Data>,
+    w: &mut W,
+) -> Result<()> {
+    let st = state;
+    let (rng_words, rng_spare) = rng.to_parts();
+    // keys in BTreeMap (lexicographic) order to match Json::to_string
+    write!(w, "{{\"b\":{}", st.b)?;
+    write!(w, ",\"b_prev\":{}", st.b_prev)?;
+    w.write_all(b",\"cent_norms\":\"")?;
+    write_hex_f32s(w, &st.cent.norms)?;
+    w.write_all(b"\",\"cent_p\":\"")?;
+    write_hex_f32s(w, &st.cent.p)?;
+    w.write_all(b"\",\"centroids\":\"")?;
+    write_hex_f32s(w, &st.cent.c.data)?;
+    w.write_all(b"\",\"config\":")?;
+    w.write_all(cfg.to_json().to_string().as_bytes())?;
+    write!(w, ",\"d\":{}", st.cent.d())?;
+    if let Some(data) = data {
+        w.write_all(b",\"data\":")?;
+        write_data(w, data)?;
+    }
+    w.write_all(b",\"dist2\":\"")?;
+    write_hex_f32s(w, &st.assign.dist2)?;
+    w.write_all(b"\",\"format\":\"nmbkm-snapshot\"")?;
+    write!(w, ",\"k\":{}", st.cent.k())?;
+    w.write_all(b",\"labels\":\"")?;
+    write_hex_u32s(w, &st.assign.label)?;
+    write!(w, "\",\"n\":{}", st.n)?;
+    match rng_spare {
+        Some(x) => write!(w, ",\"rng_spare\":\"{:x}\"", x.to_bits())?,
+        None => w.write_all(b",\"rng_spare\":null")?,
+    }
+    w.write_all(b",\"rng_state\":[")?;
+    for (i, word) in rng_words.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        write!(w, "\"{word:x}\"")?;
+    }
+    write!(w, "],\"rounds\":{rounds}")?;
+    w.write_all(b",\"seen_mask\":\"")?;
+    write_hex_bytes(w, seen_mask(&st.assign.label).into_iter())?;
+    w.write_all(b"\",\"stats_s\":\"")?;
+    write_hex_f64s(w, &st.stats.s)?;
+    w.write_all(b"\",\"stats_sse\":\"")?;
+    write_hex_f64s(w, &st.stats.sse)?;
+    w.write_all(b"\",\"stats_v\":\"")?;
+    write_hex_f64s(w, &st.stats.v)?;
+    write!(w, "\",\"version\":{SNAPSHOT_VERSION}}}")?;
+    Ok(())
+}
+
+/// Atomic streaming save (temp file + rename) from borrowed parts.
+pub fn save_parts(
+    cfg: &RunConfig,
+    state: &NestedState,
+    rng: &Pcg64,
+    rounds: usize,
+    data: Option<&Data>,
+    path: &Path,
+) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        write_snapshot(cfg, state, rng, rounds, data, &mut w)?;
+        w.flush()
+            .with_context(|| format!("writing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Data section, keys in sorted order (matches `data_to_json`).
+fn write_data<W: Write>(w: &mut W, data: &Data) -> Result<()> {
+    match &data.storage {
+        Storage::Dense(m) => {
+            write!(w, "{{\"cols\":{},\"kind\":\"dense\",\"rows\":{}", m.cols, m.rows)?;
+            w.write_all(b",\"values\":\"")?;
+            write_hex_f32s(w, &m.data)?;
+            w.write_all(b"\"}")?;
+        }
+        Storage::Sparse(m) => {
+            write!(w, "{{\"cols\":{}", m.cols)?;
+            w.write_all(b",\"indices\":\"")?;
+            write_hex_u32s(w, &m.indices)?;
+            w.write_all(b"\",\"indptr\":\"")?;
+            write_hex_bytes(
+                w,
+                m.indptr
+                    .iter()
+                    .flat_map(|&p| (p as u64).to_le_bytes()),
+            )?;
+            write!(w, "\",\"kind\":\"sparse\",\"rows\":{}", m.rows)?;
+            w.write_all(b",\"values\":\"")?;
+            write_hex_f32s(w, &m.values)?;
+            w.write_all(b"\"}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Stream lowercase hex of a byte iterator through a fixed 8 KB buffer.
+fn write_hex_bytes<W: Write>(
+    w: &mut W,
+    bytes: impl Iterator<Item = u8>,
+) -> std::io::Result<()> {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut buf = [0u8; 8192];
+    let mut fill = 0usize;
+    for b in bytes {
+        buf[fill] = HEX[(b >> 4) as usize];
+        buf[fill + 1] = HEX[(b & 0xf) as usize];
+        fill += 2;
+        if fill == buf.len() {
+            w.write_all(&buf)?;
+            fill = 0;
+        }
+    }
+    w.write_all(&buf[..fill])
+}
+
+fn write_hex_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    write_hex_bytes(w, xs.iter().flat_map(|x| x.to_le_bytes()))
+}
+
+fn write_hex_f64s<W: Write>(w: &mut W, xs: &[f64]) -> std::io::Result<()> {
+    write_hex_bytes(w, xs.iter().flat_map(|x| x.to_le_bytes()))
+}
+
+fn write_hex_u32s<W: Write>(w: &mut W, xs: &[u32]) -> std::io::Result<()> {
+    write_hex_bytes(w, xs.iter().flat_map(|x| x.to_le_bytes()))
 }
 
 /// Bit-packed "is this point part of the model" mask (LSB-first).
@@ -510,6 +663,52 @@ mod tests {
         flipped[0] ^= 1;
         let bad = good.replace(&mask_hex, &hex_encode(&flipped));
         assert!(Snapshot::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn streaming_writer_matches_tree_serialisation_exactly() {
+        // the streaming path must emit byte-identical documents to
+        // to_json().to_string() — dense, sparse, and model-only
+        let (data, st) = tiny_state(40, 3, 5, 8);
+        let dense_snap = snap(data, st);
+        let mut sparse_m = CsrMatrix::empty(5);
+        for i in 0..30 {
+            sparse_m.push_row(&[(i % 5, 1.0 + i as f32), ((i + 2) % 5, -0.5)]);
+        }
+        let sparse_data = Data::sparse(sparse_m);
+        // same state shape, sparse buffer attached in its place
+        let (_, sparse_st) = tiny_state(30, 3, 5, 9);
+        let mut sparse_snap = snap(
+            GaussianMixture::default_spec(3, 5).generate(30, 9),
+            sparse_st,
+        );
+        sparse_snap.data = Some(sparse_data);
+        let mut model_only = snap(
+            GaussianMixture::default_spec(3, 5).generate(40, 8),
+            tiny_state(40, 3, 5, 8).1,
+        );
+        model_only.data = None;
+        for (tag, s) in [
+            ("dense", &dense_snap),
+            ("sparse", &sparse_snap),
+            ("model-only", &model_only),
+        ] {
+            let mut streamed = Vec::new();
+            write_snapshot(
+                &s.cfg,
+                &s.state,
+                &s.rng,
+                s.rounds,
+                s.data.as_ref(),
+                &mut streamed,
+            )
+            .unwrap();
+            assert_eq!(
+                String::from_utf8(streamed).unwrap(),
+                s.to_json().to_string(),
+                "{tag}: streaming writer diverged from tree serialiser"
+            );
+        }
     }
 
     #[test]

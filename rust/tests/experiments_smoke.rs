@@ -34,7 +34,7 @@ fn fig1_runs_on_small_gaussian() {
     with_tmp_results("fig1", || {
         let ds = common::gaussian_small();
         let opts = tiny_opts();
-        let curves = fig1::run_dataset(&ds, &opts, &NativeEngine).unwrap();
+        let curves = fig1::run_dataset(&ds, &opts, &NativeEngine::default()).unwrap();
         assert_eq!(curves.len(), fig1::algo_set().len());
         for c in &curves {
             assert!(c.mean_final.is_finite(), "{}: no final MSE", c.label);
@@ -51,7 +51,7 @@ fn rho_sweep_covers_all_rhos() {
     with_tmp_results("rho", || {
         let ds = common::gaussian_small();
         let opts = tiny_opts();
-        let curves = rho_sweep::run_dataset(&ds, &opts, &NativeEngine).unwrap();
+        let curves = rho_sweep::run_dataset(&ds, &opts, &NativeEngine::default()).unwrap();
         // mb + 5 gb-ρ + 5 tb-ρ
         assert_eq!(curves.len(), 11);
         let labels: Vec<&str> =
@@ -74,7 +74,7 @@ fn table1_emits_rows_and_csv() {
         let t8 = table1::time_epoch(
             &ds,
             nmbkm::kmeans::minibatch::Formulation::Alg8,
-            &NativeEngine,
+            &NativeEngine::default(),
             2,
             1024,
         );

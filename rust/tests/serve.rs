@@ -11,7 +11,8 @@ use nmbkm::data::Data;
 use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel};
 use nmbkm::kmeans::state::{SuffStats, UNASSIGNED};
 use nmbkm::linalg::dense::DenseMatrix;
-use nmbkm::serve::{protocol, session, Snapshot};
+use nmbkm::serve::{protocol, session, ModelRegistry, Snapshot};
+use std::sync::Arc;
 use nmbkm::util::json::Json;
 use nmbkm::util::propcheck::Cases;
 
@@ -179,7 +180,7 @@ fn online_ingest_counts_every_point_exactly_once() {
 #[test]
 fn protocol_predict_parity_with_engine() {
     let data = GaussianMixture::default_spec(4, 7).generate(600, 5);
-    let (mut s, _) = session::train(&data, &cfg(Algo::TbRho, 4, 64, 5)).unwrap();
+    let (s, _) = session::train(&data, &cfg(Algo::TbRho, 4, 64, 5)).unwrap();
     let queries = rows_of(&data, 50, 90);
 
     // reference: straight through the in-process engine
@@ -192,7 +193,7 @@ fn protocol_predict_parity_with_engine() {
     let qdata = Data::dense(DenseMatrix::from_vec(n, 7, flat));
     let mut ref_lbl = vec![0u32; n];
     let mut ref_d2 = vec![0f32; n];
-    NativeEngine.assign(
+    NativeEngine::default().assign(
         &qdata,
         Sel::Range(0, n),
         &cent,
@@ -201,7 +202,8 @@ fn protocol_predict_parity_with_engine() {
         &mut ref_d2,
     );
 
-    // same queries over the JSONL protocol
+    // same queries over the JSONL protocol (implicit default model)
+    let reg = ModelRegistry::with_default(s);
     let mut points = String::from("[");
     for (t, q) in queries.iter().enumerate() {
         if t > 0 {
@@ -213,7 +215,7 @@ fn protocol_predict_parity_with_engine() {
     points.push(']');
     let input = format!("{{\"op\":\"predict\",\"points\":{points}}}\n");
     let mut out = Vec::new();
-    protocol::serve_lines(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+    protocol::serve_lines(&reg, std::io::Cursor::new(input), &mut out).unwrap();
     let resp = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
     let labels: Vec<u32> = resp
@@ -247,12 +249,11 @@ fn tcp_server_end_to_end() {
     };
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        // session is built inside the thread (the engine/clusterer trait
-        // objects are deliberately not Send-bounded)
         let data = GaussianMixture::default_spec(3, 5).generate(400, 2);
-        let (mut s, _) =
+        let (s, _) =
             session::train(&data, &cfg(Algo::GbRho, 3, 64, 4)).unwrap();
-        nmbkm::serve::server::serve_listener(&mut s, listener).unwrap();
+        let reg = Arc::new(ModelRegistry::with_default(s));
+        nmbkm::serve::server::serve_listener(reg, listener).unwrap();
     });
 
     let mut conn = std::net::TcpStream::connect(addr).unwrap();
@@ -294,13 +295,11 @@ fn end_to_end_train_snapshot_serve_flow() {
     let path = std::env::temp_dir().join("nmbkm-e2e-flow.json");
     trained.snapshot(true).unwrap().save(&path).unwrap();
 
-    let mut served =
+    let served =
         session::OnlineSession::resume(Snapshot::load(&path).unwrap()).unwrap();
     std::fs::remove_file(&path).ok();
-    let (resp, _) = protocol::handle_line(
-        &mut served,
-        r#"{"op":"stats"}"#,
-    );
+    let reg = ModelRegistry::with_default(served);
+    let (resp, _) = protocol::handle_line(&reg, r#"{"op":"stats"}"#);
     assert_eq!(resp.get("n_total").unwrap().as_usize(), Some(1500));
 
     // fresh chunk arrives over the protocol
@@ -316,11 +315,12 @@ fn end_to_end_train_snapshot_serve_flow() {
         "{{\"op\":\"ingest\",\"points\":[{}],\"rounds\":2}}",
         coords.join(",")
     );
-    let (resp, _) = protocol::handle_line(&mut served, &req);
+    let (resp, _) = protocol::handle_line(&reg, &req);
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
     assert_eq!(resp.get("n").unwrap().as_usize(), Some(1510));
 
-    let (lbl, d2) = served.predict_rows(&rows_of(&corpus, 0, 25)).unwrap();
+    let entry = reg.resolve(None).unwrap();
+    let (lbl, d2) = entry.predict(&rows_of(&corpus, 0, 25)).unwrap();
     assert_eq!(lbl.len(), 25);
     assert!(lbl.iter().all(|&j| (j as usize) < 6));
     assert!(d2.iter().all(|&x| x.is_finite()));

@@ -1,0 +1,380 @@
+//! Concurrency tests for multi-model serving: predicts issued from
+//! concurrent TCP connections while a session trains must be
+//! bit-identical to sequential serving (snapshot isolation), the
+//! registry must route create/ingest/predict/drop by model name over
+//! real sockets, and concurrently training sparse sessions must keep
+//! their own transpose caches.
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::Data;
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::serve::{session, ModelRegistry};
+use nmbkm::util::json::Json;
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+fn cfg(algo: Algo, k: usize, b0: usize) -> RunConfig {
+    RunConfig {
+        algo,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 23,
+        max_rounds: usize::MAX,
+        max_seconds: f64::INFINITY,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn rows_of(data: &Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut row = vec![0f32; data.dim()];
+    for i in lo..hi {
+        data.write_row_dense(i, &mut row);
+        out.push(row.clone());
+    }
+    out
+}
+
+fn points_json(rows: &[Vec<f32>]) -> String {
+    let coords: Vec<String> = rows
+        .iter()
+        .map(|q| {
+            let xs: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    format!("[{}]", coords.join(","))
+}
+
+/// One request/response exchange on an open connection.
+fn roundtrip(
+    conn: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    req: &str,
+) -> Json {
+    conn.write_all(req.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap()
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+/// Bit-pattern fingerprint of one predict answer.
+fn fingerprint(resp: &Json) -> (Vec<u32>, Vec<u32>) {
+    let labels: Vec<u32> = resp
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as u32)
+        .collect();
+    // f32 → f64 JSON number → f32 is lossless, so these are the exact
+    // bits the serving engine produced
+    let d2: Vec<u32> = resp
+        .get("d2")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| (x.as_f64().unwrap() as f32).to_bits())
+        .collect();
+    (labels, d2)
+}
+
+/// The acceptance-criteria test: ≥4 concurrent TCP connections hammer
+/// predicts while the session trains round by round. Every concurrent
+/// answer must be bit-identical to the *sequential* answer at some
+/// round boundary — snapshot isolation means a predict sees exactly a
+/// completed round's model, never a blend.
+#[test]
+fn concurrent_predicts_bit_match_sequential_serving() {
+    const ROUNDS: usize = 8;
+    const CONNS: usize = 4;
+    let data = GaussianMixture::default_spec(5, 6).generate(1500, 3);
+    let queries = rows_of(&data, 100, 130);
+
+    // sequential reference: same config, same data ⇒ deterministic
+    // trajectory; collect the predict answer at every round boundary
+    let mut reference = HashSet::new();
+    let mut final_ref = None;
+    {
+        let mut s =
+            session::OnlineSession::from_data(data.clone(), cfg(Algo::TbRho, 5, 128))
+                .unwrap();
+        for r in 0..=ROUNDS {
+            let (lbl, d2) = s.predict_rows(&queries).unwrap();
+            let fp = (
+                lbl,
+                d2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            );
+            if r == ROUNDS {
+                final_ref = Some(fp.clone());
+            }
+            reference.insert(fp);
+            if r < ROUNDS {
+                s.step(1, f64::INFINITY).unwrap();
+            }
+        }
+    }
+
+    // served twin: identical construction, driven over TCP
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            return;
+        }
+    };
+    let addr = listener.local_addr().unwrap();
+    let served =
+        session::OnlineSession::from_data(data.clone(), cfg(Algo::TbRho, 5, 128))
+            .unwrap();
+    let reg = Arc::new(ModelRegistry::with_default(served));
+    let server = std::thread::spawn(move || {
+        nmbkm::serve::server::serve_listener(reg, listener).unwrap();
+    });
+
+    let predict_req = format!(
+        "{{\"op\":\"predict\",\"points\":{}}}",
+        points_json(&queries)
+    );
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for c in 0..CONNS {
+        let req = predict_req.clone();
+        let stop = stop.clone();
+        clients.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            let mut fps = Vec::new();
+            let mut polls = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst)
+                || polls == 0
+            {
+                let resp = roundtrip(&mut conn, &mut reader, &req);
+                assert_eq!(
+                    resp.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "client {c}: {resp:?}"
+                );
+                fps.push(fingerprint(&resp));
+                polls += 1;
+            }
+            fps
+        }));
+    }
+
+    // drive training round-by-round from its own connection while the
+    // predict clients run
+    let (mut conn, mut reader) = connect(addr);
+    for _ in 0..ROUNDS {
+        let resp =
+            roundtrip(&mut conn, &mut reader, r#"{"op":"step","rounds":1}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+
+    let mut total = 0usize;
+    for client in clients {
+        for fp in client.join().unwrap() {
+            assert!(
+                reference.contains(&fp),
+                "a concurrent predict answered with bits no sequential \
+                 round boundary ever produced (snapshot isolation broken)"
+            );
+            total += 1;
+        }
+    }
+    assert!(total >= CONNS, "every client answered at least once");
+
+    // after training settles, the served answer equals the final
+    // sequential answer exactly
+    let resp = roundtrip(&mut conn, &mut reader, &predict_req);
+    assert_eq!(fingerprint(&resp), final_ref.unwrap());
+    roundtrip(&mut conn, &mut reader, r#"{"op":"shutdown"}"#);
+    server.join().unwrap();
+}
+
+/// Registry lifecycle over real sockets: create two models from
+/// different connections, route by name, list, drop, and verify the
+/// whole server shuts down from any connection.
+#[test]
+fn registry_create_route_drop_over_tcp() {
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            return;
+        }
+    };
+    let addr = listener.local_addr().unwrap();
+    let reg = Arc::new(ModelRegistry::new());
+    let server = std::thread::spawn(move || {
+        nmbkm::serve::server::serve_listener(reg, listener).unwrap();
+    });
+
+    let (mut c1, mut r1) = connect(addr);
+    let (mut c2, mut r2) = connect(addr);
+
+    // connection 1 creates a 4-dim model; connection 2 a 6-dim model
+    let resp = roundtrip(
+        &mut c1,
+        &mut r1,
+        r#"{"op":"create","model":"narrow","k":3,"dim":4,"algo":"gb","b0":32,"seed":1}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let resp = roundtrip(
+        &mut c2,
+        &mut r2,
+        r#"{"op":"create","model":"wide","k":2,"dim":6,"algo":"tb","b0":32,"seed":2}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+
+    // feed each model from the *other* connection (registry is shared)
+    let narrow = GaussianMixture::default_spec(3, 4).generate(80, 4);
+    let wide = GaussianMixture::default_spec(2, 6).generate(80, 5);
+    let resp = roundtrip(
+        &mut c2,
+        &mut r2,
+        &format!(
+            "{{\"op\":\"ingest\",\"model\":\"narrow\",\"points\":{},\"rounds\":1}}",
+            points_json(&rows_of(&narrow, 0, 80))
+        ),
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let resp = roundtrip(
+        &mut c1,
+        &mut r1,
+        &format!(
+            "{{\"op\":\"ingest\",\"model\":\"wide\",\"points\":{},\"rounds\":1}}",
+            points_json(&rows_of(&wide, 0, 80))
+        ),
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+
+    // predicts route by name — the payload dimension proves which model
+    // answered
+    let resp = roundtrip(
+        &mut c1,
+        &mut r1,
+        r#"{"op":"predict","model":"narrow","points":[[0,0,0,0]]}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("model").and_then(Json::as_str), Some("narrow"));
+    let resp = roundtrip(
+        &mut c1,
+        &mut r1,
+        r#"{"op":"predict","model":"wide","points":[[0,0,0,0]]}"#,
+    );
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(false),
+        "4-dim query must not fit the 6-dim model"
+    );
+    // no default model exists in this registry
+    let resp = roundtrip(
+        &mut c2,
+        &mut r2,
+        r#"{"op":"predict","points":[[0,0,0,0]]}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+
+    // list shows both models with their shapes
+    let resp = roundtrip(&mut c2, &mut r2, r#"{"op":"list"}"#);
+    let models = resp.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    assert_eq!(models[0].get("model").and_then(Json::as_str), Some("narrow"));
+    assert_eq!(models[0].get("dim").and_then(Json::as_usize), Some(4));
+    assert_eq!(models[1].get("model").and_then(Json::as_str), Some("wide"));
+    assert_eq!(models[1].get("dim").and_then(Json::as_usize), Some(6));
+
+    // drop on one connection is immediately visible on the other
+    let resp = roundtrip(&mut c1, &mut r1, r#"{"op":"drop","model":"wide"}"#);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    let resp = roundtrip(
+        &mut c2,
+        &mut r2,
+        r#"{"op":"stats","model":"wide"}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+
+    roundtrip(&mut c2, &mut r2, r#"{"op":"shutdown"}"#);
+    server.join().expect("server exits after shutdown from any connection");
+}
+
+/// ROADMAP acceptance: two concurrently training sparse sessions must
+/// not evict each other's transpose cache. Per-session builds stay
+/// bounded by the number of centroid revisions that session itself
+/// produced (the old process-global slot rebuilt on every interleaved
+/// call), and within-round reuse still registers hits.
+#[test]
+fn concurrent_sparse_sessions_keep_their_transpose_caches() {
+    const ROUNDS: usize = 6;
+    let gen = |seed: u64| {
+        nmbkm::data::rcv1::Rcv1Sim {
+            vocab: 500,
+            topic_vocab: 60,
+            ..Default::default()
+        }
+        .generate(800, seed)
+    };
+    let mut handles = Vec::new();
+    for seed in [1u64, 2u64] {
+        let data = gen(seed);
+        handles.push(std::thread::spawn(move || {
+            let mut s = session::OnlineSession::from_data(
+                data,
+                cfg(Algo::GbRho, 12, 256),
+            )
+            .unwrap();
+            for _ in 0..ROUNDS {
+                s.step(1, f64::INFINITY).unwrap();
+                // yield so the two trainers genuinely interleave
+                std::thread::yield_now();
+            }
+            let stats = s.stats_json();
+            let hits = stats
+                .get("trans_cache_hits")
+                .and_then(Json::as_usize)
+                .expect("native engine reports cache hits");
+            let builds = stats
+                .get("trans_cache_builds")
+                .and_then(Json::as_usize)
+                .expect("native engine reports cache builds");
+            (hits, builds)
+        }));
+    }
+    for h in handles {
+        let (hits, builds) = h.join().unwrap();
+        // one build per centroid revision this session used (+1 for the
+        // initial centroids). This is the eviction signal: the old
+        // process-global slot rebuilt on (nondeterministically many)
+        // interleaved calls from the other session, blowing well past
+        // this bound. Exact hit counts for the interleaved-call pattern
+        // are asserted in the engine-level unit test
+        // (`per_engine_caches_do_not_evict_each_other`).
+        assert!(
+            builds <= ROUNDS + 1,
+            "per-session transpose cache thrashed: {builds} builds for \
+             {ROUNDS} rounds"
+        );
+        // every round makes at least one cache-eligible engine fetch
+        assert!(
+            hits + builds >= ROUNDS,
+            "cache counters undercount engine calls \
+             (hits={hits}, builds={builds}, rounds={ROUNDS})"
+        );
+    }
+}
