@@ -9,10 +9,11 @@
 
 use nmbkm::bench::{BenchOpts, BenchReport, BenchSet};
 use nmbkm::coordinator::Pool;
-use nmbkm::data::{gaussian::GaussianMixture, infmnist::InfMnist, rcv1::Rcv1Sim};
+use nmbkm::data::{gaussian::GaussianMixture, infmnist::InfMnist, rcv1::Rcv1Sim, Storage};
 use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel};
 use nmbkm::kmeans::{bounds, init};
 use nmbkm::linalg::simd::{self, Tier};
+use nmbkm::linalg::sparse::{spdot, TransposedCentroids};
 use nmbkm::util::json;
 
 fn arg_value(args: &[String], flag: &str) -> Option<String> {
@@ -175,6 +176,113 @@ fn main() {
             eng.assign(&sdata, Sel::Range(0, sdata.n()), &scent, &pool_n, &mut slbl, &mut sd2)
         });
     }
+    report.push(set);
+
+    // --- sparse kernels (the fig. 3 RCV1 shape: k=64, ~76 nnz/row) --------
+    // the acceptance comparison for the sparse hot-path overhaul: the
+    // dispatched AXPY sweep and the blocked+pruned engine path against
+    // the scalar tc.dots reference, under both forced-scalar and auto
+    // dispatch in CI
+    let skdata = Rcv1Sim::default().generate(4_000, 7);
+    let skcent = init::first_k(&skdata, 64);
+    let tc = TransposedCentroids::build(&skcent.c);
+    let sm = match &skdata.storage {
+        Storage::Sparse(m) => m,
+        Storage::Dense(_) => unreachable!("rcv1 sim generates CSR data"),
+    };
+    let mut set = BenchSet::new("sparse kernels (rcv1 4k rows, k=64)", opts);
+    set.bench("spdot row pass (gather)", || {
+        let mut acc = 0f32;
+        for i in 0..sm.rows {
+            let (idx, vals) = sm.row(i);
+            acc += spdot(
+                std::hint::black_box(idx),
+                std::hint::black_box(vals),
+                skcent.c.row(i % 64),
+            );
+        }
+        acc
+    });
+    let mut dots_a = vec![0f32; 64];
+    set.bench("tc.dots pass (scalar)", || {
+        let mut acc = 0f32;
+        for i in 0..sm.rows {
+            let (idx, vals) = sm.row(i);
+            tc.dots_with(Tier::Scalar, idx, vals, &mut dots_a);
+            acc += dots_a[0];
+        }
+        acc
+    });
+    let mut dots_b = vec![0f32; 64];
+    set.bench("tc.dots pass (simd)", || {
+        let mut acc = 0f32;
+        for i in 0..sm.rows {
+            let (idx, vals) = sm.row(i);
+            tc.dots_with(active, idx, vals, &mut dots_b);
+            acc += dots_b[0];
+        }
+        acc
+    });
+    let mut rb = TransposedCentroids::build(&skcent.c);
+    set.bench("transpose rebuild k=64 d=47k (in place)", || {
+        rb.rebuild(&skcent.c);
+        rb.ct[0]
+    });
+    let dots_scalar_s = set.get("tc.dots pass (scalar)").unwrap().min_secs();
+    let dots_simd_s = set.get("tc.dots pass (simd)").unwrap().min_secs();
+    println!(
+        "     → tc.dots speedup {:.2}x over scalar",
+        dots_scalar_s / dots_simd_s
+    );
+    report.meta("speedup_tc_dots_k64", json::num(dots_scalar_s / dots_simd_s));
+    report.push(set);
+
+    // --- blocked + pruned sparse assignment (k=64) -------------------------
+    let mut set = BenchSet::new("assign sparse blocked (rcv1 4k rows, k=64)", opts);
+    let beng = NativeEngine::default();
+    let mut bl = vec![0u32; skdata.n()];
+    let mut bd = vec![0f32; skdata.n()];
+    simd::force_tier(Some(Tier::Scalar));
+    set.bench("blocked+pruned 1 thread (scalar)", || {
+        beng.assign(
+            &skdata,
+            Sel::Range(0, skdata.n()),
+            &skcent,
+            &Pool::new(1),
+            &mut bl,
+            &mut bd,
+        )
+    });
+    simd::force_tier(Some(active));
+    set.bench("blocked+pruned 1 thread (simd)", || {
+        beng.assign(
+            &skdata,
+            Sel::Range(0, skdata.n()),
+            &skcent,
+            &Pool::new(1),
+            &mut bl,
+            &mut bd,
+        )
+    });
+    if threads > 1 {
+        set.bench(&format!("blocked+pruned {threads} threads (simd)"), || {
+            beng.assign(
+                &skdata,
+                Sel::Range(0, skdata.n()),
+                &skcent,
+                &pool_n,
+                &mut bl,
+                &mut bd,
+            )
+        });
+    }
+    let bs = set.get("blocked+pruned 1 thread (scalar)").unwrap().min_secs();
+    let bi = set.get("blocked+pruned 1 thread (simd)").unwrap().min_secs();
+    println!(
+        "     → sparse assignment speedup {:.2}x over scalar (k=64)",
+        bs / bi
+    );
+    report.meta("speedup_assign_sparse_k64_1t", json::num(bs / bi));
     report.push(set);
 
     // --- bound machinery ---------------------------------------------------

@@ -104,6 +104,37 @@ pub trait AssignEngine {
     fn trans_cache_stats(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// A shareable transposed-centroid handle at this centroid
+    /// revision, when the engine keeps one. The serve layer carries it
+    /// into published model views so sparse predicts reuse the training
+    /// session's O(k·d) transpose instead of rebuilding their own.
+    fn trans_handle(
+        &self,
+        _centroids: &Centroids,
+    ) -> Option<Arc<TransposedCentroids>> {
+        None
+    }
+
+    /// [`AssignEngine::assign`] with an externally shared transposed
+    /// block for sparse data. Published-model predicts pass the
+    /// transpose frozen into their view, bypassing the engine's cache
+    /// entirely — concurrent predicts racing across publishes can never
+    /// evict each other into a rebuild. Engines without a sparse fast
+    /// path ignore the handle.
+    #[allow(clippy::too_many_arguments)]
+    fn assign_with_trans(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        _trans: Option<Arc<TransposedCentroids>>,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64 {
+        self.assign(data, sel, centroids, pool, out_lbl, out_d2)
+    }
 }
 
 /// Pure-rust engine; the correctness reference. Each instance owns its
@@ -121,6 +152,35 @@ impl NativeEngine {
     /// The engine's transpose cache (tests and cache-sharing callers).
     pub fn cache(&self) -> &TransCache {
         &self.cache
+    }
+
+    /// The sharded assignment core: fan the selection out over the pool
+    /// with an already-resolved (or absent) transposed block.
+    fn assign_sharded(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        trans: Option<&TransposedCentroids>,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64 {
+        let n = sel.len();
+        assert_eq!(out_lbl.len(), n);
+        assert_eq!(out_d2.len(), n);
+        if n == 0 {
+            return 0;
+        }
+        let ranges = chunk_ranges(n, pool.threads, MIN_CHUNK);
+        let views = split_outputs(&ranges, out_lbl, out_d2);
+        // pair each view with its range and fan out over the pool
+        let jobs: Vec<_> = ranges.into_iter().zip(views).collect();
+        let k = centroids.k() as u64;
+        pool.run_jobs(jobs, |_, (r, (vl, vd))| {
+            assign_serial(data, &sel, r, centroids, trans, vl, vd);
+        });
+        n as u64 * k
     }
 }
 
@@ -145,25 +205,60 @@ impl AssignEngine for NativeEngine {
         out_lbl: &mut [u32],
         out_d2: &mut [f32],
     ) -> u64 {
-        let n = sel.len();
-        assert_eq!(out_lbl.len(), n);
-        assert_eq!(out_d2.len(), n);
-        if n == 0 {
+        if sel.is_empty() {
+            assert_eq!(out_lbl.len(), 0);
+            assert_eq!(out_d2.len(), 0);
             return 0;
         }
-        let ranges = chunk_ranges(n, pool.threads, MIN_CHUNK);
-        let views = split_outputs(&ranges, out_lbl, out_d2);
-        // pair each view with its range and fan out over the pool
-        let jobs: Vec<_> = ranges.into_iter().zip(views).collect();
-        let k = centroids.k() as u64;
         // sparse fast path: transposed centroids turn per-nnz gathers
         // into sequential k-length AXPYs (EXPERIMENTS.md §Perf, ~2x)
-        let trans = transposed_for(&self.cache, data, centroids, n);
-        let trans = trans.as_deref();
-        pool.run_jobs(jobs, |_, (r, (vl, vd))| {
-            assign_serial(data, &sel, r, centroids, trans, vl, vd);
+        let trans = transposed_for(&self.cache, data, centroids, sel.len());
+        self.assign_sharded(
+            data,
+            sel,
+            centroids,
+            pool,
+            trans.as_deref(),
+            out_lbl,
+            out_d2,
+        )
+    }
+
+    fn assign_with_trans(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        trans: Option<Arc<TransposedCentroids>>,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64 {
+        let usable = trans.filter(|tc| {
+            data.is_sparse()
+                && tc.k == centroids.k()
+                && tc.d == centroids.d()
         });
-        n as u64 * k
+        match usable {
+            Some(tc) if !sel.is_empty() => {
+                // shared-transpose fast path: the caller froze this
+                // block together with `centroids`, so no cache lookup
+                // happens at all — concurrent callers holding different
+                // revisions can never force a rebuild here. Recorded as
+                // a hit for counter parity with the cached path.
+                self.cache.note_shared();
+                self.assign_sharded(
+                    data,
+                    sel,
+                    centroids,
+                    pool,
+                    Some(tc.as_ref()),
+                    out_lbl,
+                    out_d2,
+                )
+            }
+            _ => self.assign(data, sel, centroids, pool, out_lbl, out_d2),
+        }
     }
 
     fn dist_rows(
@@ -207,6 +302,19 @@ impl AssignEngine for NativeEngine {
     fn trans_cache_stats(&self) -> Option<(u64, u64)> {
         Some((self.cache.hits(), self.cache.builds()))
     }
+
+    fn trans_handle(
+        &self,
+        centroids: &Centroids,
+    ) -> Option<Arc<TransposedCentroids>> {
+        if centroids.k() < 8
+            || TransposedCentroids::bytes_for(centroids.k(), centroids.d())
+                > TRANS_MAX_BYTES
+        {
+            return None;
+        }
+        Some(self.cache.fetch(centroids))
+    }
 }
 
 /// Per-engine transpose cache keyed on [`Centroids::rev`]: within a
@@ -229,24 +337,52 @@ impl TransCache {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// O(k·d) transpose constructions (cache misses).
+    /// O(k·d) transpose fills (cache misses; in-place rebuilds count —
+    /// they redo the fill, just not the allocation).
     pub fn builds(&self) -> u64 {
         self.builds.load(Ordering::Relaxed)
     }
 
+    /// Revision-matched transpose already in the slot (counted as a
+    /// hit), or `None`. This is the warm-path gate: a probe never
+    /// triggers a build.
+    pub fn probe(&self, centroids: &Centroids) -> Option<Arc<TransposedCentroids>> {
+        let tc = cache_lookup(&self.slot.lock().unwrap(), centroids)?;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(tc)
+    }
+
     /// Fetch the transpose for this centroid revision, building (and
-    /// caching) it on a miss. The build runs outside the slot lock so a
-    /// large transpose never serialises concurrent readers of the slot.
+    /// caching) it on a miss. On a miss the stale entry's allocation is
+    /// reclaimed and rebuilt in place when no reader still holds it —
+    /// steady-state *training* stops reallocating O(k·d) every centroid
+    /// revision. (A session whose transpose is pinned by a published
+    /// model view still allocates fresh per publish: the view
+    /// legitimately holds the old block until the next publish swaps it
+    /// out.) The fill runs outside the slot lock so a large transpose
+    /// never serialises concurrent readers of the slot.
     pub fn fetch(&self, centroids: &Centroids) -> Arc<TransposedCentroids> {
-        if let Some(tc) = cache_lookup(&self.slot.lock().unwrap(), centroids)
-        {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(tc) = self.probe(centroids) {
             return tc;
         }
-        let tc = Arc::new(TransposedCentroids::build(&centroids.c));
+        let old = self.slot.lock().unwrap().take();
+        let tc = match old.and_then(|(_, arc)| Arc::try_unwrap(arc).ok()) {
+            Some(mut t) => {
+                t.rebuild(&centroids.c);
+                Arc::new(t)
+            }
+            None => Arc::new(TransposedCentroids::build(&centroids.c)),
+        };
         self.builds.fetch_add(1, Ordering::Relaxed);
         *self.slot.lock().unwrap() = Some((centroids.rev, tc.clone()));
         tc
+    }
+
+    /// Record a serve from an externally shared transpose
+    /// ([`AssignEngine::assign_with_trans`]): counter parity with probe
+    /// hits, no slot interaction.
+    fn note_shared(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -267,21 +403,33 @@ fn cache_lookup(
     }
 }
 
+/// Footprint cap on cached transposes (bounds per-session memory).
+const TRANS_MAX_BYTES: usize = 256 << 20;
+
 /// Build (or fetch) the transposed centroid block when it pays: sparse
 /// data, k large enough to amortise, selection big enough to amortise
-/// the O(k·d) transpose, and a bounded memory footprint.
+/// the O(k·d) transpose, and a bounded memory footprint. A
+/// revision-matched transpose already in the cache (built by an earlier
+/// call at this revision) is free and
+/// is used even for selections the build gates would reject — the
+/// choice never changes results, because the AXPY lanes accumulate in
+/// the same order as the gather path's `spdot`, bit for bit.
 fn transposed_for(
     cache: &TransCache,
     data: &Data,
     centroids: &Centroids,
     n_points: usize,
 ) -> Option<Arc<TransposedCentroids>> {
-    const MAX_BYTES: usize = 256 << 20;
-    if !data.is_sparse()
-        || centroids.k() < 8
+    if !data.is_sparse() {
+        return None;
+    }
+    if let Some(tc) = cache.probe(centroids) {
+        return Some(tc);
+    }
+    if centroids.k() < 8
         || n_points < 64
         || TransposedCentroids::bytes_for(centroids.k(), centroids.d())
-            > MAX_BYTES
+            > TRANS_MAX_BYTES
     {
         return None;
     }
@@ -299,19 +447,35 @@ fn assign_serial(
 ) {
     match (trans, &data.storage) {
         (Some(tc), Storage::Sparse(m)) => {
-            let mut scratch = vec![0f32; tc.k];
-            for (slot, t) in range.clone().enumerate() {
-                let i = sel.nth(t);
-                let (idx, vals) = m.row(i);
-                let (j, d2) = tc.nearest(
-                    idx,
-                    vals,
-                    data.norms[i],
+            // row-blocked + norm-pruned: points go through the
+            // transpose in SPARSE_BLOCK batches (phase-separated
+            // pruning/AXPY keeps the shared d×k strips cache-resident)
+            // — bit-identical to the per-point unpruned scan
+            let k = tc.k;
+            let mut scratch = vec![0f32; k];
+            let mut lbs = vec![0f32; k];
+            let mut rows: [(&[u32], &[f32]); sparse::SPARSE_BLOCK] =
+                [(&[], &[]); sparse::SPARSE_BLOCK];
+            let mut xns = [0f32; sparse::SPARSE_BLOCK];
+            let mut t0 = range.start;
+            while t0 < range.end {
+                let p = sparse::SPARSE_BLOCK.min(range.end - t0);
+                for o in 0..p {
+                    let i = sel.nth(t0 + o);
+                    rows[o] = m.row(i);
+                    xns[o] = data.norms[i];
+                }
+                let base = t0 - range.start;
+                tc.nearest_block(
+                    &rows[..p],
+                    &xns[..p],
                     &centroids.norms,
+                    &mut lbs,
                     &mut scratch,
+                    &mut out_lbl[base..base + p],
+                    &mut out_d2[base..base + p],
                 );
-                out_lbl[slot] = j;
-                out_d2[slot] = d2;
+                t0 += p;
             }
         }
         (_, Storage::Sparse(m)) => {
@@ -382,13 +546,20 @@ fn dist_rows_serial(
                 );
             }
         }
-        (_, Storage::Sparse(_)) => {
+        (_, Storage::Sparse(m)) => {
+            // no-transpose fallback: hoist the CSR row and its norm
+            // once and run spdot per centroid, instead of re-deriving
+            // both through `data.sq_dist_to` for every (i, j) pair
             for (slot, t) in range.clone().enumerate() {
                 let i = sel.nth(t);
+                let (idx, vals) = m.row(i);
+                let xn = data.norms[i];
                 let row = &mut out[slot * k..(slot + 1) * k];
                 for j in 0..k {
-                    row[j] = data.sq_dist_to(
-                        i,
+                    row[j] = sparse::sq_dist_sparse(
+                        idx,
+                        vals,
+                        xn,
                         centroids.c.row(j),
                         centroids.norms[j],
                     );
@@ -634,6 +805,103 @@ mod tests {
             );
             stats.update_centroids(&mut cent);
         }
+    }
+
+    #[test]
+    fn sparse_assign_bit_identical_to_gather_oracle() {
+        // the transposed + blocked + pruned path vs the per-point
+        // gather path: AXPY lanes accumulate in spdot order, so labels
+        // and distances must agree bit-for-bit (not just to tolerance)
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // the opt-in FMA tier is documented as unfaithful
+        }
+        Cases::new(8).run(|rng| {
+            let n = 200 + rng.below(300);
+            let k = 8 + rng.below(12);
+            let data = Rcv1Sim {
+                vocab: 400,
+                topic_vocab: 50,
+                ..Default::default()
+            }
+            .generate(n, rng.next_u64());
+            let cent = init::first_k(&data, k);
+            let eng = NativeEngine::default();
+            let pool = Pool::new(2);
+            let mut lbl = vec![0u32; n];
+            let mut d2 = vec![0f32; n];
+            eng.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lbl, &mut d2);
+            // the transpose must actually be in play for this to test
+            // the blocked path
+            assert_eq!(eng.trans_cache_stats().unwrap().1, 1);
+            for i in 0..n {
+                let (j, e) = data.nearest(i, &cent.c, &cent.norms);
+                assert_eq!(lbl[i], j, "label i={i}");
+                assert_eq!(d2[i].to_bits(), e.to_bits(), "d2 i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn warm_cache_serves_small_selections_without_building() {
+        // the warm-path shortcut: a small (n < 64) sparse selection
+        // would normally skip the transpose; once the cache holds the
+        // current revision it must probe-hit and reuse it, never build
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // the opt-in FMA tier is documented as unfaithful
+        }
+        let data = Rcv1Sim::default().generate(100, 4);
+        let cent = init::first_k(&data, 10);
+        let pool = Pool::new(1);
+        let eng = NativeEngine::default();
+        // warm the cache with one gate-passing selection
+        let mut wl = vec![0u32; 100];
+        let mut wd = vec![0f32; 100];
+        eng.assign(&data, Sel::Range(0, 100), &cent, &pool, &mut wl, &mut wd);
+        assert_eq!(eng.trans_cache_stats().unwrap(), (0, 1));
+        let mut lbl = vec![0u32; 8];
+        let mut d2 = vec![0f32; 8];
+        eng.assign(&data, Sel::Range(0, 8), &cent, &pool, &mut lbl, &mut d2);
+        eng.assign(&data, Sel::Range(0, 8), &cent, &pool, &mut lbl, &mut d2);
+        assert_eq!(
+            eng.trans_cache_stats().unwrap(),
+            (2, 1),
+            "warm engine must probe-hit small selections, never rebuild"
+        );
+        // the injected-transpose path (published-model predicts) serves
+        // a cold engine without touching its cache at all
+        let tc = eng.trans_handle(&cent).expect("gates pass");
+        let inj = NativeEngine::default();
+        let mut li = vec![0u32; 8];
+        let mut di = vec![0f32; 8];
+        inj.assign_with_trans(
+            &data,
+            Sel::Range(0, 8),
+            &cent,
+            &pool,
+            Some(tc),
+            &mut li,
+            &mut di,
+        );
+        assert_eq!(
+            inj.trans_cache_stats().unwrap(),
+            (1, 0),
+            "injected transpose must count a shared hit and no build"
+        );
+        // and the answers equal the cold gather path bitwise
+        let plain = NativeEngine::default();
+        let mut lbl2 = vec![0u32; 8];
+        let mut d2b = vec![0f32; 8];
+        plain.assign(&data, Sel::Range(0, 8), &cent, &pool, &mut lbl2, &mut d2b);
+        assert_eq!(
+            plain.trans_cache_stats().unwrap(),
+            (0, 0),
+            "a small cold selection must not build a transpose"
+        );
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(lbl, lbl2);
+        assert_eq!(li, lbl2);
+        assert_eq!(bits(&d2), bits(&d2b));
+        assert_eq!(bits(&di), bits(&d2b));
     }
 
     #[test]

@@ -633,6 +633,310 @@ unsafe fn sub_from_neon(acc: &mut [f64], x: &[f32]) {
 }
 
 // ---------------------------------------------------------------------
+// k-strided sparse AXPY kernels: acc[j] += v · row[j]
+//
+// The sparse assignment hot loop (`TransposedCentroids::dots`) runs one
+// of these per non-zero: `row` is the k-length transpose strip of the
+// non-zero's column and `acc` the k-length all-centroid dot accumulator.
+// Unlike the reduction kernels above, AXPY is *elementwise* — lane j
+// only ever computes fl(acc[j] + fl(v·row[j])) — so every non-FMA tier
+// is bit-identical to the scalar reference by construction, and the
+// accumulation order per lane equals the gather path's `spdot` order.
+// The paired variant folds two non-zeros into one pass over `acc`
+// (halves the accumulator traffic); its per-lane operation is the same
+// two sequential rounded adds the scalar loop performs.
+// ---------------------------------------------------------------------
+
+/// `acc[j] += v·row[j]` — 8-lane unrolled scalar reference.
+///
+/// Length equality is a real assert (not debug-only): the unrolled body
+/// does unchecked reads, and unlike `spdot` the safety condition here
+/// is purely caller-supplied.
+#[inline]
+pub fn axpy_scalar(v: f32, row: &[f32], acc: &mut [f32]) {
+    assert_eq!(row.len(), acc.len(), "axpy: length mismatch");
+    let n = acc.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        // Safety: i + 7 < chunks*8 <= n, same for row.
+        unsafe {
+            for o in 0..8 {
+                *acc.get_unchecked_mut(i + o) +=
+                    v * row.get_unchecked(i + o);
+            }
+        }
+    }
+    for i in chunks * 8..n {
+        acc[i] += v * row[i];
+    }
+}
+
+/// Two stacked AXPYs in one pass: `acc[j] += v0·r0[j]; acc[j] += v1·r1[j]`
+/// (two separately rounded adds per lane, exactly like calling
+/// [`axpy_scalar`] twice).
+#[inline]
+pub fn axpy2_scalar(v0: f32, r0: &[f32], v1: f32, r1: &[f32], acc: &mut [f32]) {
+    assert_eq!(r0.len(), acc.len(), "axpy2: row 0 length mismatch");
+    assert_eq!(r1.len(), acc.len(), "axpy2: row 1 length mismatch");
+    let n = acc.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        // Safety: i + 7 < chunks*8 <= n, same for r0/r1.
+        unsafe {
+            for o in 0..8 {
+                let a = acc.get_unchecked_mut(i + o);
+                let mut x = *a;
+                x += v0 * r0.get_unchecked(i + o);
+                x += v1 * r1.get_unchecked(i + o);
+                *a = x;
+            }
+        }
+    }
+    for i in chunks * 8..n {
+        let mut x = acc[i];
+        x += v0 * r0[i];
+        x += v1 * r1[i];
+        acc[i] = x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn axpy_sse2(v: f32, row: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(row.len(), acc.len());
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv = _mm_set1_ps(v);
+    for c in 0..chunks {
+        let i = c * 8;
+        let r0 = _mm_loadu_ps(row.as_ptr().add(i));
+        let r1 = _mm_loadu_ps(row.as_ptr().add(i + 4));
+        let a0 = _mm_loadu_ps(acc.as_ptr().add(i));
+        let a1 = _mm_loadu_ps(acc.as_ptr().add(i + 4));
+        _mm_storeu_ps(acc.as_mut_ptr().add(i), _mm_add_ps(a0, _mm_mul_ps(vv, r0)));
+        _mm_storeu_ps(
+            acc.as_mut_ptr().add(i + 4),
+            _mm_add_ps(a1, _mm_mul_ps(vv, r1)),
+        );
+    }
+    for i in chunks * 8..n {
+        *acc.get_unchecked_mut(i) += v * row.get_unchecked(i);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn axpy2_sse2(v0: f32, r0: &[f32], v1: f32, r1: &[f32], acc: &mut [f32]) {
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv0 = _mm_set1_ps(v0);
+    let vv1 = _mm_set1_ps(v1);
+    for c in 0..chunks {
+        let i = c * 8;
+        let mut a0 = _mm_loadu_ps(acc.as_ptr().add(i));
+        let mut a1 = _mm_loadu_ps(acc.as_ptr().add(i + 4));
+        a0 = _mm_add_ps(a0, _mm_mul_ps(vv0, _mm_loadu_ps(r0.as_ptr().add(i))));
+        a1 = _mm_add_ps(a1, _mm_mul_ps(vv0, _mm_loadu_ps(r0.as_ptr().add(i + 4))));
+        a0 = _mm_add_ps(a0, _mm_mul_ps(vv1, _mm_loadu_ps(r1.as_ptr().add(i))));
+        a1 = _mm_add_ps(a1, _mm_mul_ps(vv1, _mm_loadu_ps(r1.as_ptr().add(i + 4))));
+        _mm_storeu_ps(acc.as_mut_ptr().add(i), a0);
+        _mm_storeu_ps(acc.as_mut_ptr().add(i + 4), a1);
+    }
+    for i in chunks * 8..n {
+        let a = acc.get_unchecked_mut(i);
+        let mut x = *a;
+        x += v0 * r0.get_unchecked(i);
+        x += v1 * r1.get_unchecked(i);
+        *a = x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(v: f32, row: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(row.len(), acc.len());
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv = _mm256_set1_ps(v);
+    for c in 0..chunks {
+        let i = c * 8;
+        let rv = _mm256_loadu_ps(row.as_ptr().add(i));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(
+            acc.as_mut_ptr().add(i),
+            _mm256_add_ps(av, _mm256_mul_ps(vv, rv)),
+        );
+    }
+    for i in chunks * 8..n {
+        *acc.get_unchecked_mut(i) += v * row.get_unchecked(i);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy2_avx2(v0: f32, r0: &[f32], v1: f32, r1: &[f32], acc: &mut [f32]) {
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv0 = _mm256_set1_ps(v0);
+    let vv1 = _mm256_set1_ps(v1);
+    for c in 0..chunks {
+        let i = c * 8;
+        let mut av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        av = _mm256_add_ps(
+            av,
+            _mm256_mul_ps(vv0, _mm256_loadu_ps(r0.as_ptr().add(i))),
+        );
+        av = _mm256_add_ps(
+            av,
+            _mm256_mul_ps(vv1, _mm256_loadu_ps(r1.as_ptr().add(i))),
+        );
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), av);
+    }
+    for i in chunks * 8..n {
+        let a = acc.get_unchecked_mut(i);
+        let mut x = *a;
+        x += v0 * r0.get_unchecked(i);
+        x += v1 * r1.get_unchecked(i);
+        *a = x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2fma(v: f32, row: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(row.len(), acc.len());
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv = _mm256_set1_ps(v);
+    for c in 0..chunks {
+        let i = c * 8;
+        let rv = _mm256_loadu_ps(row.as_ptr().add(i));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_fmadd_ps(vv, rv, av));
+    }
+    for i in chunks * 8..n {
+        *acc.get_unchecked_mut(i) += v * row.get_unchecked(i);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy2_avx2fma(v0: f32, r0: &[f32], v1: f32, r1: &[f32], acc: &mut [f32]) {
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv0 = _mm256_set1_ps(v0);
+    let vv1 = _mm256_set1_ps(v1);
+    for c in 0..chunks {
+        let i = c * 8;
+        let mut av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        av = _mm256_fmadd_ps(vv0, _mm256_loadu_ps(r0.as_ptr().add(i)), av);
+        av = _mm256_fmadd_ps(vv1, _mm256_loadu_ps(r1.as_ptr().add(i)), av);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), av);
+    }
+    for i in chunks * 8..n {
+        let a = acc.get_unchecked_mut(i);
+        let mut x = *a;
+        x += v0 * r0.get_unchecked(i);
+        x += v1 * r1.get_unchecked(i);
+        *a = x;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(v: f32, row: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(row.len(), acc.len());
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv = vdupq_n_f32(v);
+    for c in 0..chunks {
+        let i = c * 8;
+        let r0 = vld1q_f32(row.as_ptr().add(i));
+        let r1 = vld1q_f32(row.as_ptr().add(i + 4));
+        let a0 = vld1q_f32(acc.as_ptr().add(i));
+        let a1 = vld1q_f32(acc.as_ptr().add(i + 4));
+        // explicit mul-then-add (vfmaq would contract, breaking
+        // bit-identity with the scalar reference)
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a0, vmulq_f32(vv, r0)));
+        vst1q_f32(
+            acc.as_mut_ptr().add(i + 4),
+            vaddq_f32(a1, vmulq_f32(vv, r1)),
+        );
+    }
+    for i in chunks * 8..n {
+        *acc.get_unchecked_mut(i) += v * row.get_unchecked(i);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy2_neon(v0: f32, r0: &[f32], v1: f32, r1: &[f32], acc: &mut [f32]) {
+    let n = acc.len();
+    let chunks = n / 8;
+    let vv0 = vdupq_n_f32(v0);
+    let vv1 = vdupq_n_f32(v1);
+    for c in 0..chunks {
+        let i = c * 8;
+        let mut a0 = vld1q_f32(acc.as_ptr().add(i));
+        let mut a1 = vld1q_f32(acc.as_ptr().add(i + 4));
+        a0 = vaddq_f32(a0, vmulq_f32(vv0, vld1q_f32(r0.as_ptr().add(i))));
+        a1 = vaddq_f32(a1, vmulq_f32(vv0, vld1q_f32(r0.as_ptr().add(i + 4))));
+        a0 = vaddq_f32(a0, vmulq_f32(vv1, vld1q_f32(r1.as_ptr().add(i))));
+        a1 = vaddq_f32(a1, vmulq_f32(vv1, vld1q_f32(r1.as_ptr().add(i + 4))));
+        vst1q_f32(acc.as_mut_ptr().add(i), a0);
+        vst1q_f32(acc.as_mut_ptr().add(i + 4), a1);
+    }
+    for i in chunks * 8..n {
+        let a = acc.get_unchecked_mut(i);
+        let mut x = *a;
+        x += v0 * r0.get_unchecked(i);
+        x += v1 * r1.get_unchecked(i);
+        *a = x;
+    }
+}
+
+/// `acc += v·row` through an explicit tier. Length equality is a real
+/// assert: the tier kernels do unchecked SIMD loads.
+#[inline]
+pub fn axpy_with(t: Tier, v: f32, row: &[f32], acc: &mut [f32]) {
+    assert_eq!(row.len(), acc.len(), "axpy: length mismatch");
+    match t {
+        Tier::Scalar => axpy_scalar(v, row, acc),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { axpy_sse2(v, row, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { axpy_avx2(v, row, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { axpy_avx2fma(v, row, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { axpy_neon(v, row, acc) },
+        _ => axpy_scalar(v, row, acc),
+    }
+}
+
+/// Two stacked AXPYs through an explicit tier; bit-identical to two
+/// [`axpy_with`] calls on every non-FMA tier.
+#[inline]
+pub fn axpy2_with(t: Tier, v0: f32, r0: &[f32], v1: f32, r1: &[f32], acc: &mut [f32]) {
+    assert_eq!(r0.len(), acc.len(), "axpy2: row 0 length mismatch");
+    assert_eq!(r1.len(), acc.len(), "axpy2: row 1 length mismatch");
+    match t {
+        Tier::Scalar => axpy2_scalar(v0, r0, v1, r1, acc),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { axpy2_sse2(v0, r0, v1, r1, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { axpy2_avx2(v0, r0, v1, r1, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { axpy2_avx2fma(v0, r0, v1, r1, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { axpy2_neon(v0, r0, v1, r1, acc) },
+        _ => axpy2_scalar(v0, r0, v1, r1, acc),
+    }
+}
+
+// ---------------------------------------------------------------------
 // per-tier entry points + dispatched wrappers
 // ---------------------------------------------------------------------
 
@@ -1100,6 +1404,98 @@ mod tests {
                 assert_eq!(acc, init, "sub n={n} tier {}", t.name());
             }
         }
+    }
+
+    #[test]
+    fn axpy_bit_identical_across_tiers() {
+        // the sparse k-strided kernel: every non-FMA tier must match the
+        // scalar reference bit-for-bit, including k % 8 != 0 tails
+        Cases::new(150).run(|rng| {
+            let k = rng.below(130);
+            let v = rng.gauss_f32();
+            let row = gen::matrix(rng, 1, k);
+            let init = gen::matrix(rng, 1, k);
+            let mut reference = init.clone();
+            axpy_scalar(v, &row, &mut reference);
+            for t in exact_tiers() {
+                let mut acc = init.clone();
+                axpy_with(t, v, &row, &mut acc);
+                let bits =
+                    |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&acc), bits(&reference), "axpy tier {}", t.name());
+            }
+        });
+    }
+
+    #[test]
+    fn axpy2_equals_two_sequential_axpys_per_tier() {
+        // the paired kernel folds two non-zeros into one accumulator
+        // pass; per lane it must perform the same two rounded adds
+        Cases::new(150).run(|rng| {
+            let k = rng.below(130);
+            let (v0, v1) = (rng.gauss_f32(), rng.gauss_f32());
+            let r0 = gen::matrix(rng, 1, k);
+            let r1 = gen::matrix(rng, 1, k);
+            let init = gen::matrix(rng, 1, k);
+            let mut reference = init.clone();
+            axpy_scalar(v0, &r0, &mut reference);
+            axpy_scalar(v1, &r1, &mut reference);
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            for t in exact_tiers() {
+                let mut acc = init.clone();
+                axpy2_with(t, v0, &r0, v1, &r1, &mut acc);
+                assert_eq!(bits(&acc), bits(&reference), "axpy2 tier {}", t.name());
+            }
+        });
+    }
+
+    #[test]
+    fn axpy_tail_lengths_every_tier() {
+        // lengths 0..=17 force the empty, sub-chunk and tail shapes
+        // through every tier's cleanup loop
+        for k in 0..=17usize {
+            let row: Vec<f32> = (0..k).map(|i| (i as f32) * 0.75 - 2.0).collect();
+            let r1: Vec<f32> = (0..k).map(|i| 1.5 - (i as f32) * 0.25).collect();
+            let init: Vec<f32> = (0..k).map(|i| (i as f32) * -0.5 + 0.125).collect();
+            let mut reference = init.clone();
+            axpy_scalar(0.7, &row, &mut reference);
+            let mut ref2 = init.clone();
+            axpy2_scalar(0.7, &row, -1.3, &r1, &mut ref2);
+            for t in exact_tiers() {
+                let mut acc = init.clone();
+                axpy_with(t, 0.7, &row, &mut acc);
+                assert_eq!(acc, reference, "axpy k={k} tier {}", t.name());
+                let mut acc2 = init.clone();
+                axpy2_with(t, 0.7, &row, -1.3, &r1, &mut acc2);
+                assert_eq!(acc2, ref2, "axpy2 k={k} tier {}", t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_fma_tier_close_to_scalar() {
+        if !available_tiers().contains(&Tier::Avx2Fma) {
+            return;
+        }
+        Cases::new(60).run(|rng| {
+            let k = rng.below(200);
+            let v = rng.gauss_f32();
+            let row = gen::matrix(rng, 1, k);
+            let init = gen::matrix(rng, 1, k);
+            let mut sc = init.clone();
+            axpy_scalar(v, &row, &mut sc);
+            let mut fm = init.clone();
+            axpy_with(Tier::Avx2Fma, v, &row, &mut fm);
+            for j in 0..k {
+                assert!(
+                    (sc[j] - fm[j]).abs()
+                        <= 1e-5 * (1.0 + sc[j].abs() + (v * row[j]).abs()),
+                    "k={k} lane {j}: scalar {} vs fma {}",
+                    sc[j],
+                    fm[j]
+                );
+            }
+        });
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! the point's non-zeros only — O(nnz) per centroid, not O(d).
 
 use crate::linalg::dense::DenseMatrix;
+use crate::linalg::simd;
 
 /// Compressed sparse row matrix, f32 values, u32 column indices.
 #[derive(Clone, Debug, PartialEq)]
@@ -161,15 +162,67 @@ pub fn nearest_sparse(
     (best_j, best)
 }
 
+/// Points per block in the row-blocked sparse assignment: the
+/// candidate-pruning phase and the full-AXPY phase are batched over
+/// this many points so the d×k transpose strips the AXPY sweeps stream
+/// stay cache-resident across consecutive points of a block (the
+/// sparse analogue of the dense kernel's `POINT_BLOCK`).
+pub const SPARSE_BLOCK: usize = 16;
+
+/// A pruned scan falls back to per-candidate strided gathers (instead
+/// of the full k-wide AXPY sweep) when at most `k / PRUNE_GATHER_DIV`
+/// candidates survive the norm bound — below that the scalar gathers
+/// beat the SIMD sweep.
+const PRUNE_GATHER_DIV: usize = 8;
+
+/// Column/row tile edge for the transpose (re)build scatter.
+const BUILD_TILE: usize = 64;
+
+/// Conservative floating-point slack for the norm-based pruning bound,
+/// as a relative factor on `xn + cn + 2·ub_dot`.
+///
+/// The pruning bound is the additive form `xn + cn[j] − 2·ub_dot(j)`,
+/// using the *same stored* `xn`/`cn[j]` the distance formula adds (so
+/// their own summation error cancels out of the comparison — crucially,
+/// the O(d)-term error in a 47k-dim centroid norm never enters) with
+/// `ub_dot(j) = √xn·sqnorms[j]`, an upper bound on the dot via
+/// Cauchy–Schwarz over *accurate* norms: `sqnorms[j]` is f64-summed at
+/// transpose build (error ~2⁻²⁴), and `√xn ≥ ‖x‖(1 − γ/2)` since the
+/// stored `xn` under-estimates ‖x‖² by at most the γ of an nnz-term
+/// f32 sum. What remains is nnz-proportional: `spdot` deviates from
+/// `⟨x,c⟩` by ≤ γ·‖x‖‖c‖ with `γ ≈ (nnz + 3)·2⁻²⁴`, plus the final
+/// f32 roundings of the distance itself — together under
+/// `(1.5γ + 4ε)·(xn + cn + 2·ub_dot)`. The slack `4e-7·(nnz + 16)` is
+/// ≥ 4x that (the bound arithmetic itself runs in f64, adding nothing
+/// material), so `lb_safe(j) ≤ fl(d²(j))` always — which is what makes
+/// pruned and unpruned argmins bit-identical
+/// (`pruned_nearest_matches_unpruned_bitwise` and
+/// `prune_bound_never_exceeds_computed_distance` hammer this).
+#[inline]
+fn prune_slack(nnz: usize) -> f64 {
+    4.0e-7 * (nnz as f64 + 16.0)
+}
+
 /// Transposed centroid block (d × k, row-major) for the batched sparse
 /// assignment kernel: turning `k` gathers per non-zero into one
-/// sequential k-length AXPY makes the inner loop vectorisable
-/// (EXPERIMENTS.md §Perf change 3).
+/// sequential k-length AXPY makes the inner loop vectorisable — and the
+/// AXPY now runs through the runtime-dispatched SIMD tiers
+/// ([`crate::linalg::simd::axpy_with`]). Lane `j` of the accumulator
+/// performs exactly the rounded-add sequence `spdot` performs against
+/// `C(j)`, so the transposed, gather, and pruned paths all produce
+/// bit-identical dots on every non-FMA tier.
+#[derive(Clone, Debug)]
 pub struct TransposedCentroids {
     pub d: usize,
     pub k: usize,
     /// ct[col * k + j] = C(j)[col]
     pub ct: Vec<f32>,
+    /// Accurate L2 norms `‖C(j)‖` (f64-accumulated at build, one f32
+    /// rounding) — the pruning pass's Cauchy–Schwarz upper bounds.
+    /// Deliberately *not* the engine's incrementally-maintained
+    /// `cnorms`: those carry summation error that grows with d, which
+    /// would silently void the prune-safety margin at RCV1 dimensions.
+    pub sqnorms: Vec<f32>,
 }
 
 impl TransposedCentroids {
@@ -185,37 +238,187 @@ impl TransposedCentroids {
     }
 
     pub fn build(c: &DenseMatrix) -> Self {
-        let (k, d) = (c.rows, c.cols);
-        let mut ct = vec![0f32; d * k];
-        for j in 0..k {
-            let row = c.row(j);
-            for col in 0..d {
-                ct[col * k + j] = row[col];
-            }
-        }
-        Self { d, k, ct }
+        let mut tc = Self { d: 0, k: 0, ct: Vec::new(), sqnorms: Vec::new() };
+        tc.rebuild(c);
+        tc
     }
 
-    /// All-centroid dot products of one sparse row:
-    /// `dots[j] = Σ_t vals[t]·C(j)[idx[t]]`, via sequential AXPYs into
-    /// the k-length accumulator.
+    /// Re-fill this transpose from a (possibly different-shape)
+    /// centroid matrix, reusing the existing allocation when the
+    /// footprint allows — the engine's revision cache rebuilds in place
+    /// instead of reallocating O(k·d) every centroid revision.
+    ///
+    /// The scatter is tile-blocked: within a `BUILD_TILE`² tile the
+    /// writes walk `j` innermost (contiguous in `ct`) while the reads
+    /// walk a bounded window of `c`, instead of the previous full-`d`
+    /// strided sweep per centroid that touched every destination
+    /// cacheline `k` times from cold.
+    pub fn rebuild(&mut self, c: &DenseMatrix) {
+        let (k, d) = (c.rows, c.cols);
+        self.k = k;
+        self.d = d;
+        if self.ct.len() != d * k {
+            self.ct.resize(d * k, 0.0);
+        }
+        let cd = &c.data;
+        let mut c0 = 0;
+        while c0 < d {
+            let c1 = (c0 + BUILD_TILE).min(d);
+            let mut j0 = 0;
+            while j0 < k {
+                let j1 = (j0 + BUILD_TILE).min(k);
+                for col in c0..c1 {
+                    let dst = &mut self.ct[col * k..col * k + k];
+                    for j in j0..j1 {
+                        dst[j] = cd[j * d + col];
+                    }
+                }
+                j0 = j1;
+            }
+            c0 = c1;
+        }
+        self.sqnorms.clear();
+        self.sqnorms.reserve(k);
+        for j in 0..k {
+            let row = &cd[j * d..(j + 1) * d];
+            let sq: f64 = row.iter().map(|&x| x as f64 * x as f64).sum();
+            self.sqnorms.push(sq.sqrt() as f32);
+        }
+    }
+
+    /// All-centroid dot products of one sparse row through the active
+    /// SIMD tier: `dots[j] = Σ_t vals[t]·C(j)[idx[t]]`.
     #[inline]
     pub fn dots(&self, idx: &[u32], vals: &[f32], dots: &mut [f32]) {
-        debug_assert_eq!(dots.len(), self.k);
+        self.dots_with(simd::tier(), idx, vals, dots)
+    }
+
+    /// [`TransposedCentroids::dots`] through an explicit tier: paired
+    /// k-strided AXPYs (two non-zeros per accumulator pass), single
+    /// AXPY for an odd tail. Lane `j` accumulates in non-zero order, so
+    /// `dots[j]` is bit-identical to `spdot(idx, vals, C(j))` on every
+    /// non-FMA tier (property-tested).
+    #[inline]
+    pub fn dots_with(
+        &self,
+        t: simd::Tier,
+        idx: &[u32],
+        vals: &[f32],
+        dots: &mut [f32],
+    ) {
+        debug_assert_eq!(idx.len(), vals.len());
+        assert_eq!(dots.len(), self.k);
         dots.fill(0.0);
         let k = self.k;
-        for t in 0..idx.len() {
-            let v = vals[t];
-            let base = idx[t] as usize * k;
+        let nnz = idx.len();
+        let mut p = 0;
+        while p + 2 <= nnz {
+            let b0 = idx[p] as usize * k;
+            let b1 = idx[p + 1] as usize * k;
             // Safety: idx validated < cols = d at construction.
-            let row = unsafe { self.ct.get_unchecked(base..base + k) };
-            for j in 0..k {
-                dots[j] += v * row[j];
-            }
+            let (r0, r1) = unsafe {
+                (
+                    self.ct.get_unchecked(b0..b0 + k),
+                    self.ct.get_unchecked(b1..b1 + k),
+                )
+            };
+            simd::axpy2_with(t, vals[p], r0, vals[p + 1], r1, dots);
+            p += 2;
+        }
+        if p < nnz {
+            let b = idx[p] as usize * k;
+            let row = unsafe { self.ct.get_unchecked(b..b + k) };
+            simd::axpy_with(t, vals[p], row, dots);
         }
     }
 
-    /// Nearest centroid of a sparse point through the transposed block.
+    /// `Σ_t vals[t]·C(j)[idx[t]]` for a single centroid, read out of
+    /// the transpose (stride-k gather). Same accumulation order over
+    /// the same stored values as [`spdot`] against row `j`, hence
+    /// bit-identical to it — the pruned scan relies on this.
+    #[inline]
+    pub fn dot_one(&self, idx: &[u32], vals: &[f32], j: usize) -> f32 {
+        debug_assert!(j < self.k);
+        let k = self.k;
+        let mut s = 0f32;
+        for t in 0..idx.len() {
+            // Safety: idx validated < d at construction, j < k.
+            unsafe {
+                s += vals.get_unchecked(t)
+                    * self
+                        .ct
+                        .get_unchecked(*idx.get_unchecked(t) as usize * k + j);
+            }
+        }
+        s
+    }
+
+    /// Fill `lbs[j]` with the fp-safe norm lower bound on the computed
+    /// `d²(j)` — `xn + cnorms[j] − 2·ub_dot(j)` minus the
+    /// [`prune_slack`] margin, evaluated in f64 against the accurate
+    /// `sqnorms` — then seed the running best by evaluating the
+    /// centroid with the smallest bound exactly. Returns
+    /// `(seed_j, seed_d2, survivors)` where `survivors` counts
+    /// centroids whose bound does not already rule them out against the
+    /// seed.
+    fn prune_seed(
+        &self,
+        idx: &[u32],
+        vals: &[f32],
+        xn: f32,
+        cnorms: &[f32],
+        lbs: &mut [f32],
+    ) -> (usize, f32, usize) {
+        let k = self.k;
+        let xnf = xn as f64;
+        let sqxn = xnf.sqrt();
+        let slack = prune_slack(idx.len());
+        let mut j0 = 0usize;
+        for j in 0..k {
+            let ub = sqxn * self.sqnorms[j] as f64;
+            let scale = xnf + cnorms[j] as f64 + 2.0 * ub;
+            lbs[j] = (xnf + cnorms[j] as f64 - 2.0 * ub - slack * scale) as f32;
+            if lbs[j] < lbs[j0] {
+                j0 = j;
+            }
+        }
+        let d0 = (xn + cnorms[j0] - 2.0 * self.dot_one(idx, vals, j0)).max(0.0);
+        let survivors = lbs.iter().filter(|&&lb| lb <= d0).count();
+        (j0, d0, survivors)
+    }
+
+    /// Finish a pruned scan via per-candidate strided gathers: visit
+    /// centroids in index order, skipping every `j` whose bound
+    /// provably exceeds the running best. First-wins ties are restored
+    /// with the explicit `j < best_j` rule (the seed was evaluated out
+    /// of order), so the result is bit-identical to the unpruned scan.
+    fn finish_gather(
+        &self,
+        idx: &[u32],
+        vals: &[f32],
+        xn: f32,
+        cnorms: &[f32],
+        lbs: &[f32],
+        seed_j: usize,
+        seed_d2: f32,
+    ) -> (u32, f32) {
+        let mut best = seed_d2;
+        let mut best_j = seed_j as u32;
+        for j in 0..self.k {
+            if j == seed_j || lbs[j] > best {
+                continue;
+            }
+            let d2 = (xn + cnorms[j] - 2.0 * self.dot_one(idx, vals, j)).max(0.0);
+            if d2 < best || (d2 == best && (j as u32) < best_j) {
+                best = d2;
+                best_j = j as u32;
+            }
+        }
+        (best_j, best)
+    }
+
+    /// Nearest centroid of a sparse point through the transposed block:
+    /// one SIMD AXPY sweep for all k dots, then a first-wins argmin.
     #[inline]
     pub fn nearest(
         &self,
@@ -236,6 +439,100 @@ impl TransposedCentroids {
             }
         }
         (best_j, best)
+    }
+
+    /// [`TransposedCentroids::nearest`] with norm-based candidate
+    /// pruning: when few centroids survive the
+    /// `xn + cn[j] − 2·ub_dot(j)` bound, only those are evaluated
+    /// (per-candidate gathers); otherwise one full AXPY sweep runs as
+    /// usual. `lbs` and `scratch` are k-length scratch. Argmin and
+    /// distance are bit-identical to the unpruned scan.
+    #[inline]
+    pub fn nearest_pruned(
+        &self,
+        idx: &[u32],
+        vals: &[f32],
+        xn: f32,
+        cnorms: &[f32],
+        lbs: &mut [f32],
+        scratch: &mut [f32],
+    ) -> (u32, f32) {
+        let k = self.k;
+        if k == 0 {
+            return (0, f32::INFINITY);
+        }
+        let (seed_j, seed_d2, survivors) =
+            self.prune_seed(idx, vals, xn, cnorms, lbs);
+        if survivors * PRUNE_GATHER_DIV <= k {
+            self.finish_gather(idx, vals, xn, cnorms, lbs, seed_j, seed_d2)
+        } else {
+            self.nearest(idx, vals, xn, cnorms, scratch)
+        }
+    }
+
+    /// Row-blocked pruned assignment over ≤ [`SPARSE_BLOCK`] sparse
+    /// rows: phase 1 runs the norm-bound pruning per point and settles
+    /// every point with a small candidate set via gathers; phase 2 runs
+    /// the full AXPY sweeps for the rest back-to-back, so the transpose
+    /// strips shared between neighbouring points stay cache-resident
+    /// instead of being evicted by interleaved pruning work. Results
+    /// are bit-identical to per-point [`TransposedCentroids::nearest`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn nearest_block(
+        &self,
+        rows: &[(&[u32], &[f32])],
+        xns: &[f32],
+        cnorms: &[f32],
+        lbs: &mut [f32],
+        scratch: &mut [f32],
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) {
+        let p = rows.len();
+        debug_assert!(p <= SPARSE_BLOCK);
+        assert_eq!(xns.len(), p, "nearest_block: norms length mismatch");
+        assert_eq!(out_lbl.len(), p, "nearest_block: label buffer mismatch");
+        assert_eq!(out_d2.len(), p, "nearest_block: d2 buffer mismatch");
+        let k = self.k;
+        if k == 0 {
+            out_lbl.fill(0);
+            out_d2.fill(f32::INFINITY);
+            return;
+        }
+        let tier = simd::tier();
+        let mut defer = [false; SPARSE_BLOCK];
+        for ti in 0..p {
+            let (idx, vals) = rows[ti];
+            let (seed_j, seed_d2, survivors) =
+                self.prune_seed(idx, vals, xns[ti], cnorms, lbs);
+            if survivors * PRUNE_GATHER_DIV <= k {
+                let (j, d2) = self.finish_gather(
+                    idx, vals, xns[ti], cnorms, lbs, seed_j, seed_d2,
+                );
+                out_lbl[ti] = j;
+                out_d2[ti] = d2;
+            } else {
+                defer[ti] = true;
+            }
+        }
+        for ti in 0..p {
+            if !defer[ti] {
+                continue;
+            }
+            let (idx, vals) = rows[ti];
+            self.dots_with(tier, idx, vals, scratch);
+            let mut best = f32::INFINITY;
+            let mut best_j = 0u32;
+            for j in 0..k {
+                let d2 = (xns[ti] + cnorms[j] - 2.0 * scratch[j]).max(0.0);
+                if d2 < best {
+                    best = d2;
+                    best_j = j as u32;
+                }
+            }
+            out_lbl[ti] = best_j;
+            out_d2[ti] = best;
+        }
     }
 
     /// Full squared-distance row of a sparse point.
@@ -392,6 +689,250 @@ mod tests {
                 }
             }
         });
+    }
+
+    fn exact_tiers() -> Vec<simd::Tier> {
+        simd::available_tiers()
+            .into_iter()
+            .filter(|&t| t != simd::Tier::Avx2Fma)
+            .collect()
+    }
+
+    #[test]
+    fn dots_bit_identical_across_tiers_and_to_spdot() {
+        // the tentpole invariant: every sparse SIMD tier reproduces the
+        // scalar AXPY reference bit-for-bit, and lane j of the sweep is
+        // bitwise spdot against centroid row j. Shapes cover empty
+        // rows, single non-zeros (the odd axpy tail), and k % 8 != 0.
+        Cases::new(120).run(|rng| {
+            let cols = rng.below(150) + 2;
+            let k = rng.below(37) + 1;
+            let m = random_csr(rng, 5, cols, 24);
+            let cmat = DenseMatrix::from_vec(
+                k,
+                cols,
+                (0..k * cols).map(|_| rng.gauss_f32()).collect(),
+            );
+            let tc = TransposedCentroids::build(&cmat);
+            let mut reference = vec![0f32; k];
+            let mut got = vec![0f32; k];
+            let bits =
+                |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            for i in 0..m.rows {
+                let (idx, vals) = m.row(i);
+                tc.dots_with(simd::Tier::Scalar, idx, vals, &mut reference);
+                for t in exact_tiers() {
+                    tc.dots_with(t, idx, vals, &mut got);
+                    assert_eq!(
+                        bits(&got),
+                        bits(&reference),
+                        "row {i} tier {} (k={k}, nnz={})",
+                        t.name(),
+                        idx.len()
+                    );
+                }
+                // lane-order invariant vs the gather path
+                for j in 0..k {
+                    let g = spdot(idx, vals, cmat.row(j));
+                    assert_eq!(
+                        reference[j].to_bits(),
+                        g.to_bits(),
+                        "row {i} lane {j}: axpy {} vs spdot {g}",
+                        reference[j]
+                    );
+                    assert_eq!(tc.dot_one(idx, vals, j).to_bits(), g.to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pruned_nearest_matches_unpruned_bitwise() {
+        // pruning must never change the answer: argmin AND distance
+        // bit-identical to the full scan, ties included (duplicated
+        // centroid rows force exact ties)
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // pruned gathers are unfused; skip under opt-in FMA
+        }
+        Cases::new(120).run(|rng| {
+            let cols = rng.below(120) + 2;
+            let k = rng.below(30) + 1;
+            let m = random_csr(rng, 6, cols, 18);
+            let mut cdata: Vec<f32> =
+                (0..k * cols).map(|_| rng.gauss_f32()).collect();
+            // duplicate a centroid row to create exact d² ties
+            if k >= 2 {
+                let (src, dst) = (0usize, k - 1);
+                for c in 0..cols {
+                    cdata[dst * cols + c] = cdata[src * cols + c];
+                }
+            }
+            let cmat = DenseMatrix::from_vec(k, cols, cdata);
+            let cn = cmat.row_sq_norms();
+            let tc = TransposedCentroids::build(&cmat);
+            let xns = m.row_sq_norms();
+            let mut scratch = vec![0f32; k];
+            let mut lbs = vec![0f32; k];
+            for i in 0..m.rows {
+                let (idx, vals) = m.row(i);
+                let (ju, du) = tc.nearest(idx, vals, xns[i], &cn, &mut scratch);
+                let (jp, dp) = tc.nearest_pruned(
+                    idx, vals, xns[i], &cn, &mut lbs, &mut scratch,
+                );
+                assert_eq!(jp, ju, "row {i}: pruned argmin diverged");
+                assert_eq!(
+                    dp.to_bits(),
+                    du.to_bits(),
+                    "row {i}: pruned distance diverged ({dp} vs {du})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn nearest_block_bit_identical_to_per_point() {
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // pruned gathers are unfused; skip under opt-in FMA
+        }
+        Cases::new(60).run(|rng| {
+            let cols = rng.below(100) + 2;
+            let k = rng.below(25) + 1;
+            let n = rng.below(2 * SPARSE_BLOCK) + 1;
+            let m = random_csr(rng, n, cols, 14);
+            let cmat = DenseMatrix::from_vec(
+                k,
+                cols,
+                (0..k * cols).map(|_| rng.gauss_f32()).collect(),
+            );
+            let cn = cmat.row_sq_norms();
+            let tc = TransposedCentroids::build(&cmat);
+            let xns = m.row_sq_norms();
+            let mut scratch = vec![0f32; k];
+            let mut lbs = vec![0f32; k];
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + SPARSE_BLOCK).min(n);
+                let rows: Vec<(&[u32], &[f32])> =
+                    (lo..hi).map(|i| m.row(i)).collect();
+                let mut lbl = vec![0u32; hi - lo];
+                let mut d2 = vec![0f32; hi - lo];
+                tc.nearest_block(
+                    &rows,
+                    &xns[lo..hi],
+                    &cn,
+                    &mut lbs,
+                    &mut scratch,
+                    &mut lbl,
+                    &mut d2,
+                );
+                for (o, i) in (lo..hi).enumerate() {
+                    let (idx, vals) = m.row(i);
+                    let (j, e) =
+                        tc.nearest(idx, vals, xns[i], &cn, &mut scratch);
+                    assert_eq!(lbl[o], j, "point {i}");
+                    assert_eq!(d2[o].to_bits(), e.to_bits(), "point {i}");
+                }
+                lo = hi;
+            }
+        });
+    }
+
+    #[test]
+    fn prune_bound_never_exceeds_computed_distance() {
+        // the fp-safety property the pruning correctness proof rests
+        // on: lb_safe(j) ≤ fl(d²(j)) for every point/centroid pair.
+        // Exercised both with exact stored norms and with deliberately
+        // perturbed ones — the additive bound form uses the same stored
+        // cn the distance adds, so a (d-dependent) norm-summation error
+        // cancels out of the comparison by construction.
+        Cases::new(120).run(|rng| {
+            let cols = rng.below(200) + 2;
+            let k = rng.below(20) + 1;
+            let m = random_csr(rng, 4, cols, 30);
+            let cmat = DenseMatrix::from_vec(
+                k,
+                cols,
+                (0..k * cols).map(|_| rng.gauss_f32()).collect(),
+            );
+            let tc = TransposedCentroids::build(&cmat);
+            let exact_cn = cmat.row_sq_norms();
+            // like the engine's incrementally-maintained norms at high
+            // d, a stored cn can be off by far more than f32 epsilon
+            let skew = 1.0 + 1e-3 * (rng.gauss_f32().clamp(-2.0, 2.0));
+            let skewed_cn: Vec<f32> =
+                exact_cn.iter().map(|x| x * skew).collect();
+            let xns = m.row_sq_norms();
+            for cn in [&exact_cn, &skewed_cn] {
+                for i in 0..m.rows {
+                    let (idx, vals) = m.row(i);
+                    let xnf = xns[i] as f64;
+                    let sqxn = xnf.sqrt();
+                    let slack = prune_slack(idx.len());
+                    for j in 0..k {
+                        let ub = sqxn * tc.sqnorms[j] as f64;
+                        let scale = xnf + cn[j] as f64 + 2.0 * ub;
+                        let lb = (xnf + cn[j] as f64
+                            - 2.0 * ub
+                            - slack * scale) as f32;
+                        let d2 = sq_dist_sparse(
+                            idx, vals, xns[i], cmat.row(j), cn[j],
+                        );
+                        assert!(
+                            lb <= d2,
+                            "i={i} j={j}: bound {lb} above computed d² {d2}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rebuild_reuses_allocation_and_matches_fresh_build() {
+        let mut rng = Pcg64::new(11, 4);
+        let c1 = DenseMatrix::from_vec(
+            7,
+            100,
+            (0..700).map(|_| rng.gauss_f32()).collect(),
+        );
+        let mut tc = TransposedCentroids::build(&c1);
+        assert_eq!((tc.k, tc.d), (7, 100));
+        let ptr_before = tc.ct.as_ptr();
+        // same shape: rebuild must reuse the allocation exactly
+        let c2 = DenseMatrix::from_vec(
+            7,
+            100,
+            (0..700).map(|_| rng.gauss_f32()).collect(),
+        );
+        tc.rebuild(&c2);
+        assert_eq!(tc.ct.as_ptr(), ptr_before, "same-shape rebuild reallocated");
+        let fresh = TransposedCentroids::build(&c2);
+        assert_eq!(tc.ct, fresh.ct);
+        assert_eq!(tc.sqnorms, fresh.sqnorms);
+        // sqnorms are the f64-accurate row norms (pruning safety needs
+        // them tighter than any f32-summed norm can be)
+        for j in 0..7 {
+            let exact: f64 = c2.row(j).iter().map(|&x| x as f64 * x as f64).sum();
+            assert_eq!(fresh.sqnorms[j], exact.sqrt() as f32);
+        }
+        // shape change: contents must still match a fresh build,
+        // including shapes straddling the tile edge
+        for (k, d) in [(3usize, 130usize), (65, 64), (1, 1), (9, 257)] {
+            let c = DenseMatrix::from_vec(
+                k,
+                d,
+                (0..k * d).map(|_| rng.gauss_f32()).collect(),
+            );
+            tc.rebuild(&c);
+            let fresh = TransposedCentroids::build(&c);
+            assert_eq!((tc.k, tc.d), (k, d));
+            assert_eq!(tc.ct, fresh.ct, "k={k} d={d}");
+            for j in 0..k {
+                for col in 0..d {
+                    assert_eq!(tc.ct[col * k + j], c.row(j)[col]);
+                }
+            }
+        }
     }
 
     #[test]

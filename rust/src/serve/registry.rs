@@ -27,6 +27,7 @@ use crate::config::RunConfig;
 use crate::coordinator::shard::Pool;
 use crate::kmeans::assign::NativeEngine;
 use crate::kmeans::state::Centroids;
+use crate::linalg::sparse::TransposedCentroids;
 use crate::serve::session::{self, OnlineSession};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
@@ -60,6 +61,14 @@ pub struct PublishedModel {
     /// Centroid revision this view froze (0 when uninitialised);
     /// process-unique, so equal revisions imply identical centroids.
     pub rev: u64,
+    /// The model stores sparse (CSR) data; predict queries are
+    /// sparsified so they run the O(nnz·k) kernels.
+    pub sparse: bool,
+    /// The training session's transposed centroid block at `rev`
+    /// (sparse models only): carried into the published view so
+    /// concurrent sparse predicts share one O(k·d) transpose instead of
+    /// each predict engine rebuilding its own per publish.
+    pub trans: Option<Arc<TransposedCentroids>>,
 }
 
 impl PublishedModel {
@@ -78,7 +87,14 @@ impl PublishedModel {
                 self.k
             )
         })?;
-        session::predict_against(cent, self.dim, rows, engine, pool)
+        // zero-rebuild sparse predicts: the transpose frozen into this
+        // view rides straight into the engine call, so predicts racing
+        // across publishes can never evict each other into a rebuild
+        // (no shared cache slot is involved at all)
+        let trans = if self.sparse { self.trans.clone() } else { None };
+        session::predict_against(
+            cent, self.dim, rows, self.sparse, trans, engine, pool,
+        )
     }
 
     /// One row of the protocol's `list` response.
@@ -158,6 +174,15 @@ impl ModelEntry {
         f(&s)
     }
 
+    /// `(hits, builds)` of the lock-free predict engine's transpose
+    /// cache. With published sparse models the builds must stay at
+    /// zero: every predict is served by the carried transpose
+    /// (asserted in `tests/serve_concurrent.rs`).
+    pub fn predict_cache_stats(&self) -> (u64, u64) {
+        let c = self.predict_engine.cache();
+        (c.hits(), c.builds())
+    }
+
     fn lock_session(&self) -> Result<std::sync::MutexGuard<'_, OnlineSession>> {
         self.session.lock().map_err(|_| {
             anyhow!(
@@ -179,6 +204,11 @@ fn publish_view(name: &str, s: &OnlineSession) -> PublishedModel {
         n_total: s.data().n(),
         algo: s.cfg().label(),
         rev: s.centroids().map(|c| c.rev).unwrap_or(0),
+        sparse: s.data().is_sparse(),
+        // builds (at most once per revision, in the session engine's
+        // cache) the transpose every sparse predict against this view
+        // will share — the publish is the one place that pays O(k·d)
+        trans: s.published_trans(),
     }
 }
 
@@ -434,6 +464,60 @@ mod tests {
             d2_live.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             d2_sess.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn sparse_publish_carries_transpose_and_predicts_never_rebuild() {
+        let data = crate::data::rcv1::Rcv1Sim {
+            vocab: 300,
+            topic_vocab: 40,
+            ..Default::default()
+        }
+        .generate(400, 8);
+        let (session, _) = session::train(&data, &cfg(10, 8)).unwrap();
+        let reg = ModelRegistry::with_default(session);
+        let entry = reg.resolve(None).unwrap();
+        let view = entry.current();
+        assert!(view.sparse);
+        let tc = view
+            .trans
+            .as_ref()
+            .expect("sparse publish must carry the transpose");
+        assert_eq!((tc.k, tc.d), (10, 300));
+        let queries = rows_of(&data, 0, 6);
+        for _ in 0..4 {
+            entry.predict(&queries).unwrap();
+        }
+        assert_eq!(
+            entry.predict_cache_stats(),
+            (4, 0),
+            "published sparse predicts must be served by the carried \
+             transpose, never a rebuild"
+        );
+        // live and published answers agree bitwise on the sparse path
+        let (la, da) = entry.predict(&queries).unwrap();
+        let (lb, db) =
+            entry.with_session(|s| s.predict_rows(&queries)).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(
+            da.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            db.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // a training step publishes a fresh transpose; predicts against
+        // the new view still never build their own
+        entry
+            .with_session_mut(|s| s.step(1, 1e9).map(|_| ()))
+            .unwrap();
+        entry.predict(&queries).unwrap();
+        assert_eq!(entry.predict_cache_stats().1, 0);
+        assert!(entry.current().trans.is_some());
+        // dense models carry no transpose
+        let dense = GaussianMixture::default_spec(3, 5).generate(100, 4);
+        let (ds, _) = session::train(&dense, &cfg(3, 4)).unwrap();
+        let reg2 = ModelRegistry::with_default(ds);
+        let dview = reg2.resolve(None).unwrap().current();
+        assert!(!dview.sparse);
+        assert!(dview.trans.is_none());
     }
 
     #[test]

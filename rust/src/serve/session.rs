@@ -29,11 +29,13 @@ use crate::kmeans::assign::{AssignEngine, NativeEngine, Sel};
 use crate::kmeans::state::Centroids;
 use crate::kmeans::{self, Clusterer, Ctx, RoundInfo};
 use crate::linalg::dense::{self, DenseMatrix};
+use crate::linalg::sparse::{CsrMatrix, TransposedCentroids};
 use crate::serve::snapshot::Snapshot;
 use crate::util::json::{self, Json};
 use crate::util::rng::Pcg64;
 use crate::util::timer::WorkClock;
 use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::Arc;
 
 /// What one [`OnlineSession::step`] call did.
 #[derive(Clone, Copy, Debug, Default)]
@@ -284,7 +286,27 @@ impl OnlineSession {
                 self.cfg.k
             )
         })?;
-        predict_against(cent, self.data.dim(), rows, self.engine.as_ref(), &self.pool)
+        predict_against(
+            cent,
+            self.data.dim(),
+            rows,
+            self.data.is_sparse(),
+            None,
+            self.engine.as_ref(),
+            &self.pool,
+        )
+    }
+
+    /// A shareable transposed-centroid handle at the current revision
+    /// (sparse sessions only). The registry carries it into the
+    /// published model view so concurrent sparse predicts reuse this
+    /// session's O(k·d) transpose instead of rebuilding their own.
+    pub fn published_trans(&self) -> Option<Arc<TransposedCentroids>> {
+        if !self.data.is_sparse() {
+            return None;
+        }
+        let cent = self.centroids()?;
+        self.engine.trans_handle(cent)
     }
 
     /// Export the full session as a snapshot artifact. `include_data`
@@ -391,27 +413,63 @@ impl OnlineSession {
 /// through here, so a predict answered from a published snapshot is
 /// bit-identical to one answered by the live session at the same
 /// centroid revision.
+#[allow(clippy::too_many_arguments)]
 pub fn predict_against(
     cent: &Centroids,
     dim: usize,
     rows: &[Vec<f32>],
+    sparse: bool,
+    trans: Option<Arc<TransposedCentroids>>,
     engine: &dyn AssignEngine,
     pool: &Pool,
 ) -> Result<(Vec<u32>, Vec<f32>)> {
     let n = rows.len();
-    let mut buf = Vec::with_capacity(n * dim);
     for (t, r) in rows.iter().enumerate() {
         ensure!(
             r.len() == dim,
             "predict row {t}: dimension {} != model dimension {dim}",
             r.len()
         );
-        buf.extend_from_slice(r);
     }
-    let queries = Data::dense(DenseMatrix::from_vec(n, dim, buf));
+    // queries against a sparse model go through the CSR kernels:
+    // O(nnz·k) per row against the transposed centroid block instead of
+    // O(d·k) dense scans (d is 47k-shaped for these models).
+    // Sparsification matches `ingest_rows` — non-zeros in coordinate
+    // order — so a query row scores bit-identically to the same row
+    // ingested into the session's buffer.
+    let queries = if sparse {
+        let mut m = CsrMatrix::empty(dim);
+        let mut cv = Vec::new();
+        for r in rows {
+            cv.clear();
+            for (c, &x) in r.iter().enumerate() {
+                if x != 0.0 {
+                    cv.push((c as u32, x));
+                }
+            }
+            m.push_row(&cv);
+        }
+        Data::sparse(m)
+    } else {
+        let mut buf = Vec::with_capacity(n * dim);
+        for r in rows {
+            buf.extend_from_slice(r);
+        }
+        Data::dense(DenseMatrix::from_vec(n, dim, buf))
+    };
     let mut lbl = vec![0u32; n];
     let mut d2 = vec![0f32; n];
-    engine.assign(&queries, Sel::Range(0, n), cent, pool, &mut lbl, &mut d2);
+    // a carried transpose (published sparse model) rides straight into
+    // the engine call — no shared-cache traffic on the predict path
+    engine.assign_with_trans(
+        &queries,
+        Sel::Range(0, n),
+        cent,
+        pool,
+        trans,
+        &mut lbl,
+        &mut d2,
+    );
     Ok((lbl, d2))
 }
 

@@ -125,3 +125,57 @@ fn determinism_full_stack() {
         assert_eq!(a.centroids.c.data, b.centroids.c.data, "{cfg:?}");
     });
 }
+
+#[test]
+fn sparse_engine_paths_agree_bitwise() {
+    // end-to-end form of the sparse kernel invariant: the transposed
+    // (SIMD AXPY, blocked, norm-pruned) path, the threaded variant, and
+    // the cold-cache gather fallback must all return the same label and
+    // distance bits for the same points — path selection (cache warmth,
+    // selection size, thread count) must never change results
+    use nmbkm::coordinator::Pool;
+    use nmbkm::data::rcv1::Rcv1Sim;
+    use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel};
+    use nmbkm::kmeans::init;
+    use nmbkm::linalg::simd;
+
+    if simd::tier() == simd::Tier::Avx2Fma {
+        return; // the opt-in FMA tier is documented as not bit-exact
+    }
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    Cases::new(6).run(|rng| {
+        let n = 300 + rng.below(200);
+        let k = 8 + rng.below(8);
+        let data = Rcv1Sim {
+            vocab: 600,
+            topic_vocab: 80,
+            ..Default::default()
+        }
+        .generate(n, rng.next_u64());
+        let cent = init::first_k(&data, k);
+        let warm = NativeEngine::default();
+        let mut l1 = vec![0u32; n];
+        let mut d1 = vec![0f32; n];
+        warm.assign(&data, Sel::Range(0, n), &cent, &Pool::new(1), &mut l1, &mut d1);
+        let (_, builds) = warm.trans_cache_stats().unwrap();
+        assert_eq!(builds, 1, "large sparse selection must build the transpose");
+        let mut l4 = vec![0u32; n];
+        let mut d4 = vec![0f32; n];
+        warm.assign(&data, Sel::Range(0, n), &cent, &Pool::new(4), &mut l4, &mut d4);
+        assert_eq!(l1, l4, "thread count changed sparse labels");
+        assert_eq!(bits(&d1), bits(&d4), "thread count changed sparse distances");
+        // cold engine + tiny selection → gather fallback, no transpose
+        let cold = NativeEngine::default();
+        let m = 32.min(n);
+        let mut lg = vec![0u32; m];
+        let mut dg = vec![0f32; m];
+        cold.assign(&data, Sel::Range(0, m), &cent, &Pool::new(2), &mut lg, &mut dg);
+        assert_eq!(
+            cold.trans_cache_stats().unwrap(),
+            (0, 0),
+            "tiny cold selection must stay on the gather path"
+        );
+        assert_eq!(&l1[..m], &lg[..], "gather vs transposed labels diverged");
+        assert_eq!(bits(&d1[..m]), bits(&dg), "gather vs transposed distances diverged");
+    });
+}

@@ -314,6 +314,80 @@ fn registry_create_route_drop_over_tcp() {
     server.join().expect("server exits after shutdown from any connection");
 }
 
+/// Acceptance (sparse hot-path overhaul): predicts against a published
+/// sparse model must be served entirely by the transpose carried from
+/// the training session — zero transpose rebuilds across predicts
+/// between publishes, from any number of concurrent predict threads —
+/// and must stay bit-identical to the live session's own answers.
+#[test]
+fn published_sparse_predicts_never_rebuild_transpose() {
+    const THREADS: usize = 4;
+    const PREDICTS_PER_THREAD: usize = 6;
+    let data = nmbkm::data::rcv1::Rcv1Sim {
+        vocab: 500,
+        topic_vocab: 60,
+        ..Default::default()
+    }
+    .generate(600, 11);
+    let mut session =
+        session::OnlineSession::from_data(data.clone(), cfg(Algo::GbRho, 12, 256))
+            .unwrap();
+    session.step(5, f64::INFINITY).unwrap();
+    let reg = ModelRegistry::with_default(session);
+    let entry = reg.resolve(None).unwrap();
+    assert!(
+        entry.current().trans.is_some(),
+        "sparse publish must carry the session transpose"
+    );
+    let queries = rows_of(&data, 0, 8);
+
+    // hammer the published view from concurrent threads
+    let mut workers = Vec::new();
+    for _ in 0..THREADS {
+        let entry = entry.clone();
+        let queries = queries.clone();
+        workers.push(std::thread::spawn(move || {
+            for _ in 0..PREDICTS_PER_THREAD {
+                let (lbl, d2) = entry.predict(&queries).unwrap();
+                assert_eq!(lbl.len(), 8);
+                assert!(d2.iter().all(|x| x.is_finite()));
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    let (hits, builds) = entry.predict_cache_stats();
+    assert_eq!(
+        builds, 0,
+        "predicts between publishes rebuilt the transpose"
+    );
+    assert_eq!(hits as usize, THREADS * PREDICTS_PER_THREAD);
+
+    // republish (training step) and predict again: the refreshed
+    // transpose is carried too — predict-side builds stay at zero
+    // across arbitrarily many publish/predict cycles
+    for _ in 0..3 {
+        entry
+            .with_session_mut(|s| s.step(1, f64::INFINITY).map(|_| ()))
+            .unwrap();
+        let (lbl_pub, d2_pub) = entry.predict(&queries).unwrap();
+        let (lbl_live, d2_live) =
+            entry.with_session(|s| s.predict_rows(&queries)).unwrap();
+        assert_eq!(lbl_pub, lbl_live);
+        assert_eq!(
+            d2_pub.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            d2_live.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "published sparse predict diverged from the live session"
+        );
+    }
+    assert_eq!(
+        entry.predict_cache_stats().1,
+        0,
+        "a publish cycle leaked a rebuild into the predict path"
+    );
+}
+
 /// ROADMAP acceptance: two concurrently training sparse sessions must
 /// not evict each other's transpose cache. Per-session builds stay
 /// bounded by the number of centroid revisions that session itself
