@@ -1,9 +1,22 @@
-//! Serve-layer throughput: predict QPS at 1 vs 4 concurrent TCP
-//! connections **while the model trains**. The multi-connection server
-//! answers predicts from published snapshots without touching the
-//! session lock, so throughput should scale with connections instead of
-//! serialising behind training rounds (`BENCH_serve.json`; CI runs
-//! `--smoke` as a scaling sanity check, not a precision measurement).
+//! Serve-layer throughput.
+//!
+//! Two trials land in `BENCH_serve.json`:
+//!
+//! * `predict_during_training` — predict QPS at 1 vs 4 concurrent TCP
+//!   connections **while the model trains**; the multi-connection
+//!   server answers predicts from published snapshots without touching
+//!   the session lock, so throughput should scale with connections
+//!   instead of serialising behind training rounds.
+//! * `predict_wire_variants` — a static RCV1-shaped sparse model
+//!   queried over one connection through every wire route at batch
+//!   sizes 1/16/64: dense JSONL (the PR 1 format), sparse-encoded
+//!   JSONL (`{"indices":…,"values":…,"dim":d}`), and length-prefixed
+//!   binary frames. Batching amortises per-request parse/dispatch, so
+//!   batch 64 should clear ≥2x the batch-1 QPS; the derived speedups
+//!   and per-query payload sizes at the full RCV1 shape land in `meta`.
+//!
+//! CI runs `--quick` (3 samples) so the medians are trend-gateable by
+//! `nmbkm bench-trend`, exactly like `BENCH_micro.json`.
 //!
 //! Usage: cargo bench --bench serve_throughput -- [--quick|--smoke]
 //!        [--json BENCH_serve.json]
@@ -12,8 +25,10 @@ use nmbkm::bench::{BenchOpts, BenchReport, BenchSet};
 use nmbkm::config::{Algo, Rho, RunConfig};
 use nmbkm::coordinator::Pool;
 use nmbkm::data::gaussian::GaussianMixture;
-use nmbkm::data::Data;
-use nmbkm::serve::{session, ModelRegistry};
+use nmbkm::data::rcv1::Rcv1Sim;
+use nmbkm::data::{Data, Storage};
+use nmbkm::serve::wire::{dense_points_json, sparse_points_json};
+use nmbkm::serve::{frame, session, ModelRegistry};
 use nmbkm::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,14 +41,54 @@ struct Scale {
     dim: usize,
     predicts_per_conn: usize,
     query_batch: usize,
+    /// `predict_wire_variants`: total queries per measurement and the
+    /// sparse corpus shape.
+    wire_queries: usize,
+    wire_n_points: usize,
+    wire_vocab: usize,
+    wire_k: usize,
 }
 
 fn scale_for(opts: &BenchOpts) -> Scale {
     if opts.samples <= 1 {
-        // CI smoke: prove the concurrent path works, in milliseconds
-        Scale { n_points: 2000, k: 10, dim: 16, predicts_per_conn: 30, query_batch: 8 }
+        // CI smoke: prove the paths work, in milliseconds
+        Scale {
+            n_points: 2000,
+            k: 10,
+            dim: 16,
+            predicts_per_conn: 30,
+            query_batch: 8,
+            wire_queries: 64,
+            wire_n_points: 600,
+            wire_vocab: 400,
+            wire_k: 8,
+        }
+    } else if opts.samples <= BenchOpts::quick().samples {
+        // CI quick: enough work for stable gateable medians, still
+        // seconds not minutes
+        Scale {
+            n_points: 6000,
+            k: 20,
+            dim: 24,
+            predicts_per_conn: 100,
+            query_batch: 16,
+            wire_queries: 512,
+            wire_n_points: 3000,
+            wire_vocab: 1000,
+            wire_k: 16,
+        }
     } else {
-        Scale { n_points: 20000, k: 50, dim: 32, predicts_per_conn: 300, query_batch: 16 }
+        Scale {
+            n_points: 20000,
+            k: 50,
+            dim: 32,
+            predicts_per_conn: 300,
+            query_batch: 16,
+            wire_queries: 2048,
+            wire_n_points: 8000,
+            wire_vocab: 2000,
+            wire_k: 32,
+        }
     }
 }
 
@@ -50,17 +105,6 @@ fn cfg(k: usize) -> RunConfig {
         stop_on_convergence: false,
         ..Default::default()
     }
-}
-
-fn points_json(rows: &[Vec<f32>]) -> String {
-    let coords: Vec<String> = rows
-        .iter()
-        .map(|q| {
-            let xs: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
-            format!("[{}]", xs.join(","))
-        })
-        .collect();
-    format!("[{}]", coords.join(","))
 }
 
 fn roundtrip(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
@@ -116,7 +160,7 @@ fn run_trial(data: &Data, scale: &Scale, conns: usize) {
         (conn, reader)
     });
 
-    let req = format!("{{\"op\":\"predict\",\"points\":{}}}", points_json(&queries));
+    let req = format!("{{\"op\":\"predict\",\"points\":{}}}", dense_points_json(&queries));
     let per_conn = scale.predicts_per_conn;
     let mut clients = Vec::new();
     for _ in 0..conns {
@@ -136,6 +180,119 @@ fn run_trial(data: &Data, scale: &Scale, conns: usize) {
     let (mut conn, mut reader) = trainer.join().unwrap();
     roundtrip(&mut conn, &mut reader, r#"{"op":"shutdown"}"#);
     server.join().unwrap();
+}
+
+/// Rows `0..n` of a sparse corpus as `(indices, values)` pairs plus
+/// their dense twins.
+#[allow(clippy::type_complexity)]
+fn query_rows(data: &Data, n: usize) -> (Vec<(Vec<u32>, Vec<f32>)>, Vec<Vec<f32>>) {
+    let Storage::Sparse(m) = &data.storage else {
+        panic!("wire-variant corpus must be sparse");
+    };
+    let mut sparse = Vec::with_capacity(n);
+    let mut dense = Vec::with_capacity(n);
+    let mut row = vec![0f32; data.dim()];
+    for t in 0..n {
+        let i = (t * 13) % data.n();
+        let (idx, vals) = m.row(i);
+        sparse.push((idx.to_vec(), vals.to_vec()));
+        data.write_row_dense(i, &mut row);
+        dense.push(row.clone());
+    }
+    (sparse, dense)
+}
+
+/// Fingerprint of a JSONL predict response: `(labels, d2 bit patterns)`
+/// — f32 → f64 JSON → f32 is lossless, so these are the engine's bits.
+fn fingerprint(resp: &Json) -> (Vec<u32>, Vec<u32>) {
+    let labels = resp
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as u32)
+        .collect();
+    let d2 = resp
+        .get("d2")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| (x.as_f64().unwrap() as f32).to_bits())
+        .collect();
+    (labels, d2)
+}
+
+/// Complete the prebuilt JSONL predict requests over one connection.
+fn drive_jsonl(addr: std::net::SocketAddr, requests: &[String]) {
+    let (mut conn, mut reader) = connect(addr);
+    let mut line = String::new();
+    for req in requests {
+        conn.write_all(req.as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            !line.contains("\"ok\":false"),
+            "predict failed: {line}"
+        );
+    }
+}
+
+/// Complete the prebuilt binary predict frames over one connection
+/// (magic byte first — the same port serves JSONL clients).
+fn drive_binary(addr: std::net::SocketAddr, frames: &[Vec<u8>]) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(&[frame::MAGIC]).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for f in frames {
+        conn.write_all(f).unwrap();
+        let (header, body) = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(header.get("ok").and_then(Json::as_bool), Some(true));
+        let (lbl, _) = frame::decode_predict_body(&body).unwrap();
+        assert!(!lbl.is_empty());
+    }
+}
+
+fn predict_frame(batch: &[(Vec<u32>, Vec<f32>)], dim: usize) -> Vec<u8> {
+    let body = frame::encode_sparse_points(dim, batch).unwrap();
+    let mut out = Vec::new();
+    frame::write_frame(
+        &mut out,
+        &Json::parse(r#"{"op":"predict"}"#).unwrap(),
+        &body,
+    )
+    .unwrap();
+    out
+}
+
+/// Mean per-query wire payload sizes at the full RCV1 shape (d=47,236,
+/// ~76 nnz/doc) for the README's encoding table.
+fn payload_sizes_rcv1(report: &mut BenchReport) {
+    let data = Rcv1Sim::default().generate(8, 3);
+    let (sparse, dense) = query_rows(&data, 8);
+    let dense_json = dense_points_json(&dense).len() as f64 / 8.0;
+    let sparse_json = sparse_points_json(data.dim(), &sparse).len() as f64 / 8.0;
+    let sparse_bin =
+        frame::encode_sparse_points(data.dim(), &sparse).unwrap().len() as f64 / 8.0;
+    report.meta("payload_bytes_per_query_dense_json_rcv1", json::num(dense_json));
+    report.meta("payload_bytes_per_query_sparse_json_rcv1", json::num(sparse_json));
+    report.meta("payload_bytes_per_query_sparse_binary_rcv1", json::num(sparse_bin));
+    report.meta(
+        "payload_ratio_sparse_json_rcv1",
+        json::num(dense_json / sparse_json),
+    );
+    report.meta(
+        "payload_ratio_sparse_binary_rcv1",
+        json::num(dense_json / sparse_bin),
+    );
+    println!(
+        "RCV1-shape payload/query: dense JSON {dense_json:.0} B, sparse JSON \
+         {sparse_json:.0} B ({:.0}x), binary sparse {sparse_bin:.0} B ({:.0}x)",
+        dense_json / sparse_json,
+        dense_json / sparse_bin
+    );
 }
 
 fn main() {
@@ -181,6 +338,134 @@ fn main() {
         total4 / t4,
         (total4 / t4) / (total1 / t1)
     );
+    report.push(set);
+
+    // ── wire variants: sparse-encoded and binary-framed predicts ──────
+    let sdata = Rcv1Sim {
+        vocab: scale.wire_vocab,
+        topic_vocab: (scale.wire_vocab / 8).max(40),
+        ..Default::default()
+    }
+    .generate(scale.wire_n_points, 5);
+    let dim = sdata.dim();
+    let mut scfg = cfg(scale.wire_k);
+    scfg.max_rounds = 6;
+    scfg.max_seconds = 60.0;
+    let (trained, _) = session::train(&sdata, &scfg).expect("train sparse model");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let reg = Arc::new(ModelRegistry::with_default(trained));
+    let server = std::thread::spawn(move || {
+        nmbkm::serve::server::serve_listener_opts(reg, listener, true).unwrap();
+    });
+    let (sparse_rows, dense_rows) = query_rows(&sdata, scale.wire_queries);
+    report.meta("wire_queries", json::num(scale.wire_queries as f64));
+    report.meta("wire_vocab", json::num(scale.wire_vocab as f64));
+    report.meta(
+        "wire_mean_nnz",
+        json::num(match &sdata.storage {
+            Storage::Sparse(m) => m.mean_nnz(),
+            Storage::Dense(_) => 0.0,
+        }),
+    );
+
+    // sanity: all three routes answer the first batch with the same bits
+    {
+        let (mut conn, mut reader) = connect(addr);
+        let dense_resp = roundtrip(
+            &mut conn,
+            &mut reader,
+            &format!(
+                "{{\"op\":\"predict\",\"points\":{}}}",
+                dense_points_json(&dense_rows[..8])
+            ),
+        );
+        let sparse_resp = roundtrip(
+            &mut conn,
+            &mut reader,
+            &format!(
+                "{{\"op\":\"predict\",\"points\":{}}}",
+                sparse_points_json(dim, &sparse_rows[..8])
+            ),
+        );
+        assert_eq!(fingerprint(&dense_resp), fingerprint(&sparse_resp));
+        let mut bconn = TcpStream::connect(addr).unwrap();
+        bconn.write_all(&[frame::MAGIC]).unwrap();
+        let mut breader = BufReader::new(bconn.try_clone().unwrap());
+        bconn
+            .write_all(&predict_frame(&sparse_rows[..8], dim))
+            .unwrap();
+        let (_, body) = frame::read_frame(&mut breader).unwrap().unwrap();
+        let (blbl, bd2) = frame::decode_predict_body(&body).unwrap();
+        let (jlbl, jd2) = fingerprint(&dense_resp);
+        assert_eq!(blbl, jlbl, "binary route diverged from JSONL");
+        assert_eq!(
+            bd2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            jd2,
+            "binary d2 bits diverged from JSONL"
+        );
+    }
+
+    let mut set = BenchSet::new("predict_wire_variants", opts);
+    let mut qps = Vec::new();
+    for batch in [1usize, 16, 64] {
+        // prebuild every request so the timed region is pure
+        // request/response traffic
+        let jsonl_dense: Vec<String> = dense_rows
+            .chunks(batch)
+            .map(|c| format!("{{\"op\":\"predict\",\"points\":{}}}", dense_points_json(c)))
+            .collect();
+        let jsonl_sparse: Vec<String> = sparse_rows
+            .chunks(batch)
+            .map(|c| {
+                format!(
+                    "{{\"op\":\"predict\",\"points\":{}}}",
+                    sparse_points_json(dim, c)
+                )
+            })
+            .collect();
+        let frames: Vec<Vec<u8>> = sparse_rows
+            .chunks(batch)
+            .map(|c| predict_frame(c, dim))
+            .collect();
+        let variants: [(String, Box<dyn FnMut() + '_>); 3] = [
+            (
+                format!("jsonl_dense_b{batch}"),
+                Box::new(|| drive_jsonl(addr, &jsonl_dense)),
+            ),
+            (
+                format!("jsonl_sparse_b{batch}"),
+                Box::new(|| drive_jsonl(addr, &jsonl_sparse)),
+            ),
+            (
+                format!("binary_sparse_b{batch}"),
+                Box::new(|| drive_binary(addr, &frames)),
+            ),
+        ];
+        for (name, mut runner) in variants {
+            let m = set.bench(&name, &mut runner);
+            qps.push((name, scale.wire_queries as f64 / m.median_secs()));
+        }
+    }
+    for (name, q) in &qps {
+        report.meta(&format!("qps_{name}"), json::num(*q));
+    }
+    let lookup = |n: &str| {
+        qps.iter().find(|(name, _)| name == n).map(|(_, q)| *q).unwrap_or(f64::NAN)
+    };
+    let sp_jsonl = lookup("jsonl_sparse_b64") / lookup("jsonl_sparse_b1");
+    let sp_bin = lookup("binary_sparse_b64") / lookup("binary_sparse_b1");
+    report.meta("speedup_sparse_jsonl_b64_over_b1", json::num(sp_jsonl));
+    report.meta("speedup_sparse_binary_b64_over_b1", json::num(sp_bin));
+    println!(
+        "sparse predict batching: jsonl b64/b1 {sp_jsonl:.2}x, binary b64/b1 {sp_bin:.2}x"
+    );
+    payload_sizes_rcv1(&mut report);
+
+    let (mut conn, mut reader) = connect(addr);
+    roundtrip(&mut conn, &mut reader, r#"{"op":"shutdown"}"#);
+    server.join().unwrap();
+
     report.push(set);
     if let Some(path) = json_path {
         report.write(&path).expect("writing bench report");

@@ -5,7 +5,7 @@
 //!           --seconds 20 --seed 0 --engine xla --threads 8 --out run.csv
 //! nmbkm experiment fig1|fig2|fig3|table1|table2|all [--full] [--seeds N]
 //! nmbkm train --dataset gaussian --k 50 --seconds 10 --save model.json
-//! nmbkm serve --snapshot model.json [--listen 127.0.0.1:7878]
+//! nmbkm serve --snapshot model.json [--listen 127.0.0.1:7878] [--binary]
 //! nmbkm serve --models news=a.json,users=b.json --listen 127.0.0.1:7878
 //! nmbkm predict --snapshot model.json [--points queries.jsonl]
 //! nmbkm bench-trend --baseline old.json --current new.json
@@ -75,6 +75,7 @@ fn serve_spec() -> Vec<OptSpec> {
         OptSpec { name: "listen", takes_value: true, default: None, help: "TCP address, e.g. 127.0.0.1:7878 [stdio]" },
         OptSpec { name: "threads", takes_value: true, default: None, help: "override snapshot thread counts" },
         OptSpec { name: "snapshot-dir", takes_value: true, default: None, help: "where wire-created models write protocol snapshots [cwd]" },
+        OptSpec { name: "binary", takes_value: false, default: None, help: "accept length-prefixed binary frames (connections starting with magic byte 0xB7; JSONL clients unaffected)" },
     ]
 }
 
@@ -89,7 +90,7 @@ fn bench_trend_spec() -> Vec<OptSpec> {
 fn predict_spec() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "snapshot", takes_value: true, default: None, help: "model snapshot (required)" },
-        OptSpec { name: "points", takes_value: true, default: Some("-"), help: "JSONL query file, '-' = stdin" },
+        OptSpec { name: "points", takes_value: true, default: Some("-"), help: "JSONL query file (dense array or sparse {indices,values,dim} per line), '-' = stdin" },
         OptSpec { name: "threads", takes_value: true, default: None, help: "worker threads [auto]" },
     ]
 }
@@ -285,9 +286,10 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
              bootstrap models over the wire with the 'create' op"
         );
     }
+    let binary = args.flag("binary");
     match args.get("listen") {
-        Some(addr) => nmbkm::serve::server::serve_tcp(registry, addr),
-        None => nmbkm::serve::server::serve_stdio(&registry),
+        Some(addr) => nmbkm::serve::server::serve_tcp(registry, addr, binary),
+        None => nmbkm::serve::server::serve_stdio(&registry, binary),
     }
 }
 
@@ -378,6 +380,9 @@ fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
     let snap = Snapshot::load(std::path::Path::new(path))?;
     let cent = snap.centroids();
     let d = cent.d();
+    // sparse-data snapshots score through the same O(nnz·k) CSR kernels
+    // the serve layer uses, so CLI and served predicts agree bitwise
+    let sparse = snap.data.as_ref().map(|x| x.is_sparse()).unwrap_or(false);
     let source = args.get("points").unwrap_or("-");
     let text = if source == "-" {
         use std::io::Read;
@@ -387,9 +392,10 @@ fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
     } else {
         std::fs::read_to_string(source)?
     };
-    // parse every query row up front, score as one engine batch
-    let mut rows: Vec<f32> = Vec::new();
-    let mut count = 0usize;
+    // parse every query row up front — each line is one dense JSON array
+    // or one sparse {"indices":…,"values":…,"dim":d} object — then score
+    // everything as one engine batch
+    let mut rows: Vec<nmbkm::serve::WireRow> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
@@ -397,47 +403,30 @@ fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
         }
         let v = Json::parse(line)
             .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
-        let arr = v.as_arr().ok_or_else(|| {
-            anyhow::anyhow!("line {}: expected a JSON array of numbers", lineno + 1)
-        })?;
+        let row = nmbkm::serve::wire::row_from_json(&v)
+            .map_err(|e| anyhow::anyhow!("line {}: {e:#}", lineno + 1))?;
         anyhow::ensure!(
-            arr.len() == d,
-            "line {}: {} values, model dimension is {d}",
+            row.dim() == d,
+            "line {}: dimension {}, model dimension is {d}",
             lineno + 1,
-            arr.len()
+            row.dim()
         );
-        for x in arr {
-            let x = x.as_f64().ok_or_else(|| {
-                anyhow::anyhow!("line {}: non-numeric value", lineno + 1)
-            })?;
-            anyhow::ensure!(
-                (x as f32).is_finite(),
-                "line {}: non-finite value {x}",
-                lineno + 1
-            );
-            rows.push(x as f32);
-        }
-        count += 1;
+        rows.push(row);
     }
     let pool = match args.get("threads") {
         Some(_) => Pool::new(args.get_usize("threads")?),
         None => Pool::auto(),
     };
-    let queries = nmbkm::data::Data::dense(
-        nmbkm::linalg::dense::DenseMatrix::from_vec(count, d, rows),
-    );
-    let mut lbl = vec![0u32; count];
-    let mut d2 = vec![0f32; count];
-    use nmbkm::kmeans::assign::AssignEngine;
-    NativeEngine::default().assign(
-        &queries,
-        nmbkm::kmeans::assign::Sel::Range(0, count),
+    let (lbl, d2) = nmbkm::serve::session::predict_wire(
         cent,
+        d,
+        &rows,
+        sparse,
+        None,
+        &NativeEngine::default(),
         &pool,
-        &mut lbl,
-        &mut d2,
-    );
-    for t in 0..count {
+    )?;
+    for t in 0..lbl.len() {
         println!("{{\"label\":{},\"d2\":{}}}", lbl[t], d2[t] as f64);
     }
     Ok(())
@@ -535,8 +524,11 @@ fn main() {
                     "nmbkm serve",
                     "serve one or many model snapshots over the JSONL \
                      protocol (create|list|drop|ingest|predict|step|\
-                     stats|snapshot|shutdown); TCP handles concurrent \
-                     connections with snapshot-isolated predicts",
+                     stats|snapshot|shutdown); points may be dense \
+                     arrays or sparse {indices,values,dim} rows; TCP \
+                     handles concurrent connections with \
+                     snapshot-isolated batched predicts, and --binary \
+                     adds length-prefixed raw-f32 framing",
                     &serve_spec()
                 )
             );

@@ -1,0 +1,655 @@
+//! Opt-in length-prefixed binary framing: the same ops as the JSONL
+//! protocol, with point/score payloads as raw little-endian f32 blocks
+//! so the predict hot loop never parses or formats a float.
+//!
+//! A connection enters binary mode by sending the magic byte
+//! [`MAGIC`] (`0xB7`) before its first frame. JSONL is UTF-8 text (a
+//! request line starts with `{` or whitespace), so the byte is
+//! unambiguous and JSONL clients keep working unchanged on the same
+//! port; the server only honours it when started with `nmbkm serve
+//! --binary` (see `serve::server`).
+//!
+//! ## Frame layout (everything little-endian)
+//!
+//! ```text
+//! request  := u32 header_len | header | u32 body_len | body
+//! response := u32 header_len | header | u32 body_len | body
+//! ```
+//!
+//! The header is a JSON object — exactly a JSONL request/response,
+//! minus the bulk arrays. A request body, when non-empty, carries the
+//! `points` (replacing the header's `points` field):
+//!
+//! ```text
+//! body := 0x01 | u32 n | u32 dim | n·dim × f32              (dense)
+//!       | 0x02 | u32 n | u32 dim | n × u32 nnz_i
+//!              | Σnnz × u32 index | Σnnz × f32 value        (sparse)
+//! ```
+//!
+//! Sparse rows obey the same rules as the JSON encoding (strictly
+//! ascending indices, finite values; explicit zeros are dropped at
+//! decode): both ingresses funnel through `serve::wire`, so a binary
+//! predict is bit-identical to its JSONL twin. A `predict` response
+//! carries `{"ok":true,"op":"predict","model":…,"n":N}` in the header
+//! and the scores in the body:
+//!
+//! ```text
+//! body := u32 n | n × u32 label | n × f32 d2
+//! ```
+//!
+//! Every other response is header-only (`body_len == 0`), as is every
+//! error (`{"ok":false,"error":…}` — the stream survives, exactly like
+//! JSONL). Length prefixes are capped ([`MAX_HEADER_BYTES`],
+//! [`MAX_BODY_BYTES`]) so a remote peer cannot ask the server to
+//! allocate unboundedly — same hardening posture as the snapshot op's
+//! path confinement.
+
+use crate::serve::protocol::{self, Request};
+use crate::serve::registry::ModelRegistry;
+use crate::serve::wire::{self, WireRow};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::io::{Read, Write};
+
+/// First byte of a binary-mode connection. Not valid leading UTF-8, so
+/// it can never be confused with a JSONL request line.
+pub const MAGIC: u8 = 0xB7;
+
+/// Body tag: dense f32 rows.
+pub const ENC_DENSE: u8 = 1;
+/// Body tag: CSR-shaped sparse rows.
+pub const ENC_SPARSE: u8 = 2;
+
+/// Cap on a frame's JSON header (ops and names are tiny).
+pub const MAX_HEADER_BYTES: usize = 1 << 20;
+/// Cap on a frame's binary body (256 MiB ≈ 1.4M RCV1-shaped rows).
+pub const MAX_BODY_BYTES: usize = 1 << 28;
+/// The most rows one predict frame may carry: its response body is
+/// `4 + 8·n` bytes, and every accepted request must produce a response
+/// the client's own [`read_frame`] (which enforces [`MAX_BODY_BYTES`])
+/// can decode. Enforced on the request with an `ok:false` answer, so a
+/// too-large batch degrades into an error, never an undecodable frame.
+pub const MAX_PREDICT_ROWS: usize = (MAX_BODY_BYTES - 4) / 8;
+
+/// Write one frame: `[u32 header_len][header][u32 body_len][body]`.
+pub fn write_frame<W: Write>(w: &mut W, header: &Json, body: &[u8]) -> Result<()> {
+    let h = header.to_string();
+    w.write_all(&(h.len() as u32).to_le_bytes())?;
+    w.write_all(h.as_bytes())?;
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's raw parts; `Ok(None)` on clean EOF at a frame
+/// boundary. Errors here are structural (truncation, cap violations) —
+/// the stream cannot be re-synchronised after one.
+pub fn read_frame_raw<R: Read>(r: &mut R) -> Result<Option<(Vec<u8>, Vec<u8>)>> {
+    let Some(hlen) = read_u32_or_eof(r)? else {
+        return Ok(None);
+    };
+    let hlen = hlen as usize;
+    ensure!(
+        hlen <= MAX_HEADER_BYTES,
+        "frame header of {hlen} bytes exceeds the {MAX_HEADER_BYTES}-byte cap"
+    );
+    let hbytes = read_exact_vec(r, hlen, "header")?;
+    let blen = read_u32_req(r)? as usize;
+    ensure!(
+        blen <= MAX_BODY_BYTES,
+        "frame body of {blen} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+    );
+    let body = read_exact_vec(r, blen, "body")?;
+    Ok(Some((hbytes, body)))
+}
+
+fn parse_header(hbytes: &[u8]) -> Result<Json> {
+    let htext = std::str::from_utf8(hbytes)
+        .map_err(|_| anyhow!("frame header is not UTF-8"))?;
+    Json::parse(htext).map_err(|e| anyhow!("bad frame header json: {e}"))
+}
+
+/// Read one frame with the header parsed; `Ok(None)` on clean EOF.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(Json, Vec<u8>)>> {
+    match read_frame_raw(r)? {
+        None => Ok(None),
+        Some((hbytes, body)) => Ok(Some((parse_header(&hbytes)?, body))),
+    }
+}
+
+/// Encode dense rows as a points body (client side and tests). `dim`
+/// is explicit — like [`encode_sparse_points`] — so an empty batch
+/// still encodes a decodable block.
+pub fn encode_dense_points(dim: usize, rows: &[Vec<f32>]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(9 + rows.len() * dim * 4);
+    out.push(ENC_DENSE);
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    for r in rows {
+        ensure!(
+            r.len() == dim,
+            "dense point block rows must share one dimension ({} != {dim})",
+            r.len()
+        );
+        for x in r {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Encode sparse rows (`(indices, values)` per row, shared `dim`) as a
+/// points body.
+pub fn encode_sparse_points(
+    dim: usize,
+    rows: &[(Vec<u32>, Vec<f32>)],
+) -> Result<Vec<u8>> {
+    let mut out = vec![ENC_SPARSE];
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    for (idx, vals) in rows {
+        ensure!(
+            idx.len() == vals.len(),
+            "sparse point block row has {} indices but {} values",
+            idx.len(),
+            vals.len()
+        );
+        out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    }
+    for (idx, _) in rows {
+        for c in idx {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    for (_, vals) in rows {
+        for x in vals {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a request body into wire rows (validated exactly like the
+/// JSON encoding — `serve::wire` is the single gatekeeper). `n`, `dim`
+/// and the nnz table are attacker-controlled, so every size is checked
+/// against the body's actual length (with overflow-safe arithmetic)
+/// **before** any allocation is sized from it.
+pub fn decode_points(body: &[u8]) -> Result<Vec<WireRow>> {
+    let mut r = ByteReader { buf: body, pos: 0 };
+    let tag = r.u8()?;
+    let n = r.u32()? as usize;
+    let dim = r.u32()? as usize;
+    ensure!(dim >= 1, "points block: dim must be >= 1");
+    match tag {
+        ENC_DENSE => {
+            let expect = (n as u64)
+                .checked_mul(dim as u64)
+                .and_then(|x| x.checked_mul(4))
+                .ok_or_else(|| {
+                    anyhow!("dense points block: n={n} dim={dim} overflows")
+                })?;
+            ensure!(
+                r.remaining() as u64 == expect,
+                "dense points block: {} payload bytes for n={n} dim={dim}",
+                r.remaining()
+            );
+            // n ≤ remaining/4 once the exact-size check passed
+            let mut rows = Vec::with_capacity(n);
+            for t in 0..n {
+                let mut row = Vec::with_capacity(dim);
+                for _ in 0..dim {
+                    row.push(r.f32()?);
+                }
+                rows.push(
+                    wire::dense_row(row)
+                        .map_err(|e| anyhow!("points[{t}]: {e:#}"))?,
+                );
+            }
+            Ok(rows)
+        }
+        ENC_SPARSE => {
+            // the nnz table must physically fit before n sizes anything
+            ensure!(
+                r.remaining() as u64 >= n as u64 * 4,
+                "sparse points block: {} payload bytes cannot hold {n} \
+                 row counts",
+                r.remaining()
+            );
+            let mut nnz = Vec::with_capacity(n);
+            // total ≤ n·dim ≤ (body/4)·2³² < 2⁶² — no overflow in u64
+            let mut total = 0u64;
+            for _ in 0..n {
+                let c = r.u32()? as usize;
+                ensure!(
+                    c <= dim,
+                    "sparse points block: row nnz {c} exceeds dim {dim}"
+                );
+                total += c as u64;
+                nnz.push(c);
+            }
+            ensure!(
+                r.remaining() as u64 == total * 8,
+                "sparse points block: {} payload bytes for Σnnz={total}",
+                r.remaining()
+            );
+            // the tail is one contiguous index block then one value
+            // block; walk them with separate cursors so each element is
+            // copied exactly once, straight into its row
+            let tail = &body[body.len() - r.remaining()..];
+            let (idx_bytes, val_bytes) = tail.split_at((total * 4) as usize);
+            let mut ir = ByteReader { buf: idx_bytes, pos: 0 };
+            let mut vr = ByteReader { buf: val_bytes, pos: 0 };
+            let mut rows = Vec::with_capacity(n);
+            for (t, &c) in nnz.iter().enumerate() {
+                let mut idx = Vec::with_capacity(c);
+                for _ in 0..c {
+                    idx.push(ir.u32()?);
+                }
+                let mut vals = Vec::with_capacity(c);
+                for _ in 0..c {
+                    vals.push(vr.f32()?);
+                }
+                rows.push(
+                    wire::sparse_row(dim, idx, vals)
+                        .map_err(|e| anyhow!("points[{t}]: {e:#}"))?,
+                );
+            }
+            Ok(rows)
+        }
+        other => bail!("unknown points encoding tag {other}"),
+    }
+}
+
+/// Encode a predict answer body: `u32 n | n × u32 label | n × f32 d2`.
+pub fn encode_predict_body(lbl: &[u32], d2: &[f32]) -> Vec<u8> {
+    debug_assert_eq!(lbl.len(), d2.len());
+    let mut out = Vec::with_capacity(4 + lbl.len() * 8);
+    out.extend_from_slice(&(lbl.len() as u32).to_le_bytes());
+    for j in lbl {
+        out.extend_from_slice(&j.to_le_bytes());
+    }
+    for x in d2 {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a predict answer body (client side and tests).
+pub fn decode_predict_body(body: &[u8]) -> Result<(Vec<u32>, Vec<f32>)> {
+    let mut r = ByteReader { buf: body, pos: 0 };
+    let n = r.u32()? as usize;
+    ensure!(
+        r.remaining() == n * 8,
+        "predict body: {} payload bytes for n={n}",
+        r.remaining()
+    );
+    let mut lbl = Vec::with_capacity(n);
+    for _ in 0..n {
+        lbl.push(r.u32()?);
+    }
+    let mut d2 = Vec::with_capacity(n);
+    for _ in 0..n {
+        d2.push(r.f32()?);
+    }
+    Ok((lbl, d2))
+}
+
+/// Drive a whole binary-framed request stream (the magic byte already
+/// consumed by the transport). Mirrors `protocol::serve_lines`: request
+/// errors — a malformed header included, since the frame is still
+/// well-delimited — never kill the stream; only structural failures
+/// (truncation, cap violations) do, because re-synchronisation is
+/// impossible after one. The bool reports an explicit shutdown.
+pub fn serve_frames<R: Read, W: Write>(
+    registry: &ModelRegistry,
+    input: &mut R,
+    output: &mut W,
+) -> Result<bool> {
+    while let Some((hbytes, body)) = read_frame_raw(input)? {
+        let (resp, resp_body, quit) = match parse_header(&hbytes) {
+            Ok(header) => handle_frame(registry, &header, &body),
+            Err(e) => (protocol::err_json(&e), vec![], false),
+        };
+        write_frame(output, &resp, &resp_body)?;
+        if quit {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Execute one frame. Predicts take the raw-f32 fast path — labels and
+/// scores go back as a binary block, bypassing float formatting
+/// entirely; every other op reuses the JSONL executor and answers
+/// header-only.
+fn handle_frame(
+    registry: &ModelRegistry,
+    header: &Json,
+    body: &[u8],
+) -> (Json, Vec<u8>, bool) {
+    let points = if body.is_empty() {
+        None
+    } else {
+        match decode_points(body) {
+            Ok(p) => Some(p),
+            Err(e) => return (protocol::err_json(&e), vec![], false),
+        }
+    };
+    let req = match protocol::request_from_json(header, points) {
+        Ok(r) => r,
+        Err(e) => return (protocol::err_json(&e), vec![], false),
+    };
+    match &req {
+        Request::Predict { model, points } => {
+            if points.len() > MAX_PREDICT_ROWS {
+                let e = anyhow!(
+                    "predict of {} rows would overflow the response frame \
+                     body cap — send at most {MAX_PREDICT_ROWS} rows per \
+                     frame",
+                    points.len()
+                );
+                return (protocol::err_json(&e), vec![], false);
+            }
+            let answered = registry.resolve(model.as_deref()).and_then(|e| {
+                let out = e.predict_wire(points)?;
+                Ok((e.name().to_string(), out))
+            });
+            match answered {
+                Ok((name, (lbl, d2))) => {
+                    let h = json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("op", json::s("predict")),
+                        ("model", json::s(&name)),
+                        ("n", json::num(lbl.len() as f64)),
+                    ]);
+                    (h, encode_predict_body(&lbl, &d2), false)
+                }
+                Err(e) => (protocol::err_json(&e), vec![], false),
+            }
+        }
+        _ => {
+            let (resp, quit) = protocol::handle_request(registry, &req);
+            (resp, vec![], quit)
+        }
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl ByteReader<'_> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        ensure!(self.remaining() >= 1, "truncated block");
+        self.pos += 1;
+        Ok(self.buf[self.pos - 1])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        ensure!(self.remaining() >= 4, "truncated block");
+        let b: [u8; 4] =
+            self.buf[self.pos..self.pos + 4].try_into().unwrap();
+        self.pos += 4;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+}
+
+/// Read a u32 length prefix, distinguishing clean EOF (no bytes at all)
+/// from a truncated prefix.
+fn read_u32_or_eof<R: Read>(r: &mut R) -> Result<Option<u32>> {
+    let mut b = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut b[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("truncated frame: EOF inside a length prefix");
+        }
+        got += n;
+    }
+    Ok(Some(u32::from_le_bytes(b)))
+}
+
+fn read_u32_req<R: Read>(r: &mut R) -> Result<u32> {
+    read_u32_or_eof(r)?.ok_or_else(|| {
+        anyhow!("truncated frame: EOF where a length prefix was expected")
+    })
+}
+
+fn read_exact_vec<R: Read>(r: &mut R, len: usize, what: &str) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)
+        .map_err(|e| anyhow!("truncated frame {what}: {e}"))?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, Rho, RunConfig};
+    use crate::data::gaussian::GaussianMixture;
+    use crate::serve::session;
+    use std::io::Cursor;
+
+    fn ready_registry() -> ModelRegistry {
+        let data = GaussianMixture::default_spec(3, 4).generate(300, 1);
+        let cfg = RunConfig {
+            algo: Algo::GbRho,
+            k: 3,
+            b0: 32,
+            rho: Rho::Infinite,
+            threads: 2,
+            max_rounds: 5,
+            max_seconds: 30.0,
+            ..Default::default()
+        };
+        ModelRegistry::with_default(session::train(&data, &cfg).unwrap().0)
+    }
+
+    fn frame_bytes(header: &str, body: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, &Json::parse(header).unwrap(), body).unwrap();
+        out
+    }
+
+    #[test]
+    fn points_blocks_roundtrip() {
+        let dense = vec![vec![1.0f32, 0.0, -2.5], vec![0.25, 3.0, 0.0]];
+        let rows = decode_points(&encode_dense_points(3, &dense).unwrap()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], WireRow::Dense(dense[0].clone()));
+        let sparse = vec![
+            (vec![1u32, 7], vec![0.5f32, -1.5]),
+            (vec![], vec![]),
+            (vec![0u32], vec![2.0f32]),
+        ];
+        let rows =
+            decode_points(&encode_sparse_points(9, &sparse).unwrap()).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows[0],
+            WireRow::Sparse { dim: 9, idx: vec![1, 7], vals: vec![0.5, -1.5] }
+        );
+        assert_eq!(rows[1].stored(), 0);
+        // validation is shared with the JSON ingress: unsorted and
+        // out-of-range blocks are rejected, zeros dropped
+        let bad = encode_sparse_points(9, &[(vec![7, 1], vec![1.0, 2.0])]).unwrap();
+        assert!(decode_points(&bad).is_err());
+        let oob = encode_sparse_points(3, &[(vec![3], vec![1.0])]).unwrap();
+        assert!(decode_points(&oob).is_err());
+        let zeroed =
+            decode_points(&encode_sparse_points(4, &[(vec![1, 2], vec![0.0, 5.0])]).unwrap())
+                .unwrap();
+        assert_eq!(
+            zeroed[0],
+            WireRow::Sparse { dim: 4, idx: vec![2], vals: vec![5.0] }
+        );
+        // truncation and trailing garbage are errors, not panics
+        let mut block = encode_dense_points(3, &dense).unwrap();
+        block.pop();
+        assert!(decode_points(&block).is_err());
+        let mut block = encode_dense_points(3, &dense).unwrap();
+        block.push(0);
+        assert!(decode_points(&block).is_err());
+        assert!(decode_points(&[9u8, 0, 0, 0, 0, 1, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn decode_points_rejects_advertised_sizes_before_allocating() {
+        // a 9-byte body advertising n = u32::MAX must fail the size
+        // check, never size a Vec from the header (the old code tried a
+        // multi-GB reserve before validating)
+        let mut huge = vec![ENC_DENSE];
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        huge.extend_from_slice(&1u32.to_le_bytes());
+        assert!(decode_points(&huge).is_err());
+        // same on the sparse path: the nnz table cannot fit
+        let mut huge = vec![ENC_SPARSE];
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        huge.extend_from_slice(&4u32.to_le_bytes());
+        assert!(decode_points(&huge).is_err());
+        // n·dim·4 overflowing u64 is an error, not a wrap-around pass
+        let mut wrap = vec![ENC_DENSE];
+        wrap.extend_from_slice(&u32::MAX.to_le_bytes());
+        wrap.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_points(&wrap).is_err());
+    }
+
+    #[test]
+    fn predict_row_cap_fits_the_body_cap() {
+        // every answerable predict must produce a decodable response
+        assert!(4 + 8 * MAX_PREDICT_ROWS as u64 <= MAX_BODY_BYTES as u64);
+        assert!(4 + 8 * (MAX_PREDICT_ROWS as u64 + 1) > MAX_BODY_BYTES as u64);
+    }
+
+    #[test]
+    fn predict_body_roundtrips_bits() {
+        let lbl = vec![3u32, 0, 7];
+        let d2 = vec![0.125f32, f32::MIN_POSITIVE, 1e30];
+        let (l2, s2) = decode_predict_body(&encode_predict_body(&lbl, &d2)).unwrap();
+        assert_eq!(l2, lbl);
+        assert_eq!(
+            s2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            d2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(decode_predict_body(&[1, 0, 0, 0]).is_err(), "truncated");
+    }
+
+    #[test]
+    fn frames_roundtrip_and_reject_oversize() {
+        let mut buf = Vec::new();
+        let h = Json::parse(r#"{"op":"stats"}"#).unwrap();
+        write_frame(&mut buf, &h, &[1, 2, 3]).unwrap();
+        let mut cur = Cursor::new(buf);
+        let (h2, b2) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(h2, h);
+        assert_eq!(b2, vec![1, 2, 3]);
+        assert!(read_frame(&mut cur).unwrap().is_none(), "clean EOF");
+        // truncated header is an error, not EOF
+        let mut cur = Cursor::new(vec![5u8, 0, 0, 0, b'{']);
+        assert!(read_frame(&mut cur).is_err());
+        // a huge advertised header is refused before allocation
+        let mut cur = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn serve_frames_stream_semantics() {
+        let reg = ready_registry();
+        let mut input = Vec::new();
+        input.extend_from_slice(&frame_bytes(r#"{"op":"bogus"}"#, &[]));
+        input.extend_from_slice(&frame_bytes(r#"{"op":"stats"}"#, &[]));
+        let mut out = Vec::new();
+        let quit =
+            serve_frames(&reg, &mut Cursor::new(input), &mut out).unwrap();
+        assert!(!quit, "EOF, not shutdown");
+        let mut cur = Cursor::new(out);
+        let (first, body) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(first.get("ok").unwrap().as_bool(), Some(false));
+        assert!(body.is_empty());
+        let (second, body) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(second.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(second.get("op").unwrap().as_str(), Some("stats"));
+        assert!(body.is_empty());
+        assert!(read_frame(&mut cur).unwrap().is_none());
+
+        // a malformed header is a well-delimited frame: it gets an
+        // error response and the stream continues, exactly like a bad
+        // JSONL line
+        let mut input = Vec::new();
+        let garbage = b"{{{";
+        input.extend_from_slice(&(garbage.len() as u32).to_le_bytes());
+        input.extend_from_slice(garbage);
+        input.extend_from_slice(&0u32.to_le_bytes());
+        input.extend_from_slice(&frame_bytes(r#"{"op":"stats"}"#, &[]));
+        let mut out = Vec::new();
+        let quit =
+            serve_frames(&reg, &mut Cursor::new(input), &mut out).unwrap();
+        assert!(!quit);
+        let mut cur = Cursor::new(out);
+        let (first, _) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(first.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            first.get("error").unwrap().as_str().unwrap().contains("header"),
+            "{first:?}"
+        );
+        let (second, _) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(second.get("op").unwrap().as_str(), Some("stats"));
+
+        // shutdown stops the stream and reports it
+        let mut input = Vec::new();
+        input.extend_from_slice(&frame_bytes(r#"{"op":"shutdown"}"#, &[]));
+        input.extend_from_slice(&frame_bytes(r#"{"op":"stats"}"#, &[]));
+        let mut out = Vec::new();
+        let quit =
+            serve_frames(&reg, &mut Cursor::new(input), &mut out).unwrap();
+        assert!(quit);
+        let mut cur = Cursor::new(out);
+        let (only, _) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(only.get("op").unwrap().as_str(), Some("shutdown"));
+        assert!(read_frame(&mut cur).unwrap().is_none(), "nothing after shutdown");
+    }
+
+    #[test]
+    fn predict_frames_answer_raw_f32() {
+        let reg = ready_registry();
+        let queries = vec![vec![0.5f32, 0.5, 0.5, 0.5], vec![0.0, 0.1, 0.2, 0.3]];
+        let body = encode_dense_points(4, &queries).unwrap();
+        let input = frame_bytes(r#"{"op":"predict"}"#, &body);
+        let mut out = Vec::new();
+        serve_frames(&reg, &mut Cursor::new(input), &mut out).unwrap();
+        let mut cur = Cursor::new(out);
+        let (h, body) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+        assert_eq!(h.get("n").unwrap().as_usize(), Some(2));
+        assert_eq!(h.get("model").unwrap().as_str(), Some("default"));
+        let (lbl, d2) = decode_predict_body(&body).unwrap();
+        // reference: the registry's own predict path
+        let (rl, rd) = reg.resolve(None).unwrap().predict(&queries).unwrap();
+        assert_eq!(lbl, rl);
+        assert_eq!(
+            d2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            rd.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // dimension mismatch is an error frame, stream-surviving
+        let body = encode_dense_points(1, &[vec![1.0f32]]).unwrap();
+        let input = frame_bytes(r#"{"op":"predict"}"#, &body);
+        let mut out = Vec::new();
+        serve_frames(&reg, &mut Cursor::new(input), &mut out).unwrap();
+        let (h, _) = read_frame(&mut Cursor::new(out)).unwrap().unwrap();
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(false));
+        assert!(h.get("error").unwrap().as_str().unwrap().contains("dimension"));
+    }
+}

@@ -10,9 +10,11 @@
 //! |--------------|------------|
 //! | [`snapshot`] | versioned, bit-exact model artifacts (save/load, streaming writes) |
 //! | [`session`]  | pause/resume training; ingest new points online    |
-//! | [`registry`] | many named models per process; snapshot-isolated predicts |
+//! | [`registry`] | many named models per process; snapshot-isolated, batched predicts |
+//! | [`wire`]     | point encodings: dense arrays and sparse `{indices,values,dim}` rows |
 //! | [`protocol`] | JSONL request/response: create·ingest·predict·…·drop |
-//! | [`server`]   | transports: stdio pipes and thread-per-connection TCP |
+//! | [`frame`]    | opt-in length-prefixed binary frames (raw-f32 predict hot path) |
+//! | [`server`]   | transports: stdio pipes and thread-per-connection TCP, per-connection format negotiation |
 //!
 //! The load-bearing invariant throughout is the paper's §3.1
 //! each-point-counts-exactly-once property: ingested points append
@@ -24,12 +26,15 @@
 //! predicts read immutable published snapshots. CLI front-ends: `nmbkm
 //! train --save`, `nmbkm serve [--models]`, `nmbkm predict`.
 
+pub mod frame;
 pub mod protocol;
 pub mod registry;
 pub mod server;
 pub mod session;
 pub mod snapshot;
+pub mod wire;
 
 pub use registry::{ModelRegistry, PublishedModel};
 pub use session::OnlineSession;
 pub use snapshot::Snapshot;
+pub use wire::WireRow;

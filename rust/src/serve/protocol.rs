@@ -25,17 +25,34 @@
 //! ← {"ok":true,"op":"shutdown"}
 //! ```
 //!
+//! Everywhere a request carries points (`ingest`, `predict`), each row
+//! is either a dense JSON array **or** the sparse form
+//! `{"indices":[…],"values":[…],"dim":d}` (strictly ascending indices;
+//! encodings may mix within one request). Sparse rows decode straight
+//! into the CSR storage the engine consumes — no densify round-trip —
+//! and score bit-identically to their dense twins (`serve::wire`,
+//! enforced by `tests/serve_wire.rs`):
+//!
+//! ```text
+//! → {"op":"predict","points":[{"indices":[3,17],"values":[0.5,1.25],"dim":47236}]}
+//! ← {"ok":true,"op":"predict","model":"default","labels":[7],"d2":[0.125]}
+//! ```
+//!
 //! Mutations (`ingest`/`step`/`snapshot`) serialise on their model's
 //! session lock; `predict` runs lock-free against the model's published
-//! snapshot, so concurrent connections' predicts proceed while a round
-//! trains (see `serve::registry`). Errors never kill the stream: a
-//! malformed or failing request gets `{"ok":false,"error":"…"}` and the
-//! loop continues. `d2` values are exact — f32 widens losslessly to the
-//! f64 JSON number and the parser round-trips f64, so predict responses
-//! carry the same bits the engine produced.
+//! snapshot — large `points` arrays are additionally split across the
+//! model's shard pool, one published-`Arc` clone per sub-batch (see
+//! `serve::registry`) — so concurrent connections' predicts proceed
+//! while a round trains. Errors never kill the stream: a malformed or
+//! failing request gets `{"ok":false,"error":"…"}` and the loop
+//! continues. `d2` values are exact — f32 widens losslessly to the f64
+//! JSON number and the parser round-trips f64, so predict responses
+//! carry the same bits the engine produced. (The opt-in binary framing
+//! in `serve::frame` carries the same ops with raw f32 payloads.)
 
 use crate::config::{Algo, Rho, RunConfig};
 use crate::serve::registry::ModelRegistry;
+use crate::serve::wire::{self, WireRow};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::io::{BufRead, Write};
@@ -53,12 +70,12 @@ pub enum Request {
     /// grown buffer.
     Ingest {
         model: Option<String>,
-        points: Vec<Vec<f32>>,
+        points: Vec<WireRow>,
         rounds: usize,
         seconds: f64,
     },
     /// Nearest-centroid queries (lock-free, snapshot-isolated).
-    Predict { model: Option<String>, points: Vec<Vec<f32>> },
+    Predict { model: Option<String>, points: Vec<WireRow> },
     /// Run training rounds without new data.
     Step { model: Option<String>, rounds: usize, seconds: f64 },
     /// Observability counters.
@@ -74,6 +91,23 @@ pub enum Request {
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = Json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+    request_from_json(&v, None)
+}
+
+/// Build a request from an already-parsed JSON object, optionally with
+/// points decoded out-of-band (the binary framing carries them as raw
+/// f32 blocks next to the JSON header). `points: Some(…)` takes
+/// precedence over a `points` field in `v`.
+pub fn request_from_json(
+    v: &Json,
+    mut points: Option<Vec<WireRow>>,
+) -> Result<Request> {
+    let mut take_points = || -> Result<Vec<WireRow>> {
+        match points.take() {
+            Some(p) => Ok(p),
+            None => wire::rows_from_json(v),
+        }
+    };
     let op = v
         .get("op")
         .and_then(Json::as_str)
@@ -108,7 +142,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
     };
     Ok(match op {
         "create" => {
-            let (dim, cfg) = parse_create(&v)?;
+            let (dim, cfg) = parse_create(v)?;
             Request::Create { model: model()?, dim, cfg }
         }
         "list" => Request::List,
@@ -123,11 +157,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
         },
         "ingest" => Request::Ingest {
             model: model()?,
-            points: parse_points(&v)?,
+            points: take_points()?,
             rounds: rounds(1)?,
             seconds: seconds()?,
         },
-        "predict" => Request::Predict { model: model()?, points: parse_points(&v)? },
+        "predict" => Request::Predict { model: model()?, points: take_points()? },
         "step" => Request::Step {
             model: model()?,
             rounds: rounds(1)?,
@@ -215,36 +249,6 @@ fn parse_create(v: &Json) -> Result<(usize, RunConfig)> {
     Ok((dim, cfg))
 }
 
-fn parse_points(v: &Json) -> Result<Vec<Vec<f32>>> {
-    let arr = v
-        .get("points")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("request needs 'points': [[…], …]"))?;
-    let mut out = Vec::with_capacity(arr.len());
-    for (t, row) in arr.iter().enumerate() {
-        let row = row
-            .as_arr()
-            .ok_or_else(|| anyhow!("points[{t}] is not an array"))?;
-        let mut r = Vec::with_capacity(row.len());
-        for (u, x) in row.iter().enumerate() {
-            let x = x
-                .as_f64()
-                .ok_or_else(|| anyhow!("points[{t}][{u}] is not a number"))?;
-            // a single inf/NaN coordinate would poison the sufficient
-            // statistics (and every later snapshot) for good; the check
-            // is on the narrowed value so f64s beyond f32 range are
-            // caught too
-            ensure!(
-                (x as f32).is_finite(),
-                "points[{t}][{u}] is not a finite f32 ({x})"
-            );
-            r.push(x as f32);
-        }
-        out.push(r);
-    }
-    Ok(out)
-}
-
 /// Execute one request against the registry. Never fails: errors become
 /// `ok:false` responses. The bool is true when the server should stop.
 pub fn handle_line(registry: &ModelRegistry, line: &str) -> (Json, bool) {
@@ -252,13 +256,20 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> (Json, bool) {
         Ok(r) => r,
         Err(e) => return (err_json(&e), false),
     };
-    match execute(registry, &req) {
+    handle_request(registry, &req)
+}
+
+/// Execute an already-parsed request: the shared core of the JSONL and
+/// binary-frame transports. Never fails; the bool asks the server to
+/// stop.
+pub fn handle_request(registry: &ModelRegistry, req: &Request) -> (Json, bool) {
+    match execute(registry, req) {
         Ok(resp) => (resp, matches!(req, Request::Shutdown)),
         Err(e) => (err_json(&e), false),
     }
 }
 
-fn err_json(e: &anyhow::Error) -> Json {
+pub(crate) fn err_json(e: &anyhow::Error) -> Json {
     json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", json::s(&format!("{e:#}"))),
@@ -300,7 +311,7 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
         Request::Ingest { model, points, rounds, seconds } => {
             let entry = registry.resolve(model.as_deref())?;
             let (n, rep, initialised) = entry.with_session_mut(|s| {
-                let n = s.ingest_rows(points)?;
+                let n = s.ingest_wire(points)?;
                 let rep = s.step(*rounds, *seconds)?;
                 Ok((n, rep, s.initialised()))
             })?;
@@ -322,8 +333,9 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
         Request::Predict { model, points } => {
             let entry = registry.resolve(model.as_deref())?;
             // lock-free: computed against the published snapshot, even
-            // while a training step holds the session lock
-            let (lbl, d2) = entry.predict(points)?;
+            // while a training step holds the session lock; large
+            // batches split across the model's shard pool
+            let (lbl, d2) = entry.predict_wire(points)?;
             json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("op", json::s("predict")),
@@ -475,9 +487,31 @@ mod tests {
             r,
             Request::Ingest {
                 model: None,
-                points: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+                points: vec![
+                    WireRow::Dense(vec![1.0, 2.0]),
+                    WireRow::Dense(vec![3.0, 4.0]),
+                ],
                 rounds: 1,
                 seconds: f64::INFINITY,
+            }
+        );
+        // sparse point encoding, dense rows mixable in one request
+        let r = parse_request(
+            r#"{"op":"predict","points":[{"indices":[1,3],"values":[0.5,2],"dim":5},[0,0,0,0,0]]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Predict {
+                model: None,
+                points: vec![
+                    WireRow::Sparse {
+                        dim: 5,
+                        idx: vec![1, 3],
+                        vals: vec![0.5, 2.0]
+                    },
+                    WireRow::Dense(vec![0.0; 5]),
+                ],
             }
         );
         let r = parse_request(r#"{"op":"step","rounds":4,"seconds":0.5}"#).unwrap();
@@ -536,6 +570,11 @@ mod tests {
             r#"{"op":"predict","points":[1]}"#,
             r#"{"op":"predict","points":[["x"]]}"#,
             r#"{"op":"predict","model":7,"points":[[1]]}"#,
+            r#"{"op":"predict","points":[{"indices":[1],"values":[1,2],"dim":4}]}"#,
+            r#"{"op":"predict","points":[{"indices":[3,1],"values":[1,2],"dim":4}]}"#,
+            r#"{"op":"predict","points":[{"indices":[9],"values":[1],"dim":4}]}"#,
+            r#"{"op":"ingest","points":[{"indices":[1],"values":[1]}]}"#,
+            r#"{"op":"ingest","points":[{"indices":[0],"values":[1e400],"dim":2}]}"#,
             r#"{"op":"step","rounds":-1}"#,
             r#"{"op":"step","rounds":1.5}"#,
             r#"{"op":"snapshot"}"#,

@@ -29,6 +29,7 @@ use crate::kmeans::assign::NativeEngine;
 use crate::kmeans::state::Centroids;
 use crate::linalg::sparse::TransposedCentroids;
 use crate::serve::session::{self, OnlineSession};
+use crate::serve::wire::WireRow;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
@@ -44,6 +45,12 @@ pub const DEFAULT_MODEL: &str = "default";
 /// unbounded registry would hand clients a resource-exhaustion
 /// primitive (same posture as the snapshot op's path confinement).
 pub const MAX_MODELS: usize = 256;
+
+/// Sub-batch size of the batched predict path. Small enough that a
+/// batch-64 request fans out across four workers, and far below the
+/// engine's own `MIN_CHUNK` (256), so a sub-batch never re-shards
+/// inside the engine — the outer `run_jobs` is the only fan-out.
+pub const PREDICT_JOB_ROWS: usize = 16;
 
 /// An immutable published view of one model: everything a predict needs,
 /// frozen at the end of some mutation. Swapped wholesale under an `Arc`,
@@ -93,6 +100,28 @@ impl PublishedModel {
         // (no shared cache slot is involved at all)
         let trans = if self.sparse { self.trans.clone() } else { None };
         session::predict_against(
+            cent, self.dim, rows, self.sparse, trans, engine, pool,
+        )
+    }
+
+    /// [`PublishedModel::predict`] for wire-decoded rows: sparse
+    /// encodings score straight off this view's CSR kernels, dense ones
+    /// follow the classic path — same validation, same bits.
+    pub fn predict_wire(
+        &self,
+        rows: &[WireRow],
+        engine: &NativeEngine,
+        pool: &Pool,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        let cent = self.cent.as_ref().ok_or_else(|| {
+            anyhow!(
+                "model '{}' not initialised — ingest at least k={} points first",
+                self.model,
+                self.k
+            )
+        })?;
+        let trans = if self.sparse { self.trans.clone() } else { None };
+        session::predict_wire(
             cent, self.dim, rows, self.sparse, trans, engine, pool,
         )
     }
@@ -150,6 +179,46 @@ impl ModelEntry {
     /// computes against it, concurrent training steps notwithstanding.
     pub fn predict(&self, rows: &[Vec<f32>]) -> Result<(Vec<u32>, Vec<f32>)> {
         self.current().predict(rows, &self.predict_engine, &self.pool)
+    }
+
+    /// Snapshot-isolated **batched** predict for wire-decoded rows: the
+    /// published model is resolved once, then large `points` arrays
+    /// split into [`PREDICT_JOB_ROWS`]-row sub-batches fanned across the
+    /// shard pool via `run_jobs` — one published-`Arc` clone per
+    /// sub-batch. Each row's answer depends only on that row and the
+    /// frozen centroids, so the split is invisible in the results: bits
+    /// are identical to the single-batch path (enforced by
+    /// `tests/serve_wire.rs`). Sub-batches sit below the engine's own
+    /// fan-out threshold, so jobs never re-shard recursively.
+    pub fn predict_wire(&self, rows: &[WireRow]) -> Result<(Vec<u32>, Vec<f32>)> {
+        let view = self.current();
+        if rows.len() <= PREDICT_JOB_ROWS || self.pool.threads <= 1 {
+            return view.predict_wire(rows, &self.predict_engine, &self.pool);
+        }
+        // dimensions are validated before the split so a bad row is
+        // reported by its request-global index — per-job validation
+        // would name the position inside some 16-row sub-batch instead
+        for (t, row) in rows.iter().enumerate() {
+            ensure!(
+                row.dim() == view.dim,
+                "row {t}: dimension {} != model dimension {}",
+                row.dim(),
+                view.dim
+            );
+        }
+        let jobs: Vec<&[WireRow]> = rows.chunks(PREDICT_JOB_ROWS).collect();
+        let results = self.pool.run_jobs(jobs, |_, slice| {
+            let batch_view = view.clone();
+            batch_view.predict_wire(slice, &self.predict_engine, &self.pool)
+        });
+        let mut lbl = Vec::with_capacity(rows.len());
+        let mut d2 = Vec::with_capacity(rows.len());
+        for r in results {
+            let (l, d) = r?;
+            lbl.extend_from_slice(&l);
+            d2.extend_from_slice(&d);
+        }
+        Ok((lbl, d2))
     }
 
     /// Run a mutation under the session lock; on success the

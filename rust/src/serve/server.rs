@@ -1,52 +1,120 @@
-//! Protocol transports: stdio and TCP.
+//! Protocol transports: stdio and TCP, with per-connection wire-format
+//! negotiation.
 //!
-//! Both speak the JSONL protocol (`serve::protocol`) against one shared
-//! [`ModelRegistry`]. The TCP server runs **one thread per
+//! Both transports speak the JSONL protocol (`serve::protocol`) against
+//! one shared [`ModelRegistry`]; when the server was started with
+//! binary framing enabled (`nmbkm serve --binary`), a connection whose
+//! first byte is the magic [`crate::serve::frame::MAGIC`] speaks the
+//! length-prefixed binary protocol (`serve::frame`) instead — JSONL
+//! clients on the same port are untouched, because no JSONL request can
+//! start with that byte. The TCP server runs **one thread per
 //! connection**: predicts resolve a published model snapshot and run
 //! lock-free, so read traffic scales with connections while mutations
 //! (ingest/step/snapshot) serialise only on their own model's session
 //! lock — two different models train and answer concurrently without
 //! touching each other. An explicit `shutdown` request from any
-//! connection stops the whole server (stdio: EOF works too).
+//! connection (either framing) stops the whole server (stdio: EOF works
+//! too).
 
+use crate::serve::frame;
 use crate::serve::protocol::serve_lines;
 use crate::serve::registry::ModelRegistry;
+use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
-use std::io::{BufReader, BufWriter};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Serve requests from stdin, responses to stdout, until EOF or
 /// `shutdown`. Single-threaded by construction (one client).
-pub fn serve_stdio(registry: &ModelRegistry) -> Result<()> {
+/// `accept_binary` lets a piped supervisor use the binary framing too.
+pub fn serve_stdio(registry: &ModelRegistry, accept_binary: bool) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
+    let mut input = stdin.lock();
     let mut out = stdout.lock();
-    serve_lines(registry, stdin.lock(), &mut out)?;
+    serve_negotiated(registry, &mut input, &mut out, accept_binary)?;
     Ok(())
+}
+
+/// Dispatch one request stream by its first byte: the binary magic
+/// (when enabled) selects frame mode, anything else — including EOF —
+/// stays on JSONL. Returns whether the stream ended with an explicit
+/// shutdown.
+fn serve_negotiated<R: BufRead, W: Write>(
+    registry: &ModelRegistry,
+    input: &mut R,
+    output: &mut W,
+    accept_binary: bool,
+) -> Result<bool> {
+    let first = input.fill_buf()?.first().copied();
+    match first {
+        Some(frame::MAGIC) if accept_binary => {
+            input.consume(1);
+            frame::serve_frames(registry, input, output)
+        }
+        Some(frame::MAGIC) => {
+            // refuse loudly in the client's only other dialect, then
+            // drop the connection — silence would look like a hang
+            let resp = json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    json::s(
+                        "binary framing is not enabled on this server \
+                         (start it with --binary)",
+                    ),
+                ),
+            ]);
+            writeln!(output, "{}", resp.to_string())?;
+            output.flush()?;
+            Ok(false)
+        }
+        _ => serve_lines(registry, input, output),
+    }
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:7878`, or port 0 for ephemeral) and
 /// serve concurrent connections until a client sends `shutdown`.
-pub fn serve_tcp(registry: Arc<ModelRegistry>, addr: &str) -> Result<()> {
+pub fn serve_tcp(
+    registry: Arc<ModelRegistry>,
+    addr: &str,
+    accept_binary: bool,
+) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
         "[nmbkm::serve] listening on {} ({} models; JSONL: create|list|drop|\
-         ingest|predict|step|stats|snapshot|shutdown)",
+         ingest|predict|step|stats|snapshot|shutdown{})",
         listener.local_addr()?,
         registry.len(),
+        if accept_binary {
+            "; binary frames negotiated by magic byte 0xB7"
+        } else {
+            ""
+        },
     );
-    serve_listener(registry, listener)
+    serve_listener_opts(registry, listener, accept_binary)
+}
+
+/// [`serve_listener_opts`] with binary framing off: the JSONL-only
+/// accept loop every pre-existing caller gets.
+pub fn serve_listener(
+    registry: Arc<ModelRegistry>,
+    listener: TcpListener,
+) -> Result<()> {
+    serve_listener_opts(registry, listener, false)
 }
 
 /// Accept-loop over an already-bound listener (split out so tests can
 /// bind an ephemeral port themselves). Every accepted connection gets
-/// its own handler thread against the shared registry.
-pub fn serve_listener(
+/// its own handler thread against the shared registry and negotiates
+/// its wire format independently.
+pub fn serve_listener_opts(
     registry: Arc<ModelRegistry>,
     listener: TcpListener,
+    accept_binary: bool,
 ) -> Result<()> {
     let local = listener.local_addr().ok();
     let stop = Arc::new(AtomicBool::new(false));
@@ -76,7 +144,7 @@ pub fn serve_listener(
         let reg = registry.clone();
         let stop_flag = stop.clone();
         let handle = std::thread::spawn(move || {
-            match serve_connection(&reg, stream) {
+            match serve_connection(&reg, stream, accept_binary) {
                 Ok(true) => {
                     // explicit shutdown: flag the acceptor, then poke the
                     // listener so its blocking accept() returns. If the
@@ -114,11 +182,13 @@ pub fn serve_listener(
 fn serve_connection(
     registry: &ModelRegistry,
     stream: TcpStream,
+    accept_binary: bool,
 ) -> Result<bool> {
     if let Ok(peer) = stream.peer_addr() {
         eprintln!("[nmbkm::serve] client {peer} connected");
     }
-    let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut reader =
+        BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = BufWriter::new(stream);
-    serve_lines(registry, reader, &mut writer)
+    serve_negotiated(registry, &mut reader, &mut writer, accept_binary)
 }

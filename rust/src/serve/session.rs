@@ -31,6 +31,7 @@ use crate::kmeans::{self, Clusterer, Ctx, RoundInfo};
 use crate::linalg::dense::{self, DenseMatrix};
 use crate::linalg::sparse::{CsrMatrix, TransposedCentroids};
 use crate::serve::snapshot::Snapshot;
+use crate::serve::wire::{self, WireRow};
 use crate::util::json::{self, Json};
 use crate::util::rng::Pcg64;
 use crate::util::timer::WorkClock;
@@ -193,33 +194,108 @@ impl OnlineSession {
                 "ingest row {t}: non-finite coordinate"
             );
         }
-        match &mut self.data.storage {
-            Storage::Dense(m) => {
-                for r in rows {
-                    m.data.extend_from_slice(r);
-                    m.rows += 1;
-                    self.data.norms.push(dense::sq_norm(r));
+        for r in rows {
+            self.push_dense_row(r);
+        }
+        Ok(self.finish_ingest())
+    }
+
+    /// [`OnlineSession::ingest_rows`] for wire-decoded rows: sparse
+    /// encodings append straight to CSR storage (no densify round-trip)
+    /// and dense encodings follow the classic path, so a row enters the
+    /// buffer bit-identically whichever encoding carried it.
+    pub fn ingest_wire(&mut self, rows: &[WireRow]) -> Result<usize> {
+        let d = self.data.dim();
+        // validate everything up front so a bad row never leaves a
+        // partially-applied ingest behind
+        for (t, r) in rows.iter().enumerate() {
+            ensure!(
+                r.dim() == d,
+                "ingest row {t}: dimension {} != session dimension {d}",
+                r.dim()
+            );
+            let finite = match r {
+                WireRow::Dense(x) => x.iter().all(|v| v.is_finite()),
+                WireRow::Sparse { vals, .. } => {
+                    vals.iter().all(|v| v.is_finite())
                 }
-            }
-            Storage::Sparse(m) => {
-                for r in rows {
-                    let mut cv = Vec::new();
-                    // norm summed over nonzeros in storage order, exactly
-                    // like CsrMatrix::row_sq_norms — snapshot load
-                    // recomputes norms from the CSR values, and bit-exact
-                    // resume requires the same summation order
-                    let mut norm = 0f32;
-                    for (c, &x) in r.iter().enumerate() {
-                        if x != 0.0 {
-                            cv.push((c as u32, x));
-                            norm += x * x;
-                        }
-                    }
-                    m.push_row(&cv);
-                    self.data.norms.push(norm);
+            };
+            ensure!(finite, "ingest row {t}: non-finite coordinate");
+        }
+        // scratch only exists to scatter sparse rows into *dense*
+        // storage; sparse-storage sessions (the RCV1 serving case)
+        // never touch it, so don't pay a dim-sized zeroed buffer there
+        let mut scratch =
+            if self.data.is_sparse() { vec![] } else { vec![0f32; d] };
+        for r in rows {
+            match r {
+                WireRow::Dense(x) => self.push_dense_row(x),
+                WireRow::Sparse { idx, vals, .. } => {
+                    self.push_sparse_row(idx, vals, &mut scratch)
                 }
             }
         }
+        Ok(self.finish_ingest())
+    }
+
+    /// Append one dense row to whichever storage the session uses.
+    fn push_dense_row(&mut self, r: &[f32]) {
+        match &mut self.data.storage {
+            Storage::Dense(m) => {
+                m.data.extend_from_slice(r);
+                m.rows += 1;
+                self.data.norms.push(dense::sq_norm(r));
+            }
+            Storage::Sparse(m) => {
+                let mut cv = Vec::new();
+                // norm summed over nonzeros in storage order, exactly
+                // like CsrMatrix::row_sq_norms — snapshot load
+                // recomputes norms from the CSR values, and bit-exact
+                // resume requires the same summation order
+                let mut norm = 0f32;
+                for (c, &x) in r.iter().enumerate() {
+                    if x != 0.0 {
+                        cv.push((c as u32, x));
+                        norm += x * x;
+                    }
+                }
+                m.push_row(&cv);
+                self.data.norms.push(norm);
+            }
+        }
+    }
+
+    /// Append one sparse row (validated, strictly ascending indices,
+    /// zeros already dropped). Sparse storage takes it verbatim — the
+    /// norm accumulates in storage order, matching `push_dense_row`'s
+    /// sparsification bit-for-bit; dense storage scatters it into
+    /// `scratch` (zero-filled here) first.
+    fn push_sparse_row(&mut self, idx: &[u32], vals: &[f32], scratch: &mut [f32]) {
+        match &mut self.data.storage {
+            Storage::Dense(m) => {
+                scratch.fill(0.0);
+                for (t, &c) in idx.iter().enumerate() {
+                    scratch[c as usize] = vals[t];
+                }
+                m.data.extend_from_slice(scratch);
+                m.rows += 1;
+                self.data.norms.push(dense::sq_norm(scratch));
+            }
+            Storage::Sparse(m) => {
+                let mut cv = Vec::with_capacity(idx.len());
+                let mut norm = 0f32;
+                for (t, &c) in idx.iter().enumerate() {
+                    cv.push((c, vals[t]));
+                    norm += vals[t] * vals[t];
+                }
+                m.push_row(&cv);
+                self.data.norms.push(norm);
+            }
+        }
+    }
+
+    /// Post-append bookkeeping shared by both ingest paths.
+    fn finish_ingest(&mut self) -> usize {
         let n = self.data.n();
         if let Some(alg) = &mut self.alg {
             let ok = alg.extend_data(n);
@@ -227,7 +303,7 @@ impl OnlineSession {
         } else {
             self.try_init();
         }
-        Ok(n)
+        n
     }
 
     /// Run up to `max_rounds` rounds or until `max_seconds` of work time
@@ -461,6 +537,37 @@ pub fn predict_against(
     let mut d2 = vec![0f32; n];
     // a carried transpose (published sparse model) rides straight into
     // the engine call — no shared-cache traffic on the predict path
+    engine.assign_with_trans(
+        &queries,
+        Sel::Range(0, n),
+        cent,
+        pool,
+        trans,
+        &mut lbl,
+        &mut d2,
+    );
+    Ok((lbl, d2))
+}
+
+/// [`predict_against`] for wire-decoded rows: sparse-encoded queries
+/// land straight in the CSR form the engine consumes (no densify
+/// round-trip) and dense-encoded ones follow the classic assembly, so
+/// the answer is bit-identical to the dense path for the same logical
+/// rows (enforced by `tests/serve_wire.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn predict_wire(
+    cent: &Centroids,
+    dim: usize,
+    rows: &[WireRow],
+    sparse: bool,
+    trans: Option<Arc<TransposedCentroids>>,
+    engine: &dyn AssignEngine,
+    pool: &Pool,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    let queries = wire::assemble(rows, dim, sparse)?;
+    let n = queries.n();
+    let mut lbl = vec![0u32; n];
+    let mut d2 = vec![0f32; n];
     engine.assign_with_trans(
         &queries,
         Sel::Range(0, n),

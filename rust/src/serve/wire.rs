@@ -1,0 +1,434 @@
+//! Wire-level point encodings, shared by every ingress path.
+//!
+//! A row can cross the wire two ways:
+//!
+//! * **dense** — a JSON array of numbers (the PR 1 format), or a raw
+//!   little-endian f32 block in a binary frame;
+//! * **sparse** — `{"indices":[…],"values":[…],"dim":d}` with strictly
+//!   ascending indices, or the equivalent binary block. RCV1-shaped
+//!   queries are ~76 non-zeros in 47,236 dimensions, so this cuts
+//!   predict payloads by orders of magnitude (see README §Wire formats).
+//!
+//! Decoding never densifies a sparse row for a sparse model (and never
+//! sparsifies a dense model's row twice): [`assemble`] builds exactly
+//! the storage the engine consumes. Bit-parity across encodings is a
+//! hard invariant — a sparse-encoded row must score **bit-identically**
+//! to its dense twin — so decode normalises to what the dense path
+//! produces: explicit zeros are dropped (dense rows are sparsified by
+//! skipping zeros) and non-finite values are rejected at the boundary,
+//! exactly like `OnlineSession::ingest_rows`. Enforced by
+//! `tests/serve_wire.rs`.
+
+use crate::data::Data;
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::sparse::CsrMatrix;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// One query/ingest row as it arrived on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRow {
+    /// All `dim` coordinates, in order.
+    Dense(Vec<f32>),
+    /// Non-zeros only, indices strictly ascending. Explicit zeros were
+    /// dropped at decode time (see module docs).
+    Sparse {
+        dim: usize,
+        idx: Vec<u32>,
+        vals: Vec<f32>,
+    },
+}
+
+impl WireRow {
+    /// The row's logical dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            WireRow::Dense(r) => r.len(),
+            WireRow::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// Stored coordinate count (`dim` for dense rows, nnz for sparse).
+    pub fn stored(&self) -> usize {
+        match self {
+            WireRow::Dense(r) => r.len(),
+            WireRow::Sparse { idx, .. } => idx.len(),
+        }
+    }
+}
+
+/// Validate a dense row (binary ingress: values are already f32).
+pub fn dense_row(r: Vec<f32>) -> Result<WireRow> {
+    for (u, x) in r.iter().enumerate() {
+        ensure!(x.is_finite(), "coordinate {u} is not a finite f32 ({x})");
+    }
+    Ok(WireRow::Dense(r))
+}
+
+/// Validate and normalise a sparse row: indices strictly ascending and
+/// in `0..dim`, values finite, explicit zeros dropped so the row is
+/// exactly the sparsification of its dense twin.
+pub fn sparse_row(dim: usize, idx: Vec<u32>, vals: Vec<f32>) -> Result<WireRow> {
+    ensure!(dim >= 1, "sparse row: 'dim' must be >= 1");
+    ensure!(
+        idx.len() == vals.len(),
+        "sparse row: {} indices but {} values",
+        idx.len(),
+        vals.len()
+    );
+    let mut prev: Option<u32> = None;
+    for (t, &c) in idx.iter().enumerate() {
+        ensure!(
+            (c as usize) < dim,
+            "sparse row: index {c} out of range for dim {dim}"
+        );
+        if let Some(p) = prev {
+            ensure!(
+                c > p,
+                "sparse row: indices must be strictly ascending ({p} then {c})"
+            );
+        }
+        prev = Some(c);
+        ensure!(
+            vals[t].is_finite(),
+            "sparse row: non-finite value at index {c}"
+        );
+    }
+    if vals.iter().any(|&x| x == 0.0) {
+        let mut ni = Vec::with_capacity(idx.len());
+        let mut nv = Vec::with_capacity(vals.len());
+        for (t, &c) in idx.iter().enumerate() {
+            if vals[t] != 0.0 {
+                ni.push(c);
+                nv.push(vals[t]);
+            }
+        }
+        return Ok(WireRow::Sparse { dim, idx: ni, vals: nv });
+    }
+    Ok(WireRow::Sparse { dim, idx, vals })
+}
+
+/// Decode one JSON row: an array of numbers (dense) or an
+/// `{"indices":…,"values":…,"dim":d}` object (sparse).
+pub fn row_from_json(x: &Json) -> Result<WireRow> {
+    if let Some(arr) = x.as_arr() {
+        let mut r = Vec::with_capacity(arr.len());
+        for (u, v) in arr.iter().enumerate() {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("coordinate {u} is not a number"))?;
+            // check the narrowed value so f64s beyond f32 range are
+            // caught too — a single inf/NaN would poison the sufficient
+            // statistics for good
+            ensure!(
+                (v as f32).is_finite(),
+                "coordinate {u} is not a finite f32 ({v})"
+            );
+            r.push(v as f32);
+        }
+        return Ok(WireRow::Dense(r));
+    }
+    if matches!(x, Json::Obj(_)) {
+        let nums = |key: &str| -> Result<&[Json]> {
+            x.get(key).and_then(Json::as_arr).ok_or_else(|| {
+                anyhow!("sparse row needs an array field '{key}'")
+            })
+        };
+        let dim = x
+            .get("dim")
+            .and_then(Json::as_f64)
+            .filter(|d| *d >= 1.0 && d.fract() == 0.0)
+            .ok_or_else(|| {
+                anyhow!("sparse row needs a positive integer 'dim'")
+            })? as usize;
+        let raw_idx = nums("indices")?;
+        let raw_vals = nums("values")?;
+        let mut idx = Vec::with_capacity(raw_idx.len());
+        for (t, v) in raw_idx.iter().enumerate() {
+            let v = v
+                .as_f64()
+                .filter(|c| *c >= 0.0 && c.fract() == 0.0)
+                .ok_or_else(|| {
+                    anyhow!("indices[{t}] is not a non-negative integer")
+                })?;
+            ensure!(
+                v < u32::MAX as f64,
+                "indices[{t}] = {v} does not fit in u32"
+            );
+            idx.push(v as u32);
+        }
+        let mut vals = Vec::with_capacity(raw_vals.len());
+        for (t, v) in raw_vals.iter().enumerate() {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("values[{t}] is not a number"))?;
+            ensure!(
+                (v as f32).is_finite(),
+                "values[{t}] is not a finite f32 ({v})"
+            );
+            vals.push(v as f32);
+        }
+        return sparse_row(dim, idx, vals);
+    }
+    bail!(
+        "a point must be an array of numbers or a sparse \
+         {{\"indices\":…,\"values\":…,\"dim\":d}} object"
+    )
+}
+
+/// Decode a request's `points` field: an array of rows, each dense or
+/// sparse (encodings may mix within one request).
+pub fn rows_from_json(v: &Json) -> Result<Vec<WireRow>> {
+    let arr = v.get("points").and_then(Json::as_arr).ok_or_else(|| {
+        anyhow!(
+            "request needs 'points': an array of rows (dense arrays \
+             and/or sparse {{\"indices\",\"values\",\"dim\"}} objects)"
+        )
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (t, row) in arr.iter().enumerate() {
+        out.push(
+            row_from_json(row).map_err(|e| anyhow!("points[{t}]: {e:#}"))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Render dense rows as the protocol's JSON `points` array — the
+/// reference client-side encoder. The benches and integration tests
+/// share it, so the format under test has exactly one definition.
+pub fn dense_points_json(rows: &[Vec<f32>]) -> String {
+    let coords: Vec<String> = rows
+        .iter()
+        .map(|q| {
+            let xs: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    format!("[{}]", coords.join(","))
+}
+
+/// Render sparse rows (`(indices, values)` per row, shared `dim`) as
+/// the protocol's JSON `points` array of
+/// `{"indices":…,"values":…,"dim":d}` objects.
+pub fn sparse_points_json(dim: usize, rows: &[(Vec<u32>, Vec<f32>)]) -> String {
+    let objs: Vec<String> = rows
+        .iter()
+        .map(|(idx, vals)| {
+            let is: Vec<String> = idx.iter().map(|c| format!("{c}")).collect();
+            let vs: Vec<String> =
+                vals.iter().map(|x| format!("{x}")).collect();
+            format!(
+                "{{\"indices\":[{}],\"values\":[{}],\"dim\":{dim}}}",
+                is.join(","),
+                vs.join(",")
+            )
+        })
+        .collect();
+    format!("[{}]", objs.join(","))
+}
+
+/// Assemble wire rows into engine-ready storage for a model of
+/// dimension `dim`: CSR when the model stores sparse data, dense
+/// otherwise. Dense rows are sparsified exactly like
+/// `OnlineSession::ingest_rows` (non-zeros in coordinate order) and
+/// sparse rows scatter into a zero row, so a row scores bit-identically
+/// whichever encoding carried it.
+pub fn assemble(rows: &[WireRow], dim: usize, sparse: bool) -> Result<Data> {
+    for (t, row) in rows.iter().enumerate() {
+        ensure!(
+            row.dim() == dim,
+            "row {t}: dimension {} != model dimension {dim}",
+            row.dim()
+        );
+    }
+    if sparse {
+        let mut m = CsrMatrix::empty(dim);
+        let mut cv: Vec<(u32, f32)> = Vec::new();
+        for row in rows {
+            cv.clear();
+            match row {
+                WireRow::Dense(r) => {
+                    for (c, &x) in r.iter().enumerate() {
+                        if x != 0.0 {
+                            cv.push((c as u32, x));
+                        }
+                    }
+                }
+                WireRow::Sparse { idx, vals, .. } => {
+                    for (t, &c) in idx.iter().enumerate() {
+                        cv.push((c, vals[t]));
+                    }
+                }
+            }
+            m.push_row(&cv);
+        }
+        Ok(Data::sparse(m))
+    } else {
+        let n = rows.len();
+        let mut buf = vec![0f32; n * dim];
+        for (t, row) in rows.iter().enumerate() {
+            let out = &mut buf[t * dim..(t + 1) * dim];
+            match row {
+                WireRow::Dense(r) => out.copy_from_slice(r),
+                WireRow::Sparse { idx, vals, .. } => {
+                    for (u, &c) in idx.iter().enumerate() {
+                        out[c as usize] = vals[u];
+                    }
+                }
+            }
+        }
+        Ok(Data::dense(DenseMatrix::from_vec(n, dim, buf)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Storage;
+
+    fn parse_row(src: &str) -> Result<WireRow> {
+        row_from_json(&Json::parse(src).unwrap())
+    }
+
+    #[test]
+    fn dense_json_rows_decode() {
+        let r = parse_row("[1,2.5,0]").unwrap();
+        assert_eq!(r, WireRow::Dense(vec![1.0, 2.5, 0.0]));
+        assert_eq!(r.dim(), 3);
+        assert!(parse_row("[1,\"x\"]").is_err());
+        assert!(parse_row("[1e400]").is_err(), "overflows f32");
+        assert!(parse_row("3").is_err(), "scalar is not a row");
+    }
+
+    #[test]
+    fn sparse_json_rows_decode_and_normalise() {
+        let r = parse_row(
+            r#"{"indices":[1,4,7],"values":[0.5,-2,3],"dim":10}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            WireRow::Sparse {
+                dim: 10,
+                idx: vec![1, 4, 7],
+                vals: vec![0.5, -2.0, 3.0]
+            }
+        );
+        assert_eq!((r.dim(), r.stored()), (10, 3));
+        // explicit zeros (and negative zero) are dropped, matching how
+        // dense rows sparsify on ingest
+        let r = parse_row(
+            r#"{"indices":[0,2,5],"values":[1,0,-0.0],"dim":6}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            WireRow::Sparse { dim: 6, idx: vec![0], vals: vec![1.0] }
+        );
+        // the empty row is legal (an all-zero document)
+        let r = parse_row(r#"{"indices":[],"values":[],"dim":4}"#).unwrap();
+        assert_eq!(r.stored(), 0);
+    }
+
+    #[test]
+    fn sparse_json_rows_reject_malformed() {
+        for bad in [
+            r#"{"indices":[1],"values":[1,2],"dim":4}"#, // length mismatch
+            r#"{"indices":[2,1],"values":[1,2],"dim":4}"#, // unsorted
+            r#"{"indices":[1,1],"values":[1,2],"dim":4}"#, // duplicate
+            r#"{"indices":[4],"values":[1],"dim":4}"#,   // out of range
+            r#"{"indices":[1],"values":[1e400],"dim":4}"#, // non-finite
+            r#"{"indices":[1.5],"values":[1],"dim":4}"#, // fractional index
+            r#"{"indices":[-1],"values":[1],"dim":4}"#,  // negative index
+            r#"{"indices":[1],"values":[1]}"#,           // missing dim
+            r#"{"indices":[1],"values":[1],"dim":0}"#,   // bad dim
+            r#"{"values":[1],"dim":4}"#,                 // missing indices
+            r#"{"indices":[1],"dim":4}"#,                // missing values
+        ] {
+            assert!(parse_row(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn client_encoders_roundtrip_through_the_parser() {
+        let dense = vec![vec![1.0f32, 0.0, -2.5], vec![0.25, 3.0, 0.5]];
+        let req = Json::parse(&format!(
+            "{{\"points\":{}}}",
+            dense_points_json(&dense)
+        ))
+        .unwrap();
+        let rows = rows_from_json(&req).unwrap();
+        assert_eq!(rows[0], WireRow::Dense(dense[0].clone()));
+        assert_eq!(rows[1], WireRow::Dense(dense[1].clone()));
+        let sparse = vec![(vec![1u32, 7], vec![0.5f32, -1.5])];
+        let req = Json::parse(&format!(
+            "{{\"points\":{}}}",
+            sparse_points_json(9, &sparse)
+        ))
+        .unwrap();
+        let rows = rows_from_json(&req).unwrap();
+        assert_eq!(
+            rows[0],
+            WireRow::Sparse { dim: 9, idx: vec![1, 7], vals: vec![0.5, -1.5] }
+        );
+    }
+
+    #[test]
+    fn rows_from_json_mixes_encodings() {
+        let v = Json::parse(
+            r#"{"points":[[1,0,2],{"indices":[0,2],"values":[1,2],"dim":3}]}"#,
+        )
+        .unwrap();
+        let rows = rows_from_json(&v).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].dim(), 3);
+        assert_eq!(rows[1].stored(), 2);
+        assert!(rows_from_json(&Json::parse(r#"{"op":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn assemble_parity_across_encodings() {
+        // the same logical rows, once dense-encoded, once sparse-encoded
+        let dense = vec![
+            WireRow::Dense(vec![0.0, 1.5, 0.0, -2.0]),
+            WireRow::Dense(vec![3.0, 0.0, 0.0, 0.0]),
+        ];
+        let sparse = vec![
+            sparse_row(4, vec![1, 3], vec![1.5, -2.0]).unwrap(),
+            sparse_row(4, vec![0], vec![3.0]).unwrap(),
+        ];
+        // sparse target: identical CSR bits
+        let a = assemble(&dense, 4, true).unwrap();
+        let b = assemble(&sparse, 4, true).unwrap();
+        let (Storage::Sparse(ma), Storage::Sparse(mb)) =
+            (&a.storage, &b.storage)
+        else {
+            panic!("expected CSR storage");
+        };
+        assert_eq!(ma.indices, mb.indices);
+        assert_eq!(
+            ma.values.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            mb.values.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            a.norms.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.norms.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // dense target: identical row-major buffers
+        let a = assemble(&dense, 4, false).unwrap();
+        let b = assemble(&sparse, 4, false).unwrap();
+        let (Storage::Dense(ma), Storage::Dense(mb)) =
+            (&a.storage, &b.storage)
+        else {
+            panic!("expected dense storage");
+        };
+        assert_eq!(
+            ma.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            mb.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // dimension mismatches are rejected with the row index
+        let err = assemble(&dense, 5, false).unwrap_err();
+        assert!(format!("{err:#}").contains("row 0"), "{err:#}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Protocol back-compat regression: a transcript of PR 1-era requests —
+//! no `model` field, dense `point` arrays only — replayed against the
+//! overhauled server must produce **byte-identical** responses to the
+//! documented v1 layout. The expected bytes are assembled independently
+//! of the protocol layer, from a twin session driven through the same
+//! operations in-process, so a renamed field, a new field, a reordered
+//! key or a changed float rendering on the legacy route fails here
+//! before any old client sees it.
+//!
+//! (`stats` is the one response carrying a wall-clock field,
+//! `work_secs`; it is compared with that single field neutralised and
+//! every other field byte-pinned.)
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::data::Data;
+use nmbkm::serve::wire::dense_points_json;
+use nmbkm::serve::{protocol, session, ModelRegistry};
+use nmbkm::util::json::{self, Json};
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        algo: Algo::TbRho,
+        k: 4,
+        b0: 64,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 31,
+        max_rounds: 4,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn rows_of(data: &Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut row = vec![0f32; data.dim()];
+    for i in lo..hi {
+        data.write_row_dense(i, &mut row);
+        out.push(row.clone());
+    }
+    out
+}
+
+/// The v1 predict response layout, assembled field by field.
+fn v1_predict(lbl: &[u32], d2: &[f32]) -> String {
+    json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", json::s("predict")),
+        ("model", json::s("default")),
+        (
+            "labels",
+            Json::Arr(lbl.iter().map(|&j| json::num(j as f64)).collect()),
+        ),
+        (
+            "d2",
+            Json::Arr(d2.iter().map(|&x| json::num(x as f64)).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+#[test]
+fn v1_dense_jsonl_transcript_replays_byte_identically() {
+    let data = GaussianMixture::default_spec(4, 5).generate(600, 8);
+    // served session and its twin: same data, same config, fully
+    // deterministic — the twin supplies the expected response values
+    let (served, _) = session::train(&data.slice(0, 500), &cfg()).unwrap();
+    let (mut twin, _) = session::train(&data.slice(0, 500), &cfg()).unwrap();
+
+    let fresh = rows_of(&data, 500, 502);
+    let queries = rows_of(&data, 100, 103);
+    let transcript = [
+        r#"{"op":"stats"}"#.to_string(),
+        format!(
+            "{{\"op\":\"ingest\",\"points\":{},\"rounds\":1}}",
+            dense_points_json(&fresh)
+        ),
+        format!("{{\"op\":\"predict\",\"points\":{}}}", dense_points_json(&queries)),
+        r#"{"op":"step","rounds":2}"#.to_string(),
+        format!("{{\"op\":\"predict\",\"points\":{}}}", dense_points_json(&queries)),
+        r#"{"op":"transmogrify"}"#.to_string(),
+        r#"{"op":"shutdown"}"#.to_string(),
+    ];
+
+    // expected responses, in v1 layout, from the twin's trajectory
+    let mut expected: Vec<Option<String>> = Vec::new();
+    // [0] stats — wall-clock field neutralised below, shape pinned here
+    let mut stats = twin.stats_json();
+    if let Json::Obj(m) = &mut stats {
+        m.insert("ok".to_string(), Json::Bool(true));
+        m.insert("op".to_string(), json::s("stats"));
+        m.insert("model".to_string(), json::s("default"));
+    }
+    expected.push(None); // compared structurally, not byte-wise
+    // [1] ingest: append 2 rows, one training round
+    let n = twin.ingest_rows(&fresh).unwrap();
+    let rep = twin.step(1, f64::INFINITY).unwrap();
+    let info = rep.last.expect("initialised session always steps");
+    expected.push(Some(
+        json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", json::s("ingest")),
+            ("model", json::s("default")),
+            ("added", json::num(2.0)),
+            ("n", json::num(n as f64)),
+            ("rounds_run", json::num(rep.rounds_run as f64)),
+            ("initialised", Json::Bool(true)),
+            ("batch", json::num(info.batch as f64)),
+            ("train_mse", json::num(info.train_mse)),
+        ])
+        .to_string(),
+    ));
+    // [2] predict
+    let (lbl, d2) = twin.predict_rows(&queries).unwrap();
+    expected.push(Some(v1_predict(&lbl, &d2)));
+    // [3] step ×2
+    let rep = twin.step(2, f64::INFINITY).unwrap();
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("op", json::s("step")),
+        ("model", json::s("default")),
+        ("rounds_run", json::num(rep.rounds_run as f64)),
+        ("converged", Json::Bool(rep.converged)),
+        ("waiting_for_points", Json::Bool(rep.waiting_for_points)),
+    ];
+    if let Some(info) = rep.last {
+        fields.push(("batch", json::num(info.batch as f64)));
+        fields.push(("train_mse", json::num(info.train_mse)));
+    }
+    expected.push(Some(json::obj(fields).to_string()));
+    // [4] predict against the stepped model
+    let (lbl, d2) = twin.predict_rows(&queries).unwrap();
+    expected.push(Some(v1_predict(&lbl, &d2)));
+    // [5] unknown op: the exact v1 error envelope and text
+    expected.push(Some(
+        json::obj(vec![
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                json::s(
+                    "unknown op 'transmogrify' (create|list|drop|ingest|\
+                     predict|step|stats|snapshot|shutdown)",
+                ),
+            ),
+        ])
+        .to_string(),
+    ));
+    // [6] shutdown
+    expected.push(Some(
+        json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", json::s("shutdown")),
+        ])
+        .to_string(),
+    ));
+
+    // replay the whole transcript against the served registry
+    let reg = ModelRegistry::with_default(served);
+    let input = transcript.join("\n") + "\n";
+    let mut out = Vec::new();
+    let shutdown =
+        protocol::serve_lines(&reg, std::io::Cursor::new(input), &mut out)
+            .unwrap();
+    assert!(shutdown, "transcript ends with an explicit shutdown");
+    let served_lines: Vec<String> = String::from_utf8(out)
+        .unwrap()
+        .trim()
+        .lines()
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(served_lines.len(), expected.len());
+
+    // stats: every byte pinned except the wall-clock work_secs
+    let neutralise = |v: &Json| -> Json {
+        let mut v = v.clone();
+        if let Json::Obj(m) = &mut v {
+            m.insert("work_secs".to_string(), json::num(0.0));
+        }
+        v
+    };
+    let served_stats = Json::parse(&served_lines[0]).unwrap();
+    assert!(
+        served_lines[0].contains("\"work_secs\":"),
+        "{}",
+        served_lines[0]
+    );
+    assert_eq!(
+        neutralise(&served_stats).to_string(),
+        neutralise(&stats).to_string(),
+        "v1 stats response changed shape"
+    );
+
+    // everything else: byte-identical to the v1 layout
+    for (t, exp) in expected.iter().enumerate() {
+        if let Some(exp) = exp {
+            assert_eq!(
+                &served_lines[t], exp,
+                "transcript line {t} diverged from the v1 bytes"
+            );
+        }
+    }
+}

@@ -1,0 +1,429 @@
+//! Wire-protocol overhaul acceptance: predicts routed through the
+//! sparse point encoding, the batched predict path, and the binary
+//! framing are **bit-identical** to the dense JSONL path at the same
+//! published round, and per-connection format negotiation keeps JSONL
+//! clients working.
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::{Data, Storage};
+use nmbkm::serve::wire::{dense_points_json, sparse_points_json};
+use nmbkm::serve::{frame, protocol, session, ModelRegistry, WireRow};
+use nmbkm::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+fn cfg(algo: Algo, k: usize, b0: usize, rounds: usize) -> RunConfig {
+    RunConfig {
+        algo,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 19,
+        max_rounds: rounds,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn sparse_corpus(n: usize, seed: u64) -> Data {
+    nmbkm::data::rcv1::Rcv1Sim {
+        vocab: 400,
+        topic_vocab: 50,
+        ..Default::default()
+    }
+    .generate(n, seed)
+}
+
+fn dense_rows(data: &Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut row = vec![0f32; data.dim()];
+    for i in lo..hi {
+        data.write_row_dense(i, &mut row);
+        out.push(row.clone());
+    }
+    out
+}
+
+fn sparse_rows(data: &Data, lo: usize, hi: usize) -> Vec<(Vec<u32>, Vec<f32>)> {
+    let Storage::Sparse(m) = &data.storage else {
+        panic!("corpus must be sparse");
+    };
+    (lo..hi)
+        .map(|i| {
+            let (idx, vals) = m.row(i);
+            (idx.to_vec(), vals.to_vec())
+        })
+        .collect()
+}
+
+/// Serve one request line and return the raw response line.
+fn serve_one(reg: &ModelRegistry, req: &str) -> String {
+    let mut out = Vec::new();
+    protocol::serve_lines(
+        reg,
+        std::io::Cursor::new(format!("{req}\n")),
+        &mut out,
+    )
+    .unwrap();
+    String::from_utf8(out).unwrap().trim().to_string()
+}
+
+fn fingerprint(resp: &Json) -> (Vec<u32>, Vec<u32>) {
+    let labels = resp
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as u32)
+        .collect();
+    let d2 = resp
+        .get("d2")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| (x.as_f64().unwrap() as f32).to_bits())
+        .collect();
+    (labels, d2)
+}
+
+#[test]
+fn sparse_encoding_bit_matches_dense_jsonl_on_sparse_model() {
+    let data = sparse_corpus(500, 7);
+    let (s, _) = session::train(&data, &cfg(Algo::GbRho, 8, 128, 5)).unwrap();
+    let reg = ModelRegistry::with_default(s);
+    let dense = dense_rows(&data, 20, 32);
+    let sparse = sparse_rows(&data, 20, 32);
+    let a = serve_one(
+        &reg,
+        &format!(
+            "{{\"op\":\"predict\",\"points\":{}}}",
+            dense_points_json(&dense)
+        ),
+    );
+    let b = serve_one(
+        &reg,
+        &format!(
+            "{{\"op\":\"predict\",\"points\":{}}}",
+            sparse_points_json(data.dim(), &sparse)
+        ),
+    );
+    assert!(a.contains("\"ok\":true"), "{a}");
+    // the whole response line is byte-identical — same labels, same d2
+    // bits, same field layout — whichever encoding carried the queries
+    assert_eq!(a, b);
+}
+
+#[test]
+fn sparse_encoding_bit_matches_dense_jsonl_on_dense_model() {
+    // a dense model scatters sparse-encoded queries into dense rows;
+    // the answer must still match the dense encoding exactly
+    let data = nmbkm::data::gaussian::GaussianMixture::default_spec(4, 6)
+        .generate(400, 3);
+    let (s, _) = session::train(&data, &cfg(Algo::TbRho, 4, 64, 5)).unwrap();
+    let reg = ModelRegistry::with_default(s);
+    let dense = dense_rows(&data, 0, 10);
+    let sparse_enc: Vec<(Vec<u32>, Vec<f32>)> = dense
+        .iter()
+        .map(|r| {
+            let mut idx = Vec::new();
+            let mut vals = Vec::new();
+            for (c, &x) in r.iter().enumerate() {
+                if x != 0.0 {
+                    idx.push(c as u32);
+                    vals.push(x);
+                }
+            }
+            (idx, vals)
+        })
+        .collect();
+    let a = serve_one(
+        &reg,
+        &format!(
+            "{{\"op\":\"predict\",\"points\":{}}}",
+            dense_points_json(&dense)
+        ),
+    );
+    let b = serve_one(
+        &reg,
+        &format!(
+            "{{\"op\":\"predict\",\"points\":{}}}",
+            sparse_points_json(data.dim(), &sparse_enc)
+        ),
+    );
+    assert!(a.contains("\"ok\":true"), "{a}");
+    assert_eq!(a, b);
+}
+
+#[test]
+fn batched_predict_bit_matches_per_point_requests() {
+    let data = sparse_corpus(600, 9);
+    let (s, _) = session::train(&data, &cfg(Algo::TbRho, 10, 128, 5)).unwrap();
+    let reg = ModelRegistry::with_default(s);
+    let sparse = sparse_rows(&data, 0, 64);
+
+    // one batch-64 request: the registry splits it across the shard
+    // pool (64 > PREDICT_JOB_ROWS), one published-Arc clone per job
+    let batched = Json::parse(&serve_one(
+        &reg,
+        &format!(
+            "{{\"op\":\"predict\",\"points\":{}}}",
+            sparse_points_json(data.dim(), &sparse)
+        ),
+    ))
+    .unwrap();
+    assert_eq!(batched.get("ok").unwrap().as_bool(), Some(true));
+    let (blbl, bd2) = fingerprint(&batched);
+    assert_eq!(blbl.len(), 64);
+
+    // 64 single-point requests against the same published round
+    let mut lbl = Vec::new();
+    let mut d2 = Vec::new();
+    for row in &sparse {
+        let resp = Json::parse(&serve_one(
+            &reg,
+            &format!(
+                "{{\"op\":\"predict\",\"points\":{}}}",
+                sparse_points_json(data.dim(), std::slice::from_ref(row))
+            ),
+        ))
+        .unwrap();
+        let (l, d) = fingerprint(&resp);
+        lbl.extend(l);
+        d2.extend(d);
+    }
+    assert_eq!(blbl, lbl, "batch split changed labels");
+    assert_eq!(bd2, d2, "batch split changed d2 bits");
+
+    // and the registry-level wire path agrees with the classic dense
+    // Vec path bit-for-bit
+    let entry = reg.resolve(None).unwrap();
+    let wire: Vec<WireRow> = sparse
+        .iter()
+        .map(|(idx, vals)| {
+            nmbkm::serve::wire::sparse_row(
+                data.dim(),
+                idx.clone(),
+                vals.clone(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let (wl, wd) = entry.predict_wire(&wire).unwrap();
+    let (cl, cd) = entry.predict(&dense_rows(&data, 0, 64)).unwrap();
+    assert_eq!(wl, cl);
+    assert_eq!(
+        wd.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        cd.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+fn roundtrip(
+    conn: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    req: &str,
+) -> Json {
+    conn.write_all(req.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap()
+}
+
+#[test]
+fn binary_frames_bit_match_jsonl_over_tcp() {
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            return;
+        }
+    };
+    let addr = listener.local_addr().unwrap();
+    let data = sparse_corpus(500, 13);
+    let (s, _) = session::train(&data, &cfg(Algo::GbRho, 8, 128, 4)).unwrap();
+    let reg = Arc::new(ModelRegistry::with_default(s));
+    let server = std::thread::spawn(move || {
+        nmbkm::serve::server::serve_listener_opts(reg, listener, true).unwrap();
+    });
+
+    let dense = dense_rows(&data, 40, 52);
+    let sparse = sparse_rows(&data, 40, 52);
+
+    // JSONL reference on one connection
+    let (mut jconn, mut jreader) = connect(addr);
+    let jresp = roundtrip(
+        &mut jconn,
+        &mut jreader,
+        &format!(
+            "{{\"op\":\"predict\",\"points\":{}}}",
+            dense_points_json(&dense)
+        ),
+    );
+    assert_eq!(jresp.get("ok").unwrap().as_bool(), Some(true), "{jresp:?}");
+    let (jlbl, jd2) = fingerprint(&jresp);
+
+    // binary twin on a second connection of the same port: magic byte,
+    // then a sparse-encoded predict frame
+    let mut bconn = TcpStream::connect(addr).unwrap();
+    bconn.write_all(&[frame::MAGIC]).unwrap();
+    let mut breader = BufReader::new(bconn.try_clone().unwrap());
+    let body = frame::encode_sparse_points(data.dim(), &sparse).unwrap();
+    frame::write_frame(
+        &mut bconn,
+        &Json::parse(r#"{"op":"predict"}"#).unwrap(),
+        &body,
+    )
+    .unwrap();
+    let (header, rbody) = frame::read_frame(&mut breader).unwrap().unwrap();
+    assert_eq!(header.get("ok").unwrap().as_bool(), Some(true), "{header:?}");
+    assert_eq!(header.get("n").unwrap().as_usize(), Some(12));
+    let (blbl, bd2) = frame::decode_predict_body(&rbody).unwrap();
+    assert_eq!(blbl, jlbl, "binary labels diverged from JSONL");
+    assert_eq!(
+        bd2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        jd2,
+        "binary d2 bits diverged from JSONL"
+    );
+
+    // non-predict ops work over binary frames too: create + ingest a
+    // dense-point block + stats on a second model
+    frame::write_frame(
+        &mut bconn,
+        &Json::parse(r#"{"op":"create","model":"tiny","k":2,"dim":3,"algo":"gb","b0":16,"seed":4}"#)
+            .unwrap(),
+        &[],
+    )
+    .unwrap();
+    let (h, b) = frame::read_frame(&mut breader).unwrap().unwrap();
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+    assert!(b.is_empty(), "non-predict responses are header-only");
+    let pts: Vec<Vec<f32>> =
+        (0..20).map(|i| vec![i as f32, 1.0, 0.5 * i as f32]).collect();
+    frame::write_frame(
+        &mut bconn,
+        &Json::parse(r#"{"op":"ingest","model":"tiny","rounds":1}"#).unwrap(),
+        &frame::encode_dense_points(3, &pts).unwrap(),
+    )
+    .unwrap();
+    let (h, _) = frame::read_frame(&mut breader).unwrap().unwrap();
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+    assert_eq!(h.get("n").unwrap().as_usize(), Some(20));
+    // a malformed frame body is an error response, not a dead stream
+    frame::write_frame(
+        &mut bconn,
+        &Json::parse(r#"{"op":"predict","model":"tiny"}"#).unwrap(),
+        &[9, 9, 9],
+    )
+    .unwrap();
+    let (h, _) = frame::read_frame(&mut breader).unwrap().unwrap();
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(false));
+    frame::write_frame(
+        &mut bconn,
+        &Json::parse(r#"{"op":"stats","model":"tiny"}"#).unwrap(),
+        &[],
+    )
+    .unwrap();
+    let (h, _) = frame::read_frame(&mut breader).unwrap().unwrap();
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+    assert_eq!(h.get("n_total").unwrap().as_usize(), Some(20));
+
+    // shutdown from the binary connection stops the whole server
+    frame::write_frame(
+        &mut bconn,
+        &Json::parse(r#"{"op":"shutdown"}"#).unwrap(),
+        &[],
+    )
+    .unwrap();
+    let (h, _) = frame::read_frame(&mut breader).unwrap().unwrap();
+    assert_eq!(h.get("op").unwrap().as_str(), Some("shutdown"));
+    server.join().expect("server exits after binary shutdown");
+}
+
+#[test]
+fn magic_byte_refused_when_binary_disabled() {
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            return;
+        }
+    };
+    let addr = listener.local_addr().unwrap();
+    let data = nmbkm::data::gaussian::GaussianMixture::default_spec(3, 4)
+        .generate(200, 2);
+    let (s, _) = session::train(&data, &cfg(Algo::GbRho, 3, 32, 3)).unwrap();
+    let reg = Arc::new(ModelRegistry::with_default(s));
+    let server = std::thread::spawn(move || {
+        // default accept loop: binary framing off
+        nmbkm::serve::server::serve_listener(reg, listener).unwrap();
+    });
+
+    // a binary client gets a JSONL error and is never served frames
+    let mut bconn = TcpStream::connect(addr).unwrap();
+    bconn.write_all(&[frame::MAGIC]).unwrap();
+    let mut breader = BufReader::new(bconn.try_clone().unwrap());
+    let mut line = String::new();
+    breader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(
+        resp.get("error").unwrap().as_str().unwrap().contains("--binary"),
+        "{resp:?}"
+    );
+
+    // JSONL clients are untouched
+    let (mut conn, mut reader) = connect(addr);
+    let resp = roundtrip(&mut conn, &mut reader, r#"{"op":"stats"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    roundtrip(&mut conn, &mut reader, r#"{"op":"shutdown"}"#);
+    server.join().unwrap();
+    // after server exit the refused connection reads EOF, not frames
+    line.clear();
+    assert_eq!(breader.read_line(&mut line).unwrap(), 0, "connection closed");
+}
+
+#[test]
+fn sparse_ingest_bit_matches_dense_ingest() {
+    // two twin sessions fed the same logical rows through the two
+    // encodings must end up with bit-identical buffers and models
+    let data = sparse_corpus(400, 21);
+    let c = cfg(Algo::TbRho, 6, 64, 4);
+    let (mut a, _) = session::train(&data.slice(0, 300), &c).unwrap();
+    let (mut b, _) = session::train(&data.slice(0, 300), &c).unwrap();
+
+    let dense = dense_rows(&data, 300, 360);
+    a.ingest_rows(&dense).unwrap();
+    let wire: Vec<WireRow> = sparse_rows(&data, 300, 360)
+        .into_iter()
+        .map(|(idx, vals)| {
+            nmbkm::serve::wire::sparse_row(data.dim(), idx, vals).unwrap()
+        })
+        .collect();
+    b.ingest_wire(&wire).unwrap();
+
+    assert_eq!(a.data().n(), b.data().n());
+    let na: Vec<u32> = a.data().norms.iter().map(|x| x.to_bits()).collect();
+    let nb: Vec<u32> = b.data().norms.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(na, nb, "ingest norms diverged between encodings");
+    // train both over the grown buffer: identical trajectories
+    a.step(4, 1e9).unwrap();
+    b.step(4, 1e9).unwrap();
+    let ca = a.centroids().unwrap();
+    let cb = b.centroids().unwrap();
+    assert_eq!(
+        ca.c.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        cb.c.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "training diverged after mixed-encoding ingest"
+    );
+}
