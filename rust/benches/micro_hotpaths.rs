@@ -339,6 +339,37 @@ fn main() {
     });
     report.push(set);
 
+    // --- observability primitives -----------------------------------------
+    // the costs the serve layer pays per request/per chunk: one sharded
+    // counter add, one histogram record, and the disabled-timer path
+    let mut set = BenchSet::new("obs primitives", opts);
+    let counter = nmbkm::obs::registry().counter("bench_obs_counter_total", &[]);
+    set.bench("counter add x1M", || {
+        for _ in 0..1_000_000 {
+            counter.add(std::hint::black_box(1));
+        }
+        counter.get()
+    });
+    let hist = nmbkm::obs::registry().histogram("bench_obs_hist_seconds", &[]);
+    set.bench("histogram record x1M", || {
+        for i in 0..1_000_000u64 {
+            hist.record_nanos(std::hint::black_box(i.wrapping_mul(2654435761) >> 16));
+        }
+        hist.count()
+    });
+    nmbkm::obs::set_enabled(false);
+    set.bench("disabled timer start+observe x1M", || {
+        let mut alive = 0u64;
+        for _ in 0..1_000_000 {
+            let t = nmbkm::obs::Timer::start();
+            t.observe(&hist);
+            alive += 1;
+        }
+        alive
+    });
+    nmbkm::obs::set_enabled(true);
+    report.push(set);
+
     report.write(&json_path).expect("failed to write bench report");
     println!("\nmicro_hotpaths done");
 }

@@ -460,6 +460,24 @@ fn main() {
     println!(
         "sparse predict batching: jsonl b64/b1 {sp_jsonl:.2}x, binary b64/b1 {sp_bin:.2}x"
     );
+
+    // composite: queries answered per median wall-second per core, over
+    // every timed predict path in this report. `nmbkm bench-trend` gates
+    // on this with inverted direction (lower = regression), so only emit
+    // it when the medians rest on ≥2 samples — smoke medians are noise.
+    if opts.samples >= 2 {
+        let wire_secs: f64 = set.results.iter().map(|m| m.median_secs()).sum();
+        let wire_q = 9.0 * scale.wire_queries as f64; // 3 variants × 3 batch sizes
+        let total_q = total1 + total4 + wire_q;
+        let total_s = t1 + t4 + wire_secs;
+        let cores = Pool::auto().threads.max(1) as f64;
+        let qpc = total_q / total_s / cores;
+        report.meta("qps_per_core", json::num(qpc));
+        println!(
+            "composite: {qpc:.1} predict queries/s/core \
+             ({total_q:.0} queries over {total_s:.3} median-s, {cores:.0} cores)"
+        );
+    }
     payload_sizes_rcv1(&mut report);
 
     let (mut conn, mut reader) = connect(addr);

@@ -160,6 +160,10 @@ impl PoolCore {
     /// strictly outlives every dereference. Late wakers only touch the
     /// atomic cursor, never `f`.
     fn execute(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        let pm = pool_metrics();
+        pm.jobs.inc();
+        pm.chunks.add(total as u64);
+        pm.jobs_inflight.add(1);
         // Lifetime-erase into the raw field (same-layout fat pointer;
         // a plain `as` cast cannot widen the trait-object lifetime).
         let fp: *const (dyn Fn(usize) + Sync) =
@@ -196,10 +200,33 @@ impl PoolCore {
                 st.jobs.remove(pos);
             }
         }
+        pm.jobs_inflight.add(-1);
         if job.panicked.load(Ordering::Relaxed) {
             panic!("worker panicked");
         }
     }
+}
+
+/// Pool-level observability: submitted jobs, total chunks sharded, and
+/// a live in-flight gauge (queue depth as seen by submitters). One
+/// counter bump per *job*, not per chunk, so sharding overhead is
+/// untouched.
+struct PoolMetrics {
+    jobs: Arc<crate::obs::Counter>,
+    chunks: Arc<crate::obs::Counter>,
+    jobs_inflight: Arc<crate::obs::Gauge>,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static M: std::sync::OnceLock<PoolMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| {
+        let reg = crate::obs::registry();
+        PoolMetrics {
+            jobs: reg.counter("nmbkm_pool_jobs_total", &[]),
+            chunks: reg.counter("nmbkm_pool_chunks_total", &[]),
+            jobs_inflight: reg.gauge("nmbkm_pool_jobs_inflight", &[]),
+        }
+    })
 }
 
 impl Pool {

@@ -21,8 +21,51 @@ use crate::data::{Data, Storage};
 use crate::kmeans::state::Centroids;
 use crate::linalg::simd;
 use crate::linalg::sparse::{self, TransposedCentroids};
+use crate::obs;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Kernel-level observability counters, interned once in the global
+/// [`obs`] registry. Inner loops accumulate plain integers; each chunk
+/// of sharded work flushes here exactly once, so the atomics never sit
+/// on the per-point path.
+struct KernelCounters {
+    prune_points_gathered: Arc<obs::Counter>,
+    prune_points_swept: Arc<obs::Counter>,
+    prune_centroids_evaluated: Arc<obs::Counter>,
+    prune_centroids_skipped: Arc<obs::Counter>,
+}
+
+fn kernel_counters() -> &'static KernelCounters {
+    static K: OnceLock<KernelCounters> = OnceLock::new();
+    K.get_or_init(|| {
+        let reg = obs::registry();
+        KernelCounters {
+            prune_points_gathered: reg
+                .counter("nmbkm_sparse_prune_points_gathered_total", &[]),
+            prune_points_swept: reg
+                .counter("nmbkm_sparse_prune_points_swept_total", &[]),
+            prune_centroids_evaluated: reg
+                .counter("nmbkm_sparse_prune_centroids_evaluated_total", &[]),
+            prune_centroids_skipped: reg
+                .counter("nmbkm_sparse_prune_centroids_skipped_total", &[]),
+        }
+    })
+}
+
+/// Flush one chunk's worth of prune tallies and the block-kernel
+/// dispatch count for the tier that ran them.
+fn flush_kernel_stats(stats: &sparse::BlockStats, blocks: u64) {
+    if blocks == 0 {
+        return;
+    }
+    simd::note_dispatch(simd::tier(), blocks);
+    let kc = kernel_counters();
+    kc.prune_points_gathered.add(stats.points_gathered);
+    kc.prune_points_swept.add(stats.points_swept);
+    kc.prune_centroids_evaluated.add(stats.centroids_evaluated);
+    kc.prune_centroids_skipped.add(stats.centroids_skipped);
+}
 
 /// A selection of datapoint indices to (re)assign.
 #[derive(Clone, Copy, Debug)]
@@ -100,8 +143,17 @@ pub trait AssignEngine {
     fn name(&self) -> &'static str;
 
     /// `(hits, builds)` of the engine's transpose cache, when it has
-    /// one (observability: serving sessions report these in `stats`).
+    /// one (observability; scraped into the serve metrics registry).
     fn trans_cache_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
+
+    /// A shared handle on the engine's transpose cache, when it keeps
+    /// one. Metric scrapes read its counters through this handle
+    /// lock-free — without touching whatever lock guards the engine
+    /// itself (a serving session's mutex may be held for seconds by a
+    /// training step).
+    fn trans_cache_handle(&self) -> Option<Arc<TransCache>> {
         None
     }
 
@@ -303,6 +355,10 @@ impl AssignEngine for NativeEngine {
         Some((self.cache.hits(), self.cache.builds()))
     }
 
+    fn trans_cache_handle(&self) -> Option<Arc<TransCache>> {
+        Some(self.cache.clone())
+    }
+
     fn trans_handle(
         &self,
         centroids: &Centroids,
@@ -457,6 +513,8 @@ fn assign_serial(
             let mut rows: [(&[u32], &[f32]); sparse::SPARSE_BLOCK] =
                 [(&[], &[]); sparse::SPARSE_BLOCK];
             let mut xns = [0f32; sparse::SPARSE_BLOCK];
+            let mut stats = sparse::BlockStats::default();
+            let mut blocks = 0u64;
             let mut t0 = range.start;
             while t0 < range.end {
                 let p = sparse::SPARSE_BLOCK.min(range.end - t0);
@@ -466,7 +524,7 @@ fn assign_serial(
                     xns[o] = data.norms[i];
                 }
                 let base = t0 - range.start;
-                tc.nearest_block(
+                stats.merge(tc.nearest_block(
                     &rows[..p],
                     &xns[..p],
                     &centroids.norms,
@@ -474,9 +532,11 @@ fn assign_serial(
                     &mut scratch,
                     &mut out_lbl[base..base + p],
                     &mut out_d2[base..base + p],
-                );
+                ));
+                blocks += 1;
                 t0 += p;
             }
+            flush_kernel_stats(&stats, blocks);
         }
         (_, Storage::Sparse(m)) => {
             for (slot, t) in range.clone().enumerate() {
@@ -497,6 +557,7 @@ fn assign_serial(
             // point-blocked: a 4-row centroid strip stays in cache
             // across POINT_BLOCK points (bit-identical to per-point)
             let tier = simd::tier();
+            let mut blocks = 0u64;
             let mut rows: [&[f32]; simd::POINT_BLOCK] = [&[]; simd::POINT_BLOCK];
             let mut xns = [0f32; simd::POINT_BLOCK];
             let mut t0 = range.start;
@@ -517,8 +578,10 @@ fn assign_serial(
                     &mut out_lbl[base..base + p],
                     &mut out_d2[base..base + p],
                 );
+                blocks += 1;
                 t0 += p;
             }
+            simd::note_dispatch(tier, blocks);
         }
     }
 }
@@ -568,6 +631,7 @@ fn dist_rows_serial(
         }
         (_, Storage::Dense(m)) => {
             let tier = simd::tier();
+            let mut blocks = 0u64;
             let mut rows: [&[f32]; simd::POINT_BLOCK] = [&[]; simd::POINT_BLOCK];
             let mut xns = [0f32; simd::POINT_BLOCK];
             let mut t0 = range.start;
@@ -587,8 +651,10 @@ fn dist_rows_serial(
                     &centroids.norms,
                     &mut out[base * k..(base + p) * k],
                 );
+                blocks += 1;
                 t0 += p;
             }
+            simd::note_dispatch(tier, blocks);
         }
     }
 }

@@ -43,6 +43,7 @@ pub mod data;
 pub mod experiments;
 pub mod kmeans;
 pub mod linalg;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod util;

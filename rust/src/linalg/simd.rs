@@ -29,7 +29,7 @@
 //! FMA-dominated shapes. It is never selected by default.
 
 use crate::linalg::dense::DenseMatrix;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
 
 #[cfg(target_arch = "x86_64")]
 use core::arch::x86_64::*;
@@ -153,6 +153,39 @@ pub fn tier() -> Tier {
     );
     TIER.store(encode(t), Ordering::Relaxed);
     t
+}
+
+/// Per-tier dispatch tally: how many block-kernel invocations ran at
+/// each tier since process start. Kept as plain module statics (not in
+/// the obs registry) so this module stays free of upward dependencies;
+/// the serve metrics layer polls [`dispatch_tally`] at scrape time.
+/// Callers batch counts per work chunk, so the `fetch_add` here is off
+/// the per-point hot path.
+static DISPATCH_TALLY: [AtomicU64; 5] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Record `n` block-kernel dispatches at tier `t`.
+#[inline]
+pub fn note_dispatch(t: Tier, n: u64) {
+    if n > 0 {
+        DISPATCH_TALLY[encode(t) as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot of the per-tier dispatch tally, every tier listed (zeros
+/// included) so exported metric series never appear and disappear.
+pub fn dispatch_tally() -> Vec<(&'static str, u64)> {
+    (0u8..5)
+        .map(|v| {
+            let t = decode(v);
+            (t.name(), DISPATCH_TALLY[v as usize].load(Ordering::Relaxed))
+        })
+        .collect()
 }
 
 /// Force the dispatch tier (benches / CI smoke runs). Panics if the

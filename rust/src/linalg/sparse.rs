@@ -212,6 +212,33 @@ fn prune_slack(nnz: usize) -> f64 {
 /// `C(j)`, so the transposed, gather, and pruned paths all produce
 /// bit-identical dots on every non-FMA tier.
 #[derive(Clone, Debug)]
+/// Tallies from one [`TransposedCentroids::nearest_block`] call: how
+/// the norm-prune split the block between cheap per-candidate gathers
+/// and full AXPY sweeps, and how many exact centroid evaluations the
+/// bound skipped. Plain integers — callers accumulate across blocks
+/// and flush to atomic counters once per work chunk.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct BlockStats {
+    /// Points settled in phase 1 via per-candidate gathers.
+    pub points_gathered: u64,
+    /// Points that fell back to the full AXPY sweep (phase 2).
+    pub points_swept: u64,
+    /// Exact centroid distance evaluations performed.
+    pub centroids_evaluated: u64,
+    /// Centroid evaluations the norm bound skipped (gathered points).
+    pub centroids_skipped: u64,
+}
+
+impl BlockStats {
+    /// Fold another block's tallies into this one.
+    pub fn merge(&mut self, o: BlockStats) {
+        self.points_gathered += o.points_gathered;
+        self.points_swept += o.points_swept;
+        self.centroids_evaluated += o.centroids_evaluated;
+        self.centroids_skipped += o.centroids_skipped;
+    }
+}
+
 pub struct TransposedCentroids {
     pub d: usize,
     pub k: usize,
@@ -392,6 +419,9 @@ impl TransposedCentroids {
     /// provably exceeds the running best. First-wins ties are restored
     /// with the explicit `j < best_j` rule (the seed was evaluated out
     /// of order), so the result is bit-identical to the unpruned scan.
+    /// The third return is the number of exact distance evaluations
+    /// performed (seed included) — the prune's observable work saved.
+    #[allow(clippy::too_many_arguments)]
     fn finish_gather(
         &self,
         idx: &[u32],
@@ -401,20 +431,22 @@ impl TransposedCentroids {
         lbs: &[f32],
         seed_j: usize,
         seed_d2: f32,
-    ) -> (u32, f32) {
+    ) -> (u32, f32, usize) {
         let mut best = seed_d2;
         let mut best_j = seed_j as u32;
+        let mut evals = 1usize;
         for j in 0..self.k {
             if j == seed_j || lbs[j] > best {
                 continue;
             }
             let d2 = (xn + cnorms[j] - 2.0 * self.dot_one(idx, vals, j)).max(0.0);
+            evals += 1;
             if d2 < best || (d2 == best && (j as u32) < best_j) {
                 best = d2;
                 best_j = j as u32;
             }
         }
-        (best_j, best)
+        (best_j, best, evals)
     }
 
     /// Nearest centroid of a sparse point through the transposed block:
@@ -464,7 +496,9 @@ impl TransposedCentroids {
         let (seed_j, seed_d2, survivors) =
             self.prune_seed(idx, vals, xn, cnorms, lbs);
         if survivors * PRUNE_GATHER_DIV <= k {
-            self.finish_gather(idx, vals, xn, cnorms, lbs, seed_j, seed_d2)
+            let (j, d2, _evals) =
+                self.finish_gather(idx, vals, xn, cnorms, lbs, seed_j, seed_d2);
+            (j, d2)
         } else {
             self.nearest(idx, vals, xn, cnorms, scratch)
         }
@@ -477,6 +511,8 @@ impl TransposedCentroids {
     /// strips shared between neighbouring points stay cache-resident
     /// instead of being evicted by interleaved pruning work. Results
     /// are bit-identical to per-point [`TransposedCentroids::nearest`].
+    /// Returns per-block [`BlockStats`] so callers can tally prune
+    /// effectiveness without any atomics on the inner loops.
     #[allow(clippy::too_many_arguments)]
     pub fn nearest_block(
         &self,
@@ -487,17 +523,18 @@ impl TransposedCentroids {
         scratch: &mut [f32],
         out_lbl: &mut [u32],
         out_d2: &mut [f32],
-    ) {
+    ) -> BlockStats {
         let p = rows.len();
         debug_assert!(p <= SPARSE_BLOCK);
         assert_eq!(xns.len(), p, "nearest_block: norms length mismatch");
         assert_eq!(out_lbl.len(), p, "nearest_block: label buffer mismatch");
         assert_eq!(out_d2.len(), p, "nearest_block: d2 buffer mismatch");
+        let mut stats = BlockStats::default();
         let k = self.k;
         if k == 0 {
             out_lbl.fill(0);
             out_d2.fill(f32::INFINITY);
-            return;
+            return stats;
         }
         let tier = simd::tier();
         let mut defer = [false; SPARSE_BLOCK];
@@ -506,11 +543,14 @@ impl TransposedCentroids {
             let (seed_j, seed_d2, survivors) =
                 self.prune_seed(idx, vals, xns[ti], cnorms, lbs);
             if survivors * PRUNE_GATHER_DIV <= k {
-                let (j, d2) = self.finish_gather(
+                let (j, d2, evals) = self.finish_gather(
                     idx, vals, xns[ti], cnorms, lbs, seed_j, seed_d2,
                 );
                 out_lbl[ti] = j;
                 out_d2[ti] = d2;
+                stats.points_gathered += 1;
+                stats.centroids_evaluated += evals as u64;
+                stats.centroids_skipped += (k - evals) as u64;
             } else {
                 defer[ti] = true;
             }
@@ -532,7 +572,10 @@ impl TransposedCentroids {
             }
             out_lbl[ti] = best_j;
             out_d2[ti] = best;
+            stats.points_swept += 1;
+            stats.centroids_evaluated += k as u64;
         }
+        stats
     }
 
     /// Full squared-distance row of a sparse point.

@@ -6,9 +6,11 @@
 //! nmbkm experiment fig1|fig2|fig3|table1|table2|all [--full] [--seeds N]
 //! nmbkm train --dataset gaussian --k 50 --seconds 10 --save model.json
 //! nmbkm serve --snapshot model.json [--listen 127.0.0.1:7878] [--binary]
-//! nmbkm serve --models news=a.json,users=b.json --listen 127.0.0.1:7878
+//! nmbkm serve --models news=a.json,users=b.json --listen 127.0.0.1:7878 \
+//!             --metrics-addr 127.0.0.1:9100
 //! nmbkm predict --snapshot model.json [--points queries.jsonl]
 //! nmbkm bench-trend --baseline old.json --current new.json
+//! nmbkm metrics-scrape --addr 127.0.0.1:9100 [--path /metrics]
 //! nmbkm info [--artifacts DIR]
 //! ```
 //!
@@ -76,6 +78,15 @@ fn serve_spec() -> Vec<OptSpec> {
         OptSpec { name: "threads", takes_value: true, default: None, help: "override snapshot thread counts" },
         OptSpec { name: "snapshot-dir", takes_value: true, default: None, help: "where wire-created models write protocol snapshots [cwd]" },
         OptSpec { name: "binary", takes_value: false, default: None, help: "accept length-prefixed binary frames (connections starting with magic byte 0xB7; JSONL clients unaffected)" },
+        OptSpec { name: "metrics-addr", takes_value: true, default: None, help: "HTTP metrics endpoint, e.g. 127.0.0.1:9100 (GET /metrics = Prometheus exposition, /metrics.json = JSON report)" },
+    ]
+}
+
+fn metrics_scrape_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "addr", takes_value: true, default: None, help: "metrics endpoint address, e.g. 127.0.0.1:9100 (required)" },
+        OptSpec { name: "path", takes_value: true, default: Some("/metrics"), help: "path to fetch" },
+        OptSpec { name: "print", takes_value: false, default: None, help: "echo the body after validating" },
     ]
 }
 
@@ -286,11 +297,74 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
              bootstrap models over the wire with the 'create' op"
         );
     }
+    // --metrics-addr: sidecar HTTP endpoint over the same registry the
+    // protocol's `metrics` op reads; works for TCP and stdio serving
+    if let Some(maddr) = args.get("metrics-addr") {
+        nmbkm::obs::mono_nanos(); // anchor monotonic stamps at startup
+        let listener = std::net::TcpListener::bind(maddr)
+            .map_err(|e| anyhow::anyhow!("binding metrics addr {maddr}: {e}"))?;
+        eprintln!(
+            "[nmbkm::serve] metrics on http://{}/metrics (Prometheus) and \
+             /metrics.json",
+            listener.local_addr()?
+        );
+        let reg = registry.clone();
+        let render: nmbkm::obs::http::Renderer =
+            std::sync::Arc::new(move |path: &str| match path {
+                "/metrics" => Some((
+                    nmbkm::obs::http::PROMETHEUS_CTYPE,
+                    nmbkm::serve::observe::render_prometheus(&reg),
+                )),
+                "/metrics.json" => Some((
+                    "application/json",
+                    nmbkm::serve::observe::metrics_json(&reg).to_string(),
+                )),
+                _ => None,
+            });
+        // detached: the scrape loop dies with the process
+        let _ = nmbkm::obs::http::spawn_metrics_server(listener, render);
+    }
     let binary = args.flag("binary");
     match args.get("listen") {
         Some(addr) => nmbkm::serve::server::serve_tcp(registry, addr, binary),
         None => nmbkm::serve::server::serve_stdio(&registry, binary),
     }
+}
+
+/// Fetch a metrics endpoint, validate the Prometheus exposition format,
+/// and report family/series counts — the CI smoke check for
+/// `serve --metrics-addr`. Non-zero exit on connection failure, non-200
+/// status, or a malformed exposition.
+fn cmd_metrics_scrape(raw: &[String]) -> anyhow::Result<()> {
+    let spec = metrics_scrape_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("metrics-scrape needs --addr HOST:PORT"))?;
+    let path = args.get("path").unwrap_or("/metrics");
+    let (status, body) = nmbkm::obs::http::http_get(addr, path)?;
+    anyhow::ensure!(status == 200, "GET {addr}{path} returned HTTP {status}");
+    if path.ends_with(".json") {
+        let doc = Json::parse(&body)
+            .map_err(|e| anyhow::anyhow!("invalid JSON body: {e}"))?;
+        let n = doc
+            .get("metrics")
+            .and_then(Json::as_arr)
+            .map(|a| a.len())
+            .ok_or_else(|| anyhow::anyhow!("body has no 'metrics' array"))?;
+        println!("metrics-scrape OK: {addr}{path} — {n} metrics (JSON schema)");
+    } else {
+        let summary = nmbkm::obs::export::validate_exposition(&body)
+            .map_err(|e| anyhow::anyhow!("invalid Prometheus exposition: {e}"))?;
+        println!(
+            "metrics-scrape OK: {addr}{path} — {} families, {} series",
+            summary.families, summary.series
+        );
+    }
+    if args.flag("print") {
+        print!("{body}");
+    }
+    Ok(())
 }
 
 fn cmd_bench_trend(raw: &[String]) -> anyhow::Result<()> {
@@ -348,6 +422,33 @@ fn cmd_bench_trend(raw: &[String]) -> anyhow::Result<()> {
                 r.set,
                 r.name,
                 (r.ratio() - 1.0) * 100.0
+            ));
+        }
+    }
+    // composite throughput: QPS per core, emitted by serve_throughput's
+    // meta when sampled (≥2 samples). Higher is better, so the gate
+    // direction inverts: regression = current < baseline × (1 − threshold).
+    let qpc = |doc: &Json| {
+        doc.get("meta")
+            .and_then(|m| m.get("qps_per_core"))
+            .and_then(Json::as_f64)
+    };
+    if let (Some(base_qpc), Some(cur_qpc)) = (qpc(&baseline), qpc(&current)) {
+        let ratio = if base_qpc > 0.0 { cur_qpc / base_qpc } else { 1.0 };
+        let low = base_qpc > 0.0 && cur_qpc < base_qpc * (1.0 - threshold);
+        println!(
+            "{:<28} {:<42} {:>11.1}/s {:>11.1}/s {:>8.3}{}",
+            "meta",
+            "qps_per_core",
+            base_qpc,
+            cur_qpc,
+            ratio,
+            if low { "  << REGRESSION" } else { "" }
+        );
+        if low {
+            regressed.push(format!(
+                "meta/qps_per_core {:.1}% lower",
+                (1.0 - ratio) * 100.0
             ));
         }
     }
@@ -510,9 +611,13 @@ fn main() {
         "predict" => cmd_predict(&rest),
         "experiment" => cmd_experiment(&rest),
         "bench-trend" => cmd_bench_trend(&rest),
+        "metrics-scrape" => cmd_metrics_scrape(&rest),
         "info" => cmd_info(&rest),
         _ => {
-            println!("nmbkm <run|train|serve|predict|experiment|bench-trend|info>\n");
+            println!(
+                "nmbkm <run|train|serve|predict|experiment|bench-trend|\
+                 metrics-scrape|info>\n"
+            );
             println!("{}", usage("nmbkm run", "run one clustering job", &run_spec()));
             println!(
                 "{}",
@@ -539,6 +644,15 @@ fn main() {
                     "compare two bench report JSONs; non-zero exit on \
                      median regressions beyond the threshold",
                     &bench_trend_spec()
+                )
+            );
+            println!(
+                "{}",
+                usage(
+                    "nmbkm metrics-scrape",
+                    "fetch a serve metrics endpoint and validate the \
+                     Prometheus exposition (or JSON report)",
+                    &metrics_scrape_spec()
                 )
             );
             println!(

@@ -1,0 +1,442 @@
+//! Exposure formats for the metrics registry: a stable JSON schema
+//! (the protocol's `{"op":"metrics"}` response body) and hand-rolled
+//! Prometheus text exposition (the `--metrics-addr` endpoint), plus a
+//! parser-validator for the exposition format so CI and tests can
+//! assert well-formedness without a Prometheus binary.
+
+use crate::obs::{estimated_sum_nanos, quantile_nanos, Histogram, Labels, Sample, Value};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One metric as a JSON object with a fixed key set per kind:
+///
+/// * counter/gauge: `{name, labels, type, value}`
+/// * histogram: `{name, labels, type, count, p50_s, p90_s, p99_s,
+///   sum_est_s, buckets}` where `buckets` lists the **non-empty**
+///   buckets as `{le_s, count}` (per-bucket counts, not cumulative;
+///   `le_s` is `null` for the open-ended last bucket).
+pub fn sample_json(s: &Sample) -> Json {
+    let labels = Json::Obj(
+        s.labels
+            .iter()
+            .map(|(k, v)| (k.clone(), json::s(v)))
+            .collect(),
+    );
+    match &s.value {
+        Value::Counter(v) => json::obj(vec![
+            ("name", json::s(&s.name)),
+            ("labels", labels),
+            ("type", json::s("counter")),
+            ("value", json::num(*v as f64)),
+        ]),
+        Value::Gauge(v) => json::obj(vec![
+            ("name", json::s(&s.name)),
+            ("labels", labels),
+            ("type", json::s("gauge")),
+            ("value", json::num(*v as f64)),
+        ]),
+        Value::Histogram(buckets) => {
+            let count: u64 = buckets.iter().sum();
+            let rows: Vec<Json> = buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b > 0)
+                .map(|(i, &b)| {
+                    json::obj(vec![
+                        (
+                            "le_s",
+                            Histogram::le_nanos(i)
+                                .map(|ns| json::num(ns as f64 / 1e9))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("count", json::num(b as f64)),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("name", json::s(&s.name)),
+                ("labels", labels),
+                ("type", json::s("histogram")),
+                ("count", json::num(count as f64)),
+                ("p50_s", json::num(quantile_nanos(buckets, 0.50) as f64 / 1e9)),
+                ("p90_s", json::num(quantile_nanos(buckets, 0.90) as f64 / 1e9)),
+                ("p99_s", json::num(quantile_nanos(buckets, 0.99) as f64 / 1e9)),
+                (
+                    "sum_est_s",
+                    json::num(estimated_sum_nanos(buckets) as f64 / 1e9),
+                ),
+                ("buckets", Json::Arr(rows)),
+            ])
+        }
+    }
+}
+
+/// The full registry snapshot under the stable envelope consumers key
+/// on: `{"schema": 1, "metrics": [...]}`.
+pub fn json_report(samples: &[Sample]) -> Json {
+    json::obj(vec![
+        ("schema", json::num(1.0)),
+        (
+            "metrics",
+            Json::Arr(samples.iter().map(sample_json).collect()),
+        ),
+    ])
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Prometheus text exposition (format 0.0.4) over a merged sample set.
+/// Samples are re-sorted by `(name, labels)` so families stay
+/// contiguous regardless of which source contributed them; one `# TYPE`
+/// line precedes each family. Histogram families emit cumulative
+/// `_bucket{le=…}` series ending at `+Inf`, an **estimated** `_sum`
+/// (bucket midpoints — the record path spends its single `fetch_add`
+/// on the bucket), and an exact `_count`.
+pub fn prometheus(samples: &[Sample]) -> String {
+    let mut ordered: Vec<&Sample> = samples.iter().collect();
+    ordered.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+    let mut out = String::new();
+    let mut last_name: Option<&str> = None;
+    for s in ordered {
+        if last_name != Some(s.name.as_str()) {
+            let kind = match s.value {
+                Value::Counter(_) => "counter",
+                Value::Gauge(_) => "gauge",
+                Value::Histogram(_) => "histogram",
+            };
+            let _ = writeln!(out, "# TYPE {} {kind}", s.name);
+            last_name = Some(s.name.as_str());
+        }
+        match &s.value {
+            Value::Counter(v) => {
+                let _ = writeln!(out, "{}{} {v}", s.name, render_labels(&s.labels, None));
+            }
+            Value::Gauge(v) => {
+                let _ = writeln!(out, "{}{} {v}", s.name, render_labels(&s.labels, None));
+            }
+            Value::Histogram(buckets) => {
+                let mut cum = 0u64;
+                for (i, &b) in buckets.iter().enumerate() {
+                    cum += b;
+                    let le = match Histogram::le_nanos(i) {
+                        Some(ns) => format!("{}", ns as f64 / 1e9),
+                        None => "+Inf".to_string(),
+                    };
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{} {cum}",
+                        s.name,
+                        render_labels(&s.labels, Some(("le", &le)))
+                    );
+                }
+                let _ = writeln!(
+                    out,
+                    "{}_sum{} {}",
+                    s.name,
+                    render_labels(&s.labels, None),
+                    estimated_sum_nanos(buckets) as f64 / 1e9
+                );
+                let _ = writeln!(
+                    out,
+                    "{}_count{} {cum}",
+                    s.name,
+                    render_labels(&s.labels, None)
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Parse summary of a validated exposition body.
+#[derive(Debug, PartialEq, Eq)]
+pub struct ExpoSummary {
+    /// `# TYPE` families declared.
+    pub families: usize,
+    /// Sample lines parsed.
+    pub series: usize,
+}
+
+fn valid_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Split `name{labels} value` into parts; labels keep their raw text.
+fn split_sample_line(line: &str) -> Result<(String, Vec<(String, String)>, f64), String> {
+    let (name, rest) = match line.find(['{', ' ']) {
+        Some(i) => (line[..i].to_string(), &line[i..]),
+        None => return Err(format!("no value on line {line:?}")),
+    };
+    if !valid_name(&name) {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let (labels, value_str) = if let Some(rest) = rest.strip_prefix('{') {
+        let close = rest
+            .find('}')
+            .ok_or_else(|| format!("unterminated labels on {line:?}"))?;
+        let mut labels = Vec::new();
+        let body = &rest[..close];
+        if !body.is_empty() {
+            for pair in body.split(',') {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad label pair {pair:?}"))?;
+                let v = v
+                    .strip_prefix('"')
+                    .and_then(|v| v.strip_suffix('"'))
+                    .ok_or_else(|| format!("unquoted label value in {pair:?}"))?;
+                if !valid_name(k) {
+                    return Err(format!("bad label name {k:?}"));
+                }
+                labels.push((k.to_string(), v.to_string()));
+            }
+        }
+        (labels, rest[close + 1..].trim())
+    } else {
+        (Vec::new(), rest.trim())
+    };
+    // a timestamp may follow the value; we never emit one but accept it
+    let value_tok = value_str.split_whitespace().next().unwrap_or("");
+    let value = match value_tok {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        tok => tok
+            .parse::<f64>()
+            .map_err(|_| format!("bad sample value {tok:?} on {line:?}"))?,
+    };
+    Ok((name, labels, value))
+}
+
+/// Validate a Prometheus text exposition body. Checks: every sample
+/// line parses (`name{labels} value`), every sampled family has a
+/// preceding `# TYPE`, histogram `_bucket` series are cumulative
+/// (non-decreasing in appearance order per label set), end at `+Inf`,
+/// and agree with their `_count`. Returns the family/series tally so
+/// callers can also assert non-emptiness.
+pub fn validate_exposition(text: &str) -> Result<ExpoSummary, String> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut series = 0usize;
+    // (family, labels-minus-le) -> (last cumulative, saw +Inf, inf value)
+    type HistKey = (String, Vec<(String, String)>);
+    let mut hist: BTreeMap<HistKey, (f64, bool, f64)> = BTreeMap::new();
+    let mut counts: BTreeMap<HistKey, f64> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim();
+            if let Some(decl) = rest.strip_prefix("TYPE ") {
+                let mut it = decl.split_whitespace();
+                let name = it.next().ok_or("empty TYPE line")?.to_string();
+                let kind = it.next().ok_or("TYPE line without a kind")?.to_string();
+                if !valid_name(&name) {
+                    return Err(format!("bad TYPE name {name:?}"));
+                }
+                if !matches!(kind.as_str(), "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                    return Err(format!("unknown TYPE kind {kind:?}"));
+                }
+                types.insert(name, kind);
+            }
+            continue; // HELP and plain comments pass through
+        }
+        let (name, labels, value) = split_sample_line(line)?;
+        series += 1;
+        // map histogram suffixes back to the declared family name
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                name.strip_suffix(suf)
+                    .filter(|base| types.get(*base).map(String::as_str) == Some("histogram"))
+                    .map(str::to_string)
+            })
+            .unwrap_or_else(|| name.clone());
+        if !types.contains_key(&family) {
+            return Err(format!("sample {name:?} has no preceding # TYPE"));
+        }
+        if name.ends_with("_bucket") && types.get(&family).map(String::as_str) == Some("histogram")
+        {
+            let mut rest: Vec<(String, String)> = Vec::new();
+            let mut le: Option<String> = None;
+            for (k, v) in labels {
+                if k == "le" {
+                    le = Some(v);
+                } else {
+                    rest.push((k, v));
+                }
+            }
+            let le = le.ok_or_else(|| format!("{name} series without le"))?;
+            let slot = hist
+                .entry((family.clone(), rest))
+                .or_insert((0.0, false, 0.0));
+            if value < slot.0 {
+                return Err(format!(
+                    "histogram {family} buckets not cumulative: {value} after {}",
+                    slot.0
+                ));
+            }
+            slot.0 = value;
+            if le == "+Inf" {
+                slot.1 = true;
+                slot.2 = value;
+            }
+        } else if name.ends_with("_count")
+            && types.get(&family).map(String::as_str) == Some("histogram")
+        {
+            counts.insert((family, labels), value);
+        }
+    }
+    for ((family, labels), (_, saw_inf, inf_v)) in &hist {
+        if !saw_inf {
+            return Err(format!("histogram {family}{labels:?} missing +Inf bucket"));
+        }
+        match counts.get(&(family.clone(), labels.clone())) {
+            Some(c) if c == inf_v => {}
+            Some(c) => {
+                return Err(format!(
+                    "histogram {family}: +Inf bucket {inf_v} != _count {c}"
+                ))
+            }
+            None => return Err(format!("histogram {family} missing _count")),
+        }
+    }
+    Ok(ExpoSummary { families: types.len(), series })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::HIST_BUCKETS;
+
+    fn samples() -> Vec<Sample> {
+        let h = Histogram::default();
+        h.record_nanos(100);
+        h.record_nanos(1 << 20);
+        h.record_nanos(u64::MAX);
+        vec![
+            Sample {
+                name: "nmbkm_requests_total".into(),
+                labels: vec![("op".into(), "predict".into())],
+                value: Value::Counter(42),
+            },
+            Sample {
+                name: "nmbkm_requests_total".into(),
+                labels: vec![("op".into(), "in\"ge\\st".into())],
+                value: Value::Counter(7),
+            },
+            Sample {
+                name: "nmbkm_pool_jobs_inflight".into(),
+                labels: vec![],
+                value: Value::Gauge(-2),
+            },
+            Sample {
+                name: "nmbkm_request_seconds".into(),
+                labels: vec![],
+                value: Value::Histogram(h.snapshot()),
+            },
+        ]
+    }
+
+    #[test]
+    fn exposition_round_trips_through_the_validator() {
+        let text = prometheus(&samples());
+        assert!(text.contains("# TYPE nmbkm_requests_total counter"));
+        assert!(text.contains("nmbkm_requests_total{op=\"predict\"} 42"));
+        assert!(text.contains("le=\"+Inf\"} 3"));
+        assert!(text.contains("nmbkm_request_seconds_count 3"));
+        let summary = validate_exposition(&text).unwrap();
+        assert_eq!(summary.families, 3);
+        // 2 counters + 1 gauge + (HIST_BUCKETS + sum + count)
+        assert_eq!(summary.series, 3 + HIST_BUCKETS + 2);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_expositions() {
+        assert!(validate_exposition("no_type_line 3\n").is_err());
+        assert!(
+            validate_exposition("# TYPE m counter\n9bad_name 3\n").is_err()
+        );
+        assert!(
+            validate_exposition("# TYPE m counter\nm notanumber\n").is_err()
+        );
+        // non-cumulative buckets
+        let bad = "# TYPE h histogram\nh_bucket{le=\"1\"} 5\n\
+                   h_bucket{le=\"+Inf\"} 3\nh_count 3\n";
+        assert!(validate_exposition(bad).is_err());
+        // +Inf disagrees with _count
+        let bad = "# TYPE h histogram\nh_bucket{le=\"+Inf\"} 3\nh_count 4\n";
+        assert!(validate_exposition(bad).is_err());
+        // missing +Inf
+        let bad = "# TYPE h histogram\nh_bucket{le=\"1\"} 3\nh_count 3\n";
+        assert!(validate_exposition(bad).is_err());
+        // a correct minimal histogram passes
+        let ok = "# TYPE h histogram\nh_bucket{le=\"1\"} 2\n\
+                  h_bucket{le=\"+Inf\"} 3\nh_sum 1.5\nh_count 3\n";
+        assert!(validate_exposition(ok).is_ok());
+    }
+
+    #[test]
+    fn json_schema_keys_are_stable_per_kind() {
+        for s in samples() {
+            let j = sample_json(&s);
+            let keys: Vec<&str> = match &j {
+                Json::Obj(m) => m.keys().map(String::as_str).collect(),
+                _ => panic!("sample_json must return an object"),
+            };
+            match &s.value {
+                Value::Counter(_) | Value::Gauge(_) => {
+                    assert_eq!(keys, vec!["labels", "name", "type", "value"]);
+                }
+                Value::Histogram(_) => {
+                    assert_eq!(
+                        keys,
+                        vec![
+                            "buckets", "count", "labels", "name", "p50_s",
+                            "p90_s", "p99_s", "sum_est_s", "type"
+                        ]
+                    );
+                }
+            }
+        }
+        let rep = json_report(&samples());
+        assert_eq!(rep.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rep.get("metrics").unwrap().as_arr().unwrap().len(), 4);
+        // round-trip through the serializer: valid JSON, stable order
+        let reparsed = Json::parse(&rep.to_string()).unwrap();
+        assert_eq!(reparsed.to_string(), rep.to_string());
+    }
+}

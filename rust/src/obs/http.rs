@@ -1,0 +1,134 @@
+//! A hand-rolled HTTP/1.x responder for the `--metrics-addr` endpoint,
+//! plus the matching one-shot client (CI scrapes and tests). Serving
+//! metrics needs exactly one verb and two routes, so this stays a
+//! ~hundred lines of `std::net` instead of a web framework: the same
+//! no-dependency posture as the rest of the crate.
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Content type Prometheus scrapers expect from a text exposition.
+pub const PROMETHEUS_CTYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Route handler: path → `(content_type, body)`, `None` → 404.
+pub type Renderer = Arc<dyn Fn(&str) -> Option<(&'static str, String)> + Send + Sync>;
+
+/// Accept-loop over an already-bound listener, one short-lived thread
+/// per scrape (scrapes are rare and tiny; connection reuse would buy
+/// nothing). Runs until the process exits — the serve CLI holds the
+/// returned handle only to keep it named.
+pub fn spawn_metrics_server(
+    listener: TcpListener,
+    render: Renderer,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            let render = render.clone();
+            std::thread::spawn(move || {
+                let _ = handle(stream, &render);
+            });
+        }
+    })
+}
+
+fn handle(mut stream: TcpStream, render: &Renderer) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        let done = head.windows(4).any(|w| w == b"\r\n\r\n")
+            || head.windows(2).any(|w| w == b"\n\n");
+        if done || head.len() > 16 * 1024 {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut first = text.lines().next().unwrap_or("").split_whitespace();
+    let method = first.next().unwrap_or("");
+    let path = first.next().unwrap_or("/");
+    let (status, ctype, body) = if method != "GET" {
+        (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "only GET is served here\n".to_string(),
+        )
+    } else {
+        match render(path) {
+            Some((ct, body)) => ("200 OK", ct, body),
+            None => (
+                "404 Not Found",
+                "text/plain; charset=utf-8",
+                format!("no route {path} (try /metrics or /metrics.json)\n"),
+            ),
+        }
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One-shot `GET {path}` against `addr`, returning `(status, body)`.
+/// HTTP/1.0 with `Connection: close`, so reading to EOF delimits the
+/// body without chunked-encoding machinery.
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.0\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp)?;
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .unwrap_or((text.as_str(), ""));
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse().ok())
+        .with_context(|| format!("malformed HTTP response from {addr}"))?;
+    Ok((status, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_routes_and_scrapes_back() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let render: Renderer = Arc::new(|path| match path {
+            "/metrics" => Some((PROMETHEUS_CTYPE, "# TYPE up gauge\nup 1\n".to_string())),
+            "/metrics.json" => Some(("application/json", "{\"schema\":1}".to_string())),
+            _ => None,
+        });
+        let _server = spawn_metrics_server(listener, render);
+        let (code, body) = http_get(&addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "# TYPE up gauge\nup 1\n");
+        let (code, body) = http_get(&addr, "/metrics.json").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("schema"));
+        let (code, _) = http_get(&addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+    }
+}

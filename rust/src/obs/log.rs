@@ -1,0 +1,127 @@
+//! Opt-in structured JSONL event log: `NMBKM_LOG=path` (or an explicit
+//! [`open`]) appends one JSON object per event — model publishes,
+//! session lifecycle, connection open/close, request errors — each
+//! stamped with a wall-clock `ts_ms` and a monotonic `mono_ns` (from
+//! the process anchor, so intervals between events are meaningful even
+//! across wall-clock steps). When no sink is configured the first
+//! [`event`] call collapses to one relaxed atomic load.
+
+use crate::obs::mono_nanos;
+use crate::util::json::{self, Json};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+const ST_UNSET: u8 = 0;
+const ST_OFF: u8 = 1;
+const ST_ON: u8 = 2;
+static STATE: AtomicU8 = AtomicU8::new(ST_UNSET);
+static SINK: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+
+/// Whether an event sink is installed. First call resolves `NMBKM_LOG`.
+pub fn active() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ST_ON => true,
+        ST_OFF => false,
+        _ => init_from_env(),
+    }
+}
+
+fn init_from_env() -> bool {
+    match std::env::var("NMBKM_LOG") {
+        Ok(path) if !path.is_empty() => match open(Path::new(&path)) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("[nmbkm::obs] NMBKM_LOG={path}: {e} (event log disabled)");
+                STATE.store(ST_OFF, Ordering::Relaxed);
+                false
+            }
+        },
+        _ => {
+            STATE.store(ST_OFF, Ordering::Relaxed);
+            false
+        }
+    }
+}
+
+/// Install (or replace) the event sink: the file is opened in append
+/// mode, so restarts extend an existing log.
+pub fn open(path: &Path) -> std::io::Result<()> {
+    let f = OpenOptions::new().create(true).append(true).open(path)?;
+    *SINK.lock().unwrap() = Some(BufWriter::new(f));
+    STATE.store(ST_ON, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Flush and remove the sink (tests; a serving process just exits).
+pub fn close() {
+    if let Some(mut w) = SINK.lock().unwrap().take() {
+        let _ = w.flush();
+    }
+    STATE.store(ST_OFF, Ordering::Relaxed);
+}
+
+/// Append one event line: `{"event": kind, "ts_ms": …, "mono_ns": …,
+/// …fields}` (keys alphabetical — the JSON tree is a `BTreeMap`).
+/// Events are rare (publishes, connections, errors — not requests), so
+/// each line is flushed through to the file immediately.
+pub fn event(kind: &str, fields: &[(&str, Json)]) {
+    if !active() {
+        return;
+    }
+    let wall_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    let mut pairs = vec![
+        ("event", json::s(kind)),
+        ("ts_ms", json::num(wall_ms)),
+        ("mono_ns", json::num(mono_nanos() as f64)),
+    ];
+    for (k, v) in fields {
+        pairs.push((*k, v.clone()));
+    }
+    let line = json::obj(pairs).to_string();
+    if let Some(w) = SINK.lock().unwrap().as_mut() {
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_append_parseable_jsonl() {
+        let path = std::env::temp_dir()
+            .join(format!("nmbkm_obs_log_test_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        open(&path).unwrap();
+        assert!(active());
+        event("model_publish", &[("model", json::s("default")), ("rev", json::num(3.0))]);
+        event("error", &[("message", json::s("boom \"quoted\""))]);
+        close();
+        assert!(!active(), "close() must deactivate the sink");
+        event("dropped", &[]); // no sink: must be a no-op, not a panic
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").unwrap().as_str(), Some("model_publish"));
+        assert_eq!(first.get("model").unwrap().as_str(), Some("default"));
+        assert_eq!(first.get("rev").unwrap().as_f64(), Some(3.0));
+        assert!(first.get("ts_ms").unwrap().as_f64().unwrap() > 0.0);
+        let m0 = first.get("mono_ns").unwrap().as_f64().unwrap();
+        let second = Json::parse(lines[1]).unwrap();
+        let m1 = second.get("mono_ns").unwrap().as_f64().unwrap();
+        assert!(m1 >= m0, "monotonic stamps must not go backwards");
+        assert_eq!(
+            second.get("message").unwrap().as_str(),
+            Some("boom \"quoted\"")
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,482 @@
+//! Dependency-free, lock-free observability primitives: sharded atomic
+//! counters, gauges, and fixed-bucket log₂ latency histograms behind a
+//! process-wide named registry.
+//!
+//! Design constraints, in order:
+//!
+//! * **Never perturb results.** Metrics are recorded *about* the
+//!   kernels, never *inside* their arithmetic: hot paths accumulate
+//!   plain integers per chunk and flush once, so every bit-exactness
+//!   test passes with recording enabled.
+//! * **One `fetch_add` per record.** A counter add is a single relaxed
+//!   `fetch_add` on a cache-line-padded shard picked per thread; a
+//!   histogram record is a single relaxed `fetch_add` on the bucket
+//!   indexed by `floor(log2(nanos))`. No locks anywhere on the record
+//!   path; reads sum shards/buckets with relaxed loads (monotone, may
+//!   trail in-flight adds by one — fine for observability).
+//! * **Near-zero when disabled.** `NMBKM_METRICS=0` flips one process
+//!   flag: [`Timer::start`] returns an empty timer (no clock read) and
+//!   recording helpers no-op. Counters cost one relaxed `fetch_add`
+//!   either way — cheaper than the branch that would skip them.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are interned in the
+//! global [`registry`] under `(name, labels)` and cached by callers in
+//! `OnceLock` statics or struct fields, so the registry's `RwLock` is
+//! touched at acquisition and scrape time only. Exposure lives in
+//! [`export`] (stable JSON + Prometheus text exposition), [`http`]
+//! (a hand-rolled `GET /metrics` listener), and [`log`] (the opt-in
+//! `NMBKM_LOG` JSONL event log).
+
+pub mod export;
+pub mod http;
+pub mod log;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::{Duration, Instant};
+
+/// Counter shard lanes. Eight 64-byte-padded slots bound same-line
+/// contention at 8 writer threads per counter without bloating every
+/// counter past two cache lines of hot data.
+pub const COUNTER_SHARDS: usize = 8;
+
+/// Histogram bucket count: log₂ buckets from [`HIST_MIN_POW`] up, the
+/// last bucket catching everything larger (`+Inf` in the exposition).
+pub const HIST_BUCKETS: usize = 28;
+
+/// Bucket 0 spans `[0, 2^(HIST_MIN_POW+1))` nanoseconds (≈ 2 µs): one
+/// bucket for everything cheaper than a syscall, then a ×2 ladder up to
+/// `2^(HIST_MIN_POW+HIST_BUCKETS)` ns ≈ 275 s — the whole latency range
+/// a serve request can plausibly occupy, in 28 buckets.
+pub const HIST_MIN_POW: u32 = 10;
+
+#[repr(align(64))]
+#[derive(Default)]
+struct PaddedU64(AtomicU64);
+
+/// A monotone counter sharded across padded cache lines. One relaxed
+/// `fetch_add` per [`Counter::add`]; [`Counter::get`] sums the shards.
+#[derive(Default)]
+pub struct Counter {
+    shards: [PaddedU64; COUNTER_SHARDS],
+}
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.shards[shard_lane()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Per-thread shard lane: assigned round-robin on first touch, so
+/// steady-state worker threads never share a counter cache line.
+fn shard_lane() -> usize {
+    use std::cell::Cell;
+    thread_local! {
+        static LANE: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    LANE.with(|l| {
+        let mut v = l.get();
+        if v == usize::MAX {
+            static NEXT: AtomicU64 = AtomicU64::new(0);
+            v = NEXT.fetch_add(1, Ordering::Relaxed) as usize % COUNTER_SHARDS;
+            l.set(v);
+        }
+        v
+    })
+}
+
+/// An up/down instantaneous value (queue depths, in-flight work).
+/// Unsharded: gauges sit off the per-item hot paths.
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn set(&self, x: i64) {
+        self.v.store(x, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log₂ latency histogram: bucket `i` counts samples in
+/// `[2^(HIST_MIN_POW+i), 2^(HIST_MIN_POW+i+1))` ns (bucket 0 also takes
+/// everything smaller, the last bucket everything larger). One relaxed
+/// `fetch_add` per record; p50/p90/p99 derive from the bucket counts at
+/// read time ([`quantile_nanos`]), each answer exact up to its bucket's
+/// upper bound.
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Histogram {
+    /// Bucket index for a sample of `nanos`.
+    pub fn bucket_index(nanos: u64) -> usize {
+        if nanos < (1 << (HIST_MIN_POW + 1)) {
+            return 0;
+        }
+        let pow = 63 - nanos.leading_zeros(); // floor(log2), nanos ≥ 2^(MIN+1)
+        ((pow - HIST_MIN_POW) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` in nanoseconds; `None` for
+    /// the last (`+Inf`) bucket.
+    pub fn le_nanos(i: usize) -> Option<u64> {
+        if i >= HIST_BUCKETS - 1 {
+            None
+        } else {
+            Some(1u64 << (HIST_MIN_POW + i as u32 + 1))
+        }
+    }
+
+    pub fn record_nanos(&self, nanos: u64) {
+        self.buckets[Self::bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_nanos(d.as_nanos() as u64);
+    }
+
+    /// Relaxed per-bucket snapshot (not atomic across buckets — each
+    /// bucket is individually monotone, which is all quantile and
+    /// monotonicity consumers need).
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Quantile `q` in (0, 1] over a bucket snapshot: the upper bound of
+/// the bucket where the cumulative count crosses `ceil(q·total)` — an
+/// overestimate by at most one ×2 bucket. Returns 0 on an empty
+/// histogram; the open-ended last bucket clamps to its lower bound ×2.
+pub fn quantile_nanos(buckets: &[u64], q: f64) -> u64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        cum += b;
+        if cum >= target {
+            return Histogram::le_nanos(i)
+                .unwrap_or(1u64 << (HIST_MIN_POW + HIST_BUCKETS as u32));
+        }
+    }
+    1u64 << (HIST_MIN_POW + HIST_BUCKETS as u32)
+}
+
+/// Estimated sum of all recorded samples in nanoseconds: Σ bucket_count
+/// × geometric-bucket midpoint (1.5 × lower bound). The histogram keeps
+/// one `fetch_add` per record instead of a second for an exact sum, so
+/// the Prometheus `_sum` series is an estimate — documented as such.
+pub fn estimated_sum_nanos(buckets: &[u64]) -> u64 {
+    buckets
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| b.saturating_mul((3u64 << (HIST_MIN_POW + i as u32)) / 2))
+        .sum()
+}
+
+// --- enable flag ----------------------------------------------------------
+
+const EN_OFF: u8 = 0;
+const EN_ON: u8 = 1;
+const EN_UNSET: u8 = 2;
+static ENABLED: AtomicU8 = AtomicU8::new(EN_UNSET);
+
+/// Whether timing collection is on (default yes; `NMBKM_METRICS=0`
+/// disables). Gates clock reads, not counter adds — a relaxed
+/// `fetch_add` is cheaper than making every add conditional.
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        EN_OFF => false,
+        EN_ON => true,
+        _ => {
+            let on = !matches!(
+                std::env::var("NMBKM_METRICS").as_deref(),
+                Ok("0") | Ok("off") | Ok("false")
+            );
+            ENABLED.store(if on { EN_ON } else { EN_OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Override the enable flag (benches measuring disabled-path cost).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(if on { EN_ON } else { EN_OFF }, Ordering::Relaxed);
+}
+
+/// A latency timer that reads the clock only when metrics are enabled:
+/// `Timer::start()?…?observe(&hist)` brackets a request with at most
+/// two `Instant` reads and one `fetch_add`, or nothing at all.
+pub struct Timer(Option<Instant>);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(if enabled() { Some(Instant::now()) } else { None })
+    }
+
+    /// Elapsed nanoseconds so far, when the timer is live.
+    pub fn elapsed_nanos(&self) -> Option<u64> {
+        self.0.map(|t0| t0.elapsed().as_nanos() as u64)
+    }
+
+    /// Record the elapsed time into `h` (no-op for a disabled timer).
+    pub fn observe(self, h: &Histogram) {
+        if let Some(t0) = self.0 {
+            h.record_nanos(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Nanoseconds since the process-wide monotonic anchor (first call
+/// wins; the serve CLI touches it at startup so event-log timestamps
+/// count from roughly process start).
+pub fn mono_nanos() -> u64 {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    ANCHOR.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+// --- the named registry ---------------------------------------------------
+
+/// Sorted `(key, value)` label pairs; part of a metric's identity.
+pub type Labels = Vec<(String, String)>;
+
+/// A registered metric handle.
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// One scraped time-series value.
+pub enum Value {
+    Counter(u64),
+    Gauge(i64),
+    /// Per-bucket (non-cumulative) counts, [`HIST_BUCKETS`] long.
+    Histogram(Vec<u64>),
+}
+
+/// One scraped sample: `(name, labels)` plus the value at scrape time.
+pub struct Sample {
+    pub name: String,
+    pub labels: Labels,
+    pub value: Value,
+}
+
+/// The process-wide metric table. Handles are interned once per
+/// `(name, labels)` and shared; the lock guards registration and
+/// scrapes only, never the record path.
+#[derive(Default)]
+pub struct Registry {
+    metrics: RwLock<BTreeMap<(String, Labels), Metric>>,
+}
+
+/// The global registry every layer records into.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+fn own_labels(labels: &[(&str, &str)]) -> Labels {
+    let mut v: Labels = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    v.sort();
+    v
+}
+
+impl Registry {
+    fn intern(&self, name: &str, labels: &[(&str, &str)], make: impl FnOnce() -> Metric) -> Metric {
+        let key = (name.to_string(), own_labels(labels));
+        if let Some(m) = self.metrics.read().unwrap().get(&key) {
+            return m.clone();
+        }
+        let mut w = self.metrics.write().unwrap();
+        w.entry(key).or_insert_with(make).clone()
+    }
+
+    /// The counter registered under `(name, labels)`, created on first
+    /// use. Panics if the name is already registered at another kind —
+    /// a programming error, caught in tests.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.intern(name, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            _ => panic!("metric '{name}' is not a counter"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.intern(name, labels, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            _ => panic!("metric '{name}' is not a gauge"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        match self.intern(name, labels, || {
+            Metric::Histogram(Arc::new(Histogram::default()))
+        }) {
+            Metric::Histogram(h) => h,
+            _ => panic!("metric '{name}' is not a histogram"),
+        }
+    }
+
+    /// Scrape every registered metric, `(name, labels)`-ordered.
+    pub fn snapshot(&self) -> Vec<Sample> {
+        self.metrics
+            .read()
+            .unwrap()
+            .iter()
+            .map(|((name, labels), m)| Sample {
+                name: name.clone(),
+                labels: labels.clone(),
+                value: match m {
+                    Metric::Counter(c) => Value::Counter(c.get()),
+                    Metric::Gauge(g) => Value::Gauge(g.get()),
+                    Metric::Histogram(h) => Value::Histogram(h.snapshot()),
+                },
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_shards_sum_across_threads() {
+        let c = Arc::new(Counter::default());
+        let mut hs = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    c.inc();
+                }
+                c.add(5);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8 * 10_005);
+    }
+
+    #[test]
+    fn histogram_buckets_follow_log2_ladder() {
+        // bucket 0 takes everything below 2^(MIN+1)
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index((1 << (HIST_MIN_POW + 1)) - 1), 0);
+        // exact powers land at their own bucket's lower edge
+        assert_eq!(Histogram::bucket_index(1 << (HIST_MIN_POW + 1)), 1);
+        assert_eq!(Histogram::bucket_index((1 << (HIST_MIN_POW + 2)) - 1), 1);
+        assert_eq!(Histogram::bucket_index(1 << (HIST_MIN_POW + 2)), 2);
+        // the last bucket is open-ended
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // every finite le bound is the first value of the next bucket
+        for i in 0..HIST_BUCKETS - 1 {
+            let le = Histogram::le_nanos(i).unwrap();
+            assert_eq!(Histogram::bucket_index(le - 1), i);
+            assert_eq!(Histogram::bucket_index(le), i + 1);
+        }
+        assert!(Histogram::le_nanos(HIST_BUCKETS - 1).is_none());
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_buckets() {
+        let h = Histogram::default();
+        assert_eq!(quantile_nanos(&h.snapshot(), 0.5), 0, "empty histogram");
+        // 90 fast samples, 10 slow ones
+        for _ in 0..90 {
+            h.record_nanos(100); // bucket 0
+        }
+        for _ in 0..10 {
+            h.record_nanos(1 << 20); // ~1ms bucket
+        }
+        let snap = h.snapshot();
+        assert_eq!(h.count(), 100);
+        let p50 = quantile_nanos(&snap, 0.50);
+        let p99 = quantile_nanos(&snap, 0.99);
+        assert_eq!(p50, Histogram::le_nanos(0).unwrap());
+        assert_eq!(
+            p99,
+            Histogram::le_nanos(Histogram::bucket_index(1 << 20)).unwrap()
+        );
+        assert!(estimated_sum_nanos(&snap) > 0);
+    }
+
+    #[test]
+    fn registry_interns_by_name_and_labels() {
+        let reg = Registry::default();
+        let a = reg.counter("t_total", &[("model", "a")]);
+        let a2 = reg.counter("t_total", &[("model", "a")]);
+        let b = reg.counter("t_total", &[("model", "b")]);
+        a.inc();
+        a2.inc();
+        b.add(7);
+        assert_eq!(a.get(), 2, "same (name, labels) shares one counter");
+        assert_eq!(b.get(), 7);
+        reg.gauge("depth", &[]).set(3);
+        reg.histogram("lat_seconds", &[]).record_nanos(500);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 4);
+        // BTreeMap keys: name-ordered, then label-ordered
+        assert_eq!(snap[0].name, "depth");
+        assert_eq!(snap[1].name, "lat_seconds");
+        assert_eq!(snap[2].labels, vec![("model".to_string(), "a".to_string())]);
+        match &snap[2].value {
+            Value::Counter(v) => assert_eq!(*v, 2),
+            _ => panic!("expected counter"),
+        }
+    }
+
+    #[test]
+    fn timer_respects_enable_flag() {
+        // NB: the flag is process-global; restore it so parallel tests
+        // in this binary keep timing (they only ever assert monotone
+        // growth, never exact histogram counts, so a blip is harmless)
+        set_enabled(false);
+        assert!(Timer::start().elapsed_nanos().is_none());
+        set_enabled(true);
+        assert!(Timer::start().elapsed_nanos().is_some());
+        let h = Histogram::default();
+        Timer::start().observe(&h);
+        assert_eq!(h.count(), 1);
+    }
+}

@@ -44,6 +44,8 @@
 //! allocate unboundedly — same hardening posture as the snapshot op's
 //! path confinement.
 
+use crate::obs;
+use crate::serve::observe::serve_metrics;
 use crate::serve::protocol::{self, Request};
 use crate::serve::registry::ModelRegistry;
 use crate::serve::wire::{self, WireRow};
@@ -72,14 +74,15 @@ pub const MAX_BODY_BYTES: usize = 1 << 28;
 pub const MAX_PREDICT_ROWS: usize = (MAX_BODY_BYTES - 4) / 8;
 
 /// Write one frame: `[u32 header_len][header][u32 body_len][body]`.
-pub fn write_frame<W: Write>(w: &mut W, header: &Json, body: &[u8]) -> Result<()> {
+/// Returns the total bytes put on the wire (prefixes included).
+pub fn write_frame<W: Write>(w: &mut W, header: &Json, body: &[u8]) -> Result<usize> {
     let h = header.to_string();
     w.write_all(&(h.len() as u32).to_le_bytes())?;
     w.write_all(h.as_bytes())?;
     w.write_all(&(body.len() as u32).to_le_bytes())?;
     w.write_all(body)?;
     w.flush()?;
-    Ok(())
+    Ok(8 + h.len() + body.len())
 }
 
 /// Read one frame's raw parts; `Ok(None)` on clean EOF at a frame
@@ -306,12 +309,19 @@ pub fn serve_frames<R: Read, W: Write>(
     input: &mut R,
     output: &mut W,
 ) -> Result<bool> {
+    let sm = serve_metrics();
     while let Some((hbytes, body)) = read_frame_raw(input)? {
+        sm.frames.inc();
+        sm.frame_bytes_read.add(8 + (hbytes.len() + body.len()) as u64);
         let (resp, resp_body, quit) = match parse_header(&hbytes) {
             Ok(header) => handle_frame(registry, &header, &body),
-            Err(e) => (protocol::err_json(&e), vec![], false),
+            Err(e) => {
+                sm.op_counter("invalid").inc();
+                (protocol::err_json(&e), vec![], false)
+            }
         };
-        write_frame(output, &resp, &resp_body)?;
+        let written = write_frame(output, &resp, &resp_body)?;
+        sm.frame_bytes_written.add(written as u64);
         if quit {
             return Ok(true);
         }
@@ -328,20 +338,31 @@ fn handle_frame(
     header: &Json,
     body: &[u8],
 ) -> (Json, Vec<u8>, bool) {
+    let sm = serve_metrics();
     let points = if body.is_empty() {
         None
     } else {
         match decode_points(body) {
             Ok(p) => Some(p),
-            Err(e) => return (protocol::err_json(&e), vec![], false),
+            Err(e) => {
+                sm.op_counter("invalid").inc();
+                return (protocol::err_json(&e), vec![], false);
+            }
         }
     };
     let req = match protocol::request_from_json(header, points) {
         Ok(r) => r,
-        Err(e) => return (protocol::err_json(&e), vec![], false),
+        Err(e) => {
+            sm.op_counter("invalid").inc();
+            return (protocol::err_json(&e), vec![], false);
+        }
     };
     match &req {
         Request::Predict { model, points } => {
+            // the frame fast path answers predicts without touching the
+            // JSONL executor, so it carries its own op count + timing
+            sm.op_counter("predict").inc();
+            let timer = obs::Timer::start();
             if points.len() > MAX_PREDICT_ROWS {
                 let e = anyhow!(
                     "predict of {} rows would overflow the response frame \
@@ -355,7 +376,7 @@ fn handle_frame(
                 let out = e.predict_wire(points)?;
                 Ok((e.name().to_string(), out))
             });
-            match answered {
+            let out = match answered {
                 Ok((name, (lbl, d2))) => {
                     let h = json::obj(vec![
                         ("ok", Json::Bool(true)),
@@ -366,7 +387,9 @@ fn handle_frame(
                     (h, encode_predict_body(&lbl, &d2), false)
                 }
                 Err(e) => (protocol::err_json(&e), vec![], false),
-            }
+            };
+            timer.observe(&sm.request_seconds);
+            out
         }
         _ => {
             let (resp, quit) = protocol::handle_request(registry, &req);

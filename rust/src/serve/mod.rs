@@ -15,6 +15,7 @@
 //! | [`protocol`] | JSONL request/response: create·ingest·predict·…·drop |
 //! | [`frame`]    | opt-in length-prefixed binary frames (raw-f32 predict hot path) |
 //! | [`server`]   | transports: stdio pipes and thread-per-connection TCP, per-connection format negotiation |
+//! | [`observe`]  | serve-layer metrics: per-model counters/histograms, merged scrape snapshot |
 //!
 //! The load-bearing invariant throughout is the paper's §3.1
 //! each-point-counts-exactly-once property: ingested points append
@@ -27,6 +28,7 @@
 //! train --save`, `nmbkm serve [--models]`, `nmbkm predict`.
 
 pub mod frame;
+pub mod observe;
 pub mod protocol;
 pub mod registry;
 pub mod server;

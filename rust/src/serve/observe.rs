@@ -1,0 +1,203 @@
+//! The serve layer's metric surface: named handles into the global
+//! [`obs`] registry (server-level request/connection/byte counters, one
+//! request-latency histogram, per-model op counters + latency
+//! histograms), plus the merge that turns the registry **and** the
+//! polled sources — SIMD dispatch tallies, per-model transpose-cache
+//! counters — into one sample set. Both exposures read that merge: the
+//! protocol's `{"op":"metrics"}` JSON and the `--metrics-addr`
+//! Prometheus endpoint, so the two can never drift apart.
+
+use crate::linalg::simd;
+use crate::obs::{self, export, Counter, Histogram, Sample, Value};
+use crate::serve::protocol::Request;
+use crate::serve::registry::ModelRegistry;
+use crate::util::json::Json;
+use std::sync::{Arc, OnceLock};
+
+/// Server-level handles, interned once per process.
+pub struct ServeMetrics {
+    /// End-to-end latency of every protocol request (both transports).
+    pub request_seconds: Arc<Histogram>,
+    /// `ok:false` responses (any cause, either transport).
+    pub errors: Arc<Counter>,
+    pub conns_opened: Arc<Counter>,
+    pub conns_closed: Arc<Counter>,
+    /// Binary frames served (requests, not responses).
+    pub frames: Arc<Counter>,
+    pub frame_bytes_read: Arc<Counter>,
+    pub frame_bytes_written: Arc<Counter>,
+    pub jsonl_bytes_read: Arc<Counter>,
+    pub jsonl_bytes_written: Arc<Counter>,
+    op_create: Arc<Counter>,
+    op_list: Arc<Counter>,
+    op_drop: Arc<Counter>,
+    op_ingest: Arc<Counter>,
+    op_predict: Arc<Counter>,
+    op_step: Arc<Counter>,
+    op_stats: Arc<Counter>,
+    op_snapshot: Arc<Counter>,
+    op_metrics: Arc<Counter>,
+    op_shutdown: Arc<Counter>,
+    op_invalid: Arc<Counter>,
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        let reg = obs::registry();
+        let opc = |op: &str| reg.counter("nmbkm_requests_total", &[("op", op)]);
+        ServeMetrics {
+            request_seconds: reg.histogram("nmbkm_request_seconds", &[]),
+            errors: reg.counter("nmbkm_request_errors_total", &[]),
+            conns_opened: reg.counter("nmbkm_connections_opened_total", &[]),
+            conns_closed: reg.counter("nmbkm_connections_closed_total", &[]),
+            frames: reg.counter("nmbkm_frames_total", &[]),
+            frame_bytes_read: reg
+                .counter("nmbkm_bytes_read_total", &[("transport", "frame")]),
+            frame_bytes_written: reg
+                .counter("nmbkm_bytes_written_total", &[("transport", "frame")]),
+            jsonl_bytes_read: reg
+                .counter("nmbkm_bytes_read_total", &[("transport", "jsonl")]),
+            jsonl_bytes_written: reg
+                .counter("nmbkm_bytes_written_total", &[("transport", "jsonl")]),
+            op_create: opc("create"),
+            op_list: opc("list"),
+            op_drop: opc("drop"),
+            op_ingest: opc("ingest"),
+            op_predict: opc("predict"),
+            op_step: opc("step"),
+            op_stats: opc("stats"),
+            op_snapshot: opc("snapshot"),
+            op_metrics: opc("metrics"),
+            op_shutdown: opc("shutdown"),
+            op_invalid: opc("invalid"),
+        }
+    }
+
+    /// The `nmbkm_requests_total{op=…}` counter for a request; anything
+    /// unparseable lands on `op="invalid"`.
+    pub fn op_counter(&self, op: &str) -> &Counter {
+        match op {
+            "create" => &self.op_create,
+            "list" => &self.op_list,
+            "drop" => &self.op_drop,
+            "ingest" => &self.op_ingest,
+            "predict" => &self.op_predict,
+            "step" => &self.op_step,
+            "stats" => &self.op_stats,
+            "snapshot" => &self.op_snapshot,
+            "metrics" => &self.op_metrics,
+            "shutdown" => &self.op_shutdown,
+            _ => &self.op_invalid,
+        }
+    }
+}
+
+/// The process-wide serve metric handles.
+pub fn serve_metrics() -> &'static ServeMetrics {
+    static M: OnceLock<ServeMetrics> = OnceLock::new();
+    M.get_or_init(ServeMetrics::new)
+}
+
+/// The wire op name a parsed request counts under.
+pub fn op_name(req: &Request) -> &'static str {
+    match req {
+        Request::Create { .. } => "create",
+        Request::List => "list",
+        Request::Drop { .. } => "drop",
+        Request::Ingest { .. } => "ingest",
+        Request::Predict { .. } => "predict",
+        Request::Step { .. } => "step",
+        Request::Stats { .. } => "stats",
+        Request::Snapshot { .. } => "snapshot",
+        Request::Metrics => "metrics",
+        Request::Shutdown => "shutdown",
+    }
+}
+
+/// Per-model handles, interned under `model=<name>` labels when the
+/// entry registers. Counters are monotone across drop/recreate of the
+/// same model name (the registry interns by `(name, labels)`), which is
+/// exactly what scrape consumers want from `_total` series.
+pub struct ModelMetrics {
+    pub predict_requests: Arc<Counter>,
+    pub predict_rows: Arc<Counter>,
+    pub predict_seconds: Arc<Histogram>,
+    pub ingest_requests: Arc<Counter>,
+    pub ingest_points: Arc<Counter>,
+    pub ingest_seconds: Arc<Histogram>,
+    pub step_requests: Arc<Counter>,
+    pub step_rounds: Arc<Counter>,
+    pub step_seconds: Arc<Histogram>,
+    pub publishes: Arc<Counter>,
+}
+
+impl ModelMetrics {
+    pub fn for_model(name: &str) -> ModelMetrics {
+        let reg = obs::registry();
+        let l: [(&str, &str); 1] = [("model", name)];
+        ModelMetrics {
+            predict_requests: reg.counter("nmbkm_model_predict_requests_total", &l),
+            predict_rows: reg.counter("nmbkm_model_predict_rows_total", &l),
+            predict_seconds: reg.histogram("nmbkm_model_predict_seconds", &l),
+            ingest_requests: reg.counter("nmbkm_model_ingest_requests_total", &l),
+            ingest_points: reg.counter("nmbkm_model_ingest_points_total", &l),
+            ingest_seconds: reg.histogram("nmbkm_model_ingest_seconds", &l),
+            step_requests: reg.counter("nmbkm_model_step_requests_total", &l),
+            step_rounds: reg.counter("nmbkm_model_step_rounds_total", &l),
+            step_seconds: reg.histogram("nmbkm_model_step_seconds", &l),
+            publishes: reg.counter("nmbkm_model_publishes_total", &l),
+        }
+    }
+}
+
+/// One merged scrape: the global registry plus the polled sources that
+/// keep their own atomics — the SIMD dispatch tally (`linalg::simd`
+/// statics) and each model's two transpose caches (lock-free `Arc`
+/// handles captured at entry registration; scrapes never touch a
+/// session mutex).
+pub fn samples(registry: &ModelRegistry) -> Vec<Sample> {
+    let mut out = obs::registry().snapshot();
+    for (tier, n) in simd::dispatch_tally() {
+        out.push(Sample {
+            name: "nmbkm_simd_dispatch_total".to_string(),
+            labels: vec![("tier".to_string(), tier.to_string())],
+            value: Value::Counter(n),
+        });
+    }
+    for entry in registry.entries() {
+        let mut cache = |engine: &str, hits: u64, builds: u64| {
+            let labels = vec![
+                ("engine".to_string(), engine.to_string()),
+                ("model".to_string(), entry.name().to_string()),
+            ];
+            out.push(Sample {
+                name: "nmbkm_trans_cache_hits_total".to_string(),
+                labels: labels.clone(),
+                value: Value::Counter(hits),
+            });
+            out.push(Sample {
+                name: "nmbkm_trans_cache_builds_total".to_string(),
+                labels,
+                value: Value::Counter(builds),
+            });
+        };
+        let (h, b) = entry.predict_cache_stats();
+        cache("predict", h, b);
+        if let Some((h, b)) = entry.session_cache_stats() {
+            cache("session", h, b);
+        }
+    }
+    out
+}
+
+/// The `{"op":"metrics"}` response body: `{"schema":1,"metrics":[…]}`
+/// over the merged sample set (the protocol layer adds `ok`/`op`).
+pub fn metrics_json(registry: &ModelRegistry) -> Json {
+    export::json_report(&samples(registry))
+}
+
+/// The `--metrics-addr` endpoint body: the same merged sample set in
+/// Prometheus text exposition.
+pub fn render_prometheus(registry: &ModelRegistry) -> String {
+    export::prometheus(&samples(registry))
+}

@@ -51,6 +51,8 @@
 //! in `serve::frame` carries the same ops with raw f32 payloads.)
 
 use crate::config::{Algo, Rho, RunConfig};
+use crate::obs;
+use crate::serve::observe;
 use crate::serve::registry::ModelRegistry;
 use crate::serve::wire::{self, WireRow};
 use crate::util::json::{self, Json};
@@ -80,6 +82,11 @@ pub enum Request {
     Step { model: Option<String>, rounds: usize, seconds: f64 },
     /// Observability counters.
     Stats { model: Option<String> },
+    /// Scrape the whole metrics registry (per-model op counters and
+    /// latency histograms, kernel counters, SIMD dispatch tally,
+    /// transpose-cache stats) as the stable `{"schema":1,"metrics":[…]}`
+    /// document — the same sample set the Prometheus endpoint serves.
+    Metrics,
     /// Persist the model (and, unless `include_data` is false, the
     /// buffer) to a snapshot file on the server's filesystem.
     Snapshot { model: Option<String>, path: String, include_data: bool },
@@ -168,6 +175,7 @@ pub fn request_from_json(
             seconds: seconds()?,
         },
         "stats" => Request::Stats { model: model()? },
+        "metrics" => Request::Metrics,
         "snapshot" => Request::Snapshot {
             model: model()?,
             path: v
@@ -183,7 +191,7 @@ pub fn request_from_json(
         "shutdown" | "quit" => Request::Shutdown,
         other => bail!(
             "unknown op '{other}' (create|list|drop|ingest|predict|step|\
-             stats|snapshot|shutdown)"
+             stats|snapshot|metrics|shutdown)"
         ),
     })
 }
@@ -254,26 +262,36 @@ fn parse_create(v: &Json) -> Result<(usize, RunConfig)> {
 pub fn handle_line(registry: &ModelRegistry, line: &str) -> (Json, bool) {
     let req = match parse_request(line) {
         Ok(r) => r,
-        Err(e) => return (err_json(&e), false),
+        Err(e) => {
+            observe::serve_metrics().op_counter("invalid").inc();
+            return (err_json(&e), false);
+        }
     };
     handle_request(registry, &req)
 }
 
 /// Execute an already-parsed request: the shared core of the JSONL and
 /// binary-frame transports. Never fails; the bool asks the server to
-/// stop.
+/// stop. Every request lands in `nmbkm_requests_total{op=…}` and the
+/// `nmbkm_request_seconds` histogram here, whichever transport carried
+/// it.
 pub fn handle_request(registry: &ModelRegistry, req: &Request) -> (Json, bool) {
-    match execute(registry, req) {
+    let m = observe::serve_metrics();
+    m.op_counter(observe::op_name(req)).inc();
+    let timer = obs::Timer::start();
+    let out = match execute(registry, req) {
         Ok(resp) => (resp, matches!(req, Request::Shutdown)),
         Err(e) => (err_json(&e), false),
-    }
+    };
+    timer.observe(&m.request_seconds);
+    out
 }
 
 pub(crate) fn err_json(e: &anyhow::Error) -> Json {
-    json::obj(vec![
-        ("ok", Json::Bool(false)),
-        ("error", json::s(&format!("{e:#}"))),
-    ])
+    let msg = format!("{e:#}");
+    observe::serve_metrics().errors.inc();
+    obs::log::event("error", &[("message", json::s(&msg))]);
+    json::obj(vec![("ok", Json::Bool(false)), ("error", json::s(&msg))])
 }
 
 fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
@@ -310,11 +328,16 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
         }
         Request::Ingest { model, points, rounds, seconds } => {
             let entry = registry.resolve(model.as_deref())?;
+            let timer = obs::Timer::start();
             let (n, rep, initialised) = entry.with_session_mut(|s| {
                 let n = s.ingest_wire(points)?;
                 let rep = s.step(*rounds, *seconds)?;
                 Ok((n, rep, s.initialised()))
             })?;
+            let mm = entry.metrics();
+            mm.ingest_requests.inc();
+            mm.ingest_points.add(points.len() as u64);
+            timer.observe(&mm.ingest_seconds);
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("op", json::s("ingest")),
@@ -352,8 +375,13 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
         }
         Request::Step { model, rounds, seconds } => {
             let entry = registry.resolve(model.as_deref())?;
+            let timer = obs::Timer::start();
             let rep =
                 entry.with_session_mut(|s| s.step(*rounds, *seconds))?;
+            let mm = entry.metrics();
+            mm.step_requests.inc();
+            mm.step_rounds.add(rep.rounds_run as u64);
+            timer.observe(&mm.step_seconds);
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("op", json::s("step")),
@@ -411,6 +439,14 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
                 ("bytes", json::num(bytes as f64)),
             ])
         }
+        Request::Metrics => {
+            let mut resp = observe::metrics_json(registry);
+            if let Json::Obj(m) = &mut resp {
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("op".to_string(), json::s("metrics"));
+            }
+            resp
+        }
         Request::Shutdown => json::obj(vec![
             ("ok", Json::Bool(true)),
             ("op", json::s("shutdown")),
@@ -426,14 +462,18 @@ pub fn serve_lines<R: BufRead, W: Write>(
     input: R,
     output: &mut W,
 ) -> Result<bool> {
+    let m = observe::serve_metrics();
     for line in input.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
+        m.jsonl_bytes_read.add(line.len() as u64 + 1);
         let (resp, quit) = handle_line(registry, &line);
-        writeln!(output, "{}", resp.to_string())?;
+        let resp = resp.to_string();
+        writeln!(output, "{resp}")?;
         output.flush()?;
+        m.jsonl_bytes_written.add(resp.len() as u64 + 1);
         if quit {
             return Ok(true);
         }

@@ -25,9 +25,11 @@
 
 use crate::config::RunConfig;
 use crate::coordinator::shard::Pool;
-use crate::kmeans::assign::NativeEngine;
+use crate::kmeans::assign::{NativeEngine, TransCache};
 use crate::kmeans::state::Centroids;
 use crate::linalg::sparse::TransposedCentroids;
+use crate::obs::{self, log as obslog};
+use crate::serve::observe::ModelMetrics;
 use crate::serve::session::{self, OnlineSession};
 use crate::serve::wire::WireRow;
 use crate::util::json::{self, Json};
@@ -150,11 +152,19 @@ pub struct ModelEntry {
     published: RwLock<Arc<PublishedModel>>,
     predict_engine: NativeEngine,
     pool: Pool,
+    /// Per-model op counters and latency histograms (labelled
+    /// `model=<name>` in the global metrics registry).
+    metrics: ModelMetrics,
+    /// The training engine's transpose cache, captured at registration
+    /// so metric scrapes read its counters lock-free — never through
+    /// the session mutex a training step may hold for seconds.
+    session_cache: Option<Arc<TransCache>>,
 }
 
 impl ModelEntry {
     fn new(name: &str, session: OnlineSession) -> Arc<ModelEntry> {
         let pool = session.pool().clone();
+        let session_cache = session.trans_cache();
         let view = Arc::new(publish_view(name, &session));
         Arc::new(ModelEntry {
             name: name.to_string(),
@@ -162,7 +172,14 @@ impl ModelEntry {
             published: RwLock::new(view),
             predict_engine: NativeEngine::default(),
             pool,
+            metrics: ModelMetrics::for_model(name),
+            session_cache,
         })
+    }
+
+    /// This model's metric handles.
+    pub fn metrics(&self) -> &ModelMetrics {
+        &self.metrics
     }
 
     pub fn name(&self) -> &str {
@@ -178,7 +195,12 @@ impl ModelEntry {
     /// Snapshot-isolated predict: resolves the published model once and
     /// computes against it, concurrent training steps notwithstanding.
     pub fn predict(&self, rows: &[Vec<f32>]) -> Result<(Vec<u32>, Vec<f32>)> {
-        self.current().predict(rows, &self.predict_engine, &self.pool)
+        let timer = obs::Timer::start();
+        let out = self.current().predict(rows, &self.predict_engine, &self.pool)?;
+        self.metrics.predict_requests.inc();
+        self.metrics.predict_rows.add(rows.len() as u64);
+        timer.observe(&self.metrics.predict_seconds);
+        Ok(out)
     }
 
     /// Snapshot-isolated **batched** predict for wire-decoded rows: the
@@ -191,6 +213,15 @@ impl ModelEntry {
     /// `tests/serve_wire.rs`). Sub-batches sit below the engine's own
     /// fan-out threshold, so jobs never re-shard recursively.
     pub fn predict_wire(&self, rows: &[WireRow]) -> Result<(Vec<u32>, Vec<f32>)> {
+        let timer = obs::Timer::start();
+        let out = self.predict_wire_inner(rows)?;
+        self.metrics.predict_requests.inc();
+        self.metrics.predict_rows.add(rows.len() as u64);
+        timer.observe(&self.metrics.predict_seconds);
+        Ok(out)
+    }
+
+    fn predict_wire_inner(&self, rows: &[WireRow]) -> Result<(Vec<u32>, Vec<f32>)> {
         let view = self.current();
         if rows.len() <= PREDICT_JOB_ROWS || self.pool.threads <= 1 {
             return view.predict_wire(rows, &self.predict_engine, &self.pool);
@@ -229,7 +260,18 @@ impl ModelEntry {
     ) -> Result<T> {
         let mut s = self.lock_session()?;
         let out = f(&mut s)?;
-        *self.published.write().unwrap() = Arc::new(publish_view(&self.name, &s));
+        let view = Arc::new(publish_view(&self.name, &s));
+        self.metrics.publishes.inc();
+        obslog::event(
+            "model_publish",
+            &[
+                ("model", json::s(&self.name)),
+                ("rev", json::num(view.rev as f64)),
+                ("rounds", json::num(view.rounds as f64)),
+                ("n_total", json::num(view.n_total as f64)),
+            ],
+        );
+        *self.published.write().unwrap() = view;
         Ok(out)
     }
 
@@ -250,6 +292,13 @@ impl ModelEntry {
     pub fn predict_cache_stats(&self) -> (u64, u64) {
         let c = self.predict_engine.cache();
         (c.hits(), c.builds())
+    }
+
+    /// `(hits, builds)` of the **training** engine's transpose cache,
+    /// read through the handle captured at registration — no session
+    /// lock. `None` when the engine keeps no cache (e.g. XLA).
+    pub fn session_cache_stats(&self) -> Option<(u64, u64)> {
+        self.session_cache.as_ref().map(|c| (c.hits(), c.builds()))
     }
 
     fn lock_session(&self) -> Result<std::sync::MutexGuard<'_, OnlineSession>> {
@@ -334,6 +383,7 @@ impl ModelRegistry {
             "registry is full ({MAX_MODELS} models) — drop one first"
         );
         models.insert(name.to_string(), entry.clone());
+        obslog::event("model_register", &[("model", json::s(name))]);
         Ok(entry)
     }
 
@@ -372,7 +422,14 @@ impl ModelRegistry {
             models.remove(name).is_some(),
             "unknown model '{name}': nothing to drop"
         );
+        obslog::event("model_drop", &[("model", json::s(name))]);
         Ok(())
+    }
+
+    /// Every registered entry, name-ordered (metric scrapes poll the
+    /// per-entry cache counters through this).
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        self.models.read().unwrap().values().cloned().collect()
     }
 
     /// Published snapshots of every model, name-ordered.

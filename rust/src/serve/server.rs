@@ -16,7 +16,9 @@
 //! connection (either framing) stops the whole server (stdio: EOF works
 //! too).
 
+use crate::obs::log as obslog;
 use crate::serve::frame;
+use crate::serve::observe::serve_metrics;
 use crate::serve::protocol::serve_lines;
 use crate::serve::registry::ModelRegistry;
 use crate::util::json::{self, Json};
@@ -86,7 +88,7 @@ pub fn serve_tcp(
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
         "[nmbkm::serve] listening on {} ({} models; JSONL: create|list|drop|\
-         ingest|predict|step|stats|snapshot|shutdown{})",
+         ingest|predict|step|stats|snapshot|metrics|shutdown{})",
         listener.local_addr()?,
         registry.len(),
         if accept_binary {
@@ -184,11 +186,25 @@ fn serve_connection(
     stream: TcpStream,
     accept_binary: bool,
 ) -> Result<bool> {
-    if let Ok(peer) = stream.peer_addr() {
-        eprintln!("[nmbkm::serve] client {peer} connected");
-    }
+    let sm = serve_metrics();
+    sm.conns_opened.inc();
+    let peer = stream
+        .peer_addr()
+        .map(|p| p.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    eprintln!("[nmbkm::serve] client {peer} connected");
+    obslog::event("connection_open", &[("peer", json::s(&peer))]);
     let mut reader =
         BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = BufWriter::new(stream);
-    serve_negotiated(registry, &mut reader, &mut writer, accept_binary)
+    let out = serve_negotiated(registry, &mut reader, &mut writer, accept_binary);
+    sm.conns_closed.inc();
+    obslog::event(
+        "connection_close",
+        &[
+            ("peer", json::s(&peer)),
+            ("clean", Json::Bool(out.is_ok())),
+        ],
+    );
+    out
 }

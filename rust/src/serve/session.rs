@@ -462,11 +462,15 @@ impl OnlineSession {
             fields.push(("train_mse", json::num(info.train_mse)));
             fields.push(("last_changed", json::num(info.changed as f64)));
         }
-        if let Some((hits, builds)) = self.engine.trans_cache_stats() {
-            fields.push(("trans_cache_hits", json::num(hits as f64)));
-            fields.push(("trans_cache_builds", json::num(builds as f64)));
-        }
         json::obj(fields)
+    }
+
+    /// The training engine's transpose cache, when it keeps one — the
+    /// single source the metrics registry scrapes
+    /// (`nmbkm_trans_cache_*_total{engine="session"}`). The bespoke
+    /// `trans_cache_*` fields the `stats` op used to carry moved there.
+    pub fn trans_cache(&self) -> Option<Arc<crate::kmeans::assign::TransCache>> {
+        self.engine.trans_cache_handle()
     }
 
     /// The session's shard pool handle (shared workers; cloning is

@@ -418,16 +418,10 @@ fn concurrent_sparse_sessions_keep_their_transpose_caches() {
                 // yield so the two trainers genuinely interleave
                 std::thread::yield_now();
             }
-            let stats = s.stats_json();
-            let hits = stats
-                .get("trans_cache_hits")
-                .and_then(Json::as_usize)
-                .expect("native engine reports cache hits");
-            let builds = stats
-                .get("trans_cache_builds")
-                .and_then(Json::as_usize)
-                .expect("native engine reports cache builds");
-            (hits, builds)
+            let cache = s
+                .trans_cache()
+                .expect("native engine exposes its transpose cache");
+            (cache.hits() as usize, cache.builds() as usize)
         }));
     }
     for h in handles {

@@ -1,0 +1,273 @@
+//! Observability acceptance: the `{"op":"metrics"}` response keeps a
+//! stable per-kind key schema, its counters are monotone across
+//! requests, the Prometheus rendering of the same sample set passes the
+//! exposition validator, and — the load-bearing invariant — enabling
+//! metrics never perturbs a single predict bit on any dispatch tier.
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::{Data, Storage};
+use nmbkm::linalg::simd::{self, Tier};
+use nmbkm::serve::wire::sparse_points_json;
+use nmbkm::serve::{observe, protocol, session, ModelRegistry};
+use nmbkm::util::json::Json;
+
+fn cfg(algo: Algo, k: usize, b0: usize, rounds: usize) -> RunConfig {
+    RunConfig {
+        algo,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 19,
+        max_rounds: rounds,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn sparse_corpus(n: usize, seed: u64) -> Data {
+    nmbkm::data::rcv1::Rcv1Sim {
+        vocab: 400,
+        topic_vocab: 50,
+        ..Default::default()
+    }
+    .generate(n, seed)
+}
+
+fn sparse_rows(data: &Data, lo: usize, hi: usize) -> Vec<(Vec<u32>, Vec<f32>)> {
+    let Storage::Sparse(m) = &data.storage else {
+        panic!("corpus must be sparse");
+    };
+    (lo..hi)
+        .map(|i| {
+            let (idx, vals) = m.row(i);
+            (idx.to_vec(), vals.to_vec())
+        })
+        .collect()
+}
+
+fn dense_rows(data: &Data, lo: usize, hi: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut row = vec![0f32; data.dim()];
+    for i in lo..hi {
+        data.write_row_dense(i, &mut row);
+        out.push(row.clone());
+    }
+    out
+}
+
+fn serve_one(reg: &ModelRegistry, req: &str) -> Json {
+    let mut out = Vec::new();
+    protocol::serve_lines(reg, std::io::Cursor::new(format!("{req}\n")), &mut out)
+        .unwrap();
+    Json::parse(String::from_utf8(out).unwrap().trim()).unwrap()
+}
+
+/// The value of one counter sample in a metrics response, summed over
+/// every label set it appears under.
+fn counter_total(doc: &Json, name: &str) -> f64 {
+    doc.get("metrics")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|m| m.get("name").and_then(Json::as_str) == Some(name))
+        .map(|m| m.get("value").and_then(Json::as_f64).unwrap_or(0.0))
+        .sum()
+}
+
+fn has_series(doc: &Json, name: &str, label: Option<(&str, &str)>) -> bool {
+    doc.get("metrics").unwrap().as_arr().unwrap().iter().any(|m| {
+        let name_hit = m.get("name").and_then(Json::as_str) == Some(name);
+        let label_hit = match label {
+            None => true,
+            Some((k, v)) => {
+                m.get("labels").and_then(|l| l.get(k)).and_then(Json::as_str)
+                    == Some(v)
+            }
+        };
+        name_hit && label_hit
+    })
+}
+
+#[test]
+fn metrics_op_schema_stable_and_counters_monotone() {
+    let data = sparse_corpus(500, 7);
+    let (s, _) = session::train(&data, &cfg(Algo::GbRho, 8, 128, 5)).unwrap();
+    let reg = ModelRegistry::with_default(s);
+    let sparse = sparse_rows(&data, 0, 16);
+    let predict_req = format!(
+        "{{\"op\":\"predict\",\"points\":{}}}",
+        sparse_points_json(data.dim(), &sparse)
+    );
+
+    let resp = serve_one(&reg, &predict_req);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+
+    let m1 = serve_one(&reg, r#"{"op":"metrics"}"#);
+    assert_eq!(m1.get("ok").unwrap().as_bool(), Some(true), "{m1:?}");
+    assert_eq!(m1.get("op").unwrap().as_str(), Some("metrics"));
+    assert_eq!(m1.get("schema").unwrap().as_f64(), Some(1.0));
+
+    // per-kind key schema is frozen: dashboards key on these exact sets
+    let samples = m1.get("metrics").unwrap().as_arr().unwrap();
+    assert!(!samples.is_empty());
+    for sample in samples {
+        let Json::Obj(map) = sample else {
+            panic!("metric sample is not an object: {sample:?}")
+        };
+        let keys: Vec<&str> = map.keys().map(|k| k.as_str()).collect();
+        match sample.get("type").and_then(Json::as_str) {
+            Some("counter") | Some("gauge") => {
+                assert_eq!(
+                    keys,
+                    ["labels", "name", "type", "value"],
+                    "scalar sample schema drifted: {sample:?}"
+                );
+            }
+            Some("histogram") => {
+                assert_eq!(
+                    keys,
+                    [
+                        "buckets", "count", "labels", "name", "p50_s",
+                        "p90_s", "p99_s", "sum_est_s", "type"
+                    ],
+                    "histogram sample schema drifted: {sample:?}"
+                );
+            }
+            other => panic!("unknown sample type {other:?} in {sample:?}"),
+        }
+    }
+
+    // the acceptance series: per-model predict counts, request op
+    // counters, the sparse prune tallies, and the SIMD dispatch tally
+    assert!(has_series(&m1, "nmbkm_requests_total", Some(("op", "predict"))));
+    assert!(has_series(
+        &m1,
+        "nmbkm_model_predict_requests_total",
+        Some(("model", "default"))
+    ));
+    assert!(has_series(&m1, "nmbkm_request_seconds", None));
+    assert!(has_series(
+        &m1,
+        "nmbkm_model_predict_seconds",
+        Some(("model", "default"))
+    ));
+    assert!(has_series(&m1, "nmbkm_sparse_prune_points_gathered_total", None));
+    assert!(has_series(&m1, "nmbkm_sparse_prune_centroids_skipped_total", None));
+    assert!(has_series(&m1, "nmbkm_simd_dispatch_total", None));
+    assert!(has_series(
+        &m1,
+        "nmbkm_trans_cache_hits_total",
+        Some(("engine", "predict"))
+    ));
+    // a sparse predict went through the transposed-centroid kernels, so
+    // the prune counters saw its points
+    assert!(counter_total(&m1, "nmbkm_sparse_prune_points_gathered_total") > 0.0);
+
+    // monotonicity: more traffic can only grow _total series
+    let predicts_before = counter_total(&m1, "nmbkm_model_predict_requests_total");
+    let rows_before = counter_total(&m1, "nmbkm_model_predict_rows_total");
+    for _ in 0..3 {
+        let r = serve_one(&reg, &predict_req);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    }
+    let m2 = serve_one(&reg, r#"{"op":"metrics"}"#);
+    let predicts_after = counter_total(&m2, "nmbkm_model_predict_requests_total");
+    let rows_after = counter_total(&m2, "nmbkm_model_predict_rows_total");
+    assert!(
+        predicts_after >= predicts_before + 3.0,
+        "predict counter not monotone: {predicts_before} -> {predicts_after}"
+    );
+    assert!(
+        rows_after >= rows_before + 3.0 * 16.0,
+        "predict row counter undercounts: {rows_before} -> {rows_after}"
+    );
+    // metrics requests count themselves too
+    assert!(counter_total(&m2, "nmbkm_requests_total") > counter_total(&m1, "nmbkm_requests_total"));
+}
+
+#[test]
+fn prometheus_rendering_validates_and_covers_the_registry() {
+    let data = sparse_corpus(400, 11);
+    let (s, _) = session::train(&data, &cfg(Algo::TbRho, 6, 64, 4)).unwrap();
+    let reg = ModelRegistry::with_default(s);
+    let sparse = sparse_rows(&data, 0, 8);
+    let r = serve_one(
+        &reg,
+        &format!(
+            "{{\"op\":\"predict\",\"points\":{}}}",
+            sparse_points_json(data.dim(), &sparse)
+        ),
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+
+    let text = observe::render_prometheus(&reg);
+    let summary = nmbkm::obs::export::validate_exposition(&text)
+        .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+    assert!(summary.families >= 5, "suspiciously few families: {summary:?}");
+    assert!(summary.series >= summary.families);
+    assert!(text.contains("# TYPE nmbkm_requests_total counter"));
+    assert!(text.contains("# TYPE nmbkm_request_seconds histogram"));
+    assert!(text.contains("nmbkm_request_seconds_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("nmbkm_simd_dispatch_total{tier="));
+
+    // both exposures read the same merged sample set: every Prometheus
+    // family name appears in the JSON report too
+    let doc = observe::metrics_json(&reg);
+    for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let fam = line.split_whitespace().nth(2).unwrap();
+        let found = doc
+            .get("metrics")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|m| m.get("name").and_then(Json::as_str) == Some(fam));
+        assert!(found, "family {fam} missing from the JSON report");
+    }
+}
+
+#[test]
+fn predicts_bit_exact_with_metrics_enabled_on_every_tier() {
+    // the recording discipline keeps every counter flush outside kernel
+    // arithmetic; predicts must not move by a bit whether metrics are
+    // enabled or disabled, on the scalar tier and on the autodetected one
+    if simd::tier() == Tier::Avx2Fma {
+        return; // the opt-in FMA tier is documented as not bit-exact
+    }
+    let data = sparse_corpus(600, 13);
+    let (s, _) = session::train(&data, &cfg(Algo::GbRho, 8, 128, 4)).unwrap();
+    let reg = ModelRegistry::with_default(s);
+    let entry = reg.resolve(None).unwrap();
+    let queries = dense_rows(&data, 50, 114);
+
+    let mut per_tier = Vec::new();
+    for forced in [Some(Tier::Scalar), None] {
+        simd::force_tier(forced);
+        nmbkm::obs::set_enabled(true);
+        let (l_on, d_on) = entry.predict(&queries).unwrap();
+        nmbkm::obs::set_enabled(false);
+        let (l_off, d_off) = entry.predict(&queries).unwrap();
+        nmbkm::obs::set_enabled(true);
+        assert_eq!(l_on, l_off, "labels moved with metrics toggled ({forced:?})");
+        assert_eq!(
+            d_on.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            d_off.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "d2 bits moved with metrics toggled ({forced:?})"
+        );
+        per_tier.push((l_on, d_on));
+    }
+    simd::force_tier(None);
+    // and the scalar tier agrees with the dispatched tier bit-for-bit,
+    // metrics on — the PR 4 invariant survives instrumentation
+    let (sl, sd) = &per_tier[0];
+    let (al, ad) = &per_tier[1];
+    assert_eq!(sl, al, "scalar vs dispatched labels diverged");
+    assert_eq!(
+        sd.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        ad.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "scalar vs dispatched d2 bits diverged"
+    );
+}

@@ -1,0 +1,215 @@
+//! Stress: many pipelined binary frames in flight on one TCP
+//! connection. The frame loop reads requests and writes responses on
+//! the same thread, so a client that pumps requests without draining
+//! responses exercises request queueing in the socket buffers; a writer
+//! thread keeps the pump full while the main thread drains. Responses
+//! must come back in order, every one bit-identical to the unloaded
+//! reference — and the server's frame counters must account for every
+//! frame. A second phase keeps training steps running on another
+//! connection while the pipeline is full.
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::{Data, Storage};
+use nmbkm::serve::observe::serve_metrics;
+use nmbkm::serve::{frame, session, ModelRegistry};
+use nmbkm::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+fn cfg(k: usize, b0: usize, rounds: usize) -> RunConfig {
+    RunConfig {
+        algo: Algo::TbRho,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 23,
+        max_rounds: rounds,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn sparse_corpus(n: usize, seed: u64) -> Data {
+    nmbkm::data::rcv1::Rcv1Sim {
+        vocab: 300,
+        topic_vocab: 40,
+        ..Default::default()
+    }
+    .generate(n, seed)
+}
+
+fn sparse_rows(data: &Data, lo: usize, hi: usize) -> Vec<(Vec<u32>, Vec<f32>)> {
+    let Storage::Sparse(m) = &data.storage else {
+        panic!("corpus must be sparse");
+    };
+    (lo..hi)
+        .map(|i| {
+            let (idx, vals) = m.row(i);
+            (idx.to_vec(), vals.to_vec())
+        })
+        .collect()
+}
+
+fn predict_frame(batch: &[(Vec<u32>, Vec<f32>)], dim: usize) -> Vec<u8> {
+    let body = frame::encode_sparse_points(dim, batch).unwrap();
+    let mut out = Vec::new();
+    frame::write_frame(
+        &mut out,
+        &Json::parse(r#"{"op":"predict"}"#).unwrap(),
+        &body,
+    )
+    .unwrap();
+    out
+}
+
+#[test]
+fn pipelined_binary_frames_stay_ordered_and_bit_exact_under_load() {
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            return;
+        }
+    };
+    let addr = listener.local_addr().unwrap();
+    let data = sparse_corpus(500, 17);
+    let dim = data.dim();
+    let (s, _) = session::train(&data, &cfg(8, 128, 4)).unwrap();
+    let reg = Arc::new(ModelRegistry::with_default(s));
+    let server = std::thread::spawn(move || {
+        nmbkm::serve::server::serve_listener_opts(reg, listener, true).unwrap();
+    });
+
+    // 12 distinct query batches, cycled into 240 in-flight frames
+    const DISTINCT: usize = 12;
+    const IN_FLIGHT: usize = 240;
+    let batches: Vec<Vec<(Vec<u32>, Vec<f32>)>> = (0..DISTINCT)
+        .map(|b| sparse_rows(&data, b * 8, b * 8 + 8))
+        .collect();
+    let frames: Vec<Vec<u8>> =
+        batches.iter().map(|b| predict_frame(b, dim)).collect();
+
+    // unloaded reference answers, one frame at a time
+    let mut expected = Vec::with_capacity(DISTINCT);
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(&[frame::MAGIC]).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        for f in &frames {
+            conn.write_all(f).unwrap();
+            let (h, body) = frame::read_frame(&mut reader).unwrap().unwrap();
+            assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+            let (lbl, d2) = frame::decode_predict_body(&body).unwrap();
+            expected.push((
+                lbl,
+                d2.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            ));
+        }
+    }
+
+    let frames_before = serve_metrics().frames.get();
+
+    // training pressure on a second connection for the whole stress
+    // run. It trains its OWN model ("aux"): registry-level churn —
+    // session locking, publishes, event-log writes — without moving the
+    // default model the pipelined predicts are asserted against
+    // (per-model snapshot isolation is exactly the property under test)
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let trainer_stop = stop.clone();
+    let trainer = std::thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        let mut req = |conn: &mut TcpStream,
+                       reader: &mut BufReader<TcpStream>,
+                       line: &mut String,
+                       msg: &str| {
+            conn.write_all(msg.as_bytes()).unwrap();
+            conn.write_all(b"\n").unwrap();
+            line.clear();
+            reader.read_line(line).unwrap();
+            assert!(line.contains("\"ok\":true"), "trainer request failed: {line}");
+        };
+        req(
+            &mut conn,
+            &mut reader,
+            &mut line,
+            r#"{"op":"create","model":"aux","k":4,"dim":3,"algo":"gb","b0":16,"seed":4}"#,
+        );
+        let pts: Vec<String> = (0..32)
+            .map(|i| format!("[{},1.0,{}]", i as f32, 0.5 * i as f32))
+            .collect();
+        req(
+            &mut conn,
+            &mut reader,
+            &mut line,
+            &format!(
+                "{{\"op\":\"ingest\",\"model\":\"aux\",\"points\":[{}]}}",
+                pts.join(",")
+            ),
+        );
+        while !trainer_stop.load(std::sync::atomic::Ordering::SeqCst) {
+            req(
+                &mut conn,
+                &mut reader,
+                &mut line,
+                r#"{"op":"step","model":"aux","rounds":1}"#,
+            );
+        }
+    });
+
+    // the loaded connection: a writer thread pumps all frames without
+    // waiting for responses (the two directions must not deadlock even
+    // with hundreds of frames in the socket buffers), the main thread
+    // drains responses in order
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(&[frame::MAGIC]).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut wconn = conn.try_clone().unwrap();
+    let wframes = frames.clone();
+    let writer = std::thread::spawn(move || {
+        for t in 0..IN_FLIGHT {
+            wconn.write_all(&wframes[t % DISTINCT]).unwrap();
+        }
+        wconn.flush().unwrap();
+    });
+    for t in 0..IN_FLIGHT {
+        let (h, body) = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(
+            h.get("ok").unwrap().as_bool(),
+            Some(true),
+            "frame {t}: {h:?}"
+        );
+        let (lbl, d2) = frame::decode_predict_body(&body).unwrap();
+        let (elbl, ed2) = &expected[t % DISTINCT];
+        assert_eq!(&lbl, elbl, "frame {t}: labels out of order or wrong");
+        assert_eq!(
+            &d2.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            ed2,
+            "frame {t}: d2 bits drifted under load"
+        );
+    }
+    writer.join().unwrap();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    trainer.join().unwrap();
+
+    // every pipelined frame is accounted for (other tests in this
+    // process may add to the counter; it can only overshoot)
+    let frames_after = serve_metrics().frames.get();
+    assert!(
+        frames_after >= frames_before + IN_FLIGHT as u64,
+        "frame counter lost frames: {frames_before} -> {frames_after}"
+    );
+
+    // a fresh JSONL connection shuts the server down cleanly
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    server.join().unwrap();
+}
