@@ -1,6 +1,6 @@
 //! Serve-layer throughput.
 //!
-//! Two trials land in `BENCH_serve.json`:
+//! Three trials land in `BENCH_serve.json`:
 //!
 //! * `predict_during_training` — predict QPS at 1 vs 4 concurrent TCP
 //!   connections **while the model trains**; the multi-connection
@@ -14,6 +14,10 @@
 //!   binary frames. Batching amortises per-request parse/dispatch, so
 //!   batch 64 should clear ≥2x the batch-1 QPS; the derived speedups
 //!   and per-query payload sizes at the full RCV1 shape land in `meta`.
+//! * `ingest_wal` — the same ingest stream with the WAL off, on with
+//!   `--fsync never`, and on with `--fsync always`; the overhead
+//!   ratios land in `meta` (`wal_append_overhead`,
+//!   `wal_fsync_always_overhead`) so the trend gate sees WAL cost.
 //!
 //! CI runs `--quick` (3 samples) so the medians are trend-gateable by
 //! `nmbkm bench-trend`, exactly like `BENCH_micro.json`.
@@ -27,6 +31,7 @@ use nmbkm::coordinator::Pool;
 use nmbkm::data::gaussian::GaussianMixture;
 use nmbkm::data::rcv1::Rcv1Sim;
 use nmbkm::data::{Data, Storage};
+use nmbkm::serve::wal::{self, FsyncPolicy};
 use nmbkm::serve::wire::{dense_points_json, sparse_points_json};
 use nmbkm::serve::{frame, session, ModelRegistry};
 use nmbkm::util::json::{self, Json};
@@ -47,6 +52,9 @@ struct Scale {
     wire_n_points: usize,
     wire_vocab: usize,
     wire_k: usize,
+    /// `ingest_wal`: ingest requests per measurement × points each.
+    ingest_batches: usize,
+    ingest_batch: usize,
 }
 
 fn scale_for(opts: &BenchOpts) -> Scale {
@@ -62,6 +70,8 @@ fn scale_for(opts: &BenchOpts) -> Scale {
             wire_n_points: 600,
             wire_vocab: 400,
             wire_k: 8,
+            ingest_batches: 12,
+            ingest_batch: 32,
         }
     } else if opts.samples <= BenchOpts::quick().samples {
         // CI quick: enough work for stable gateable medians, still
@@ -76,6 +86,8 @@ fn scale_for(opts: &BenchOpts) -> Scale {
             wire_n_points: 3000,
             wire_vocab: 1000,
             wire_k: 16,
+            ingest_batches: 40,
+            ingest_batch: 64,
         }
     } else {
         Scale {
@@ -88,6 +100,8 @@ fn scale_for(opts: &BenchOpts) -> Scale {
             wire_n_points: 8000,
             wire_vocab: 2000,
             wire_k: 32,
+            ingest_batches: 120,
+            ingest_batch: 128,
         }
     }
 }
@@ -485,7 +499,81 @@ fn main() {
     server.join().unwrap();
 
     report.push(set);
+
+    // ── WAL append overhead on the ingest path ────────────────────────
+    // the same dense ingest stream against no WAL, a WAL that never
+    // fsyncs (pure encode+write cost), and a WAL fsyncing every append
+    // (the durability ceiling); ratios land in meta for the trend gate
+    let wdata = GaussianMixture::default_spec(8, scale.dim)
+        .generate(scale.n_points.min(4000), 13);
+    let ingest_reqs = ingest_requests(&wdata, &scale);
+    report.meta("wal_ingest_batches", json::num(scale.ingest_batches as f64));
+    report.meta("wal_ingest_batch", json::num(scale.ingest_batch as f64));
+    let mut wset = BenchSet::new("ingest_wal", opts);
+    let tmp = std::env::temp_dir().join(format!("nmbkm-walbench-{}", std::process::id()));
+    for (name, policy) in [
+        ("wal_off", None),
+        ("wal_fsync_never", Some(FsyncPolicy::Never)),
+        ("wal_fsync_always", Some(FsyncPolicy::Always)),
+    ] {
+        let dir = tmp.join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().unwrap();
+        let served = session::OnlineSession::from_data(wdata.clone(), cfg(8))
+            .expect("session");
+        let reg = Arc::new(ModelRegistry::with_default(served));
+        if let Some(policy) = policy {
+            // u64::MAX checkpoint threshold: measure appends, not
+            // checkpoint snapshots
+            let rec = wal::recover(&dir, policy, u64::MAX, &reg).expect("wal init");
+            reg.attach_wal(rec.wal);
+        }
+        let sreg = reg.clone();
+        let server = std::thread::spawn(move || {
+            nmbkm::serve::server::serve_listener(sreg, listener).unwrap();
+        });
+        wset.bench(name, || drive_jsonl(addr, &ingest_reqs));
+        let (mut conn, mut reader) = connect(addr);
+        roundtrip(&mut conn, &mut reader, r#"{"op":"shutdown"}"#);
+        server.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let med = |n: &str| {
+        wset.get(n).map(|m| m.median_secs()).unwrap_or(f64::NAN)
+    };
+    let overhead = med("wal_fsync_never") / med("wal_off");
+    let overhead_always = med("wal_fsync_always") / med("wal_off");
+    report.meta("wal_append_overhead", json::num(overhead));
+    report.meta("wal_fsync_always_overhead", json::num(overhead_always));
+    println!(
+        "ingest WAL overhead: fsync-never {overhead:.3}x, fsync-always \
+         {overhead_always:.3}x vs no WAL"
+    );
+    report.push(wset);
+
     if let Some(path) = json_path {
         report.write(&path).expect("writing bench report");
     }
+}
+
+/// Prebuilt dense JSONL ingest requests (one per nested batch).
+fn ingest_requests(data: &Data, scale: &Scale) -> Vec<String> {
+    let mut out = Vec::with_capacity(scale.ingest_batches);
+    let mut row = vec![0f32; data.dim()];
+    for b in 0..scale.ingest_batches {
+        let mut batch = Vec::with_capacity(scale.ingest_batch);
+        for i in 0..scale.ingest_batch {
+            data.write_row_dense(
+                (b * scale.ingest_batch + i) % data.n(),
+                &mut row,
+            );
+            batch.push(row.clone());
+        }
+        out.push(format!(
+            "{{\"op\":\"ingest\",\"rounds\":1,\"points\":{}}}",
+            dense_points_json(&batch)
+        ));
+    }
+    out
 }

@@ -8,6 +8,9 @@
 //! nmbkm serve --snapshot model.json [--listen 127.0.0.1:7878] [--binary]
 //! nmbkm serve --models news=a.json,users=b.json --listen 127.0.0.1:7878 \
 //!             --metrics-addr 127.0.0.1:9100
+//! nmbkm serve --wal-dir wal/ --fsync interval:50 --listen 127.0.0.1:7878 --binary
+//! nmbkm serve --wal-dir fwal/ --follow 127.0.0.1:7878 --listen 127.0.0.1:7879 --binary
+//! nmbkm promote --addr 127.0.0.1:7879
 //! nmbkm predict --snapshot model.json [--points queries.jsonl]
 //! nmbkm bench-trend --baseline old.json --current new.json
 //! nmbkm metrics-scrape --addr 127.0.0.1:9100 [--path /metrics]
@@ -79,6 +82,11 @@ fn serve_spec() -> Vec<OptSpec> {
         OptSpec { name: "snapshot-dir", takes_value: true, default: None, help: "where wire-created models write protocol snapshots [cwd]" },
         OptSpec { name: "binary", takes_value: false, default: None, help: "accept length-prefixed binary frames (connections starting with magic byte 0xB7; JSONL clients unaffected)" },
         OptSpec { name: "metrics-addr", takes_value: true, default: None, help: "HTTP metrics endpoint, e.g. 127.0.0.1:9100 (GET /metrics = Prometheus exposition, /metrics.json = JSON report)" },
+        OptSpec { name: "wal-dir", takes_value: true, default: None, help: "durable op log directory: mutations are CRC-framed to disk and replayed bit-exactly on restart" },
+        OptSpec { name: "fsync", takes_value: true, default: Some("always"), help: "WAL durability: always | interval:<ms> (group commit) | never" },
+        OptSpec { name: "checkpoint-bytes", takes_value: true, default: None, help: "snapshot-checkpoint + truncate the log after this many appended bytes [64MiB]" },
+        OptSpec { name: "conn-timeout", takes_value: true, default: Some("60"), help: "per-connection socket read/write timeout in seconds, 0 = off" },
+        OptSpec { name: "follow", takes_value: true, default: None, help: "run as a read-only follower of this primary (host:port serving --binary); requires --wal-dir" },
     ]
 }
 
@@ -87,7 +95,18 @@ fn metrics_scrape_spec() -> Vec<OptSpec> {
         OptSpec { name: "addr", takes_value: true, default: None, help: "metrics endpoint address, e.g. 127.0.0.1:9100 (required)" },
         OptSpec { name: "path", takes_value: true, default: Some("/metrics"), help: "path to fetch" },
         OptSpec { name: "print", takes_value: false, default: None, help: "echo the body after validating" },
+        OptSpec { name: "retries", takes_value: true, default: Some("1"), help: "total attempts before giving up (covers server startup races)" },
+        OptSpec { name: "backoff-ms", takes_value: true, default: Some("200"), help: "sleep between attempts" },
     ]
+}
+
+fn promote_spec() -> Vec<OptSpec> {
+    vec![OptSpec {
+        name: "addr",
+        takes_value: true,
+        default: None,
+        help: "the follower's JSONL TCP address, e.g. 127.0.0.1:7879 (required)",
+    }]
 }
 
 fn bench_trend_spec() -> Vec<OptSpec> {
@@ -297,6 +316,62 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
              bootstrap models over the wire with the 'create' op"
         );
     }
+    // --wal-dir: recover state from the last checkpoint + log tail
+    // FIRST (replay never re-logs), then attach the WAL so subsequent
+    // mutations append. Recovery overrides CLI preloads of the same
+    // name — the checkpointed state is authoritative.
+    if let Some(dir) = args.get("wal-dir") {
+        let policy = nmbkm::serve::wal::FsyncPolicy::parse(
+            args.get("fsync").unwrap_or("always"),
+        )?;
+        let ckpt = match args.get("checkpoint-bytes") {
+            Some(_) => args.get_u64("checkpoint-bytes")?,
+            None => nmbkm::serve::wal::DEFAULT_CHECKPOINT_BYTES,
+        };
+        let rec = nmbkm::serve::wal::recover(
+            std::path::Path::new(dir),
+            policy,
+            ckpt,
+            &registry,
+        )?;
+        eprintln!(
+            "[nmbkm::serve] wal recovered from {dir}: {} model(s) from \
+             checkpoints, {} record(s) replayed, {} skipped, {} torn \
+             byte(s) truncated (epoch {}, next seq {})",
+            rec.resumed_models,
+            rec.replayed,
+            rec.skipped,
+            rec.truncated_bytes,
+            rec.wal.epoch(),
+            rec.wal.next_seq(),
+        );
+        registry.attach_wal(rec.wal);
+    }
+    // --follow: read-only mirror tailing a primary's log
+    let follower_stop = match args.get("follow") {
+        Some(primary) => {
+            anyhow::ensure!(
+                args.get("wal-dir").is_some(),
+                "--follow requires --wal-dir (the follower mirrors the \
+                 primary's log to its own)"
+            );
+            registry.set_follower(true);
+            eprintln!(
+                "[nmbkm::serve] follower mode: tailing {primary} \
+                 (read-only until 'promote')"
+            );
+            let stop = std::sync::Arc::new(
+                std::sync::atomic::AtomicBool::new(false),
+            );
+            nmbkm::serve::replica::spawn_follower(
+                registry.clone(),
+                primary.to_string(),
+                stop.clone(),
+            );
+            Some(stop)
+        }
+        None => None,
+    };
     // --metrics-addr: sidecar HTTP endpoint over the same registry the
     // protocol's `metrics` op reads; works for TCP and stdio serving
     if let Some(maddr) = args.get("metrics-addr") {
@@ -324,11 +399,54 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         // detached: the scrape loop dies with the process
         let _ = nmbkm::obs::http::spawn_metrics_server(listener, render);
     }
-    let binary = args.flag("binary");
-    match args.get("listen") {
-        Some(addr) => nmbkm::serve::server::serve_tcp(registry, addr, binary),
-        None => nmbkm::serve::server::serve_stdio(&registry, binary),
+    let timeout_secs = args.get_u64("conn-timeout")?;
+    let opts = nmbkm::serve::server::ServeOptions {
+        accept_binary: args.flag("binary"),
+        conn_timeout: (timeout_secs > 0)
+            .then(|| std::time::Duration::from_secs(timeout_secs)),
+    };
+    let out = match args.get("listen") {
+        Some(addr) => {
+            nmbkm::serve::server::serve_tcp(registry.clone(), addr, opts)
+        }
+        None => nmbkm::serve::server::serve_stdio(&registry, opts.accept_binary),
+    };
+    if let Some(stop) = follower_stop {
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
     }
+    out
+}
+
+/// Tell a follower to become the primary: one JSONL `promote` round
+/// trip. The follower bumps its epoch (fencing any log appends still
+/// arriving from the old primary) and starts accepting mutations.
+fn cmd_promote(raw: &[String]) -> anyhow::Result<()> {
+    let spec = promote_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("promote needs --addr HOST:PORT"))?;
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(10)))?;
+    use std::io::{BufRead, BufReader, Write};
+    writeln!(stream, "{{\"op\":\"promote\"}}")?;
+    stream.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    let v = Json::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("unparseable response '{line}': {e}"))?;
+    anyhow::ensure!(
+        v.get("ok").and_then(Json::as_bool) == Some(true),
+        "promote failed: {}",
+        v.get("error").and_then(Json::as_str).unwrap_or("unknown error")
+    );
+    println!(
+        "promoted: {addr} is now a primary at epoch 0x{}",
+        v.get("epoch").and_then(Json::as_str).unwrap_or("?")
+    );
+    Ok(())
 }
 
 /// Fetch a metrics endpoint, validate the Prometheus exposition format,
@@ -342,24 +460,53 @@ fn cmd_metrics_scrape(raw: &[String]) -> anyhow::Result<()> {
         .get("addr")
         .ok_or_else(|| anyhow::anyhow!("metrics-scrape needs --addr HOST:PORT"))?;
     let path = args.get("path").unwrap_or("/metrics");
-    let (status, body) = nmbkm::obs::http::http_get(addr, path)?;
-    anyhow::ensure!(status == 200, "GET {addr}{path} returned HTTP {status}");
-    if path.ends_with(".json") {
-        let doc = Json::parse(&body)
-            .map_err(|e| anyhow::anyhow!("invalid JSON body: {e}"))?;
-        let n = doc
-            .get("metrics")
-            .and_then(Json::as_arr)
-            .map(|a| a.len())
-            .ok_or_else(|| anyhow::anyhow!("body has no 'metrics' array"))?;
-        println!("metrics-scrape OK: {addr}{path} — {n} metrics (JSON schema)");
-    } else {
-        let summary = nmbkm::obs::export::validate_exposition(&body)
-            .map_err(|e| anyhow::anyhow!("invalid Prometheus exposition: {e}"))?;
-        println!(
-            "metrics-scrape OK: {addr}{path} — {} families, {} series",
-            summary.families, summary.series
-        );
+    let attempts = args.get_usize("retries")?.max(1);
+    let backoff = std::time::Duration::from_millis(args.get_u64("backoff-ms")?);
+    let scrape = || -> anyhow::Result<String> {
+        let (status, body) = nmbkm::obs::http::http_get(addr, path)?;
+        anyhow::ensure!(status == 200, "GET {addr}{path} returned HTTP {status}");
+        if path.ends_with(".json") {
+            let doc = Json::parse(&body)
+                .map_err(|e| anyhow::anyhow!("invalid JSON body: {e}"))?;
+            let n = doc
+                .get("metrics")
+                .and_then(Json::as_arr)
+                .map(|a| a.len())
+                .ok_or_else(|| anyhow::anyhow!("body has no 'metrics' array"))?;
+            println!(
+                "metrics-scrape OK: {addr}{path} — {n} metrics (JSON schema)"
+            );
+        } else {
+            let summary = nmbkm::obs::export::validate_exposition(&body)
+                .map_err(|e| {
+                    anyhow::anyhow!("invalid Prometheus exposition: {e}")
+                })?;
+            println!(
+                "metrics-scrape OK: {addr}{path} — {} families, {} series",
+                summary.families, summary.series
+            );
+        }
+        Ok(body)
+    };
+    // retry connection-level failures: CI starts the server and scrapes
+    // in the same breath, and the bind may not be up yet
+    let mut body = String::new();
+    for attempt in 1..=attempts {
+        match scrape() {
+            Ok(b) => {
+                body = b;
+                break;
+            }
+            Err(e) if attempt < attempts => {
+                eprintln!(
+                    "[metrics-scrape] attempt {attempt}/{attempts}: {e:#} — \
+                     retrying in {}ms",
+                    backoff.as_millis()
+                );
+                std::thread::sleep(backoff);
+            }
+            Err(e) => return Err(e),
+        }
     }
     if args.flag("print") {
         print!("{body}");
@@ -608,6 +755,7 @@ fn main() {
         "run" => cmd_run(&rest),
         "train" => cmd_train(&rest),
         "serve" => cmd_serve(&rest),
+        "promote" => cmd_promote(&rest),
         "predict" => cmd_predict(&rest),
         "experiment" => cmd_experiment(&rest),
         "bench-trend" => cmd_bench_trend(&rest),
@@ -615,8 +763,8 @@ fn main() {
         "info" => cmd_info(&rest),
         _ => {
             println!(
-                "nmbkm <run|train|serve|predict|experiment|bench-trend|\
-                 metrics-scrape|info>\n"
+                "nmbkm <run|train|serve|promote|predict|experiment|\
+                 bench-trend|metrics-scrape|info>\n"
             );
             println!("{}", usage("nmbkm run", "run one clustering job", &run_spec()));
             println!(
@@ -632,9 +780,20 @@ fn main() {
                      stats|snapshot|shutdown); points may be dense \
                      arrays or sparse {indices,values,dim} rows; TCP \
                      handles concurrent connections with \
-                     snapshot-isolated batched predicts, and --binary \
-                     adds length-prefixed raw-f32 framing",
+                     snapshot-isolated batched predicts, --binary \
+                     adds length-prefixed raw-f32 framing, --wal-dir \
+                     adds a durable op log with bit-exact crash \
+                     recovery, and --follow mirrors a primary",
                     &serve_spec()
+                )
+            );
+            println!(
+                "{}",
+                usage(
+                    "nmbkm promote",
+                    "make a follower the primary (bumps the replication \
+                     epoch, fencing the old primary's log)",
+                    &promote_spec()
                 )
             );
             println!(

@@ -48,6 +48,7 @@ use crate::obs;
 use crate::serve::observe::serve_metrics;
 use crate::serve::protocol::{self, Request};
 use crate::serve::registry::ModelRegistry;
+use crate::serve::wal;
 use crate::serve::wire::{self, WireRow};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
@@ -391,11 +392,97 @@ fn handle_frame(
             timer.observe(&sm.request_seconds);
             out
         }
+        // the replication ops ship binary bodies (raw log records, a
+        // snapshot stream), so like predict they bypass the JSONL
+        // executor — which `ok:false`s them on text connections
+        Request::WalFetch { from, max } => {
+            sm.op_counter("wal-fetch").inc();
+            let timer = obs::Timer::start();
+            let out = result_frame(wal_fetch_frame(registry, *from, *max));
+            timer.observe(&sm.request_seconds);
+            out
+        }
+        Request::SyncSnapshot { model } => {
+            sm.op_counter("sync-snapshot").inc();
+            let timer = obs::Timer::start();
+            let out =
+                result_frame(sync_snapshot_frame(registry, model.as_deref()));
+            timer.observe(&sm.request_seconds);
+            out
+        }
         _ => {
             let (resp, quit) = protocol::handle_request(registry, &req);
             (resp, vec![], quit)
         }
     }
+}
+
+fn result_frame(r: Result<(Json, Vec<u8>)>) -> (Json, Vec<u8>, bool) {
+    match r {
+        Ok((h, b)) => (h, b, false),
+        Err(e) => (protocol::err_json(&e), vec![], false),
+    }
+}
+
+/// `wal-fetch`: the raw on-disk bytes of records `[from, …)`, capped
+/// near `max`, with cursor/epoch bookkeeping in the header. `reset:true`
+/// tells the follower its cursor predates the oldest retained segment —
+/// it must re-bootstrap from `sync-snapshot`.
+fn wal_fetch_frame(
+    registry: &ModelRegistry,
+    from: u64,
+    max: usize,
+) -> Result<(Json, Vec<u8>)> {
+    let w = registry.wal().ok_or_else(|| {
+        anyhow!("no wal attached — start the server with --wal-dir")
+    })?;
+    let f = w.fetch(from, max.min(MAX_BODY_BYTES))?;
+    let h = json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", json::s("wal-fetch")),
+        ("epoch", wal::u64_json(f.epoch)),
+        ("from", wal::u64_json(f.from)),
+        ("next", wal::u64_json(f.next)),
+        // the log's true head, beyond this batch — the follower's lag
+        // gauge is `head - local next`
+        ("head", wal::u64_json(w.next_seq())),
+        ("count", json::num(f.count as f64)),
+        ("reset", Json::Bool(f.reset)),
+    ]);
+    Ok((h, f.bytes))
+}
+
+/// `sync-snapshot`: one model's full snapshot (data included) as the
+/// frame body, with the last WAL seq it covers — read under the same
+/// session lock that streams the bytes, so state and seq can never be
+/// torn apart by a concurrent ingest.
+fn sync_snapshot_frame(
+    registry: &ModelRegistry,
+    model: Option<&str>,
+) -> Result<(Json, Vec<u8>)> {
+    let w = registry.wal().ok_or_else(|| {
+        anyhow!("no wal attached — start the server with --wal-dir")
+    })?;
+    let entry = registry.resolve(model)?;
+    let (seq, bytes) = entry.with_session(|s| {
+        let seq = entry.last_seq();
+        let mut buf = Vec::new();
+        s.write_snapshot(true, &mut buf)?;
+        Ok((seq, buf))
+    })?;
+    ensure!(
+        bytes.len() <= MAX_BODY_BYTES,
+        "snapshot of {} bytes exceeds the frame body cap",
+        bytes.len()
+    );
+    let h = json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", json::s("sync-snapshot")),
+        ("model", json::s(entry.name())),
+        ("seq", wal::u64_json(seq)),
+        ("epoch", wal::u64_json(w.epoch())),
+    ]);
+    Ok((h, bytes))
 }
 
 struct ByteReader<'a> {

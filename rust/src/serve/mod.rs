@@ -16,6 +16,8 @@
 //! | [`frame`]    | opt-in length-prefixed binary frames (raw-f32 predict hot path) |
 //! | [`server`]   | transports: stdio pipes and thread-per-connection TCP, per-connection format negotiation |
 //! | [`observe`]  | serve-layer metrics: per-model counters/histograms, merged scrape snapshot |
+//! | [`wal`]      | durable CRC-framed op log, checkpoints, bit-exact crash recovery |
+//! | [`replica`]  | follower mode: bootstrap from snapshots, tail the primary's log, promote with an epoch fence |
 //!
 //! The load-bearing invariant throughout is the paper's §3.1
 //! each-point-counts-exactly-once property: ingested points append
@@ -31,9 +33,11 @@ pub mod frame;
 pub mod observe;
 pub mod protocol;
 pub mod registry;
+pub mod replica;
 pub mod server;
 pub mod session;
 pub mod snapshot;
+pub mod wal;
 pub mod wire;
 
 pub use registry::{ModelRegistry, PublishedModel};

@@ -28,6 +28,9 @@ pub struct ServeMetrics {
     pub frame_bytes_written: Arc<Counter>,
     pub jsonl_bytes_read: Arc<Counter>,
     pub jsonl_bytes_written: Arc<Counter>,
+    /// Connections closed because a read/write exceeded
+    /// `--conn-timeout` (slowloris / stalled-peer defence).
+    pub conn_timeouts: Arc<Counter>,
     op_create: Arc<Counter>,
     op_list: Arc<Counter>,
     op_drop: Arc<Counter>,
@@ -37,6 +40,10 @@ pub struct ServeMetrics {
     op_stats: Arc<Counter>,
     op_snapshot: Arc<Counter>,
     op_metrics: Arc<Counter>,
+    op_sync_info: Arc<Counter>,
+    op_wal_fetch: Arc<Counter>,
+    op_sync_snapshot: Arc<Counter>,
+    op_promote: Arc<Counter>,
     op_shutdown: Arc<Counter>,
     op_invalid: Arc<Counter>,
 }
@@ -59,6 +66,7 @@ impl ServeMetrics {
                 .counter("nmbkm_bytes_read_total", &[("transport", "jsonl")]),
             jsonl_bytes_written: reg
                 .counter("nmbkm_bytes_written_total", &[("transport", "jsonl")]),
+            conn_timeouts: reg.counter("nmbkm_connection_timeouts_total", &[]),
             op_create: opc("create"),
             op_list: opc("list"),
             op_drop: opc("drop"),
@@ -68,6 +76,10 @@ impl ServeMetrics {
             op_stats: opc("stats"),
             op_snapshot: opc("snapshot"),
             op_metrics: opc("metrics"),
+            op_sync_info: opc("sync-info"),
+            op_wal_fetch: opc("wal-fetch"),
+            op_sync_snapshot: opc("sync-snapshot"),
+            op_promote: opc("promote"),
             op_shutdown: opc("shutdown"),
             op_invalid: opc("invalid"),
         }
@@ -86,6 +98,10 @@ impl ServeMetrics {
             "stats" => &self.op_stats,
             "snapshot" => &self.op_snapshot,
             "metrics" => &self.op_metrics,
+            "sync-info" => &self.op_sync_info,
+            "wal-fetch" => &self.op_wal_fetch,
+            "sync-snapshot" => &self.op_sync_snapshot,
+            "promote" => &self.op_promote,
             "shutdown" => &self.op_shutdown,
             _ => &self.op_invalid,
         }
@@ -110,6 +126,10 @@ pub fn op_name(req: &Request) -> &'static str {
         Request::Stats { .. } => "stats",
         Request::Snapshot { .. } => "snapshot",
         Request::Metrics => "metrics",
+        Request::SyncInfo => "sync-info",
+        Request::WalFetch { .. } => "wal-fetch",
+        Request::SyncSnapshot { .. } => "sync-snapshot",
+        Request::Promote => "promote",
         Request::Shutdown => "shutdown",
     }
 }

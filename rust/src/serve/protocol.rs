@@ -54,6 +54,7 @@ use crate::config::{Algo, Rho, RunConfig};
 use crate::obs;
 use crate::serve::observe;
 use crate::serve::registry::ModelRegistry;
+use crate::serve::wal;
 use crate::serve::wire::{self, WireRow};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
@@ -90,6 +91,18 @@ pub enum Request {
     /// Persist the model (and, unless `include_data` is false, the
     /// buffer) to a snapshot file on the server's filesystem.
     Snapshot { model: Option<String>, path: String, include_data: bool },
+    /// Replication handshake: WAL epoch, next/oldest retained seq, and
+    /// each model's last applied seq (requires `--wal-dir`).
+    SyncInfo,
+    /// Raw WAL records from `from` onward (binary framing only — the
+    /// response body is the on-disk record bytes).
+    WalFetch { from: u64, max: usize },
+    /// Stream one model's full snapshot with its last applied seq, for
+    /// follower bootstrap (binary framing only).
+    SyncSnapshot { model: Option<String> },
+    /// Promote a follower: bump the WAL epoch (fencing the old primary)
+    /// and start accepting mutations.
+    Promote,
     /// Stop serving (closes every connection; the TCP server exits its
     /// accept loop).
     Shutdown,
@@ -188,10 +201,26 @@ pub fn request_from_json(
                 .and_then(Json::as_bool)
                 .unwrap_or(true),
         },
+        "sync-info" => Request::SyncInfo,
+        "wal-fetch" => Request::WalFetch {
+            from: wal::u64_field(v, "from")
+                .map_err(|e| anyhow!("wal-fetch: {e:#}"))?,
+            max: match v.get("max") {
+                None => wal::DEFAULT_FETCH_BYTES,
+                Some(x) => x
+                    .as_f64()
+                    .filter(|m| *m >= 1.0 && m.fract() == 0.0)
+                    .map(|m| (m as usize).min(wal::MAX_FETCH_BYTES))
+                    .ok_or_else(|| anyhow!("'max' must be a positive integer"))?,
+            },
+        },
+        "sync-snapshot" => Request::SyncSnapshot { model: model()? },
+        "promote" => Request::Promote,
         "shutdown" | "quit" => Request::Shutdown,
         other => bail!(
             "unknown op '{other}' (create|list|drop|ingest|predict|step|\
-             stats|snapshot|metrics|shutdown)"
+             stats|snapshot|metrics|sync-info|wal-fetch|sync-snapshot|\
+             promote|shutdown)"
         ),
     })
 }
@@ -284,6 +313,22 @@ pub fn handle_request(registry: &ModelRegistry, req: &Request) -> (Json, bool) {
         Err(e) => (err_json(&e), false),
     };
     timer.observe(&m.request_seconds);
+    // mutations may have grown the log past the checkpoint threshold;
+    // the checkpoint runs here, outside every session lock, and a
+    // failure never poisons the response (the log alone still recovers)
+    if matches!(
+        req,
+        Request::Create { .. }
+            | Request::Ingest { .. }
+            | Request::Step { .. }
+            | Request::Drop { .. }
+    ) {
+        if let Some(w) = registry.wal() {
+            if let Err(e) = w.maybe_checkpoint(registry) {
+                eprintln!("[nmbkm::wal] checkpoint failed: {e:#}");
+            }
+        }
+    }
     out
 }
 
@@ -295,6 +340,22 @@ pub(crate) fn err_json(e: &anyhow::Error) -> Json {
 }
 
 fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
+    // a follower's state is a bit-exact mirror of its primary's log —
+    // local mutations would fork it, so they are refused outright
+    if registry.is_follower()
+        && matches!(
+            req,
+            Request::Create { .. }
+                | Request::Ingest { .. }
+                | Request::Step { .. }
+                | Request::Drop { .. }
+        )
+    {
+        bail!(
+            "read-only follower — this node tails a primary's log \
+             (send 'promote' to make it writable)"
+        );
+    }
     Ok(match req {
         Request::Create { model, dim, cfg } => {
             let name = model.as_deref().unwrap_or(crate::serve::registry::DEFAULT_MODEL);
@@ -328,10 +389,32 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
         }
         Request::Ingest { model, points, rounds, seconds } => {
             let entry = registry.resolve(model.as_deref())?;
+            let w = registry.wal();
             let timer = obs::Timer::start();
             let (n, rep, initialised) = entry.with_session_mut(|s| {
+                let was_init = s.initialised();
                 let n = s.ingest_wire(points)?;
                 let rep = s.step(*rounds, *seconds)?;
+                // logged inside the session lock with the *actual*
+                // effect (rounds really run), so log order is mutation
+                // order and a time-budgeted call replays exactly;
+                // pure no-ops (nothing added, nothing ran, no init
+                // flip) stay out of the log
+                if let Some(w) = &w {
+                    if !points.is_empty()
+                        || rep.rounds_run > 0
+                        || s.initialised() != was_init
+                    {
+                        let header = json::obj(vec![
+                            ("op", json::s("ingest")),
+                            ("model", json::s(entry.name())),
+                            ("rounds", json::num(rep.rounds_run as f64)),
+                        ]);
+                        let seq =
+                            w.append(&header, &wire::encode_rows(points))?;
+                        entry.set_last_seq(seq);
+                    }
+                }
                 Ok((n, rep, s.initialised()))
             })?;
             let mm = entry.metrics();
@@ -375,9 +458,24 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
         }
         Request::Step { model, rounds, seconds } => {
             let entry = registry.resolve(model.as_deref())?;
+            let w = registry.wal();
             let timer = obs::Timer::start();
-            let rep =
-                entry.with_session_mut(|s| s.step(*rounds, *seconds))?;
+            let rep = entry.with_session_mut(|s| {
+                let was_init = s.initialised();
+                let rep = s.step(*rounds, *seconds)?;
+                if let Some(w) = &w {
+                    if rep.rounds_run > 0 || s.initialised() != was_init {
+                        let header = json::obj(vec![
+                            ("op", json::s("step")),
+                            ("model", json::s(entry.name())),
+                            ("rounds", json::num(rep.rounds_run as f64)),
+                        ]);
+                        let seq = w.append(&header, &[])?;
+                        entry.set_last_seq(seq);
+                    }
+                }
+                Ok(rep)
+            })?;
             let mm = entry.metrics();
             mm.step_requests.inc();
             mm.step_rounds.add(rep.rounds_run as u64);
@@ -446,6 +544,50 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
                 m.insert("op".to_string(), json::s("metrics"));
             }
             resp
+        }
+        Request::SyncInfo => {
+            let w = registry.wal().ok_or_else(|| {
+                anyhow!("no wal attached — start the server with --wal-dir")
+            })?;
+            json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("sync-info")),
+                ("epoch", wal::u64_json(w.epoch())),
+                ("next", wal::u64_json(w.next_seq())),
+                ("oldest", wal::u64_json(w.oldest_retained()?)),
+                ("follower", Json::Bool(registry.is_follower())),
+                ("models", registry.sync_rows()),
+            ])
+        }
+        // these two ship binary bodies (raw log records / a snapshot
+        // stream); serve::frame intercepts them before this point
+        Request::WalFetch { .. } => bail!(
+            "wal-fetch requires the binary framing (serve --binary)"
+        ),
+        Request::SyncSnapshot { .. } => bail!(
+            "sync-snapshot requires the binary framing (serve --binary)"
+        ),
+        Request::Promote => {
+            ensure!(
+                registry.is_follower(),
+                "already primary — nothing to promote"
+            );
+            let w = registry.wal().ok_or_else(|| {
+                anyhow!("no wal attached — start the server with --wal-dir")
+            })?;
+            // epoch first, then writability: by the time a mutation can
+            // land here, stale-primary batches are already fenced out
+            let epoch = w.bump_epoch()?;
+            registry.set_follower(false);
+            obs::log::event(
+                "promote",
+                &[("epoch", wal::u64_json(epoch))],
+            );
+            json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("promote")),
+                ("epoch", wal::u64_json(epoch)),
+            ])
         }
         Request::Shutdown => json::obj(vec![
             ("ok", Json::Bool(true)),

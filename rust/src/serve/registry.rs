@@ -31,11 +31,13 @@ use crate::linalg::sparse::TransposedCentroids;
 use crate::obs::{self, log as obslog};
 use crate::serve::observe::ModelMetrics;
 use crate::serve::session::{self, OnlineSession};
+use crate::serve::wal::{u64_json, Wal};
 use crate::serve::wire::WireRow;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 /// The model name requests route to when they carry no `model` field —
@@ -159,6 +161,10 @@ pub struct ModelEntry {
     /// so metric scrapes read its counters lock-free — never through
     /// the session mutex a training step may hold for seconds.
     session_cache: Option<Arc<TransCache>>,
+    /// Highest WAL sequence number applied to this model (0 = none).
+    /// Checkpoints persist it next to the snapshot; recovery and the
+    /// follower use it to skip records a snapshot already covers.
+    last_seq: AtomicU64,
 }
 
 impl ModelEntry {
@@ -174,7 +180,17 @@ impl ModelEntry {
             pool,
             metrics: ModelMetrics::for_model(name),
             session_cache,
+            last_seq: AtomicU64::new(0),
         })
+    }
+
+    /// Highest WAL seq folded into this model's state (0 = none).
+    pub fn last_seq(&self) -> u64 {
+        self.last_seq.load(Ordering::SeqCst)
+    }
+
+    pub fn set_last_seq(&self, seq: u64) {
+        self.last_seq.store(seq, Ordering::SeqCst);
     }
 
     /// This model's metric handles.
@@ -337,6 +353,16 @@ pub struct ModelRegistry {
     /// Where protocol `snapshot` ops of wire-created models may write
     /// (models loaded from a snapshot file keep that file's directory).
     snapshot_dir: Mutex<PathBuf>,
+    /// Attached write-ahead log: when present, every successful
+    /// create/ingest/step/drop is appended (create/drop here, under the
+    /// same write lock that makes them visible; ingest/step by the
+    /// protocol layer inside the session closure). Attached *after*
+    /// recovery replay so replay never re-logs.
+    wal: RwLock<Option<Arc<Wal>>>,
+    /// Follower mode: the protocol layer rejects mutations (this node's
+    /// state is a bit-exact mirror of a primary's log) until promotion
+    /// flips it back.
+    follower: AtomicBool,
 }
 
 impl Default for ModelRegistry {
@@ -352,7 +378,30 @@ impl ModelRegistry {
         ModelRegistry {
             models: RwLock::new(BTreeMap::new()),
             snapshot_dir: Mutex::new(PathBuf::from(".")),
+            wal: RwLock::new(None),
+            follower: AtomicBool::new(false),
         }
+    }
+
+    /// Attach the durable op log. Call after [`crate::serve::wal::recover`]
+    /// has finished replaying — everything logged from here on is new.
+    pub fn attach_wal(&self, wal: Arc<Wal>) {
+        *self.wal.write().unwrap() = Some(wal);
+    }
+
+    /// The attached log, if any (cheap `Arc` clone).
+    pub fn wal(&self) -> Option<Arc<Wal>> {
+        self.wal.read().unwrap().clone()
+    }
+
+    /// Whether this node is a read-only follower tailing a primary.
+    pub fn is_follower(&self) -> bool {
+        self.follower.load(Ordering::SeqCst)
+    }
+
+    /// Flip follower mode (promotion clears it).
+    pub fn set_follower(&self, on: bool) {
+        self.follower.store(on, Ordering::SeqCst);
     }
 
     /// A registry hosting `session` as the implicit [`DEFAULT_MODEL`] —
@@ -369,8 +418,25 @@ impl ModelRegistry {
         *self.snapshot_dir.lock().unwrap() = dir;
     }
 
-    /// Register an existing session under `name`.
+    /// Directory `create`d models write their protocol snapshots into
+    /// (WAL replay builds its sessions with the same setting).
+    pub fn snapshot_dir(&self) -> PathBuf {
+        self.snapshot_dir.lock().unwrap().clone()
+    }
+
+    /// Register an existing session under `name` **without** logging a
+    /// create record — the path for preloaded snapshots, WAL replay and
+    /// follower bootstrap, whose history is already durable elsewhere.
     pub fn insert(&self, name: &str, session: OnlineSession) -> Result<Arc<ModelEntry>> {
+        self.insert_inner(name, session, None)
+    }
+
+    fn insert_inner(
+        &self,
+        name: &str,
+        session: OnlineSession,
+        log_create: Option<(&RunConfig, usize)>,
+    ) -> Result<Arc<ModelEntry>> {
         validate_name(name)?;
         let entry = ModelEntry::new(name, session);
         let mut models = self.models.write().unwrap();
@@ -382,13 +448,33 @@ impl ModelRegistry {
             models.len() < MAX_MODELS,
             "registry is full ({MAX_MODELS} models) — drop one first"
         );
+        // the create record is appended *before* the insert makes the
+        // model visible, under the same write lock: a concurrent ingest
+        // can only resolve the model (and log against it) after its
+        // create is in the log, so replay never sees an orphan ingest.
+        // The logged config is the session's exact bit-level config —
+        // wire-form defaults (e.g. thread clamping to the host) were
+        // already resolved, so replay on any host rebuilds it verbatim.
+        if let Some((cfg, dim)) = log_create {
+            if let Some(wal) = self.wal() {
+                let header = json::obj(vec![
+                    ("op", json::s("create")),
+                    ("model", json::s(name)),
+                    ("dim", json::num(dim as f64)),
+                    ("config", cfg.to_json()),
+                ]);
+                let seq = wal.append(&header, &[])?;
+                entry.set_last_seq(seq);
+            }
+        }
         models.insert(name.to_string(), entry.clone());
         obslog::event("model_register", &[("model", json::s(name))]);
         Ok(entry)
     }
 
-    /// Create a fresh empty session (the protocol `create` op). The
-    /// model initialises once `cfg.k` points have been ingested.
+    /// Create a fresh empty session (the protocol `create` op), logging
+    /// it to the WAL when one is attached. The model initialises once
+    /// `cfg.k` points have been ingested.
     pub fn create(
         &self,
         name: &str,
@@ -396,9 +482,9 @@ impl ModelRegistry {
         dim: usize,
     ) -> Result<Arc<ModelEntry>> {
         validate_name(name)?;
-        let mut session = OnlineSession::new(cfg, dim)?;
-        session.set_snapshot_dir(self.snapshot_dir.lock().unwrap().clone());
-        self.insert(name, session)
+        let mut session = OnlineSession::new(cfg.clone(), dim)?;
+        session.set_snapshot_dir(self.snapshot_dir());
+        self.insert_inner(name, session, Some((&cfg, dim)))
     }
 
     /// Look up a model; `None` routes to [`DEFAULT_MODEL`].
@@ -414,16 +500,56 @@ impl ModelRegistry {
         })
     }
 
-    /// Remove a model. Its sessions' in-flight operations finish on
-    /// their own `Arc`; the name is immediately reusable.
+    /// Remove a model (logging a drop record when a WAL is attached).
+    /// Its sessions' in-flight operations finish on their own `Arc`;
+    /// the name is immediately reusable.
     pub fn drop_model(&self, name: &str) -> Result<()> {
+        self.drop_model_inner(name, true)
+    }
+
+    /// [`ModelRegistry::drop_model`] without logging — replay and
+    /// follower apply, where the drop is already in the log.
+    pub fn drop_model_unlogged(&self, name: &str) -> Result<()> {
+        self.drop_model_inner(name, false)
+    }
+
+    fn drop_model_inner(&self, name: &str, log: bool) -> Result<()> {
         let mut models = self.models.write().unwrap();
         ensure!(
-            models.remove(name).is_some(),
+            models.contains_key(name),
             "unknown model '{name}': nothing to drop"
         );
+        // logged before the removal becomes visible, under the write
+        // lock — mirror of the create ordering, so the log's op order
+        // is exactly the order effects became visible
+        if log {
+            if let Some(wal) = self.wal() {
+                let header = json::obj(vec![
+                    ("op", json::s("drop")),
+                    ("model", json::s(name)),
+                ]);
+                wal.append(&header, &[])?;
+            }
+        }
+        models.remove(name);
         obslog::event("model_drop", &[("model", json::s(name))]);
         Ok(())
+    }
+
+    /// One `sync-info` row per model: name + last applied WAL seq (the
+    /// follower's bootstrap cursor is the minimum of these).
+    pub fn sync_rows(&self) -> Json {
+        Json::Arr(
+            self.entries()
+                .iter()
+                .map(|e| {
+                    json::obj(vec![
+                        ("name", json::s(e.name())),
+                        ("seq", u64_json(e.last_seq())),
+                    ])
+                })
+                .collect(),
+        )
     }
 
     /// Every registered entry, name-ordered (metric scrapes poll the

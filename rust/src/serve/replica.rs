@@ -1,0 +1,363 @@
+//! Follower mode: a read-only mirror that tails a primary's WAL over
+//! the binary-framed protocol and stays **bit-identical** to it.
+//!
+//! The follower bootstraps by shipping every model's snapshot (with the
+//! last log seq each covers), resets its local log to the primary's
+//! cursor and epoch, and then polls `wal-fetch` — appending the
+//! primary's raw record bytes to its own log verbatim and replaying
+//! them through the same [`wal::apply_record`] path crash recovery
+//! uses. Determinism does the rest: identical bytes in, identical
+//! session state out, so the follower's predicts and snapshots match
+//! the primary's bit for bit (test-enforced).
+//!
+//! Failure handling:
+//! * Disconnects and transport errors reconnect with exponential
+//!   backoff (100 ms doubling to 5 s).
+//! * A `reset:true` fetch answer (our cursor predates the primary's
+//!   oldest retained segment — it checkpointed past us) triggers a
+//!   fresh bootstrap.
+//! * `promote` (the JSONL op, or `nmbkm promote`) bumps the local
+//!   epoch and clears follower mode; the tail loop exits on its next
+//!   iteration, and the epoch fence in [`Wal::append_raw`] rejects any
+//!   batch still arriving from the stale primary's lower epoch.
+
+use crate::obs;
+use crate::serve::frame;
+use crate::serve::registry::ModelRegistry;
+use crate::serve::session::OnlineSession;
+use crate::serve::snapshot::Snapshot;
+use crate::serve::wal::{self, u64_field, u64_json, Wal};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Poll interval while the primary has nothing new.
+const POLL: Duration = Duration::from_millis(200);
+/// Reconnect backoff bounds.
+const BACKOFF_MIN: Duration = Duration::from_millis(100);
+const BACKOFF_MAX: Duration = Duration::from_secs(5);
+/// Per-call socket timeouts: a wedged primary must not pin the tail
+/// thread forever (the loop reconnects instead).
+const CALL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A blocking request/response client for the binary framing: magic
+/// byte on connect, then one frame out / one frame in per call.
+pub struct FrameClient {
+    stream: TcpStream,
+}
+
+impl FrameClient {
+    pub fn connect(addr: &str) -> Result<FrameClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to primary {addr}"))?;
+        stream.set_read_timeout(Some(CALL_TIMEOUT))?;
+        stream.set_write_timeout(Some(CALL_TIMEOUT))?;
+        stream.set_nodelay(true).ok();
+        let mut c = FrameClient { stream };
+        use std::io::Write;
+        c.stream.write_all(&[frame::MAGIC]).with_context(|| {
+            format!("sending binary-mode magic to {addr}")
+        })?;
+        Ok(c)
+    }
+
+    /// One round trip. The primary must be serving with `--binary`
+    /// (otherwise the magic byte already got a JSONL error and this
+    /// read fails to frame-decode — surfaced as a connect-level error).
+    pub fn call(&mut self, header: &Json, body: &[u8]) -> Result<(Json, Vec<u8>)> {
+        frame::write_frame(&mut self.stream, header, body)?;
+        frame::read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow!("primary closed the connection mid-call"))
+    }
+
+    /// `call` + `ok:true` check (errors carry the primary's message).
+    fn call_ok(&mut self, header: &Json, body: &[u8]) -> Result<(Json, Vec<u8>)> {
+        let (h, b) = self.call(header, body)?;
+        if h.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = h
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("primary answered ok:false");
+            bail!("primary: {msg}");
+        }
+        Ok((h, b))
+    }
+}
+
+struct ReplicaMetrics {
+    applied: Arc<obs::Counter>,
+    reconnects: Arc<obs::Counter>,
+    bootstraps: Arc<obs::Counter>,
+    lag: Arc<obs::Gauge>,
+}
+
+fn metrics() -> ReplicaMetrics {
+    let reg = obs::registry();
+    ReplicaMetrics {
+        applied: reg.counter("nmbkm_replica_applied_total", &[]),
+        reconnects: reg.counter("nmbkm_replica_reconnects_total", &[]),
+        bootstraps: reg.counter("nmbkm_replica_bootstraps_total", &[]),
+        lag: reg.gauge("nmbkm_replica_lag_records", &[]),
+    }
+}
+
+/// Run the follower loop on a new thread until promoted or `stop` is
+/// set. The registry must already have its WAL attached and follower
+/// mode set.
+pub fn spawn_follower(
+    registry: Arc<ModelRegistry>,
+    primary: String,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("nmbkm-follower".into())
+        .spawn(move || run_follower(&registry, &primary, &stop))
+        .expect("spawning the follower thread")
+}
+
+/// The follower loop body: reconnect-with-backoff around
+/// [`tail_primary`]. Returns when promoted or stopped.
+pub fn run_follower(registry: &ModelRegistry, primary: &str, stop: &AtomicBool) {
+    let m = metrics();
+    let mut backoff = BACKOFF_MIN;
+    while !stop.load(Ordering::SeqCst) && registry.is_follower() {
+        match tail_primary(registry, primary, stop, &m, &mut backoff) {
+            Ok(()) => break, // promoted or stopped
+            Err(e) => {
+                eprintln!(
+                    "[nmbkm::replica] lost primary {primary}: {e:#} — \
+                     retrying in {backoff:?}"
+                );
+                m.reconnects.inc();
+                sleep_interruptible(backoff, stop);
+                backoff = (backoff * 2).min(BACKOFF_MAX);
+            }
+        }
+    }
+    eprintln!("[nmbkm::replica] follower loop stopped");
+}
+
+/// One connection's worth of following: handshake, bootstrap if our
+/// log cannot reach the primary's retained history, then tail until
+/// promoted/stopped (`Ok`) or the connection fails (`Err` → backoff).
+fn tail_primary(
+    registry: &ModelRegistry,
+    primary: &str,
+    stop: &AtomicBool,
+    m: &ReplicaMetrics,
+    backoff: &mut Duration,
+) -> Result<()> {
+    let wal = registry
+        .wal()
+        .ok_or_else(|| anyhow!("follower mode requires an attached wal"))?;
+    let mut client = FrameClient::connect(primary)?;
+    let (info, _) = client.call_ok(&json::obj(vec![("op", json::s("sync-info"))]), &[])?;
+    let remote_epoch = u64_field(&info, "epoch")?;
+    let remote_next = u64_field(&info, "next")?;
+    let remote_oldest = u64_field(&info, "oldest")?;
+    ensure!(
+        remote_epoch >= wal.epoch(),
+        "stale primary: its epoch {} is behind ours ({}) — this node \
+         (or another) was promoted past it",
+        remote_epoch,
+        wal.epoch()
+    );
+    // handshake OK: the next failure is a fresh one, back off from the
+    // bottom again
+    *backoff = BACKOFF_MIN;
+    if remote_epoch > wal.epoch() {
+        wal.adopt_epoch(remote_epoch)?;
+    }
+    if needs_bootstrap(registry, &wal, &info, remote_oldest)? {
+        bootstrap(registry, &wal, &mut client, &info, remote_next, remote_epoch, m)?;
+    }
+    // ── tail ─────────────────────────────────────────────────────────
+    loop {
+        if stop.load(Ordering::SeqCst) || !registry.is_follower() {
+            m.lag.set(0);
+            return Ok(());
+        }
+        let cursor = wal.next_seq();
+        let req = json::obj(vec![
+            ("op", json::s("wal-fetch")),
+            ("from", u64_json(cursor)),
+            ("max", json::num(wal::DEFAULT_FETCH_BYTES as f64)),
+        ]);
+        let (h, bytes) = client.call_ok(&req, &[])?;
+        let batch_epoch = u64_field(&h, "epoch")?;
+        let head = u64_field(&h, "head")?;
+        if h.get("reset").and_then(Json::as_bool) == Some(true) {
+            // the primary checkpointed past our cursor; re-bootstrap on
+            // the next connection attempt
+            bail!(
+                "cursor {cursor} predates the primary's retained log — \
+                 re-bootstrapping"
+            );
+        }
+        if bytes.is_empty() {
+            m.lag.set(head.saturating_sub(cursor) as i64);
+            sleep_interruptible(POLL, stop);
+            continue;
+        }
+        // durability first: mirror the primary's bytes into our own log
+        // (CRC + seq contiguity + epoch fence enforced), then replay.
+        // If we crash between the two, recovery replays from the log —
+        // the same records, the same bits.
+        let scan = wal::scan_records(&bytes);
+        wal.append_raw(&bytes, batch_epoch)?;
+        for (rec, _) in &scan.records {
+            wal::apply_record(registry, rec)
+                .with_context(|| format!("applying record {}", rec.seq))?;
+            m.applied.inc();
+        }
+        m.lag.set(head.saturating_sub(wal.next_seq()) as i64);
+        if let Err(e) = wal.maybe_checkpoint(registry) {
+            eprintln!("[nmbkm::replica] checkpoint failed: {e:#}");
+        }
+    }
+}
+
+/// Bootstrap is needed when our log cannot splice onto the primary's
+/// retained history, or our model set has diverged from the primary's.
+fn needs_bootstrap(
+    registry: &ModelRegistry,
+    wal: &Wal,
+    info: &Json,
+    remote_oldest: u64,
+) -> Result<bool> {
+    if wal.next_seq() < remote_oldest {
+        return Ok(true);
+    }
+    let remote: Vec<(&str, u64)> = info
+        .get("models")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("sync-info missing models"))?
+        .iter()
+        .map(|mv| {
+            let name = mv
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("sync-info model without name"))?;
+            Ok((name, u64_field(mv, "seq")?))
+        })
+        .collect::<Result<_>>()?;
+    let local = registry.entries();
+    // a local model the primary lacks (or vice versa) that the log tail
+    // won't reconcile means we forked — e.g. a crash mid-bootstrap
+    for e in &local {
+        match remote.iter().find(|(n, _)| *n == e.name()) {
+            None => return Ok(true),
+            // a clean mirror only applies records fetched from the
+            // primary, so being ahead of its applied seq means a fork
+            Some((_, rseq)) => {
+                if e.last_seq() > *rseq {
+                    return Ok(true);
+                }
+            }
+        }
+    }
+    for (n, rseq) in &remote {
+        if registry.resolve(Some(n)).is_err() && *rseq < wal.next_seq() {
+            // the primary applied ops to this model before our cursor,
+            // but we never got its snapshot
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Replace local state wholesale with the primary's: ship every model's
+/// snapshot, reset the local log to the primary's cursor + epoch, and
+/// persist a checkpoint so a follower restart resumes without
+/// re-shipping.
+fn bootstrap(
+    registry: &ModelRegistry,
+    wal: &Wal,
+    client: &mut FrameClient,
+    info: &Json,
+    cursor: u64,
+    epoch: u64,
+    m: &ReplicaMetrics,
+) -> Result<()> {
+    let models = info
+        .get("models")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("sync-info missing models"))?;
+    eprintln!(
+        "[nmbkm::replica] bootstrapping {} model(s) from the primary \
+         (cursor {cursor}, epoch {epoch})",
+        models.len()
+    );
+    // local state is about to be replaced wholesale
+    for e in registry.entries() {
+        registry.drop_model_unlogged(e.name())?;
+    }
+    for mv in models {
+        let name = mv
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("sync-info model without name"))?;
+        let req = json::obj(vec![
+            ("op", json::s("sync-snapshot")),
+            ("model", json::s(name)),
+        ]);
+        // transport errors propagate: the whole bootstrap retries
+        let (h, body) = client.call(&req, &[])?;
+        if h.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = h
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("ok:false");
+            // dropped between sync-info and now: its drop record is in
+            // the tail we are about to replay; skipping it is exactly
+            // what the primary's own history does
+            if msg.contains("unknown model") {
+                eprintln!(
+                    "[nmbkm::replica] model '{name}' vanished during \
+                     bootstrap (dropped on the primary) — skipping"
+                );
+                continue;
+            }
+            bail!("primary: {msg}");
+        }
+        let seq = u64_field(&h, "seq")?;
+        let text = std::str::from_utf8(&body)
+            .map_err(|_| anyhow!("snapshot for '{name}' is not UTF-8"))?;
+        let v = Json::parse(text)
+            .map_err(|e| anyhow!("snapshot for '{name}': {e}"))?;
+        let snap = Snapshot::from_json(&v)
+            .with_context(|| format!("snapshot for '{name}'"))?;
+        let mut session = OnlineSession::resume(snap)
+            .map_err(|e| anyhow!("resuming shipped model '{name}': {e:#}"))?;
+        session.set_snapshot_dir(registry.snapshot_dir());
+        let entry = registry.insert(name, session)?;
+        entry.set_last_seq(seq);
+    }
+    // our log restarts at the primary's cursor under its epoch; records
+    // the snapshots already cover will be skipped by seq on replay
+    wal.reset_to(cursor, epoch)?;
+    // persist: a restart resumes from this checkpoint instead of
+    // re-shipping every snapshot (best-effort — an uninitialised model
+    // defers it, and the next fetch cycle will try again)
+    if let Err(e) = wal.checkpoint(registry) {
+        eprintln!("[nmbkm::replica] bootstrap checkpoint failed: {e:#}");
+    }
+    m.bootstraps.inc();
+    Ok(())
+}
+
+fn sleep_interruptible(total: Duration, stop: &AtomicBool) {
+    let mut left = total;
+    let tick = Duration::from_millis(50);
+    while left > Duration::ZERO {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let step = left.min(tick);
+        std::thread::sleep(step);
+        left -= step;
+    }
+}

@@ -27,6 +27,26 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Accept-loop knobs. The default matches `nmbkm serve`'s defaults:
+/// JSONL only, 60 s per-connection socket timeouts.
+#[derive(Clone, Copy)]
+pub struct ServeOptions {
+    /// Negotiate the binary framing on a leading magic byte.
+    pub accept_binary: bool,
+    /// Read/write timeout applied to every accepted socket (`None`
+    /// disables). A peer that stalls a single read or write longer than
+    /// this gets its connection dropped — the slowloris defence — and
+    /// counts on `nmbkm_connection_timeouts_total`.
+    pub conn_timeout: Option<Duration>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { accept_binary: false, conn_timeout: Some(Duration::from_secs(60)) }
+    }
+}
 
 /// Serve requests from stdin, responses to stdout, until EOF or
 /// `shutdown`. Single-threaded by construction (one client).
@@ -36,8 +56,25 @@ pub fn serve_stdio(registry: &ModelRegistry, accept_binary: bool) -> Result<()> 
     let stdout = std::io::stdout();
     let mut input = stdin.lock();
     let mut out = stdout.lock();
-    serve_negotiated(registry, &mut input, &mut out, accept_binary)?;
+    let ended = serve_negotiated(registry, &mut input, &mut out, accept_binary);
+    drain_wal(registry);
+    ended?;
     Ok(())
+}
+
+/// Graceful drain on shutdown: fsync the WAL's tail and cut a final
+/// checkpoint, so a restart replays nothing. Called once every handler
+/// has exited (no mutation can race the flush). Failures keep the log —
+/// recovery replay still reaches the same state.
+fn drain_wal(registry: &ModelRegistry) {
+    if let Some(w) = registry.wal() {
+        match w.drain(registry) {
+            Ok(()) => {
+                eprintln!("[nmbkm::serve] wal drained (synced + final checkpoint)")
+            }
+            Err(e) => eprintln!("[nmbkm::serve] wal drain failed: {e:#}"),
+        }
+    }
 }
 
 /// Dispatch one request stream by its first byte: the binary magic
@@ -82,26 +119,27 @@ fn serve_negotiated<R: BufRead, W: Write>(
 pub fn serve_tcp(
     registry: Arc<ModelRegistry>,
     addr: &str,
-    accept_binary: bool,
+    opts: ServeOptions,
 ) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
         "[nmbkm::serve] listening on {} ({} models; JSONL: create|list|drop|\
-         ingest|predict|step|stats|snapshot|metrics|shutdown{})",
+         ingest|predict|step|stats|snapshot|metrics|sync-info|promote|\
+         shutdown{})",
         listener.local_addr()?,
         registry.len(),
-        if accept_binary {
+        if opts.accept_binary {
             "; binary frames negotiated by magic byte 0xB7"
         } else {
             ""
         },
     );
-    serve_listener_opts(registry, listener, accept_binary)
+    serve_listener_with(registry, listener, opts)
 }
 
-/// [`serve_listener_opts`] with binary framing off: the JSONL-only
-/// accept loop every pre-existing caller gets.
+/// [`serve_listener_with`] with binary framing off and no socket
+/// timeouts: the JSONL-only accept loop every pre-existing caller gets.
 pub fn serve_listener(
     registry: Arc<ModelRegistry>,
     listener: TcpListener,
@@ -109,14 +147,28 @@ pub fn serve_listener(
     serve_listener_opts(registry, listener, false)
 }
 
-/// Accept-loop over an already-bound listener (split out so tests can
-/// bind an ephemeral port themselves). Every accepted connection gets
-/// its own handler thread against the shared registry and negotiates
-/// its wire format independently.
+/// [`serve_listener_with`] keyed by the binary toggle alone (no socket
+/// timeouts) — the historical test/bench entry point.
 pub fn serve_listener_opts(
     registry: Arc<ModelRegistry>,
     listener: TcpListener,
     accept_binary: bool,
+) -> Result<()> {
+    serve_listener_with(
+        registry,
+        listener,
+        ServeOptions { accept_binary, conn_timeout: None },
+    )
+}
+
+/// Accept-loop over an already-bound listener (split out so tests can
+/// bind an ephemeral port themselves). Every accepted connection gets
+/// its own handler thread against the shared registry and negotiates
+/// its wire format independently.
+pub fn serve_listener_with(
+    registry: Arc<ModelRegistry>,
+    listener: TcpListener,
+    opts: ServeOptions,
 ) -> Result<()> {
     let local = listener.local_addr().ok();
     let stop = Arc::new(AtomicBool::new(false));
@@ -136,6 +188,12 @@ pub fn serve_listener_opts(
                 continue;
             }
         };
+        // socket-level timeouts so one stalled peer cannot pin its
+        // handler thread (and any session lock it holds) forever
+        if opts.conn_timeout.is_some() {
+            let _ = stream.set_read_timeout(opts.conn_timeout);
+            let _ = stream.set_write_timeout(opts.conn_timeout);
+        }
         let peer = match stream.try_clone() {
             Ok(c) => c,
             Err(e) => {
@@ -146,7 +204,7 @@ pub fn serve_listener_opts(
         let reg = registry.clone();
         let stop_flag = stop.clone();
         let handle = std::thread::spawn(move || {
-            match serve_connection(&reg, stream, accept_binary) {
+            match serve_connection(&reg, stream, opts.accept_binary) {
                 Ok(true) => {
                     // explicit shutdown: flag the acceptor, then poke the
                     // listener so its blocking accept() returns. If the
@@ -178,7 +236,21 @@ pub fn serve_listener_opts(
     for (h, _) in handlers {
         let _ = h.join();
     }
+    drain_wal(&registry);
     Ok(())
+}
+
+/// Whether an error chain reads like a socket timeout. The vendored
+/// `anyhow` shim keeps errors as display strings (no downcast to
+/// `io::Error`), so classification is textual: `SO_RCVTIMEO` expiry
+/// surfaces as `WouldBlock` ("Resource temporarily unavailable") on
+/// Linux and `TimedOut` elsewhere.
+fn is_timeout(e: &anyhow::Error) -> bool {
+    let s = format!("{e:#}").to_lowercase();
+    s.contains("timed out")
+        || s.contains("temporarily unavailable")
+        || s.contains("would block")
+        || s.contains("os error 11")
 }
 
 fn serve_connection(
@@ -199,6 +271,11 @@ fn serve_connection(
     let mut writer = BufWriter::new(stream);
     let out = serve_negotiated(registry, &mut reader, &mut writer, accept_binary);
     sm.conns_closed.inc();
+    let timed_out = out.as_ref().err().map(is_timeout).unwrap_or(false);
+    if timed_out {
+        sm.conn_timeouts.inc();
+        obslog::event("connection_timeout", &[("peer", json::s(&peer))]);
+    }
     obslog::event(
         "connection_close",
         &[

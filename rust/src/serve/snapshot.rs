@@ -135,11 +135,12 @@ impl Snapshot {
         let rounds = req_usize(v, "rounds")?;
         ensure!(b_prev <= b && b <= n, "bad batch cursor: b_prev={b_prev} b={b} n={n}");
         ensure!(k >= 1 && d >= 1, "bad model shape k={k} d={d}");
+        let kd = count_mul(k, d, "centroid")?;
 
-        let c = blob_f32(v, "centroids", k * d)?;
+        let c = blob_f32(v, "centroids", kd)?;
         let norms = blob_f32(v, "cent_norms", k)?;
         let p = blob_f32(v, "cent_p", k)?;
-        let s = blob_f64(v, "stats_s", k * d)?;
+        let s = blob_f64(v, "stats_s", kd)?;
         let sv = blob_f64(v, "stats_v", k)?;
         let sse = blob_f64(v, "stats_sse", k)?;
         let labels = blob_u32(v, "labels", n)?;
@@ -443,15 +444,18 @@ fn data_from_json(v: &Json) -> Result<Data> {
     let cols = req_usize(v, "cols")?;
     match v.get("kind").and_then(Json::as_str) {
         Some("dense") => {
-            let values = blob_f32(v, "values", rows * cols)?;
+            let values = blob_f32(v, "values", count_mul(rows, cols, "data value")?)?;
             Ok(Data::dense(DenseMatrix::from_vec(rows, cols, values)))
         }
         Some("sparse") => {
-            let indptr: Vec<usize> = blob_u64(v, "indptr", rows + 1)?
+            let np = rows
+                .checked_add(1)
+                .ok_or_else(|| anyhow!("data rows {rows} overflows"))?;
+            let indptr: Vec<usize> = blob_u64(v, "indptr", np)?
                 .into_iter()
                 .map(|x| x as usize)
                 .collect();
-            let nnz = *indptr.last().unwrap();
+            let nnz = indptr.last().copied().unwrap_or(0);
             let indices = blob_u32(v, "indices", nnz)?;
             let values = blob_f32(v, "values", nnz)?;
             ensure!(indptr[0] == 0, "indptr must start at 0");
@@ -471,6 +475,14 @@ fn req_usize(v: &Json, key: &str) -> Result<usize> {
     v.get(key)
         .and_then(Json::as_usize)
         .ok_or_else(|| anyhow!("snapshot missing numeric field '{key}'"))
+}
+
+/// Checked element-count arithmetic: corrupt snapshots carry hostile
+/// dimension fields, and `k * d` must reject — not wrap (release) or
+/// panic (debug) — before it sizes anything.
+fn count_mul(a: usize, b: usize, what: &str) -> Result<usize> {
+    a.checked_mul(b)
+        .ok_or_else(|| anyhow!("snapshot {what} count {a}*{b} overflows"))
 }
 
 fn hex_field(v: &Json, key: &str) -> Result<Vec<u8>> {
@@ -513,54 +525,44 @@ fn u64s_to_hex(xs: &[u64]) -> String {
     hex_encode(&bytes)
 }
 
-fn blob_f32(v: &Json, key: &str, expect: usize) -> Result<Vec<f32>> {
+/// Decode a hex blob and check it holds exactly `expect` elements of
+/// `width` bytes. The byte count uses checked arithmetic: `expect` can
+/// be attacker-controlled (e.g. a sparse `nnz` read from the document).
+fn blob_bytes(v: &Json, key: &str, expect: usize, width: usize) -> Result<Vec<u8>> {
+    let want = count_mul(expect, width, key)?;
     let b = hex_field(v, key)?;
     ensure!(
-        b.len() == expect * 4,
-        "snapshot field '{key}': {} bytes, expected {}",
+        b.len() == want,
+        "snapshot field '{key}': {} bytes, expected {want}",
         b.len(),
-        expect * 4
     );
-    Ok(b.chunks_exact(4)
+    Ok(b)
+}
+
+fn blob_f32(v: &Json, key: &str, expect: usize) -> Result<Vec<f32>> {
+    Ok(blob_bytes(v, key, expect, 4)?
+        .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }
 
 fn blob_f64(v: &Json, key: &str, expect: usize) -> Result<Vec<f64>> {
-    let b = hex_field(v, key)?;
-    ensure!(
-        b.len() == expect * 8,
-        "snapshot field '{key}': {} bytes, expected {}",
-        b.len(),
-        expect * 8
-    );
-    Ok(b.chunks_exact(8)
+    Ok(blob_bytes(v, key, expect, 8)?
+        .chunks_exact(8)
         .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }
 
 fn blob_u32(v: &Json, key: &str, expect: usize) -> Result<Vec<u32>> {
-    let b = hex_field(v, key)?;
-    ensure!(
-        b.len() == expect * 4,
-        "snapshot field '{key}': {} bytes, expected {}",
-        b.len(),
-        expect * 4
-    );
-    Ok(b.chunks_exact(4)
+    Ok(blob_bytes(v, key, expect, 4)?
+        .chunks_exact(4)
         .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }
 
 fn blob_u64(v: &Json, key: &str, expect: usize) -> Result<Vec<u64>> {
-    let b = hex_field(v, key)?;
-    ensure!(
-        b.len() == expect * 8,
-        "snapshot field '{key}': {} bytes, expected {}",
-        b.len(),
-        expect * 8
-    );
-    Ok(b.chunks_exact(8)
+    Ok(blob_bytes(v, key, expect, 8)?
+        .chunks_exact(8)
         .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }
@@ -663,6 +665,60 @@ mod tests {
         flipped[0] ^= 1;
         let bad = good.replace(&mask_hex, &hex_encode(&flipped));
         assert!(Snapshot::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn corrupt_snapshots_error_cleanly() {
+        // fuzz-ish: a table of hostile field mutations over a valid
+        // document, plus a byte-poke sweep — every mutant must land in
+        // a clean Err (or, for the sweep, at worst a harmless Ok);
+        // none may panic, not even via debug-mode overflow
+        let (data, st) = tiny_state(30, 3, 4, 6);
+        let s = snap(data, st);
+        let good = s.to_json().to_string();
+        let cases: Vec<(&str, String)> = vec![
+            ("version string", good.replace("\"version\":1}", "\"version\":\"one\"}")),
+            ("version negative", good.replace("\"version\":1}", "\"version\":-3}")),
+            ("k zero", good.replace("\"k\":3", "\"k\":0")),
+            ("k float", good.replace("\"k\":3", "\"k\":1e30")),
+            // k*d overflows usize — must reject, not wrap
+            ("k*d overflow", good.replace("\"k\":3", "\"k\":9223372036854775807")),
+            ("d huge", good.replace("\"d\":4", "\"d\":4611686018427387904")),
+            // labels/dist2/mask sized n*4: checked width math must trip
+            ("n huge", good.replace("\"n\":30", "\"n\":9223372036854775807")),
+            ("cursor beyond n", good.replace("\"b\":15", "\"b\":31")),
+            ("rng_spare bad hex", good.replace("\"rng_spare\":null", "\"rng_spare\":\"zz\"")),
+            ("missing config", good.replace("\"config\"", "\"confog\"")),
+            ("data kind garbage", good.replace("\"kind\":\"dense\"", "\"kind\":\"dense2\"")),
+            (
+                "data rows overflow",
+                good.replace("\"rows\":30", "\"rows\":18446744073709551615"),
+            ),
+        ];
+        for (what, text) in &cases {
+            assert_ne!(text, &good, "{what}: mutation did not apply");
+            if let Ok(v) = Json::parse(text) {
+                assert!(
+                    Snapshot::from_json(&v).is_err(),
+                    "{what}: corrupt document loaded successfully"
+                );
+            }
+        }
+        // poke a non-hex byte through the document and truncate it at a
+        // stride of offsets: parse or load may fail (almost always), but
+        // nothing may panic
+        for pos in (0..good.len()).step_by(97) {
+            let mut mutant = good.clone().into_bytes();
+            mutant[pos] = b'z';
+            if let Ok(text) = String::from_utf8(mutant) {
+                if let Ok(v) = Json::parse(&text) {
+                    let _ = Snapshot::from_json(&v);
+                }
+            }
+            if let Ok(v) = Json::parse(&good[..pos]) {
+                let _ = Snapshot::from_json(&v);
+            }
+        }
     }
 
     #[test]

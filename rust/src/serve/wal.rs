@@ -1,0 +1,1093 @@
+//! Durable write-ahead log of state-mutating serve ops, and crash
+//! recovery by deterministic replay.
+//!
+//! Every successful `create`/`ingest`/`step`/`drop` appends one record
+//! describing its **actual effect** (e.g. the rounds a time-budgeted
+//! step really ran, not the rounds it asked for), so replaying the log
+//! into a fresh registry reproduces the registry **bit-identically**:
+//! the serving sessions are deterministic (fixed-seed Pcg64 streams,
+//! each-point-counts-exactly-once sufficient statistics), which turns
+//! "replay the log" into "recompute the exact same bits". Failed ops
+//! never reach the log; an op is durable once its append returned (per
+//! the fsync policy).
+//!
+//! On-disk layout, in the WAL directory:
+//!
+//! ```text
+//! wal-<first_seq:016x>.log   segment: 25-byte header, then records
+//! manifest.json              checkpoint manifest {version, epoch, models}
+//! ckpt-<model>.json          per-model snapshot (serve::snapshot format)
+//! ```
+//!
+//! Segment header: `b"NMBKMWAL"` | version u8 | epoch u64 | first_seq
+//! u64 (LE). Record: `len u32 | crc32(payload) u32 | payload`, payload
+//! = `seq u64 | header_len u32 | header JSON | body`. Record headers
+//! are compact `util::json` documents (BTreeMap-ordered keys, so the
+//! bytes are deterministic); ingest bodies reuse the wire row encoding
+//! ([`crate::serve::wire::encode_rows`]).
+//!
+//! **Checkpoints** rotate to a fresh segment, snapshot every model
+//! (with its last applied seq, read under the same session lock), write
+//! `manifest.json` atomically, and delete the older segments — recovery
+//! then resumes from the snapshots and replays only the live tail.
+//! **Recovery** scans segments in seq order, truncates a torn or
+//! CRC-corrupt tail record in the *last* segment (anything later is by
+//! construction unacknowledged), and hard-errors on interior
+//! corruption. The **epoch** in segment headers and the manifest is the
+//! failover fence: promotion bumps it, and replication rejects records
+//! from a lower (stale-primary) epoch — see `serve::replica`.
+
+use crate::config::{Algo, RunConfig};
+use crate::obs;
+use crate::serve::registry::ModelRegistry;
+use crate::serve::session::OnlineSession;
+use crate::serve::snapshot::Snapshot;
+use crate::serve::wire;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::BTreeSet;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Segment file magic + format version.
+const SEG_MAGIC: &[u8; 8] = b"NMBKMWAL";
+const SEG_VERSION: u8 = 1;
+/// magic | version | epoch u64 | first_seq u64.
+const SEG_HEADER_LEN: usize = 8 + 1 + 8 + 8;
+/// Hard cap on one record's payload — matches the frame body cap, so
+/// anything the wire accepted fits and a corrupt length prefix cannot
+/// trigger a giant allocation.
+const MAX_RECORD_BYTES: usize = 1 << 28;
+/// Log bytes between automatic checkpoints (overridable per server).
+pub const DEFAULT_CHECKPOINT_BYTES: u64 = 64 << 20;
+/// Default (and soft target) byte size of one `wal-fetch` response.
+pub const DEFAULT_FETCH_BYTES: usize = 1 << 20;
+/// Hard cap a client may request per `wal-fetch`.
+pub const MAX_FETCH_BYTES: usize = 1 << 26;
+const MANIFEST: &str = "manifest.json";
+
+// ── CRC32 (IEEE 802.3, table-driven) ─────────────────────────────────
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// IEEE CRC32 of `data` (the `cksum`-compatible reflected polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = !0u32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ── u64 ⇄ JSON (hex strings, bit-exact — JSON numbers are f64) ───────
+
+/// A u64 as a lowercase-hex JSON string (seqs and epochs must survive
+/// JSON bit-exactly; f64 numbers lose integers above 2^53).
+pub fn u64_json(x: u64) -> Json {
+    json::s(&format!("{x:x}"))
+}
+
+/// Read a hex-string u64 field written by [`u64_json`].
+pub fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    let s = v
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing hex-u64 field '{key}'"))?;
+    u64::from_str_radix(s, 16).map_err(|_| anyhow!("field '{key}': bad hex '{s}'"))
+}
+
+// ── fsync policy ─────────────────────────────────────────────────────
+
+/// When appends reach the platter: `always` fsyncs every record (an
+/// acked op survives kill -9 of the whole host), `interval:<ms>` fsyncs
+/// at most once per window (group commit — bounded loss), `never`
+/// leaves flushing to the OS (crash-consistent but lossy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FsyncPolicy {
+    Always,
+    Interval(Duration),
+    Never,
+}
+
+impl FsyncPolicy {
+    pub fn parse(s: &str) -> Result<FsyncPolicy> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "never" => Ok(FsyncPolicy::Never),
+            _ => {
+                let ms = s
+                    .strip_prefix("interval:")
+                    .and_then(|ms| ms.parse::<u64>().ok())
+                    .ok_or_else(|| {
+                        anyhow!("fsync policy must be always|interval:<ms>|never, got '{s}'")
+                    })?;
+                Ok(FsyncPolicy::Interval(Duration::from_millis(ms)))
+            }
+        }
+    }
+}
+
+// ── record framing ───────────────────────────────────────────────────
+
+/// One decoded log record: a monotone sequence number, the op header
+/// (same JSON the wire protocol speaks), and an opaque body (wire-row
+/// batch for ingests, empty otherwise).
+#[derive(Clone, Debug)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub header: Json,
+    pub body: Vec<u8>,
+}
+
+/// Frame one record: `len | crc | (seq | header_len | header | body)`.
+pub fn encode_record(seq: u64, header: &Json, body: &[u8]) -> Vec<u8> {
+    let h = header.to_string();
+    let payload_len = 8 + 4 + h.len() + body.len();
+    let mut out = Vec::with_capacity(8 + payload_len);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(&[0u8; 4]); // crc placeholder
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(h.len() as u32).to_le_bytes());
+    out.extend_from_slice(h.as_bytes());
+    out.extend_from_slice(body);
+    let crc = crc32(&out[8..]);
+    out[4..8].copy_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Result of scanning a byte run for records: every complete CRC-valid
+/// record with its byte range, the length of the clean prefix, and why
+/// the scan stopped early (`None` = the whole run was clean).
+pub struct Scan {
+    pub records: Vec<(WalRecord, Range<usize>)>,
+    pub clean_len: usize,
+    pub torn: Option<String>,
+}
+
+/// Parse records until the end of `buf` or the first torn/corrupt one.
+/// Used by recovery (truncate the tail at `clean_len`), by the follower
+/// (validate a fetched batch), and by `fetch` itself.
+pub fn scan_records(buf: &[u8]) -> Scan {
+    let mut records = Vec::new();
+    let mut at = 0usize;
+    let torn = loop {
+        if at == buf.len() {
+            break None;
+        }
+        if buf.len() - at < 8 {
+            break Some(format!("truncated record prefix at byte {at}"));
+        }
+        let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap());
+        if len < 12 || len > MAX_RECORD_BYTES {
+            break Some(format!("implausible record length {len} at byte {at}"));
+        }
+        let Some(end) = at.checked_add(8 + len).filter(|&e| e <= buf.len()) else {
+            break Some(format!("record at byte {at} extends past the end"));
+        };
+        let payload = &buf[at + 8..end];
+        if crc32(payload) != crc {
+            break Some(format!("crc mismatch at byte {at}"));
+        }
+        let seq = u64::from_le_bytes(payload[..8].try_into().unwrap());
+        let hlen = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+        if hlen > len - 12 {
+            break Some(format!("record at byte {at}: header overruns payload"));
+        }
+        let header = match std::str::from_utf8(&payload[12..12 + hlen])
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+        {
+            Some(h) => h,
+            None => break Some(format!("record at byte {at}: unparseable header")),
+        };
+        let body = payload[12 + hlen..].to_vec();
+        records.push((WalRecord { seq, header, body }, at..end));
+        at = end;
+    };
+    Scan { records, clean_len: at, torn }
+}
+
+fn seg_header_bytes(epoch: u64, first_seq: u64) -> [u8; SEG_HEADER_LEN] {
+    let mut h = [0u8; SEG_HEADER_LEN];
+    h[..8].copy_from_slice(SEG_MAGIC);
+    h[8] = SEG_VERSION;
+    h[9..17].copy_from_slice(&epoch.to_le_bytes());
+    h[17..25].copy_from_slice(&first_seq.to_le_bytes());
+    h
+}
+
+fn parse_seg_header(buf: &[u8]) -> Result<(u64, u64)> {
+    ensure!(buf.len() >= SEG_HEADER_LEN, "segment shorter than its header");
+    ensure!(&buf[..8] == SEG_MAGIC, "bad segment magic");
+    ensure!(
+        buf[8] == SEG_VERSION,
+        "segment version {} unsupported (this build reads {SEG_VERSION})",
+        buf[8]
+    );
+    let epoch = u64::from_le_bytes(buf[9..17].try_into().unwrap());
+    let first = u64::from_le_bytes(buf[17..25].try_into().unwrap());
+    Ok((epoch, first))
+}
+
+fn seg_name(first_seq: u64) -> String {
+    format!("wal-{first_seq:016x}.log")
+}
+
+/// `(first_seq, path)` of every segment in `dir`, seq-ordered.
+fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(hex) = name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")) {
+            if let Ok(first) = u64::from_str_radix(hex, 16) {
+                out.push((first, entry.path()));
+            }
+        }
+    }
+    out.sort_by_key(|(first, _)| *first);
+    Ok(out)
+}
+
+/// Best-effort directory fsync so freshly created/renamed names survive
+/// a crash (POSIX: the dir entry is separate from the file's data).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+// ── the log itself ───────────────────────────────────────────────────
+
+struct WalInner {
+    file: File,
+    seg_path: PathBuf,
+    seg_first: u64,
+    /// Records in the active segment (0 ⇒ rotation can reuse the file).
+    seg_records: u64,
+    next_seq: u64,
+    epoch: u64,
+    last_sync: Instant,
+    dirty: bool,
+}
+
+/// Append-only, CRC-framed, segmented op log. Appends serialise on one
+/// internal mutex which is always acquired *last* (callers may hold
+/// registry or session locks; the log never takes those), so log order
+/// is exactly "order the effects became visible".
+pub struct Wal {
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    checkpoint_bytes: u64,
+    inner: Mutex<WalInner>,
+    // lock-free mirrors for readers (sync-info, metrics, fetch)
+    next_seq_m: AtomicU64,
+    epoch_m: AtomicU64,
+    bytes_since_ckpt: AtomicU64,
+    checkpointing: AtomicBool,
+}
+
+/// One `fetch` response: the raw on-disk bytes of records
+/// `[from, next)`, or `reset` when `from` predates the oldest retained
+/// segment (the follower must re-bootstrap from snapshots).
+pub struct Fetch {
+    pub reset: bool,
+    pub from: u64,
+    pub next: u64,
+    pub epoch: u64,
+    pub count: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl Wal {
+    fn open_inner(
+        dir: PathBuf,
+        policy: FsyncPolicy,
+        checkpoint_bytes: u64,
+        seg_path: PathBuf,
+        seg_first: u64,
+        seg_records: u64,
+        next_seq: u64,
+        epoch: u64,
+    ) -> Result<Wal> {
+        let file = OpenOptions::new()
+            .append(true)
+            .open(&seg_path)
+            .with_context(|| format!("opening segment {}", seg_path.display()))?;
+        Ok(Wal {
+            dir,
+            policy,
+            checkpoint_bytes: checkpoint_bytes.max(1),
+            inner: Mutex::new(WalInner {
+                file,
+                seg_path,
+                seg_first,
+                seg_records,
+                next_seq,
+                epoch,
+                last_sync: Instant::now(),
+                dirty: false,
+            }),
+            next_seq_m: AtomicU64::new(next_seq),
+            epoch_m: AtomicU64::new(epoch),
+            bytes_since_ckpt: AtomicU64::new(0),
+            checkpointing: AtomicBool::new(false),
+        })
+    }
+
+    /// Create a fresh segment file (header written + synced) and return
+    /// its path. Overwrites an existing file of the same name — callers
+    /// only do that when reusing an empty segment for an epoch change.
+    fn create_segment(dir: &Path, epoch: u64, first_seq: u64) -> Result<PathBuf> {
+        let path = dir.join(seg_name(first_seq));
+        let mut f = File::create(&path)
+            .with_context(|| format!("creating segment {}", path.display()))?;
+        f.write_all(&seg_header_bytes(epoch, first_seq))?;
+        f.sync_all()
+            .with_context(|| format!("syncing segment {}", path.display()))?;
+        sync_dir(dir);
+        Ok(path)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Sequence number the next append will get.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq_m.load(Ordering::SeqCst)
+    }
+
+    /// Current epoch (bumped by promotion; the failover fence).
+    pub fn epoch(&self) -> u64 {
+        self.epoch_m.load(Ordering::SeqCst)
+    }
+
+    /// First seq still present in the log (records below it live only
+    /// in checkpoint snapshots).
+    pub fn oldest_retained(&self) -> Result<u64> {
+        let segs = list_segments(&self.dir)?;
+        Ok(segs.first().map(|(f, _)| *f).unwrap_or(self.next_seq()))
+    }
+
+    fn write_locked(&self, inner: &mut WalInner, bytes: &[u8]) -> Result<()> {
+        inner
+            .file
+            .write_all(bytes)
+            .with_context(|| format!("appending to {}", inner.seg_path.display()))?;
+        inner.dirty = true;
+        self.bytes_since_ckpt.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let reg = obs::registry();
+        reg.counter("nmbkm_wal_bytes_total", &[]).add(bytes.len() as u64);
+        self.sync_locked(inner, false)?;
+        Ok(())
+    }
+
+    fn sync_locked(&self, inner: &mut WalInner, force: bool) -> Result<()> {
+        let due = match self.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::Interval(d) => inner.last_sync.elapsed() >= d,
+            FsyncPolicy::Never => false,
+        };
+        if inner.dirty && (due || force) {
+            inner.file.sync_data().context("fsync wal segment")?;
+            inner.last_sync = Instant::now();
+            inner.dirty = false;
+            obs::registry().counter("nmbkm_wal_fsyncs_total", &[]).inc();
+        }
+        Ok(())
+    }
+
+    /// Append one op record; returns its sequence number. Durable per
+    /// the fsync policy once this returns.
+    pub fn append(&self, header: &Json, body: &[u8]) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        let rec = encode_record(seq, header, body);
+        self.write_locked(&mut inner, &rec)?;
+        inner.next_seq += 1;
+        inner.seg_records += 1;
+        self.next_seq_m.store(inner.next_seq, Ordering::SeqCst);
+        obs::registry().counter("nmbkm_wal_appends_total", &[]).inc();
+        Ok(seq)
+    }
+
+    /// Append a batch of already-framed records verbatim (the follower
+    /// mirrors the primary's log bytes). Validates CRCs and seq
+    /// contiguity, enforces the epoch fence, and adopts a newer remote
+    /// epoch by rotating. Returns the last appended seq.
+    pub fn append_raw(&self, bytes: &[u8], remote_epoch: u64) -> Result<u64> {
+        let scan = scan_records(bytes);
+        if let Some(t) = scan.torn {
+            bail!("raw batch invalid: {t}");
+        }
+        ensure!(!scan.records.is_empty(), "raw batch holds no records");
+        let mut inner = self.inner.lock().unwrap();
+        ensure!(
+            remote_epoch >= inner.epoch,
+            "stale primary: batch epoch {} < local epoch {} (this node was promoted)",
+            remote_epoch,
+            inner.epoch
+        );
+        let first = scan.records[0].0.seq;
+        ensure!(
+            first == inner.next_seq,
+            "raw batch starts at seq {first}, expected {}",
+            inner.next_seq
+        );
+        for (i, (r, _)) in scan.records.iter().enumerate() {
+            ensure!(r.seq == first + i as u64, "raw batch seqs not contiguous");
+        }
+        if remote_epoch > inner.epoch {
+            self.rotate_locked(&mut inner, remote_epoch)?;
+        }
+        self.write_locked(&mut inner, bytes)?;
+        inner.next_seq = first + scan.records.len() as u64;
+        inner.seg_records += scan.records.len() as u64;
+        self.next_seq_m.store(inner.next_seq, Ordering::SeqCst);
+        obs::registry()
+            .counter("nmbkm_wal_appends_total", &[])
+            .add(scan.records.len() as u64);
+        Ok(inner.next_seq - 1)
+    }
+
+    /// Flush and fsync regardless of policy (drain / checkpoint path).
+    pub fn sync(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        self.sync_locked(&mut inner, true)
+    }
+
+    fn rotate_locked(&self, inner: &mut WalInner, new_epoch: u64) -> Result<()> {
+        if inner.seg_records == 0 && inner.seg_first == inner.next_seq {
+            if new_epoch == inner.epoch {
+                return Ok(()); // empty segment, nothing to rotate
+            }
+            // reuse the empty segment's name with the new epoch
+            fs::remove_file(&inner.seg_path).ok();
+        } else {
+            self.sync_locked(inner, true)?;
+        }
+        let path = Self::create_segment(&self.dir, new_epoch, inner.next_seq)?;
+        inner.file = OpenOptions::new().append(true).open(&path)?;
+        inner.seg_path = path;
+        inner.seg_first = inner.next_seq;
+        inner.seg_records = 0;
+        inner.epoch = new_epoch;
+        inner.dirty = false;
+        self.epoch_m.store(new_epoch, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Start a fresh segment at the current seq (checkpoints rotate so
+    /// older segments become deletable).
+    pub fn rotate(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let epoch = inner.epoch;
+        self.rotate_locked(&mut inner, epoch)
+    }
+
+    /// Adopt `epoch` if it is newer than ours (rotating into a segment
+    /// stamped with it). Rejects going backwards.
+    pub fn adopt_epoch(&self, epoch: u64) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        ensure!(
+            epoch >= inner.epoch,
+            "refusing to lower epoch {} to {epoch}",
+            inner.epoch
+        );
+        if epoch > inner.epoch {
+            self.rotate_locked(&mut inner, epoch)?;
+        }
+        Ok(())
+    }
+
+    /// Promotion: bump the epoch by one. Every record this node logs
+    /// from here on carries the new epoch, and [`append_raw`] (and the
+    /// follower's apply path) rejects batches from the old one.
+    pub fn bump_epoch(&self) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let epoch = inner.epoch + 1;
+        self.rotate_locked(&mut inner, epoch)?;
+        Ok(epoch)
+    }
+
+    /// Wipe the log and restart at `next_seq`/`epoch` — the follower's
+    /// bootstrap path (its history is replaced by shipped snapshots).
+    pub fn reset_to(&self, next_seq: u64, epoch: u64) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        for (_, path) in list_segments(&self.dir)? {
+            fs::remove_file(&path).ok();
+        }
+        fs::remove_file(self.dir.join(MANIFEST)).ok();
+        for entry in fs::read_dir(&self.dir)?.flatten() {
+            if let Some(name) = entry.file_name().to_str() {
+                if name.starts_with("ckpt-") && name.ends_with(".json") {
+                    fs::remove_file(entry.path()).ok();
+                }
+            }
+        }
+        let path = Self::create_segment(&self.dir, epoch, next_seq)?;
+        inner.file = OpenOptions::new().append(true).open(&path)?;
+        inner.seg_path = path;
+        inner.seg_first = next_seq;
+        inner.seg_records = 0;
+        inner.next_seq = next_seq;
+        inner.epoch = epoch;
+        inner.dirty = false;
+        self.next_seq_m.store(next_seq, Ordering::SeqCst);
+        self.epoch_m.store(epoch, Ordering::SeqCst);
+        self.bytes_since_ckpt.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Raw record bytes from `from` (capped near `max_bytes`, always at
+    /// least one record when any exists). Lock-free against appenders: a
+    /// record half-written while we read simply ends the scan and is
+    /// picked up whole by the next poll.
+    pub fn fetch(&self, from: u64, max_bytes: usize) -> Result<Fetch> {
+        let epoch = self.epoch();
+        let next_live = self.next_seq();
+        let segs = list_segments(&self.dir)?;
+        let oldest = segs.first().map(|(f, _)| *f).unwrap_or(next_live);
+        if from < oldest {
+            return Ok(Fetch { reset: true, from, next: from, epoch, count: 0, bytes: Vec::new() });
+        }
+        let mut out = Vec::new();
+        let mut count = 0u64;
+        let mut next = from;
+        'segs: for (first, path) in &segs {
+            // skip segments entirely below the cursor
+            if segs.iter().any(|(f2, _)| f2 > first && *f2 <= from) {
+                continue;
+            }
+            let buf = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+            if buf.len() < SEG_HEADER_LEN {
+                continue; // freshly rotated, header mid-write
+            }
+            parse_seg_header(&buf)?;
+            let scan = scan_records(&buf[SEG_HEADER_LEN..]);
+            for (rec, range) in &scan.records {
+                if rec.seq < from {
+                    continue;
+                }
+                if rec.seq != next {
+                    break 'segs; // gap (rotation race) — serve what we have
+                }
+                let raw = &buf[SEG_HEADER_LEN + range.start..SEG_HEADER_LEN + range.end];
+                if !out.is_empty() && out.len() + raw.len() > max_bytes {
+                    break 'segs;
+                }
+                out.extend_from_slice(raw);
+                count += 1;
+                next = rec.seq + 1;
+            }
+        }
+        Ok(Fetch { reset: false, from, next, epoch, count, bytes: out })
+    }
+
+    /// Bytes appended since the last completed checkpoint.
+    pub fn bytes_since_checkpoint(&self) -> u64 {
+        self.bytes_since_ckpt.load(Ordering::Relaxed)
+    }
+
+    /// Checkpoint iff the log has outgrown the configured threshold.
+    pub fn maybe_checkpoint(&self, registry: &ModelRegistry) -> Result<bool> {
+        if self.bytes_since_checkpoint() < self.checkpoint_bytes {
+            return Ok(false);
+        }
+        self.checkpoint(registry)
+    }
+
+    /// Snapshot every model, write the manifest, drop old segments.
+    /// Returns false when skipped (another thread checkpointing, or a
+    /// model that cannot be snapshotted yet — its history stays in the
+    /// log). Runs with no locks held on entry; takes each session lock
+    /// briefly while streaming that model's snapshot.
+    pub fn checkpoint(&self, registry: &ModelRegistry) -> Result<bool> {
+        if self.checkpointing.swap(true, Ordering::SeqCst) {
+            return Ok(false);
+        }
+        let out = self.checkpoint_inner(registry);
+        self.checkpointing.store(false, Ordering::SeqCst);
+        out
+    }
+
+    fn checkpoint_inner(&self, registry: &ModelRegistry) -> Result<bool> {
+        let checkpointable = |e: &crate::serve::registry::ModelEntry| {
+            e.with_session(|s| {
+                Ok(s.initialised() && matches!(s.cfg().algo, Algo::GbRho | Algo::TbRho))
+            })
+            .unwrap_or(false)
+        };
+        // cheap precheck before rotating (a skipped checkpoint should
+        // not litter segments)
+        if registry.entries().iter().any(|e| !checkpointable(e)) {
+            return Ok(false);
+        }
+        self.rotate()?;
+        // entries are re-listed *after* the rotation point: any model
+        // created or dropped from here on has its record in the new
+        // segment, which survives the truncation below
+        let entries = registry.entries();
+        let mut models = Vec::new();
+        for e in &entries {
+            if !checkpointable(e) {
+                return Ok(false); // created mid-checkpoint; retry later
+            }
+            let file = format!("ckpt-{}.json", e.name());
+            let path = self.dir.join(&file);
+            // the seq is read under the same session lock that guards
+            // the snapshot, so "state in the file" and "ops it covers"
+            // cannot be torn apart by a concurrent ingest
+            let seq = e.with_session(|s| {
+                let seq = e.last_seq();
+                s.save_snapshot(&path, true)?;
+                Ok(seq)
+            })?;
+            if let Ok(f) = File::open(&path) {
+                let _ = f.sync_all();
+            }
+            models.push((e.name().to_string(), file, seq));
+        }
+        let manifest = json::obj(vec![
+            ("version", json::num(1.0)),
+            ("epoch", u64_json(self.epoch())),
+            (
+                "models",
+                Json::Arr(
+                    models
+                        .iter()
+                        .map(|(name, file, seq)| {
+                            json::obj(vec![
+                                ("name", json::s(name)),
+                                ("file", json::s(file)),
+                                ("seq", u64_json(*seq)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let tmp = self.dir.join("manifest.json.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(manifest.to_string().as_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, self.dir.join(MANIFEST))?;
+        sync_dir(&self.dir);
+        // older segments are fully covered by the snapshots now
+        let active_first = self.inner.lock().unwrap().seg_first;
+        for (first, path) in list_segments(&self.dir)? {
+            if first < active_first {
+                fs::remove_file(&path).ok();
+            }
+        }
+        // snapshots of since-dropped models are garbage; collect them
+        let live: BTreeSet<String> = models.iter().map(|(_, f, _)| f.clone()).collect();
+        for entry in fs::read_dir(&self.dir)?.flatten() {
+            if let Some(name) = entry.file_name().to_str() {
+                if name.starts_with("ckpt-") && name.ends_with(".json") && !live.contains(name) {
+                    fs::remove_file(entry.path()).ok();
+                }
+            }
+        }
+        self.bytes_since_ckpt.store(0, Ordering::Relaxed);
+        obs::registry().counter("nmbkm_wal_checkpoints_total", &[]).inc();
+        Ok(true)
+    }
+
+    /// Graceful shutdown: flush + fsync whatever is buffered, then take
+    /// a final checkpoint so the next start resumes from snapshots
+    /// without replay. Checkpoint failures are non-fatal — the synced
+    /// log alone already recovers everything.
+    pub fn drain(&self, registry: &ModelRegistry) -> Result<()> {
+        self.sync()?;
+        if let Err(e) = self.checkpoint(registry) {
+            eprintln!("[nmbkm::wal] final checkpoint failed (log retained): {e:#}");
+        }
+        Ok(())
+    }
+}
+
+// ── replay ───────────────────────────────────────────────────────────
+
+/// What applying a record did: `Skipped` covers records already folded
+/// into a checkpoint snapshot and ops whose effects are unobservable
+/// (e.g. an ingest racing a drop that won — the model is gone either
+/// way).
+#[derive(Debug, PartialEq)]
+pub enum Applied {
+    Applied,
+    Skipped,
+}
+
+/// Apply one log record to the registry, **without** re-logging it.
+/// Idempotent against checkpoints via per-model `last_seq`: a record at
+/// or below the model's high-water mark is skipped. Deterministic:
+/// `rounds` in the header is the count the primary *actually ran*, and
+/// replay runs exactly those rounds with an infinite time budget.
+pub fn apply_record(registry: &ModelRegistry, rec: &WalRecord) -> Result<Applied> {
+    let h = &rec.header;
+    let op = h
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("record {} has no op", rec.seq))?;
+    let model = h
+        .get("model")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("record {} ({op}) has no model", rec.seq))?;
+    let entry = registry.resolve(Some(model)).ok();
+    if let Some(e) = &entry {
+        if e.last_seq() >= rec.seq {
+            return Ok(Applied::Skipped); // already in a checkpoint
+        }
+    }
+    match op {
+        "create" => {
+            ensure!(
+                entry.is_none(),
+                "record {}: create of existing model '{model}'",
+                rec.seq
+            );
+            let dim = h
+                .get("dim")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("record {}: create without dim", rec.seq))?;
+            let cfgv = h
+                .get("config")
+                .ok_or_else(|| anyhow!("record {}: create without config", rec.seq))?;
+            let cfg = RunConfig::from_json(cfgv)
+                .map_err(|e| anyhow!("record {}: bad config: {e}", rec.seq))?;
+            let mut session = OnlineSession::new(cfg, dim)?;
+            session.set_snapshot_dir(registry.snapshot_dir());
+            let e = registry.insert(model, session)?;
+            e.set_last_seq(rec.seq);
+        }
+        "ingest" | "step" => {
+            let Some(e) = entry else {
+                // the model was dropped later in the log: its pending
+                // mutations are unobservable, exactly as on the primary
+                return Ok(Applied::Skipped);
+            };
+            let rounds = h
+                .get("rounds")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("record {}: {op} without rounds", rec.seq))?;
+            // step is called even for rounds == 0: the live request
+            // path always calls it, and its unconditional try_init is a
+            // state transition replay must mirror at the same position
+            if op == "ingest" {
+                let rows = wire::decode_rows(&rec.body)
+                    .map_err(|er| anyhow!("record {}: bad ingest body: {er:#}", rec.seq))?;
+                e.with_session_mut(|s| {
+                    s.ingest_wire(&rows)?;
+                    s.step(rounds, f64::INFINITY)?;
+                    Ok(())
+                })?;
+            } else {
+                e.with_session_mut(|s| {
+                    s.step(rounds, f64::INFINITY)?;
+                    Ok(())
+                })?;
+            }
+            e.set_last_seq(rec.seq);
+        }
+        "drop" => {
+            if entry.is_none() {
+                return Ok(Applied::Skipped); // an earlier instance, already gone
+            }
+            registry.drop_model_unlogged(model)?;
+        }
+        other => bail!("record {}: unknown op '{other}'", rec.seq),
+    }
+    Ok(Applied::Applied)
+}
+
+// ── recovery ─────────────────────────────────────────────────────────
+
+/// Outcome of [`recover`]: the opened log plus what it took to rebuild
+/// the registry.
+pub struct Recovery {
+    pub wal: std::sync::Arc<Wal>,
+    pub resumed_models: usize,
+    pub replayed: u64,
+    pub skipped: u64,
+    pub truncated_bytes: u64,
+}
+
+/// Open (or initialise) the WAL directory and rebuild the registry:
+/// resume checkpointed models from the manifest, scan the segments,
+/// truncate a torn tail record in the last segment, replay the rest in
+/// seq order. The returned log continues appending where the old
+/// process stopped. Call [`ModelRegistry::attach_wal`] *after* this —
+/// replay must never re-log.
+pub fn recover(
+    dir: &Path,
+    policy: FsyncPolicy,
+    checkpoint_bytes: u64,
+    registry: &ModelRegistry,
+) -> Result<Recovery> {
+    fs::create_dir_all(dir).with_context(|| format!("creating wal dir {}", dir.display()))?;
+    let mut epoch = 1u64;
+    let mut next_seq = 1u64;
+    let mut resumed = 0usize;
+
+    // 1. checkpointed models from the manifest
+    let manifest_path = dir.join(MANIFEST);
+    if manifest_path.exists() {
+        let text = fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        ensure!(
+            v.get("version").and_then(Json::as_usize) == Some(1),
+            "manifest version unsupported"
+        );
+        epoch = epoch.max(u64_field(&v, "epoch")?);
+        let models = v
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for m in models {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest model without name"))?;
+            let file = m
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest model without file"))?;
+            let seq = u64_field(m, "seq")?;
+            let snap = Snapshot::load(&dir.join(file))
+                .with_context(|| format!("checkpoint snapshot for '{name}'"))?;
+            let mut session = OnlineSession::resume(snap)
+                .map_err(|e| anyhow!("resuming checkpoint '{name}': {e:#}"))?;
+            session.set_snapshot_dir(registry.snapshot_dir());
+            if registry.resolve(Some(name)).is_ok() {
+                // a CLI-preloaded model of the same name: the checkpoint
+                // is strictly newer (it descends from logged ops)
+                eprintln!("[nmbkm::wal] checkpoint supersedes preloaded model '{name}'");
+                registry.drop_model_unlogged(name)?;
+            }
+            let entry = registry.insert(name, session)?;
+            entry.set_last_seq(seq);
+            next_seq = next_seq.max(seq + 1);
+            resumed += 1;
+        }
+    }
+
+    // 2. scan segments in seq order, truncating a torn tail
+    let mut segs = list_segments(dir)?;
+    let mut replayed = 0u64;
+    let mut skipped = 0u64;
+    let mut truncated = 0u64;
+    let mut last_good: Option<(PathBuf, u64, u64)> = None; // path, first, records
+    let mut drop_last = false;
+    for (i, (first, path)) in segs.iter().enumerate() {
+        let is_last = i + 1 == segs.len();
+        let buf = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let header = parse_seg_header(&buf);
+        let (seg_epoch, seg_first) = match header {
+            Ok(h) => h,
+            Err(e) if is_last => {
+                // the final rotation died mid-header: no record ever
+                // made it in, so the file carries nothing
+                eprintln!(
+                    "[nmbkm::wal] dropping torn segment {}: {e:#}",
+                    path.display()
+                );
+                fs::remove_file(path).ok();
+                truncated += buf.len() as u64;
+                drop_last = true;
+                break;
+            }
+            Err(e) => return Err(e.context(format!("segment {}", path.display()))),
+        };
+        ensure!(
+            seg_first == *first,
+            "segment {} header first_seq {seg_first} != filename",
+            path.display()
+        );
+        epoch = epoch.max(seg_epoch);
+        let scan = scan_records(&buf[SEG_HEADER_LEN..]);
+        if let Some(reason) = &scan.torn {
+            if is_last {
+                let keep = SEG_HEADER_LEN + scan.clean_len;
+                truncated += (buf.len() - keep) as u64;
+                eprintln!(
+                    "[nmbkm::wal] truncating torn tail of {} at byte {keep}: {reason}",
+                    path.display()
+                );
+                let f = OpenOptions::new().write(true).open(path)?;
+                f.set_len(keep as u64)?;
+                f.sync_all()?;
+            } else {
+                bail!(
+                    "interior segment {} is corrupt ({reason}) — refusing to \
+                     skip acknowledged records; restore from a replica or \
+                     delete the wal dir to start fresh",
+                    path.display()
+                );
+            }
+        }
+        let mut expect = *first;
+        for (rec, _) in &scan.records {
+            ensure!(
+                rec.seq == expect,
+                "segment {}: record seq {} != expected {expect}",
+                path.display(),
+                rec.seq
+            );
+            expect += 1;
+            match apply_record(registry, rec)
+                .with_context(|| format!("replaying record {}", rec.seq))?
+            {
+                Applied::Applied => replayed += 1,
+                Applied::Skipped => skipped += 1,
+            }
+            next_seq = next_seq.max(rec.seq + 1);
+        }
+        last_good = Some((path.clone(), *first, scan.records.len() as u64));
+    }
+    if drop_last {
+        segs.pop();
+    }
+
+    // 3. open the active segment (reuse the truncated tail segment, or
+    // start a fresh one)
+    let wal = match last_good {
+        Some((path, first, records)) => Wal::open_inner(
+            dir.to_path_buf(),
+            policy,
+            checkpoint_bytes,
+            path,
+            first,
+            records,
+            next_seq,
+            epoch,
+        )?,
+        None => {
+            let path = Wal::create_segment(dir, epoch, next_seq)?;
+            Wal::open_inner(
+                dir.to_path_buf(),
+                policy,
+                checkpoint_bytes,
+                path,
+                next_seq,
+                0,
+                next_seq,
+                epoch,
+            )?
+        }
+    };
+    if replayed + skipped > 0 || resumed > 0 {
+        eprintln!(
+            "[nmbkm::wal] recovered {}: {resumed} model(s) from checkpoint, \
+             {replayed} record(s) replayed, {skipped} skipped, {truncated} \
+             torn byte(s) truncated (next seq {next_seq}, epoch {epoch})",
+            dir.display()
+        );
+    }
+    obs::registry()
+        .counter("nmbkm_wal_recovered_records_total", &[])
+        .add(replayed);
+    Ok(Recovery {
+        wal: std::sync::Arc::new(wal),
+        resumed_models: resumed,
+        replayed,
+        skipped,
+        truncated_bytes: truncated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_roundtrip_and_scan() {
+        let h1 = json::obj(vec![("op", json::s("step")), ("rounds", json::num(2.0))]);
+        let h2 = json::obj(vec![("op", json::s("drop"))]);
+        let mut buf = encode_record(7, &h1, b"body-bytes");
+        buf.extend_from_slice(&encode_record(8, &h2, b""));
+        let scan = scan_records(&buf);
+        assert!(scan.torn.is_none());
+        assert_eq!(scan.clean_len, buf.len());
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(scan.records[0].0.seq, 7);
+        assert_eq!(scan.records[0].0.body, b"body-bytes");
+        assert_eq!(scan.records[0].0.header.to_string(), h1.to_string());
+        assert_eq!(scan.records[1].0.seq, 8);
+        // every truncation yields exactly the records that fit
+        let first_len = scan.records[0].1.end;
+        for cut in 0..buf.len() {
+            let s = scan_records(&buf[..cut]);
+            let want = if cut >= first_len { 1 } else { 0 };
+            assert_eq!(s.records.len(), want, "cut {cut}");
+            assert!(cut == buf.len() || s.torn.is_some() || cut == first_len);
+        }
+        // a flipped byte invalidates exactly the record it sits in
+        let mut bad = buf.clone();
+        bad[first_len + 12] ^= 0x40;
+        let s = scan_records(&bad);
+        assert_eq!(s.records.len(), 1);
+        assert!(s.torn.is_some());
+    }
+
+    #[test]
+    fn fsync_policy_parses() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert_eq!(
+            FsyncPolicy::parse("interval:250").unwrap(),
+            FsyncPolicy::Interval(Duration::from_millis(250))
+        );
+        assert!(FsyncPolicy::parse("interval:").is_err());
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn u64_hex_json_roundtrip() {
+        let v = json::obj(vec![("seq", u64_json(u64::MAX))]);
+        assert_eq!(u64_field(&v, "seq").unwrap(), u64::MAX);
+        assert!(u64_field(&v, "missing").is_err());
+    }
+
+    #[test]
+    fn segment_header_roundtrip() {
+        let h = seg_header_bytes(3, 99);
+        assert_eq!(parse_seg_header(&h).unwrap(), (3, 99));
+        assert!(parse_seg_header(&h[..10]).is_err());
+        let mut bad = h;
+        bad[0] ^= 1;
+        assert!(parse_seg_header(&bad).is_err());
+    }
+}

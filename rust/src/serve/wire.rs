@@ -282,6 +282,103 @@ pub fn assemble(rows: &[WireRow], dim: usize, sparse: bool) -> Result<Data> {
     }
 }
 
+/// Binary encoding of a mixed dense/sparse row batch — the WAL's ingest
+/// record body. Layout (all little-endian):
+///
+/// ```text
+/// u32 n_rows, then per row:
+///   u8 tag = 1 (dense):  u32 dim | dim × f32
+///   u8 tag = 2 (sparse): u32 dim | u32 nnz | nnz × u32 idx | nnz × f32
+/// ```
+///
+/// Unlike the frame-body point blocks (`serve::frame`), rows here keep
+/// their original encoding and per-row dimension, so a decoded batch is
+/// exactly the `Vec<WireRow>` the primary ingested — replay feeds
+/// `ingest_wire` the same rows and gets the same bits.
+pub fn encode_rows(rows: &[WireRow]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + rows.iter().map(WireRow::stored).sum::<usize>() * 8);
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for row in rows {
+        match row {
+            WireRow::Dense(r) => {
+                out.push(1);
+                out.extend_from_slice(&(r.len() as u32).to_le_bytes());
+                for x in r {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WireRow::Sparse { dim, idx, vals } => {
+                out.push(2);
+                out.extend_from_slice(&(*dim as u32).to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for c in idx {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+                for x in vals {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Decode an [`encode_rows`] batch, re-validating every row through the
+/// same [`dense_row`]/[`sparse_row`] boundary as live ingress (a corrupt
+/// log record must fail loudly, not poison the statistics).
+pub fn decode_rows(bytes: &[u8]) -> Result<Vec<WireRow>> {
+    fn take<'a>(bytes: &'a [u8], at: &mut usize, n: usize) -> Result<&'a [u8]> {
+        let end = at
+            .checked_add(n)
+            .filter(|&e| e <= bytes.len())
+            .ok_or_else(|| anyhow!("row batch truncated at byte {at}"))?;
+        let s = &bytes[*at..end];
+        *at = end;
+        Ok(s)
+    }
+    fn take_u32(bytes: &[u8], at: &mut usize) -> Result<u32> {
+        Ok(u32::from_le_bytes(take(bytes, at, 4)?.try_into().unwrap()))
+    }
+    fn take_f32s(bytes: &[u8], at: &mut usize, n: usize) -> Result<Vec<f32>> {
+        let cnt = n.checked_mul(4).ok_or_else(|| anyhow!("row length overflow"))?;
+        Ok(take(bytes, at, cnt)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    let mut at = 0usize;
+    let n = take_u32(bytes, &mut at)? as usize;
+    ensure!(
+        n <= bytes.len(), // each row costs ≥ 5 bytes; cheap pre-alloc cap
+        "row batch claims {n} rows in {} bytes",
+        bytes.len()
+    );
+    let mut rows = Vec::with_capacity(n);
+    for t in 0..n {
+        let tag = take(bytes, &mut at, 1)?[0];
+        let dim = take_u32(bytes, &mut at)? as usize;
+        let row = match tag {
+            1 => dense_row(take_f32s(bytes, &mut at, dim)?),
+            2 => {
+                let nnz = take_u32(bytes, &mut at)? as usize;
+                let cnt = nnz
+                    .checked_mul(4)
+                    .ok_or_else(|| anyhow!("row {t}: nnz overflow"))?;
+                let idx: Vec<u32> = take(bytes, &mut at, cnt)?
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let vals = take_f32s(bytes, &mut at, nnz)?;
+                sparse_row(dim, idx, vals)
+            }
+            other => bail!("row {t}: unknown encoding tag {other}"),
+        };
+        rows.push(row.map_err(|e| anyhow!("row {t}: {e:#}"))?);
+    }
+    ensure!(at == bytes.len(), "row batch has {} trailing bytes", bytes.len() - at);
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,6 +482,31 @@ mod tests {
         assert_eq!(rows[0].dim(), 3);
         assert_eq!(rows[1].stored(), 2);
         assert!(rows_from_json(&Json::parse(r#"{"op":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn row_batch_binary_roundtrip() {
+        let rows = vec![
+            WireRow::Dense(vec![1.0, -2.5, 0.0]),
+            sparse_row(9, vec![1, 7], vec![0.5, -1.5]).unwrap(),
+            WireRow::Dense(vec![]),
+            sparse_row(4, vec![], vec![]).unwrap(),
+        ];
+        let bytes = encode_rows(&rows);
+        let back = decode_rows(&bytes).unwrap();
+        assert_eq!(back, rows);
+        // every truncation fails cleanly instead of panicking
+        for cut in 0..bytes.len() {
+            assert!(decode_rows(&bytes[..cut]).is_err(), "accepted cut at {cut}");
+        }
+        // trailing garbage is rejected (a record must be exactly one batch)
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(decode_rows(&padded).is_err());
+        // unknown tag
+        let mut bad = bytes.clone();
+        bad[4] = 9;
+        assert!(decode_rows(&bad).is_err());
     }
 
     #[test]

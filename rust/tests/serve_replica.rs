@@ -1,0 +1,326 @@
+//! Integration tests for follower replication (`serve::replica`): a
+//! follower tailing a primary's WAL over real TCP converges to
+//! byte-identical model state and byte-identical predict responses,
+//! refuses local mutations until promoted, and — once promoted — fences
+//! out the stale primary's epoch. A second test forces the snapshot
+//! bootstrap path by truncating the primary's log behind checkpoints.
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::data::Data;
+use nmbkm::serve::protocol::{self, Request};
+use nmbkm::serve::replica;
+use nmbkm::serve::server::serve_listener_opts;
+use nmbkm::serve::wal::{self, FsyncPolicy};
+use nmbkm::serve::{ModelRegistry, WireRow};
+use nmbkm::util::json::{self, Json};
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+const NO_CKPT: u64 = u64::MAX;
+
+fn cfg(k: usize, b0: usize) -> RunConfig {
+    RunConfig {
+        algo: Algo::TbRho,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 11,
+        max_rounds: 50,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("nmbkm-replica-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn rows(data: &Data, lo: usize, hi: usize) -> Vec<WireRow> {
+    let mut row = vec![0f32; data.dim()];
+    (lo..hi)
+        .map(|i| {
+            data.write_row_dense(i, &mut row);
+            WireRow::Dense(row.clone())
+        })
+        .collect()
+}
+
+fn exec(reg: &ModelRegistry, req: &Request) -> Json {
+    let (resp, _) = protocol::handle_request(reg, req);
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "request failed: {}",
+        resp.to_string()
+    );
+    resp
+}
+
+fn ingest(reg: &ModelRegistry, name: &str, data: &Data, lo: usize, hi: usize, rounds: usize) {
+    exec(
+        reg,
+        &Request::Ingest {
+            model: Some(name.to_string()),
+            points: rows(data, lo, hi),
+            rounds,
+            seconds: f64::INFINITY,
+        },
+    );
+}
+
+fn model_bytes(reg: &ModelRegistry, name: &str) -> String {
+    reg.resolve(Some(name))
+        .unwrap()
+        .with_session(|s| Ok(s.snapshot(true)?.to_json().to_string()))
+        .unwrap()
+}
+
+/// Primary (or follower) with an attached WAL, serving binary+JSONL on
+/// an ephemeral port.
+fn node(
+    dir: &Path,
+    ckpt_bytes: u64,
+) -> (Arc<ModelRegistry>, Arc<wal::Wal>, String, thread::JoinHandle<anyhow::Result<()>>) {
+    let reg = Arc::new(ModelRegistry::new());
+    let rec = wal::recover(dir, FsyncPolicy::Always, ckpt_bytes, &reg).unwrap();
+    reg.attach_wal(rec.wal.clone());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = {
+        let r = reg.clone();
+        thread::spawn(move || serve_listener_opts(r, listener, true))
+    };
+    (reg, rec.wal, addr, server)
+}
+
+/// One JSONL request/response round trip on a fresh connection.
+fn jsonl(addr: &str, line: &str) -> String {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut w = s.try_clone().unwrap();
+    writeln!(w, "{line}").unwrap();
+    let mut out = String::new();
+    BufReader::new(s).read_line(&mut out).unwrap();
+    out
+}
+
+fn predict_line(data: &Data, lo: usize, hi: usize) -> String {
+    let mut row = vec![0f32; data.dim()];
+    let pts: Vec<Json> = (lo..hi)
+        .map(|i| {
+            data.write_row_dense(i, &mut row);
+            Json::Arr(row.iter().map(|&x| json::num(x as f64)).collect())
+        })
+        .collect();
+    json::obj(vec![
+        ("op", json::s("predict")),
+        ("model", json::s("m1")),
+        ("points", Json::Arr(pts)),
+    ])
+    .to_string()
+}
+
+fn wait_until(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < timeout {
+        if f() {
+            return true;
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+    f()
+}
+
+/// Applied high-water equality: the follower has not just mirrored the
+/// bytes (next_seq) but finished replaying them into the model.
+fn caught_up(p: &ModelRegistry, f: &ModelRegistry, name: &str) -> bool {
+    let ps = p.resolve(Some(name)).map(|e| e.last_seq()).unwrap_or(u64::MAX);
+    let fseq = f.resolve(Some(name)).map(|e| e.last_seq()).unwrap_or(0);
+    ps == fseq
+}
+
+#[test]
+fn follower_mirrors_primary_and_promote_fences_old_epoch() {
+    let data = GaussianMixture::default_spec(4, 6).generate(200, 9);
+    let pdir = tmpdir("tail-prim");
+    let fdir = tmpdir("tail-fol");
+
+    let (preg, pwal, paddr, pserver) = node(&pdir, NO_CKPT);
+    exec(
+        &preg,
+        &Request::Create { model: Some("m1".into()), dim: data.dim(), cfg: cfg(4, 16) },
+    );
+    ingest(&preg, "m1", &data, 0, 60, 2);
+    ingest(&preg, "m1", &data, 60, 120, 2);
+
+    let (freg, fwal, faddr, fserver) = node(&fdir, NO_CKPT);
+    freg.set_follower(true);
+    let stop = Arc::new(AtomicBool::new(false));
+    let tail = replica::spawn_follower(freg.clone(), paddr.clone(), stop.clone());
+
+    // catch up on the backlog
+    assert!(
+        wait_until(Duration::from_secs(30), || {
+            fwal.next_seq() == pwal.next_seq() && caught_up(&preg, &freg, "m1")
+        }),
+        "follower never caught up with the backlog"
+    );
+    assert_eq!(
+        model_bytes(&freg, "m1"),
+        model_bytes(&preg, "m1"),
+        "follower state must be byte-identical after bootstrap-free tailing"
+    );
+
+    // live tail: mutations land while the follower is connected
+    ingest(&preg, "m1", &data, 120, 200, 3);
+    exec(&preg, &Request::Step { model: Some("m1".into()), rounds: 1, seconds: f64::INFINITY });
+    assert!(
+        wait_until(Duration::from_secs(30), || {
+            fwal.next_seq() == pwal.next_seq() && caught_up(&preg, &freg, "m1")
+        }),
+        "follower never caught up with live traffic"
+    );
+    assert_eq!(
+        model_bytes(&freg, "m1"),
+        model_bytes(&preg, "m1"),
+        "follower state must stay byte-identical under live tailing"
+    );
+
+    // byte-identical predict responses over the wire
+    let q = predict_line(&data, 0, 5);
+    let from_primary = jsonl(&paddr, &q);
+    let from_follower = jsonl(&faddr, &q);
+    assert!(from_primary.contains("\"ok\":true"), "{from_primary}");
+    assert_eq!(
+        from_primary, from_follower,
+        "predict responses must match byte-for-byte"
+    );
+
+    // a follower refuses local mutations
+    let (resp, _) = protocol::handle_request(
+        &freg,
+        &Request::Step { model: Some("m1".into()), rounds: 1, seconds: f64::INFINITY },
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(
+        resp.get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .contains("read-only follower"),
+        "unexpected refusal: {}",
+        resp.to_string()
+    );
+
+    // promote over the wire: epoch bumps, the tail thread exits
+    let old_epoch = pwal.epoch();
+    let promoted = jsonl(&faddr, "{\"op\":\"promote\"}");
+    assert_eq!(
+        Json::parse(&promoted).unwrap().get("ok").and_then(Json::as_bool),
+        Some(true),
+        "{promoted}"
+    );
+    assert_eq!(fwal.epoch(), old_epoch + 1);
+    stop.store(true, Ordering::SeqCst);
+    tail.join().unwrap();
+
+    // the stale primary's epoch is fenced out of the promoted node
+    let rec = wal::encode_record(
+        fwal.next_seq(),
+        &json::obj(vec![
+            ("op", json::s("step")),
+            ("model", json::s("m1")),
+            ("rounds", json::num(0.0)),
+        ]),
+        &[],
+    );
+    let err = fwal.append_raw(&rec, old_epoch).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("stale primary"),
+        "unexpected fence error: {err:#}"
+    );
+
+    // and the promoted node accepts mutations again
+    exec(&freg, &Request::Step { model: Some("m1".into()), rounds: 1, seconds: f64::INFINITY });
+
+    let _ = jsonl(&paddr, "{\"op\":\"shutdown\"}");
+    let _ = jsonl(&faddr, "{\"op\":\"shutdown\"}");
+    pserver.join().unwrap().unwrap();
+    fserver.join().unwrap().unwrap();
+    let _ = fs::remove_dir_all(&pdir);
+    let _ = fs::remove_dir_all(&fdir);
+}
+
+#[test]
+fn follower_bootstraps_when_primary_log_is_truncated() {
+    let data = GaussianMixture::default_spec(4, 6).generate(130, 11);
+    let pdir = tmpdir("boot-prim");
+    let fdir = tmpdir("boot-fol");
+
+    // 1-byte checkpoint threshold: the log is truncated behind a
+    // checkpoint after every mutation, so a fresh follower cannot tail
+    // from seq 1 — it must bootstrap from shipped snapshots
+    let (preg, pwal, paddr, pserver) = node(&pdir, 1);
+    exec(
+        &preg,
+        &Request::Create { model: Some("m1".into()), dim: data.dim(), cfg: cfg(4, 16) },
+    );
+    ingest(&preg, "m1", &data, 0, 50, 2);
+    ingest(&preg, "m1", &data, 50, 90, 2);
+    exec(
+        &preg,
+        &Request::Create { model: Some("m2".into()), dim: data.dim(), cfg: cfg(2, 8) },
+    );
+    ingest(&preg, "m2", &data, 0, 30, 1);
+    assert!(
+        pwal.oldest_retained().unwrap() > 1,
+        "primary log should be truncated behind checkpoints"
+    );
+
+    let (freg, fwal, faddr, fserver) = node(&fdir, NO_CKPT);
+    freg.set_follower(true);
+    let stop = Arc::new(AtomicBool::new(false));
+    let tail = replica::spawn_follower(freg.clone(), paddr.clone(), stop.clone());
+
+    assert!(
+        wait_until(Duration::from_secs(30), || {
+            fwal.next_seq() == pwal.next_seq()
+                && caught_up(&preg, &freg, "m1")
+                && caught_up(&preg, &freg, "m2")
+        }),
+        "follower never bootstrapped"
+    );
+    assert_eq!(model_bytes(&freg, "m1"), model_bytes(&preg, "m1"));
+    assert_eq!(model_bytes(&freg, "m2"), model_bytes(&preg, "m2"));
+
+    // ops keep flowing after the bootstrap; the follower stays in sync
+    ingest(&preg, "m1", &data, 90, 130, 2);
+    assert!(
+        wait_until(Duration::from_secs(30), || {
+            fwal.next_seq() == pwal.next_seq() && caught_up(&preg, &freg, "m1")
+        }),
+        "follower fell behind after bootstrap"
+    );
+    assert_eq!(model_bytes(&freg, "m1"), model_bytes(&preg, "m1"));
+
+    stop.store(true, Ordering::SeqCst);
+    tail.join().unwrap();
+    let _ = jsonl(&paddr, "{\"op\":\"shutdown\"}");
+    let _ = jsonl(&faddr, "{\"op\":\"shutdown\"}");
+    pserver.join().unwrap().unwrap();
+    fserver.join().unwrap().unwrap();
+    let _ = fs::remove_dir_all(&pdir);
+    let _ = fs::remove_dir_all(&fdir);
+}

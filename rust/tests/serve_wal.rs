@@ -1,0 +1,446 @@
+//! Integration tests for the durable op log (`serve::wal`): crash
+//! recovery replays the log into a bit-identical registry, truncating
+//! the log at *every byte offset* recovers the longest clean prefix, a
+//! graceful drain leaves nothing to replay, threshold checkpoints cut
+//! the log, and corrupt inputs fail with clean errors instead of
+//! replaying garbage.
+//!
+//! "Crash" here means dropping the primary registry without calling
+//! `drain` — with `--fsync always` every acknowledged record is already
+//! on disk, which is exactly the state a SIGKILL leaves behind (the CI
+//! smoke test kills a real process; these tests cover the byte-level
+//! contract).
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::data::Data;
+use nmbkm::serve::protocol::{self, Request};
+use nmbkm::serve::wal::{self, FsyncPolicy};
+use nmbkm::serve::{ModelRegistry, WireRow};
+use nmbkm::util::json::Json;
+use std::fs;
+use std::path::PathBuf;
+
+/// Checkpoint threshold high enough that no test checkpoints unless it
+/// asks to: recovery must come from the log alone.
+const NO_CKPT: u64 = u64::MAX;
+
+fn cfg(k: usize, b0: usize) -> RunConfig {
+    RunConfig {
+        algo: Algo::TbRho,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 11,
+        max_rounds: 50,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("nmbkm-serve-wal-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn rows(data: &Data, lo: usize, hi: usize) -> Vec<WireRow> {
+    let mut row = vec![0f32; data.dim()];
+    (lo..hi)
+        .map(|i| {
+            data.write_row_dense(i, &mut row);
+            WireRow::Dense(row.clone())
+        })
+        .collect()
+}
+
+/// Run one request through the real protocol layer (so WAL appends and
+/// post-request checkpoints fire exactly as they do in production).
+fn exec(reg: &ModelRegistry, req: &Request) -> Json {
+    let (resp, _) = protocol::handle_request(reg, req);
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "request failed: {}",
+        resp.to_string()
+    );
+    resp
+}
+
+/// The model's full serialised state — the bit-identity yardstick.
+fn model_bytes(reg: &ModelRegistry, name: &str) -> String {
+    reg.resolve(Some(name))
+        .unwrap()
+        .with_session(|s| Ok(s.snapshot(true)?.to_json().to_string()))
+        .unwrap()
+}
+
+fn model(name: &str) -> Option<String> {
+    Some(name.to_string())
+}
+
+/// A mixed workload: two models, ingests, a data-free step, a drop.
+fn drive_phase1(reg: &ModelRegistry, data: &Data) {
+    exec(reg, &Request::Create { model: model("m1"), dim: data.dim(), cfg: cfg(4, 16) });
+    exec(
+        reg,
+        &Request::Ingest {
+            model: model("m1"),
+            points: rows(data, 0, 40),
+            rounds: 2,
+            seconds: f64::INFINITY,
+        },
+    );
+    exec(
+        reg,
+        &Request::Ingest {
+            model: model("m1"),
+            points: rows(data, 40, 90),
+            rounds: 3,
+            seconds: f64::INFINITY,
+        },
+    );
+    exec(reg, &Request::Step { model: model("m1"), rounds: 1, seconds: f64::INFINITY });
+    exec(reg, &Request::Create { model: model("scratch"), dim: data.dim(), cfg: cfg(2, 8) });
+    exec(
+        reg,
+        &Request::Ingest {
+            model: model("scratch"),
+            points: rows(data, 0, 20),
+            rounds: 1,
+            seconds: f64::INFINITY,
+        },
+    );
+    exec(reg, &Request::Drop { model: "scratch".to_string() });
+}
+
+fn drive_phase2(reg: &ModelRegistry, data: &Data) {
+    exec(
+        reg,
+        &Request::Ingest {
+            model: model("m1"),
+            points: rows(data, 90, 130),
+            rounds: 2,
+            seconds: f64::INFINITY,
+        },
+    );
+    exec(reg, &Request::Step { model: model("m1"), rounds: 2, seconds: f64::INFINITY });
+}
+
+#[test]
+fn crash_recovery_is_bit_identical() {
+    let data = GaussianMixture::default_spec(4, 6).generate(130, 7);
+
+    // reference: identical ops with no wal anywhere in the loop
+    let reference = ModelRegistry::new();
+    drive_phase1(&reference, &data);
+    let want = model_bytes(&reference, "m1");
+
+    // primary: same ops, every record fsynced; then "crash" (no drain)
+    let dir = tmpdir("crash");
+    let primary = ModelRegistry::new();
+    let rec = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &primary).unwrap();
+    assert_eq!((rec.resumed_models, rec.replayed, rec.skipped), (0, 0, 0));
+    primary.attach_wal(rec.wal.clone());
+    drive_phase1(&primary, &data);
+    assert_eq!(
+        model_bytes(&primary, "m1"),
+        want,
+        "wal appends must not perturb training"
+    );
+    let logged = rec.wal.next_seq() - 1;
+    assert!(logged >= 6, "expected >= 6 logged mutations, got {logged}");
+    drop(primary);
+
+    let revived = ModelRegistry::new();
+    let rec2 = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &revived).unwrap();
+    assert_eq!(rec2.resumed_models, 0, "no checkpoint was ever cut");
+    assert_eq!(rec2.replayed + rec2.skipped, logged);
+    assert_eq!(rec2.wal.next_seq(), logged + 1);
+    assert_eq!(model_bytes(&revived, "m1"), want);
+    assert!(
+        revived.resolve(Some("scratch")).is_err(),
+        "dropped model must stay dropped through replay"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncating_wal_at_every_byte_recovers_longest_clean_prefix() {
+    // magic(8) + version(1) + epoch(8) + first_seq(8)
+    const SEG_HEADER_LEN: usize = 25;
+    let data = GaussianMixture::default_spec(2, 3).generate(24, 3);
+
+    let dir = tmpdir("trunc-src");
+    let reg = ModelRegistry::new();
+    let rec = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &reg).unwrap();
+    reg.attach_wal(rec.wal.clone());
+    exec(&reg, &Request::Create { model: model("t"), dim: data.dim(), cfg: cfg(2, 4) });
+    exec(
+        &reg,
+        &Request::Ingest {
+            model: model("t"),
+            points: rows(&data, 0, 8),
+            rounds: 1,
+            seconds: f64::INFINITY,
+        },
+    );
+    exec(
+        &reg,
+        &Request::Ingest {
+            model: model("t"),
+            points: rows(&data, 8, 16),
+            rounds: 2,
+            seconds: f64::INFINITY,
+        },
+    );
+    exec(&reg, &Request::Step { model: model("t"), rounds: 1, seconds: f64::INFINITY });
+    exec(
+        &reg,
+        &Request::Ingest {
+            model: model("t"),
+            points: rows(&data, 16, 24),
+            rounds: 1,
+            seconds: f64::INFINITY,
+        },
+    );
+    let live = model_bytes(&reg, "t");
+
+    let segs: Vec<PathBuf> = fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "log"))
+        .collect();
+    assert_eq!(segs.len(), 1, "workload should fit one segment");
+    let full = fs::read(&segs[0]).unwrap();
+    let seg_name = segs[0].file_name().unwrap().to_owned();
+    let scan = wal::scan_records(&full[SEG_HEADER_LEN..]);
+    assert!(scan.torn.is_none());
+    let n_records = scan.records.len();
+    assert!(n_records >= 4, "expected >= 4 records, got {n_records}");
+
+    // expected state after replaying exactly r records, for every r;
+    // the full prefix must also equal the live run bit-for-bit
+    let mut want: Vec<Option<String>> = Vec::new();
+    for r in 0..=n_records {
+        let fresh = ModelRegistry::new();
+        for (record, _) in &scan.records[..r] {
+            wal::apply_record(&fresh, record).unwrap();
+        }
+        want.push(
+            fresh
+                .resolve(Some("t"))
+                .ok()
+                .map(|_| model_bytes(&fresh, "t")),
+        );
+    }
+    assert_eq!(want[n_records].as_deref(), Some(live.as_str()));
+
+    let work = tmpdir("trunc-work");
+    for cut in 0..=full.len() {
+        let _ = fs::remove_dir_all(&work);
+        fs::create_dir_all(&work).unwrap();
+        fs::write(work.join(&seg_name), &full[..cut]).unwrap();
+        let revived = ModelRegistry::new();
+        let out = wal::recover(&work, FsyncPolicy::Never, NO_CKPT, &revived)
+            .unwrap_or_else(|e| panic!("recover failed at cut {cut}: {e:#}"));
+        // the longest clean prefix: records fully inside the cut
+        let r = if cut < SEG_HEADER_LEN {
+            0
+        } else {
+            scan.records
+                .iter()
+                .take_while(|(_, range)| SEG_HEADER_LEN + range.end <= cut)
+                .count()
+        };
+        assert_eq!(out.replayed as usize, r, "cut {cut}");
+        assert_eq!(out.wal.next_seq(), r as u64 + 1, "cut {cut}");
+        assert_eq!(
+            revived
+                .resolve(Some("t"))
+                .ok()
+                .map(|_| model_bytes(&revived, "t")),
+            want[r],
+            "cut {cut}: recovered state must match a clean {r}-record replay"
+        );
+    }
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&work);
+}
+
+#[test]
+fn graceful_drain_leaves_nothing_to_replay() {
+    let data = GaussianMixture::default_spec(4, 6).generate(130, 7);
+    let reference = ModelRegistry::new();
+    drive_phase1(&reference, &data);
+    drive_phase2(&reference, &data);
+    let want = model_bytes(&reference, "m1");
+
+    let dir = tmpdir("drain");
+    let a = ModelRegistry::new();
+    let rec =
+        wal::recover(&dir, FsyncPolicy::parse("interval:5").unwrap(), NO_CKPT, &a)
+            .unwrap();
+    a.attach_wal(rec.wal.clone());
+    drive_phase1(&a, &data);
+    rec.wal.drain(&a).unwrap(); // graceful shutdown: sync + final checkpoint
+    assert!(dir.join("manifest.json").exists());
+
+    // restart resumes from the checkpoint — zero records to replay
+    let b = ModelRegistry::new();
+    let rec2 = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &b).unwrap();
+    assert_eq!(rec2.replayed, 0, "clean shutdown must leave an empty log");
+    assert_eq!(rec2.resumed_models, 1);
+    b.attach_wal(rec2.wal.clone());
+    drive_phase2(&b, &data);
+    assert_eq!(
+        model_bytes(&b, "m1"),
+        want,
+        "checkpoint resume + fresh ops must retrace the uninterrupted run"
+    );
+    drop(b);
+
+    // crash after phase 2: recovery = checkpoint + phase-2 replay
+    let c = ModelRegistry::new();
+    let rec3 = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &c).unwrap();
+    assert_eq!(rec3.resumed_models, 1);
+    assert!(rec3.replayed >= 1);
+    assert_eq!(model_bytes(&c, "m1"), want);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoints_truncate_the_log() {
+    let data = GaussianMixture::default_spec(4, 6).generate(130, 7);
+    let reference = ModelRegistry::new();
+    drive_phase1(&reference, &data);
+    let want = model_bytes(&reference, "m1");
+
+    let dir = tmpdir("ckpt");
+    let a = ModelRegistry::new();
+    // 1-byte threshold: every mutation trips the post-request checkpoint
+    let rec = wal::recover(&dir, FsyncPolicy::Always, 1, &a).unwrap();
+    a.attach_wal(rec.wal.clone());
+    drive_phase1(&a, &data);
+    assert_eq!(model_bytes(&a, "m1"), want);
+
+    // every acknowledged record is behind the checkpoint: the log is cut
+    assert_eq!(rec.wal.oldest_retained().unwrap(), rec.wal.next_seq());
+    assert!(dir.join("manifest.json").exists());
+    assert!(dir.join("ckpt-m1.json").exists());
+    assert!(
+        !dir.join("ckpt-scratch.json").exists(),
+        "dropped model's checkpoint snapshot must be collected"
+    );
+
+    let b = ModelRegistry::new();
+    let rec2 = wal::recover(&dir, FsyncPolicy::Always, 1, &b).unwrap();
+    assert_eq!((rec2.resumed_models, rec2.replayed), (1, 0));
+    assert_eq!(model_bytes(&b, "m1"), want);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_wal_inputs_fail_cleanly() {
+    let data = GaussianMixture::default_spec(2, 3).generate(24, 3);
+
+    // two segments, so segment 1 is *interior* — corruption there must
+    // refuse recovery rather than silently skip acknowledged records
+    let dir = tmpdir("corrupt");
+    let reg = ModelRegistry::new();
+    let rec = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &reg).unwrap();
+    reg.attach_wal(rec.wal.clone());
+    exec(&reg, &Request::Create { model: model("t"), dim: data.dim(), cfg: cfg(2, 4) });
+    exec(
+        &reg,
+        &Request::Ingest {
+            model: model("t"),
+            points: rows(&data, 0, 12),
+            rounds: 1,
+            seconds: f64::INFINITY,
+        },
+    );
+    rec.wal.rotate().unwrap();
+    exec(
+        &reg,
+        &Request::Ingest {
+            model: model("t"),
+            points: rows(&data, 12, 24),
+            rounds: 1,
+            seconds: f64::INFINITY,
+        },
+    );
+    let live = model_bytes(&reg, "t");
+
+    let mut segs: Vec<PathBuf> = fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "log"))
+        .collect();
+    segs.sort();
+    assert_eq!(segs.len(), 2);
+    let good = fs::read(&segs[0]).unwrap();
+
+    // corrupt interior segment header (magic byte)
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    fs::write(&segs[0], &bad).unwrap();
+    let err = match wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &ModelRegistry::new()) {
+        Ok(_) => panic!("corrupt interior segment header must fail recovery"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err:#}").contains("segment"),
+        "unexpected error: {err:#}"
+    );
+
+    // corrupt interior record payload (crc mismatch)
+    let mut bad = good.clone();
+    let at = bad.len() - 4;
+    bad[at] ^= 0xff;
+    fs::write(&segs[0], &bad).unwrap();
+    let err = match wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &ModelRegistry::new()) {
+        Ok(_) => panic!("corrupt interior record must fail recovery"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err:#}").contains("refusing to skip acknowledged records"),
+        "unexpected error: {err:#}"
+    );
+
+    // restore → recovery works again and is still bit-identical
+    fs::write(&segs[0], &good).unwrap();
+    let reg2 = ModelRegistry::new();
+    let rec2 = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &reg2).unwrap();
+    assert_eq!(model_bytes(&reg2, "t"), live);
+
+    // manifest corruption: parse error, bad version, dangling file ref
+    rec2.wal.drain(&reg2).unwrap();
+    let manifest = dir.join("manifest.json");
+    let good_manifest = fs::read_to_string(&manifest).unwrap();
+    for bad in [
+        "{",
+        "{\"version\":2,\"epoch\":\"1\",\"models\":[]}",
+        "{\"version\":1,\"epoch\":\"1\",\"models\":[{\"name\":\"x\",\"file\":\"nope.json\",\"seq\":\"1\"}]}",
+    ] {
+        fs::write(&manifest, bad).unwrap();
+        assert!(
+            wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &ModelRegistry::new())
+                .is_err(),
+            "manifest {bad:?} must fail recovery"
+        );
+    }
+
+    // a corrupt checkpoint snapshot errors cleanly too (never panics)
+    fs::write(&manifest, &good_manifest).unwrap();
+    fs::write(dir.join("ckpt-t.json"), "not a snapshot").unwrap();
+    assert!(
+        wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &ModelRegistry::new())
+            .is_err(),
+        "garbage checkpoint snapshot must fail recovery"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
