@@ -10,8 +10,9 @@
 use nmbkm::bench::{BenchOpts, BenchReport, BenchSet};
 use nmbkm::coordinator::Pool;
 use nmbkm::data::{gaussian::GaussianMixture, infmnist::InfMnist, rcv1::Rcv1Sim, Storage};
-use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel};
+use nmbkm::kmeans::assign::{AssignEngine, NativeEngine, Sel, Strategy};
 use nmbkm::kmeans::{bounds, init};
+use nmbkm::linalg::neighbours::NeighbourRows;
 use nmbkm::linalg::simd::{self, Tier};
 use nmbkm::linalg::sparse::{spdot, TransposedCentroids};
 use nmbkm::util::json;
@@ -283,6 +284,87 @@ fn main() {
         bs / bi
     );
     report.meta("speedup_assign_sparse_k64_1t", json::num(bs / bi));
+    report.push(set);
+
+    // --- serving-scale k: exponion pruning (dense, k=4096) -----------------
+    // the acceptance comparison for the exponion engine: same mixture,
+    // disjoint point/centroid draws so no point sits exactly on a
+    // centroid, forced-Flat vs Auto (which resolves to exponion at this
+    // k). Wall-clock speedup AND the counter-backed dist-calc reduction
+    // both go into the report meta — the counters are the trend gate,
+    // wall clock is context.
+    let kbig = 4096usize;
+    let xspec = GaussianMixture::default_spec(256, 64);
+    let xdata = xspec.generate(4_096, 11);
+    let xcent = init::first_k(&xspec.generate(kbig, 12), kbig);
+    let mut set = BenchSet::new("assign dense serving-scale (4k pts, k=4096)", opts);
+    let flat_eng = NativeEngine::default().with_strategy(Strategy::Flat);
+    let exp_eng = NativeEngine::default().with_strategy(Strategy::Auto);
+    let mut xl = vec![0u32; xdata.n()];
+    let mut xd = vec![0f32; xdata.n()];
+    set.bench("flat scan 1 thread", || {
+        flat_eng.assign(&xdata, Sel::Range(0, xdata.n()), &xcent, &Pool::new(1), &mut xl, &mut xd)
+    });
+    set.bench("exponion 1 thread", || {
+        exp_eng.assign(&xdata, Sel::Range(0, xdata.n()), &xcent, &Pool::new(1), &mut xl, &mut xd)
+    });
+    if threads > 1 {
+        set.bench(&format!("exponion {threads} threads"), || {
+            exp_eng.assign(&xdata, Sel::Range(0, xdata.n()), &xcent, &pool_n, &mut xl, &mut xd)
+        });
+    }
+    set.bench("neighbour rows build k=4096 d=64", || {
+        NeighbourRows::build(active, &xcent.c).nn_mean
+    });
+    let t_flat = set.get("flat scan 1 thread").unwrap().min_secs();
+    let t_exp = set.get("exponion 1 thread").unwrap().min_secs();
+    let (ep, ee) = exp_eng.strategy_tally().snapshot()[2];
+    let dense_reduction = if ee > 0 { ep as f64 * kbig as f64 / ee as f64 } else { 1.0 };
+    println!(
+        "     → exponion {:.2}x wall clock, {:.1}x fewer distance calcs (k=4096)",
+        t_flat / t_exp,
+        dense_reduction
+    );
+    report.meta("speedup_assign_dense_k4096", json::num(t_flat / t_exp));
+    report.meta("calc_reduction_dense_k4096", json::num(dense_reduction));
+    report.push(set);
+
+    // --- serving-scale k: sparse strategy shoot-out (k=1024) ---------------
+    // the three strategies side by side on a CSR corpus whose vocab is
+    // under EXPONION_SPARSE_MAX_D, so Auto resolves to exponion
+    let svc = Rcv1Sim { vocab: 2_000, topic_vocab: 400, ..Rcv1Sim::default() };
+    let ksp = 1024usize;
+    let ysdata = svc.generate(6_000, 13);
+    let yscent = init::first_k(&ysdata, ksp);
+    let sflat_eng = NativeEngine::default().with_strategy(Strategy::Flat);
+    let snorm_eng = NativeEngine::default().with_strategy(Strategy::Norm);
+    let sexp_eng = NativeEngine::default().with_strategy(Strategy::Auto);
+    let mut yl = vec![0u32; ysdata.n()];
+    let mut yd = vec![0f32; ysdata.n()];
+    let mut set = BenchSet::new("assign sparse serving-scale (6k rows, k=1024)", opts);
+    set.bench("flat scan 1 thread", || {
+        sflat_eng.assign(&ysdata, Sel::Range(0, ysdata.n()), &yscent, &Pool::new(1), &mut yl, &mut yd)
+    });
+    set.bench("norm-prune 1 thread", || {
+        snorm_eng.assign(&ysdata, Sel::Range(0, ysdata.n()), &yscent, &Pool::new(1), &mut yl, &mut yd)
+    });
+    set.bench("exponion 1 thread", || {
+        sexp_eng.assign(&ysdata, Sel::Range(0, ysdata.n()), &yscent, &Pool::new(1), &mut yl, &mut yd)
+    });
+    let st_flat = set.get("flat scan 1 thread").unwrap().min_secs();
+    let st_norm = set.get("norm-prune 1 thread").unwrap().min_secs();
+    let st_exp = set.get("exponion 1 thread").unwrap().min_secs();
+    let (sp, se) = sexp_eng.strategy_tally().snapshot()[2];
+    let sparse_reduction = if se > 0 { sp as f64 * ksp as f64 / se as f64 } else { 1.0 };
+    println!(
+        "     → sparse k=1024: exponion {:.2}x vs flat, {:.2}x vs norm-prune, {:.1}x fewer dot evals",
+        st_flat / st_exp,
+        st_norm / st_exp,
+        sparse_reduction
+    );
+    report.meta("speedup_assign_sparse_k1024", json::num(st_flat / st_exp));
+    report.meta("speedup_exp_vs_norm_sparse_k1024", json::num(st_norm / st_exp));
+    report.meta("calc_reduction_sparse_k1024", json::num(sparse_reduction));
     report.push(set);
 
     // --- bound machinery ---------------------------------------------------

@@ -19,6 +19,7 @@
 use crate::coordinator::shard::{chunk_ranges, split_outputs, Pool};
 use crate::data::{Data, Storage};
 use crate::kmeans::state::Centroids;
+use crate::linalg::neighbours::{self, NeighbourCache, NeighbourIndex};
 use crate::linalg::simd;
 use crate::linalg::sparse::{self, TransposedCentroids};
 use crate::obs;
@@ -65,6 +66,97 @@ fn flush_kernel_stats(stats: &sparse::BlockStats, blocks: u64) {
     kc.prune_points_swept.add(stats.points_swept);
     kc.prune_centroids_evaluated.add(stats.centroids_evaluated);
     kc.prune_centroids_skipped.add(stats.centroids_skipped);
+}
+
+/// Which pruning scheme the nearest-centroid scan runs. The choice can
+/// never change results — every strategy is bit-identical to the flat
+/// scan on the faithful tiers — only how many centroid evaluations it
+/// takes to get there, so it is safe to pick adaptively.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Strategy {
+    /// Per-chunk adaptive pick: exponion when the neighbour structure
+    /// is live, otherwise norm-prune vs flat by the norm-spread
+    /// precheck.
+    #[default]
+    Auto,
+    /// Unpruned scan — cheapest per evaluation; what Auto picks on
+    /// normalised corpora where norm bounds are provably inert.
+    Flat,
+    /// Norm-bound candidate pruning (the sparse row-blocked kernel).
+    Norm,
+    /// Exponion ball pruning over the sorted neighbour structure.
+    Exponion,
+}
+
+/// Indexes into the per-strategy tallies / counters.
+const S_FLAT: usize = 0;
+const S_NORM: usize = 1;
+const S_EXP: usize = 2;
+const STRATEGY_NAMES: [&str; 3] = ["flat", "norm", "exponion"];
+
+/// Per-engine tallies of points assigned and centroid evaluations per
+/// *resolved* strategy. Tests assert prune effectiveness through these
+/// (race-free: the global obs counters aggregate every engine in the
+/// process, including concurrently running tests).
+#[derive(Debug, Default)]
+pub struct StrategyTally {
+    points: [AtomicU64; 3],
+    evals: [AtomicU64; 3],
+}
+
+impl StrategyTally {
+    fn add(&self, s: usize, points: u64, evals: u64) {
+        self.points[s].fetch_add(points, Ordering::Relaxed);
+        self.evals[s].fetch_add(evals, Ordering::Relaxed);
+    }
+
+    /// `[(points, evaluations); 3]` in flat/norm/exponion order.
+    pub fn snapshot(&self) -> [(u64, u64); 3] {
+        [S_FLAT, S_NORM, S_EXP].map(|s| {
+            (
+                self.points[s].load(Ordering::Relaxed),
+                self.evals[s].load(Ordering::Relaxed),
+            )
+        })
+    }
+}
+
+/// Global per-strategy prune-rate counters
+/// (`nmbkm_assign_points_total{strategy=…}` /
+/// `nmbkm_assign_centroids_evaluated_total{strategy=…}`), interned once.
+struct StrategyCounters {
+    points: [Arc<obs::Counter>; 3],
+    evals: [Arc<obs::Counter>; 3],
+}
+
+fn strategy_counters() -> &'static StrategyCounters {
+    static S: OnceLock<StrategyCounters> = OnceLock::new();
+    S.get_or_init(|| {
+        let reg = obs::registry();
+        StrategyCounters {
+            points: STRATEGY_NAMES.map(|n| {
+                reg.counter("nmbkm_assign_points_total", &[("strategy", n)])
+            }),
+            evals: STRATEGY_NAMES.map(|n| {
+                reg.counter(
+                    "nmbkm_assign_centroids_evaluated_total",
+                    &[("strategy", n)],
+                )
+            }),
+        }
+    })
+}
+
+/// Flush one chunk's per-strategy tallies: the engine-local tally and
+/// the global obs counters, once per chunk (never on the point path).
+fn flush_strategy(tally: &StrategyTally, s: usize, points: u64, evals: u64) {
+    if points == 0 {
+        return;
+    }
+    tally.add(s, points, evals);
+    let sc = strategy_counters();
+    sc.points[s].add(points);
+    sc.evals[s].add(evals);
 }
 
 /// A selection of datapoint indices to (re)assign.
@@ -187,6 +279,52 @@ pub trait AssignEngine {
     ) -> u64 {
         self.assign(data, sel, centroids, pool, out_lbl, out_d2)
     }
+
+    /// `(hits, builds, syncs)` of the engine's exponion neighbour
+    /// cache, when it keeps one (observability; scraped into the serve
+    /// metrics registry next to the transpose-cache counters).
+    fn neigh_cache_stats(&self) -> Option<(u64, u64, u64)> {
+        None
+    }
+
+    /// A shared handle on the engine's neighbour cache, for lock-free
+    /// metric scrapes (same rationale as
+    /// [`AssignEngine::trans_cache_handle`]).
+    fn neigh_cache_handle(&self) -> Option<Arc<NeighbourCache>> {
+        None
+    }
+
+    /// A shareable exponion neighbour structure at this centroid
+    /// revision, when the engine keeps one worth sharing. The serve
+    /// layer freezes it into published model views so predicts reuse
+    /// the training session's O(k²·d) build — zero rebuilds between
+    /// publishes.
+    fn neigh_handle(
+        &self,
+        _centroids: &Centroids,
+    ) -> Option<Arc<NeighbourIndex>> {
+        None
+    }
+
+    /// [`AssignEngine::assign_with_trans`] plus an externally shared
+    /// exponion neighbour structure. Both handles are frozen by the
+    /// publisher together with `centroids`; engines without pruned
+    /// paths ignore what they can't use. Results are bit-identical
+    /// whichever handles arrive.
+    #[allow(clippy::too_many_arguments)]
+    fn assign_with_handles(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        trans: Option<Arc<TransposedCentroids>>,
+        _neigh: Option<Arc<NeighbourIndex>>,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64 {
+        self.assign_with_trans(data, sel, centroids, pool, trans, out_lbl, out_d2)
+    }
 }
 
 /// Pure-rust engine; the correctness reference. Each instance owns its
@@ -198,6 +336,9 @@ pub trait AssignEngine {
 #[derive(Clone, Debug, Default)]
 pub struct NativeEngine {
     cache: Arc<TransCache>,
+    neigh: Arc<NeighbourCache>,
+    strategy: Strategy,
+    tally: Arc<StrategyTally>,
 }
 
 impl NativeEngine {
@@ -206,8 +347,26 @@ impl NativeEngine {
         &self.cache
     }
 
+    /// The engine's exponion neighbour cache.
+    pub fn neigh_cache(&self) -> &NeighbourCache {
+        &self.neigh
+    }
+
+    /// Per-strategy (points, evaluations) tallies for this engine.
+    pub fn strategy_tally(&self) -> &StrategyTally {
+        &self.tally
+    }
+
+    /// Pin the pruning strategy (benches and parity tests; serving
+    /// leaves the default `Auto`).
+    pub fn with_strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
     /// The sharded assignment core: fan the selection out over the pool
-    /// with an already-resolved (or absent) transposed block.
+    /// with already-resolved (or absent) transpose/neighbour handles.
+    #[allow(clippy::too_many_arguments)]
     fn assign_sharded(
         &self,
         data: &Data,
@@ -215,6 +374,7 @@ impl NativeEngine {
         centroids: &Centroids,
         pool: &Pool,
         trans: Option<&TransposedCentroids>,
+        neigh: Option<&NeighbourIndex>,
         out_lbl: &mut [u32],
         out_d2: &mut [f32],
     ) -> u64 {
@@ -224,15 +384,101 @@ impl NativeEngine {
         if n == 0 {
             return 0;
         }
+        // chunk-invariant half of the adaptive precheck, hoisted out of
+        // the sharded closures
+        let flat_c = norm_spread_flat(&centroids.norms);
         let ranges = chunk_ranges(n, pool.threads, MIN_CHUNK);
         let views = split_outputs(&ranges, out_lbl, out_d2);
         // pair each view with its range and fan out over the pool
         let jobs: Vec<_> = ranges.into_iter().zip(views).collect();
         let k = centroids.k() as u64;
+        let strategy = self.strategy;
+        let tally = &self.tally;
         pool.run_jobs(jobs, |_, (r, (vl, vd))| {
-            assign_serial(data, &sel, r, centroids, trans, vl, vd);
+            assign_serial(
+                data, &sel, r, centroids, trans, neigh, strategy, flat_c,
+                tally, vl, vd,
+            );
         });
         n as u64 * k
+    }
+}
+
+/// Auto only pays the O(k²·d) neighbour build beyond this k — under it
+/// the flat/norm kernels win outright. Forced `Strategy::Exponion`
+/// builds at any k ≥ 2.
+pub const EXPONION_MIN_K: usize = 512;
+
+/// Auto skips exponion for sparse data above this dimensionality: the
+/// dense k×k build is O(k²·d) in the *full* vocab, which RCV1-scale
+/// vocabularies (47k) would pay on every centroid rebuild.
+pub const EXPONION_SPARSE_MAX_D: usize = 8192;
+
+/// Footprint cap on the k×(k−1) neighbour structure.
+pub(crate) const NEIGH_MAX_BYTES: usize = 256 << 20;
+
+/// Norm-prune precheck: when centroid and point √norms each sit within
+/// this relative spread, every norm lower bound collapses to (nearly)
+/// the same value and pruning is provably inert — run the flat kernel.
+const NORM_SPREAD_MIN: f64 = 0.05;
+
+/// `true` when √norm spread is too narrow for norm bounds to prune.
+fn spread_is_flat(lo: f32, hi: f32) -> bool {
+    let (lo, hi) = ((lo.max(0.0) as f64).sqrt(), (hi.max(0.0) as f64).sqrt());
+    hi <= 0.0 || (hi - lo) <= NORM_SPREAD_MIN * hi
+}
+
+/// Centroid half of the precheck (chunk-invariant).
+fn norm_spread_flat(cnorms: &[f32]) -> bool {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &n in cnorms {
+        lo = lo.min(n);
+        hi = hi.max(n);
+    }
+    spread_is_flat(lo, hi)
+}
+
+/// Point half of the precheck, over one chunk's selection.
+fn chunk_points_flat(data: &Data, sel: &Sel, range: &std::ops::Range<usize>) -> bool {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for t in range.clone() {
+        let n = data.norms[sel.nth(t)];
+        lo = lo.min(n);
+        hi = hi.max(n);
+    }
+    spread_is_flat(lo, hi)
+}
+
+/// Resolve the neighbour structure for this call, or `None` when
+/// exponion shouldn't run. A revision-matched structure already in the
+/// cache is free at any size (probe never builds); Auto pays a build
+/// only past the serving-scale gates, a forced `Strategy::Exponion`
+/// always does.
+fn neigh_for(
+    cache: &NeighbourCache,
+    data: &Data,
+    centroids: &Centroids,
+    n_points: usize,
+    strategy: Strategy,
+) -> Option<Arc<NeighbourIndex>> {
+    let (k, d) = (centroids.k(), centroids.d());
+    if k < 2 || neighbours::NeighbourRows::bytes_for(k) > NEIGH_MAX_BYTES {
+        return None;
+    }
+    match strategy {
+        Strategy::Exponion => Some(cache.get(centroids, simd::tier())),
+        Strategy::Auto => {
+            if let Some(ni) = cache.probe(centroids) {
+                return Some(ni);
+            }
+            let build = k >= EXPONION_MIN_K
+                && n_points >= 64
+                && (!data.is_sparse() || d <= EXPONION_SPARSE_MAX_D);
+            build.then(|| cache.get(centroids, simd::tier()))
+        }
+        Strategy::Flat | Strategy::Norm => None,
     }
 }
 
@@ -265,12 +511,15 @@ impl AssignEngine for NativeEngine {
         // sparse fast path: transposed centroids turn per-nnz gathers
         // into sequential k-length AXPYs (EXPERIMENTS.md §Perf, ~2x)
         let trans = transposed_for(&self.cache, data, centroids, sel.len());
+        let neigh =
+            neigh_for(&self.neigh, data, centroids, sel.len(), self.strategy);
         self.assign_sharded(
             data,
             sel,
             centroids,
             pool,
             trans.as_deref(),
+            neigh.as_deref(),
             out_lbl,
             out_d2,
         )
@@ -286,31 +535,71 @@ impl AssignEngine for NativeEngine {
         out_lbl: &mut [u32],
         out_d2: &mut [f32],
     ) -> u64 {
-        let usable = trans.filter(|tc| {
+        self.assign_with_handles(
+            data, sel, centroids, pool, trans, None, out_lbl, out_d2,
+        )
+    }
+
+    fn assign_with_handles(
+        &self,
+        data: &Data,
+        sel: Sel,
+        centroids: &Centroids,
+        pool: &Pool,
+        trans: Option<Arc<TransposedCentroids>>,
+        neigh: Option<Arc<NeighbourIndex>>,
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> u64 {
+        if sel.is_empty() {
+            return self.assign(data, sel, centroids, pool, out_lbl, out_d2);
+        }
+        // shared-handle fast path: the caller froze these together with
+        // `centroids`, so no cache lookup happens at all — concurrent
+        // callers holding different revisions can never force a rebuild
+        // here. Recorded as hits for counter parity with the cached
+        // paths.
+        let usable_t = trans.filter(|tc| {
             data.is_sparse()
                 && tc.k == centroids.k()
                 && tc.d == centroids.d()
         });
-        match usable {
-            Some(tc) if !sel.is_empty() => {
-                // shared-transpose fast path: the caller froze this
-                // block together with `centroids`, so no cache lookup
-                // happens at all — concurrent callers holding different
-                // revisions can never force a rebuild here. Recorded as
-                // a hit for counter parity with the cached path.
-                self.cache.note_shared();
-                self.assign_sharded(
-                    data,
-                    sel,
-                    centroids,
-                    pool,
-                    Some(tc.as_ref()),
-                    out_lbl,
-                    out_d2,
-                )
-            }
-            _ => self.assign(data, sel, centroids, pool, out_lbl, out_d2),
+        if usable_t.is_some() {
+            self.cache.note_shared();
         }
+        let usable_n = neigh.filter(|ni| {
+            ni.rev == centroids.rev
+                && ni.k() == centroids.k()
+                && ni.d() == centroids.d()
+        });
+        if usable_n.is_some() {
+            self.neigh.note_shared();
+        }
+        // handles the caller didn't bring resolve through this engine's
+        // own caches — probe-only for the neighbour structure: a
+        // predict engine must never pay an O(k²·d) build per query
+        let t_local = if usable_t.is_none() {
+            transposed_for(&self.cache, data, centroids, sel.len())
+        } else {
+            None
+        };
+        let n_local = if usable_n.is_none()
+            && matches!(self.strategy, Strategy::Auto | Strategy::Exponion)
+        {
+            self.neigh.probe(centroids)
+        } else {
+            None
+        };
+        self.assign_sharded(
+            data,
+            sel,
+            centroids,
+            pool,
+            usable_t.as_deref().or(t_local.as_deref()),
+            usable_n.as_deref().or(n_local.as_deref()),
+            out_lbl,
+            out_d2,
+        )
     }
 
     fn dist_rows(
@@ -371,6 +660,34 @@ impl AssignEngine for NativeEngine {
         }
         Some(self.cache.fetch(centroids))
     }
+
+    fn neigh_cache_stats(&self) -> Option<(u64, u64, u64)> {
+        Some(self.neigh.stats())
+    }
+
+    fn neigh_cache_handle(&self) -> Option<Arc<NeighbourCache>> {
+        Some(self.neigh.clone())
+    }
+
+    fn neigh_handle(
+        &self,
+        centroids: &Centroids,
+    ) -> Option<Arc<NeighbourIndex>> {
+        let k = centroids.k();
+        if k < 2
+            || neighbours::NeighbourRows::bytes_for(k) > NEIGH_MAX_BYTES
+            || !matches!(self.strategy, Strategy::Auto | Strategy::Exponion)
+        {
+            return None;
+        }
+        if let Some(ni) = self.neigh.probe(centroids) {
+            return Some(ni);
+        }
+        // publishing is rare enough to amortise a build at serving
+        // scale; below the Auto gate only a pinned-Exponion engine pays
+        (self.strategy == Strategy::Exponion || k >= EXPONION_MIN_K)
+            .then(|| self.neigh.get(centroids, simd::tier()))
+    }
 }
 
 /// Per-engine transpose cache keyed on [`Centroids::rev`]: within a
@@ -382,10 +699,27 @@ impl AssignEngine for NativeEngine {
 /// influence results.
 #[derive(Debug, Default)]
 pub struct TransCache {
-    slot: Mutex<Option<(u64, Arc<TransposedCentroids>)>>,
+    slot: Mutex<TransSlot>,
     hits: AtomicU64,
     builds: AtomicU64,
 }
+
+/// The cache slot plus a small free-list of retired blocks. A retired
+/// block is one that was current until a publish (or another reader)
+/// pinned it past its revision: it couldn't be rebuilt in place at the
+/// time, but once the pinning reader drops — the next publish swapping
+/// its view out — the allocation comes back here and the warm path is
+/// allocation-free again.
+#[derive(Debug, Default)]
+struct TransSlot {
+    cur: Option<(u64, Arc<TransposedCentroids>)>,
+    retired: Vec<Arc<TransposedCentroids>>,
+}
+
+/// Retired blocks kept per cache. One slot covers the steady publish
+/// cadence (one pinned view at a time); a few more absorb bursts of
+/// overlapping readers without holding dead k·d blocks forever.
+const RETIRED_MAX: usize = 4;
 
 impl TransCache {
     /// Revision-matched transposes served without a rebuild.
@@ -403,26 +737,56 @@ impl TransCache {
     /// hit), or `None`. This is the warm-path gate: a probe never
     /// triggers a build.
     pub fn probe(&self, centroids: &Centroids) -> Option<Arc<TransposedCentroids>> {
-        let tc = cache_lookup(&self.slot.lock().unwrap(), centroids)?;
+        let tc = cache_lookup(&self.slot.lock().unwrap().cur, centroids)?;
         self.hits.fetch_add(1, Ordering::Relaxed);
         Some(tc)
     }
 
     /// Fetch the transpose for this centroid revision, building (and
-    /// caching) it on a miss. On a miss the stale entry's allocation is
-    /// reclaimed and rebuilt in place when no reader still holds it —
-    /// steady-state *training* stops reallocating O(k·d) every centroid
-    /// revision. (A session whose transpose is pinned by a published
-    /// model view still allocates fresh per publish: the view
-    /// legitimately holds the old block until the next publish swaps it
-    /// out.) The fill runs outside the slot lock so a large transpose
-    /// never serialises concurrent readers of the slot.
+    /// caching) it on a miss. On a miss the stale entry's allocation —
+    /// or a previously retired one whose pinning reader has since
+    /// dropped — is reclaimed and rebuilt in place, so steady-state
+    /// training *and* the publish cadence stop reallocating O(k·d)
+    /// every centroid revision. Entries still pinned by a reader (a
+    /// published model view holds its block until the next publish
+    /// swaps it out) park on the retired list until they free up. The
+    /// fill runs outside the slot lock so a large transpose never
+    /// serialises concurrent readers of the slot.
     pub fn fetch(&self, centroids: &Centroids) -> Arc<TransposedCentroids> {
         if let Some(tc) = self.probe(centroids) {
             return tc;
         }
-        let old = self.slot.lock().unwrap().take();
-        let tc = match old.and_then(|(_, arc)| Arc::try_unwrap(arc).ok()) {
+        let reclaimed = {
+            let mut slot = self.slot.lock().unwrap();
+            let TransSlot { cur, retired } = &mut *slot;
+            if let Some((_, arc)) = cur.take() {
+                retired.push(arc);
+            }
+            // oldest-first scan: earlier retirees are the most likely
+            // to have been unpinned by now
+            let mut got = None;
+            let mut p = 0;
+            while p < retired.len() {
+                if Arc::strong_count(&retired[p]) == 1 {
+                    match Arc::try_unwrap(retired.swap_remove(p)) {
+                        Ok(t) => {
+                            got = Some(t);
+                            break;
+                        }
+                        // a reader cloned it between the count check
+                        // and the unwrap; park it again
+                        Err(arc) => retired.push(arc),
+                    }
+                }
+                p += 1;
+            }
+            if retired.len() > RETIRED_MAX {
+                let excess = retired.len() - RETIRED_MAX;
+                retired.drain(..excess);
+            }
+            got
+        };
+        let tc = match reclaimed {
             Some(mut t) => {
                 t.rebuild(&centroids.c);
                 Arc::new(t)
@@ -430,7 +794,7 @@ impl TransCache {
             None => Arc::new(TransposedCentroids::build(&centroids.c)),
         };
         self.builds.fetch_add(1, Ordering::Relaxed);
-        *self.slot.lock().unwrap() = Some((centroids.rev, tc.clone()));
+        self.slot.lock().unwrap().cur = Some((centroids.rev, tc.clone()));
         tc
     }
 
@@ -492,21 +856,66 @@ fn transposed_for(
     Some(cache.fetch(centroids))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn assign_serial(
     data: &Data,
     sel: &Sel,
     range: std::ops::Range<usize>,
     centroids: &Centroids,
     trans: Option<&TransposedCentroids>,
+    neigh: Option<&NeighbourIndex>,
+    strategy: Strategy,
+    flat_centroids: bool,
+    tally: &StrategyTally,
     out_lbl: &mut [u32],
     out_d2: &mut [f32],
 ) {
+    let use_exp =
+        neigh.is_some() && matches!(strategy, Strategy::Auto | Strategy::Exponion);
     match (trans, &data.storage) {
+        (Some(tc), Storage::Sparse(m)) if use_exp => {
+            // exponion over the transpose: norm bounds seed the ball,
+            // the sorted neighbour row cuts the walk — bit-identical to
+            // the unpruned sweep
+            let ni = neigh.unwrap();
+            let k = tc.k;
+            let mut lbs = vec![0f32; k];
+            let mut points = 0u64;
+            let mut evals = 0u64;
+            for (slot, t) in range.clone().enumerate() {
+                let i = sel.nth(t);
+                let (idx, vals) = m.row(i);
+                let (j, d2, ev) = neighbours::nearest_sparse_exponion(
+                    tc,
+                    idx,
+                    vals,
+                    data.norms[i],
+                    &centroids.norms,
+                    ni,
+                    &mut lbs,
+                );
+                out_lbl[slot] = j;
+                out_d2[slot] = d2;
+                points += 1;
+                evals += ev as u64;
+            }
+            if points > 0 {
+                simd::note_dispatch(simd::tier(), points);
+            }
+            flush_strategy(tally, S_EXP, points, evals);
+        }
         (Some(tc), Storage::Sparse(m)) => {
-            // row-blocked + norm-pruned: points go through the
-            // transpose in SPARSE_BLOCK batches (phase-separated
-            // pruning/AXPY keeps the shared d×k strips cache-resident)
-            // — bit-identical to the per-point unpruned scan
+            // row-blocked: points go through the transpose in
+            // SPARSE_BLOCK batches (phase-separated pruning/AXPY keeps
+            // the shared d×k strips cache-resident) — bit-identical to
+            // the per-point unpruned scan. The adaptive precheck drops
+            // the norm-prune phase when bounds are provably inert
+            // (normalised corpora), where it was pure overhead.
+            let use_flat = match strategy {
+                Strategy::Flat => true,
+                Strategy::Norm => false,
+                _ => flat_centroids && chunk_points_flat(data, sel, &range),
+            };
             let k = tc.k;
             let mut scratch = vec![0f32; k];
             let mut lbs = vec![0f32; k];
@@ -524,19 +933,39 @@ fn assign_serial(
                     xns[o] = data.norms[i];
                 }
                 let base = t0 - range.start;
-                stats.merge(tc.nearest_block(
-                    &rows[..p],
-                    &xns[..p],
-                    &centroids.norms,
-                    &mut lbs,
-                    &mut scratch,
-                    &mut out_lbl[base..base + p],
-                    &mut out_d2[base..base + p],
-                ));
+                if use_flat {
+                    stats.merge(tc.nearest_block_flat(
+                        &rows[..p],
+                        &xns[..p],
+                        &centroids.norms,
+                        &mut scratch,
+                        &mut out_lbl[base..base + p],
+                        &mut out_d2[base..base + p],
+                    ));
+                } else {
+                    stats.merge(tc.nearest_block(
+                        &rows[..p],
+                        &xns[..p],
+                        &centroids.norms,
+                        &mut lbs,
+                        &mut scratch,
+                        &mut out_lbl[base..base + p],
+                        &mut out_d2[base..base + p],
+                    ));
+                }
                 blocks += 1;
                 t0 += p;
             }
-            flush_kernel_stats(&stats, blocks);
+            let points = (range.end - range.start) as u64;
+            if use_flat {
+                if blocks > 0 {
+                    simd::note_dispatch(simd::tier(), blocks);
+                }
+                flush_strategy(tally, S_FLAT, points, stats.centroids_evaluated);
+            } else {
+                flush_kernel_stats(&stats, blocks);
+                flush_strategy(tally, S_NORM, points, stats.centroids_evaluated);
+            }
         }
         (_, Storage::Sparse(m)) => {
             for (slot, t) in range.clone().enumerate() {
@@ -552,6 +981,36 @@ fn assign_serial(
                 out_lbl[slot] = j;
                 out_d2[slot] = d2;
             }
+            let points = (range.end - range.start) as u64;
+            flush_strategy(tally, S_FLAT, points, points * centroids.k() as u64);
+        }
+        (_, Storage::Dense(m)) if use_exp => {
+            // exponion over dense rows: strided probes seed the ball,
+            // the sorted neighbour row cuts the walk — bit-identical to
+            // the flat scan
+            let ni = neigh.unwrap();
+            let tier = simd::tier();
+            let mut points = 0u64;
+            let mut evals = 0u64;
+            for (slot, t) in range.clone().enumerate() {
+                let i = sel.nth(t);
+                let (j, d2, ev) = neighbours::nearest_dense_exponion(
+                    tier,
+                    m.row(i),
+                    data.norms[i],
+                    &centroids.c,
+                    &centroids.norms,
+                    ni,
+                );
+                out_lbl[slot] = j;
+                out_d2[slot] = d2;
+                points += 1;
+                evals += ev as u64;
+            }
+            if points > 0 {
+                simd::note_dispatch(tier, points);
+            }
+            flush_strategy(tally, S_EXP, points, evals);
         }
         (_, Storage::Dense(m)) => {
             // point-blocked: a 4-row centroid strip stays in cache
@@ -582,6 +1041,8 @@ fn assign_serial(
                 t0 += p;
             }
             simd::note_dispatch(tier, blocks);
+            let points = (range.end - range.start) as u64;
+            flush_strategy(tally, S_FLAT, points, points * centroids.k() as u64);
         }
     }
 }
@@ -968,6 +1429,210 @@ mod tests {
         assert_eq!(li, lbl2);
         assert_eq!(bits(&d2), bits(&d2b));
         assert_eq!(bits(&di), bits(&d2b));
+    }
+
+    #[test]
+    fn dense_auto_exponion_bit_identical_and_prunes_at_serving_k() {
+        // serving-scale k crosses the Auto gate: the engine must build
+        // the neighbour structure once, route every point through the
+        // exponion path, evaluate strictly fewer centroids than n·k —
+        // and stay bit-identical to the flat-scan engine
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // the opt-in FMA tier is documented as unfaithful
+        }
+        let n = 700;
+        let k = EXPONION_MIN_K + 88;
+        let data = GaussianMixture::default_spec(8, 8).generate(n, 11);
+        let cent = init::first_k(&data, k);
+        let pool = Pool::new(2);
+        let auto = NativeEngine::default();
+        let flat = NativeEngine::default().with_strategy(Strategy::Flat);
+        let mut la = vec![0u32; n];
+        let mut da = vec![0f32; n];
+        let mut lf = vec![0u32; n];
+        let mut df = vec![0f32; n];
+        auto.assign(&data, Sel::Range(0, n), &cent, &pool, &mut la, &mut da);
+        flat.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lf, &mut df);
+        assert_eq!(la, lf);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&da), bits(&df));
+        let (hits, builds, syncs) = auto.neigh_cache_stats().unwrap();
+        assert_eq!((hits, builds, syncs), (0, 1, 0));
+        let [(fp, _), (np, _), (ep, ee)] = auto.strategy_tally().snapshot();
+        assert_eq!((fp, np), (0, 0), "auto must route all points to exponion");
+        assert_eq!(ep, n as u64);
+        assert!(
+            ee < (n * k) as u64 / 2,
+            "exponion evaluated {ee} of {} centroid distances",
+            n * k
+        );
+        let [(fp2, fe2), ..] = flat.strategy_tally().snapshot();
+        assert_eq!((fp2, fe2), (n as u64, (n * k) as u64));
+        // second round at the same revision probe-hits, never rebuilds
+        auto.assign(&data, Sel::Range(0, n), &cent, &pool, &mut la, &mut da);
+        let (hits2, builds2, _) = auto.neigh_cache_stats().unwrap();
+        assert_eq!((hits2, builds2), (1, 1));
+    }
+
+    #[test]
+    fn sparse_exponion_engine_bit_identical_across_strategies() {
+        // forced strategies on the same sparse batch must agree bit for
+        // bit: exponion == norm-pruned == flat sweep == gather oracle
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // the opt-in FMA tier is documented as unfaithful
+        }
+        let n = 300;
+        let k = 24;
+        let data = Rcv1Sim {
+            vocab: 400,
+            topic_vocab: 50,
+            ..Default::default()
+        }
+        .generate(n, 5);
+        let cent = init::first_k(&data, k);
+        let pool = Pool::new(2);
+        let mut out: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+        for s in [Strategy::Exponion, Strategy::Norm, Strategy::Flat] {
+            let eng = NativeEngine::default().with_strategy(s);
+            let mut lbl = vec![0u32; n];
+            let mut d2 = vec![0f32; n];
+            eng.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lbl, &mut d2);
+            let [(fp, _), (np, _), (ep, _)] = eng.strategy_tally().snapshot();
+            let routed = match s {
+                Strategy::Exponion => ep,
+                Strategy::Norm => np,
+                _ => fp,
+            };
+            assert_eq!(routed, n as u64, "{s:?} must route every point");
+            out.push((lbl, d2));
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (lbl, d2) in &out[1..] {
+            assert_eq!(*lbl, out[0].0);
+            assert_eq!(bits(d2), bits(&out[0].1));
+        }
+        for i in 0..n {
+            let (j, e) = data.nearest(i, &cent.c, &cent.norms);
+            assert_eq!(out[0].0[i], j);
+            assert_eq!(out[0].1[i].to_bits(), e.to_bits());
+        }
+    }
+
+    #[test]
+    fn auto_runs_flat_scan_on_normalised_corpus() {
+        // regression for the norm-prune overhead on unit-normalised
+        // corpora: every norm bound collapses to the same value, so
+        // Auto's precheck must pick the flat kernel — asserted through
+        // strategy counters (dist-calc counts, not wall clock)
+        let d = 64;
+        let n = 200;
+        let k = 16;
+        let mut m = sparse::CsrMatrix::empty(d);
+        for i in 0..n {
+            // disjoint column ranges — CSR rows must not repeat a column
+            let mut row = [
+                ((i % 13) as u32, 1.0f32 + (i % 7) as f32),
+                ((16 + i % 11) as u32, 2.0 + (i % 5) as f32),
+                ((32 + i % 17) as u32, 0.5 + (i % 3) as f32),
+            ];
+            let nrm =
+                row.iter().map(|(_, v)| v * v).sum::<f32>().sqrt();
+            for (_, v) in row.iter_mut() {
+                *v /= nrm;
+            }
+            m.push_row(&row);
+        }
+        let data = Data::sparse(m);
+        let cent = init::first_k(&data, k);
+        let eng = NativeEngine::default();
+        let pool = Pool::new(2);
+        let mut lbl = vec![0u32; n];
+        let mut d2 = vec![0f32; n];
+        eng.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lbl, &mut d2);
+        // the transpose must be in play (this is the blocked path)
+        assert_eq!(eng.trans_cache_stats().unwrap(), (0, 1));
+        let [(fp, fe), (np, _), _] = eng.strategy_tally().snapshot();
+        assert_eq!(np, 0, "norm-pruning ran on a normalised corpus");
+        assert_eq!(fp, n as u64);
+        assert_eq!(
+            fe,
+            (n * k) as u64,
+            "flat scan does exactly n·k evaluations — never more"
+        );
+    }
+
+    #[test]
+    fn trans_cache_reclaims_retired_blocks() {
+        // publish-pinned rebuild cycle: a block pinned past its
+        // revision parks on the free-list and is reclaimed — same
+        // allocation, no fresh Vec — once the pin drops
+        let data = Rcv1Sim::default().generate(200, 3);
+        let mut cent = init::first_k(&data, 10);
+        let cache = TransCache::default();
+        let a = cache.fetch(&cent);
+        let ptr_a = a.ct.as_ptr();
+        cent.touch();
+        // `a` still pinned (a published view would hold it like this):
+        // the new revision must get a fresh allocation
+        let b = cache.fetch(&cent);
+        assert!(!std::ptr::eq(ptr_a, b.ct.as_ptr()));
+        drop(a);
+        cent.touch();
+        // the pin is gone: this rebuild must reuse a's allocation
+        let c = cache.fetch(&cent);
+        assert!(
+            std::ptr::eq(ptr_a, c.ct.as_ptr()),
+            "retired block was not reclaimed"
+        );
+        assert_eq!(cache.builds(), 3, "reclaim still counts as a fill");
+        drop(b);
+        drop(c);
+    }
+
+    #[test]
+    fn injected_neigh_handle_serves_cold_engine_without_builds() {
+        // the published-model predict pattern: the training engine's
+        // neighbour structure rides into a cold predict engine, which
+        // must use it (counted as a shared hit), never build its own,
+        // and answer bit-identically to the flat scan
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // the opt-in FMA tier is documented as unfaithful
+        }
+        let n = 200;
+        let k = 64;
+        let data = GaussianMixture::default_spec(8, 8).generate(n, 23);
+        let cent = init::first_k(&data, k);
+        let pool = Pool::new(1);
+        let train = NativeEngine::default().with_strategy(Strategy::Exponion);
+        let ni = train.neigh_handle(&cent).expect("forced strategy builds");
+        assert_eq!(train.neigh_cache_stats().unwrap(), (0, 1, 0));
+        let predict = NativeEngine::default();
+        let mut lp = vec![0u32; n];
+        let mut dp = vec![0f32; n];
+        predict.assign_with_handles(
+            &data,
+            Sel::Range(0, n),
+            &cent,
+            &pool,
+            None,
+            Some(ni),
+            &mut lp,
+            &mut dp,
+        );
+        assert_eq!(
+            predict.neigh_cache_stats().unwrap(),
+            (1, 0, 0),
+            "injected structure must count a shared hit and no build"
+        );
+        let [_, _, (ep, _)] = predict.strategy_tally().snapshot();
+        assert_eq!(ep, n as u64, "predict must route through exponion");
+        let flat = NativeEngine::default().with_strategy(Strategy::Flat);
+        let mut lf = vec![0u32; n];
+        let mut df = vec![0f32; n];
+        flat.assign(&data, Sel::Range(0, n), &cent, &pool, &mut lf, &mut df);
+        assert_eq!(lp, lf);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dp), bits(&df));
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use crate::data::Data;
 use crate::kmeans::state::Centroids;
+use crate::linalg::neighbours::{self, probe_stride, NeighbourIndex};
 
 /// Dense per-point × per-centroid lower-bound matrix for the active
 /// batch; rows are appended as the nested batch grows (M_t ⊆ M_{t+1}
@@ -151,6 +152,83 @@ pub fn full_assign_fill(
         }
     }
     StepOut { label: best_j, d2: best, dist_calcs: k as u64, bound_skips: 0 }
+}
+
+/// [`full_assign_fill`] with exponion pruning: same bit-identical label
+/// and d² (strided probes seed the ball, the sorted neighbour row cuts
+/// the walk, out-of-order ties resolved by the explicit `j < best_j`
+/// rule — the same argument as `neighbours::nearest_dense_exponion`),
+/// but centroids outside the ball get the certified *ring* lower bound
+/// `max(cc_lo(s,j) − r_s, 0)` instead of an exact distance. Every
+/// installed bound satisfies `lb ≤ ‖x_i − c_j‖`, so the Elkan/tb bound
+/// machinery downstream is untouched; only `dist_calcs` shrinks.
+pub fn full_assign_fill_pruned(
+    data: &Data,
+    i: usize,
+    cent: &Centroids,
+    ni: &NeighbourIndex,
+    lb_row: &mut [f32],
+) -> StepOut {
+    let k = cent.k();
+    debug_assert_eq!(ni.k(), k);
+    debug_assert_eq!(ni.d(), cent.d());
+    debug_assert_eq!(lb_row.len(), k);
+    let xn = data.norms[i];
+    let stride = probe_stride(k);
+    let mut best = f32::INFINITY;
+    let mut best_j = 0u32;
+    let mut calcs = 0u64;
+    let mut j = 0usize;
+    while j < k {
+        let dj2 = data.sq_dist_to(i, cent.c.row(j), cent.norms[j]);
+        lb_row[j] = dj2.sqrt();
+        calcs += 1;
+        if dj2 < best {
+            best = dj2;
+            best_j = j as u32;
+        }
+        j += stride;
+    }
+    let seed = best_j as usize;
+    let slack = ni.slack_term(neighbours::slack_dense(cent.d()), xn);
+    let r_s = ((best as f64) + slack).sqrt() * 1.000_000_1;
+    let dec = ni.decay[seed];
+    let mut thr = r_s + ((best as f64) + slack).sqrt() * 1.000_000_1;
+    let (ccs, idxs) = ni.rows.row(seed);
+    let mut p = 0usize;
+    while p < ccs.len() {
+        let cc_adj = ccs[p] as f64 - dec;
+        if cc_adj > thr {
+            break;
+        }
+        let jj = idxs[p] as usize;
+        p += 1;
+        if jj % stride == 0 {
+            continue; // probed: exact bound already installed
+        }
+        let dj2 = data.sq_dist_to(i, cent.c.row(jj), cent.norms[jj]);
+        lb_row[jj] = dj2.sqrt();
+        calcs += 1;
+        if dj2 < best || (dj2 == best && (jj as u32) < best_j) {
+            best = dj2;
+            best_j = jj as u32;
+            thr = r_s + ((best as f64) + slack).sqrt() * 1.000_000_1;
+        }
+    }
+    // beyond the ring: install the certified ring bound for everything
+    // not already computed (probed slots keep their exact value)
+    let mut skips = 0u64;
+    while p < ccs.len() {
+        let jj = idxs[p] as usize;
+        p += 1;
+        if jj % stride == 0 {
+            continue;
+        }
+        let lo = (ccs[p - 1] as f64 - dec - r_s).max(0.0) * 0.999_999;
+        lb_row[jj] = lo as f32;
+        skips += 1;
+    }
+    StepOut { label: best_j, d2: best, dist_calcs: calcs, bound_skips: skips }
 }
 
 /// The tile-path screen: decay this row's bounds by `p`, and report
@@ -372,6 +450,65 @@ mod tests {
                 labels[i] = out.label;
                 upper[i] = out.d2.sqrt();
             }
+        });
+    }
+
+    #[test]
+    fn pruned_fill_matches_full_fill_and_bounds_stay_valid() {
+        // exponion-pruned first fills: label/d² bit-identical to the
+        // exhaustive fill, every installed bound (exact or ring) valid,
+        // and strictly fewer distance computations — across centroid
+        // motion so warm (synced/decayed) structures are exercised too
+        use crate::linalg::neighbours::NeighbourCache;
+        use crate::linalg::simd;
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // the opt-in FMA tier is documented as unfaithful
+        }
+        Cases::new(6).run(|rng| {
+            let k = 24 + rng.below(40);
+            let n = k + 20;
+            let data = GaussianMixture::default_spec(k, 6)
+                .generate(n, rng.next_u64());
+            let mut cent = init::first_k(&data, k);
+            let cache = NeighbourCache::default();
+            let mut skips_total = 0u64;
+            for _round in 0..2 {
+                let ni = cache.get(&cent, simd::tier());
+                for i in 0..n {
+                    let mut full = vec![0f32; k];
+                    let mut pruned = vec![0f32; k];
+                    let a = full_assign_fill(&data, i, &cent, &mut full);
+                    let b = full_assign_fill_pruned(
+                        &data, i, &cent, &ni, &mut pruned,
+                    );
+                    assert_eq!(b.label, a.label, "i={i}");
+                    assert_eq!(b.d2.to_bits(), a.d2.to_bits(), "i={i}");
+                    assert!(b.dist_calcs + b.bound_skips == k as u64);
+                    skips_total += b.bound_skips;
+                    for j in 0..k {
+                        let e = exact_dist(&data, i, &cent, j);
+                        assert!(
+                            pruned[j] <= e + 1e-3 * (1.0 + e),
+                            "i={i} j={j}: ring bound {} > exact {e}",
+                            pruned[j]
+                        );
+                    }
+                }
+                // drift the centroids (bumping rev) so round 2 runs on
+                // a synced-or-rebuilt neighbour structure
+                for j in 0..k {
+                    for t in 0..cent.d() {
+                        cent.c.row_mut(j)[t] += rng.gauss_f32() * 0.01;
+                    }
+                    cent.norms[j] =
+                        crate::linalg::dense::sq_norm(cent.c.row(j));
+                }
+                cent.touch();
+            }
+            assert!(
+                skips_total > 0,
+                "exponion never pruned at k={k} — gate or bounds broken"
+            );
         });
     }
 

@@ -17,7 +17,7 @@
 use crate::coordinator::shard::chunk_ranges;
 use crate::kmeans::state::{Assignments, Centroids, SuffStats, UNASSIGNED};
 use crate::kmeans::{Clusterer, Ctx, RoundInfo};
-use crate::linalg::dense;
+use crate::linalg::{neighbours, simd};
 
 pub struct Elkan {
     cent: Centroids,
@@ -49,13 +49,24 @@ impl Elkan {
     }
 
     /// ½·inter-centroid distances and s(j) = ½ min_{j'≠j} ‖c_j − c_j'‖.
+    /// Runs the SIMD diff-square kernel the exponion neighbour builder
+    /// uses — the k²/2 pair distances were the scalar hot spot of every
+    /// Elkan round at serving-scale k.
     fn half_cc(&self) -> (Vec<f32>, Vec<f32>) {
         let k = self.cent.k();
+        let t = simd::tier();
+        let mut diff = vec![0f32; self.cent.d()];
         let mut half = vec![0f32; k * k];
         let mut s = vec![f32::INFINITY; k];
         for j in 0..k {
             for j2 in (j + 1)..k {
-                let dist = dense::sq_dist(self.cent.c.row(j), self.cent.c.row(j2)).sqrt();
+                let dist = neighbours::diff_sq(
+                    t,
+                    self.cent.c.row(j),
+                    self.cent.c.row(j2),
+                    &mut diff,
+                )
+                .sqrt() as f32;
                 half[j * k + j2] = 0.5 * dist;
                 half[j2 * k + j] = 0.5 * dist;
                 s[j] = s[j].min(0.5 * dist);

@@ -17,17 +17,22 @@
 
 use crate::config::Rho;
 use crate::coordinator::shard::chunk_ranges;
-use crate::kmeans::assign::Sel;
+use crate::kmeans::assign::{Sel, EXPONION_MIN_K, EXPONION_SPARSE_MAX_D, NEIGH_MAX_BYTES};
 use crate::kmeans::bounds::{self, BoundStore};
 use crate::kmeans::controller::{self, GrowthPolicy};
 use crate::kmeans::state::{batch_mse, Assignments, Centroids, SuffStats, UNASSIGNED};
 use crate::kmeans::{Clusterer, Ctx, NestedState, RoundInfo};
+use crate::linalg::neighbours::{NeighbourCache, NeighbourRows};
+use crate::linalg::simd;
 
 pub struct TurboBatch {
     pub(crate) cent: Centroids,
     pub(crate) stats: SuffStats,
     pub(crate) assign: Assignments,
     bounds: BoundStore,
+    /// Exponion neighbour cache for first fills of newly ingested
+    /// points at serving-scale k (revision-keyed; Auto-gated).
+    neigh: NeighbourCache,
     /// Tile mode: decayed upper bound u(i) ≥ ‖x_i − c_{a(i)}‖.
     upper: Vec<f32>,
     n: usize,
@@ -53,6 +58,7 @@ impl TurboBatch {
             stats: SuffStats::zeros(k, d),
             assign: Assignments::new(n),
             bounds: BoundStore::new(k),
+            neigh: NeighbourCache::default(),
             upper: Vec::new(),
             n,
             b_prev: 0,
@@ -94,6 +100,7 @@ impl TurboBatch {
             stats: st.stats,
             assign: st.assign,
             bounds: BoundStore::new(k),
+            neigh: NeighbourCache::default(),
             upper,
             n: st.n,
             b_prev: st.b_prev,
@@ -272,36 +279,50 @@ impl TurboBatch {
         }
         let data = ctx.data;
         let cent = &self.cent;
+        // Serving-scale k: fill new points through the exponion ball so
+        // each costs far fewer than k distances. Same gates as the
+        // assign engine's Auto strategy; the revision-keyed cache makes
+        // repeated ingests between centroid updates free.
+        let ni = (k >= EXPONION_MIN_K
+            && (!data.is_sparse() || d <= EXPONION_SPARSE_MAX_D)
+            && NeighbourRows::bytes_for(k) <= NEIGH_MAX_BYTES)
+            .then(|| self.neigh.get(cent, simd::tier()));
+        let ni = ni.as_deref();
         let work = |r: std::ops::Range<usize>,
                     lh: &mut [u32],
                     dh: &mut [f32],
                     uh: &mut [f32],
                     bh: &mut [f32]|
-         -> SuffStats {
+         -> (SuffStats, u64) {
             let mut delta = SuffStats::zeros(k, d);
+            let mut calcs = 0u64;
             for (slot, off) in r.enumerate() {
                 let i = b_o + off;
-                let out = bounds::full_assign_fill(
-                    data,
-                    i,
-                    cent,
-                    &mut bh[slot * k..(slot + 1) * k],
-                );
+                let row = &mut bh[slot * k..(slot + 1) * k];
+                let out = match ni {
+                    Some(ni) => {
+                        bounds::full_assign_fill_pruned(data, i, cent, ni, row)
+                    }
+                    None => bounds::full_assign_fill(data, i, cent, row),
+                };
+                calcs += out.dist_calcs;
                 delta.add_point(data, i, out.label, out.d2);
                 lh[slot] = out.label;
                 dh[slot] = out.d2;
                 uh[slot] = out.d2.sqrt();
             }
-            delta
+            (delta, calcs)
         };
-        let parts: Vec<SuffStats> = ctx
+        let parts: Vec<(SuffStats, u64)> = ctx
             .pool
             .run_jobs(jobs, |_, (r, lh, dh, uh, bh)| work(r, lh, dh, uh, bh));
         let mut delta = SuffStats::zeros(k, d);
-        for p in parts {
+        let mut calcs = 0u64;
+        for (p, c) in parts {
             crate::coordinator::merge::Mergeable::merge(&mut delta, p);
+            calcs += c;
         }
-        (delta, (count * k) as u64)
+        (delta, calcs)
     }
 
     #[cfg(test)]

@@ -5,6 +5,7 @@
 //! cycles in the nested-batch algorithms — see `kmeans::state`).
 
 pub mod dense;
+pub mod neighbours;
 pub mod simd;
 pub mod sparse;
 

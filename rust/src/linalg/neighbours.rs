@@ -1,0 +1,822 @@
+//! Per-centroid nearest-neighbour structure for exponion-style pruned
+//! assignment (Newling & Fleuret, "Fast K-Means with Accurate Bounds").
+//!
+//! For every centroid `s` we keep the other `k − 1` centroids sorted by
+//! a *certified lower bound* on the inter-centroid distance `‖c_s −
+//! c_j‖`. A point whose provisional nearest centroid is `s` at distance
+//! ≤ `r` can then walk the sorted row and stop at the first entry with
+//! `cc(s, j) > r + √best`: by the triangle inequality every remaining
+//! centroid is provably farther than the running best, so the walk
+//! evaluates only the centroids inside the point's *exponion ball*
+//! instead of all k.
+//!
+//! Everything here is engineered around the repo's standing bit-identity
+//! guarantee: pruning may only skip a centroid whose **computed** f32
+//! distance is provably *strictly* above the running best, so the
+//! argmin (first-wins tie-breaks included) and the returned distance are
+//! bit-identical to the unpruned scan on every non-FMA tier. That needs
+//! three certified quantities, all maintained here:
+//!
+//! * `cc` rows built from a per-pair diff-square (`Σ (a_t − b_t)²`
+//!   through the SIMD dot), shrunk by a relative slack — the error is
+//!   relative to `cc²` itself, so nearby centroids keep *tight* bounds
+//!   (the norms-trick form `‖a‖² + ‖b‖² − 2⟨a,b⟩` cancels
+//!   catastrophically exactly there).
+//! * a per-point absolute slack [`NeighbourIndex::slack_term`] bounding
+//!   |computed d² − true d²| — the ball radius and every ring bound are
+//!   widened by it before any skip decision.
+//! * per-row `decay`: centroids move between revisions, so each sync
+//!   accumulates per-centroid displacement and subtracts
+//!   `cum(s) + max_j cum(j)` from row `s`'s bounds (uniform per row, so
+//!   the sort order survives). When accumulated motion gets comparable
+//!   to the mean nearest-neighbour gap the rows are rebuilt from
+//!   scratch.
+//!
+//! [`NeighbourCache`] mirrors the transpose cache's revision-keyed
+//! protocol (`probe` never builds; `get` hits, syncs, or rebuilds), so
+//! the serve layer can freeze an index into a published model view and
+//! predict against it with zero rebuilds between publishes.
+
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::simd;
+use crate::linalg::sparse::{prune_slack, TransposedCentroids};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Conservative fp slack for dense norms-trick distances, as a relative
+/// factor on `(‖x‖ + ‖c‖)²`. Covers the worst stored-norm error (a
+/// sequential f32 sum over d terms, γ ≈ d·2⁻²⁴ — `row_sq_norms` is the
+/// loosest producer; the 8-lane SIMD dot and the f64-accumulated update
+/// path are tighter) plus the final roundings, with ≥ 4x margin —
+/// the same construction as the sparse [`prune_slack`].
+#[inline]
+pub(crate) fn slack_dense(d: usize) -> f64 {
+    4.0e-7 * (d as f64 + 16.0)
+}
+
+/// `Σ_t (a_t − b_t)²` through one SIMD diff-square pass: subtract into
+/// `diff`, then `dot(diff, diff)` on tier `t`. Relative error vs the
+/// true squared distance is ≤ (d/8 + 5)·2⁻²⁴ (per-element subtract and
+/// square roundings plus the 8-virtual-lane sum) — far inside
+/// [`slack_dense`]. Shared by the neighbour-row build and Elkan's
+/// inter-centroid half-distance refresh.
+#[inline]
+pub(crate) fn diff_sq(t: simd::Tier, a: &[f32], b: &[f32], diff: &mut [f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), diff.len());
+    for i in 0..a.len() {
+        diff[i] = a[i] - b[i];
+    }
+    simd::dot_with(t, diff, diff) as f64
+}
+
+/// The sorted inter-centroid rows: for each centroid `s`, the other
+/// `k − 1` centroids ascending by certified lower bound on
+/// `‖c_s − c_j‖`. Immutable once built; [`NeighbourIndex`] layers
+/// per-revision decay on top and shares these rows across revisions.
+#[derive(Debug)]
+pub struct NeighbourRows {
+    pub k: usize,
+    pub d: usize,
+    /// `cc[s·(k−1) + p]`: p-th smallest certified lower bound on
+    /// `‖c_s − c_j‖` over `j ≠ s`.
+    cc: Vec<f32>,
+    /// The centroid index each `cc` entry refers to.
+    idx: Vec<u32>,
+    /// Mean over rows of the smallest entry (nearest-neighbour gap) —
+    /// the scale the rebuild-vs-decay policy compares motion against.
+    pub nn_mean: f64,
+}
+
+impl NeighbourRows {
+    /// Heap footprint of the rows for `k` centroids (cache gates bound
+    /// per-session memory with this before building).
+    pub fn bytes_for(k: usize) -> usize {
+        k.saturating_sub(1) * k * (std::mem::size_of::<f32>() + std::mem::size_of::<u32>())
+    }
+
+    /// Build from a centroid matrix: O(k²·d/2) diff-squares, then a
+    /// per-row sort by `(cc, idx)`. Each stored bound is
+    /// `√(v·(1 − slack)) · (1 − 1e-6)` with `v` the SIMD diff-square —
+    /// certified ≤ the true distance (the relative slack covers the
+    /// diff-square error, the 1e-6 haircut covers the f64→f32 store
+    /// rounding).
+    pub fn build(t: simd::Tier, c: &DenseMatrix) -> NeighbourRows {
+        let (k, d) = (c.rows, c.cols);
+        assert!(k >= 2, "neighbour rows need k >= 2");
+        let km = k - 1;
+        let mut cc = vec![0f32; k * km];
+        let mut idx = vec![0u32; k * km];
+        // pre-sort layout: row s holds neighbours in index order, with
+        // j's position being j for j < s and j − 1 for j > s
+        for s in 0..k {
+            let row = &mut idx[s * km..(s + 1) * km];
+            for j in 0..s {
+                row[j] = j as u32;
+            }
+            for j in s + 1..k {
+                row[j - 1] = j as u32;
+            }
+        }
+        let rel = slack_dense(d);
+        let mut diff = vec![0f32; d];
+        for a in 0..k {
+            for b in a + 1..k {
+                let v = diff_sq(t, c.row(a), c.row(b), &mut diff);
+                let lo = ((v * (1.0 - rel)).max(0.0).sqrt() * (1.0 - 1e-6)) as f32;
+                cc[a * km + (b - 1)] = lo;
+                cc[b * km + a] = lo;
+            }
+        }
+        let mut buf: Vec<(f32, u32)> = Vec::with_capacity(km);
+        let mut nn_sum = 0f64;
+        for s in 0..k {
+            buf.clear();
+            for p in 0..km {
+                buf.push((cc[s * km + p], idx[s * km + p]));
+            }
+            buf.sort_unstable_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+            for (p, &(c_lo, j)) in buf.iter().enumerate() {
+                cc[s * km + p] = c_lo;
+                idx[s * km + p] = j;
+            }
+            nn_sum += buf[0].0 as f64;
+        }
+        NeighbourRows { k, d, cc, idx, nn_mean: nn_sum / k as f64 }
+    }
+
+    /// Row `s`: `(bounds, indices)`, ascending by bound.
+    #[inline]
+    pub fn row(&self, s: usize) -> (&[f32], &[u32]) {
+        let km = self.k - 1;
+        (&self.cc[s * km..(s + 1) * km], &self.idx[s * km..(s + 1) * km])
+    }
+}
+
+/// One centroid revision's view of the neighbour structure: shared
+/// sorted rows plus the per-row decay that keeps the bounds valid under
+/// the motion accumulated since the rows were built, and the two
+/// fp-slack ingredients frozen at this revision.
+#[derive(Debug)]
+pub struct NeighbourIndex {
+    pub rows: Arc<NeighbourRows>,
+    /// `decay[s] = cum(s) + max_j cum(j)`: subtract from every bound in
+    /// row `s` to re-certify it against the *current* centroids
+    /// (uniform per row, so the sort order is preserved).
+    pub decay: Vec<f64>,
+    /// Upper bound on `max_j ‖c_j‖` at this revision (slack scale).
+    pub sq_max: f64,
+    /// Upper bound on `max_j |stored norms[j] − ‖c_j‖²|`: the caller's
+    /// incrementally-maintained norms may drift from the true ones, and
+    /// unlike the additive norm-prune bound this does *not* cancel out
+    /// of a geometric bound — it is added to every slack term instead.
+    pub norm_gap: f64,
+    /// The [`crate::kmeans::state::Centroids::rev`] this view certifies.
+    pub rev: u64,
+}
+
+impl NeighbourIndex {
+    pub fn k(&self) -> usize {
+        self.rows.k
+    }
+
+    pub fn d(&self) -> usize {
+        self.rows.d
+    }
+
+    /// Absolute bound on |computed d²(x, c_j) − true d²(x, c_j)| for a
+    /// point with stored norm `xn`, given the relative slack `base`
+    /// ([`slack_dense`] for dense points, [`prune_slack`] for sparse).
+    /// Every ball radius and ring bound is widened by this before a
+    /// skip, which is what keeps pruning bit-faithful.
+    #[inline]
+    pub fn slack_term(&self, base: f64, xn: f32) -> f64 {
+        let sx = (xn as f64).max(0.0).sqrt();
+        let scale = (sx + self.sq_max) * (sx + self.sq_max);
+        base * scale + 2.0 * self.norm_gap
+    }
+}
+
+/// How far accumulated centroid motion may grow, relative to the mean
+/// nearest-neighbour gap, before decayed bounds are considered too
+/// loose to prune well and the rows are rebuilt from scratch.
+const REBUILD_FRAC: f64 = 0.25;
+
+/// Revision-keyed cache for [`NeighbourIndex`], mirroring the transpose
+/// cache's protocol: `probe` serves warm hits and never builds; `get`
+/// hits, *syncs* (new decay over shared rows — O(k·d)), or rebuilds
+/// (O(k²·d)). One per engine, like the transpose cache, so concurrent
+/// sessions never evict each other.
+#[derive(Debug, Default)]
+pub struct NeighbourCache {
+    slot: Mutex<NeighSlot>,
+    hits: AtomicU64,
+    builds: AtomicU64,
+    syncs: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct NeighSlot {
+    cur: Option<Arc<NeighbourIndex>>,
+    /// Centroid snapshot the last sync measured displacement against.
+    prev_c: Option<DenseMatrix>,
+    /// Per-centroid motion accumulated since the rows were built
+    /// (sum of per-sync displacements ≥ net displacement, so the decay
+    /// stays certified across any number of missed revisions).
+    cum: Vec<f64>,
+}
+
+impl NeighbourCache {
+    /// Revision-matched indexes served without any work.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Full O(k²·d) row builds.
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Incremental O(k·d) decay refreshes over shared rows.
+    pub fn syncs(&self) -> u64 {
+        self.syncs.load(Ordering::Relaxed)
+    }
+
+    /// `(hits, builds, syncs)` for observability scrapes.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.hits(), self.builds(), self.syncs())
+    }
+
+    /// Revision-matched index already in the slot (counted as a hit),
+    /// or `None`. Warm-path gate: a probe never builds or syncs.
+    pub fn probe(&self, centroids: &crate::kmeans::state::Centroids) -> Option<Arc<NeighbourIndex>> {
+        let slot = self.slot.lock().unwrap();
+        match &slot.cur {
+            Some(cur)
+                if cur.rev == centroids.rev
+                    && cur.k() == centroids.k()
+                    && cur.d() == centroids.d() =>
+            {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(cur.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Counter parity for serves from an externally shared index
+    /// (published-model predicts): a hit, no slot interaction.
+    pub fn note_shared(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The index for this centroid revision: a hit when the slot holds
+    /// it, an incremental sync while accumulated motion stays small
+    /// relative to the nearest-neighbour gap, a full rebuild otherwise.
+    pub fn get(
+        &self,
+        centroids: &crate::kmeans::state::Centroids,
+        t: simd::Tier,
+    ) -> Arc<NeighbourIndex> {
+        let (k, d) = (centroids.k(), centroids.d());
+        assert!(k >= 2, "neighbour cache needs k >= 2");
+        let mut slot = self.slot.lock().unwrap();
+        let NeighSlot { cur, prev_c, cum } = &mut *slot;
+        if let Some(ni) = cur.as_ref() {
+            if ni.rev == centroids.rev && ni.k() == k && ni.d() == d {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return ni.clone();
+            }
+        }
+        let shape_ok = prev_c
+            .as_ref()
+            .map_or(false, |p| p.rows == k && p.cols == d)
+            && cur.as_ref().map_or(false, |ni| ni.k() == k && ni.d() == d);
+        if shape_ok {
+            // sync: accumulate displacement since the last snapshot and
+            // refresh the slack ingredients in the same O(k·d) pass
+            let prev = prev_c.as_mut().unwrap();
+            let mut max_cum = 0f64;
+            let mut sq_max = 0f64;
+            let mut gap = 0f64;
+            for j in 0..k {
+                let (now, old) = (centroids.c.row(j), prev.row(j));
+                let mut disp2 = 0f64;
+                let mut nrm = 0f64;
+                for c0 in 0..d {
+                    let df = now[c0] as f64 - old[c0] as f64;
+                    disp2 += df * df;
+                    nrm += now[c0] as f64 * now[c0] as f64;
+                }
+                cum[j] += disp2.sqrt() * 1.000_000_1;
+                max_cum = max_cum.max(cum[j]);
+                sq_max = sq_max.max(nrm.sqrt());
+                gap = gap.max((centroids.norms[j] as f64 - nrm).abs());
+            }
+            prev.data.copy_from_slice(&centroids.c.data);
+            let rows = cur.as_ref().unwrap().rows.clone();
+            if 2.0 * max_cum <= REBUILD_FRAC * rows.nn_mean {
+                let decay: Vec<f64> = (0..k).map(|j| cum[j] + max_cum).collect();
+                let ni = Arc::new(NeighbourIndex {
+                    rows,
+                    decay,
+                    sq_max: sq_max * 1.000_001 + 1e-12,
+                    norm_gap: gap * 1.000_001 + 1e-12,
+                    rev: centroids.rev,
+                });
+                *cur = Some(ni.clone());
+                self.syncs.fetch_add(1, Ordering::Relaxed);
+                return ni;
+            }
+        }
+        // full rebuild: fresh rows, zero accumulated motion
+        let rows = Arc::new(NeighbourRows::build(t, &centroids.c));
+        let mut sq_max = 0f64;
+        let mut gap = 0f64;
+        for j in 0..k {
+            let row = centroids.c.row(j);
+            let nrm: f64 = row.iter().map(|&x| x as f64 * x as f64).sum();
+            sq_max = sq_max.max(nrm.sqrt());
+            gap = gap.max((centroids.norms[j] as f64 - nrm).abs());
+        }
+        *prev_c = Some(centroids.c.clone());
+        *cum = vec![0.0; k];
+        let ni = Arc::new(NeighbourIndex {
+            rows,
+            decay: vec![0.0; k],
+            sq_max: sq_max * 1.000_001 + 1e-12,
+            norm_gap: gap * 1.000_001 + 1e-12,
+            rev: centroids.rev,
+        });
+        *cur = Some(ni.clone());
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        ni
+    }
+}
+
+/// Probe stride for the dense exponion seed: evaluate every
+/// `stride`-th centroid (≈ √k of them, at least 8) to find a tight
+/// initial ball before walking the seed's sorted row.
+#[inline]
+pub fn probe_stride(k: usize) -> usize {
+    let mut t = 1usize;
+    while (t + 1) * (t + 1) <= k {
+        t += 1;
+    }
+    (k / t.max(8).min(k)).max(1)
+}
+
+/// Exponion-pruned nearest centroid for one dense point. Bit-identical
+/// label and distance to the flat scan ([`simd::nearest_with`] /
+/// [`simd::nearest_block_with`]) on every non-FMA tier: every
+/// evaluation uses the same `(xn + cn − 2·dot)` formula over the same
+/// tier's dot (dot4 lanes are bitwise `dot_with`), skips only happen
+/// when the skipped centroid's computed d² provably exceeds the running
+/// best *strictly*, and out-of-order evaluation restores first-wins
+/// ties with the explicit `j < best_j` rule. Returns
+/// `(label, d², evaluations)`.
+pub fn nearest_dense_exponion(
+    t: simd::Tier,
+    x: &[f32],
+    xn: f32,
+    c: &DenseMatrix,
+    cnorms: &[f32],
+    ni: &NeighbourIndex,
+) -> (u32, f32, u32) {
+    let k = c.rows;
+    debug_assert_eq!(ni.k(), k);
+    debug_assert_eq!(ni.d(), c.cols);
+    let stride = probe_stride(k);
+    // probe phase: index order + strict first-wins = lexicographic
+    // argmin over the probe set
+    let mut best = f32::INFINITY;
+    let mut best_j = 0u32;
+    let mut evals = 0u32;
+    let mut j = 0usize;
+    while j < k {
+        let d2 = (xn + cnorms[j] - 2.0 * simd::dot_with(t, x, c.row(j))).max(0.0);
+        evals += 1;
+        if d2 < best {
+            best = d2;
+            best_j = j as u32;
+        }
+        j += stride;
+    }
+    let seed = best_j as usize;
+    let slack = ni.slack_term(slack_dense(c.cols), xn);
+    // ball radius from the seed's *own* computed d² (== best right
+    // now): true d(x, s) ≤ √(computed + slack)
+    let r_s = ((best as f64) + slack).sqrt() * 1.000_000_1;
+    let dec = ni.decay[seed];
+    let mut thr = r_s + ((best as f64) + slack).sqrt() * 1.000_000_1;
+    let (ccs, idxs) = ni.rows.row(seed);
+    for p in 0..ccs.len() {
+        let cc_adj = ccs[p] as f64 - dec;
+        if cc_adj > thr {
+            // sorted row + uniform decay: every remaining centroid has
+            // computed d² provably > best — stop
+            break;
+        }
+        let jj = idxs[p] as usize;
+        if jj % stride == 0 {
+            continue; // already evaluated in the probe phase
+        }
+        let d2 = (xn + cnorms[jj] - 2.0 * simd::dot_with(t, x, c.row(jj))).max(0.0);
+        evals += 1;
+        if d2 < best || (d2 == best && (jj as u32) < best_j) {
+            best = d2;
+            best_j = jj as u32;
+            thr = r_s + ((best as f64) + slack).sqrt() * 1.000_000_1;
+        }
+    }
+    (best_j, best, evals)
+}
+
+/// Exponion-pruned nearest centroid for one sparse point through the
+/// transposed block. Seeds exactly like the norm-prune path
+/// (`prune_seed` fills the norm lower bounds and evaluates the
+/// smallest-bound centroid), then walks the seed's sorted neighbour row
+/// with *both* prunes active: the per-candidate norm bound (`lbs[j] >
+/// best`, same rule as the gather finisher) and the exponion ring
+/// cut-off. Evaluations go through `dot_one`, bitwise equal to the AXPY
+/// sweep lanes, so label and distance stay bit-identical to the
+/// unpruned sweep. Returns `(label, d², evaluations)`.
+pub fn nearest_sparse_exponion(
+    tc: &TransposedCentroids,
+    idx: &[u32],
+    vals: &[f32],
+    xn: f32,
+    cnorms: &[f32],
+    ni: &NeighbourIndex,
+    lbs: &mut [f32],
+) -> (u32, f32, u32) {
+    let k = tc.k;
+    debug_assert_eq!(ni.k(), k);
+    debug_assert_eq!(ni.d(), tc.d);
+    let (seed, d0, _survivors) = tc.prune_seed(idx, vals, xn, cnorms, lbs);
+    let mut best = d0;
+    let mut best_j = seed as u32;
+    let mut evals = 1u32;
+    let slack = ni.slack_term(prune_slack(idx.len()), xn);
+    let r_s = ((d0 as f64) + slack).sqrt() * 1.000_000_1;
+    let dec = ni.decay[seed];
+    let mut thr = r_s + ((best as f64) + slack).sqrt() * 1.000_000_1;
+    let (ccs, idxs) = ni.rows.row(seed);
+    for p in 0..ccs.len() {
+        let cc_adj = ccs[p] as f64 - dec;
+        if cc_adj > thr {
+            break;
+        }
+        let jj = idxs[p] as usize;
+        if lbs[jj] > best {
+            continue; // norm bound, same strict rule as finish_gather
+        }
+        let d2 = (xn + cnorms[jj] - 2.0 * tc.dot_one(idx, vals, jj)).max(0.0);
+        evals += 1;
+        if d2 < best || (d2 == best && (jj as u32) < best_j) {
+            best = d2;
+            best_j = jj as u32;
+            thr = r_s + ((best as f64) + slack).sqrt() * 1.000_000_1;
+        }
+    }
+    (best_j, best, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::state::Centroids;
+    use crate::linalg::sparse::CsrMatrix;
+    use crate::util::propcheck::Cases;
+    use crate::util::rng::Pcg64;
+
+    fn random_centroids(rng: &mut Pcg64, k: usize, d: usize) -> Centroids {
+        let c = DenseMatrix::from_vec(
+            k,
+            d,
+            (0..k * d).map(|_| rng.gauss_f32()).collect(),
+        );
+        Centroids::from_matrix(c)
+    }
+
+    /// True inter-centroid distance in f64 (oracle).
+    fn true_cc(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let df = x as f64 - y as f64;
+                df * df
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn rows_are_sorted_complete_and_certified() {
+        Cases::new(20).run(|rng| {
+            let k = 2 + rng.below(30);
+            let d = 1 + rng.below(40);
+            let cent = random_centroids(rng, k, d);
+            let rows = NeighbourRows::build(simd::tier(), &cent.c);
+            assert_eq!((rows.k, rows.d), (k, d));
+            for s in 0..k {
+                let (cc, idx) = rows.row(s);
+                assert_eq!(cc.len(), k - 1);
+                // sorted ascending, every other centroid exactly once
+                let mut seen = vec![false; k];
+                for p in 0..cc.len() {
+                    if p > 0 {
+                        assert!(cc[p - 1] <= cc[p], "row {s} unsorted at {p}");
+                    }
+                    let j = idx[p] as usize;
+                    assert_ne!(j, s);
+                    assert!(!seen[j], "row {s} repeats {j}");
+                    seen[j] = true;
+                    // certified: bound never exceeds the true distance
+                    let oracle = true_cc(cent.c.row(s), cent.c.row(j));
+                    assert!(
+                        (cc[p] as f64) <= oracle + 1e-12,
+                        "row {s} nbr {j}: bound {} above true {oracle}",
+                        cc[p]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cache_hits_syncs_and_rebuilds() {
+        let mut rng = Pcg64::new(7, 1);
+        let mut cent = random_centroids(&mut rng, 12, 6);
+        let cache = NeighbourCache::default();
+        let t = simd::tier();
+        assert!(cache.probe(&cent).is_none(), "probe must never build");
+        let a = cache.get(&cent, t);
+        let b = cache.get(&cent, t);
+        assert!(Arc::ptr_eq(&a, &b), "same revision must hit");
+        assert_eq!(cache.stats(), (1, 1, 0));
+        assert!(cache.probe(&cent).is_some());
+        assert_eq!(cache.stats(), (2, 1, 0));
+        // tiny motion: sync shares the rows, refreshes decay
+        for v in cent.c.data.iter_mut() {
+            *v += 1e-5;
+        }
+        cent.touch();
+        let c = cache.get(&cent, t);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert!(Arc::ptr_eq(&a.rows, &c.rows), "small motion must share rows");
+        assert!(c.decay.iter().all(|&x| x > 0.0));
+        assert_eq!(cache.stats(), (2, 1, 1));
+        // huge motion: rebuild from scratch, decay resets
+        for v in cent.c.data.iter_mut() {
+            *v = -*v + 3.0;
+        }
+        cent.touch();
+        let e = cache.get(&cent, t);
+        assert!(!Arc::ptr_eq(&a.rows, &e.rows), "large motion must rebuild");
+        assert!(e.decay.iter().all(|&x| x == 0.0));
+        assert_eq!(cache.stats(), (2, 2, 1));
+    }
+
+    #[test]
+    fn decayed_bounds_stay_certified_under_motion() {
+        Cases::new(10).run(|rng| {
+            let k = 2 + rng.below(15);
+            let d = 2 + rng.below(10);
+            let mut cent = random_centroids(rng, k, d);
+            let cache = NeighbourCache::default();
+            let t = simd::tier();
+            for _ in 0..4 {
+                let ni = cache.get(&cent, t);
+                for s in 0..k {
+                    let (cc, idx) = ni.rows.row(s);
+                    for p in 0..cc.len() {
+                        let j = idx[p] as usize;
+                        let oracle = true_cc(cent.c.row(s), cent.c.row(j));
+                        assert!(
+                            cc[p] as f64 - ni.decay[s] <= oracle + 1e-9,
+                            "s={s} j={j}: decayed bound above true distance"
+                        );
+                    }
+                }
+                // drift the centroids and bump the revision
+                for v in cent.c.data.iter_mut() {
+                    *v += 0.01 * rng.gauss_f32();
+                }
+                for j in 0..k {
+                    let nrm: f64 = cent
+                        .c
+                        .row(j)
+                        .iter()
+                        .map(|&x| x as f64 * x as f64)
+                        .sum();
+                    cent.norms[j] = nrm as f32;
+                }
+                cent.touch();
+            }
+        });
+    }
+
+    #[test]
+    fn dense_exponion_bit_identical_to_flat_scan() {
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // opt-in FMA tier is documented as unfaithful
+        }
+        let t = simd::tier();
+        Cases::new(12).run(|rng| {
+            let k = 2 + rng.below(96);
+            let d = 1 + rng.below(24);
+            let mut cdata: Vec<f32> =
+                (0..k * d).map(|_| rng.gauss_f32()).collect();
+            // duplicate a centroid row to force exact d² ties
+            if k >= 2 {
+                for c0 in 0..d {
+                    cdata[(k - 1) * d + c0] = cdata[c0];
+                }
+            }
+            let cent = Centroids::from_matrix(DenseMatrix::from_vec(k, d, cdata));
+            let cache = NeighbourCache::default();
+            let ni = cache.get(&cent, t);
+            for _ in 0..40 {
+                let x: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+                let xn = simd::dot_with(t, &x, &x);
+                let (jf, df) = simd::nearest_with(t, &x, xn, &cent.c, &cent.norms);
+                let (je, de, _evals) =
+                    nearest_dense_exponion(t, &x, xn, &cent.c, &cent.norms, &ni);
+                assert_eq!(je, jf, "argmin diverged (k={k} d={d})");
+                assert_eq!(de.to_bits(), df.to_bits(), "distance diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn dense_exponion_bit_identical_at_serving_k() {
+        // satellite coverage: k ∈ {64, 1024, 4096}, cold structure
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return;
+        }
+        let t = simd::tier();
+        let mut rng = Pcg64::new(41, 5);
+        for k in [64usize, 1024, 4096] {
+            let d = 12;
+            let cent = random_centroids(&mut rng, k, d);
+            let cache = NeighbourCache::default();
+            let ni = cache.get(&cent, t);
+            let mut pruned_any = false;
+            for _ in 0..40 {
+                let x: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+                let xn = simd::dot_with(t, &x, &x);
+                let (jf, df) = simd::nearest_with(t, &x, xn, &cent.c, &cent.norms);
+                let (je, de, evals) =
+                    nearest_dense_exponion(t, &x, xn, &cent.c, &cent.norms, &ni);
+                assert_eq!(je, jf, "argmin diverged at k={k}");
+                assert_eq!(de.to_bits(), df.to_bits(), "distance diverged at k={k}");
+                pruned_any |= (evals as usize) < k;
+            }
+            assert!(
+                pruned_any,
+                "exponion never pruned anything at k={k} — structure inert"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_exponion_bit_identical_under_motion_warm_structure() {
+        // k = 1024 across several drifting revisions: syncs and
+        // rebuilds must both preserve exact parity
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return;
+        }
+        let t = simd::tier();
+        let mut rng = Pcg64::new(13, 9);
+        let k = 1024;
+        let d = 10;
+        let mut cent = random_centroids(&mut rng, k, d);
+        let cache = NeighbourCache::default();
+        for round in 0..4 {
+            let ni = cache.get(&cent, t);
+            for _ in 0..24 {
+                let x: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+                let xn = simd::dot_with(t, &x, &x);
+                let (jf, df) = simd::nearest_with(t, &x, xn, &cent.c, &cent.norms);
+                let (je, de, _) =
+                    nearest_dense_exponion(t, &x, xn, &cent.c, &cent.norms, &ni);
+                assert_eq!(je, jf, "round {round}: argmin diverged");
+                assert_eq!(de.to_bits(), df.to_bits(), "round {round}: d² diverged");
+            }
+            // small drift so at least some rounds take the sync path
+            let scale = if round == 1 { 0.5 } else { 0.004 };
+            for v in cent.c.data.iter_mut() {
+                *v += scale * rng.gauss_f32();
+            }
+            for j in 0..k {
+                let nrm: f64 =
+                    cent.c.row(j).iter().map(|&x| x as f64 * x as f64).sum();
+                cent.norms[j] = nrm as f32;
+            }
+            cent.touch();
+        }
+        let (_, builds, syncs) = cache.stats();
+        assert!(syncs >= 1, "no round took the incremental sync path");
+        assert!(builds >= 1);
+    }
+
+    fn random_csr(rng: &mut Pcg64, rows: usize, cols: usize, nnz_per: usize) -> CsrMatrix {
+        let mut m = CsrMatrix::empty(cols);
+        for _ in 0..rows {
+            let nnz = 1 + rng.below(nnz_per);
+            let cols_idx = rng.sample_distinct(cols, nnz.min(cols));
+            let row: Vec<(u32, f32)> = cols_idx
+                .iter()
+                .map(|&c| (c as u32, rng.gauss_f32()))
+                .collect();
+            m.push_row(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn sparse_exponion_bit_identical_to_sweep() {
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return; // unfused gathers; skip under opt-in FMA
+        }
+        let t = simd::tier();
+        Cases::new(10).run(|rng| {
+            let d = 16 + rng.below(120);
+            let k = 2 + rng.below(60);
+            let m = random_csr(rng, 24, d, 12);
+            let cent = random_centroids(rng, k, d);
+            let tc = TransposedCentroids::build(&cent.c);
+            let cache = NeighbourCache::default();
+            let ni = cache.get(&cent, t);
+            let xns = m.row_sq_norms();
+            let mut scratch = vec![0f32; k];
+            let mut lbs = vec![0f32; k];
+            for i in 0..m.rows {
+                let (idx, vals) = m.row(i);
+                let (js, ds) =
+                    tc.nearest(idx, vals, xns[i], &cent.norms, &mut scratch);
+                let (je, de, _) = nearest_sparse_exponion(
+                    &tc, idx, vals, xns[i], &cent.norms, &ni, &mut lbs,
+                );
+                assert_eq!(je, js, "point {i}: argmin diverged (k={k})");
+                assert_eq!(de.to_bits(), ds.to_bits(), "point {i}: d² diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_exponion_bit_identical_at_large_k_under_motion() {
+        if simd::tier() == simd::Tier::Avx2Fma {
+            return;
+        }
+        let t = simd::tier();
+        let mut rng = Pcg64::new(29, 3);
+        let d = 96;
+        let k = 1024;
+        let m = random_csr(&mut rng, 20, d, 10);
+        let mut cent = random_centroids(&mut rng, k, d);
+        let cache = NeighbourCache::default();
+        let xns = m.row_sq_norms();
+        for round in 0..3 {
+            let tc = TransposedCentroids::build(&cent.c);
+            let ni = cache.get(&cent, t);
+            let mut scratch = vec![0f32; k];
+            let mut lbs = vec![0f32; k];
+            for i in 0..m.rows {
+                let (idx, vals) = m.row(i);
+                let (js, ds) =
+                    tc.nearest(idx, vals, xns[i], &cent.norms, &mut scratch);
+                let (je, de, _) = nearest_sparse_exponion(
+                    &tc, idx, vals, xns[i], &cent.norms, &ni, &mut lbs,
+                );
+                assert_eq!(je, js, "round {round} point {i}: argmin diverged");
+                assert_eq!(de.to_bits(), ds.to_bits(), "round {round} point {i}");
+            }
+            for v in cent.c.data.iter_mut() {
+                *v += 0.002 * rng.gauss_f32();
+            }
+            for j in 0..k {
+                let nrm: f64 =
+                    cent.c.row(j).iter().map(|&x| x as f64 * x as f64).sum();
+                cent.norms[j] = nrm as f32;
+            }
+            cent.touch();
+        }
+        assert!(cache.syncs() >= 1, "large-k motion test never synced");
+    }
+
+    #[test]
+    fn probe_stride_scales_like_sqrt_k() {
+        assert_eq!(probe_stride(2), 1);
+        assert_eq!(probe_stride(64), 8);
+        assert_eq!(probe_stride(4096), 64);
+        for k in [2usize, 7, 64, 100, 513, 1024, 4096, 5000] {
+            let s = probe_stride(k);
+            assert!(s >= 1 && s <= k);
+            // at least one probe, at most ~max(√k, k/8) + 1 of them
+            let probes = k.div_ceil(s);
+            assert!(probes >= 1 && probes <= k);
+        }
+    }
+}

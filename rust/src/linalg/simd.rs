@@ -252,6 +252,18 @@ fn dot4_scalar(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f3
 }
 
 #[inline]
+fn dot4x2_scalar(
+    xa: &[f32],
+    xb: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [[f32; 4]; 2] {
+    [dot4_scalar(xa, c0, c1, c2, c3), dot4_scalar(xb, c0, c1, c2, c3)]
+}
+
+#[inline]
 fn add_into_scalar(acc: &mut [f64], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
     for i in 0..x.len() {
@@ -450,6 +462,58 @@ unsafe fn dot4_avx2(
     out
 }
 
+/// Rank-2 (two-point) × 4-centroid dot tile: each centroid chunk is
+/// loaded **once** and multiplied into both points' accumulators,
+/// halving centroid memory traffic versus two `dot4` passes. Eight
+/// independent 256-bit accumulators (4 centroids × 2 points) — each dot
+/// keeps its own eight virtual lanes, so every output is bit-identical
+/// to the corresponding single `dot_avx2`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot4x2_avx2(
+    xa: &[f32],
+    xb: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [[f32; 4]; 2] {
+    let n = xa.len();
+    let chunks = n / 8;
+    let mut aa = [_mm256_setzero_ps(); 4];
+    let mut ab = [_mm256_setzero_ps(); 4];
+    let cs = [c0, c1, c2, c3];
+    for c in 0..chunks {
+        let i = c * 8;
+        let xav = _mm256_loadu_ps(xa.as_ptr().add(i));
+        let xbv = _mm256_loadu_ps(xb.as_ptr().add(i));
+        for (j, cj) in cs.iter().enumerate() {
+            let cv = _mm256_loadu_ps(cj.as_ptr().add(i));
+            aa[j] = _mm256_add_ps(aa[j], _mm256_mul_ps(xav, cv));
+            ab[j] = _mm256_add_ps(ab[j], _mm256_mul_ps(xbv, cv));
+        }
+    }
+    let mut tails = [[0f32; 4]; 2];
+    for i in chunks * 8..n {
+        let xai = *xa.get_unchecked(i);
+        let xbi = *xb.get_unchecked(i);
+        for (j, cj) in cs.iter().enumerate() {
+            let cji = *cj.get_unchecked(i);
+            tails[0][j] += xai * cji;
+            tails[1][j] += xbi * cji;
+        }
+    }
+    let mut out = [[0f32; 4]; 2];
+    for j in 0..4 {
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), aa[j]);
+        out[0][j] = reduce_lanes(&lanes) + tails[0][j];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), ab[j]);
+        out[1][j] = reduce_lanes(&lanes) + tails[1][j];
+    }
+    out
+}
+
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_avx2fma(a: &[f32], b: &[f32]) -> f32 {
@@ -508,6 +572,53 @@ unsafe fn dot4_avx2fma(
         let mut lanes = [0f32; 8];
         _mm256_storeu_ps(lanes.as_mut_ptr(), av);
         out[j] = reduce_lanes(&lanes) + tails[j];
+    }
+    out
+}
+
+/// FMA variant of the rank-2 tile (fused accumulate, same shape).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot4x2_avx2fma(
+    xa: &[f32],
+    xb: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [[f32; 4]; 2] {
+    let n = xa.len();
+    let chunks = n / 8;
+    let mut aa = [_mm256_setzero_ps(); 4];
+    let mut ab = [_mm256_setzero_ps(); 4];
+    let cs = [c0, c1, c2, c3];
+    for c in 0..chunks {
+        let i = c * 8;
+        let xav = _mm256_loadu_ps(xa.as_ptr().add(i));
+        let xbv = _mm256_loadu_ps(xb.as_ptr().add(i));
+        for (j, cj) in cs.iter().enumerate() {
+            let cv = _mm256_loadu_ps(cj.as_ptr().add(i));
+            aa[j] = _mm256_fmadd_ps(xav, cv, aa[j]);
+            ab[j] = _mm256_fmadd_ps(xbv, cv, ab[j]);
+        }
+    }
+    let mut tails = [[0f32; 4]; 2];
+    for i in chunks * 8..n {
+        let xai = *xa.get_unchecked(i);
+        let xbi = *xb.get_unchecked(i);
+        for (j, cj) in cs.iter().enumerate() {
+            let cji = *cj.get_unchecked(i);
+            tails[0][j] += xai * cji;
+            tails[1][j] += xbi * cji;
+        }
+    }
+    let mut out = [[0f32; 4]; 2];
+    for j in 0..4 {
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), aa[j]);
+        out[0][j] = reduce_lanes(&lanes) + tails[0][j];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), ab[j]);
+        out[1][j] = reduce_lanes(&lanes) + tails[1][j];
     }
     out
 }
@@ -617,6 +728,63 @@ unsafe fn dot4_neon(
         vst1q_f32(lanes.as_mut_ptr(), acc[j * 2]);
         vst1q_f32(lanes.as_mut_ptr().add(4), acc[j * 2 + 1]);
         out[j] = reduce_lanes(&lanes) + tails[j];
+    }
+    out
+}
+
+/// Rank-2 (two-point) × 4-centroid dot tile on NEON: 16 independent
+/// 128-bit accumulators (4 centroids × 2 points × lo/hi), centroid
+/// chunks loaded once for both points. Bit-identical per output to
+/// `dot_neon` (same eight virtual lanes per dot).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot4x2_neon(
+    xa: &[f32],
+    xb: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [[f32; 4]; 2] {
+    let n = xa.len();
+    let chunks = n / 8;
+    let mut aa = [vdupq_n_f32(0.0); 8]; // [lo0, hi0, lo1, hi1, ...] for xa
+    let mut ab = [vdupq_n_f32(0.0); 8]; // same layout for xb
+    let cs = [c0, c1, c2, c3];
+    for c in 0..chunks {
+        let i = c * 8;
+        let xa0 = vld1q_f32(xa.as_ptr().add(i));
+        let xa1 = vld1q_f32(xa.as_ptr().add(i + 4));
+        let xb0 = vld1q_f32(xb.as_ptr().add(i));
+        let xb1 = vld1q_f32(xb.as_ptr().add(i + 4));
+        for (j, cj) in cs.iter().enumerate() {
+            let cv0 = vld1q_f32(cj.as_ptr().add(i));
+            let cv1 = vld1q_f32(cj.as_ptr().add(i + 4));
+            aa[j * 2] = vaddq_f32(aa[j * 2], vmulq_f32(xa0, cv0));
+            aa[j * 2 + 1] = vaddq_f32(aa[j * 2 + 1], vmulq_f32(xa1, cv1));
+            ab[j * 2] = vaddq_f32(ab[j * 2], vmulq_f32(xb0, cv0));
+            ab[j * 2 + 1] = vaddq_f32(ab[j * 2 + 1], vmulq_f32(xb1, cv1));
+        }
+    }
+    let mut tails = [[0f32; 4]; 2];
+    for i in chunks * 8..n {
+        let xai = *xa.get_unchecked(i);
+        let xbi = *xb.get_unchecked(i);
+        for (j, cj) in cs.iter().enumerate() {
+            let cji = *cj.get_unchecked(i);
+            tails[0][j] += xai * cji;
+            tails[1][j] += xbi * cji;
+        }
+    }
+    let mut out = [[0f32; 4]; 2];
+    for j in 0..4 {
+        let mut lanes = [0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), aa[j * 2]);
+        vst1q_f32(lanes.as_mut_ptr().add(4), aa[j * 2 + 1]);
+        out[0][j] = reduce_lanes(&lanes) + tails[0][j];
+        vst1q_f32(lanes.as_mut_ptr(), ab[j * 2]);
+        vst1q_f32(lanes.as_mut_ptr().add(4), ab[j * 2 + 1]);
+        out[1][j] = reduce_lanes(&lanes) + tails[1][j];
     }
     out
 }
@@ -1026,6 +1194,46 @@ pub fn dot4_with(
     }
 }
 
+/// The rank-2 / multi-point tile: dots of **two** points against the
+/// same four centroid rows in one pass, so each centroid chunk is
+/// loaded once instead of twice. `dot4x2_with(t, xa, xb, …)[0][j]` is
+/// bit-identical to `dot_with(t, xa, c_j)` (and `[1][j]` to `xb`'s) for
+/// every non-FMA tier: each of the eight dots owns its accumulators and
+/// reduces through the shared lane tree. SSE2 composes two `dot4`
+/// passes (16 independent 128-bit accumulators would spill the
+/// register file); AVX2/FMA/NEON run true fused tiles.
+#[inline]
+pub fn dot4x2_with(
+    t: Tier,
+    xa: &[f32],
+    xb: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> [[f32; 4]; 2] {
+    // real asserts: the tier kernels below do unchecked SIMD loads
+    assert_eq!(xa.len(), xb.len(), "dot4x2: point length mismatch");
+    assert_eq!(xa.len(), c0.len(), "dot4x2: row 0 length mismatch");
+    assert_eq!(xa.len(), c1.len(), "dot4x2: row 1 length mismatch");
+    assert_eq!(xa.len(), c2.len(), "dot4x2: row 2 length mismatch");
+    assert_eq!(xa.len(), c3.len(), "dot4x2: row 3 length mismatch");
+    match t {
+        Tier::Scalar => dot4x2_scalar(xa, xb, c0, c1, c2, c3),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe {
+            [dot4_sse2(xa, c0, c1, c2, c3), dot4_sse2(xb, c0, c1, c2, c3)]
+        },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { dot4x2_avx2(xa, xb, c0, c1, c2, c3) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { dot4x2_avx2fma(xa, xb, c0, c1, c2, c3) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { dot4x2_neon(xa, xb, c0, c1, c2, c3) },
+        _ => dot4x2_scalar(xa, xb, c0, c1, c2, c3),
+    }
+}
+
 #[inline]
 pub fn add_into_with(t: Tier, acc: &mut [f64], x: &[f32]) {
     // real assert: the tier kernels below do unchecked SIMD loads
@@ -1168,7 +1376,25 @@ pub fn nearest_block_with(
     for b in 0..blocks {
         let j = b * 4;
         let (c0, c1, c2, c3) = (c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
-        for ti in 0..p {
+        // point-pair inner loop through the rank-2 tile: each centroid
+        // chunk streams once per two points (per-dot results match the
+        // single-point dot4 strip bit-for-bit on non-FMA tiers)
+        let mut ti = 0;
+        while ti + 2 <= p {
+            let dd = dot4x2_with(t, rows[ti], rows[ti + 1], c0, c1, c2, c3);
+            for (pi, dots) in dd.iter().enumerate() {
+                let tt = ti + pi;
+                for (o, &dt) in dots.iter().enumerate() {
+                    let d2 = (xns[tt] + cnorms[j + o] - 2.0 * dt).max(0.0);
+                    if d2 < out_d2[tt] {
+                        out_d2[tt] = d2;
+                        out_lbl[tt] = (j + o) as u32;
+                    }
+                }
+            }
+            ti += 2;
+        }
+        if ti < p {
             let dots = dot4_with(t, rows[ti], c0, c1, c2, c3);
             for (o, &dt) in dots.iter().enumerate() {
                 let d2 = (xns[ti] + cnorms[j + o] - 2.0 * dt).max(0.0);
@@ -1214,7 +1440,20 @@ pub fn dist_rows_block_with(
     for b in 0..blocks {
         let j = b * 4;
         let (c0, c1, c2, c3) = (c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
-        for ti in 0..p {
+        // same point-pair rank-2 tile as `nearest_block_with`
+        let mut ti = 0;
+        while ti + 2 <= p {
+            let dd = dot4x2_with(t, rows[ti], rows[ti + 1], c0, c1, c2, c3);
+            for (pi, dots) in dd.iter().enumerate() {
+                let tt = ti + pi;
+                let orow = &mut out[tt * k..(tt + 1) * k];
+                for (o, &dt) in dots.iter().enumerate() {
+                    orow[j + o] = (xns[tt] + cnorms[j + o] - 2.0 * dt).max(0.0);
+                }
+            }
+            ti += 2;
+        }
+        if ti < p {
             let dots = dot4_with(t, rows[ti], c0, c1, c2, c3);
             let orow = &mut out[ti * k..(ti + 1) * k];
             for (o, &dt) in dots.iter().enumerate() {
@@ -1372,6 +1611,113 @@ mod tests {
                         dot_scalar(&x, rows[j]).to_bits(),
                         "tier {} vs scalar, lane {j} n={n}",
                         t.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dot4x2_lanes_bit_identical_to_dot_per_tier() {
+        // the rank-2 tile: both points' four dots must reproduce the
+        // single-dot (and the existing dot4 strip) bits on every exact
+        // tier — this is what lets the blocked kernels pair points
+        // without perturbing assignment results
+        Cases::new(150).run(|rng| {
+            let n = rng.below(260);
+            let xa = gen::matrix(rng, 1, n);
+            let xb = gen::matrix(rng, 1, n);
+            let c = gen::matrix(rng, 4, n);
+            let rows: Vec<&[f32]> = (0..4).map(|j| &c[j * n..(j + 1) * n]).collect();
+            for t in exact_tiers() {
+                let tile =
+                    dot4x2_with(t, &xa, &xb, rows[0], rows[1], rows[2], rows[3]);
+                let strip_a = dot4_with(t, &xa, rows[0], rows[1], rows[2], rows[3]);
+                let strip_b = dot4_with(t, &xb, rows[0], rows[1], rows[2], rows[3]);
+                for j in 0..4 {
+                    assert_eq!(
+                        tile[0][j].to_bits(),
+                        dot_with(t, &xa, rows[j]).to_bits(),
+                        "tier {} point a lane {j} n={n}",
+                        t.name()
+                    );
+                    assert_eq!(
+                        tile[1][j].to_bits(),
+                        dot_with(t, &xb, rows[j]).to_bits(),
+                        "tier {} point b lane {j} n={n}",
+                        t.name()
+                    );
+                    assert_eq!(tile[0][j].to_bits(), strip_a[j].to_bits());
+                    assert_eq!(tile[1][j].to_bits(), strip_b[j].to_bits());
+                    assert_eq!(
+                        tile[0][j].to_bits(),
+                        dot_scalar(&xa, rows[j]).to_bits(),
+                        "tier {} vs scalar, point a lane {j} n={n}",
+                        t.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dot4x2_tail_lengths_every_tier() {
+        // lengths 0..=17 force the 8-wide chunk loop plus every tail
+        // shape through each tier's cleanup path
+        for n in 0..=17usize {
+            let xa: Vec<f32> = (0..n).map(|i| (i as f32) * 0.75 - 2.0).collect();
+            let xb: Vec<f32> = (0..n).map(|i| 1.5 - (i as f32) * 0.5).collect();
+            let c: Vec<f32> = (0..4 * n).map(|i| (i as f32) * 0.3 - 5.0).collect();
+            let rows: Vec<&[f32]> = (0..4).map(|j| &c[j * n..(j + 1) * n]).collect();
+            for t in exact_tiers() {
+                let tile =
+                    dot4x2_with(t, &xa, &xb, rows[0], rows[1], rows[2], rows[3]);
+                for j in 0..4 {
+                    assert_eq!(
+                        tile[0][j].to_bits(),
+                        dot_scalar(&xa, rows[j]).to_bits(),
+                        "tier {} n={n} a lane {j}",
+                        t.name()
+                    );
+                    assert_eq!(
+                        tile[1][j].to_bits(),
+                        dot_scalar(&xb, rows[j]).to_bits(),
+                        "tier {} n={n} b lane {j}",
+                        t.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot4x2_fma_tier_close_to_scalar() {
+        if !available_tiers().contains(&Tier::Avx2Fma) {
+            return;
+        }
+        Cases::new(60).run(|rng| {
+            let n = rng.below(300);
+            let xa = gen::matrix(rng, 1, n);
+            let xb = gen::matrix(rng, 1, n);
+            let c = gen::matrix(rng, 4, n);
+            let rows: Vec<&[f32]> = (0..4).map(|j| &c[j * n..(j + 1) * n]).collect();
+            let tile = dot4x2_with(
+                Tier::Avx2Fma,
+                &xa,
+                &xb,
+                rows[0],
+                rows[1],
+                rows[2],
+                rows[3],
+            );
+            for j in 0..4 {
+                for (x, got) in [(&xa, tile[0][j]), (&xb, tile[1][j])] {
+                    let sc = dot_scalar(x, rows[j]);
+                    let mag: f32 =
+                        x.iter().zip(rows[j]).map(|(a, b)| (a * b).abs()).sum();
+                    assert!(
+                        (sc - got).abs() <= 1e-4 * (1.0 + mag),
+                        "n={n} lane {j}: scalar {sc} vs fma {got}"
                     );
                 }
             }

@@ -199,7 +199,7 @@ const BUILD_TILE: usize = 64;
 /// (`pruned_nearest_matches_unpruned_bitwise` and
 /// `prune_bound_never_exceeds_computed_distance` hammer this).
 #[inline]
-fn prune_slack(nnz: usize) -> f64 {
+pub(crate) fn prune_slack(nnz: usize) -> f64 {
     4.0e-7 * (nnz as f64 + 16.0)
 }
 
@@ -388,7 +388,7 @@ impl TransposedCentroids {
     /// `(seed_j, seed_d2, survivors)` where `survivors` counts
     /// centroids whose bound does not already rule them out against the
     /// seed.
-    fn prune_seed(
+    pub(crate) fn prune_seed(
         &self,
         idx: &[u32],
         vals: &[f32],
@@ -559,6 +559,56 @@ impl TransposedCentroids {
             if !defer[ti] {
                 continue;
             }
+            let (idx, vals) = rows[ti];
+            self.dots_with(tier, idx, vals, scratch);
+            let mut best = f32::INFINITY;
+            let mut best_j = 0u32;
+            for j in 0..k {
+                let d2 = (xns[ti] + cnorms[j] - 2.0 * scratch[j]).max(0.0);
+                if d2 < best {
+                    best = d2;
+                    best_j = j as u32;
+                }
+            }
+            out_lbl[ti] = best_j;
+            out_d2[ti] = best;
+            stats.points_swept += 1;
+            stats.centroids_evaluated += k as u64;
+        }
+        stats
+    }
+
+    /// [`TransposedCentroids::nearest_block`] without the pruning pass:
+    /// every point goes straight to the full AXPY sweep. This is the
+    /// adaptive engine's **flat** strategy — on corpora whose centroid
+    /// norms are (near-)equal the norm bound can never rule anything
+    /// out, so the O(k) bound arithmetic per point is pure overhead
+    /// (the measured ~20% regression on unit-normalised rows). Results
+    /// are bit-identical to the pruned and per-point paths: the sweep
+    /// body is the same first-wins scan over the same AXPY dots.
+    pub fn nearest_block_flat(
+        &self,
+        rows: &[(&[u32], &[f32])],
+        xns: &[f32],
+        cnorms: &[f32],
+        scratch: &mut [f32],
+        out_lbl: &mut [u32],
+        out_d2: &mut [f32],
+    ) -> BlockStats {
+        let p = rows.len();
+        debug_assert!(p <= SPARSE_BLOCK);
+        assert_eq!(xns.len(), p, "nearest_block_flat: norms length mismatch");
+        assert_eq!(out_lbl.len(), p, "nearest_block_flat: label buffer mismatch");
+        assert_eq!(out_d2.len(), p, "nearest_block_flat: d2 buffer mismatch");
+        let mut stats = BlockStats::default();
+        let k = self.k;
+        if k == 0 {
+            out_lbl.fill(0);
+            out_d2.fill(f32::INFINITY);
+            return stats;
+        }
+        let tier = simd::tier();
+        for ti in 0..p {
             let (idx, vals) = rows[ti];
             self.dots_with(tier, idx, vals, scratch);
             let mut best = f32::INFINITY;

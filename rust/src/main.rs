@@ -671,6 +671,7 @@ fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
         &rows,
         sparse,
         None,
+        None,
         &NativeEngine::default(),
         &pool,
     )?;

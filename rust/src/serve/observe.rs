@@ -172,9 +172,9 @@ impl ModelMetrics {
 
 /// One merged scrape: the global registry plus the polled sources that
 /// keep their own atomics — the SIMD dispatch tally (`linalg::simd`
-/// statics) and each model's two transpose caches (lock-free `Arc`
-/// handles captured at entry registration; scrapes never touch a
-/// session mutex).
+/// statics) and each model's transpose and exponion-neighbour caches
+/// (lock-free `Arc` handles captured at entry registration; scrapes
+/// never touch a session mutex).
 pub fn samples(registry: &ModelRegistry) -> Vec<Sample> {
     let mut out = obs::registry().snapshot();
     for (tier, n) in simd::dispatch_tally() {
@@ -205,6 +205,33 @@ pub fn samples(registry: &ModelRegistry) -> Vec<Sample> {
         cache("predict", h, b);
         if let Some((h, b)) = entry.session_cache_stats() {
             cache("session", h, b);
+        }
+        let mut neigh = |engine: &str, hits: u64, builds: u64, syncs: u64| {
+            let labels = vec![
+                ("engine".to_string(), engine.to_string()),
+                ("model".to_string(), entry.name().to_string()),
+            ];
+            out.push(Sample {
+                name: "nmbkm_neigh_cache_hits_total".to_string(),
+                labels: labels.clone(),
+                value: Value::Counter(hits),
+            });
+            out.push(Sample {
+                name: "nmbkm_neigh_cache_builds_total".to_string(),
+                labels: labels.clone(),
+                value: Value::Counter(builds),
+            });
+            out.push(Sample {
+                name: "nmbkm_neigh_cache_syncs_total".to_string(),
+                labels,
+                value: Value::Counter(syncs),
+            });
+        };
+        if let Some((h, b, s)) = entry.predict_neigh_stats() {
+            neigh("predict", h, b, s);
+        }
+        if let Some((h, b, s)) = entry.session_neigh_stats() {
+            neigh("session", h, b, s);
         }
     }
     out

@@ -25,8 +25,9 @@
 
 use crate::config::RunConfig;
 use crate::coordinator::shard::Pool;
-use crate::kmeans::assign::{NativeEngine, TransCache};
+use crate::kmeans::assign::{AssignEngine, NativeEngine, TransCache};
 use crate::kmeans::state::Centroids;
+use crate::linalg::neighbours::{NeighbourCache, NeighbourIndex};
 use crate::linalg::sparse::TransposedCentroids;
 use crate::obs::{self, log as obslog};
 use crate::serve::observe::ModelMetrics;
@@ -80,6 +81,11 @@ pub struct PublishedModel {
     /// concurrent sparse predicts share one O(k·d) transpose instead of
     /// each predict engine rebuilding its own per publish.
     pub trans: Option<Arc<TransposedCentroids>>,
+    /// The training session's exponion neighbour structure at `rev`
+    /// (serving-scale k only): carried so predicts prune with the
+    /// session's O(k²·d) build — zero neighbour rebuilds between
+    /// publishes.
+    pub neigh: Option<Arc<NeighbourIndex>>,
 }
 
 impl PublishedModel {
@@ -104,7 +110,14 @@ impl PublishedModel {
         // (no shared cache slot is involved at all)
         let trans = if self.sparse { self.trans.clone() } else { None };
         session::predict_against(
-            cent, self.dim, rows, self.sparse, trans, engine, pool,
+            cent,
+            self.dim,
+            rows,
+            self.sparse,
+            trans,
+            self.neigh.clone(),
+            engine,
+            pool,
         )
     }
 
@@ -126,7 +139,14 @@ impl PublishedModel {
         })?;
         let trans = if self.sparse { self.trans.clone() } else { None };
         session::predict_wire(
-            cent, self.dim, rows, self.sparse, trans, engine, pool,
+            cent,
+            self.dim,
+            rows,
+            self.sparse,
+            trans,
+            self.neigh.clone(),
+            engine,
+            pool,
         )
     }
 
@@ -161,6 +181,9 @@ pub struct ModelEntry {
     /// so metric scrapes read its counters lock-free — never through
     /// the session mutex a training step may hold for seconds.
     session_cache: Option<Arc<TransCache>>,
+    /// The training engine's exponion neighbour cache, captured the
+    /// same way for the same lock-free scrapes.
+    session_neigh: Option<Arc<NeighbourCache>>,
     /// Highest WAL sequence number applied to this model (0 = none).
     /// Checkpoints persist it next to the snapshot; recovery and the
     /// follower use it to skip records a snapshot already covers.
@@ -171,6 +194,7 @@ impl ModelEntry {
     fn new(name: &str, session: OnlineSession) -> Arc<ModelEntry> {
         let pool = session.pool().clone();
         let session_cache = session.trans_cache();
+        let session_neigh = session.neigh_cache();
         let view = Arc::new(publish_view(name, &session));
         Arc::new(ModelEntry {
             name: name.to_string(),
@@ -180,6 +204,7 @@ impl ModelEntry {
             pool,
             metrics: ModelMetrics::for_model(name),
             session_cache,
+            session_neigh,
             last_seq: AtomicU64::new(0),
         })
     }
@@ -317,6 +342,21 @@ impl ModelEntry {
         self.session_cache.as_ref().map(|c| (c.hits(), c.builds()))
     }
 
+    /// `(hits, builds, syncs)` of the lock-free predict engine's
+    /// exponion neighbour cache. With a published serving-scale model
+    /// the builds must stay at zero: every predict prunes with the
+    /// carried structure.
+    pub fn predict_neigh_stats(&self) -> Option<(u64, u64, u64)> {
+        self.predict_engine.neigh_cache_stats()
+    }
+
+    /// `(hits, builds, syncs)` of the **training** engine's neighbour
+    /// cache, via the handle captured at registration — no session
+    /// lock. `None` when the engine keeps none (e.g. XLA).
+    pub fn session_neigh_stats(&self) -> Option<(u64, u64, u64)> {
+        self.session_neigh.as_ref().map(|c| c.stats())
+    }
+
     fn lock_session(&self) -> Result<std::sync::MutexGuard<'_, OnlineSession>> {
         self.session.lock().map_err(|_| {
             anyhow!(
@@ -343,6 +383,9 @@ fn publish_view(name: &str, s: &OnlineSession) -> PublishedModel {
         // cache) the transpose every sparse predict against this view
         // will share — the publish is the one place that pays O(k·d)
         trans: s.published_trans(),
+        // same deal for the exponion neighbour structure: the publish
+        // is the one place that may pay O(k²·d), predicts never do
+        neigh: s.published_neigh(),
     }
 }
 
@@ -770,6 +813,57 @@ mod tests {
         let dview = reg2.resolve(None).unwrap().current();
         assert!(!dview.sparse);
         assert!(dview.trans.is_none());
+    }
+
+    #[test]
+    fn serving_scale_publish_carries_neigh_and_predicts_never_rebuild() {
+        // serving-scale k crosses the exponion gate: the published view
+        // must carry the neighbour structure and every predict must
+        // prune with it — zero O(k²·d) builds on the predict engine
+        let k = crate::kmeans::assign::EXPONION_MIN_K;
+        let data = GaussianMixture::default_spec(8, 8).generate(k + 128, 13);
+        let (session, _) = session::train(&data, &cfg(k, 17)).unwrap();
+        let reg = ModelRegistry::with_default(session);
+        let entry = reg.resolve(None).unwrap();
+        let view = entry.current();
+        assert!(!view.sparse);
+        let ni = view
+            .neigh
+            .as_ref()
+            .expect("serving-scale publish must carry the neighbour structure");
+        assert_eq!((ni.k(), ni.d()), (k, 8));
+        assert_eq!(ni.rev, view.rev);
+        let queries = rows_of(&data, 0, 6);
+        for _ in 0..4 {
+            entry.predict(&queries).unwrap();
+        }
+        let (hits, builds, syncs) = entry.predict_neigh_stats().unwrap();
+        assert_eq!(
+            (hits, builds, syncs),
+            (4, 0, 0),
+            "published predicts must prune with the carried structure, \
+             never build their own"
+        );
+        // published and live answers agree bitwise
+        let (la, da) = entry.predict(&queries).unwrap();
+        let (lb, db) =
+            entry.with_session(|s| s.predict_rows(&queries)).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(
+            da.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            db.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // a training step republishes; predicts against the new view
+        // still never build
+        entry
+            .with_session_mut(|s| s.step(1, 1e9).map(|_| ()))
+            .unwrap();
+        entry.predict(&queries).unwrap();
+        assert_eq!(entry.predict_neigh_stats().unwrap().1, 0);
+        assert!(entry.current().neigh.is_some());
+        // the training engine's neighbour cache is scraped lock-free
+        let (_, sb, _) = entry.session_neigh_stats().unwrap();
+        assert!(sb >= 1, "training at serving-scale k must build once");
     }
 
     #[test]

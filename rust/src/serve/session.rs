@@ -29,6 +29,7 @@ use crate::kmeans::assign::{AssignEngine, NativeEngine, Sel};
 use crate::kmeans::state::Centroids;
 use crate::kmeans::{self, Clusterer, Ctx, RoundInfo};
 use crate::linalg::dense::{self, DenseMatrix};
+use crate::linalg::neighbours::NeighbourIndex;
 use crate::linalg::sparse::{CsrMatrix, TransposedCentroids};
 use crate::serve::snapshot::Snapshot;
 use crate::serve::wire::{self, WireRow};
@@ -368,6 +369,7 @@ impl OnlineSession {
             rows,
             self.data.is_sparse(),
             None,
+            None,
             self.engine.as_ref(),
             &self.pool,
         )
@@ -383,6 +385,23 @@ impl OnlineSession {
         }
         let cent = self.centroids()?;
         self.engine.trans_handle(cent)
+    }
+
+    /// A shareable exponion neighbour structure at the current revision,
+    /// when the engine keeps one worth publishing. The registry freezes
+    /// it into the published view so serving-scale-k predicts prune with
+    /// the training session's O(k²·d) build — zero rebuilds between
+    /// publishes. Sparse sessions above the exponion vocab gate return
+    /// `None` rather than pay a full-vocab k² build at publish time.
+    pub fn published_neigh(&self) -> Option<Arc<NeighbourIndex>> {
+        if self.data.is_sparse()
+            && self.data.dim()
+                > crate::kmeans::assign::EXPONION_SPARSE_MAX_D
+        {
+            return None;
+        }
+        let cent = self.centroids()?;
+        self.engine.neigh_handle(cent)
     }
 
     /// Export the full session as a snapshot artifact. `include_data`
@@ -473,6 +492,14 @@ impl OnlineSession {
         self.engine.trans_cache_handle()
     }
 
+    /// The training engine's exponion neighbour cache, when it keeps
+    /// one — scraped as `nmbkm_neigh_cache_*_total{engine="session"}`.
+    pub fn neigh_cache(
+        &self,
+    ) -> Option<Arc<crate::linalg::neighbours::NeighbourCache>> {
+        self.engine.neigh_cache_handle()
+    }
+
     /// The session's shard pool handle (shared workers; cloning is
     /// cheap). The registry's lock-free predict path reuses it so
     /// predicts and training draw from one set of worker threads.
@@ -500,6 +527,7 @@ pub fn predict_against(
     rows: &[Vec<f32>],
     sparse: bool,
     trans: Option<Arc<TransposedCentroids>>,
+    neigh: Option<Arc<NeighbourIndex>>,
     engine: &dyn AssignEngine,
     pool: &Pool,
 ) -> Result<(Vec<u32>, Vec<f32>)> {
@@ -539,14 +567,15 @@ pub fn predict_against(
     };
     let mut lbl = vec![0u32; n];
     let mut d2 = vec![0f32; n];
-    // a carried transpose (published sparse model) rides straight into
-    // the engine call — no shared-cache traffic on the predict path
-    engine.assign_with_trans(
+    // carried handles (published model) ride straight into the engine
+    // call — no shared-cache traffic on the predict path
+    engine.assign_with_handles(
         &queries,
         Sel::Range(0, n),
         cent,
         pool,
         trans,
+        neigh,
         &mut lbl,
         &mut d2,
     );
@@ -565,6 +594,7 @@ pub fn predict_wire(
     rows: &[WireRow],
     sparse: bool,
     trans: Option<Arc<TransposedCentroids>>,
+    neigh: Option<Arc<NeighbourIndex>>,
     engine: &dyn AssignEngine,
     pool: &Pool,
 ) -> Result<(Vec<u32>, Vec<f32>)> {
@@ -572,12 +602,13 @@ pub fn predict_wire(
     let n = queries.n();
     let mut lbl = vec![0u32; n];
     let mut d2 = vec![0f32; n];
-    engine.assign_with_trans(
+    engine.assign_with_handles(
         &queries,
         Sel::Range(0, n),
         cent,
         pool,
         trans,
+        neigh,
         &mut lbl,
         &mut d2,
     );
