@@ -1,6 +1,6 @@
 //! Serve-layer throughput.
 //!
-//! Three trials land in `BENCH_serve.json`:
+//! Four trials land in `BENCH_serve.json`:
 //!
 //! * `predict_during_training` — predict QPS at 1 vs 4 concurrent TCP
 //!   connections **while the model trains**; the multi-connection
@@ -18,6 +18,12 @@
 //!   `--fsync never`, and on with `--fsync always`; the overhead
 //!   ratios land in `meta` (`wal_append_overhead`,
 //!   `wal_fsync_always_overhead`) so the trend gate sees WAL cost.
+//! * `c10k_saturation` — thousands of idle connections held open
+//!   (4096 at quick/full scale, fewer in smoke or under a tight
+//!   RLIMIT_NOFILE) while 64 active peers drive predicts; the timed
+//!   active phase is trend-gateable, and `meta` records the accept
+//!   rate, active-predict p99, and resident-memory growth per idle
+//!   connection — the event loop's C10K evidence.
 //!
 //! CI runs `--quick` (3 samples) so the medians are trend-gateable by
 //! `nmbkm bench-trend`, exactly like `BENCH_micro.json`.
@@ -31,14 +37,16 @@ use nmbkm::coordinator::Pool;
 use nmbkm::data::gaussian::GaussianMixture;
 use nmbkm::data::rcv1::Rcv1Sim;
 use nmbkm::data::{Data, Storage};
+use nmbkm::serve::server::{serve_listener_with, ServeOptions};
 use nmbkm::serve::wal::{self, FsyncPolicy};
 use nmbkm::serve::wire::{dense_points_json, sparse_points_json};
-use nmbkm::serve::{frame, session, ModelRegistry};
+use nmbkm::serve::{event, frame, observe, session, ModelRegistry};
 use nmbkm::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 struct Scale {
     n_points: usize,
@@ -55,6 +63,11 @@ struct Scale {
     /// `ingest_wal`: ingest requests per measurement × points each.
     ingest_batches: usize,
     ingest_batch: usize,
+    /// `c10k_saturation`: connections held idle, peers driving load,
+    /// and predicts completed per active peer per sample.
+    idle_conns: usize,
+    active_conns: usize,
+    active_predicts: usize,
 }
 
 fn scale_for(opts: &BenchOpts) -> Scale {
@@ -72,6 +85,9 @@ fn scale_for(opts: &BenchOpts) -> Scale {
             wire_k: 8,
             ingest_batches: 12,
             ingest_batch: 32,
+            idle_conns: 128,
+            active_conns: 8,
+            active_predicts: 10,
         }
     } else if opts.samples <= BenchOpts::quick().samples {
         // CI quick: enough work for stable gateable medians, still
@@ -88,6 +104,9 @@ fn scale_for(opts: &BenchOpts) -> Scale {
             wire_k: 16,
             ingest_batches: 40,
             ingest_batch: 64,
+            idle_conns: 4096,
+            active_conns: 64,
+            active_predicts: 15,
         }
     } else {
         Scale {
@@ -102,6 +121,9 @@ fn scale_for(opts: &BenchOpts) -> Scale {
             wire_k: 32,
             ingest_batches: 120,
             ingest_batch: 128,
+            idle_conns: 4096,
+            active_conns: 64,
+            active_predicts: 40,
         }
     }
 }
@@ -552,9 +574,162 @@ fn main() {
     );
     report.push(wset);
 
+    // ── c10k saturation: thousands of idle conns + an active load ─────
+    let sat = saturation_trial(&mut report, &data, &scale, opts);
+    report.push(sat);
+
     if let Some(path) = json_path {
         report.write(&path).expect("writing bench report");
     }
+}
+
+/// This process's resident set in kB, from `/proc/self/status`
+/// (`None` off Linux — the meta key is simply omitted there).
+fn rss_kb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse::<f64>().ok()
+}
+
+/// Saturating many-connection trial: hold `idle_conns` admitted
+/// connections open (scaled down only if RLIMIT_NOFILE refuses to
+/// budge) while `active_conns` peers each complete
+/// `active_predicts` predict round-trips. The accept phase is
+/// measured against the server's own `open_connections` gauge — the
+/// clock stops when every connection is *admitted*, not merely
+/// SYN-ACKed out of the kernel backlog — and the active phase is a
+/// gateable [`BenchSet`] measurement. RSS growth per idle connection
+/// lands in `meta` as the bounded-memory evidence.
+fn saturation_trial(
+    report: &mut BenchReport,
+    data: &Data,
+    scale: &Scale,
+    opts: BenchOpts,
+) -> BenchSet {
+    // two fds per connection (client + server end, same process) plus
+    // headroom for the poller, listener, wake pipe, and stdio
+    let want = 2 * (scale.idle_conns + scale.active_conns) as u64 + 128;
+    let got = event::raise_nofile_limit(want);
+    let budget = (got as usize / 2).saturating_sub(scale.active_conns + 64);
+    let idle_n = scale.idle_conns.min(budget.max(16));
+    if idle_n < scale.idle_conns {
+        println!(
+            "c10k: RLIMIT_NOFILE caps at {got} fds; holding {idle_n} idle \
+             conns instead of {}",
+            scale.idle_conns
+        );
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let served = session::OnlineSession::from_data(data.clone(), cfg(scale.k))
+        .expect("session");
+    let reg = Arc::new(ModelRegistry::with_default(served));
+    let server = std::thread::spawn(move || {
+        serve_listener_with(
+            reg,
+            listener,
+            // no idle reaping: the whole point is to hold conns open
+            ServeOptions { conn_timeout: None, ..Default::default() },
+        )
+        .unwrap();
+    });
+
+    // accept phase: stopwatch from first connect until the server's
+    // gauge shows every idle conn admitted
+    let gauge = &observe::serve_metrics().open_connections;
+    let g0 = gauge.get();
+    let rss0 = rss_kb();
+    let t0 = Instant::now();
+    let mut idle = Vec::with_capacity(idle_n);
+    for _ in 0..idle_n {
+        idle.push(TcpStream::connect(addr).expect("idle connect"));
+    }
+    while gauge.get() < g0 + idle_n as i64 {
+        assert!(
+            t0.elapsed().as_secs() < 120,
+            "server admitted only {} of {idle_n} idle conns in 120s",
+            gauge.get() - g0
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let accept_secs = t0.elapsed().as_secs_f64();
+    let accept_rate = idle_n as f64 / accept_secs;
+    report.meta("c10k_idle_conns", json::num(idle_n as f64));
+    report.meta("c10k_active_conns", json::num(scale.active_conns as f64));
+    report.meta("c10k_accept_rate_conns_per_s", json::num(accept_rate));
+    if let (Some(r0), Some(r1)) = (rss0, rss_kb()) {
+        let per_conn = (r1 - r0).max(0.0) * 1024.0 / idle_n as f64;
+        report.meta("c10k_rss_bytes_per_idle_conn", json::num(per_conn));
+        println!(
+            "c10k: {idle_n} idle conns admitted in {accept_secs:.3}s \
+             ({accept_rate:.0}/s), {per_conn:.0} B RSS each"
+        );
+    } else {
+        println!(
+            "c10k: {idle_n} idle conns admitted in {accept_secs:.3}s \
+             ({accept_rate:.0}/s)"
+        );
+    }
+
+    // active phase: timed predict load with the idle herd still open
+    let queries: Vec<Vec<f32>> = {
+        let mut out = Vec::with_capacity(scale.query_batch);
+        let mut row = vec![0f32; data.dim()];
+        for i in 0..scale.query_batch {
+            data.write_row_dense(i * 11 % data.n(), &mut row);
+            out.push(row.clone());
+        }
+        out
+    };
+    let req = Arc::new(format!(
+        "{{\"op\":\"predict\",\"points\":{}}}",
+        dense_points_json(&queries)
+    ));
+    let lat = Arc::new(Mutex::new(Vec::new()));
+    let mut set = BenchSet::new("c10k_saturation", opts);
+    let per_conn = scale.active_predicts;
+    set.bench("active_predicts_under_idle_load", || {
+        let mut clients = Vec::with_capacity(scale.active_conns);
+        for _ in 0..scale.active_conns {
+            let req = req.clone();
+            let lat = lat.clone();
+            clients.push(std::thread::spawn(move || {
+                let (mut conn, mut reader) = connect(addr);
+                let mut mine = Vec::with_capacity(per_conn);
+                for _ in 0..per_conn {
+                    let q0 = Instant::now();
+                    let resp = roundtrip(&mut conn, &mut reader, &req);
+                    mine.push(q0.elapsed().as_secs_f64());
+                    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+                }
+                lat.lock().unwrap().extend(mine);
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+    });
+
+    // p99 over every recorded round-trip (warmup included — cold-path
+    // latency is exactly what a tail percentile should own)
+    let mut all = lat.lock().unwrap().clone();
+    all.sort_by(f64::total_cmp);
+    if !all.is_empty() {
+        let p99 = all[(all.len() * 99 / 100).min(all.len() - 1)] * 1e3;
+        report.meta("c10k_p99_predict_ms", json::num(p99));
+        println!(
+            "c10k: active predict p99 {p99:.2} ms across {} round-trips \
+             with {idle_n} idle conns open",
+            all.len()
+        );
+    }
+
+    drop(idle);
+    let (mut conn, mut reader) = connect(addr);
+    roundtrip(&mut conn, &mut reader, r#"{"op":"shutdown"}"#);
+    server.join().unwrap();
+    set
 }
 
 /// Prebuilt dense JSONL ingest requests (one per nested batch).

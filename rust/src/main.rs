@@ -87,6 +87,12 @@ fn serve_spec() -> Vec<OptSpec> {
         OptSpec { name: "checkpoint-bytes", takes_value: true, default: None, help: "snapshot-checkpoint + truncate the log after this many appended bytes [64MiB]" },
         OptSpec { name: "conn-timeout", takes_value: true, default: Some("60"), help: "per-connection socket read/write timeout in seconds, 0 = off" },
         OptSpec { name: "follow", takes_value: true, default: None, help: "run as a read-only follower of this primary (host:port serving --binary); requires --wal-dir" },
+        OptSpec { name: "max-conns", takes_value: true, default: Some("0"), help: "admitted-connection cap; peers over it get a structured 'overloaded' error [0 = unlimited]" },
+        OptSpec { name: "max-inflight", takes_value: true, default: Some("0"), help: "dispatched-but-unanswered request cap across all connections [0 = unlimited]" },
+        OptSpec { name: "max-request-bytes", takes_value: true, default: Some("0"), help: "per-request size cap (JSONL line or whole frame); oversized requests get 'overloaded', the stream survives [0 = unlimited]" },
+        OptSpec { name: "write-queue-cap", takes_value: true, default: Some("0"), help: "per-connection write-queue bytes before the server stops reading from that peer (backpressure) [0 = 4MiB]" },
+        OptSpec { name: "max-resident", takes_value: true, default: Some("0"), help: "resident-model cap: least-recently-used models are checkpointed and evicted, lazily reloading on next use [0 = unlimited]" },
+        OptSpec { name: "model-idle-secs", takes_value: true, default: Some("0"), help: "evict models untouched for this long (checkpoint-then-drop) [0 = never]" },
     ]
 }
 
@@ -399,11 +405,22 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         // detached: the scrape loop dies with the process
         let _ = nmbkm::obs::http::spawn_metrics_server(listener, render);
     }
+    // model lifecycle: LRU/idle eviction under the residency cap, run
+    // from the acceptor's periodic tick
+    registry.set_max_resident(args.get_usize("max-resident")?);
+    let idle_secs = args.get_u64("model-idle-secs")?;
+    registry.set_idle_evict(
+        (idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs)),
+    );
     let timeout_secs = args.get_u64("conn-timeout")?;
     let opts = nmbkm::serve::server::ServeOptions {
         accept_binary: args.flag("binary"),
         conn_timeout: (timeout_secs > 0)
             .then(|| std::time::Duration::from_secs(timeout_secs)),
+        max_conns: args.get_usize("max-conns")?,
+        max_inflight: args.get_usize("max-inflight")?,
+        max_request_bytes: args.get_usize("max-request-bytes")?,
+        write_queue_cap: args.get_usize("write-queue-cap")?,
     };
     let out = match args.get("listen") {
         Some(addr) => {

@@ -1,0 +1,1643 @@
+//! Event-driven TCP serving: a dependency-free readiness loop (raw
+//! epoll on Linux, kqueue on the BSD family) that scales to thousands
+//! of connections without a thread — or a thread stack — per socket.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!            ┌──────────┐   round-robin    ┌─────────────┐
+//!  accept ──▶│ acceptor │─────────────────▶│ shard loops │──┐ decoded
+//!            │ (poller) │  admission:      │ (N pollers) │  │ requests
+//!            └──────────┘  --max-conns     └─────────────┘  ▼
+//!                                            ▲  response  ┌─────────┐
+//!                                            └────────────│ workers │
+//!                                               bytes     └─────────┘
+//! ```
+//!
+//! * The **acceptor** owns the (nonblocking) listener on its own mini
+//!   poller. Accepted sockets are admitted against `--max-conns` and
+//!   handed round-robin to a shard; over-limit peers get a structured
+//!   `overloaded` JSONL error and an immediate close — never a hang.
+//!   Between accept bursts it runs the registry's model-lifecycle tick
+//!   (idle eviction + the `--max-resident` LRU cap).
+//! * **N shard loops** own the connections: nonblocking reads into a
+//!   per-connection buffer, incremental JSONL / binary-frame delimiting
+//!   (`frame::scan_frame_total`), wire-format negotiation on the first
+//!   byte, and bounded per-connection write queues. A decoded request
+//!   is handed to the worker pool; strictly **one request per
+//!   connection is in flight**, so responses come back in request order
+//!   and the stream is byte-identical to the thread-per-connection
+//!   implementation (the blocking `serve_lines`/`serve_frames` remain
+//!   the stdio reference path).
+//! * **W workers** execute requests against the shared registry —
+//!   predict fan-out inside `ModelEntry::predict_wire` reuses
+//!   `coordinator::shard::Pool::run_jobs`, so the CPU parallelism of a
+//!   big batch is the model pool's, not the transport's — and push the
+//!   encoded response bytes back to the owning shard through its inbox
+//!   and wake pipe.
+//!
+//! ## Backpressure and admission
+//!
+//! A peer that stops reading fills its write queue; past the cap the
+//! shard **stops reading from that peer** (`nmbkm_conn_backpressure_total`)
+//! until the queue drains below half — so a slow consumer throttles
+//! itself, never a core or a session lock. `--max-inflight` bounds the
+//! number of dispatched-but-unanswered requests across all connections,
+//! and `--max-request-bytes` bounds a single request (oversized JSONL
+//! lines are discarded to the newline, oversized frames are skipped by
+//! their own length prefix — the stream survives with an `overloaded`
+//! error either way).
+//!
+//! ## Shutdown
+//!
+//! `shutdown` (from any connection, either framing) flips a stop flag
+//! and **wakes every poller through its wake pipe** — no loopback
+//! self-connect, no race with `accept()`. Drain order: stop accepting →
+//! stop reading → finish in-flight requests → flush write queues →
+//! close → WAL drain (`server::drain_wal`).
+//!
+//! Idle timeouts replace the old per-socket `SO_RCVTIMEO`: under a
+//! nonblocking loop `WouldBlock` is the normal idle state, so stalls
+//! are detected by a clock sweep over `last_activity` instead of by
+//! classifying error strings (the old `is_timeout` textual matcher is
+//! gone). Connections idle past `--conn-timeout` with no request in
+//! flight still count on `nmbkm_connection_timeouts_total`.
+
+use crate::obs::log as obslog;
+use crate::serve::frame;
+use crate::serve::observe::serve_metrics;
+use crate::serve::protocol::{self, LineReply, Request};
+use crate::serve::registry::ModelRegistry;
+use crate::serve::server::{self, ServeOptions};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default per-connection write-queue cap (`ServeOptions::write_queue_cap
+/// == 0`). Generous: a queue only grows past the kernel socket buffer
+/// when the peer stops reading.
+pub const DEFAULT_WRITE_QUEUE: usize = 4 << 20;
+
+/// Soft cap on a connection's read buffer while a request is in flight:
+/// pipelined requests beyond it wait in the kernel (read interest off)
+/// until the current response is handed back.
+const INBUF_SOFT_CAP: usize = 1 << 20;
+
+/// One nonblocking read drains at most this much per readiness event so
+/// a firehose peer cannot starve its shard siblings.
+const READ_CHUNK: usize = 16 << 10;
+const MAX_READS_PER_EVENT: usize = 16;
+
+/// Poller wait tick: drives the idle-timeout sweep and the lifecycle
+/// tick even when no fd is ready.
+const WAIT_TICK: Duration = Duration::from_millis(200);
+
+/// How long a draining shard waits for in-flight requests to finish and
+/// write queues to flush before force-closing.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Cadence of the acceptor's model-lifecycle tick (idle eviction and
+/// the LRU residency cap).
+const LIFECYCLE_TICK: Duration = Duration::from_secs(1);
+
+// ── syscall layer ────────────────────────────────────────────────────
+//
+// Thin `extern "C"` declarations against the platform libc that std
+// already links — no crate dependency. Only what the poller needs:
+// epoll/kqueue, a self-pipe for wake tokens, and rlimit for the
+// saturating bench's fd headroom.
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+mod sys {
+    #![allow(non_camel_case_types)]
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+    const O_NONBLOCK: i32 = 0x800;
+    const O_CLOEXEC: i32 = 0x80000;
+    pub const RLIMIT_NOFILE: i32 = 7;
+
+    // x86-64's ABI packs epoll_event (32-bit alignment); every other
+    // Linux arch uses natural alignment
+    #[cfg(target_arch = "x86_64")]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    pub struct epoll_event {
+        pub events: u32,
+        pub data: u64,
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct epoll_event {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[repr(C)]
+    pub struct rlimit {
+        pub rlim_cur: u64,
+        pub rlim_max: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut epoll_event) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut epoll_event,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        fn pipe2(fds: *mut i32, flags: i32) -> i32;
+        fn close(fd: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn getrlimit(resource: i32, rlim: *mut rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const rlimit) -> i32;
+    }
+
+    pub fn poll_create() -> std::io::Result<i32> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(fd)
+    }
+
+    pub fn poll_ctl(epfd: i32, op: i32, fd: i32, events: u32, token: u64) -> std::io::Result<()> {
+        let mut ev = epoll_event { events, data: token };
+        let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+        if unsafe { epoll_ctl(epfd, op, fd, arg) } != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn poll_wait(
+        epfd: i32,
+        events: &mut [epoll_event],
+        timeout_ms: i32,
+    ) -> std::io::Result<usize> {
+        let n = unsafe {
+            epoll_wait(epfd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+        };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        Ok(n as usize)
+    }
+
+    pub fn wake_pipe() -> std::io::Result<(i32, i32)> {
+        let mut fds = [0i32; 2];
+        if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok((fds[0], fds[1]))
+    }
+
+    pub fn close_fd(fd: i32) {
+        unsafe { close(fd) };
+    }
+
+    pub fn read_fd(fd: i32, buf: &mut [u8]) -> isize {
+        unsafe { read(fd, buf.as_mut_ptr(), buf.len()) }
+    }
+
+    pub fn write_fd(fd: i32, buf: &[u8]) -> isize {
+        unsafe { write(fd, buf.as_ptr(), buf.len()) }
+    }
+
+    pub fn nofile_limits() -> Option<(u64, u64)> {
+        let mut rl = rlimit { rlim_cur: 0, rlim_max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut rl) } != 0 {
+            return None;
+        }
+        Some((rl.rlim_cur, rl.rlim_max))
+    }
+
+    pub fn set_nofile_soft(cur: u64, max: u64) -> bool {
+        let rl = rlimit { rlim_cur: cur, rlim_max: max };
+        unsafe { setrlimit(RLIMIT_NOFILE, &rl) == 0 }
+    }
+}
+
+#[cfg(any(
+    target_os = "macos",
+    target_os = "ios",
+    target_os = "freebsd",
+    target_os = "netbsd",
+    target_os = "openbsd",
+    target_os = "dragonfly"
+))]
+mod sys {
+    #![allow(non_camel_case_types)]
+
+    pub const EVFILT_READ: i16 = -1;
+    pub const EVFILT_WRITE: i16 = -2;
+    pub const EV_ADD: u16 = 0x1;
+    pub const EV_DELETE: u16 = 0x2;
+    pub const EV_ENABLE: u16 = 0x4;
+    pub const EV_EOF: u16 = 0x8000;
+    pub const EV_ERROR: u16 = 0x4000;
+    const F_SETFL: i32 = 4;
+    const F_SETFD: i32 = 2;
+    const FD_CLOEXEC: i32 = 1;
+    const O_NONBLOCK: i32 = 4;
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    pub const RLIMIT_NOFILE: i32 = 8;
+    #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+    pub const RLIMIT_NOFILE: i32 = 8;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct kevent_t {
+        pub ident: usize,
+        pub filter: i16,
+        pub flags: u16,
+        pub fflags: u32,
+        pub data: isize,
+        pub udata: usize,
+    }
+
+    #[repr(C)]
+    pub struct timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    #[repr(C)]
+    pub struct rlimit {
+        pub rlim_cur: u64,
+        pub rlim_max: u64,
+    }
+
+    extern "C" {
+        fn kqueue() -> i32;
+        fn kevent(
+            kq: i32,
+            changelist: *const kevent_t,
+            nchanges: i32,
+            eventlist: *mut kevent_t,
+            nevents: i32,
+            timeout: *const timespec,
+        ) -> i32;
+        fn pipe(fds: *mut i32) -> i32;
+        fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        fn close(fd: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn getrlimit(resource: i32, rlim: *mut rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const rlimit) -> i32;
+    }
+
+    pub fn poll_create() -> std::io::Result<i32> {
+        let kq = unsafe { kqueue() };
+        if kq < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        unsafe { fcntl(kq, F_SETFD, FD_CLOEXEC) };
+        Ok(kq)
+    }
+
+    fn change(kq: i32, fd: i32, filter: i16, flags: u16, token: u64) -> i32 {
+        let ch = kevent_t {
+            ident: fd as usize,
+            filter,
+            flags,
+            fflags: 0,
+            data: 0,
+            udata: token as usize,
+        };
+        unsafe { kevent(kq, &ch, 1, std::ptr::null_mut(), 0, std::ptr::null()) }
+    }
+
+    /// Set the exact (readable, writable) interest for `fd`; stale
+    /// filters are deleted (a missing filter is not an error).
+    pub fn set_interest(
+        kq: i32,
+        fd: i32,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    ) -> std::io::Result<()> {
+        for (filter, want) in [(EVFILT_READ, readable), (EVFILT_WRITE, writable)] {
+            if want {
+                if change(kq, fd, filter, EV_ADD | EV_ENABLE, token) < 0 {
+                    return Err(std::io::Error::last_os_error());
+                }
+            } else {
+                let _ = change(kq, fd, filter, EV_DELETE, token);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn poll_wait(
+        kq: i32,
+        events: &mut [kevent_t],
+        timeout_ms: i32,
+    ) -> std::io::Result<usize> {
+        let ts = timespec {
+            tv_sec: (timeout_ms / 1000) as i64,
+            tv_nsec: (timeout_ms % 1000) as i64 * 1_000_000,
+        };
+        let n = unsafe {
+            kevent(
+                kq,
+                std::ptr::null(),
+                0,
+                events.as_mut_ptr(),
+                events.len() as i32,
+                &ts,
+            )
+        };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        Ok(n as usize)
+    }
+
+    pub fn wake_pipe() -> std::io::Result<(i32, i32)> {
+        let mut fds = [0i32; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        for fd in fds {
+            unsafe {
+                fcntl(fd, F_SETFL, O_NONBLOCK);
+                fcntl(fd, F_SETFD, FD_CLOEXEC);
+            }
+        }
+        Ok((fds[0], fds[1]))
+    }
+
+    pub fn close_fd(fd: i32) {
+        unsafe { close(fd) };
+    }
+
+    pub fn read_fd(fd: i32, buf: &mut [u8]) -> isize {
+        unsafe { read(fd, buf.as_mut_ptr(), buf.len()) }
+    }
+
+    pub fn write_fd(fd: i32, buf: &[u8]) -> isize {
+        unsafe { write(fd, buf.as_ptr(), buf.len()) }
+    }
+
+    pub fn nofile_limits() -> Option<(u64, u64)> {
+        let mut rl = rlimit { rlim_cur: 0, rlim_max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut rl) } != 0 {
+            return None;
+        }
+        Some((rl.rlim_cur, rl.rlim_max))
+    }
+
+    pub fn set_nofile_soft(cur: u64, max: u64) -> bool {
+        let rl = rlimit { rlim_cur: cur, rlim_max: max };
+        unsafe { setrlimit(RLIMIT_NOFILE, &rl) == 0 }
+    }
+}
+
+#[cfg(not(any(
+    target_os = "linux",
+    target_os = "android",
+    target_os = "macos",
+    target_os = "ios",
+    target_os = "freebsd",
+    target_os = "netbsd",
+    target_os = "openbsd",
+    target_os = "dragonfly"
+)))]
+mod sys {
+    // Platforms without a readiness syscall we wrap: the crate still
+    // builds, the TCP server reports the gap at runtime.
+    pub fn unsupported<T>() -> std::io::Result<T> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "the event-driven server needs epoll or kqueue",
+        ))
+    }
+    pub fn nofile_limits() -> Option<(u64, u64)> {
+        None
+    }
+    pub fn set_nofile_soft(_cur: u64, _max: u64) -> bool {
+        false
+    }
+}
+
+/// Raise the process's soft `RLIMIT_NOFILE` toward `want` (capped at
+/// the hard limit); returns the resulting soft limit. The saturating
+/// bench calls this before opening thousands of sockets.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let Some((cur, max)) = sys::nofile_limits() else {
+        return 1024;
+    };
+    if cur >= want {
+        return cur;
+    }
+    let target = want.min(max);
+    if sys::set_nofile_soft(target, max) {
+        target
+    } else {
+        cur
+    }
+}
+
+// ── poller ───────────────────────────────────────────────────────────
+
+/// Token reserved for the wake pipe ([`Poller::wait`] drains it and
+/// never emits it).
+const WAKE: u64 = u64::MAX;
+/// Token for the acceptor's listener.
+const LISTENER: u64 = u64::MAX - 1;
+
+/// One readiness report.
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    token: u64,
+    readable: bool,
+    writable: bool,
+    /// Error/hangup readiness: the owner should attempt I/O and let the
+    /// resulting `io::ErrorKind` (not a string match) classify it.
+    err: bool,
+}
+
+/// The write end of a poller's self-pipe, `Arc`-owned so late wakers
+/// (a worker finishing after its shard drained) hit a still-valid fd —
+/// never a recycled one. Writes after the read end closed are `EPIPE`,
+/// which Rust's runtime already ignores.
+struct WakeFd(RawFd);
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        #[cfg(any(
+            target_os = "linux",
+            target_os = "android",
+            target_os = "macos",
+            target_os = "ios",
+            target_os = "freebsd",
+            target_os = "netbsd",
+            target_os = "openbsd",
+            target_os = "dragonfly"
+        ))]
+        sys::close_fd(self.0);
+    }
+}
+
+#[derive(Clone)]
+struct Waker(Arc<WakeFd>);
+
+impl Waker {
+    fn wake(&self) {
+        #[cfg(any(
+            target_os = "linux",
+            target_os = "android",
+            target_os = "macos",
+            target_os = "ios",
+            target_os = "freebsd",
+            target_os = "netbsd",
+            target_os = "openbsd",
+            target_os = "dragonfly"
+        ))]
+        {
+            let _ = sys::write_fd(self.0 .0, &[1u8]);
+        }
+    }
+}
+
+/// A readiness poller (epoll / kqueue) with a built-in wake pipe.
+struct Poller {
+    pfd: RawFd,
+    wake_rx: RawFd,
+    waker: Waker,
+}
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+impl Poller {
+    fn new() -> io::Result<Poller> {
+        let pfd = sys::poll_create()?;
+        let (rx, tx) = sys::wake_pipe()?;
+        sys::poll_ctl(pfd, sys::EPOLL_CTL_ADD, rx, sys::EPOLLIN, WAKE)?;
+        Ok(Poller { pfd, wake_rx: rx, waker: Waker(Arc::new(WakeFd(tx))) })
+    }
+
+    fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        sys::poll_ctl(self.pfd, sys::EPOLL_CTL_ADD, fd, interest(readable, writable), token)
+    }
+
+    fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        sys::poll_ctl(self.pfd, sys::EPOLL_CTL_MOD, fd, interest(readable, writable), token)
+    }
+
+    fn del(&self, fd: RawFd) {
+        let _ = sys::poll_ctl(self.pfd, sys::EPOLL_CTL_DEL, fd, 0, 0);
+    }
+
+    fn wait(&self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+        out.clear();
+        let mut evs = [sys::epoll_event { events: 0, data: 0 }; 256];
+        let n = sys::poll_wait(self.pfd, &mut evs, timeout.as_millis() as i32)?;
+        for ev in evs.iter().take(n) {
+            let (bits, token) = { (ev.events, ev.data) };
+            if token == WAKE {
+                self.drain_wake();
+                continue;
+            }
+            out.push(Event {
+                token,
+                readable: bits & sys::EPOLLIN != 0,
+                writable: bits & sys::EPOLLOUT != 0,
+                err: bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+
+    fn drain_wake(&self) {
+        let mut buf = [0u8; 64];
+        while sys::read_fd(self.wake_rx, &mut buf) > 0 {}
+    }
+}
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+fn interest(readable: bool, writable: bool) -> u32 {
+    let mut bits = 0;
+    if readable {
+        bits |= sys::EPOLLIN;
+    }
+    if writable {
+        bits |= sys::EPOLLOUT;
+    }
+    bits
+}
+
+#[cfg(any(
+    target_os = "macos",
+    target_os = "ios",
+    target_os = "freebsd",
+    target_os = "netbsd",
+    target_os = "openbsd",
+    target_os = "dragonfly"
+))]
+impl Poller {
+    fn new() -> io::Result<Poller> {
+        let pfd = sys::poll_create()?;
+        let (rx, tx) = sys::wake_pipe()?;
+        sys::set_interest(pfd, rx, WAKE, true, false)?;
+        Ok(Poller { pfd, wake_rx: rx, waker: Waker(Arc::new(WakeFd(tx))) })
+    }
+
+    fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        sys::set_interest(self.pfd, fd, token, readable, writable)
+    }
+
+    fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        sys::set_interest(self.pfd, fd, token, readable, writable)
+    }
+
+    fn del(&self, fd: RawFd) {
+        let _ = sys::set_interest(self.pfd, fd, 0, false, false);
+    }
+
+    fn wait(&self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+        out.clear();
+        let mut evs = [sys::kevent_t {
+            ident: 0,
+            filter: 0,
+            flags: 0,
+            fflags: 0,
+            data: 0,
+            udata: 0,
+        }; 256];
+        let n = sys::poll_wait(self.pfd, &mut evs, timeout.as_millis() as i32)?;
+        for ev in evs.iter().take(n) {
+            let token = ev.udata as u64;
+            if token == WAKE {
+                self.drain_wake();
+                continue;
+            }
+            out.push(Event {
+                token,
+                readable: ev.filter == sys::EVFILT_READ,
+                writable: ev.filter == sys::EVFILT_WRITE,
+                err: ev.flags & (sys::EV_EOF | sys::EV_ERROR) != 0,
+            });
+        }
+        Ok(())
+    }
+
+    fn drain_wake(&self) {
+        let mut buf = [0u8; 64];
+        while sys::read_fd(self.wake_rx, &mut buf) > 0 {}
+    }
+}
+
+#[cfg(not(any(
+    target_os = "linux",
+    target_os = "android",
+    target_os = "macos",
+    target_os = "ios",
+    target_os = "freebsd",
+    target_os = "netbsd",
+    target_os = "openbsd",
+    target_os = "dragonfly"
+)))]
+impl Poller {
+    fn new() -> io::Result<Poller> {
+        sys::unsupported()
+    }
+    fn add(&self, _: RawFd, _: u64, _: bool, _: bool) -> io::Result<()> {
+        sys::unsupported()
+    }
+    fn modify(&self, _: RawFd, _: u64, _: bool, _: bool) -> io::Result<()> {
+        sys::unsupported()
+    }
+    fn del(&self, _: RawFd) {}
+    fn wait(&self, _: &mut Vec<Event>, _: Duration) -> io::Result<()> {
+        sys::unsupported()
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(any(
+            target_os = "linux",
+            target_os = "android",
+            target_os = "macos",
+            target_os = "ios",
+            target_os = "freebsd",
+            target_os = "netbsd",
+            target_os = "openbsd",
+            target_os = "dragonfly"
+        ))]
+        {
+            sys::close_fd(self.wake_rx);
+            sys::close_fd(self.pfd);
+        }
+    }
+}
+
+// ── shared server state ──────────────────────────────────────────────
+
+enum ShardMsg {
+    /// A freshly admitted connection (already nonblocking).
+    Conn(TcpStream, String),
+    /// A worker's encoded response for `token`.
+    Reply { token: u64, bytes: Vec<u8>, quit: bool },
+}
+
+struct ShardHandle {
+    inbox: Mutex<Vec<ShardMsg>>,
+    waker: Waker,
+}
+
+enum Work {
+    /// A parsed JSONL request (response is a JSONL line, or a
+    /// magic-prefixed frame for `"binary":true` predicts).
+    Line(Request),
+    /// A parsed binary-frame request (response is a frame).
+    Frame(Request),
+}
+
+struct Job {
+    shard: usize,
+    token: u64,
+    work: Work,
+}
+
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    opts: ServeOptions,
+    stop: AtomicBool,
+    /// Dispatched-but-unanswered requests across all connections.
+    inflight: AtomicUsize,
+    /// Open (admitted) connections, for `--max-conns`.
+    open: AtomicUsize,
+    shards: Vec<ShardHandle>,
+    acceptor_waker: Waker,
+}
+
+impl Shared {
+    fn send_to_shard(&self, shard: usize, msg: ShardMsg) {
+        self.shards[shard].inbox.lock().unwrap().push(msg);
+        self.shards[shard].waker.wake();
+    }
+
+    fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.acceptor_waker.wake();
+        for s in &self.shards {
+            s.waker.wake();
+        }
+    }
+
+    fn write_queue_cap(&self) -> usize {
+        if self.opts.write_queue_cap == 0 {
+            DEFAULT_WRITE_QUEUE
+        } else {
+            self.opts.write_queue_cap
+        }
+    }
+}
+
+fn overloaded_line(reason: &str) -> Vec<u8> {
+    let resp = protocol::err_json(&anyhow!("overloaded: {reason}"));
+    let mut bytes = resp.to_string().into_bytes();
+    bytes.push(b'\n');
+    bytes
+}
+
+fn overloaded_frame(reason: &str) -> Vec<u8> {
+    let resp = protocol::err_json(&anyhow!("overloaded: {reason}"));
+    let mut out = Vec::new();
+    let written = frame::write_frame(&mut out, &resp, &[]).unwrap_or(0);
+    serve_metrics().frame_bytes_written.add(written as u64);
+    out
+}
+
+// ── connection state machine ─────────────────────────────────────────
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Negotiating,
+    Jsonl,
+    Frame,
+}
+
+struct Conn {
+    stream: TcpStream,
+    peer: String,
+    mode: Mode,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    outpos: usize,
+    /// One request dispatched, response not yet queued.
+    busy: bool,
+    /// Peer half-closed its write side (read returned 0).
+    eof: bool,
+    close_after_flush: bool,
+    backpressured: bool,
+    /// JSONL line over `--max-request-bytes`: drop bytes to the newline.
+    discard_line: bool,
+    /// Oversized frame: bytes of it left to swallow.
+    skip: usize,
+    last_activity: Instant,
+    want_read: bool,
+    want_write: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: String) -> Conn {
+        Conn {
+            stream,
+            peer,
+            mode: Mode::Negotiating,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            busy: false,
+            eof: false,
+            close_after_flush: false,
+            backpressured: false,
+            discard_line: false,
+            skip: 0,
+            last_activity: Instant::now(),
+            want_read: true,
+            want_write: false,
+        }
+    }
+
+    fn queued(&self) -> usize {
+        self.outbuf.len() - self.outpos
+    }
+
+    fn consume_in(&mut self, n: usize) {
+        self.inbuf.drain(..n);
+    }
+}
+
+/// Why a connection is being closed — drives the counter/obslog parity
+/// with the old thread-per-connection handler.
+enum Close {
+    Clean,
+    Timeout,
+    Error(String),
+}
+
+// ── the server ───────────────────────────────────────────────────────
+
+/// Serve `listener` with the event loop until a client sends
+/// `shutdown`. This is `serve_listener_with`'s engine; behaviour on the
+/// wire is byte-identical to the old thread-per-connection loop.
+pub(crate) fn run(
+    registry: Arc<ModelRegistry>,
+    listener: TcpListener,
+    opts: ServeOptions,
+) -> Result<()> {
+    let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let nshards = (par / 2).clamp(1, 4);
+    let nworkers = par.clamp(2, 8);
+
+    let acceptor_poller = Poller::new().map_err(io_err("creating poller"))?;
+    let mut shard_pollers = Vec::with_capacity(nshards);
+    let mut handles = Vec::with_capacity(nshards);
+    for _ in 0..nshards {
+        let p = Poller::new().map_err(io_err("creating shard poller"))?;
+        handles.push(ShardHandle {
+            inbox: Mutex::new(Vec::new()),
+            waker: p.waker.clone(),
+        });
+        shard_pollers.push(p);
+    }
+    let shared = Arc::new(Shared {
+        registry: registry.clone(),
+        opts,
+        stop: AtomicBool::new(false),
+        inflight: AtomicUsize::new(0),
+        open: AtomicUsize::new(0),
+        shards: handles,
+        acceptor_waker: acceptor_poller.waker.clone(),
+    });
+
+    // worker pool: a shared MPMC queue (mutexed mpsc receiver) feeding
+    // W executor threads; batch fan-out inside predict_wire reuses the
+    // model pools' run_jobs
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let mut worker_threads = Vec::with_capacity(nworkers);
+    for w in 0..nworkers {
+        let shared = shared.clone();
+        let rx = job_rx.clone();
+        worker_threads.push(
+            std::thread::Builder::new()
+                .name(format!("nmbkm-worker-{w}"))
+                .spawn(move || worker_loop(&shared, &rx))
+                .map_err(|e| anyhow!("spawning worker: {e}"))?,
+        );
+    }
+
+    let mut shard_threads = Vec::with_capacity(nshards);
+    for (id, poller) in shard_pollers.into_iter().enumerate() {
+        let shared = shared.clone();
+        let tx = job_tx.clone();
+        shard_threads.push(
+            std::thread::Builder::new()
+                .name(format!("nmbkm-shard-{id}"))
+                .spawn(move || shard_loop(&shared, id, poller, tx))
+                .map_err(|e| anyhow!("spawning shard: {e}"))?,
+        );
+    }
+    drop(job_tx); // workers exit once every shard's sender is gone
+
+    accept_loop(&shared, &listener, &acceptor_poller);
+
+    // drain: shards finish in-flight work and flush; workers run dry
+    for s in &shared.shards {
+        s.waker.wake();
+    }
+    for t in shard_threads {
+        let _ = t.join();
+    }
+    for t in worker_threads {
+        let _ = t.join();
+    }
+    server::drain_wal(&registry);
+    Ok(())
+}
+
+fn io_err(what: &'static str) -> impl Fn(io::Error) -> anyhow::Error {
+    move |e| anyhow!("{what}: {e}")
+}
+
+// ── acceptor ─────────────────────────────────────────────────────────
+
+fn accept_loop(shared: &Shared, listener: &TcpListener, poller: &Poller) {
+    let sm = serve_metrics();
+    if let Err(e) = listener.set_nonblocking(true) {
+        eprintln!("[nmbkm::serve] nonblocking listener: {e}");
+        return;
+    }
+    if let Err(e) = poller.add(listener.as_raw_fd(), LISTENER, true, false) {
+        eprintln!("[nmbkm::serve] registering listener: {e}");
+        return;
+    }
+    let mut rr = 0usize;
+    let mut events = Vec::new();
+    let mut next_lifecycle = Instant::now() + LIFECYCLE_TICK;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if poller.wait(&mut events, WAIT_TICK).is_err() {
+            break;
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        for ev in &events {
+            if ev.token != LISTENER || !(ev.readable || ev.err) {
+                continue;
+            }
+            loop {
+                match listener.accept() {
+                    Ok((stream, addr)) => {
+                        let peer = addr.to_string();
+                        sm.conns_opened.inc();
+                        eprintln!("[nmbkm::serve] client {peer} connected");
+                        obslog::event("connection_open", &[("peer", json::s(&peer))]);
+                        let max = shared.opts.max_conns;
+                        if max > 0 && shared.open.load(Ordering::SeqCst) >= max {
+                            // structured refusal instead of a hang: the
+                            // socket is still blocking here, and the
+                            // one-line write fits any socket buffer
+                            sm.overloaded_conns.inc();
+                            let line = overloaded_line(&format!(
+                                "connection limit reached (--max-conns={max})"
+                            ));
+                            let _ = (&stream).write_all(&line);
+                            sm.conns_closed.inc();
+                            obslog::event(
+                                "connection_close",
+                                &[
+                                    ("peer", json::s(&peer)),
+                                    ("clean", Json::Bool(true)),
+                                ],
+                            );
+                            continue;
+                        }
+                        if let Err(e) = stream.set_nonblocking(true) {
+                            eprintln!("[nmbkm::serve] nonblocking conn: {e}");
+                            sm.conns_closed.inc();
+                            continue;
+                        }
+                        shared.open.fetch_add(1, Ordering::SeqCst);
+                        sm.open_connections.inc();
+                        shared.send_to_shard(rr, ShardMsg::Conn(stream, peer));
+                        rr = (rr + 1) % shared.shards.len();
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        eprintln!("[nmbkm::serve] accept failed: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+        // model lifecycle: idle eviction + the LRU residency cap, run
+        // here (not in a shard) so a checkpoint-then-drop never stalls
+        // connection I/O
+        let now = Instant::now();
+        if now >= next_lifecycle {
+            next_lifecycle = now + LIFECYCLE_TICK;
+            shared.registry.run_lifecycle();
+        }
+    }
+    poller.del(listener.as_raw_fd());
+}
+
+// ── workers ──────────────────────────────────────────────────────────
+
+fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Job>>) {
+    let sm = serve_metrics();
+    loop {
+        // hold the queue lock only for the dequeue, never the execution
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        let (bytes, quit) = match &job.work {
+            Work::Line(req) => {
+                let (reply, quit) = protocol::execute_line(&shared.registry, req);
+                let bytes = match reply {
+                    LineReply::Json(resp) => {
+                        let resp = resp.to_string();
+                        sm.jsonl_bytes_written.add(resp.len() as u64 + 1);
+                        let mut b = resp.into_bytes();
+                        b.push(b'\n');
+                        b
+                    }
+                    LineReply::Frame(b) => {
+                        sm.jsonl_bytes_written.add(b.len() as u64);
+                        b
+                    }
+                };
+                (bytes, quit)
+            }
+            Work::Frame(req) => {
+                let (h, body, quit) = frame::execute_frame(&shared.registry, req);
+                let mut out = Vec::new();
+                let written = frame::write_frame(&mut out, &h, &body).unwrap_or(0);
+                sm.frame_bytes_written.add(written as u64);
+                (out, quit)
+            }
+        };
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        shared.send_to_shard(
+            job.shard,
+            ShardMsg::Reply { token: job.token, bytes, quit },
+        );
+    }
+}
+
+// ── shard event loop ─────────────────────────────────────────────────
+
+struct Shard<'a> {
+    shared: &'a Shared,
+    id: usize,
+    poller: Poller,
+    job_tx: mpsc::Sender<Job>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+fn shard_loop(shared: &Shared, id: usize, poller: Poller, job_tx: mpsc::Sender<Job>) {
+    let mut shard = Shard {
+        shared,
+        id,
+        poller,
+        job_tx,
+        conns: HashMap::new(),
+        next_token: 0,
+    };
+    let mut events = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        if shard.poller.wait(&mut events, WAIT_TICK).is_err() {
+            break;
+        }
+        let evs = std::mem::take(&mut events);
+        // inbox first: responses unblock pipelined requests before new
+        // socket events are looked at
+        let msgs: Vec<ShardMsg> = {
+            let mut inbox = shared.shards[id].inbox.lock().unwrap();
+            std::mem::take(&mut *inbox)
+        };
+        for msg in msgs {
+            match msg {
+                ShardMsg::Conn(stream, peer) => shard.register(stream, peer),
+                ShardMsg::Reply { token, bytes, quit } => shard.on_reply(token, bytes, quit),
+            }
+        }
+        for ev in &evs {
+            shard.on_event(ev);
+        }
+        events = evs;
+        shard.sweep_idle();
+        if shared.stop.load(Ordering::SeqCst) {
+            let deadline =
+                *drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+            shard.drain_tick();
+            if shard.conns.is_empty() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let tokens: Vec<u64> = shard.conns.keys().copied().collect();
+                for t in tokens {
+                    shard.close(t, Close::Clean);
+                }
+                break;
+            }
+        }
+    }
+}
+
+impl Shard<'_> {
+    fn register(&mut self, stream: TcpStream, peer: String) {
+        let token = self.next_token;
+        self.next_token += 1;
+        let fd = stream.as_raw_fd();
+        if let Err(e) = self.poller.add(fd, token, true, false) {
+            eprintln!("[nmbkm::serve] registering {peer}: {e}");
+            self.shared.open.fetch_sub(1, Ordering::SeqCst);
+            let sm = serve_metrics();
+            sm.open_connections.dec();
+            sm.conns_closed.inc();
+            return;
+        }
+        self.conns.insert(token, Conn::new(stream, peer));
+    }
+
+    fn on_reply(&mut self, token: u64, bytes: Vec<u8>, quit: bool) {
+        // the connection may have died while its request ran; the old
+        // implementation's write would have failed the same way
+        let Some(conn) = self.conns.get_mut(&token) else {
+            if quit {
+                self.shared.request_stop();
+            }
+            return;
+        };
+        conn.busy = false;
+        conn.last_activity = Instant::now();
+        conn.outbuf.extend_from_slice(&bytes);
+        if quit {
+            // shutdown: the response still goes out to its requester
+            conn.close_after_flush = true;
+            self.shared.request_stop();
+        }
+        self.service(token);
+    }
+
+    fn on_event(&mut self, ev: &Event) {
+        let Some(conn) = self.conns.get_mut(&ev.token) else {
+            return;
+        };
+        if ev.readable || ev.err {
+            if let Err(close) = read_some(conn) {
+                self.close(ev.token, close);
+                return;
+            }
+        }
+        if ev.writable || ev.err {
+            if let Err(close) = flush_some(conn) {
+                self.close(ev.token, close);
+                return;
+            }
+        }
+        self.service(ev.token);
+    }
+
+    /// Pump the connection: decode/dispatch what the buffers allow,
+    /// flush what the socket accepts, update poller interest, close if
+    /// finished. The one per-connection driver after any state change.
+    fn service(&mut self, token: u64) {
+        let stopping = self.shared.stop.load(Ordering::SeqCst);
+        if !self.conns.contains_key(&token) {
+            return;
+        }
+        if !stopping {
+            if let Err(close) = self.pump(token) {
+                self.close(token, close);
+                return;
+            }
+        }
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        if let Err(close) = flush_some(conn) {
+            self.close(token, close);
+            return;
+        }
+        if conn.queued() == 0 && conn.close_after_flush {
+            self.close(token, Close::Clean);
+            return;
+        }
+        // EOF: everything decodable was dispatched; a leftover partial
+        // frame is a truncation error (exactly like the blocking
+        // read_frame_raw), a leftover JSONL fragment was already served
+        // as the final line. Close once the response queue is flushed.
+        if conn.eof && !conn.busy && conn.queued() == 0 {
+            if conn.mode == Mode::Frame && !conn.inbuf.is_empty() {
+                self.close(
+                    token,
+                    Close::Error("truncated frame: EOF inside a frame".to_string()),
+                );
+            } else {
+                self.close(token, Close::Clean);
+            }
+            return;
+        }
+        self.update_interest(token);
+    }
+
+    /// Decode and dispatch requests from `inbuf` while the connection
+    /// has none in flight.
+    fn pump(&mut self, token: u64) -> std::result::Result<(), Close> {
+        let sm = serve_metrics();
+        loop {
+            let conn = self.conns.get_mut(&token).expect("pumped conn exists");
+            if conn.busy || conn.close_after_flush {
+                return Ok(());
+            }
+            match conn.mode {
+                Mode::Negotiating => {
+                    let Some(&first) = conn.inbuf.first() else {
+                        return Ok(());
+                    };
+                    if first == frame::MAGIC {
+                        if self.shared.opts.accept_binary {
+                            conn.consume_in(1);
+                            conn.mode = Mode::Frame;
+                        } else {
+                            // refuse loudly in the client's only other
+                            // dialect, then close — silence would look
+                            // like a hang (same line as the blocking path)
+                            let resp = json::obj(vec![
+                                ("ok", Json::Bool(false)),
+                                ("error", json::s(server::BINARY_DISABLED_MSG)),
+                            ]);
+                            conn.outbuf.extend_from_slice(resp.to_string().as_bytes());
+                            conn.outbuf.push(b'\n');
+                            conn.inbuf.clear();
+                            conn.close_after_flush = true;
+                            return Ok(());
+                        }
+                    } else {
+                        conn.mode = Mode::Jsonl;
+                    }
+                }
+                Mode::Jsonl => {
+                    if conn.discard_line {
+                        match conn.inbuf.iter().position(|&b| b == b'\n') {
+                            Some(p) => {
+                                conn.consume_in(p + 1);
+                                conn.discard_line = false;
+                            }
+                            None => {
+                                conn.inbuf.clear();
+                                return Ok(());
+                            }
+                        }
+                        continue;
+                    }
+                    let nl = conn.inbuf.iter().position(|&b| b == b'\n');
+                    let raw = match nl {
+                        Some(p) => {
+                            let mut line: Vec<u8> = conn.inbuf[..p].to_vec();
+                            conn.consume_in(p + 1);
+                            // BufRead::lines strips \r\n; a lone \r at
+                            // EOF stays, matching its read_line logic
+                            if line.last() == Some(&b'\r') {
+                                line.pop();
+                            }
+                            line
+                        }
+                        None => {
+                            let cap = self.shared.opts.max_request_bytes;
+                            if cap > 0 && conn.inbuf.len() > cap {
+                                sm.overloaded_bytes.inc();
+                                let reply = overloaded_line(&format!(
+                                    "request line exceeds --max-request-bytes={cap}"
+                                ));
+                                sm.jsonl_bytes_written.add(reply.len() as u64);
+                                conn.outbuf.extend_from_slice(&reply);
+                                conn.inbuf.clear();
+                                conn.discard_line = true;
+                                continue;
+                            }
+                            if conn.eof && !conn.inbuf.is_empty() {
+                                // final unterminated line: lines() yields
+                                // it, so the event loop serves it too
+                                std::mem::take(&mut conn.inbuf)
+                            } else {
+                                return Ok(());
+                            }
+                        }
+                    };
+                    let line = match String::from_utf8(raw) {
+                        Ok(l) => l,
+                        Err(_) => {
+                            return Err(Close::Error(
+                                "stream did not contain valid UTF-8".to_string(),
+                            ))
+                        }
+                    };
+                    if line.trim().is_empty() {
+                        continue; // blank lines: skipped, never counted
+                    }
+                    sm.jsonl_bytes_read.add(line.len() as u64 + 1);
+                    let cap = self.shared.opts.max_request_bytes;
+                    if cap > 0 && line.len() > cap {
+                        sm.overloaded_bytes.inc();
+                        let reply = overloaded_line(&format!(
+                            "request of {} bytes exceeds --max-request-bytes={cap}",
+                            line.len()
+                        ));
+                        sm.jsonl_bytes_written.add(reply.len() as u64);
+                        conn.outbuf.extend_from_slice(&reply);
+                        continue;
+                    }
+                    match protocol::parse_request(&line) {
+                        Ok(req) => self.dispatch(token, Work::Line(req)),
+                        Err(e) => {
+                            sm.op_counter("invalid").inc();
+                            let resp = protocol::err_json(&e).to_string();
+                            sm.jsonl_bytes_written.add(resp.len() as u64 + 1);
+                            conn.outbuf.extend_from_slice(resp.as_bytes());
+                            conn.outbuf.push(b'\n');
+                        }
+                    }
+                }
+                Mode::Frame => {
+                    if conn.skip > 0 {
+                        let take = conn.skip.min(conn.inbuf.len());
+                        conn.consume_in(take);
+                        conn.skip -= take;
+                        if conn.skip > 0 {
+                            return Ok(());
+                        }
+                        continue;
+                    }
+                    let total = match frame::scan_frame_total(&conn.inbuf) {
+                        Ok(Some(t)) => t,
+                        Ok(None) => return Ok(()),
+                        Err(e) => return Err(Close::Error(format!("{e:#}"))),
+                    };
+                    let cap = self.shared.opts.max_request_bytes;
+                    if cap > 0 && total > cap {
+                        sm.frames.inc();
+                        sm.frame_bytes_read.add(total as u64);
+                        sm.overloaded_bytes.inc();
+                        let reply = overloaded_frame(&format!(
+                            "frame of {total} bytes exceeds --max-request-bytes={cap}"
+                        ));
+                        conn.outbuf.extend_from_slice(&reply);
+                        let have = total.min(conn.inbuf.len());
+                        conn.consume_in(have);
+                        conn.skip = total - have;
+                        continue;
+                    }
+                    if conn.inbuf.len() < total {
+                        return Ok(());
+                    }
+                    sm.frames.inc();
+                    sm.frame_bytes_read.add(total as u64);
+                    let hlen =
+                        u32::from_le_bytes(conn.inbuf[0..4].try_into().unwrap()) as usize;
+                    let hbytes = conn.inbuf[4..4 + hlen].to_vec();
+                    let body = conn.inbuf[8 + hlen..total].to_vec();
+                    conn.consume_in(total);
+                    let parsed = frame::parse_header(&hbytes)
+                        .and_then(|h| frame::parse_frame_request(&h, &body));
+                    match parsed {
+                        Ok(req) => self.dispatch(token, Work::Frame(req)),
+                        Err(e) => {
+                            sm.op_counter("invalid").inc();
+                            let mut out = Vec::new();
+                            let written = frame::write_frame(
+                                &mut out,
+                                &protocol::err_json(&e),
+                                &[],
+                            )
+                            .unwrap_or(0);
+                            sm.frame_bytes_written.add(written as u64);
+                            conn.outbuf.extend_from_slice(&out);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Hand one decoded request to the workers (admission permitting).
+    fn dispatch(&mut self, token: u64, work: Work) {
+        let sm = serve_metrics();
+        let max = self.shared.opts.max_inflight;
+        let conn = self.conns.get_mut(&token).expect("dispatched conn exists");
+        if max > 0 && self.shared.inflight.load(Ordering::SeqCst) >= max {
+            sm.overloaded_inflight.inc();
+            let reason =
+                format!("server is at --max-inflight={max} concurrent requests");
+            match work {
+                Work::Line(_) => {
+                    let reply = overloaded_line(&reason);
+                    sm.jsonl_bytes_written.add(reply.len() as u64);
+                    conn.outbuf.extend_from_slice(&reply);
+                }
+                Work::Frame(_) => {
+                    conn.outbuf.extend_from_slice(&overloaded_frame(&reason));
+                }
+            }
+            return;
+        }
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        conn.busy = true;
+        conn.last_activity = Instant::now();
+        if self
+            .job_tx
+            .send(Job { shard: self.id, token, work })
+            .is_err()
+        {
+            // tearing down; the drain path closes the connection
+            self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            conn.busy = false;
+        }
+    }
+
+    fn update_interest(&mut self, token: u64) {
+        let stopping = self.shared.stop.load(Ordering::SeqCst);
+        let cap = self.shared.write_queue_cap();
+        let sm = serve_metrics();
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let queued = conn.queued();
+        if !conn.backpressured && queued > cap {
+            conn.backpressured = true;
+            sm.conn_backpressure.inc();
+        } else if conn.backpressured && queued < cap / 2 {
+            conn.backpressured = false;
+        }
+        let want_read = !conn.eof
+            && !conn.close_after_flush
+            && !conn.backpressured
+            && !stopping
+            && !(conn.busy && conn.inbuf.len() >= INBUF_SOFT_CAP);
+        let want_write = queued > 0;
+        if (want_read, want_write) != (conn.want_read, conn.want_write) {
+            conn.want_read = want_read;
+            conn.want_write = want_write;
+            let fd = conn.stream.as_raw_fd();
+            let _ = self.poller.modify(fd, token, want_read, want_write);
+        }
+    }
+
+    /// Close idle-past-timeout connections. Only truly idle ones: a
+    /// request in flight or a draining write queue is activity the old
+    /// per-op socket timeouts never interrupted mid-compute either.
+    fn sweep_idle(&mut self) {
+        let Some(timeout) = self.shared.opts.conn_timeout else {
+            return;
+        };
+        let now = Instant::now();
+        let stale: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| !c.busy && now.duration_since(c.last_activity) > timeout)
+            .map(|(t, _)| *t)
+            .collect();
+        for token in stale {
+            self.close(token, Close::Timeout);
+        }
+    }
+
+    /// One drain pass while stopping: flush, close what's finished.
+    fn drain_tick(&mut self) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                continue;
+            };
+            if let Err(close) = flush_some(conn) {
+                self.close(token, close);
+                continue;
+            }
+            let conn = self.conns.get_mut(&token).expect("drained conn exists");
+            if !conn.busy && conn.queued() == 0 {
+                self.close(token, Close::Clean);
+            } else {
+                self.update_interest(token);
+            }
+        }
+    }
+
+    fn close(&mut self, token: u64, why: Close) {
+        let Some(conn) = self.conns.remove(&token) else {
+            return;
+        };
+        self.poller.del(conn.stream.as_raw_fd());
+        self.shared.open.fetch_sub(1, Ordering::SeqCst);
+        let sm = serve_metrics();
+        sm.open_connections.dec();
+        sm.conns_closed.inc();
+        let clean = match why {
+            Close::Clean => true,
+            Close::Timeout => {
+                sm.conn_timeouts.inc();
+                obslog::event("connection_timeout", &[("peer", json::s(&conn.peer))]);
+                eprintln!(
+                    "[nmbkm::serve] client {} timed out (idle past --conn-timeout)",
+                    conn.peer
+                );
+                false
+            }
+            Close::Error(e) => {
+                eprintln!("[nmbkm::serve] connection error: {e}");
+                false
+            }
+        };
+        obslog::event(
+            "connection_close",
+            &[("peer", json::s(&conn.peer)), ("clean", Json::Bool(clean))],
+        );
+        // conn.stream drops here, closing the socket
+    }
+}
+
+/// Nonblocking read burst into `inbuf`. `Err` means the connection is
+/// done (I/O error); EOF is recorded, not an error — under a readiness
+/// loop `WouldBlock` is the normal idle state, classified by
+/// `io::ErrorKind`, never by matching message strings.
+fn read_some(conn: &mut Conn) -> std::result::Result<(), Close> {
+    let mut buf = [0u8; READ_CHUNK];
+    for _ in 0..MAX_READS_PER_EVENT {
+        match (&conn.stream).read(&mut buf) {
+            Ok(0) => {
+                conn.eof = true;
+                return Ok(());
+            }
+            Ok(n) => {
+                conn.last_activity = Instant::now();
+                conn.inbuf.extend_from_slice(&buf[..n]);
+                if n < buf.len() {
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Close::Error(e.to_string())),
+        }
+    }
+    Ok(()) // level-triggered: the rest re-arms immediately
+}
+
+/// Flush as much of the write queue as the socket accepts.
+fn flush_some(conn: &mut Conn) -> std::result::Result<(), Close> {
+    while conn.outpos < conn.outbuf.len() {
+        match (&conn.stream).write(&conn.outbuf[conn.outpos..]) {
+            Ok(0) => return Err(Close::Error("write returned 0".to_string())),
+            Ok(n) => {
+                conn.outpos += n;
+                conn.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Close::Error(e.to_string())),
+        }
+    }
+    if conn.outpos == conn.outbuf.len() {
+        conn.outbuf.clear();
+        conn.outpos = 0;
+    } else if conn.outpos > DEFAULT_WRITE_QUEUE {
+        conn.outbuf.drain(..conn.outpos);
+        conn.outpos = 0;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waker_unblocks_wait() {
+        let p = Poller::new().unwrap();
+        let waker = p.waker.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            waker.wake();
+        });
+        let mut events = Vec::new();
+        let start = Instant::now();
+        // a 5 s wait returns early on the wake, with no events emitted
+        p.wait(&mut events, Duration::from_secs(5)).unwrap();
+        assert!(start.elapsed() < Duration::from_secs(2));
+        assert!(events.is_empty(), "wake token must be internal");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn poller_reports_pipe_like_readiness() {
+        use std::io::Write as _;
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let p = Poller::new().unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        p.add(server.as_raw_fd(), 7, true, false).unwrap();
+        client.write_all(b"x").unwrap();
+        let mut events = Vec::new();
+        let start = Instant::now();
+        loop {
+            p.wait(&mut events, Duration::from_millis(500)).unwrap();
+            if !events.is_empty() {
+                break;
+            }
+            assert!(start.elapsed() < Duration::from_secs(5), "no readiness");
+        }
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        p.del(server.as_raw_fd());
+    }
+
+    #[test]
+    fn nofile_raise_is_monotone() {
+        let before = raise_nofile_limit(256);
+        assert!(before >= 256 || sys::nofile_limits().is_none());
+        // asking for less than we have never lowers the limit
+        let after = raise_nofile_limit(16);
+        assert!(after >= before.min(256));
+    }
+}

@@ -108,10 +108,37 @@ pub fn read_frame_raw<R: Read>(r: &mut R) -> Result<Option<(Vec<u8>, Vec<u8>)>> 
     Ok(Some((hbytes, body)))
 }
 
-fn parse_header(hbytes: &[u8]) -> Result<Json> {
+pub(crate) fn parse_header(hbytes: &[u8]) -> Result<Json> {
     let htext = std::str::from_utf8(hbytes)
         .map_err(|_| anyhow!("frame header is not UTF-8"))?;
     Json::parse(htext).map_err(|e| anyhow!("bad frame header json: {e}"))
+}
+
+/// Incremental frame delimiting for the nonblocking event loop: the
+/// total wire length (`8 + header + body`) of the frame starting at
+/// `buf[0]`, or `None` until enough prefix bytes are buffered to know
+/// it. Cap violations error with the same messages as the blocking
+/// [`read_frame_raw`] — they are structural, the stream cannot be
+/// re-synchronised.
+pub(crate) fn scan_frame_total(buf: &[u8]) -> Result<Option<usize>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let hlen = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    ensure!(
+        hlen <= MAX_HEADER_BYTES,
+        "frame header of {hlen} bytes exceeds the {MAX_HEADER_BYTES}-byte cap"
+    );
+    if buf.len() < 8 + hlen {
+        return Ok(None);
+    }
+    let blen =
+        u32::from_le_bytes(buf[4 + hlen..8 + hlen].try_into().unwrap()) as usize;
+    ensure!(
+        blen <= MAX_BODY_BYTES,
+        "frame body of {blen} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+    );
+    Ok(Some(8 + hlen + blen))
 }
 
 /// Read one frame with the header parsed; `Ok(None)` on clean EOF.
@@ -339,58 +366,33 @@ fn handle_frame(
     header: &Json,
     body: &[u8],
 ) -> (Json, Vec<u8>, bool) {
-    let sm = serve_metrics();
-    let points = if body.is_empty() {
-        None
-    } else {
-        match decode_points(body) {
-            Ok(p) => Some(p),
-            Err(e) => {
-                sm.op_counter("invalid").inc();
-                return (protocol::err_json(&e), vec![], false);
-            }
-        }
-    };
-    let req = match protocol::request_from_json(header, points) {
+    let req = match parse_frame_request(header, body) {
         Ok(r) => r,
         Err(e) => {
-            sm.op_counter("invalid").inc();
+            serve_metrics().op_counter("invalid").inc();
             return (protocol::err_json(&e), vec![], false);
         }
     };
-    match &req {
-        Request::Predict { model, points } => {
-            // the frame fast path answers predicts without touching the
-            // JSONL executor, so it carries its own op count + timing
-            sm.op_counter("predict").inc();
-            let timer = obs::Timer::start();
-            if points.len() > MAX_PREDICT_ROWS {
-                let e = anyhow!(
-                    "predict of {} rows would overflow the response frame \
-                     body cap — send at most {MAX_PREDICT_ROWS} rows per \
-                     frame",
-                    points.len()
-                );
-                return (protocol::err_json(&e), vec![], false);
-            }
-            let answered = registry.resolve(model.as_deref()).and_then(|e| {
-                let out = e.predict_wire(points)?;
-                Ok((e.name().to_string(), out))
-            });
-            let out = match answered {
-                Ok((name, (lbl, d2))) => {
-                    let h = json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("op", json::s("predict")),
-                        ("model", json::s(&name)),
-                        ("n", json::num(lbl.len() as f64)),
-                    ]);
-                    (h, encode_predict_body(&lbl, &d2), false)
-                }
-                Err(e) => (protocol::err_json(&e), vec![], false),
-            };
-            timer.observe(&sm.request_seconds);
-            out
+    execute_frame(registry, &req)
+}
+
+/// Decode one delimited frame's header + body into a [`Request`]. Pure
+/// parsing — no metric counting (the caller counts one `invalid` per
+/// error, whichever transport it drives).
+pub(crate) fn parse_frame_request(header: &Json, body: &[u8]) -> Result<Request> {
+    let points = if body.is_empty() { None } else { Some(decode_points(body)?) };
+    protocol::request_from_json(header, points)
+}
+
+/// Execute one parsed frame request; returns `(header, body, quit)`.
+pub(crate) fn execute_frame(
+    registry: &ModelRegistry,
+    req: &Request,
+) -> (Json, Vec<u8>, bool) {
+    let sm = serve_metrics();
+    match req {
+        Request::Predict { model, points, .. } => {
+            predict_response(registry, model.as_deref(), points)
         }
         // the replication ops ship binary bodies (raw log records, a
         // snapshot stream), so like predict they bypass the JSONL
@@ -411,10 +413,51 @@ fn handle_frame(
             out
         }
         _ => {
-            let (resp, quit) = protocol::handle_request(registry, &req);
+            let (resp, quit) = protocol::handle_request(registry, req);
             (resp, vec![], quit)
         }
     }
+}
+
+/// The frame fast path for predicts: answers without touching the JSONL
+/// executor (labels and scores go back as a raw-f32 block), so it
+/// carries its own op count + timing. Also serves JSONL requests with
+/// the `"binary":true` response hint.
+pub(crate) fn predict_response(
+    registry: &ModelRegistry,
+    model: Option<&str>,
+    points: &[WireRow],
+) -> (Json, Vec<u8>, bool) {
+    let sm = serve_metrics();
+    sm.op_counter("predict").inc();
+    let timer = obs::Timer::start();
+    if points.len() > MAX_PREDICT_ROWS {
+        let e = anyhow!(
+            "predict of {} rows would overflow the response frame \
+             body cap — send at most {MAX_PREDICT_ROWS} rows per \
+             frame",
+            points.len()
+        );
+        return (protocol::err_json(&e), vec![], false);
+    }
+    let answered = registry.resolve(model).and_then(|e| {
+        let out = e.predict_wire(points)?;
+        Ok((e.name().to_string(), out))
+    });
+    let out = match answered {
+        Ok((name, (lbl, d2))) => {
+            let h = json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", json::s("predict")),
+                ("model", json::s(&name)),
+                ("n", json::num(lbl.len() as f64)),
+            ]);
+            (h, encode_predict_body(&lbl, &d2), false)
+        }
+        Err(e) => (protocol::err_json(&e), vec![], false),
+    };
+    timer.observe(&sm.request_seconds);
+    out
 }
 
 fn result_frame(r: Result<(Json, Vec<u8>)>) -> (Json, Vec<u8>, bool) {

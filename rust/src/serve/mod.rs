@@ -14,7 +14,8 @@
 //! | [`wire`]     | point encodings: dense arrays and sparse `{indices,values,dim}` rows |
 //! | [`protocol`] | JSONL request/response: create·ingest·predict·…·drop |
 //! | [`frame`]    | opt-in length-prefixed binary frames (raw-f32 predict hot path) |
-//! | [`server`]   | transports: stdio pipes and thread-per-connection TCP, per-connection format negotiation |
+//! | [`server`]   | transports: stdio pipes and event-driven TCP, per-connection format negotiation |
+//! | [`event`]    | the readiness loop: epoll/kqueue poller, connection shards, worker pool, admission + backpressure |
 //! | [`observe`]  | serve-layer metrics: per-model counters/histograms, merged scrape snapshot |
 //! | [`wal`]      | durable CRC-framed op log, checkpoints, bit-exact crash recovery |
 //! | [`replica`]  | follower mode: bootstrap from snapshots, tail the primary's log, promote with an epoch fence |
@@ -29,6 +30,7 @@
 //! predicts read immutable published snapshots. CLI front-ends: `nmbkm
 //! train --save`, `nmbkm serve [--models]`, `nmbkm predict`.
 
+pub mod event;
 pub mod frame;
 pub mod observe;
 pub mod protocol;

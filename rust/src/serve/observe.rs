@@ -8,7 +8,7 @@
 //! Prometheus endpoint, so the two can never drift apart.
 
 use crate::linalg::simd;
-use crate::obs::{self, export, Counter, Histogram, Sample, Value};
+use crate::obs::{self, export, Counter, Gauge, Histogram, Sample, Value};
 use crate::serve::protocol::Request;
 use crate::serve::registry::ModelRegistry;
 use crate::util::json::Json;
@@ -31,6 +31,22 @@ pub struct ServeMetrics {
     /// Connections closed because a read/write exceeded
     /// `--conn-timeout` (slowloris / stalled-peer defence).
     pub conn_timeouts: Arc<Counter>,
+    /// Connections currently admitted (event-loop gauge).
+    pub open_connections: Arc<Gauge>,
+    /// Backpressure episodes: a peer's write queue filled past its cap
+    /// and the server stopped reading from it until the queue drained.
+    pub conn_backpressure: Arc<Counter>,
+    /// Admission-control refusals by limit
+    /// (`nmbkm_overloaded_total{reason=…}`); each one answered with a
+    /// structured `overloaded` error, never a hang.
+    pub overloaded_conns: Arc<Counter>,
+    pub overloaded_inflight: Arc<Counter>,
+    pub overloaded_bytes: Arc<Counter>,
+    /// Models evicted under `--max-resident`/idle pressure
+    /// (checkpoint-then-drop; they lazily reload on next use).
+    pub model_evictions: Arc<Counter>,
+    /// Evicted models transparently reloaded by a request.
+    pub model_reloads: Arc<Counter>,
     op_create: Arc<Counter>,
     op_list: Arc<Counter>,
     op_drop: Arc<Counter>,
@@ -67,6 +83,16 @@ impl ServeMetrics {
             jsonl_bytes_written: reg
                 .counter("nmbkm_bytes_written_total", &[("transport", "jsonl")]),
             conn_timeouts: reg.counter("nmbkm_connection_timeouts_total", &[]),
+            open_connections: reg.gauge("nmbkm_open_connections", &[]),
+            conn_backpressure: reg.counter("nmbkm_conn_backpressure_total", &[]),
+            overloaded_conns: reg
+                .counter("nmbkm_overloaded_total", &[("reason", "conns")]),
+            overloaded_inflight: reg
+                .counter("nmbkm_overloaded_total", &[("reason", "inflight")]),
+            overloaded_bytes: reg
+                .counter("nmbkm_overloaded_total", &[("reason", "request-bytes")]),
+            model_evictions: reg.counter("nmbkm_model_evictions_total", &[]),
+            model_reloads: reg.counter("nmbkm_model_reloads_total", &[]),
             op_create: opc("create"),
             op_list: opc("list"),
             op_drop: opc("drop"),

@@ -52,6 +52,7 @@
 
 use crate::config::{Algo, Rho, RunConfig};
 use crate::obs;
+use crate::serve::frame;
 use crate::serve::observe;
 use crate::serve::registry::ModelRegistry;
 use crate::serve::wal;
@@ -78,7 +79,10 @@ pub enum Request {
         seconds: f64,
     },
     /// Nearest-centroid queries (lock-free, snapshot-isolated).
-    Predict { model: Option<String>, points: Vec<WireRow> },
+    /// `binary: true` asks for the response as a magic-prefixed binary
+    /// frame even on a JSONL connection (bulk answers skip float
+    /// formatting without committing the whole connection to framing).
+    Predict { model: Option<String>, points: Vec<WireRow>, binary: bool },
     /// Run training rounds without new data.
     Step { model: Option<String>, rounds: usize, seconds: f64 },
     /// Observability counters.
@@ -181,7 +185,11 @@ pub fn request_from_json(
             rounds: rounds(1)?,
             seconds: seconds()?,
         },
-        "predict" => Request::Predict { model: model()?, points: take_points()? },
+        "predict" => Request::Predict {
+            model: model()?,
+            points: take_points()?,
+            binary: v.get("binary").and_then(Json::as_bool).unwrap_or(false),
+        },
         "step" => Request::Step {
             model: model()?,
             rounds: rounds(1)?,
@@ -436,7 +444,7 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
             }
             json::obj(fields)
         }
-        Request::Predict { model, points } => {
+        Request::Predict { model, points, .. } => {
             let entry = registry.resolve(model.as_deref())?;
             // lock-free: computed against the published snapshot, even
             // while a training step holds the session lock; large
@@ -596,6 +604,35 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
     })
 }
 
+/// A JSONL request's encoded answer: a JSON line, or — for predicts
+/// carrying the `"binary":true` response hint — a magic-prefixed binary
+/// frame (the client re-enters text mode after reading it, since frames
+/// are length-delimited).
+pub enum LineReply {
+    Json(Json),
+    Frame(Vec<u8>),
+}
+
+/// Execute one parsed JSONL request. The `"binary":true` predict hint
+/// takes the frame fast path and answers `MAGIC + frame` when it
+/// succeeds; its errors (and every other op) stay JSON, so a client can
+/// always classify the answer by its first byte (`{` vs [`frame::MAGIC`]).
+pub fn execute_line(registry: &ModelRegistry, req: &Request) -> (LineReply, bool) {
+    if let Request::Predict { model, points, binary: true } = req {
+        let (h, body, quit) =
+            frame::predict_response(registry, model.as_deref(), points);
+        if h.get("ok").and_then(Json::as_bool) == Some(true) {
+            let mut buf = vec![frame::MAGIC];
+            // writing into a Vec cannot fail
+            let _ = frame::write_frame(&mut buf, &h, &body);
+            return (LineReply::Frame(buf), quit);
+        }
+        return (LineReply::Json(h), quit);
+    }
+    let (resp, quit) = handle_request(registry, req);
+    (LineReply::Json(resp), quit)
+}
+
 /// Drive a whole request stream: read JSONL requests from `input`, write
 /// JSONL responses to `output`. Returns true when the stream ended with
 /// an explicit shutdown (as opposed to EOF).
@@ -611,11 +648,26 @@ pub fn serve_lines<R: BufRead, W: Write>(
             continue;
         }
         m.jsonl_bytes_read.add(line.len() as u64 + 1);
-        let (resp, quit) = handle_line(registry, &line);
-        let resp = resp.to_string();
-        writeln!(output, "{resp}")?;
-        output.flush()?;
-        m.jsonl_bytes_written.add(resp.len() as u64 + 1);
+        let (reply, quit) = match parse_request(&line) {
+            Ok(req) => execute_line(registry, &req),
+            Err(e) => {
+                m.op_counter("invalid").inc();
+                (LineReply::Json(err_json(&e)), false)
+            }
+        };
+        match reply {
+            LineReply::Json(resp) => {
+                let resp = resp.to_string();
+                writeln!(output, "{resp}")?;
+                output.flush()?;
+                m.jsonl_bytes_written.add(resp.len() as u64 + 1);
+            }
+            LineReply::Frame(bytes) => {
+                output.write_all(&bytes)?;
+                output.flush()?;
+                m.jsonl_bytes_written.add(bytes.len() as u64);
+            }
+        }
         if quit {
             return Ok(true);
         }
@@ -694,6 +746,7 @@ mod tests {
                     },
                     WireRow::Dense(vec![0.0; 5]),
                 ],
+                binary: false,
             }
         );
         let r = parse_request(r#"{"op":"step","rounds":4,"seconds":0.5}"#).unwrap();

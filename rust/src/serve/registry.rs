@@ -30,16 +30,18 @@ use crate::kmeans::state::Centroids;
 use crate::linalg::neighbours::{NeighbourCache, NeighbourIndex};
 use crate::linalg::sparse::TransposedCentroids;
 use crate::obs::{self, log as obslog};
-use crate::serve::observe::ModelMetrics;
+use crate::serve::observe::{serve_metrics, ModelMetrics};
 use crate::serve::session::{self, OnlineSession};
+use crate::serve::snapshot::Snapshot;
 use crate::serve::wal::{u64_json, Wal};
 use crate::serve::wire::WireRow;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::{Duration, Instant};
 
 /// The model name requests route to when they carry no `model` field —
 /// what keeps single-model clients from PR 1 working unchanged.
@@ -56,6 +58,14 @@ pub const MAX_MODELS: usize = 256;
 /// engine's own `MIN_CHUNK` (256), so a sub-batch never re-shards
 /// inside the engine — the outer `run_jobs` is the only fan-out.
 pub const PREDICT_JOB_ROWS: usize = 16;
+
+/// Nanoseconds on a process-local monotone clock (an `Instant` epoch
+/// fixed at first use). Fits in an `AtomicU64`, which `Instant` itself
+/// does not; only differences are meaningful.
+fn mono_nanos() -> u64 {
+    static T0: OnceLock<Instant> = OnceLock::new();
+    T0.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
 
 /// An immutable published view of one model: everything a predict needs,
 /// frozen at the end of some mutation. Swapped wholesale under an `Arc`,
@@ -188,6 +198,10 @@ pub struct ModelEntry {
     /// Checkpoints persist it next to the snapshot; recovery and the
     /// follower use it to skip records a snapshot already covers.
     last_seq: AtomicU64,
+    /// [`mono_nanos`] of the last [`ModelRegistry::resolve`] that
+    /// returned this entry — the recency that LRU and idle eviction
+    /// rank by.
+    last_used: AtomicU64,
 }
 
 impl ModelEntry {
@@ -206,7 +220,19 @@ impl ModelEntry {
             session_cache,
             session_neigh,
             last_seq: AtomicU64::new(0),
+            last_used: AtomicU64::new(mono_nanos()),
         })
+    }
+
+    /// Mark the entry used now. Every successful resolve calls this;
+    /// idle eviction compares against it.
+    pub fn touch(&self) {
+        self.last_used.store(mono_nanos(), Ordering::Relaxed);
+    }
+
+    /// [`mono_nanos`] of the last use (resolve or registration).
+    fn last_used(&self) -> u64 {
+        self.last_used.load(Ordering::Relaxed)
     }
 
     /// Highest WAL seq folded into this model's state (0 = none).
@@ -389,6 +415,23 @@ fn publish_view(name: &str, s: &OnlineSession) -> PublishedModel {
     }
 }
 
+/// Where an evicted model's state lives while it is out of memory —
+/// enough to rebuild the entry bit-exactly on the next request for it.
+#[derive(Clone)]
+struct EvictedModel {
+    /// The snapshot file holding the model (a WAL checkpoint's
+    /// `ckpt-<name>.json`, or `evicted-<name>.json` under the snapshot
+    /// dir when no WAL is attached).
+    path: PathBuf,
+    /// The entry's `last_seq` at eviction (restored on reload so replay
+    /// and `sync-info` cursors stay exact).
+    last_seq: u64,
+    /// `Some(file)` when `path` is a WAL checkpoint file: future
+    /// checkpoints must keep listing it in the manifest so segment GC
+    /// never deletes the only copy of an evicted model.
+    ckpt_file: Option<String>,
+}
+
 /// The process-wide model table: named entries behind a read-mostly
 /// lock. `Sync`, so one registry is shared by every connection thread.
 pub struct ModelRegistry {
@@ -406,6 +449,19 @@ pub struct ModelRegistry {
     /// state is a bit-exact mirror of a primary's log) until promotion
     /// flips it back.
     follower: AtomicBool,
+    /// Resident-model cap enforced by the lifecycle sweep (0 = no cap):
+    /// past it, least-recently-used models are checkpointed and
+    /// dropped from memory, reloading lazily on their next request.
+    max_resident: AtomicUsize,
+    /// Idle horizon in nanoseconds (0 = never): a model untouched this
+    /// long is evicted by the lifecycle sweep.
+    idle_evict_nanos: AtomicU64,
+    /// Evicted models by name. **Lock order: this mutex is always taken
+    /// before `models`**, never the other way round — eviction inserts
+    /// here then removes from `models`; reload re-checks `models` while
+    /// holding this lock so a racing resolve either finds the resident
+    /// entry or waits for the record.
+    evicted: Mutex<BTreeMap<String, EvictedModel>>,
 }
 
 impl Default for ModelRegistry {
@@ -423,6 +479,9 @@ impl ModelRegistry {
             snapshot_dir: Mutex::new(PathBuf::from(".")),
             wal: RwLock::new(None),
             follower: AtomicBool::new(false),
+            max_resident: AtomicUsize::new(0),
+            idle_evict_nanos: AtomicU64::new(0),
+            evicted: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -525,22 +584,44 @@ impl ModelRegistry {
         dim: usize,
     ) -> Result<Arc<ModelEntry>> {
         validate_name(name)?;
+        // an evicted model still exists (it reloads on use) — its name
+        // is not free until an explicit drop
+        ensure!(
+            !self.evicted.lock().unwrap().contains_key(name),
+            "model '{name}' already exists"
+        );
         let mut session = OnlineSession::new(cfg.clone(), dim)?;
         session.set_snapshot_dir(self.snapshot_dir());
-        self.insert_inner(name, session, Some((&cfg, dim)))
+        let entry = self.insert_inner(name, session, Some((&cfg, dim)))?;
+        // keep residency bounded even between lifecycle ticks; the new
+        // entry is the most recently used, so LRU never picks it
+        self.enforce_residency();
+        Ok(entry)
     }
 
-    /// Look up a model; `None` routes to [`DEFAULT_MODEL`].
+    /// Look up a model; `None` routes to [`DEFAULT_MODEL`]. A model the
+    /// lifecycle sweep evicted is transparently reloaded from its
+    /// checkpoint — callers cannot tell eviction ever happened (beyond
+    /// the one-off reload latency and `nmbkm_model_reloads_total`).
     pub fn resolve(&self, name: Option<&str>) -> Result<Arc<ModelEntry>> {
         let name = name.unwrap_or(DEFAULT_MODEL);
+        {
+            let models = self.models.read().unwrap();
+            if let Some(e) = models.get(name) {
+                e.touch();
+                return Ok(e.clone());
+            }
+        }
+        if let Some(e) = self.reload_evicted(name)? {
+            e.touch();
+            return Ok(e);
+        }
         let models = self.models.read().unwrap();
-        models.get(name).cloned().ok_or_else(|| {
-            let known: Vec<&str> = models.keys().map(|k| k.as_str()).collect();
-            anyhow!(
-                "unknown model '{name}' (known: [{}])",
-                known.join(", ")
-            )
-        })
+        let known: Vec<&str> = models.keys().map(|k| k.as_str()).collect();
+        Err(anyhow!(
+            "unknown model '{name}' (known: [{}])",
+            known.join(", ")
+        ))
     }
 
     /// Remove a model (logging a drop record when a WAL is attached).
@@ -557,9 +638,10 @@ impl ModelRegistry {
     }
 
     fn drop_model_inner(&self, name: &str, log: bool) -> Result<()> {
+        let mut evicted = self.evicted.lock().unwrap();
         let mut models = self.models.write().unwrap();
         ensure!(
-            models.contains_key(name),
+            models.contains_key(name) || evicted.contains_key(name),
             "unknown model '{name}': nothing to drop"
         );
         // logged before the removal becomes visible, under the write
@@ -575,8 +657,198 @@ impl ModelRegistry {
             }
         }
         models.remove(name);
+        if let Some(rec) = evicted.remove(name) {
+            // an eviction-only snapshot is ours to delete; a WAL
+            // checkpoint file is the WAL's — once the record is gone the
+            // next checkpoint's GC collects it
+            if rec.ckpt_file.is_none() {
+                let _ = std::fs::remove_file(&rec.path);
+            }
+        }
         obslog::event("model_drop", &[("model", json::s(name))]);
         Ok(())
+    }
+
+    /// Cap on resident models (`--max-resident`; 0 = no cap). Enforced
+    /// by [`ModelRegistry::run_lifecycle`], LRU-first.
+    pub fn set_max_resident(&self, cap: usize) {
+        self.max_resident.store(cap, Ordering::SeqCst);
+    }
+
+    /// Evict models untouched for `idle` (`--model-idle-secs`; `None`
+    /// disables). Enforced by [`ModelRegistry::run_lifecycle`].
+    pub fn set_idle_evict(&self, idle: Option<Duration>) {
+        let ns = idle.map(|d| d.as_nanos() as u64).unwrap_or(0);
+        self.idle_evict_nanos.store(ns, Ordering::SeqCst);
+    }
+
+    /// One lifecycle sweep: idle eviction, then LRU eviction down to
+    /// the residency cap. Called periodically by the serve acceptor
+    /// (and after every `create`); returns how many models were
+    /// evicted. Cheap when both knobs are off.
+    pub fn run_lifecycle(&self) -> usize {
+        self.evict_idle() + self.enforce_residency()
+    }
+
+    /// Evict every resident model idle past the configured horizon.
+    fn evict_idle(&self) -> usize {
+        let idle_ns = self.idle_evict_nanos.load(Ordering::SeqCst);
+        if idle_ns == 0 {
+            return 0;
+        }
+        let now = mono_nanos();
+        let stale: Vec<String> = self
+            .models
+            .read()
+            .unwrap()
+            .values()
+            .filter(|e| now.saturating_sub(e.last_used()) > idle_ns)
+            .map(|e| e.name().to_string())
+            .collect();
+        let mut n = 0;
+        for name in stale {
+            if matches!(self.evict_model(&name), Ok(true)) {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Evict least-recently-used models until at most `max_resident`
+    /// remain. Stops early when a candidate cannot be evicted safely
+    /// (in use, mutated mid-eviction, or not yet checkpointable) — the
+    /// next sweep retries.
+    fn enforce_residency(&self) -> usize {
+        let cap = self.max_resident.load(Ordering::SeqCst);
+        if cap == 0 {
+            return 0;
+        }
+        let mut n = 0;
+        loop {
+            let candidate = {
+                let models = self.models.read().unwrap();
+                if models.len() <= cap {
+                    break;
+                }
+                models
+                    .values()
+                    .min_by_key(|e| e.last_used())
+                    .map(|e| e.name().to_string())
+            };
+            let Some(name) = candidate else { break };
+            match self.evict_model(&name) {
+                Ok(true) => n += 1,
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Checkpoint-then-drop one model from memory, keeping a reload
+    /// record so the next request for it transparently resurrects it.
+    /// Returns `Ok(false)` when the model is not resident or cannot be
+    /// evicted *safely* right now: its durable copy could not be cut,
+    /// a request holds its entry, or it was used/mutated while the
+    /// snapshot was being written. Never loses state — the in-memory
+    /// entry survives any bail-out.
+    pub fn evict_model(&self, name: &str) -> Result<bool> {
+        let Some(entry) = self.models.read().unwrap().get(name).cloned() else {
+            return Ok(false);
+        };
+        let seq0 = entry.last_seq();
+        let rev0 = entry.current().rev;
+        // cut the durable copy with no registry locks held (a WAL
+        // checkpoint takes every session lock in turn)
+        let (path, ckpt_file) = if let Some(wal) = self.wal() {
+            if !wal.checkpoint(self)? {
+                return Ok(false); // e.g. an uninitialised model somewhere
+            }
+            let file = format!("ckpt-{name}.json");
+            (wal.dir().join(&file), Some(file))
+        } else {
+            let path = self.snapshot_dir().join(format!("evicted-{name}.json"));
+            entry.with_session(|s| s.save_snapshot(&path, true))?;
+            (path, None)
+        };
+        // record first, removal second (under the evicted lock
+        // throughout): a resolve that misses `models` blocks on the
+        // record and reloads — there is no instant where the model is
+        // neither resident nor reloadable
+        let mut evicted = self.evicted.lock().unwrap();
+        evicted.insert(
+            name.to_string(),
+            EvictedModel { path, last_seq: seq0, ckpt_file },
+        );
+        let mut models = self.models.write().unwrap();
+        // safe only if nothing happened since the durable copy: same
+        // entry, no other Arc holder (map + ours = 2), same WAL seq and
+        // centroid revision. Any mismatch rolls the record back.
+        let safe = match models.get(name) {
+            Some(cur) => {
+                Arc::ptr_eq(cur, &entry)
+                    && Arc::strong_count(&entry) == 2
+                    && entry.last_seq() == seq0
+                    && entry.current().rev == rev0
+            }
+            None => false,
+        };
+        if !safe {
+            drop(models);
+            evicted.remove(name);
+            return Ok(false);
+        }
+        models.remove(name);
+        drop(models);
+        drop(evicted);
+        serve_metrics().model_evictions.inc();
+        obslog::event(
+            "model_evict",
+            &[("model", json::s(name)), ("seq", u64_json(seq0))],
+        );
+        Ok(true)
+    }
+
+    /// Resurrect an evicted model from its snapshot. `Ok(None)` when no
+    /// record exists (a genuinely unknown name). Holds the evicted lock
+    /// throughout so concurrent requests reload once, not N times.
+    fn reload_evicted(&self, name: &str) -> Result<Option<Arc<ModelEntry>>> {
+        let mut evicted = self.evicted.lock().unwrap();
+        // a racing resolve may have reloaded while we waited, or an
+        // eviction may have rolled back — re-check residency first
+        if let Some(e) = self.models.read().unwrap().get(name) {
+            return Ok(Some(e.clone()));
+        }
+        let Some(rec) = evicted.get(name).cloned() else {
+            return Ok(None);
+        };
+        let snap = Snapshot::load(&rec.path).map_err(|e| {
+            anyhow!("reloading evicted model '{name}': {e:#}")
+        })?;
+        let mut session = OnlineSession::resume(snap)?;
+        session.set_snapshot_dir(self.snapshot_dir());
+        let entry = self.insert(name, session)?;
+        entry.set_last_seq(rec.last_seq);
+        evicted.remove(name);
+        serve_metrics().model_reloads.inc();
+        obslog::event("model_reload", &[("model", json::s(name))]);
+        Ok(Some(entry))
+    }
+
+    /// `(name, checkpoint file, seq)` of every evicted model whose only
+    /// copy is a WAL checkpoint file. The WAL folds these into each new
+    /// manifest so its GC and segment truncation never orphan them.
+    pub fn evicted_for_checkpoint(&self) -> Vec<(String, String, u64)> {
+        let evicted = self.evicted.lock().unwrap();
+        let models = self.models.read().unwrap();
+        evicted
+            .iter()
+            .filter(|(name, r)| {
+                r.ckpt_file.is_some() && !models.contains_key(*name)
+            })
+            .map(|(name, r)| {
+                (name.clone(), r.ckpt_file.clone().unwrap(), r.last_seq)
+            })
+            .collect()
     }
 
     /// One `sync-info` row per model: name + last applied WAL seq (the
@@ -882,5 +1154,122 @@ mod tests {
         let view = entry.current();
         assert!(view.cent.is_some());
         assert_eq!(view.n_total, 50);
+    }
+
+    fn lifecycle_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("nmbkm-reg-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn eviction_and_lazy_reload_are_bit_exact() {
+        let dir = lifecycle_dir("evict");
+        let data = GaussianMixture::default_spec(3, 5).generate(300, 11);
+        let (session, _) = session::train(&data, &cfg(3, 11)).unwrap();
+        let reg = ModelRegistry::with_default(session);
+        reg.set_snapshot_dir(dir.clone());
+        let queries = rows_of(&data, 0, 12);
+        let entry = reg.resolve(None).unwrap();
+        let (lbl_a, d2_a) = entry.predict(&queries).unwrap();
+        let rev_a = entry.current().rev;
+        drop(entry); // eviction refuses while an Arc is held
+        assert!(reg.evict_model(DEFAULT_MODEL).unwrap());
+        assert_eq!(reg.len(), 0, "evicted model leaves memory");
+        assert!(
+            dir.join("evicted-default.json").exists(),
+            "no-WAL eviction snapshots under the registry's snapshot dir"
+        );
+        // resolve resurrects it transparently, bit-exactly
+        let back = reg.resolve(None).unwrap();
+        assert_eq!(reg.len(), 1);
+        let (lbl_b, d2_b) = back.predict(&queries).unwrap();
+        assert_eq!(lbl_a, lbl_b);
+        assert_eq!(
+            d2_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            d2_b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.current().rev, rev_a, "revision survives the trip");
+        // the reloaded model keeps training where it left off
+        back.with_session_mut(|s| s.step(1, 1e9).map(|_| ())).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_refuses_while_entry_is_held() {
+        let dir = lifecycle_dir("held");
+        let data = GaussianMixture::default_spec(3, 4).generate(120, 3);
+        let (session, _) = session::train(&data, &cfg(3, 3)).unwrap();
+        let reg = ModelRegistry::with_default(session);
+        reg.set_snapshot_dir(dir.clone());
+        let held = reg.resolve(None).unwrap();
+        assert!(
+            !reg.evict_model(DEFAULT_MODEL).unwrap(),
+            "a held Arc must veto eviction"
+        );
+        assert_eq!(reg.len(), 1);
+        drop(held);
+        assert!(reg.evict_model(DEFAULT_MODEL).unwrap());
+        // double-evict is a clean no-op
+        assert!(!reg.evict_model(DEFAULT_MODEL).unwrap());
+        // create over an evicted name is a duplicate; drop frees it and
+        // removes the parked snapshot file
+        let err = reg.create(DEFAULT_MODEL, cfg(3, 3), 4).unwrap_err();
+        assert!(format!("{err:#}").contains("already exists"), "{err:#}");
+        reg.drop_model(DEFAULT_MODEL).unwrap();
+        assert!(!dir.join("evicted-default.json").exists());
+        assert!(reg.resolve(None).is_err(), "dropped, not evicted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn residency_cap_evicts_least_recently_used() {
+        let dir = lifecycle_dir("lru");
+        let reg = ModelRegistry::new();
+        reg.set_snapshot_dir(dir.clone());
+        let data = GaussianMixture::default_spec(2, 4).generate(60, 9);
+        for name in ["a", "b", "c"] {
+            let e = reg.create(name, RunConfig { threads: 1, ..cfg(2, 9) }, 4).unwrap();
+            e.with_session_mut(|s| s.ingest_rows(&rows_of(&data, 0, 60)).map(|_| ()))
+                .unwrap();
+        }
+        // recency order now a < b < c; touch a so b becomes LRU
+        reg.resolve(Some("a")).unwrap();
+        reg.set_max_resident(2);
+        assert_eq!(reg.run_lifecycle(), 1);
+        assert_eq!(reg.len(), 2);
+        let resident: Vec<String> =
+            reg.list().iter().map(|m| m.model.clone()).collect();
+        assert_eq!(resident, vec!["a".to_string(), "c".to_string()]);
+        // b still answers — it reloads on demand, and the reload makes
+        // it most-recent, pushing the cap onto the next LRU victim
+        assert_eq!(reg.resolve(Some("b")).unwrap().name(), "b");
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.run_lifecycle(), 1);
+        assert_eq!(reg.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn idle_horizon_evicts_untouched_models() {
+        let dir = lifecycle_dir("idle");
+        let data = GaussianMixture::default_spec(2, 4).generate(60, 2);
+        let (session, _) = session::train(&data, &cfg(2, 2)).unwrap();
+        let reg = ModelRegistry::with_default(session);
+        reg.set_snapshot_dir(dir.clone());
+        reg.set_idle_evict(Some(Duration::from_nanos(1)));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(reg.run_lifecycle(), 1);
+        assert_eq!(reg.len(), 0);
+        // disabling the horizon stops the sweep
+        let back = reg.resolve(None).unwrap();
+        drop(back);
+        reg.set_idle_evict(None);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(reg.run_lifecycle(), 0);
+        assert_eq!(reg.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

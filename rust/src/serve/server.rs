@@ -7,44 +7,69 @@
 //! first byte is the magic [`crate::serve::frame::MAGIC`] speaks the
 //! length-prefixed binary protocol (`serve::frame`) instead — JSONL
 //! clients on the same port are untouched, because no JSONL request can
-//! start with that byte. The TCP server runs **one thread per
-//! connection**: predicts resolve a published model snapshot and run
+//! start with that byte. The TCP server is the **event-driven readiness
+//! loop** in [`crate::serve::event`]: an acceptor plus a few event-loop
+//! shards own every socket, a small worker pool executes requests, and
+//! per-connection write queues give slow peers backpressure instead of
+//! a pinned thread. Predicts resolve a published model snapshot and run
 //! lock-free, so read traffic scales with connections while mutations
 //! (ingest/step/snapshot) serialise only on their own model's session
-//! lock — two different models train and answer concurrently without
-//! touching each other. An explicit `shutdown` request from any
-//! connection (either framing) stops the whole server (stdio: EOF works
-//! too).
+//! lock. An explicit `shutdown` request from any connection (either
+//! framing) stops the whole server (stdio: EOF works too); shutdown is
+//! a poller wake token, not a loopback self-connect.
 
-use crate::obs::log as obslog;
+use crate::serve::event;
 use crate::serve::frame;
-use crate::serve::observe::serve_metrics;
 use crate::serve::protocol::serve_lines;
 use crate::serve::registry::ModelRegistry;
 use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::io::{BufRead, Write};
+use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// The JSONL refusal a magic-byte opener gets when framing is off.
+pub(crate) const BINARY_DISABLED_MSG: &str =
+    "binary framing is not enabled on this server (start it with --binary)";
+
 /// Accept-loop knobs. The default matches `nmbkm serve`'s defaults:
-/// JSONL only, 60 s per-connection socket timeouts.
+/// JSONL only, 60 s idle timeout, no admission limits.
 #[derive(Clone, Copy)]
 pub struct ServeOptions {
     /// Negotiate the binary framing on a leading magic byte.
     pub accept_binary: bool,
-    /// Read/write timeout applied to every accepted socket (`None`
-    /// disables). A peer that stalls a single read or write longer than
-    /// this gets its connection dropped — the slowloris defence — and
-    /// counts on `nmbkm_connection_timeouts_total`.
+    /// Idle timeout for every accepted socket (`None` disables). A peer
+    /// that sits idle with no request in flight longer than this gets
+    /// its connection dropped — the slowloris defence — and counts on
+    /// `nmbkm_connection_timeouts_total`.
     pub conn_timeout: Option<Duration>,
+    /// Admitted-connection cap (`--max-conns`; 0 = unlimited). Peers
+    /// over the cap get a structured `overloaded` error and a close.
+    pub max_conns: usize,
+    /// Dispatched-but-unanswered request cap across all connections
+    /// (`--max-inflight`; 0 = unlimited). Over-limit requests get an
+    /// `overloaded` error; the connection survives.
+    pub max_inflight: usize,
+    /// Per-request size cap in bytes — a JSONL line or a whole binary
+    /// frame (`--max-request-bytes`; 0 = unlimited). Oversized requests
+    /// are skipped with an `overloaded` error; the stream survives.
+    pub max_request_bytes: usize,
+    /// Per-connection write-queue cap before the server stops reading
+    /// from that peer (backpressure; 0 = the 4 MiB default).
+    pub write_queue_cap: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> ServeOptions {
-        ServeOptions { accept_binary: false, conn_timeout: Some(Duration::from_secs(60)) }
+        ServeOptions {
+            accept_binary: false,
+            conn_timeout: Some(Duration::from_secs(60)),
+            max_conns: 0,
+            max_inflight: 0,
+            max_request_bytes: 0,
+            write_queue_cap: 0,
+        }
     }
 }
 
@@ -66,7 +91,7 @@ pub fn serve_stdio(registry: &ModelRegistry, accept_binary: bool) -> Result<()> 
 /// checkpoint, so a restart replays nothing. Called once every handler
 /// has exited (no mutation can race the flush). Failures keep the log —
 /// recovery replay still reaches the same state.
-fn drain_wal(registry: &ModelRegistry) {
+pub(crate) fn drain_wal(registry: &ModelRegistry) {
     if let Some(w) = registry.wal() {
         match w.drain(registry) {
             Ok(()) => {
@@ -80,7 +105,9 @@ fn drain_wal(registry: &ModelRegistry) {
 /// Dispatch one request stream by its first byte: the binary magic
 /// (when enabled) selects frame mode, anything else — including EOF —
 /// stays on JSONL. Returns whether the stream ended with an explicit
-/// shutdown.
+/// shutdown. This blocking path serves stdio and doubles as the
+/// reference implementation the event loop is byte-parity-tested
+/// against.
 fn serve_negotiated<R: BufRead, W: Write>(
     registry: &ModelRegistry,
     input: &mut R,
@@ -98,13 +125,7 @@ fn serve_negotiated<R: BufRead, W: Write>(
             // drop the connection — silence would look like a hang
             let resp = json::obj(vec![
                 ("ok", Json::Bool(false)),
-                (
-                    "error",
-                    json::s(
-                        "binary framing is not enabled on this server \
-                         (start it with --binary)",
-                    ),
-                ),
+                ("error", json::s(BINARY_DISABLED_MSG)),
             ]);
             writeln!(output, "{}", resp.to_string())?;
             output.flush()?;
@@ -157,131 +178,18 @@ pub fn serve_listener_opts(
     serve_listener_with(
         registry,
         listener,
-        ServeOptions { accept_binary, conn_timeout: None },
+        ServeOptions { accept_binary, conn_timeout: None, ..Default::default() },
     )
 }
 
-/// Accept-loop over an already-bound listener (split out so tests can
-/// bind an ephemeral port themselves). Every accepted connection gets
-/// its own handler thread against the shared registry and negotiates
-/// its wire format independently.
+/// Serve an already-bound listener (split out so tests can bind an
+/// ephemeral port themselves) with the event-driven readiness loop:
+/// see [`crate::serve::event`] for the architecture. Returns after a
+/// client's `shutdown` has drained connections and the WAL.
 pub fn serve_listener_with(
     registry: Arc<ModelRegistry>,
     listener: TcpListener,
     opts: ServeOptions,
 ) -> Result<()> {
-    let local = listener.local_addr().ok();
-    let stop = Arc::new(AtomicBool::new(false));
-    // handler thread + a clone of its socket: the clone lets the
-    // acceptor shut the socket down at exit, which unblocks handlers
-    // parked in a read so joining them cannot deadlock on an idle client
-    let mut handlers: Vec<(std::thread::JoinHandle<()>, TcpStream)> =
-        Vec::new();
-    for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break; // a handler processed `shutdown` (conn is its wake-up)
-        }
-        let stream = match conn {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("[nmbkm::serve] accept failed: {e}");
-                continue;
-            }
-        };
-        // socket-level timeouts so one stalled peer cannot pin its
-        // handler thread (and any session lock it holds) forever
-        if opts.conn_timeout.is_some() {
-            let _ = stream.set_read_timeout(opts.conn_timeout);
-            let _ = stream.set_write_timeout(opts.conn_timeout);
-        }
-        let peer = match stream.try_clone() {
-            Ok(c) => c,
-            Err(e) => {
-                eprintln!("[nmbkm::serve] clone failed: {e}");
-                continue;
-            }
-        };
-        let reg = registry.clone();
-        let stop_flag = stop.clone();
-        let handle = std::thread::spawn(move || {
-            match serve_connection(&reg, stream, opts.accept_binary) {
-                Ok(true) => {
-                    // explicit shutdown: flag the acceptor, then poke the
-                    // listener so its blocking accept() returns. If the
-                    // bound address is not self-connectable (external
-                    // interface), fall back to loopback on the same port.
-                    stop_flag.store(true, Ordering::SeqCst);
-                    if let Some(addr) = local {
-                        if TcpStream::connect(addr).is_err() {
-                            let _ = TcpStream::connect((
-                                std::net::Ipv4Addr::LOCALHOST,
-                                addr.port(),
-                            ));
-                        }
-                    }
-                }
-                Ok(false) => {} // client hung up; nothing to do
-                Err(e) => eprintln!("[nmbkm::serve] connection error: {e:#}"),
-            }
-        });
-        handlers.push((handle, peer));
-        // reap finished handlers so long-lived servers don't accumulate
-        handlers.retain(|(h, _)| !h.is_finished());
-    }
-    // close every live connection so handlers blocked mid-read wake with
-    // EOF, then join — never waits on a client that simply stays silent
-    for (_, peer) in &handlers {
-        let _ = peer.shutdown(std::net::Shutdown::Both);
-    }
-    for (h, _) in handlers {
-        let _ = h.join();
-    }
-    drain_wal(&registry);
-    Ok(())
-}
-
-/// Whether an error chain reads like a socket timeout. The vendored
-/// `anyhow` shim keeps errors as display strings (no downcast to
-/// `io::Error`), so classification is textual: `SO_RCVTIMEO` expiry
-/// surfaces as `WouldBlock` ("Resource temporarily unavailable") on
-/// Linux and `TimedOut` elsewhere.
-fn is_timeout(e: &anyhow::Error) -> bool {
-    let s = format!("{e:#}").to_lowercase();
-    s.contains("timed out")
-        || s.contains("temporarily unavailable")
-        || s.contains("would block")
-        || s.contains("os error 11")
-}
-
-fn serve_connection(
-    registry: &ModelRegistry,
-    stream: TcpStream,
-    accept_binary: bool,
-) -> Result<bool> {
-    let sm = serve_metrics();
-    sm.conns_opened.inc();
-    let peer = stream
-        .peer_addr()
-        .map(|p| p.to_string())
-        .unwrap_or_else(|_| "?".to_string());
-    eprintln!("[nmbkm::serve] client {peer} connected");
-    obslog::event("connection_open", &[("peer", json::s(&peer))]);
-    let mut reader =
-        BufReader::new(stream.try_clone().context("cloning stream")?);
-    let mut writer = BufWriter::new(stream);
-    let out = serve_negotiated(registry, &mut reader, &mut writer, accept_binary);
-    sm.conns_closed.inc();
-    let timed_out = out.as_ref().err().map(is_timeout).unwrap_or(false);
-    if timed_out {
-        sm.conn_timeouts.inc();
-        obslog::event("connection_timeout", &[("peer", json::s(&peer))]);
-    }
-    obslog::event(
-        "connection_close",
-        &[
-            ("peer", json::s(&peer)),
-            ("clean", Json::Bool(out.is_ok())),
-        ],
-    );
-    out
+    event::run(registry, listener, opts)
 }

@@ -670,6 +670,12 @@ impl Wal {
             }
             models.push((e.name().to_string(), file, seq));
         }
+        // models evicted from memory live only in their checkpoint
+        // file: keep listing them so the GC below and the segment
+        // truncation never orphan the one copy a reload needs
+        for (name, file, seq) in registry.evicted_for_checkpoint() {
+            models.push((name, file, seq));
+        }
         let manifest = json::obj(vec![
             ("version", json::num(1.0)),
             ("epoch", u64_json(self.epoch())),

@@ -1,0 +1,378 @@
+//! Integration tests for the event-driven serving path beyond raw
+//! throughput: the `"binary":true` response hint on JSONL connections
+//! (frame-encoded predicts, bit-identical to the pure-binary route),
+//! per-frame size admission, and the model lifecycle — idle eviction
+//! with lazy reload over a live connection, and WAL-checkpointed
+//! eviction whose one on-disk copy survives later checkpoints and a
+//! full restart.
+
+use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::gaussian::GaussianMixture;
+use nmbkm::data::Data;
+use nmbkm::serve::observe::serve_metrics;
+use nmbkm::serve::protocol::{self, Request};
+use nmbkm::serve::server::{serve_listener_opts, serve_listener_with, ServeOptions};
+use nmbkm::serve::wal::{self, FsyncPolicy};
+use nmbkm::serve::{frame, session, ModelRegistry, WireRow};
+use nmbkm::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const NO_CKPT: u64 = u64::MAX;
+
+fn cfg(k: usize, b0: usize) -> RunConfig {
+    RunConfig {
+        algo: Algo::TbRho,
+        k,
+        b0,
+        rho: Rho::Infinite,
+        threads: 2,
+        seed: 19,
+        max_rounds: 6,
+        max_seconds: 60.0,
+        eval_every_secs: 0.0,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("nmbkm-serve-event-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn dense_registry(k: usize, seed: u64) -> ModelRegistry {
+    let data = GaussianMixture::default_spec(k, 4).generate(500, seed);
+    ModelRegistry::with_default(session::train(&data, &cfg(k, 128)).unwrap().0)
+}
+
+fn rows(data: &Data, lo: usize, hi: usize) -> Vec<WireRow> {
+    let mut row = vec![0f32; data.dim()];
+    (lo..hi)
+        .map(|i| {
+            data.write_row_dense(i, &mut row);
+            WireRow::Dense(row.clone())
+        })
+        .collect()
+}
+
+fn exec(reg: &ModelRegistry, req: &Request) -> Json {
+    let (resp, _) = protocol::handle_request(reg, req);
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "request failed: {}",
+        resp.to_string()
+    );
+    resp
+}
+
+fn bind_or_skip() -> Option<TcpListener> {
+    match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => Some(l),
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            None
+        }
+    }
+}
+
+fn shutdown(addr: std::net::SocketAddr) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+}
+
+/// A JSONL predict carrying `"binary":true` answers with a
+/// magic-prefixed frame that is byte-identical to the pure-binary
+/// route's response, the connection stays in text mode afterwards, and
+/// hint-predict errors stay JSON.
+#[test]
+fn binary_hint_matches_the_binary_route_bit_for_bit() {
+    let Some(listener) = bind_or_skip() else { return };
+    let addr = listener.local_addr().unwrap();
+    let reg = Arc::new(dense_registry(3, 5));
+    let server = std::thread::spawn(move || {
+        serve_listener_opts(reg, listener, true).unwrap();
+    });
+
+    // values chosen to round-trip JSON text to f32 exactly
+    let queries = vec![vec![0.5f32, 0.25, -1.0, 2.0], vec![1.5, 0.5, 3.0, -0.75]];
+
+    // reference: the pure-binary route
+    let (ref_h, ref_body) = {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(&[frame::MAGIC]).unwrap();
+        let body = frame::encode_dense_points(4, &queries).unwrap();
+        let mut req = Vec::new();
+        frame::write_frame(
+            &mut req,
+            &Json::parse(r#"{"op":"predict"}"#).unwrap(),
+            &body,
+        )
+        .unwrap();
+        conn.write_all(&req).unwrap();
+        let mut reader = BufReader::new(conn);
+        frame::read_frame(&mut reader).unwrap().unwrap()
+    };
+    assert_eq!(ref_h.get("ok").unwrap().as_bool(), Some(true), "{ref_h:?}");
+
+    // the hinted JSONL route: same points as JSON text
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(
+        b"{\"op\":\"predict\",\"points\":[[0.5,0.25,-1.0,2.0],\
+          [1.5,0.5,3.0,-0.75]],\"binary\":true}\n",
+    )
+    .unwrap();
+    let mut magic = [0u8; 1];
+    reader.read_exact(&mut magic).unwrap();
+    assert_eq!(magic[0], frame::MAGIC, "hinted reply must lead with the magic");
+    let (h, body) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(h, ref_h, "hinted header differs from the binary route");
+    assert_eq!(body, ref_body, "hinted body differs from the binary route");
+
+    // the connection is back in text mode
+    conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+
+    // a failing hinted predict answers JSON, not a frame
+    conn.write_all(b"{\"op\":\"predict\",\"points\":[[1.0]],\"binary\":true}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with('{'), "{line}");
+    assert!(line.contains("\"ok\":false"), "{line}");
+
+    shutdown(addr);
+    server.join().unwrap();
+}
+
+/// An over-limit binary frame is skipped by its own length prefix: the
+/// client gets a structured `overloaded` error frame and the stream
+/// keeps answering.
+#[test]
+fn oversized_frames_are_skipped_and_the_stream_survives() {
+    let Some(listener) = bind_or_skip() else { return };
+    let addr = listener.local_addr().unwrap();
+    let reg = Arc::new(dense_registry(3, 7));
+    let server = std::thread::spawn(move || {
+        serve_listener_with(
+            reg,
+            listener,
+            ServeOptions {
+                accept_binary: true,
+                conn_timeout: None,
+                max_request_bytes: 4096,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    });
+
+    let frame_for = |rows: &[Vec<f32>]| {
+        let body = frame::encode_dense_points(4, rows).unwrap();
+        let mut out = Vec::new();
+        frame::write_frame(
+            &mut out,
+            &Json::parse(r#"{"op":"predict"}"#).unwrap(),
+            &body,
+        )
+        .unwrap();
+        out
+    };
+    let small = frame_for(&[vec![0.5f32, 0.25, -1.0, 2.0], vec![0.0, 0.0, 0.0, 0.0]]);
+    let big = frame_for(
+        &(0..1000)
+            .map(|i| vec![i as f32, 0.5, -0.5, 1.0])
+            .collect::<Vec<_>>(),
+    );
+    assert!(big.len() > 4096 && small.len() <= 4096);
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(&[frame::MAGIC]).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    conn.write_all(&small).unwrap();
+    let (h, _) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+    assert_eq!(h.get("n").unwrap().as_usize(), Some(2));
+
+    conn.write_all(&big).unwrap();
+    let (h, body) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(false), "{h:?}");
+    let err = h.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("overloaded"), "{err}");
+    assert!(err.contains("--max-request-bytes=4096"), "{err}");
+    assert!(body.is_empty());
+
+    // the stream survives: the next frame answers normally
+    conn.write_all(&small).unwrap();
+    let (h, _) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+
+    shutdown(addr);
+    server.join().unwrap();
+}
+
+/// Idle models are checkpointed and evicted by the acceptor's lifecycle
+/// tick while the server runs, and the next request over a *live*
+/// connection transparently reloads them — answering bit-identically to
+/// the pre-eviction predict.
+#[test]
+fn idle_models_evict_and_lazily_reload_over_the_protocol() {
+    let Some(listener) = bind_or_skip() else { return };
+    let addr = listener.local_addr().unwrap();
+    let snapdir = tmpdir("idle");
+    std::fs::create_dir_all(&snapdir).unwrap();
+    let reg = Arc::new(ModelRegistry::new());
+    reg.set_snapshot_dir(snapdir.clone());
+    let sreg = reg.clone();
+    let server = std::thread::spawn(move || {
+        serve_listener_opts(sreg, listener, false).unwrap();
+    });
+
+    // bootstrap a model entirely over the wire
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut req = |conn: &mut TcpStream,
+                   reader: &mut BufReader<TcpStream>,
+                   msg: &str|
+     -> String {
+        conn.write_all(msg.as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line
+    };
+    let ok = |line: &str| {
+        assert!(line.contains("\"ok\":true"), "{line}");
+    };
+    ok(&req(
+        &mut conn,
+        &mut reader,
+        r#"{"op":"create","model":"m","k":4,"dim":3,"algo":"gb","b0":16,"seed":4}"#,
+    ));
+    let pts: Vec<String> = (0..48)
+        .map(|i| format!("[{},1.0,{}]", i as f32 * 0.125, 0.5 * i as f32))
+        .collect();
+    ok(&req(
+        &mut conn,
+        &mut reader,
+        &format!("{{\"op\":\"ingest\",\"model\":\"m\",\"points\":[{}]}}", pts.join(",")),
+    ));
+    ok(&req(&mut conn, &mut reader, r#"{"op":"step","model":"m","rounds":3}"#));
+    let probe = r#"{"op":"predict","model":"m","points":[[0.5,1.0,-0.25]]}"#;
+    let baseline = req(&mut conn, &mut reader, probe);
+    ok(&baseline);
+
+    // arm idle eviction and wait for the acceptor tick to fire it
+    // (poll the registry, not the process-global eviction counter —
+    // other tests in this binary evict too)
+    let rl_before = serve_metrics().model_reloads.get();
+    reg.set_idle_evict(Some(Duration::from_millis(50)));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !reg.is_empty() {
+        assert!(
+            Instant::now() < deadline,
+            "lifecycle tick never evicted the idle model"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    reg.set_idle_evict(None); // stop the churn before reloading
+    assert!(
+        snapdir.join("evicted-m.json").is_file(),
+        "eviction left no checkpoint"
+    );
+
+    // the same live connection transparently reloads it, bit-exact
+    let after = req(&mut conn, &mut reader, probe);
+    assert_eq!(after, baseline, "reloaded predict differs from pre-eviction");
+    assert!(
+        serve_metrics().model_reloads.get() > rl_before,
+        "reload not accounted"
+    );
+
+    shutdown(addr);
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&snapdir);
+}
+
+/// With a WAL attached, eviction checkpoints through the log: the
+/// evicted model's only copy is its `ckpt-*.json`, which must survive
+/// a *later* checkpoint's manifest + GC (cut while the model is not
+/// resident) and come back bit-identically — by lazy reload and by a
+/// full recovery into a fresh registry.
+#[test]
+fn wal_checkpointed_eviction_survives_later_checkpoints_and_restart() {
+    let data = GaussianMixture::default_spec(4, 6).generate(200, 13);
+    let dir = tmpdir("wal-evict");
+    let reg = ModelRegistry::new();
+    let rec = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &reg).unwrap();
+    reg.attach_wal(rec.wal.clone());
+
+    for name in ["m1", "m2"] {
+        exec(
+            &reg,
+            &Request::Create {
+                model: Some(name.to_string()),
+                dim: data.dim(),
+                cfg: cfg(4, 16),
+            },
+        );
+        exec(
+            &reg,
+            &Request::Ingest {
+                model: Some(name.to_string()),
+                points: rows(&data, 0, 90),
+                rounds: 3,
+                seconds: f64::INFINITY,
+            },
+        );
+    }
+    let bytes_of = |reg: &ModelRegistry, name: &str| {
+        reg.resolve(Some(name))
+            .unwrap()
+            .with_session(|s| Ok(s.snapshot(true)?.to_json().to_string()))
+            .unwrap()
+    };
+    let want1 = bytes_of(&reg, "m1");
+    let want2 = bytes_of(&reg, "m2");
+
+    // evict m1: the WAL checkpoint is its only copy now
+    assert!(reg.evict_model("m1").unwrap(), "m1 eviction refused");
+    assert!(dir.join("ckpt-m1.json").is_file());
+    assert!(reg.resolve(Some("m2")).is_ok() && reg.list().len() == 1);
+
+    // lazy reload is bit-identical
+    assert_eq!(bytes_of(&reg, "m1"), want1);
+
+    // evict both; m2's checkpoint is cut while m1 is *not* resident —
+    // the manifest must still list m1 and the GC must keep its file
+    assert!(reg.evict_model("m1").unwrap());
+    assert!(reg.evict_model("m2").unwrap(), "m2 eviction refused");
+    assert!(reg.is_empty());
+    assert!(
+        dir.join("ckpt-m1.json").is_file(),
+        "later checkpoint GC deleted the evicted model's only copy"
+    );
+
+    // a fresh process recovers both models bit-identically
+    let revived = ModelRegistry::new();
+    let rec2 = wal::recover(&dir, FsyncPolicy::Always, NO_CKPT, &revived).unwrap();
+    assert_eq!(rec2.resumed_models, 2, "evicted model lost across restart");
+    revived.attach_wal(rec2.wal.clone());
+    assert_eq!(bytes_of(&revived, "m1"), want1);
+    assert_eq!(bytes_of(&revived, "m2"), want2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -9,13 +9,16 @@
 //! connection while the pipeline is full.
 
 use nmbkm::config::{Algo, Rho, RunConfig};
+use nmbkm::data::gaussian::GaussianMixture;
 use nmbkm::data::{Data, Storage};
 use nmbkm::serve::observe::serve_metrics;
+use nmbkm::serve::server::{serve_listener_with, ServeOptions};
 use nmbkm::serve::{frame, session, ModelRegistry};
 use nmbkm::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn cfg(k: usize, b0: usize, rounds: usize) -> RunConfig {
     RunConfig {
@@ -211,5 +214,353 @@ fn pipelined_binary_frames_stay_ordered_and_bit_exact_under_load() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("\"ok\":true"), "{line}");
+    server.join().unwrap();
+}
+
+fn dense_session(k: usize, seed: u64) -> session::OnlineSession {
+    let data = GaussianMixture::default_spec(k, 4).generate(500, seed);
+    session::train(&data, &cfg(k, 128, 4)).unwrap().0
+}
+
+/// Shut a server down over a fresh JSONL connection, retrying while
+/// the admission cap is still reaping recently-closed peers.
+fn shutdown_server(addr: std::net::SocketAddr) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.contains("\"ok\":true") {
+            return;
+        }
+        assert!(line.contains("overloaded"), "{line}");
+        assert!(Instant::now() < deadline, "shutdown never admitted");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// A peer that pumps hundreds of large predicts without reading a byte
+/// back must trip the per-connection write-queue cap: the server stops
+/// reading from it (bounding memory at the cap, not at the pipeline
+/// size) while an interactive peer on the same server keeps getting
+/// prompt answers. When the slow reader finally drains, every response
+/// arrives in order, bit-identical to the unloaded reference.
+#[test]
+fn slow_reader_backpressure_isolates_fast_peers_and_stays_bit_exact() {
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            return;
+        }
+    };
+    let addr = listener.local_addr().unwrap();
+    let reg = Arc::new(ModelRegistry::with_default(dense_session(8, 3)));
+    let server = std::thread::spawn(move || {
+        serve_listener_with(
+            reg,
+            listener,
+            ServeOptions {
+                accept_binary: true,
+                conn_timeout: None,
+                write_queue_cap: 64 << 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    });
+
+    // one 4096-row predict frame: its ~32 KiB response overflows the
+    // 64 KiB write queue after a couple of unread answers
+    let queries: Vec<Vec<f32>> = (0..4096)
+        .map(|i| {
+            let x = (i % 97) as f32 * 0.03125;
+            vec![x, 1.0 - x, 0.5 * x, -0.25]
+        })
+        .collect();
+    let body = frame::encode_dense_points(4, &queries).unwrap();
+    let mut big_frame = Vec::new();
+    frame::write_frame(
+        &mut big_frame,
+        &Json::parse(r#"{"op":"predict"}"#).unwrap(),
+        &body,
+    )
+    .unwrap();
+
+    // unloaded reference answer
+    let (ref_lbl, ref_bits) = {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(&[frame::MAGIC]).unwrap();
+        conn.write_all(&big_frame).unwrap();
+        let mut reader = BufReader::new(conn);
+        let (h, body) = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+        let (lbl, d2) = frame::decode_predict_body(&body).unwrap();
+        (lbl, d2.iter().map(|x| x.to_bits()).collect::<Vec<u32>>())
+    };
+
+    let bp_before = serve_metrics().conn_backpressure.get();
+
+    // the slow reader: a writer thread force-feeds 400 frames and never
+    // reads; ~13 MiB of responses must queue behind a 64 KiB cap
+    const PUMP: usize = 400;
+    let slow = TcpStream::connect(addr).unwrap();
+    let mut slow_writer = slow.try_clone().unwrap();
+    let pump_frame = big_frame.clone();
+    let writer = std::thread::spawn(move || {
+        slow_writer.write_all(&[frame::MAGIC]).unwrap();
+        for _ in 0..PUMP {
+            slow_writer.write_all(&pump_frame).unwrap();
+        }
+        slow_writer.flush().unwrap();
+    });
+
+    // the fast peer: sequential JSONL predicts must answer promptly the
+    // whole time the slow reader is jamming its own queue
+    let mut fast = TcpStream::connect(addr).unwrap();
+    fast.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut fast_reader = BufReader::new(fast.try_clone().unwrap());
+    let mut line = String::new();
+    for t in 0..25 {
+        fast.write_all(b"{\"op\":\"predict\",\"points\":[[0.5,0.25,-1.0,2.0]]}\n")
+            .unwrap();
+        line.clear();
+        fast_reader
+            .read_line(&mut line)
+            .unwrap_or_else(|e| panic!("fast peer starved at request {t}: {e}"));
+        assert!(line.contains("\"ok\":true"), "fast peer request {t}: {line}");
+    }
+
+    // the cap must actually have engaged
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while serve_metrics().conn_backpressure.get() == bp_before {
+        assert!(
+            Instant::now() < deadline,
+            "write-queue cap never triggered backpressure"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // drain the slow connection: all 400 responses, in order, bit-exact
+    let mut reader = BufReader::new(slow);
+    for t in 0..PUMP {
+        let (h, body) = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "frame {t}: {h:?}");
+        let (lbl, d2) = frame::decode_predict_body(&body).unwrap();
+        assert_eq!(lbl, ref_lbl, "frame {t}: labels drifted under backpressure");
+        assert_eq!(
+            d2.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            ref_bits,
+            "frame {t}: d2 bits drifted under backpressure"
+        );
+    }
+    writer.join().unwrap();
+
+    shutdown_server(addr);
+    server.join().unwrap();
+}
+
+/// Admission control under a hostile burst: over-cap connections and
+/// oversized requests get structured `overloaded` errors (never a
+/// hang), surviving streams keep working, and a separate max-inflight
+/// server refuses over-limit dispatches while still answering in-limit
+/// ones.
+#[test]
+fn overload_bursts_get_structured_errors_and_streams_survive() {
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(_) => {
+            eprintln!("skipping: cannot bind loopback");
+            return;
+        }
+    };
+    let addr = listener.local_addr().unwrap();
+    // empty registry: `list` is the liveness probe
+    let reg = Arc::new(ModelRegistry::new());
+    let server = std::thread::spawn(move || {
+        serve_listener_with(
+            reg,
+            listener,
+            ServeOptions {
+                accept_binary: false,
+                conn_timeout: None,
+                max_conns: 3,
+                max_request_bytes: 4096,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    });
+
+    let list_ok = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>| {
+        conn.write_all(b"{\"op\":\"list\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+    };
+
+    // fill the admission cap
+    let mut admitted: Vec<(TcpStream, BufReader<TcpStream>)> = (0..3)
+        .map(|_| {
+            let conn = TcpStream::connect(addr).unwrap();
+            let reader = BufReader::new(conn.try_clone().unwrap());
+            (conn, reader)
+        })
+        .collect();
+    for (conn, reader) in admitted.iter_mut() {
+        list_ok(conn, reader);
+    }
+
+    // the 4th peer is refused with a structured error, then closed
+    let over_before = serve_metrics().overloaded_conns.get();
+    {
+        let conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("overloaded"), "{line}");
+        assert!(line.contains("--max-conns=3"), "{line}");
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected close");
+    }
+    assert!(serve_metrics().overloaded_conns.get() > over_before);
+
+    // an oversized line is refused and the stream survives
+    let bytes_before = serve_metrics().overloaded_bytes.get();
+    {
+        let (conn, reader) = &mut admitted[0];
+        let fat = format!("{{\"op\":\"list\",\"pad\":\"{}\"}}\n", "x".repeat(8192));
+        conn.write_all(fat.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("overloaded"), "{line}");
+        assert!(line.contains("--max-request-bytes=4096"), "{line}");
+        list_ok(conn, reader);
+    }
+    assert!(serve_metrics().overloaded_bytes.get() > bytes_before);
+
+    // closing an admitted peer frees a slot (the close is asynchronous:
+    // retry until the server has seen it)
+    drop(admitted.pop());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"{\"op\":\"list\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.contains("\"ok\":true") {
+            break;
+        }
+        assert!(
+            line.contains("overloaded"),
+            "unexpected reply while waiting for a free slot: {line}"
+        );
+        assert!(
+            Instant::now() < deadline,
+            "closed connection never freed an admission slot"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    drop(admitted);
+    shutdown_server(addr);
+    server.join().unwrap();
+
+    // --- max-inflight on its own server: a 16-connection pipelined
+    // burst must see at least one refusal and at least one answer, and
+    // every stream stays intact (50 replies per connection)
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reg = Arc::new(ModelRegistry::with_default(dense_session(4, 11)));
+    let server = std::thread::spawn(move || {
+        serve_listener_with(
+            reg,
+            listener,
+            ServeOptions {
+                accept_binary: false,
+                conn_timeout: None,
+                max_inflight: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    });
+
+    let row = "[0.5,0.25,-1.0,2.0]";
+    let burst_line = format!(
+        "{{\"op\":\"predict\",\"points\":[{}]}}\n",
+        vec![row; 256].join(",")
+    );
+    const CLIENTS: usize = 16;
+    const PER_CONN: usize = 50;
+    let burst_line = Arc::new(burst_line);
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let line_bytes = burst_line.clone();
+            std::thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                for _ in 0..PER_CONN {
+                    conn.write_all(line_bytes.as_bytes()).unwrap();
+                }
+                conn.flush().unwrap();
+                let (mut ok, mut over) = (0usize, 0usize);
+                let mut line = String::new();
+                for t in 0..PER_CONN {
+                    line.clear();
+                    let n = reader.read_line(&mut line).unwrap();
+                    assert!(n > 0, "stream died after {t} replies");
+                    if line.contains("\"ok\":true") {
+                        ok += 1;
+                    } else {
+                        assert!(
+                            line.contains("overloaded")
+                                && line.contains("--max-inflight=1"),
+                            "reply {t}: {line}"
+                        );
+                        over += 1;
+                    }
+                }
+                (ok, over)
+            })
+        })
+        .collect();
+    let (mut ok_total, mut over_total) = (0usize, 0usize);
+    for h in handles {
+        let (ok, over) = h.join().unwrap();
+        ok_total += ok;
+        over_total += over;
+    }
+    assert_eq!(ok_total + over_total, CLIENTS * PER_CONN);
+    assert!(ok_total >= 1, "nothing got through the inflight gate");
+    assert!(
+        over_total >= 1,
+        "an 800-request pipelined burst never tripped --max-inflight=1"
+    );
+
+    // after the burst, a sequential predict answers normally (retry:
+    // the last inflight slot may release a beat after its reply lands)
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        conn.write_all(b"{\"op\":\"predict\",\"points\":[[0.5,0.25,-1.0,2.0]]}\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.contains("\"ok\":true") {
+            break;
+        }
+        assert!(line.contains("overloaded"), "{line}");
+        assert!(Instant::now() < deadline, "inflight gate never released");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    shutdown_server(addr);
     server.join().unwrap();
 }
