@@ -189,7 +189,7 @@ fn main() {
     let tc = TransposedCentroids::build(&skcent.c);
     let sm = match &skdata.storage {
         Storage::Sparse(m) => m,
-        Storage::Dense(_) => unreachable!("rcv1 sim generates CSR data"),
+        _ => unreachable!("rcv1 sim generates CSR data"),
     };
     let mut set = BenchSet::new("sparse kernels (rcv1 4k rows, k=64)", opts);
     set.bench("spdot row pass (gather)", || {

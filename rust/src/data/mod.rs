@@ -6,16 +6,25 @@
 pub mod gaussian;
 pub mod infmnist;
 pub mod rcv1;
+pub mod shard;
 pub mod shuffle;
 
 use crate::linalg::dense::{self, DenseMatrix};
 use crate::linalg::sparse::{self, CsrMatrix};
+use shard::{BlockRows, ShardData};
 
 /// Physical storage of a dataset.
+///
+/// `Shard` is a disk-backed variant (see [`shard`]): row payloads live
+/// in an on-disk shard file behind a bounded block cache, while the
+/// `Data`-level norms stay resident. Row accessors fetch the owning
+/// block and delegate to exactly the same dense/sparse kernels as the
+/// in-RAM variants, so results are bit-identical.
 #[derive(Clone, Debug)]
 pub enum Storage {
     Dense(DenseMatrix),
     Sparse(CsrMatrix),
+    Shard(ShardData),
 }
 
 /// A dataset: storage + precomputed squared row norms (`‖x_i‖²`), the
@@ -41,6 +50,7 @@ impl Data {
         match &self.storage {
             Storage::Dense(m) => m.rows,
             Storage::Sparse(m) => m.rows,
+            Storage::Shard(s) => s.n(),
         }
     }
 
@@ -48,11 +58,23 @@ impl Data {
         match &self.storage {
             Storage::Dense(m) => m.cols,
             Storage::Sparse(m) => m.cols,
+            Storage::Shard(s) => s.dim(),
         }
     }
 
+    /// Whether rows are CSR-encoded (true for sparse-kind shards too —
+    /// kernel and wire paths branch on row encoding, not residency).
     pub fn is_sparse(&self) -> bool {
-        matches!(self.storage, Storage::Sparse(_))
+        match &self.storage {
+            Storage::Dense(_) => false,
+            Storage::Sparse(_) => true,
+            Storage::Shard(s) => s.is_sparse(),
+        }
+    }
+
+    /// Whether rows live in a disk shard rather than RAM.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.storage, Storage::Shard(_))
     }
 
     /// Squared distance from point `i` to a dense centroid row.
@@ -65,6 +87,18 @@ impl Data {
             Storage::Sparse(m) => {
                 let (idx, vals) = m.row(i);
                 sparse::sq_dist_sparse(idx, vals, self.norms[i], c, cn)
+            }
+            Storage::Shard(s) => {
+                let (blk, r) = s.fetch(i);
+                match &*blk {
+                    BlockRows::Dense(m) => {
+                        dense::sq_dist_norms(m.row(r), self.norms[i], c, cn)
+                    }
+                    BlockRows::Sparse(m) => {
+                        let (idx, vals) = m.row(r);
+                        sparse::sq_dist_sparse(idx, vals, self.norms[i], c, cn)
+                    }
+                }
             }
         }
     }
@@ -80,6 +114,18 @@ impl Data {
                 let (idx, vals) = m.row(i);
                 sparse::nearest_sparse(idx, vals, self.norms[i], c, cnorms)
             }
+            Storage::Shard(s) => {
+                let (blk, r) = s.fetch(i);
+                match &*blk {
+                    BlockRows::Dense(m) => {
+                        dense::nearest(m.row(r), self.norms[i], c, cnorms)
+                    }
+                    BlockRows::Sparse(m) => {
+                        let (idx, vals) = m.row(r);
+                        sparse::nearest_sparse(idx, vals, self.norms[i], c, cnorms)
+                    }
+                }
+            }
         }
     }
 
@@ -92,6 +138,16 @@ impl Data {
                 let (idx, vals) = m.row(i);
                 sparse::scatter_add(acc, idx, vals);
             }
+            Storage::Shard(s) => {
+                let (blk, r) = s.fetch(i);
+                match &*blk {
+                    BlockRows::Dense(m) => dense::add_into(acc, m.row(r)),
+                    BlockRows::Sparse(m) => {
+                        let (idx, vals) = m.row(r);
+                        sparse::scatter_add(acc, idx, vals);
+                    }
+                }
+            }
         }
     }
 
@@ -103,6 +159,16 @@ impl Data {
             Storage::Sparse(m) => {
                 let (idx, vals) = m.row(i);
                 sparse::scatter_sub(acc, idx, vals);
+            }
+            Storage::Shard(s) => {
+                let (blk, r) = s.fetch(i);
+                match &*blk {
+                    BlockRows::Dense(m) => dense::sub_from(acc, m.row(r)),
+                    BlockRows::Sparse(m) => {
+                        let (idx, vals) = m.row(r);
+                        sparse::scatter_sub(acc, idx, vals);
+                    }
+                }
             }
         }
     }
@@ -120,24 +186,121 @@ impl Data {
                     out[idx[t] as usize] = vals[t];
                 }
             }
+            Storage::Shard(s) => {
+                let (blk, r) = s.fetch(i);
+                match &*blk {
+                    BlockRows::Dense(m) => out.copy_from_slice(m.row(r)),
+                    BlockRows::Sparse(m) => {
+                        out.fill(0.0);
+                        let (idx, vals) = m.row(r);
+                        for t in 0..idx.len() {
+                            out[idx[t] as usize] = vals[t];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Materialise the given rows (in iteration order) into an owned
+    /// in-RAM `Data` of the same row encoding, reusing the stored
+    /// norms. This is how shard-backed chunks are staged for the
+    /// blocked assignment kernels: same values, same norms, same order
+    /// → bit-identical results.
+    pub fn gather_rows(&self, picks: impl Iterator<Item = usize>) -> Data {
+        let dim = self.dim();
+        let mut norms = Vec::new();
+        // Memoise the last block so consecutive picks from the same
+        // block take the store lock once.
+        let mut memo: Option<(usize, std::sync::Arc<BlockRows>)> = None;
+        let mut block_row = |s: &ShardData, i: usize| -> (std::sync::Arc<BlockRows>, usize) {
+            let b = i / shard::BLOCK_ROWS;
+            match &memo {
+                Some((mb, arc)) if *mb == b && i % shard::BLOCK_ROWS < arc.rows() => {
+                    (arc.clone(), i % shard::BLOCK_ROWS)
+                }
+                _ => {
+                    let (arc, r) = s.fetch(i);
+                    memo = Some((b, arc.clone()));
+                    (arc, r)
+                }
+            }
+        };
+        if self.is_sparse() {
+            let mut m = CsrMatrix::empty(dim);
+            for i in picks {
+                norms.push(self.norms[i]);
+                match &self.storage {
+                    Storage::Sparse(src) => {
+                        let (idx, vals) = src.row(i);
+                        m.push_row_parts(idx, vals);
+                    }
+                    Storage::Shard(s) => {
+                        let (blk, r) = block_row(s, i);
+                        match &*blk {
+                            BlockRows::Sparse(src) => {
+                                let (idx, vals) = src.row(r);
+                                m.push_row_parts(idx, vals);
+                            }
+                            BlockRows::Dense(_) => unreachable!(),
+                        }
+                    }
+                    Storage::Dense(_) => unreachable!(),
+                }
+            }
+            Data { storage: Storage::Sparse(m), norms }
+        } else {
+            let mut buf = Vec::new();
+            let mut rows = 0usize;
+            for i in picks {
+                norms.push(self.norms[i]);
+                rows += 1;
+                match &self.storage {
+                    Storage::Dense(src) => buf.extend_from_slice(src.row(i)),
+                    Storage::Shard(s) => {
+                        let (blk, r) = block_row(s, i);
+                        match &*blk {
+                            BlockRows::Dense(src) => buf.extend_from_slice(src.row(r)),
+                            BlockRows::Sparse(_) => unreachable!(),
+                        }
+                    }
+                    Storage::Sparse(_) => unreachable!(),
+                }
+            }
+            Data { storage: Storage::Dense(DenseMatrix::from_vec(rows, dim, buf)), norms }
+        }
+    }
+
+    /// An in-RAM copy of this dataset (identity for already-resident
+    /// storage). Serialisation paths (snapshots, wire) go through this
+    /// so a shard-backed session writes byte-identical artifacts to an
+    /// in-RAM one.
+    pub fn to_resident(&self) -> Data {
+        match &self.storage {
+            Storage::Shard(_) => self.gather_rows(0..self.n()),
+            _ => self.clone(),
         }
     }
 
     /// Materialise a row permutation (norms re-used, not recomputed).
+    /// Shard-backed data materialises to RAM first — only the batch
+    /// harness shuffles, and it owns its dataset.
     pub fn permute(&self, perm: &[usize]) -> Data {
         let norms = perm.iter().map(|&p| self.norms[p]).collect();
         let storage = match &self.storage {
             Storage::Dense(m) => Storage::Dense(m.permute_rows(perm)),
             Storage::Sparse(m) => Storage::Sparse(m.permute_rows(perm)),
+            Storage::Shard(_) => return self.gather_rows(perm.iter().copied()),
         };
         Data { storage, norms }
     }
 
-    /// Rows `[lo, hi)` as a new dataset.
+    /// Rows `[lo, hi)` as a new dataset (shard rows materialise).
     pub fn slice(&self, lo: usize, hi: usize) -> Data {
         let storage = match &self.storage {
             Storage::Dense(m) => Storage::Dense(m.slice_rows(lo, hi)),
             Storage::Sparse(m) => Storage::Sparse(m.slice_rows(lo, hi)),
+            Storage::Shard(_) => return self.gather_rows(lo..hi),
         };
         Data { storage, norms: self.norms[lo..hi].to_vec() }
     }

@@ -1,0 +1,706 @@
+//! Disk-backed row shards: bounded-memory storage for bigger-than-RAM
+//! ingestion.
+//!
+//! A [`ShardStore`] spills rows to a versioned on-disk shard file as
+//! they arrive and reads them back on demand through a small pinned
+//! LRU block cache, so a session's resident row payload is bounded by
+//! `--max-resident-rows` instead of the dataset size. Row bytes round-
+//! trip exactly through the [`serve::wire`](crate::serve::wire) row
+//! codec (f32 little-endian, no re-quantisation), and squared row
+//! norms stay resident and are accumulated at push time in the same
+//! coordinate order as the in-RAM paths — which is what makes the
+//! nested mini-batch schedule over a shard **bit-identical** to the
+//! in-RAM run (property-tested in `tests/ooc_parity.rs`).
+//!
+//! File layout (all little-endian):
+//!
+//! ```text
+//! header (16 B): magic "NMBKMSH1" | version u8 = 1 | kind u8 (1 dense, 2 sparse)
+//!                | 2 reserved | dim u32
+//! blocks:        [rows u32][bytes u32][payload]  (repeated)
+//! ```
+//!
+//! Every sealed block holds exactly [`BLOCK_ROWS`] rows (so row → block
+//! indexing is a division) and its payload is an
+//! [`encode_rows`](crate::serve::wire::encode_rows) batch. The
+//! still-filling tail block lives in RAM and is sealed — encoded,
+//! appended with `write_all_at`, and retired into the cache — when it
+//! fills. A torn tail from a crash mid-seal is rejected by
+//! [`ShardStore::open`]; recovery recreates the spill from snapshot +
+//! WAL, which is the durability story anyway (the shard file is a
+//! cache of row payloads, not a system of record — it is deleted on
+//! drop).
+
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::sparse::CsrMatrix;
+use crate::serve::wire::{self, WireRow};
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Read;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Shard file magic ("NMBKM SHard v1").
+pub const SHARD_MAGIC: &[u8; 8] = b"NMBKMSH1";
+/// Fixed shard header length in bytes.
+pub const SHARD_HEADER_LEN: usize = 16;
+/// Rows per sealed block. Power of two so `i / BLOCK_ROWS` is a shift.
+pub const BLOCK_ROWS: usize = 1024;
+/// Per-block on-disk header: rows u32 | payload bytes u32.
+const BLOCK_HEADER_LEN: usize = 8;
+/// Minimum encoded size of one row: tag u8 + dim u32 + (one f32 value
+/// for dense `dim ≥ 1`, or nnz u32 for sparse). Used as a plausibility
+/// floor when validating declared block sizes before allocating.
+const MIN_ROW_BYTES: usize = 9;
+
+/// Row representation of a shard (mirrors `Storage` minus the shard
+/// variant itself).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKind {
+    Dense,
+    Sparse,
+}
+
+impl ShardKind {
+    fn tag(self) -> u8 {
+        match self {
+            ShardKind::Dense => 1,
+            ShardKind::Sparse => 2,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        match t {
+            1 => Ok(ShardKind::Dense),
+            2 => Ok(ShardKind::Sparse),
+            other => bail!("shard header: unknown kind tag {other}"),
+        }
+    }
+}
+
+/// A decoded block of consecutive rows, shared read-only via `Arc` so
+/// a fetch hands back a zero-copy view into cached storage.
+#[derive(Clone, Debug)]
+pub enum BlockRows {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl BlockRows {
+    fn empty(kind: ShardKind, dim: usize) -> Self {
+        match kind {
+            ShardKind::Dense => BlockRows::Dense(DenseMatrix::zeros(0, dim)),
+            ShardKind::Sparse => BlockRows::Sparse(CsrMatrix::empty(dim)),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            BlockRows::Dense(m) => m.rows,
+            BlockRows::Sparse(m) => m.rows,
+        }
+    }
+}
+
+/// Offset + payload size of a sealed block (always [`BLOCK_ROWS`] rows).
+#[derive(Clone, Copy, Debug)]
+struct BlockMeta {
+    offset: u64,
+    bytes: u32,
+}
+
+#[derive(Debug)]
+struct Inner {
+    file: File,
+    append_at: u64,
+    blocks: Vec<BlockMeta>,
+    /// Still-filling tail (< BLOCK_ROWS rows). `Arc` so readers hold a
+    /// stable view; appends go through `Arc::make_mut`, which clones
+    /// only if a reader is currently borrowing the tail.
+    tail: Arc<BlockRows>,
+    rows: usize,
+    /// LRU cache of decoded sealed blocks, most recently used last.
+    cache: Vec<(usize, Arc<BlockRows>)>,
+    /// High-water mark of `cache.len()`, for budget-boundedness tests.
+    peak_cached: usize,
+    /// Sealed-block reads served from disk (cache misses).
+    disk_reads: u64,
+    scratch: Vec<u8>,
+}
+
+/// A disk-backed row store. Interior-mutable behind a `Mutex` so an
+/// `Arc<ShardStore>` can be shared between a `Data` view and the
+/// session that keeps appending to it.
+#[derive(Debug)]
+pub struct ShardStore {
+    path: PathBuf,
+    kind: ShardKind,
+    dim: usize,
+    cache_cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ShardStore {
+    /// Create (or truncate) a shard file. `max_resident_rows` is the
+    /// pinned-block budget: the cache keeps at most
+    /// `max(2, max_resident_rows / BLOCK_ROWS)` decoded blocks.
+    pub fn create(
+        path: &Path,
+        kind: ShardKind,
+        dim: usize,
+        max_resident_rows: usize,
+    ) -> Result<Self> {
+        ensure!(dim >= 1, "shard dim must be >= 1");
+        ensure!(dim <= u32::MAX as usize, "shard dim {dim} exceeds u32");
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("create shard {}", path.display()))?;
+        let mut header = [0u8; SHARD_HEADER_LEN];
+        header[..8].copy_from_slice(SHARD_MAGIC);
+        header[8] = 1; // version
+        header[9] = kind.tag();
+        header[12..16].copy_from_slice(&(dim as u32).to_le_bytes());
+        file.write_all_at(&header, 0)
+            .with_context(|| format!("write shard header {}", path.display()))?;
+        Ok(Self::from_parts(path, kind, dim, max_resident_rows, file, vec![]))
+    }
+
+    /// Open an existing shard file, validating the header and every
+    /// block's declared geometry against the file length **before**
+    /// allocating anything for it. A torn or hostile file errors out
+    /// cleanly here rather than at first fetch.
+    pub fn open(path: &Path, max_resident_rows: usize) -> Result<Self> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open shard {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat shard {}", path.display()))?
+            .len();
+        ensure!(
+            len >= SHARD_HEADER_LEN as u64,
+            "shard {}: {len} bytes is shorter than the {SHARD_HEADER_LEN}-byte header",
+            path.display()
+        );
+        let mut header = [0u8; SHARD_HEADER_LEN];
+        file.read_exact(&mut header)
+            .with_context(|| format!("read shard header {}", path.display()))?;
+        ensure!(&header[..8] == SHARD_MAGIC, "shard {}: bad magic", path.display());
+        ensure!(header[8] == 1, "shard {}: unknown version {}", path.display(), header[8]);
+        let kind = ShardKind::from_tag(header[9])
+            .with_context(|| format!("shard {}", path.display()))?;
+        let dim = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+        ensure!(dim >= 1, "shard {}: dim 0", path.display());
+
+        let mut blocks = Vec::new();
+        let mut at = SHARD_HEADER_LEN as u64;
+        while at < len {
+            ensure!(
+                len - at >= BLOCK_HEADER_LEN as u64,
+                "shard {}: truncated block header at byte {at}",
+                path.display()
+            );
+            let mut bh = [0u8; BLOCK_HEADER_LEN];
+            file.read_exact_at(&mut bh, at)
+                .with_context(|| format!("read block header {}", path.display()))?;
+            let rows = u32::from_le_bytes(bh[..4].try_into().unwrap()) as usize;
+            let bytes = u32::from_le_bytes(bh[4..].try_into().unwrap());
+            ensure!(
+                rows == BLOCK_ROWS,
+                "shard {}: block at byte {at} declares {rows} rows (sealed blocks hold {BLOCK_ROWS})",
+                path.display()
+            );
+            // Reject a declared payload that overflows the mapped
+            // length or is too small to hold its row count, before any
+            // allocation is sized from it.
+            ensure!(
+                bytes as u64 <= len - at - BLOCK_HEADER_LEN as u64,
+                "shard {}: block at byte {at} declares {bytes} payload bytes past EOF",
+                path.display()
+            );
+            ensure!(
+                bytes as usize >= 4 + rows * MIN_ROW_BYTES,
+                "shard {}: block at byte {at} declares {bytes} bytes for {rows} rows",
+                path.display()
+            );
+            blocks.push(BlockMeta { offset: at + BLOCK_HEADER_LEN as u64, bytes });
+            at += BLOCK_HEADER_LEN as u64 + bytes as u64;
+        }
+        Ok(Self::from_parts(path, kind, dim, max_resident_rows, file, blocks))
+    }
+
+    fn from_parts(
+        path: &Path,
+        kind: ShardKind,
+        dim: usize,
+        max_resident_rows: usize,
+        file: File,
+        blocks: Vec<BlockMeta>,
+    ) -> Self {
+        let append_at = blocks
+            .last()
+            .map(|b| b.offset + b.bytes as u64)
+            .unwrap_or(SHARD_HEADER_LEN as u64);
+        let rows = blocks.len() * BLOCK_ROWS;
+        Self {
+            path: path.to_path_buf(),
+            kind,
+            dim,
+            cache_cap: (max_resident_rows / BLOCK_ROWS).max(2),
+            inner: Mutex::new(Inner {
+                file,
+                append_at,
+                blocks,
+                tail: Arc::new(BlockRows::empty(kind, dim)),
+                rows,
+                cache: Vec::new(),
+                peak_cached: 0,
+                disk_reads: 0,
+                scratch: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn kind(&self) -> ShardKind {
+        self.kind
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn rows(&self) -> usize {
+        self.inner.lock().unwrap().rows
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Pinned-block budget: max decoded sealed blocks kept resident.
+    pub fn cache_cap(&self) -> usize {
+        self.cache_cap
+    }
+
+    /// High-water mark of resident decoded blocks (cache + nothing
+    /// else; the tail is extra but bounded by one block).
+    pub fn peak_cached_blocks(&self) -> usize {
+        self.inner.lock().unwrap().peak_cached
+    }
+
+    /// Sealed-block fetches that had to hit the disk.
+    pub fn disk_reads(&self) -> u64 {
+        self.inner.lock().unwrap().disk_reads
+    }
+
+    /// Append one dense row. IO errors surface here (disk full), so
+    /// callers can fail the ingest instead of corrupting state later.
+    pub fn push_dense(&self, r: &[f32]) -> Result<()> {
+        assert_eq!(self.kind, ShardKind::Dense, "dense push into sparse shard");
+        assert_eq!(r.len(), self.dim);
+        let mut g = self.inner.lock().unwrap();
+        match Arc::make_mut(&mut g.tail) {
+            BlockRows::Dense(m) => {
+                m.data.extend_from_slice(r);
+                m.rows += 1;
+            }
+            BlockRows::Sparse(_) => unreachable!(),
+        }
+        g.rows += 1;
+        self.seal_if_full(&mut g)
+    }
+
+    /// Append one sparse row (columns strictly ascending, as the wire
+    /// validation layer guarantees).
+    pub fn push_sparse(&self, idx: &[u32], vals: &[f32]) -> Result<()> {
+        assert_eq!(self.kind, ShardKind::Sparse, "sparse push into dense shard");
+        let mut g = self.inner.lock().unwrap();
+        match Arc::make_mut(&mut g.tail) {
+            BlockRows::Sparse(m) => m.push_row_parts(idx, vals),
+            BlockRows::Dense(_) => unreachable!(),
+        }
+        g.rows += 1;
+        self.seal_if_full(&mut g)
+    }
+
+    fn seal_if_full(&self, g: &mut Inner) -> Result<()> {
+        if g.tail.rows() < BLOCK_ROWS {
+            return Ok(());
+        }
+        let mut payload = std::mem::take(&mut g.scratch);
+        payload.clear();
+        payload.extend_from_slice(&(BLOCK_ROWS as u32).to_le_bytes());
+        match &*g.tail {
+            BlockRows::Dense(m) => {
+                for i in 0..m.rows {
+                    wire::encode_dense_row_into(&mut payload, m.row(i));
+                }
+            }
+            BlockRows::Sparse(m) => {
+                for i in 0..m.rows {
+                    let (idx, vals) = m.row(i);
+                    wire::encode_sparse_row_into(&mut payload, self.dim, idx, vals);
+                }
+            }
+        }
+        ensure!(
+            payload.len() <= u32::MAX as usize,
+            "shard block payload {} bytes exceeds u32",
+            payload.len()
+        );
+        let mut framed = Vec::with_capacity(BLOCK_HEADER_LEN + payload.len());
+        framed.extend_from_slice(&(BLOCK_ROWS as u32).to_le_bytes());
+        framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&payload);
+        g.file
+            .write_all_at(&framed, g.append_at)
+            .with_context(|| format!("append shard block {}", self.path.display()))?;
+        let id = g.blocks.len();
+        g.blocks.push(BlockMeta {
+            offset: g.append_at + BLOCK_HEADER_LEN as u64,
+            bytes: payload.len() as u32,
+        });
+        g.append_at += framed.len() as u64;
+        g.scratch = payload;
+        // Retire the sealed tail into the cache still decoded — the
+        // freshest rows are exactly what the next nested mini-batch
+        // reads, so this keeps the hot path warm at zero decode cost.
+        let sealed = std::mem::replace(
+            &mut g.tail,
+            Arc::new(BlockRows::empty(self.kind, self.dim)),
+        );
+        self.cache_insert(g, id, sealed);
+        Ok(())
+    }
+
+    fn cache_insert(&self, g: &mut Inner, id: usize, block: Arc<BlockRows>) {
+        g.cache.push((id, block));
+        while g.cache.len() > self.cache_cap {
+            g.cache.remove(0);
+        }
+        g.peak_cached = g.peak_cached.max(g.cache.len());
+    }
+
+    /// Fetch the block holding row `i` plus the row's index within it.
+    /// Panics on IO/decode errors: by the time rows are being read the
+    /// file was validated at create/open, so a failure here is an
+    /// operational fault (disk yanked), not an input error.
+    pub fn fetch(&self, i: usize) -> (Arc<BlockRows>, usize) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(i < g.rows, "row {i} out of range ({} rows)", g.rows);
+        let sealed_rows = g.blocks.len() * BLOCK_ROWS;
+        if i >= sealed_rows {
+            return (g.tail.clone(), i - sealed_rows);
+        }
+        let id = i / BLOCK_ROWS;
+        if let Some(pos) = g.cache.iter().position(|(b, _)| *b == id) {
+            let entry = g.cache.remove(pos);
+            let arc = entry.1.clone();
+            g.cache.push(entry);
+            return (arc, i % BLOCK_ROWS);
+        }
+        let block = Arc::new(
+            self.read_block(&mut g, id)
+                .with_context(|| format!("shard {} block {id}", self.path.display()))
+                .expect("shard block read failed"),
+        );
+        g.disk_reads += 1;
+        self.cache_insert(&mut g, id, block.clone());
+        (block, i % BLOCK_ROWS)
+    }
+
+    fn read_block(&self, g: &mut Inner, id: usize) -> Result<BlockRows> {
+        let meta = g.blocks[id];
+        let mut payload = vec![0u8; meta.bytes as usize];
+        g.file.read_exact_at(&mut payload, meta.offset)?;
+        let rows = wire::decode_rows(&payload)?;
+        ensure!(rows.len() == BLOCK_ROWS, "block decoded {} rows", rows.len());
+        match self.kind {
+            ShardKind::Dense => {
+                let mut data = Vec::with_capacity(BLOCK_ROWS * self.dim);
+                for row in &rows {
+                    match row {
+                        WireRow::Dense(r) if r.len() == self.dim => {
+                            data.extend_from_slice(r)
+                        }
+                        WireRow::Dense(r) => {
+                            bail!("dense row dim {} != shard dim {}", r.len(), self.dim)
+                        }
+                        WireRow::Sparse { .. } => bail!("sparse row in dense shard"),
+                    }
+                }
+                Ok(BlockRows::Dense(DenseMatrix::from_vec(BLOCK_ROWS, self.dim, data)))
+            }
+            ShardKind::Sparse => {
+                let mut m = CsrMatrix::empty(self.dim);
+                for row in &rows {
+                    match row {
+                        WireRow::Sparse { dim, idx, vals } if *dim == self.dim => {
+                            m.push_row_parts(idx, vals)
+                        }
+                        WireRow::Sparse { dim, .. } => {
+                            bail!("sparse row dim {dim} != shard dim {}", self.dim)
+                        }
+                        WireRow::Dense(_) => bail!("dense row in sparse shard"),
+                    }
+                }
+                Ok(BlockRows::Sparse(m))
+            }
+        }
+    }
+}
+
+impl Drop for ShardStore {
+    fn drop(&mut self) {
+        // The shard is a spill cache, not a system of record; reclaim
+        // the disk when the last owner goes away.
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// A fixed-length view of a [`ShardStore`] — `Data`'s shard storage
+/// variant. The row count is frozen at clone time so snapshots and
+/// engine borrows don't observe rows appended after them, mirroring
+/// the value semantics of the in-RAM storages.
+#[derive(Clone, Debug)]
+pub struct ShardData {
+    store: Arc<ShardStore>,
+    rows: usize,
+}
+
+impl ShardData {
+    pub fn new(store: Arc<ShardStore>) -> Self {
+        let rows = store.rows();
+        Self { store, rows }
+    }
+
+    pub fn store(&self) -> &Arc<ShardStore> {
+        &self.store
+    }
+
+    pub fn n(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.store.kind() == ShardKind::Sparse
+    }
+
+    /// Fetch the block holding row `i` (must be within this view).
+    #[inline]
+    pub fn fetch(&self, i: usize) -> (Arc<BlockRows>, usize) {
+        assert!(i < self.rows, "row {i} out of shard view ({} rows)", self.rows);
+        self.store.fetch(i)
+    }
+
+    /// Append a dense row and grow this view to include it. Only the
+    /// up-to-date view (the ingesting session's) may append.
+    pub fn push_dense(&mut self, r: &[f32]) -> Result<()> {
+        assert_eq!(self.rows, self.store.rows(), "stale shard view cannot append");
+        self.store.push_dense(r)?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Append a sparse row and grow this view to include it.
+    pub fn push_sparse(&mut self, idx: &[u32], vals: &[f32]) -> Result<()> {
+        assert_eq!(self.rows, self.store.rows(), "stale shard view cannot append");
+        self.store.push_sparse(idx, vals)?;
+        self.rows += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("nmbkm-shard-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn dense_row(i: usize, dim: usize) -> Vec<f32> {
+        (0..dim).map(|c| (i * dim + c) as f32 * 0.25 - 3.0).collect()
+    }
+
+    #[test]
+    fn dense_rows_round_trip_across_blocks() {
+        let path = tmp("dense");
+        let dim = 7;
+        let n = 3 * BLOCK_ROWS + 17;
+        {
+            let store = ShardStore::create(&path, ShardKind::Dense, dim, 2 * BLOCK_ROWS).unwrap();
+            for i in 0..n {
+                store.push_dense(&dense_row(i, dim)).unwrap();
+            }
+            assert_eq!(store.rows(), n);
+            for &i in &[0, 1, BLOCK_ROWS - 1, BLOCK_ROWS, 2 * BLOCK_ROWS + 5, n - 1] {
+                let (blk, r) = store.fetch(i);
+                match &*blk {
+                    BlockRows::Dense(m) => assert_eq!(m.row(r), &dense_row(i, dim)[..]),
+                    _ => panic!("dense shard returned sparse block"),
+                }
+            }
+            // Cache stays within the pinned budget even after touching
+            // every sealed block.
+            for i in 0..n {
+                store.fetch(i);
+            }
+            assert!(store.peak_cached_blocks() <= store.cache_cap());
+            assert_eq!(store.cache_cap(), 2);
+        }
+        assert!(!path.exists(), "shard file must be removed on drop");
+    }
+
+    #[test]
+    fn sparse_rows_round_trip_and_reopen() {
+        let path = tmp("sparse");
+        let dim = 40;
+        let n = 2 * BLOCK_ROWS + 3;
+        let row = |i: usize| -> (Vec<u32>, Vec<f32>) {
+            // Two strictly ascending columns per row.
+            let idx = vec![(i % (dim - 1)) as u32, (dim - 1) as u32];
+            let vals = vec![i as f32 + 0.5, -(i as f32) * 0.125];
+            (idx, vals)
+        };
+        {
+            let store = ShardStore::create(&path, ShardKind::Sparse, dim, BLOCK_ROWS).unwrap();
+            for i in 0..n {
+                let (idx, vals) = row(i);
+                store.push_sparse(&idx, &vals).unwrap();
+            }
+            for &i in &[0, BLOCK_ROWS, 2 * BLOCK_ROWS, n - 1] {
+                let (blk, r) = store.fetch(i);
+                let (idx, vals) = row(i);
+                match &*blk {
+                    BlockRows::Sparse(m) => {
+                        assert_eq!(m.row(r), (&idx[..], &vals[..]));
+                    }
+                    _ => panic!("sparse shard returned dense block"),
+                }
+            }
+            // Keep the file for reopen: forget the store so Drop does
+            // not unlink it.
+            std::mem::forget(store);
+        }
+        {
+            let store = ShardStore::open(&path, BLOCK_ROWS).unwrap();
+            // Tail rows were never sealed: only full blocks survive.
+            assert_eq!(store.rows(), 2 * BLOCK_ROWS);
+            for &i in &[0, BLOCK_ROWS + 1, 2 * BLOCK_ROWS - 1] {
+                let (blk, r) = store.fetch(i);
+                let (idx, vals) = row(i);
+                match &*blk {
+                    BlockRows::Sparse(m) => assert_eq!(m.row(r), (&idx[..], &vals[..])),
+                    _ => unreachable!(),
+                }
+            }
+        }
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn stale_view_cannot_append_but_still_reads() {
+        let path = tmp("view");
+        let store = Arc::new(ShardStore::create(&path, ShardKind::Dense, 3, 4096).unwrap());
+        let mut live = ShardData::new(store.clone());
+        live.push_dense(&[1.0, 2.0, 3.0]).unwrap();
+        let frozen = live.clone();
+        live.push_dense(&[4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(frozen.n(), 1);
+        assert_eq!(live.n(), 2);
+        let (blk, r) = frozen.fetch(0);
+        match &*blk {
+            BlockRows::Dense(m) => assert_eq!(m.row(r), &[1.0, 2.0, 3.0]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn open_rejects_hostile_files() {
+        let dim = 4;
+        // Build a small valid shard (1 sealed block) to mutate.
+        let path = tmp("hostile-base");
+        let store = ShardStore::create(&path, ShardKind::Dense, dim, 4096).unwrap();
+        for i in 0..BLOCK_ROWS {
+            store.push_dense(&dense_row(i, dim)).unwrap();
+        }
+        let good = std::fs::read(&path).unwrap();
+        drop(store);
+        assert!(ShardStore::open(&path, 4096).is_err(), "file is gone after drop");
+
+        let write_variant = |name: &str, bytes: &[u8]| -> anyhow::Error {
+            let p = tmp(name);
+            std::fs::write(&p, bytes).unwrap();
+            let err = ShardStore::open(&p, 4096).expect_err("hostile shard must not open");
+            let _ = std::fs::remove_file(&p);
+            err
+        };
+
+        // Truncated header.
+        write_variant("h-short", &good[..10]);
+        // Bad magic.
+        let mut b = good.clone();
+        b[0] ^= 0xff;
+        write_variant("h-magic", &b);
+        // Unknown version.
+        let mut b = good.clone();
+        b[8] = 9;
+        write_variant("h-version", &b);
+        // Unknown kind tag.
+        let mut b = good.clone();
+        b[9] = 7;
+        write_variant("h-kind", &b);
+        // Block payload length pointing past EOF: must be rejected
+        // before sizing any allocation from it.
+        let mut b = good.clone();
+        let at = SHARD_HEADER_LEN;
+        b[at + 4..at + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = write_variant("h-overflow", &b);
+        assert!(format!("{err:#}").contains("past EOF"), "got: {err:#}");
+        // Implausibly small payload for the declared row count.
+        let mut b = good.clone();
+        b[at + 4..at + 8].copy_from_slice(&8u32.to_le_bytes());
+        write_variant("h-small", &b);
+        // Row count that is not a full block.
+        let mut b = good.clone();
+        b[at..at + 4].copy_from_slice(&3u32.to_le_bytes());
+        write_variant("h-rows", &b);
+        // Torn trailing block header.
+        let mut b = good.clone();
+        b.extend_from_slice(&[1, 2, 3]);
+        write_variant("h-torn", &b);
+    }
+
+    #[test]
+    fn corrupt_block_payload_fails_decode() {
+        let path = tmp("corrupt-payload");
+        let store = ShardStore::create(&path, ShardKind::Dense, 2, 4096).unwrap();
+        for i in 0..BLOCK_ROWS {
+            store.push_dense(&dense_row(i, 2)).unwrap();
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        drop(store);
+        // Corrupt a row tag inside the payload (first row's tag byte).
+        let tag_at = SHARD_HEADER_LEN + BLOCK_HEADER_LEN + 4;
+        bytes[tag_at] = 9;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = ShardStore::open(&path, 4096).unwrap();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| store.fetch(0)));
+        assert!(res.is_err(), "corrupt payload must fail the fetch");
+        drop(store);
+    }
+}

@@ -870,6 +870,27 @@ fn assign_serial(
     out_lbl: &mut [u32],
     out_d2: &mut [f32],
 ) {
+    if let Storage::Shard(_) = &data.storage {
+        // Disk-backed rows: stage this chunk's rows (same values, same
+        // norms, same order) into an owned in-RAM block and run the
+        // identical kernels over it — bit-identical to the in-RAM
+        // path, with temp memory bounded by the chunk size.
+        let local = data.gather_rows(range.clone().map(|t| sel.nth(t)));
+        let n = local.n();
+        return assign_serial(
+            &local,
+            &Sel::Range(0, n),
+            0..n,
+            centroids,
+            trans,
+            neigh,
+            strategy,
+            flat_centroids,
+            tally,
+            out_lbl,
+            out_d2,
+        );
+    }
     let use_exp =
         neigh.is_some() && matches!(strategy, Strategy::Auto | Strategy::Exponion);
     match (trans, &data.storage) {
@@ -1044,6 +1065,7 @@ fn assign_serial(
             let points = (range.end - range.start) as u64;
             flush_strategy(tally, S_FLAT, points, points * centroids.k() as u64);
         }
+        (_, Storage::Shard(_)) => unreachable!("shard chunks are staged above"),
     }
 }
 
@@ -1056,6 +1078,13 @@ fn dist_rows_serial(
     out: &mut [f32],
 ) {
     let k = centroids.k();
+    if let Storage::Shard(_) = &data.storage {
+        // Same staging trick as `assign_serial`: materialise the chunk
+        // and recurse on the in-RAM kernels.
+        let local = data.gather_rows(range.clone().map(|t| sel.nth(t)));
+        let n = local.n();
+        return dist_rows_serial(&local, &Sel::Range(0, n), 0..n, centroids, trans, out);
+    }
     match (trans, &data.storage) {
         (Some(tc), Storage::Sparse(m)) => {
             for (slot, t) in range.clone().enumerate() {
@@ -1117,6 +1146,7 @@ fn dist_rows_serial(
             }
             simd::note_dispatch(tier, blocks);
         }
+        (_, Storage::Shard(_)) => unreachable!("shard chunks are staged above"),
     }
 }
 

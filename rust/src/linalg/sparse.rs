@@ -35,6 +35,20 @@ impl CsrMatrix {
         self.indptr.push(self.indices.len());
     }
 
+    /// Append a row given parallel column/value slices (the layout
+    /// [`Self::row`] hands back), avoiding a pair-building pass when
+    /// copying rows between matrices.
+    pub fn push_row_parts(&mut self, idx: &[u32], vals: &[f32]) {
+        assert_eq!(idx.len(), vals.len());
+        for &c in idx {
+            assert!((c as usize) < self.cols, "column {c} out of range");
+        }
+        self.indices.extend_from_slice(idx);
+        self.values.extend_from_slice(vals);
+        self.rows += 1;
+        self.indptr.push(self.indices.len());
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
         debug_assert!(i < self.rows);

@@ -11,7 +11,10 @@
 //! nmbkm serve --wal-dir wal/ --fsync interval:50 --listen 127.0.0.1:7878 --binary
 //! nmbkm serve --wal-dir fwal/ --follow 127.0.0.1:7878 --listen 127.0.0.1:7879 --binary
 //! nmbkm promote --addr 127.0.0.1:7879
+//! nmbkm serve --data-dir shards/ --max-resident-rows 65536 \
+//!             --snapshot-format binary --listen 127.0.0.1:7878
 //! nmbkm predict --snapshot model.json [--points queries.jsonl]
+//! nmbkm snapshot-convert --in model.json --out model.bin --format binary
 //! nmbkm bench-trend --baseline old.json --current new.json
 //! nmbkm metrics-scrape --addr 127.0.0.1:9100 [--path /metrics]
 //! nmbkm info [--artifacts DIR]
@@ -93,6 +96,17 @@ fn serve_spec() -> Vec<OptSpec> {
         OptSpec { name: "write-queue-cap", takes_value: true, default: Some("0"), help: "per-connection write-queue bytes before the server stops reading from that peer (backpressure) [0 = 4MiB]" },
         OptSpec { name: "max-resident", takes_value: true, default: Some("0"), help: "resident-model cap: least-recently-used models are checkpointed and evicted, lazily reloading on next use [0 = unlimited]" },
         OptSpec { name: "model-idle-secs", takes_value: true, default: Some("0"), help: "evict models untouched for this long (checkpoint-then-drop) [0 = never]" },
+        OptSpec { name: "data-dir", takes_value: true, default: None, help: "bounded-memory ingest: spill every model's row buffer to disk-backed shard files under this directory (created if missing); training stays bit-identical to in-RAM" },
+        OptSpec { name: "max-resident-rows", takes_value: true, default: Some("65536"), help: "rows the per-model pinned-block cache keeps in RAM when --data-dir is set" },
+        OptSpec { name: "snapshot-format", takes_value: true, default: Some("json"), help: "snapshot/checkpoint output format: json | binary (reads always sniff the format on disk)" },
+    ]
+}
+
+fn snapshot_convert_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "in", takes_value: true, default: None, help: "source snapshot, json or binary — the format is sniffed (required)" },
+        OptSpec { name: "out", takes_value: true, default: None, help: "destination path (required)" },
+        OptSpec { name: "format", takes_value: true, default: Some("binary"), help: "output format: json | binary" },
     ]
 }
 
@@ -284,6 +298,32 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     if let Some(dir) = args.get("snapshot-dir") {
         registry.set_snapshot_dir(std::path::PathBuf::from(dir));
     }
+    // snapshot/checkpoint output format; reads always sniff, so a
+    // reconfigured server keeps loading its older artifacts
+    let snap_format = nmbkm::serve::SnapshotFormat::parse(
+        args.get("snapshot-format").unwrap_or("json"),
+    )?;
+    registry.set_snapshot_format(snap_format);
+    // --data-dir: bounded-memory ingest. Configured before any model is
+    // loaded so preloads, WAL replay and wire-created models all pass
+    // through the registry's spill funnel.
+    if let Some(dir) = args.get("data-dir") {
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir).map_err(|e| {
+            anyhow::anyhow!("creating data dir {}: {e}", dir.display())
+        })?;
+        let max_resident_rows = args.get_usize("max-resident-rows")?.max(1);
+        eprintln!(
+            "[nmbkm::serve] bounded-memory ingest: shard files under {}, \
+             ≤ {} rows resident per model",
+            dir.display(),
+            max_resident_rows
+        );
+        registry.set_spill(Some(nmbkm::serve::SpillConfig {
+            dir,
+            max_resident_rows,
+        }));
+    }
     // --snapshot serves one artifact as the implicit "default" model
     if let Some(path) = args.get("snapshot") {
         let session = resume_for_serving(path, threads)?;
@@ -334,10 +374,11 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
             Some(_) => args.get_u64("checkpoint-bytes")?,
             None => nmbkm::serve::wal::DEFAULT_CHECKPOINT_BYTES,
         };
-        let rec = nmbkm::serve::wal::recover(
+        let rec = nmbkm::serve::wal::recover_as(
             std::path::Path::new(dir),
             policy,
             ckpt,
+            snap_format,
             &registry,
         )?;
         eprintln!(
@@ -698,6 +739,32 @@ fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Re-encode a snapshot between the hex-JSON and binary sidecar
+/// formats. The input format is sniffed; state round-trips bit-exactly
+/// either way, so converting is always safe.
+fn cmd_snapshot_convert(raw: &[String]) -> anyhow::Result<()> {
+    let spec = snapshot_convert_spec();
+    let args = Args::parse(raw, &spec).map_err(anyhow::Error::msg)?;
+    let src = args
+        .get("in")
+        .ok_or_else(|| anyhow::anyhow!("snapshot-convert needs --in PATH"))?;
+    let dst = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("snapshot-convert needs --out PATH"))?;
+    let format = nmbkm::serve::SnapshotFormat::parse(
+        args.get("format").unwrap_or("binary"),
+    )?;
+    let snap = Snapshot::load(std::path::Path::new(src))?;
+    snap.save_as(std::path::Path::new(dst), format)?;
+    let in_bytes = std::fs::metadata(src).map(|m| m.len()).unwrap_or(0);
+    let out_bytes = std::fs::metadata(dst).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "converted {src} ({in_bytes} bytes) -> {dst} ({out_bytes} bytes, {})",
+        format.name()
+    );
+    Ok(())
+}
+
 fn cmd_experiment(raw: &[String]) -> anyhow::Result<()> {
     let which = raw.first().map(|s| s.as_str()).unwrap_or("");
     let rest: Vec<String> = raw.iter().skip(1).cloned().collect();
@@ -775,14 +842,15 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "promote" => cmd_promote(&rest),
         "predict" => cmd_predict(&rest),
+        "snapshot-convert" => cmd_snapshot_convert(&rest),
         "experiment" => cmd_experiment(&rest),
         "bench-trend" => cmd_bench_trend(&rest),
         "metrics-scrape" => cmd_metrics_scrape(&rest),
         "info" => cmd_info(&rest),
         _ => {
             println!(
-                "nmbkm <run|train|serve|promote|predict|experiment|\
-                 bench-trend|metrics-scrape|info>\n"
+                "nmbkm <run|train|serve|promote|predict|snapshot-convert|\
+                 experiment|bench-trend|metrics-scrape|info>\n"
             );
             println!("{}", usage("nmbkm run", "run one clustering job", &run_spec()));
             println!(
@@ -838,6 +906,15 @@ fn main() {
                     "nmbkm predict",
                     "score JSONL query rows against a snapshot",
                     &predict_spec()
+                )
+            );
+            println!(
+                "{}",
+                usage(
+                    "nmbkm snapshot-convert",
+                    "re-encode a snapshot between the hex-JSON and binary \
+                     sidecar formats (bit-exact either way)",
+                    &snapshot_convert_spec()
                 )
             );
             println!(

@@ -507,10 +507,13 @@ fn sync_snapshot_frame(
         anyhow!("no wal attached — start the server with --wal-dir")
     })?;
     let entry = registry.resolve(model)?;
+    // the configured format rides the wire too — the follower's decode
+    // sniffs, so a binary-sidecar primary ships the smaller bytes
+    let fmt = registry.snapshot_format();
     let (seq, bytes) = entry.with_session(|s| {
         let seq = entry.last_seq();
         let mut buf = Vec::new();
-        s.write_snapshot(true, &mut buf)?;
+        s.write_snapshot_as(true, fmt, &mut buf)?;
         Ok((seq, buf))
     })?;
     ensure!(

@@ -42,7 +42,7 @@ pub mod snapshot;
 pub mod wal;
 pub mod wire;
 
-pub use registry::{ModelRegistry, PublishedModel};
+pub use registry::{ModelRegistry, PublishedModel, SpillConfig};
 pub use session::OnlineSession;
-pub use snapshot::Snapshot;
+pub use snapshot::{Snapshot, SnapshotFormat};
 pub use wire::WireRow;

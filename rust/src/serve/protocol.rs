@@ -530,10 +530,11 @@ fn execute(registry: &ModelRegistry, req: &Request) -> Result<Json> {
                  inside the server's snapshot directory), got {path:?}"
             );
             let entry = registry.resolve(model.as_deref())?;
+            let fmt = registry.snapshot_format();
             let target = entry.with_session(|s| {
                 let target = s.snapshot_dir().join(path);
                 // streams from borrowed state — no data-buffer clone
-                s.save_snapshot(&target, *include_data)?;
+                s.save_snapshot_as(&target, *include_data, fmt)?;
                 Ok(target)
             })?;
             let bytes = std::fs::metadata(&target).map(|m| m.len()).unwrap_or(0);

@@ -32,7 +32,7 @@ use crate::linalg::sparse::TransposedCentroids;
 use crate::obs::{self, log as obslog};
 use crate::serve::observe::{serve_metrics, ModelMetrics};
 use crate::serve::session::{self, OnlineSession};
-use crate::serve::snapshot::Snapshot;
+use crate::serve::snapshot::{Snapshot, SnapshotFormat};
 use crate::serve::wal::{u64_json, Wal};
 use crate::serve::wire::WireRow;
 use crate::util::json::{self, Json};
@@ -415,13 +415,26 @@ fn publish_view(name: &str, s: &OnlineSession) -> PublishedModel {
     }
 }
 
+/// Bounded-memory ingest policy applied to every session entering the
+/// registry: row buffers are spilled to disk-backed shard files under
+/// `dir`, keeping at most `max_resident_rows` rows pinned in the block
+/// cache. Training over a spilled buffer is bit-identical to the
+/// in-RAM session (enforced by `tests/ooc_parity.rs`).
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Directory shard files are created under (must exist).
+    pub dir: PathBuf,
+    /// Rows the per-model pinned-block cache may keep resident.
+    pub max_resident_rows: usize,
+}
+
 /// Where an evicted model's state lives while it is out of memory —
 /// enough to rebuild the entry bit-exactly on the next request for it.
 #[derive(Clone)]
 struct EvictedModel {
     /// The snapshot file holding the model (a WAL checkpoint's
-    /// `ckpt-<name>.json`, or `evicted-<name>.json` under the snapshot
-    /// dir when no WAL is attached).
+    /// `ckpt-<name>.{json,bin}`, or `evicted-<name>.{json,bin}` under
+    /// the snapshot dir when no WAL is attached).
     path: PathBuf,
     /// The entry's `last_seq` at eviction (restored on reload so replay
     /// and `sync-info` cursors stay exact).
@@ -462,6 +475,16 @@ pub struct ModelRegistry {
     /// holding this lock so a racing resolve either finds the resident
     /// entry or waits for the record.
     evicted: Mutex<BTreeMap<String, EvictedModel>>,
+    /// Bounded-memory ingest: when set, every session entering the
+    /// registry (create, preload, WAL replay, evicted reload) has its
+    /// row buffer spilled to a shard file before it becomes visible.
+    spill: Mutex<Option<SpillConfig>>,
+    /// Monotone suffix for shard file names: a recreated model must
+    /// never reuse a path a dying session's `Drop` is about to delete.
+    spill_nonce: AtomicU64,
+    /// Format eviction snapshots are written in on the no-WAL path
+    /// (reads always sniff; WAL checkpoints use the WAL's own format).
+    snapshot_format: Mutex<SnapshotFormat>,
 }
 
 impl Default for ModelRegistry {
@@ -482,7 +505,43 @@ impl ModelRegistry {
             max_resident: AtomicUsize::new(0),
             idle_evict_nanos: AtomicU64::new(0),
             evicted: Mutex::new(BTreeMap::new()),
+            spill: Mutex::new(None),
+            spill_nonce: AtomicU64::new(0),
+            snapshot_format: Mutex::new(SnapshotFormat::default()),
         }
+    }
+
+    /// Bounded-memory ingest policy (`--data-dir`/`--max-resident-rows`;
+    /// `None` keeps buffers fully in RAM). Applied to every session that
+    /// enters the registry from now on — already-resident sessions are
+    /// not retro-spilled.
+    pub fn set_spill(&self, spill: Option<SpillConfig>) {
+        *self.spill.lock().unwrap() = spill;
+    }
+
+    /// Format protocol/eviction snapshots are written in
+    /// (`--snapshot-format`; reads always sniff the format on disk).
+    pub fn set_snapshot_format(&self, format: SnapshotFormat) {
+        *self.snapshot_format.lock().unwrap() = format;
+    }
+
+    /// The configured snapshot output format.
+    pub fn snapshot_format(&self) -> SnapshotFormat {
+        *self.snapshot_format.lock().unwrap()
+    }
+
+    /// Spill `session`'s buffer per the configured policy; no-op when
+    /// spilling is off or the buffer is already disk-backed. The shard
+    /// file name carries a process-unique nonce so a recreated model
+    /// never collides with a dying predecessor's file (whose `Drop`
+    /// deletes its own path).
+    fn apply_spill(&self, name: &str, session: &mut OnlineSession) -> Result<()> {
+        let Some(cfg) = self.spill.lock().unwrap().clone() else {
+            return Ok(());
+        };
+        let nonce = self.spill_nonce.fetch_add(1, Ordering::Relaxed);
+        let path = cfg.dir.join(format!("shard-{name}-{nonce}.rows"));
+        session.spill_to(&path, cfg.max_resident_rows)
     }
 
     /// Attach the durable op log. Call after [`crate::serve::wal::recover`]
@@ -536,10 +595,14 @@ impl ModelRegistry {
     fn insert_inner(
         &self,
         name: &str,
-        session: OnlineSession,
+        mut session: OnlineSession,
         log_create: Option<(&RunConfig, usize)>,
     ) -> Result<Arc<ModelEntry>> {
         validate_name(name)?;
+        // the one funnel every session passes through on its way into
+        // the table — create, preload, WAL replay and evicted reload
+        // all get the same bounded-memory treatment here
+        self.apply_spill(name, &mut session)?;
         let entry = ModelEntry::new(name, session);
         let mut models = self.models.write().unwrap();
         ensure!(
@@ -763,11 +826,16 @@ impl ModelRegistry {
             if !wal.checkpoint(self)? {
                 return Ok(false); // e.g. an uninitialised model somewhere
             }
-            let file = format!("ckpt-{name}.json");
+            // must mirror the WAL's own checkpoint file naming — the
+            // reload record points straight at the file GC protects
+            let file = format!("ckpt-{name}.{}", wal.snapshot_format().ext());
             (wal.dir().join(&file), Some(file))
         } else {
-            let path = self.snapshot_dir().join(format!("evicted-{name}.json"));
-            entry.with_session(|s| s.save_snapshot(&path, true))?;
+            let fmt = self.snapshot_format();
+            let path = self
+                .snapshot_dir()
+                .join(format!("evicted-{name}.{}", fmt.ext()));
+            entry.with_session(|s| s.save_snapshot_as(&path, true, fmt))?;
             (path, None)
         };
         // record first, removal second (under the evicted lock

@@ -324,11 +324,10 @@ fn bootstrap(
             bail!("primary: {msg}");
         }
         let seq = u64_field(&h, "seq")?;
-        let text = std::str::from_utf8(&body)
-            .map_err(|_| anyhow!("snapshot for '{name}' is not UTF-8"))?;
-        let v = Json::parse(text)
-            .map_err(|e| anyhow!("snapshot for '{name}': {e}"))?;
-        let snap = Snapshot::from_json(&v)
+        // format-sniffing decode: a primary configured for binary
+        // sidecar snapshots ships those same bytes, a JSON primary
+        // ships JSON — either way the decoded state is bit-identical
+        let snap = Snapshot::from_bytes(&body)
             .with_context(|| format!("snapshot for '{name}'"))?;
         let mut session = OnlineSession::resume(snap)
             .map_err(|e| anyhow!("resuming shipped model '{name}': {e:#}"))?;

@@ -24,6 +24,7 @@
 
 use crate::config::{Algo, Engine, RunConfig};
 use crate::coordinator::shard::Pool;
+use crate::data::shard::{ShardData, ShardKind, ShardStore};
 use crate::data::{Data, Storage};
 use crate::kmeans::assign::{AssignEngine, NativeEngine, Sel};
 use crate::kmeans::state::Centroids;
@@ -31,7 +32,7 @@ use crate::kmeans::{self, Clusterer, Ctx, RoundInfo};
 use crate::linalg::dense::{self, DenseMatrix};
 use crate::linalg::neighbours::NeighbourIndex;
 use crate::linalg::sparse::{CsrMatrix, TransposedCentroids};
-use crate::serve::snapshot::Snapshot;
+use crate::serve::snapshot::{Snapshot, SnapshotFormat};
 use crate::serve::wire::{self, WireRow};
 use crate::util::json::{self, Json};
 use crate::util::rng::Pcg64;
@@ -196,7 +197,7 @@ impl OnlineSession {
             );
         }
         for r in rows {
-            self.push_dense_row(r);
+            self.push_dense_row(r)?;
         }
         Ok(self.finish_ingest())
     }
@@ -230,9 +231,9 @@ impl OnlineSession {
             if self.data.is_sparse() { vec![] } else { vec![0f32; d] };
         for r in rows {
             match r {
-                WireRow::Dense(x) => self.push_dense_row(x),
+                WireRow::Dense(x) => self.push_dense_row(x)?,
                 WireRow::Sparse { idx, vals, .. } => {
-                    self.push_sparse_row(idx, vals, &mut scratch)
+                    self.push_sparse_row(idx, vals, &mut scratch)?
                 }
             }
         }
@@ -240,7 +241,9 @@ impl OnlineSession {
     }
 
     /// Append one dense row to whichever storage the session uses.
-    fn push_dense_row(&mut self, r: &[f32]) {
+    /// Fallible only for shard storage (a spill append can hit disk
+    /// errors); in-RAM appends never fail.
+    fn push_dense_row(&mut self, r: &[f32]) -> Result<()> {
         match &mut self.data.storage {
             Storage::Dense(m) => {
                 m.data.extend_from_slice(r);
@@ -263,7 +266,28 @@ impl OnlineSession {
                 m.push_row(&cv);
                 self.data.norms.push(norm);
             }
+            Storage::Shard(s) if !s.is_sparse() => {
+                s.push_dense(r)?;
+                self.data.norms.push(dense::sq_norm(r));
+            }
+            Storage::Shard(s) => {
+                // sparsify exactly like the in-RAM Sparse arm: same
+                // nonzero selection, same norm summation order
+                let mut idx = Vec::new();
+                let mut vals = Vec::new();
+                let mut norm = 0f32;
+                for (c, &x) in r.iter().enumerate() {
+                    if x != 0.0 {
+                        idx.push(c as u32);
+                        vals.push(x);
+                        norm += x * x;
+                    }
+                }
+                s.push_sparse(&idx, &vals)?;
+                self.data.norms.push(norm);
+            }
         }
+        Ok(())
     }
 
     /// Append one sparse row (validated, strictly ascending indices,
@@ -271,7 +295,12 @@ impl OnlineSession {
     /// norm accumulates in storage order, matching `push_dense_row`'s
     /// sparsification bit-for-bit; dense storage scatters it into
     /// `scratch` (zero-filled here) first.
-    fn push_sparse_row(&mut self, idx: &[u32], vals: &[f32], scratch: &mut [f32]) {
+    fn push_sparse_row(
+        &mut self,
+        idx: &[u32],
+        vals: &[f32],
+        scratch: &mut [f32],
+    ) -> Result<()> {
         match &mut self.data.storage {
             Storage::Dense(m) => {
                 scratch.fill(0.0);
@@ -292,6 +321,70 @@ impl OnlineSession {
                 m.push_row(&cv);
                 self.data.norms.push(norm);
             }
+            Storage::Shard(s) if !s.is_sparse() => {
+                scratch.fill(0.0);
+                for (t, &c) in idx.iter().enumerate() {
+                    scratch[c as usize] = vals[t];
+                }
+                s.push_dense(scratch)?;
+                self.data.norms.push(dense::sq_norm(scratch));
+            }
+            Storage::Shard(s) => {
+                let mut norm = 0f32;
+                for &v in vals {
+                    norm += v * v;
+                }
+                s.push_sparse(idx, vals)?;
+                self.data.norms.push(norm);
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert the session's buffer to a disk-backed shard at `path`,
+    /// re-spilling any rows already in RAM (no-op if already spilled).
+    /// Values round-trip f32-exactly through the shard codec and norms
+    /// are carried over untouched, so training over the spilled buffer
+    /// is bit-identical to the in-RAM session.
+    pub fn spill_to(
+        &mut self,
+        path: &std::path::Path,
+        max_resident_rows: usize,
+    ) -> Result<()> {
+        if self.data.is_sharded() {
+            return Ok(());
+        }
+        let kind = if self.data.is_sparse() {
+            ShardKind::Sparse
+        } else {
+            ShardKind::Dense
+        };
+        let store = ShardStore::create(path, kind, self.data.dim(), max_resident_rows)?;
+        let mut sd = ShardData::new(Arc::new(store));
+        match &self.data.storage {
+            Storage::Dense(m) => {
+                for i in 0..m.rows {
+                    sd.push_dense(m.row(i))?;
+                }
+            }
+            Storage::Sparse(m) => {
+                for i in 0..m.rows {
+                    let (idx, vals) = m.row(i);
+                    sd.push_sparse(idx, vals)?;
+                }
+            }
+            Storage::Shard(_) => unreachable!(),
+        }
+        self.data.storage = Storage::Shard(sd);
+        Ok(())
+    }
+
+    /// The backing shard store, when the buffer is spilled — the bench
+    /// and tests read cache/budget stats through this.
+    pub fn shard_store(&self) -> Option<&Arc<ShardStore>> {
+        match &self.data.storage {
+            Storage::Shard(s) => Some(s.store()),
+            _ => None,
         }
     }
 
@@ -416,7 +509,13 @@ impl OnlineSession {
             state,
             rng: self.rng.clone(),
             rounds: self.rounds,
-            data: if include_data { Some(self.data.clone()) } else { None },
+            data: if include_data {
+                // shard-backed buffers materialise so the snapshot is
+                // byte-identical to an in-RAM session's
+                Some(self.data.to_resident())
+            } else {
+                None
+            },
         })
     }
 
@@ -428,13 +527,24 @@ impl OnlineSession {
         include_data: bool,
         w: &mut W,
     ) -> Result<()> {
+        self.write_snapshot_as(include_data, SnapshotFormat::Json, w)
+    }
+
+    /// [`OnlineSession::write_snapshot`] with an explicit format.
+    pub fn write_snapshot_as<W: std::io::Write>(
+        &self,
+        include_data: bool,
+        format: SnapshotFormat,
+        w: &mut W,
+    ) -> Result<()> {
         let state = self.export_state()?;
-        crate::serve::snapshot::write_snapshot(
+        crate::serve::snapshot::write_snapshot_as(
             &self.cfg,
             &state,
             &self.rng,
             self.rounds,
             include_data.then_some(&self.data),
+            format,
             w,
         )
     }
@@ -443,14 +553,25 @@ impl OnlineSession {
     /// `self.snapshot(…)?.save(path)` that avoids the transient
     /// data-buffer clone and in-memory document.
     pub fn save_snapshot(&self, path: &std::path::Path, include_data: bool) -> Result<()> {
+        self.save_snapshot_as(path, include_data, SnapshotFormat::Json)
+    }
+
+    /// [`OnlineSession::save_snapshot`] with an explicit on-disk format.
+    pub fn save_snapshot_as(
+        &self,
+        path: &std::path::Path,
+        include_data: bool,
+        format: SnapshotFormat,
+    ) -> Result<()> {
         let state = self.export_state()?;
-        crate::serve::snapshot::save_parts(
+        crate::serve::snapshot::save_parts_as(
             &self.cfg,
             &state,
             &self.rng,
             self.rounds,
             include_data.then_some(&self.data),
             path,
+            format,
         )
     }
 

@@ -30,6 +30,28 @@
 //!  "rng_state": ["<hex u64>", ...4], "rng_spare": null,
 //!  "data": {"kind": "dense"|"sparse", ...}}
 //! ```
+//!
+//! **Binary sidecar (version 2).** Hex blobs double the artifact size,
+//! which replication pays on every snapshot ship and the WAL on every
+//! checkpoint. The binary format keeps the scalar/config fields as a
+//! small JSON header (same parser, same validation) and stores every
+//! blob as raw little-endian bytes, with the data section reusing the
+//! [`serve::wire`](crate::serve::wire) row codec — ≈ 0.5x the hex-JSON
+//! size, still fully deterministic (byte-identical round-trips).
+//! [`Snapshot::load`]/[`Snapshot::from_bytes`] sniff the leading magic,
+//! so every reader accepts both formats transparently:
+//!
+//! ```text
+//! magic "NMBKMSB1" (8 B) | u32 header_len | header JSON |
+//! centroids k·d f32 | cent_norms k f32 | cent_p k f32 |
+//! stats_s k·d f64 | stats_v k f64 | stats_sse k f64 |
+//! labels n u32 | dist2 n f32 | seen_mask ceil(n/8) bytes |
+//! [ data? u64 payload_len | encode_rows payload (n rows) ]
+//! ```
+//!
+//! Every section length is derived from the validated header scalars
+//! with checked arithmetic and compared against the remaining mapped
+//! length **before** any allocation — hostile documents fail cleanly.
 
 use crate::config::RunConfig;
 use crate::data::{Data, Storage};
@@ -37,14 +59,54 @@ use crate::kmeans::state::{Assignments, Centroids, SuffStats, UNASSIGNED};
 use crate::kmeans::NestedState;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::sparse::CsrMatrix;
+use crate::serve::wire;
 use crate::util::json::{self, hex_decode, hex_encode, Json};
 use crate::util::rng::Pcg64;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::io::Write;
 use std::path::Path;
 
-/// Current snapshot format version; bumped on incompatible changes.
+/// Current JSON snapshot format version; bumped on incompatible changes.
 pub const SNAPSHOT_VERSION: usize = 1;
+/// Binary sidecar format version (the header's `version` field).
+pub const BINARY_SNAPSHOT_VERSION: usize = 2;
+/// Leading magic of a binary snapshot ("NMBKM Snapshot Binary v1").
+pub const BINARY_MAGIC: &[u8; 8] = b"NMBKMSB1";
+
+/// On-disk snapshot encoding. JSON is the v1 interchange format (hex
+/// blobs, diffable, backwards-compatible); binary is the compact
+/// sidecar the WAL/replication layer ships.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SnapshotFormat {
+    #[default]
+    Json,
+    Binary,
+}
+
+impl SnapshotFormat {
+    pub fn parse(s: &str) -> Result<SnapshotFormat> {
+        match s {
+            "json" => Ok(SnapshotFormat::Json),
+            "binary" | "bin" => Ok(SnapshotFormat::Binary),
+            other => bail!("unknown snapshot format '{other}' (json | binary)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapshotFormat::Json => "json",
+            SnapshotFormat::Binary => "binary",
+        }
+    }
+
+    /// File extension snapshots of this format are written under.
+    pub fn ext(self) -> &'static str {
+        match self {
+            SnapshotFormat::Json => "json",
+            SnapshotFormat::Binary => "bin",
+        }
+    }
+}
 
 /// A complete, versioned model artifact: everything needed to answer
 /// `predict` queries, and — when the data section is included — to
@@ -150,52 +212,9 @@ impl Snapshot {
         // the batch cursor (points are used iff they sit in the seen
         // prefix — the each-point-counts-exactly-once invariant)
         let mask = hex_field(v, "seen_mask")?;
-        ensure!(
-            mask.len() == n.div_ceil(8),
-            "seen_mask length {} != ceil(n/8) = {}",
-            mask.len(),
-            n.div_ceil(8)
-        );
-        for i in 0..n {
-            let masked = mask[i / 8] >> (i % 8) & 1 == 1;
-            let labeled = labels[i] != UNASSIGNED;
-            let in_prefix = i < b_prev;
-            ensure!(
-                masked == labeled && labeled == in_prefix,
-                "corrupt snapshot: point {i} mask={masked} labeled={labeled} \
-                 prefix={in_prefix} (b_prev={b_prev})"
-            );
-            if labeled {
-                ensure!(
-                    (labels[i] as usize) < k,
-                    "corrupt snapshot: point {i} label {} >= k={k}",
-                    labels[i]
-                );
-            }
-        }
+        check_mask_integrity(&mask, &labels, k, n, b_prev)?;
 
-        let rng_words = v
-            .get("rng_state")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("snapshot missing rng_state"))?;
-        ensure!(rng_words.len() == 4, "rng_state must hold 4 words");
-        let mut words = [0u64; 4];
-        for (w, x) in words.iter_mut().zip(rng_words) {
-            let s = x.as_str().ok_or_else(|| anyhow!("rng word not a string"))?;
-            *w = u64::from_str_radix(s, 16)
-                .map_err(|_| anyhow!("rng word bad hex '{s}'"))?;
-        }
-        let spare = match v.get("rng_spare") {
-            None | Some(Json::Null) => None,
-            Some(x) => {
-                let s =
-                    x.as_str().ok_or_else(|| anyhow!("rng_spare not a string"))?;
-                Some(f64::from_bits(
-                    u64::from_str_radix(s, 16)
-                        .map_err(|_| anyhow!("rng_spare bad hex '{s}'"))?,
-                ))
-            }
-        };
+        let (words, spare) = rng_from_json(v)?;
 
         let data = match v.get("data") {
             None | Some(Json::Null) => None,
@@ -236,22 +255,186 @@ impl Snapshot {
     /// [`write_snapshot`], so the document (and its 2x-size hex blobs)
     /// never materialise in memory.
     pub fn save(&self, path: &Path) -> Result<()> {
-        save_parts(
+        self.save_as(path, SnapshotFormat::Json)
+    }
+
+    /// [`Snapshot::save`] with an explicit on-disk format.
+    pub fn save_as(&self, path: &Path, format: SnapshotFormat) -> Result<()> {
+        save_parts_as(
             &self.cfg,
             &self.state,
             &self.rng,
             self.rounds,
             self.data.as_ref(),
             path,
+            format,
         )
     }
 
-    pub fn load(path: &Path) -> Result<Snapshot> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading snapshot {}", path.display()))?;
-        let v = Json::parse(&text)
-            .map_err(|e| anyhow!("snapshot {}: {e}", path.display()))?;
+    /// Decode a snapshot from raw bytes, sniffing the format: a leading
+    /// [`BINARY_MAGIC`] selects the binary reader, anything else is
+    /// parsed as a v1 JSON document. This is the single entry every
+    /// byte-source goes through (files, WAL checkpoints, follower
+    /// bootstrap bodies).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot> {
+        if bytes.starts_with(BINARY_MAGIC) {
+            return Self::from_binary(bytes);
+        }
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| anyhow!("snapshot is neither binary (bad magic) nor UTF-8 JSON"))?;
+        let v = Json::parse(text).map_err(|e| anyhow!("snapshot: {e}"))?;
         Self::from_json(&v)
+    }
+
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .map_err(|e| anyhow!("snapshot {}: {e:#}", path.display()))
+    }
+
+    /// Parse the binary sidecar format. Mirrors [`Snapshot::from_json`]
+    /// exactly — same header validation (via the JSON header), same
+    /// integrity checks, same constructors — so both readers accept and
+    /// reject identically.
+    fn from_binary(bytes: &[u8]) -> Result<Snapshot> {
+        ensure!(bytes.len() >= 12, "binary snapshot shorter than its preamble");
+        ensure!(bytes.starts_with(BINARY_MAGIC), "bad binary snapshot magic");
+        let header_len =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        // the declared header length must fit the mapped bytes before
+        // anything is sliced or allocated from it
+        ensure!(
+            header_len <= bytes.len() - 12,
+            "binary snapshot header claims {header_len} bytes, {} remain",
+            bytes.len() - 12
+        );
+        let header = std::str::from_utf8(&bytes[12..12 + header_len])
+            .map_err(|_| anyhow!("binary snapshot header is not UTF-8"))?;
+        let v = Json::parse(header)
+            .map_err(|e| anyhow!("binary snapshot header: {e}"))?;
+        ensure!(
+            v.get("format").and_then(Json::as_str) == Some("nmbkm-snapshot"),
+            "not an nmbkm snapshot (missing format tag)"
+        );
+        let version = req_usize(&v, "version")?;
+        ensure!(
+            version == BINARY_SNAPSHOT_VERSION,
+            "binary snapshot version {version} unsupported (this build reads \
+             version {BINARY_SNAPSHOT_VERSION})"
+        );
+        let cfg = RunConfig::from_json(
+            v.get("config").ok_or_else(|| anyhow!("snapshot missing config"))?,
+        )
+        .map_err(|e| anyhow!("snapshot config: {e}"))?;
+        let k = req_usize(&v, "k")?;
+        let d = req_usize(&v, "d")?;
+        let n = req_usize(&v, "n")?;
+        let b = req_usize(&v, "b")?;
+        let b_prev = req_usize(&v, "b_prev")?;
+        let rounds = req_usize(&v, "rounds")?;
+        ensure!(b_prev <= b && b <= n, "bad batch cursor: b_prev={b_prev} b={b} n={n}");
+        ensure!(k >= 1 && d >= 1, "bad model shape k={k} d={d}");
+        let kd = count_mul(k, d, "centroid")?;
+        let data_kind = match v.get("data").and_then(Json::as_str) {
+            None => None,
+            Some("dense") => Some(false),
+            Some("sparse") => Some(true),
+            Some(other) => bail!("unknown data kind {other:?}"),
+        };
+
+        // fixed-section byte budget, checked before any allocation: a
+        // hostile n/k/d must fail here, not wrap or OOM below
+        let body = &bytes[12 + header_len..];
+        let mask_len = n.div_ceil(8);
+        let mut need = 0usize;
+        for (count, width) in [
+            (kd, 4),      // centroids
+            (k, 4),       // cent_norms
+            (k, 4),       // cent_p
+            (kd, 8),      // stats_s
+            (k, 8),       // stats_v
+            (k, 8),       // stats_sse
+            (n, 4),       // labels
+            (n, 4),       // dist2
+            (mask_len, 1) // seen_mask
+        ] {
+            need = need
+                .checked_add(count_mul(count, width, "section")?)
+                .ok_or_else(|| anyhow!("binary snapshot section sizes overflow"))?;
+        }
+        ensure!(
+            need <= body.len(),
+            "binary snapshot declares {need} section bytes, {} remain",
+            body.len()
+        );
+
+        let mut at = 0usize;
+        let c = take_f32s(body, &mut at, kd)?;
+        let norms = take_f32s(body, &mut at, k)?;
+        let p = take_f32s(body, &mut at, k)?;
+        let s = take_f64s(body, &mut at, kd)?;
+        let sv = take_f64s(body, &mut at, k)?;
+        let sse = take_f64s(body, &mut at, k)?;
+        let labels = take_u32s(body, &mut at, n)?;
+        let dist2 = take_f32s(body, &mut at, n)?;
+        let mask = take_bytes(body, &mut at, mask_len)?;
+        check_mask_integrity(mask, &labels, k, n, b_prev)?;
+
+        let (words, spare) = rng_from_json(&v)?;
+
+        let data = match data_kind {
+            None => None,
+            Some(sparse) => {
+                let len_bytes = take_bytes(body, &mut at, 8)?;
+                let payload_len =
+                    u64::from_le_bytes(len_bytes.try_into().unwrap());
+                ensure!(
+                    payload_len as usize as u64 == payload_len
+                        && payload_len as usize <= body.len() - at,
+                    "binary snapshot data section claims {payload_len} bytes, \
+                     {} remain",
+                    body.len() - at
+                );
+                let payload = take_bytes(body, &mut at, payload_len as usize)?;
+                let rows = wire::decode_rows(payload)
+                    .map_err(|e| anyhow!("binary snapshot data section: {e:#}"))?;
+                ensure!(
+                    rows.len() == n,
+                    "data section holds {} rows but the state says {n}",
+                    rows.len()
+                );
+                // assemble rebuilds exactly what the live ingest path
+                // builds (norms recomputed, same as the JSON reader)
+                let data = wire::assemble(&rows, d, sparse)
+                    .map_err(|e| anyhow!("binary snapshot data section: {e:#}"))?;
+                Some(data)
+            }
+        };
+        ensure!(
+            at == body.len(),
+            "binary snapshot has {} trailing bytes",
+            body.len() - at
+        );
+
+        Ok(Snapshot {
+            cfg,
+            state: NestedState {
+                cent: Centroids::from_parts(
+                    DenseMatrix::from_vec(k, d, c),
+                    norms,
+                    p,
+                ),
+                stats: SuffStats::from_parts(k, d, s, sv, sse),
+                assign: Assignments::from_parts(labels, dist2),
+                b_prev,
+                b,
+                n,
+            },
+            rng: Pcg64::from_parts(words, spare),
+            rounds,
+            data,
+        })
     }
 }
 
@@ -320,6 +503,129 @@ pub fn write_snapshot<W: Write>(
     Ok(())
 }
 
+/// Dispatch a streaming snapshot write to the JSON or binary encoder.
+pub fn write_snapshot_as<W: Write>(
+    cfg: &RunConfig,
+    state: &NestedState,
+    rng: &Pcg64,
+    rounds: usize,
+    data: Option<&Data>,
+    format: SnapshotFormat,
+    w: &mut W,
+) -> Result<()> {
+    match format {
+        SnapshotFormat::Json => write_snapshot(cfg, state, rng, rounds, data, w),
+        SnapshotFormat::Binary => {
+            write_snapshot_binary(cfg, state, rng, rounds, data, w)
+        }
+    }
+}
+
+/// Stream the binary sidecar format (module docs show the layout).
+/// Deterministic: the header JSON has sorted keys and the sections are
+/// written in fixed order, so the same snapshot always produces the same
+/// bytes (`save → load → save` round-trips byte-identically; tested).
+pub fn write_snapshot_binary<W: Write>(
+    cfg: &RunConfig,
+    state: &NestedState,
+    rng: &Pcg64,
+    rounds: usize,
+    data: Option<&Data>,
+    w: &mut W,
+) -> Result<()> {
+    let resident;
+    let data = match data {
+        Some(d) if d.is_sharded() => {
+            resident = d.to_resident();
+            Some(&resident)
+        }
+        other => other,
+    };
+    let st = state;
+    let (rng_words, rng_spare) = rng.to_parts();
+    let mut fields = vec![
+        ("format", json::s("nmbkm-snapshot")),
+        ("version", json::num(BINARY_SNAPSHOT_VERSION as f64)),
+        ("config", cfg.to_json()),
+        ("k", json::num(st.cent.k() as f64)),
+        ("d", json::num(st.cent.d() as f64)),
+        ("n", json::num(st.n as f64)),
+        ("b", json::num(st.b as f64)),
+        ("b_prev", json::num(st.b_prev as f64)),
+        ("rounds", json::num(rounds as f64)),
+        (
+            "rng_state",
+            Json::Arr(
+                rng_words
+                    .iter()
+                    .map(|x| json::s(&format!("{x:x}")))
+                    .collect(),
+            ),
+        ),
+        (
+            "rng_spare",
+            match rng_spare {
+                Some(x) => json::s(&format!("{:x}", x.to_bits())),
+                None => Json::Null,
+            },
+        ),
+    ];
+    if let Some(data) = data {
+        fields.push((
+            "data",
+            json::s(if data.is_sparse() { "sparse" } else { "dense" }),
+        ));
+    }
+    let header = json::obj(fields).to_string();
+    w.write_all(BINARY_MAGIC)?;
+    w.write_all(&u32::try_from(header.len())?.to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    write_le_f32s(w, &st.cent.c.data)?;
+    write_le_f32s(w, &st.cent.norms)?;
+    write_le_f32s(w, &st.cent.p)?;
+    write_le_f64s(w, &st.stats.s)?;
+    write_le_f64s(w, &st.stats.v)?;
+    write_le_f64s(w, &st.stats.sse)?;
+    write_le_u32s(w, &st.assign.label)?;
+    write_le_f32s(w, &st.assign.dist2)?;
+    w.write_all(&seen_mask(&st.assign.label))?;
+    if let Some(data) = data {
+        let payload = data_payload(data);
+        w.write_all(&(payload.len() as u64).to_le_bytes())?;
+        w.write_all(&payload)?;
+    }
+    Ok(())
+}
+
+/// Encode the training buffer as one `wire::encode_rows` batch — the
+/// binary snapshot's data section. `decode_rows` + `wire::assemble`
+/// reconstructs exactly the storage the live ingest path would build.
+fn data_payload(data: &Data) -> Vec<u8> {
+    let n = data.n();
+    match &data.storage {
+        Storage::Dense(m) => {
+            let mut out = Vec::with_capacity(4 + n * (5 + 4 * m.cols));
+            out.extend_from_slice(&(n as u32).to_le_bytes());
+            for i in 0..n {
+                wire::encode_dense_row_into(&mut out, m.row(i));
+            }
+            out
+        }
+        Storage::Sparse(m) => {
+            let mut out = Vec::with_capacity(4 + 9 * n + 8 * m.nnz());
+            out.extend_from_slice(&(n as u32).to_le_bytes());
+            for i in 0..n {
+                let (idx, vals) = m.row(i);
+                wire::encode_sparse_row_into(&mut out, m.cols, idx, vals);
+            }
+            out
+        }
+        Storage::Shard(_) => {
+            unreachable!("shard storage materialised by the caller")
+        }
+    }
+}
+
 /// Atomic streaming save (temp file + rename) from borrowed parts.
 pub fn save_parts(
     cfg: &RunConfig,
@@ -329,12 +635,25 @@ pub fn save_parts(
     data: Option<&Data>,
     path: &Path,
 ) -> Result<()> {
-    let tmp = path.with_extension("json.tmp");
+    save_parts_as(cfg, state, rng, rounds, data, path, SnapshotFormat::Json)
+}
+
+/// [`save_parts`] with an explicit on-disk format.
+pub fn save_parts_as(
+    cfg: &RunConfig,
+    state: &NestedState,
+    rng: &Pcg64,
+    rounds: usize,
+    data: Option<&Data>,
+    path: &Path,
+    format: SnapshotFormat,
+) -> Result<()> {
+    let tmp = path.with_extension(format!("{}.tmp", format.ext()));
     {
         let file = std::fs::File::create(&tmp)
             .with_context(|| format!("creating {}", tmp.display()))?;
         let mut w = std::io::BufWriter::new(file);
-        write_snapshot(cfg, state, rng, rounds, data, &mut w)?;
+        write_snapshot_as(cfg, state, rng, rounds, data, format, &mut w)?;
         w.flush()
             .with_context(|| format!("writing {}", tmp.display()))?;
     }
@@ -343,8 +662,18 @@ pub fn save_parts(
     Ok(())
 }
 
-/// Data section, keys in sorted order (matches `data_to_json`).
+/// Data section, keys in sorted order (matches `data_to_json`). A
+/// disk-sharded buffer is transiently materialised first — snapshotting
+/// with data is the one spill-mode operation that pays a full-buffer
+/// copy (see README §Bigger-than-RAM ingestion).
 fn write_data<W: Write>(w: &mut W, data: &Data) -> Result<()> {
+    let resident;
+    let data = if data.is_sharded() {
+        resident = data.to_resident();
+        &resident
+    } else {
+        data
+    };
     match &data.storage {
         Storage::Dense(m) => {
             write!(w, "{{\"cols\":{},\"kind\":\"dense\",\"rows\":{}", m.cols, m.rows)?;
@@ -368,6 +697,7 @@ fn write_data<W: Write>(w: &mut W, data: &Data) -> Result<()> {
             write_hex_f32s(w, &m.values)?;
             w.write_all(b"\"}")?;
         }
+        Storage::Shard(_) => unreachable!("shard storage materialised above"),
     }
     Ok(())
 }
@@ -404,6 +734,37 @@ fn write_hex_u32s<W: Write>(w: &mut W, xs: &[u32]) -> std::io::Result<()> {
     write_hex_bytes(w, xs.iter().flat_map(|x| x.to_le_bytes()))
 }
 
+/// Stream raw little-endian bytes through a fixed 8 KB buffer — the
+/// binary counterpart of [`write_hex_bytes`].
+fn write_le_bytes<W: Write>(
+    w: &mut W,
+    bytes: impl Iterator<Item = u8>,
+) -> std::io::Result<()> {
+    let mut buf = [0u8; 8192];
+    let mut fill = 0usize;
+    for b in bytes {
+        buf[fill] = b;
+        fill += 1;
+        if fill == buf.len() {
+            w.write_all(&buf)?;
+            fill = 0;
+        }
+    }
+    w.write_all(&buf[..fill])
+}
+
+fn write_le_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    write_le_bytes(w, xs.iter().flat_map(|x| x.to_le_bytes()))
+}
+
+fn write_le_f64s<W: Write>(w: &mut W, xs: &[f64]) -> std::io::Result<()> {
+    write_le_bytes(w, xs.iter().flat_map(|x| x.to_le_bytes()))
+}
+
+fn write_le_u32s<W: Write>(w: &mut W, xs: &[u32]) -> std::io::Result<()> {
+    write_le_bytes(w, xs.iter().flat_map(|x| x.to_le_bytes()))
+}
+
 /// Bit-packed "is this point part of the model" mask (LSB-first).
 fn seen_mask(labels: &[u32]) -> Vec<u8> {
     let mut mask = vec![0u8; labels.len().div_ceil(8)];
@@ -416,6 +777,13 @@ fn seen_mask(labels: &[u32]) -> Vec<u8> {
 }
 
 fn data_to_json(data: &Data) -> Json {
+    let resident;
+    let data = if data.is_sharded() {
+        resident = data.to_resident();
+        &resident
+    } else {
+        data
+    };
     match &data.storage {
         Storage::Dense(m) => json::obj(vec![
             ("kind", json::s("dense")),
@@ -436,6 +804,7 @@ fn data_to_json(data: &Data) -> Json {
             ("indices", json::s(&u32s_to_hex(&m.indices))),
             ("values", json::s(&f32s_to_hex(&m.values))),
         ]),
+        Storage::Shard(_) => unreachable!("shard storage materialised above"),
     }
 }
 
@@ -469,6 +838,104 @@ fn data_from_json(v: &Json) -> Result<Data> {
         }
         other => bail!("unknown data kind {other:?}"),
     }
+}
+
+/// Shared integrity check: the usage mask must match both the stored
+/// labels and the batch cursor (points are used iff they sit in the seen
+/// prefix — the each-point-counts-exactly-once invariant), and every
+/// assigned label must be a valid cluster. Both snapshot readers route
+/// through here so they accept and reject identically.
+fn check_mask_integrity(
+    mask: &[u8],
+    labels: &[u32],
+    k: usize,
+    n: usize,
+    b_prev: usize,
+) -> Result<()> {
+    ensure!(
+        mask.len() == n.div_ceil(8),
+        "seen_mask length {} != ceil(n/8) = {}",
+        mask.len(),
+        n.div_ceil(8)
+    );
+    for i in 0..n {
+        let masked = (mask[i / 8] >> (i % 8)) & 1 == 1;
+        let labeled = labels[i] != UNASSIGNED;
+        let in_prefix = i < b_prev;
+        ensure!(
+            masked == labeled && labeled == in_prefix,
+            "corrupt snapshot: point {i} mask={masked} labeled={labeled} \
+             prefix={in_prefix} (b_prev={b_prev})"
+        );
+        if labeled {
+            ensure!(
+                (labels[i] as usize) < k,
+                "corrupt snapshot: point {i} label {} >= k={k}",
+                labels[i]
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Parse the RNG fields shared by both snapshot headers.
+fn rng_from_json(v: &Json) -> Result<([u64; 4], Option<f64>)> {
+    let rng_words = v
+        .get("rng_state")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("snapshot missing rng_state"))?;
+    ensure!(rng_words.len() == 4, "rng_state must hold 4 words");
+    let mut words = [0u64; 4];
+    for (w, x) in words.iter_mut().zip(rng_words) {
+        let s = x.as_str().ok_or_else(|| anyhow!("rng word not a string"))?;
+        *w = u64::from_str_radix(s, 16)
+            .map_err(|_| anyhow!("rng word bad hex '{s}'"))?;
+    }
+    let spare = match v.get("rng_spare") {
+        None | Some(Json::Null) => None,
+        Some(x) => {
+            let s =
+                x.as_str().ok_or_else(|| anyhow!("rng_spare not a string"))?;
+            Some(f64::from_bits(
+                u64::from_str_radix(s, 16)
+                    .map_err(|_| anyhow!("rng_spare bad hex '{s}'"))?,
+            ))
+        }
+    };
+    Ok((words, spare))
+}
+
+/// Take `len` raw bytes from the binary body, advancing the cursor.
+/// Overflow-safe: a hostile length fails cleanly instead of wrapping.
+fn take_bytes<'a>(b: &'a [u8], at: &mut usize, len: usize) -> Result<&'a [u8]> {
+    let end = at
+        .checked_add(len)
+        .filter(|&e| e <= b.len())
+        .ok_or_else(|| anyhow!("binary snapshot truncated at byte {at}"))?;
+    let s = &b[*at..end];
+    *at = end;
+    Ok(s)
+}
+
+fn take_f32s(b: &[u8], at: &mut usize, count: usize) -> Result<Vec<f32>> {
+    Ok(take_bytes(b, at, count_mul(count, 4, "f32 section")?)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn take_f64s(b: &[u8], at: &mut usize, count: usize) -> Result<Vec<f64>> {
+    Ok(take_bytes(b, at, count_mul(count, 8, "f64 section")?)?
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn take_u32s(b: &[u8], at: &mut usize, count: usize) -> Result<Vec<u32>> {
+    Ok(take_bytes(b, at, count_mul(count, 4, "u32 section")?)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
 }
 
 fn req_usize(v: &Json, key: &str) -> Result<usize> {
@@ -805,5 +1272,190 @@ mod tests {
         let a = state::exact_mse(&data, s.centroids());
         let b = state::exact_mse(back.data.as_ref().unwrap(), back.centroids());
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    fn to_binary_bytes(s: &Snapshot) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_snapshot_binary(
+            &s.cfg,
+            &s.state,
+            &s.rng,
+            s.rounds,
+            s.data.as_ref(),
+            &mut out,
+        )
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn snapshot_format_parses() {
+        assert_eq!(SnapshotFormat::parse("json").unwrap(), SnapshotFormat::Json);
+        assert_eq!(SnapshotFormat::parse("bin").unwrap(), SnapshotFormat::Binary);
+        assert_eq!(
+            SnapshotFormat::parse("binary").unwrap(),
+            SnapshotFormat::Binary
+        );
+        assert!(SnapshotFormat::parse("hex").is_err());
+        assert_eq!(SnapshotFormat::Binary.ext(), "bin");
+        assert_eq!(SnapshotFormat::Json.name(), "json");
+    }
+
+    #[test]
+    fn binary_roundtrip_is_byte_identical() {
+        // dense, sparse, and model-only snapshots: encode → decode →
+        // encode must reproduce the exact bytes, and the decoded state
+        // must agree with the JSON serialisation bit-for-bit
+        let (data, st) = tiny_state(40, 3, 5, 11);
+        let dense_snap = snap(data, st);
+        let (_, sparse_st) = tiny_state(30, 3, 5, 12);
+        let mut m = CsrMatrix::empty(5);
+        for i in 0..30 {
+            m.push_row(&[((i % 4) as u32, 1.0 + i as f32), (4, -0.5 - i as f32)]);
+        }
+        let sparse_snap = snap(Data::sparse(m), sparse_st);
+        let mut model_only = snap(
+            GaussianMixture::default_spec(3, 5).generate(20, 13),
+            tiny_state(20, 3, 5, 13).1,
+        );
+        model_only.data = None;
+        for (tag, s) in [
+            ("dense", &dense_snap),
+            ("sparse", &sparse_snap),
+            ("model-only", &model_only),
+        ] {
+            let bytes = to_binary_bytes(s);
+            assert_eq!(&bytes[..8], BINARY_MAGIC, "{tag}: magic");
+            let back = Snapshot::from_bytes(&bytes).unwrap();
+            assert_eq!(
+                to_binary_bytes(&back),
+                bytes,
+                "{tag}: second serialisation diverged"
+            );
+            assert_eq!(
+                back.to_json().to_string(),
+                s.to_json().to_string(),
+                "{tag}: binary reader diverged from the JSON reader"
+            );
+        }
+    }
+
+    #[test]
+    fn save_as_binary_and_load_sniffs_format() {
+        let (data, st) = tiny_state(25, 2, 3, 16);
+        let s = snap(data, st);
+        let path = std::env::temp_dir().join("nmbkm-snapshot-unit-test.bin");
+        s.save_as(&path, SnapshotFormat::Binary).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], BINARY_MAGIC);
+        let back = Snapshot::load(&path).unwrap();
+        assert_eq!(back.to_json().to_string(), s.to_json().to_string());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_snapshots_halve_the_artifact() {
+        // the acceptance bar: raw LE sections must land at ≤ 0.55x the
+        // hex-JSON artifact, dense and sparse alike
+        let (data, st) = tiny_state(300, 4, 32, 14);
+        let dense = snap(data, st);
+        let (_, sparse_st) = tiny_state(300, 4, 32, 17);
+        let mut m = CsrMatrix::empty(32);
+        for i in 0..300 {
+            m.push_row(&[((i % 31) as u32, 1.0 + i as f32), (31, -2.0)]);
+        }
+        let sparse = snap(Data::sparse(m), sparse_st);
+        for (tag, s) in [("dense", &dense), ("sparse", &sparse)] {
+            let json_len = s.to_json().to_string().len();
+            let bin_len = to_binary_bytes(s).len();
+            assert!(
+                (bin_len as f64) <= 0.55 * json_len as f64,
+                "{tag}: binary {bin_len} B vs json {json_len} B"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_binary_snapshots_error_cleanly() {
+        // the binary twin of corrupt_snapshots_error_cleanly: hostile
+        // header mutations, oversized declared lengths, a truncation
+        // sweep, and a byte-poke sweep — clean Err (or harmless Ok for
+        // pokes in float payloads), never a panic or an OOM-sized alloc
+        let (data, st) = tiny_state(30, 3, 4, 15);
+        let s = snap(data, st);
+        let good = to_binary_bytes(&s);
+        let header_len =
+            u32::from_le_bytes(good[8..12].try_into().unwrap()) as usize;
+        let header =
+            std::str::from_utf8(&good[12..12 + header_len]).unwrap().to_string();
+        let rebuild = |h: &str| -> Vec<u8> {
+            let mut out = Vec::with_capacity(good.len());
+            out.extend_from_slice(BINARY_MAGIC);
+            out.extend_from_slice(&(h.len() as u32).to_le_bytes());
+            out.extend_from_slice(h.as_bytes());
+            out.extend_from_slice(&good[12 + header_len..]);
+            out
+        };
+        let cases: Vec<(&str, String)> = vec![
+            ("version", header.replace("\"version\":2", "\"version\":7")),
+            ("format tag", header.replace("nmbkm-snapshot", "other-thing")),
+            ("k zero", header.replace("\"k\":3", "\"k\":0")),
+            // k*d and n*width must reject via checked math, not wrap or
+            // allocate terabytes
+            (
+                "k*d overflow",
+                header.replace("\"k\":3", "\"k\":9223372036854775807"),
+            ),
+            (
+                "n huge",
+                header.replace("\"n\":30", "\"n\":4611686018427387904"),
+            ),
+            ("n beyond sections", header.replace("\"n\":30", "\"n\":31")),
+            ("cursor beyond n", header.replace("\"b\":15", "\"b\":31")),
+            (
+                "data kind garbage",
+                header.replace("\"data\":\"dense\"", "\"data\":\"dense2\""),
+            ),
+            ("missing config", header.replace("\"config\"", "\"confog\"")),
+        ];
+        for (what, h) in &cases {
+            assert_ne!(h, &header, "{what}: mutation did not apply");
+            assert!(
+                Snapshot::from_bytes(&rebuild(h)).is_err(),
+                "{what}: corrupt document loaded successfully"
+            );
+        }
+        // header length pointing past EOF must fail before slicing
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Snapshot::from_bytes(&bad).is_err());
+        // a flipped seen_mask bit trips the integrity check; the mask
+        // section starts after the fixed sections (k=3, d=4, n=30)
+        let kd = 3 * 4;
+        let fixed = kd * 4 + 3 * 4 + 3 * 4 + kd * 8 + 3 * 8 + 3 * 8 + 30 * 4 + 30 * 4;
+        let mut bad = good.clone();
+        bad[12 + header_len + fixed] ^= 1;
+        assert!(
+            Snapshot::from_bytes(&bad).is_err(),
+            "mask flip loaded successfully"
+        );
+        // every truncation fails cleanly
+        for cut in (0..good.len()).step_by(41) {
+            assert!(
+                Snapshot::from_bytes(&good[..cut]).is_err(),
+                "accepted cut at {cut}"
+            );
+        }
+        assert!(Snapshot::from_bytes(&good[..good.len() - 1]).is_err());
+        // trailing garbage is rejected
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(Snapshot::from_bytes(&padded).is_err());
+        // byte-poke sweep: no offset may panic
+        for pos in (0..good.len()).step_by(31) {
+            let mut mutant = good.clone();
+            mutant[pos] ^= 0x41;
+            let _ = Snapshot::from_bytes(&mutant);
+        }
     }
 }

@@ -16,8 +16,14 @@
 //! ```text
 //! wal-<first_seq:016x>.log   segment: 25-byte header, then records
 //! manifest.json              checkpoint manifest {version, epoch, models}
-//! ckpt-<model>.json          per-model snapshot (serve::snapshot format)
+//! ckpt-<model>.{json,bin}    per-model snapshot (serve::snapshot format)
 //! ```
+//!
+//! Checkpoint snapshots are written in the log's configured
+//! [`SnapshotFormat`] (binary halves checkpoint I/O; see
+//! `serve::snapshot`); recovery loads either via the format-sniffing
+//! [`Snapshot::load`], so a server restarted with a different
+//! `--snapshot-format` still resumes cleanly.
 //!
 //! Segment header: `b"NMBKMWAL"` | version u8 | epoch u64 | first_seq
 //! u64 (LE). Record: `len u32 | crc32(payload) u32 | payload`, payload
@@ -41,7 +47,7 @@ use crate::config::{Algo, RunConfig};
 use crate::obs;
 use crate::serve::registry::ModelRegistry;
 use crate::serve::session::OnlineSession;
-use crate::serve::snapshot::Snapshot;
+use crate::serve::snapshot::{Snapshot, SnapshotFormat};
 use crate::serve::wire;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -253,6 +259,11 @@ fn seg_name(first_seq: u64) -> String {
     format!("wal-{first_seq:016x}.log")
 }
 
+/// Is this directory entry a checkpoint snapshot (either format)?
+fn is_ckpt_file(name: &str) -> bool {
+    name.starts_with("ckpt-") && (name.ends_with(".json") || name.ends_with(".bin"))
+}
+
 /// `(first_seq, path)` of every segment in `dir`, seq-ordered.
 fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
     let mut out = Vec::new();
@@ -300,6 +311,8 @@ pub struct Wal {
     dir: PathBuf,
     policy: FsyncPolicy,
     checkpoint_bytes: u64,
+    /// Format checkpoint snapshots are written in (reads always sniff).
+    snapshot_format: SnapshotFormat,
     inner: Mutex<WalInner>,
     // lock-free mirrors for readers (sync-info, metrics, fetch)
     next_seq_m: AtomicU64,
@@ -321,10 +334,12 @@ pub struct Fetch {
 }
 
 impl Wal {
+    #[allow(clippy::too_many_arguments)]
     fn open_inner(
         dir: PathBuf,
         policy: FsyncPolicy,
         checkpoint_bytes: u64,
+        snapshot_format: SnapshotFormat,
         seg_path: PathBuf,
         seg_first: u64,
         seg_records: u64,
@@ -339,6 +354,7 @@ impl Wal {
             dir,
             policy,
             checkpoint_bytes: checkpoint_bytes.max(1),
+            snapshot_format,
             inner: Mutex::new(WalInner {
                 file,
                 seg_path,
@@ -372,6 +388,13 @@ impl Wal {
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Format this log writes its checkpoint snapshots in (reads always
+    /// sniff, so a directory may legitimately mix formats across a
+    /// reconfiguration).
+    pub fn snapshot_format(&self) -> SnapshotFormat {
+        self.snapshot_format
     }
 
     /// Sequence number the next append will get.
@@ -542,7 +565,7 @@ impl Wal {
         fs::remove_file(self.dir.join(MANIFEST)).ok();
         for entry in fs::read_dir(&self.dir)?.flatten() {
             if let Some(name) = entry.file_name().to_str() {
-                if name.starts_with("ckpt-") && name.ends_with(".json") {
+                if is_ckpt_file(name) {
                     fs::remove_file(entry.path()).ok();
                 }
             }
@@ -655,14 +678,14 @@ impl Wal {
             if !checkpointable(e) {
                 return Ok(false); // created mid-checkpoint; retry later
             }
-            let file = format!("ckpt-{}.json", e.name());
+            let file = format!("ckpt-{}.{}", e.name(), self.snapshot_format.ext());
             let path = self.dir.join(&file);
             // the seq is read under the same session lock that guards
             // the snapshot, so "state in the file" and "ops it covers"
             // cannot be torn apart by a concurrent ingest
             let seq = e.with_session(|s| {
                 let seq = e.last_seq();
-                s.save_snapshot(&path, true)?;
+                s.save_snapshot_as(&path, true, self.snapshot_format)?;
                 Ok(seq)
             })?;
             if let Ok(f) = File::open(&path) {
@@ -710,11 +733,13 @@ impl Wal {
                 fs::remove_file(&path).ok();
             }
         }
-        // snapshots of since-dropped models are garbage; collect them
+        // snapshots of since-dropped models are garbage, and so is the
+        // other-format twin of a model checkpointed under a new
+        // --snapshot-format; collect both
         let live: BTreeSet<String> = models.iter().map(|(_, f, _)| f.clone()).collect();
         for entry in fs::read_dir(&self.dir)?.flatten() {
             if let Some(name) = entry.file_name().to_str() {
-                if name.starts_with("ckpt-") && name.ends_with(".json") && !live.contains(name) {
+                if is_ckpt_file(name) && !live.contains(name) {
                     fs::remove_file(entry.path()).ok();
                 }
             }
@@ -855,6 +880,19 @@ pub fn recover(
     checkpoint_bytes: u64,
     registry: &ModelRegistry,
 ) -> Result<Recovery> {
+    recover_as(dir, policy, checkpoint_bytes, SnapshotFormat::Json, registry)
+}
+
+/// [`recover`] with an explicit checkpoint [`SnapshotFormat`]. The
+/// format only affects snapshots this log will *write*; existing
+/// checkpoints of either format are loaded transparently.
+pub fn recover_as(
+    dir: &Path,
+    policy: FsyncPolicy,
+    checkpoint_bytes: u64,
+    snapshot_format: SnapshotFormat,
+    registry: &ModelRegistry,
+) -> Result<Recovery> {
     fs::create_dir_all(dir).with_context(|| format!("creating wal dir {}", dir.display()))?;
     let mut epoch = 1u64;
     let mut next_seq = 1u64;
@@ -987,6 +1025,7 @@ pub fn recover(
             dir.to_path_buf(),
             policy,
             checkpoint_bytes,
+            snapshot_format,
             path,
             first,
             records,
@@ -999,6 +1038,7 @@ pub fn recover(
                 dir.to_path_buf(),
                 policy,
                 checkpoint_bytes,
+                snapshot_format,
                 path,
                 next_seq,
                 0,

@@ -300,27 +300,38 @@ pub fn encode_rows(rows: &[WireRow]) -> Vec<u8> {
     out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
     for row in rows {
         match row {
-            WireRow::Dense(r) => {
-                out.push(1);
-                out.extend_from_slice(&(r.len() as u32).to_le_bytes());
-                for x in r {
-                    out.extend_from_slice(&x.to_le_bytes());
-                }
-            }
+            WireRow::Dense(r) => encode_dense_row_into(&mut out, r),
             WireRow::Sparse { dim, idx, vals } => {
-                out.push(2);
-                out.extend_from_slice(&(*dim as u32).to_le_bytes());
-                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
-                for c in idx {
-                    out.extend_from_slice(&c.to_le_bytes());
-                }
-                for x in vals {
-                    out.extend_from_slice(&x.to_le_bytes());
-                }
+                encode_sparse_row_into(&mut out, *dim, idx, vals)
             }
         }
     }
     out
+}
+
+/// Append one dense row in the [`encode_rows`] per-row layout. Shared
+/// with the disk shard block writer (`data::shard`) and the binary
+/// snapshot data section so every on-disk row speaks the same codec.
+pub fn encode_dense_row_into(out: &mut Vec<u8>, r: &[f32]) {
+    out.push(1);
+    out.extend_from_slice(&(r.len() as u32).to_le_bytes());
+    for x in r {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append one sparse row in the [`encode_rows`] per-row layout.
+pub fn encode_sparse_row_into(out: &mut Vec<u8>, dim: usize, idx: &[u32], vals: &[f32]) {
+    debug_assert_eq!(idx.len(), vals.len());
+    out.push(2);
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    for c in idx {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    for x in vals {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
 }
 
 /// Decode an [`encode_rows`] batch, re-validating every row through the

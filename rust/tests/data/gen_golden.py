@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Regenerate the committed golden snapshot corpus.
+
+The two artifacts next to this script pin the on-disk snapshot formats:
+
+  golden-snapshot-v1.json  -- the v1 hex-JSON interchange format
+  golden-snapshot-v2.bin   -- the v2 binary sidecar format
+
+Both encode the SAME tiny, mathematically consistent model, so the
+backcompat test can assert that every reader decodes them to one
+identical state and answers pinned predict queries. The model:
+
+  k=2, d=2, n=4 points (0,0) (0,2) (4,0) (4,2)
+  labels [0,0,1,1], centroids (0,1) and (4,1) = per-cluster means
+  suff stats: s=[(0,2),(8,2)], v=[2,2], sse=[2,2] (true residuals)
+  cursor b=b_prev=n=4, rounds=1, tb-inf config, seed 0x2a
+
+The files are committed; this script exists so a format change that
+*intends* to break compatibility can regenerate them in one step (and
+the diff makes the break explicit in review). Run from anywhere:
+
+  python3 rust/tests/data/gen_golden.py
+"""
+import json
+import os
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+CENTROIDS = [0.0, 1.0, 4.0, 1.0]          # k*d f32
+CENT_NORMS = [1.0, 17.0]                  # ||c_j||^2 f32
+CENT_P = [0.0, 0.0]                       # last-move distances f32
+STATS_S = [0.0, 2.0, 8.0, 2.0]            # k*d f64 coordinate sums
+STATS_V = [2.0, 2.0]                      # k f64 counts
+STATS_SSE = [2.0, 2.0]                    # k f64 residuals
+LABELS = [0, 0, 1, 1]                     # n u32
+DIST2 = [1.0, 1.0, 1.0, 1.0]              # n f32
+SEEN_MASK = bytes([0x0F])                 # ceil(n/8), LSB-first
+POINTS = [[0.0, 0.0], [0.0, 2.0], [4.0, 0.0], [4.0, 2.0]]
+RNG_WORDS = [0x0123456789ABCDEF, 0xFEDCBA9876543210,
+             0xDEADBEEFCAFEF00D, 0x0DDC0FFEEBADF00D]
+K, D, N = 2, 2, 4
+
+CONFIG = {
+    "algo": "tb",
+    "k": K,
+    "b0": 4,
+    "rho": "inf",
+    "engine": "native",
+    "threads": 1,
+    "seed": "%x" % 0x2A,
+    "max_seconds": "%x" % struct.unpack("<Q", struct.pack("<d", 60.0))[0],
+    "max_rounds": "%x" % 50,
+    "eval_every_secs": "%x" % struct.unpack("<Q", struct.pack("<d", 0.0))[0],
+    "stop_on_convergence": False,
+    "artifacts_dir": "",
+    "init": "first-k",
+}
+
+
+def hex_f32s(xs):
+    return b"".join(struct.pack("<f", x) for x in xs).hex()
+
+
+def hex_f64s(xs):
+    return b"".join(struct.pack("<d", x) for x in xs).hex()
+
+
+def hex_u32s(xs):
+    return b"".join(struct.pack("<I", x) for x in xs).hex()
+
+
+def le_f32s(xs):
+    return b"".join(struct.pack("<f", x) for x in xs)
+
+
+def le_f64s(xs):
+    return b"".join(struct.pack("<d", x) for x in xs)
+
+
+def le_u32s(xs):
+    return b"".join(struct.pack("<I", x) for x in xs)
+
+
+def write_v1_json(path):
+    doc = {
+        "format": "nmbkm-snapshot",
+        "version": 1,
+        "config": CONFIG,
+        "k": K,
+        "d": D,
+        "n": N,
+        "b": N,
+        "b_prev": N,
+        "rounds": 1,
+        "centroids": hex_f32s(CENTROIDS),
+        "cent_norms": hex_f32s(CENT_NORMS),
+        "cent_p": hex_f32s(CENT_P),
+        "stats_s": hex_f64s(STATS_S),
+        "stats_v": hex_f64s(STATS_V),
+        "stats_sse": hex_f64s(STATS_SSE),
+        "labels": hex_u32s(LABELS),
+        "dist2": hex_f32s(DIST2),
+        "seen_mask": SEEN_MASK.hex(),
+        "rng_state": ["%x" % w for w in RNG_WORDS],
+        "rng_spare": None,
+        "data": {
+            "kind": "dense",
+            "rows": N,
+            "cols": D,
+            "values": hex_f32s([x for row in POINTS for x in row]),
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, separators=(",", ":"))
+        f.write("\n")
+
+
+def write_v2_binary(path):
+    header = json.dumps(
+        {
+            "format": "nmbkm-snapshot",
+            "version": 2,
+            "config": CONFIG,
+            "k": K,
+            "d": D,
+            "n": N,
+            "b": N,
+            "b_prev": N,
+            "rounds": 1,
+            "rng_state": ["%x" % w for w in RNG_WORDS],
+            "rng_spare": None,
+            "data": "dense",
+        },
+        separators=(",", ":"),
+    ).encode()
+    # data section: wire::encode_rows batch (u32 n, then tag-1 dense rows)
+    payload = struct.pack("<I", N)
+    for row in POINTS:
+        payload += b"\x01" + struct.pack("<I", len(row)) + le_f32s(row)
+    body = (
+        le_f32s(CENTROIDS)
+        + le_f32s(CENT_NORMS)
+        + le_f32s(CENT_P)
+        + le_f64s(STATS_S)
+        + le_f64s(STATS_V)
+        + le_f64s(STATS_SSE)
+        + le_u32s(LABELS)
+        + le_f32s(DIST2)
+        + SEEN_MASK
+        + struct.pack("<Q", len(payload))
+        + payload
+    )
+    with open(path, "wb") as f:
+        f.write(b"NMBKMSB1" + struct.pack("<I", len(header)) + header + body)
+
+
+if __name__ == "__main__":
+    write_v1_json(os.path.join(HERE, "golden-snapshot-v1.json"))
+    write_v2_binary(os.path.join(HERE, "golden-snapshot-v2.bin"))
+    print("wrote golden-snapshot-v1.json and golden-snapshot-v2.bin")

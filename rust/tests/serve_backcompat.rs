@@ -15,8 +15,9 @@ use nmbkm::config::{Algo, Rho, RunConfig};
 use nmbkm::data::gaussian::GaussianMixture;
 use nmbkm::data::Data;
 use nmbkm::serve::wire::dense_points_json;
-use nmbkm::serve::{protocol, session, ModelRegistry};
+use nmbkm::serve::{protocol, session, ModelRegistry, OnlineSession, Snapshot};
 use nmbkm::util::json::{self, Json};
+use std::path::Path;
 
 fn cfg() -> RunConfig {
     RunConfig {
@@ -200,5 +201,55 @@ fn v1_dense_jsonl_transcript_replays_byte_identically() {
                 "transcript line {t} diverged from the v1 bytes"
             );
         }
+    }
+}
+
+/// The committed golden corpus: one artifact per on-disk snapshot
+/// format, written when that format was frozen (see
+/// `tests/data/gen_golden.py`, which documents the model inside them
+/// and regenerates the bytes). Every future build must keep decoding
+/// both files to the identical state and answering pinned predict
+/// queries bit-for-bit — a deliberate format break has to regenerate
+/// the corpus, so the break is explicit in review instead of silently
+/// orphaning old artifacts.
+#[test]
+fn golden_snapshot_corpus_stays_loadable_and_pinned() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data");
+    let from_json =
+        Snapshot::load(&dir.join("golden-snapshot-v1.json")).unwrap();
+    let from_bin =
+        Snapshot::load(&dir.join("golden-snapshot-v2.bin")).unwrap();
+    // both formats carry the same model and must decode to one state
+    assert_eq!(
+        from_json.to_json().to_string(),
+        from_bin.to_json().to_string(),
+        "JSON and binary goldens decoded to different states"
+    );
+    for (tag, snap) in [("v1-json", from_json), ("v2-binary", from_bin)] {
+        // pinned geometry: k=2 centroids at (0,1) and (4,1)
+        let cent = snap.centroids();
+        assert_eq!(cent.k(), 2, "{tag}");
+        assert_eq!(cent.d(), 2, "{tag}");
+        let mut sess = OnlineSession::resume(snap).unwrap();
+        let queries = vec![
+            vec![0.0f32, 0.0],
+            vec![0.5, 1.0],
+            vec![3.0, 1.0],
+            vec![4.0, 2.0],
+        ];
+        let (labels, d2) = sess.predict_rows(&queries).unwrap();
+        assert_eq!(labels, vec![0u32, 0, 1, 1], "{tag}: labels moved");
+        // every quantity here is exactly representable in f32, so the
+        // distances are pinned to the bit regardless of engine order
+        let want = [1.0f32, 0.25, 1.0, 1.0];
+        assert_eq!(
+            d2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{tag}: predict distances moved"
+        );
+        // the golden artifact is a live model, not a husk: it resumes
+        // training from its data section
+        let rep = sess.step(1, f64::INFINITY).unwrap();
+        assert!(!rep.waiting_for_points, "{tag}: resumed session is stuck");
     }
 }

@@ -12,7 +12,7 @@ use nmbkm::serve::protocol::{self, Request};
 use nmbkm::serve::replica;
 use nmbkm::serve::server::serve_listener_opts;
 use nmbkm::serve::wal::{self, FsyncPolicy};
-use nmbkm::serve::{ModelRegistry, WireRow};
+use nmbkm::serve::{ModelRegistry, SnapshotFormat, WireRow};
 use nmbkm::util::json::{self, Json};
 use std::fs;
 use std::io::{BufRead, BufReader, Write};
@@ -273,6 +273,9 @@ fn follower_bootstraps_when_primary_log_is_truncated() {
     // checkpoint after every mutation, so a fresh follower cannot tail
     // from seq 1 — it must bootstrap from shipped snapshots
     let (preg, pwal, paddr, pserver) = node(&pdir, 1);
+    // the primary serves binary-sidecar snapshot bodies: bootstrap must
+    // sniff the format instead of assuming JSON
+    preg.set_snapshot_format(SnapshotFormat::Binary);
     exec(
         &preg,
         &Request::Create { model: Some("m1".into()), dim: data.dim(), cfg: cfg(4, 16) },
